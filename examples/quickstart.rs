@@ -1,0 +1,67 @@
+//! Quickstart: the whole system in ~60 lines.
+//!
+//! 1. Verify the AOT Pallas artifacts through the real PJRT runtime
+//!    (python authored them at build time; rust executes them here).
+//! 2. Run KernelSkill's closed loop on the paper's Appendix-D task and
+//!    print the audited trajectory.
+//!
+//! Run with: cargo run --release --example quickstart
+
+use kernelskill::baselines;
+use kernelskill::bench_suite;
+use kernelskill::coordinator::{self, Branch, LoopConfig};
+use kernelskill::runtime::{self, Registry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. real AOT path: load + verify every Pallas variant ----------
+    let reg = Registry::load("artifacts")?;
+    let mut rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let reports = runtime::verify_all(&mut rt, &reg, 7, 1e-3)?;
+    for r in &reports {
+        println!(
+            "  {:<16} {:<14} max_abs_err={:.2e} {}",
+            r.task,
+            r.variant,
+            r.max_abs_err,
+            if r.passed { "ok" } else { "FAIL" }
+        );
+    }
+    assert!(reports.iter().all(|r| r.passed), "artifact verification failed");
+    println!("all {} Pallas variants match their pure-jnp references\n", reports.len());
+
+    // ---- 2. the multi-agent loop on the motivating example -------------
+    let tasks = bench_suite::level_suite(42, 2);
+    let task = tasks
+        .iter()
+        .find(|t| t.id.contains("fused_epilogue"))
+        .expect("appendix-D task");
+    println!(
+        "optimizing {} ({} ops, dominant GEMM share {:.1}%)",
+        task.id,
+        task.graph.len(),
+        task.graph.dominant_flop_fraction() * 100.0
+    );
+    let result = coordinator::run_task(task, &baselines::kernelskill(), &LoopConfig::default());
+    for rec in &result.rounds {
+        let what = match &rec.branch {
+            Branch::Optimize(m) => format!("optimize[{}]", m.name()),
+            Branch::Repair(f) => format!("repair[fix {f}]"),
+            Branch::Revert => "revert".into(),
+            Branch::Converged => "converged".into(),
+        };
+        println!(
+            "  round {:>2}: {:<28} {}",
+            rec.round,
+            what,
+            rec.speedup
+                .map(|s| format!("{s:.3}x vs eager"))
+                .unwrap_or_else(|| "broken (repair queued)".into())
+        );
+    }
+    println!(
+        "\nseed {:.3?}x -> best {:.3}x over Torch Eager ({} base promotions)",
+        result.seed_speedup, result.best_speedup, result.promotions
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Suite sweep: run the full 250-task KernelBenchSim suite for a chosen
+//! strategy across several seeds and report per-level metrics plus the
+//! speedup distribution (the data behind Tables 1-3).
+//!
+//! Usage: cargo run --release --example suite_sweep [strategy] [n_seeds]
+
+use kernelskill::baselines;
+use kernelskill::bench_suite;
+use kernelskill::coordinator::{self, LoopConfig};
+use kernelskill::harness::metrics;
+use kernelskill::util::{pool, stats};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().map(|s| s.as_str()).unwrap_or("KernelSkill");
+    let n_seeds: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let strategy = baselines::table1_roster()
+        .into_iter()
+        .chain(baselines::table2_roster())
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .unwrap_or_else(|| {
+            eprintln!("unknown strategy {name}; using KernelSkill");
+            baselines::kernelskill()
+        });
+
+    let tasks = bench_suite::full_suite(42);
+    let seeds: Vec<u64> = (0..n_seeds).collect();
+    println!(
+        "running {} over {} tasks x {} seeds on {} workers...",
+        strategy.name,
+        tasks.len(),
+        seeds.len(),
+        pool::default_workers()
+    );
+    let suite = coordinator::run_suite(
+        &tasks,
+        &strategy,
+        &LoopConfig::default(),
+        &seeds,
+        pool::default_workers(),
+    );
+
+    let split = metrics::by_level(&suite.results);
+    for (i, lv) in split.iter().enumerate() {
+        let c = metrics::cell(lv, strategy.rounds);
+        let speeds: Vec<f64> = lv.iter().map(|r| r.best_speedup).collect();
+        println!(
+            "L{}: n={:<4} success={:.2} mean={:.2}x median={:.2}x p90={:.2}x max={:.2}x fast1={:.2}",
+            i + 1,
+            c.n,
+            c.success,
+            c.speedup,
+            stats::median(&speeds),
+            stats::percentile(&speeds, 90.0),
+            speeds.iter().fold(0.0f64, |a, &b| a.max(b)),
+            c.fast1,
+        );
+    }
+
+    // Top wins + misses for inspection.
+    let mut all: Vec<&coordinator::TaskResult> = suite.results.iter().collect();
+    all.sort_by(|a, b| b.best_speedup.partial_cmp(&a.best_speedup).unwrap());
+    println!("\ntop 5 wins:");
+    for r in all.iter().take(5) {
+        println!("  {:<28} {:.2}x", r.task_id, r.best_speedup);
+    }
+    println!("bottom 5 (incl. failures):");
+    for r in all.iter().rev().take(5) {
+        println!(
+            "  {:<28} {:.2}x success={}",
+            r.task_id, r.best_speedup, r.success
+        );
+    }
+}

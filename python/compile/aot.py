@@ -1,0 +1,60 @@
+"""AOT-lower every (task, variant) to HLO *text* + write a manifest.
+
+HLO text (NOT ``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published ``xla``
+0.1.6 rust crate links) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tasks", nargs="*", default=None, help="subset of task names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"tasks": {}}
+    names = args.tasks or list(model.TASKS)
+    for task in names:
+        entry = model.TASKS[task]
+        inputs = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in entry["inputs"]
+        ]
+        variants = {}
+        for variant in entry["variants"]:
+            lowered = model.lower_variant(task, variant)
+            text = to_hlo_text(lowered)
+            fname = f"{task}__{variant}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            variants[variant] = {"file": fname, "hlo_chars": len(text)}
+            print(f"  {task}/{variant}: {len(text)} chars -> {fname}")
+        manifest["tasks"][task] = {"inputs": inputs, "variants": variants}
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest for {len(names)} tasks to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

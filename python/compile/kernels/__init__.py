@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot-spots (interpret=True).
+
+Modules:
+  * ``matmul``         — naive vs VMEM-tiled GEMM schedules
+  * ``fused_epilogue`` — the Appendix-D task at three schedule points
+  * ``attention``      — row-blocked flash-style attention
+  * ``softmax``        — row-blocked softmax
+  * ``layernorm``      — row-blocked LayerNorm
+  * ``ref``            — pure-jnp oracles
+"""
+
+from . import attention, fused_epilogue, layernorm, matmul, ref, softmax  # noqa: F401

@@ -1,0 +1,46 @@
+"""L1 Pallas attention kernel: softmax(Q K^T / sqrt(d)) V, row-blocked.
+
+The flash-attention insight on TPU terms: keep a (br, S) score strip and the
+full K/V panels resident in VMEM per grid step — one HBM round-trip for Q and
+O instead of materializing the (S, S) score matrix in HBM. This is the
+`FuseEpilogueReduction` + `WarpReduceShuffle` method pair applied to the
+attention sub-graph (the L3 transformer tasks' hot pattern).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[...]  # (br, d)
+    k = k_ref[...]  # (S, d)
+    v = v_ref[...]  # (S, d)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, br: int = 64) -> jax.Array:
+    """Single-head attention, row-blocked over queries.
+
+    q, k, v: (S, d) f32. Returns (S, d).
+    """
+    s, d = q.shape
+    rb = min(br, s)
+    assert s % rb == 0, f"row block {rb} must divide sequence {s}"
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        lambda qr, kr, vr, orf: _attn_kernel(qr, kr, vr, orf, scale=scale),
+        grid=(s // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

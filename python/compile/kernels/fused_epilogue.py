@@ -1,0 +1,135 @@
+"""L1 Pallas kernels for the Appendix-D fused-epilogue task.
+
+The task (KernelBench Level-2 style):
+
+    linear -> *scale -> +residual(double) -> clamp -> logsumexp(dim=1) -> x*mish(x)
+
+Three schedule points, matching the optimization trajectory the paper
+describes in its motivating example (§3):
+
+  * ``fused_naive``  — what the memory-free optimizer produced: GEMM + scale +
+    double + clamp fused into ONE kernel, but the GEMM itself is the naive
+    no-reuse schedule; logsumexp/mish left unfused. (The 0.032x kernel.)
+  * ``tiled``        — what KernelSkill's long-term memory recommends first:
+    fix the dominant GEMM bottleneck with VMEM tiling; epilogue stays unfused.
+  * ``tiled_fused``  — the coupled follow-up: tiled GEMM, then the whole
+    elementwise + row-reduction epilogue fused into a single row-blocked
+    kernel (one HBM round-trip for the activation matrix).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+
+
+def _fit_tile(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is <= pref (schedule legality helper)."""
+    t = min(pref, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _mish(x):
+    return x * jnp.tanh(jax.nn.softplus(x))
+
+
+def _epilogue_elementwise(y, b, scale, clamp_min, clamp_max):
+    y = (y + b) * scale
+    y = y + y
+    return jnp.clip(y, clamp_min, clamp_max)
+
+
+def _fused_naive_kernel(x_ref, w_ref, b_ref, o_ref, *, scale, clamp_min, clamp_max):
+    """Naive GEMM fused with bias/scale/double/clamp — the paper's bad kernel."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _epilogue_elementwise(acc, b_ref[...], scale, clamp_min, clamp_max)
+
+
+def _rowblock_lse_mish_kernel(y_ref, o_ref):
+    """Row-blocked logsumexp + x*mish(x): one pass over a (br, N) strip."""
+    y = y_ref[...]
+    m = jnp.max(y, axis=1, keepdims=True)
+    z = m + jnp.log(jnp.sum(jnp.exp(y - m), axis=1, keepdims=True))
+    o_ref[...] = z * _mish(z)
+
+
+def fused_epilogue(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    variant: str = "tiled_fused",
+    scale: float = 0.5,
+    clamp_min: float = -10.0,
+    clamp_max: float = 10.0,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    br: int = 64,
+) -> jax.Array:
+    """Dispatch over the three schedule points. Shapes: x (B,K), w (K,N), b (N,)."""
+    batch, _ = x.shape
+    _, n = w.shape
+    b2 = jnp.broadcast_to(b, (1, n))
+
+    if variant == "fused_naive":
+        # One kernel: naive GEMM (+epilogue elementwise); tiny output blocks,
+        # full-K strips re-streamed per block. logsumexp/mish left in jnp.
+        gm, gn = 8, min(128, n)
+        y = pl.pallas_call(
+            lambda xr, wr, br_, or_: _fused_naive_kernel(
+                xr, wr, br_, or_, scale=scale, clamp_min=clamp_min, clamp_max=clamp_max
+            ),
+            grid=(batch // gm, n // gn),
+            in_specs=[
+                pl.BlockSpec((gm, x.shape[1]), lambda i, j: (i, 0)),
+                pl.BlockSpec((x.shape[1], gn), lambda i, j: (0, j)),
+                pl.BlockSpec((1, gn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((gm, gn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((batch, n), jnp.float32),
+            interpret=True,
+        )(x, w, b2)
+        z = jax.scipy.special.logsumexp(y, axis=1, keepdims=True)
+        return z * _mish(z)
+
+    if variant in ("tiled", "tiled_fused"):
+        y = mm.matmul_tiled(
+            x,
+            w,
+            bm=_fit_tile(batch, bm),
+            bn=_fit_tile(n, bn),
+            bk=_fit_tile(x.shape[1], bk),
+        )
+        if variant == "tiled":
+            y = _epilogue_elementwise(y, b2, scale, clamp_min, clamp_max)
+            z = jax.scipy.special.logsumexp(y, axis=1, keepdims=True)
+            return z * _mish(z)
+        # tiled_fused: elementwise epilogue + row reduction in ONE row-blocked
+        # pallas kernel (a single HBM round-trip over the (B, N) activation).
+        rb = _fit_tile(batch, br)
+
+        def _kernel(y_ref, b_ref, o_ref):
+            yy = _epilogue_elementwise(
+                y_ref[...], b_ref[...], scale, clamp_min, clamp_max
+            )
+            m = jnp.max(yy, axis=1, keepdims=True)
+            z = m + jnp.log(jnp.sum(jnp.exp(yy - m), axis=1, keepdims=True))
+            o_ref[...] = z * _mish(z)
+
+        return pl.pallas_call(
+            _kernel,
+            grid=(batch // rb,),
+            in_specs=[
+                pl.BlockSpec((rb, n), lambda i: (i, 0)),
+                pl.BlockSpec((1, n), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((rb, 1), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((batch, 1), jnp.float32),
+            interpret=True,
+        )(y, b2)
+
+    raise ValueError(f"unknown variant {variant!r}")

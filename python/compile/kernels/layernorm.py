@@ -1,0 +1,35 @@
+"""L1 Pallas LayerNorm kernel (KernelBench Level-1 style normalization op)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+def layernorm_rows(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5, br: int = 64
+) -> jax.Array:
+    """Row LayerNorm, row-blocked: mean/var/normalize in one VMEM pass."""
+    rows, cols = x.shape
+    rb = min(br, rows)
+    assert rows % rb == 0
+    g2 = jnp.broadcast_to(gamma, (1, cols))
+    b2 = jnp.broadcast_to(beta, (1, cols))
+    return pl.pallas_call(
+        lambda xr, gr, br_, or_: _layernorm_kernel(xr, gr, br_, or_, eps=eps),
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x, g2, b2)

@@ -1,0 +1,113 @@
+"""L1 Pallas matmul kernels — the GEMM hot-spot at several schedule points.
+
+These are the concrete realizations of the schedule space the rust Kernel IR
+(`kir::schedule`) explores: the *naive* variant is the motivating-example
+failure mode (tiny blocks, full-K dot per block, no reuse across the grid),
+and the *tiled* variant is the MXU/VMEM-blocked schedule KernelSkill's
+long-term memory recommends for a compute-bound GEMM.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): CUDA shared-memory tiling
+becomes VMEM blocking via BlockSpec; tensor-core WMMA becomes an MXU dot with
+`preferred_element_type=f32`. All kernels lower with interpret=True so the
+resulting HLO runs on any PJRT backend (the rust CPU client included).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel_accum(x_ref, w_ref, o_ref):
+    """Grid-(i, j, k) block matmul with accumulation along the k axis.
+
+    The k grid dimension is innermost, so o_ref for a fixed (i, j) block is
+    revisited across k steps — zero-init on the first step, accumulate after.
+    This is the double-buffered HBM<->VMEM pipeline expressed as a BlockSpec
+    schedule (the Pallas grid machinery overlaps the copies).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_tiled(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """VMEM-blocked matmul: (M, K) @ (K, N) -> (M, N) with (bm, bn, bk) tiles.
+
+    Block shapes must divide the problem shape (the rust legality checker
+    enforces the same precondition before proposing this schedule).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"tile ({bm},{bn},{bk}) must divide problem ({m},{n},{k})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel_accum,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _matmul_kernel_naive(x_ref, w_ref, o_ref):
+    """One tiny output block; the full K strip is re-read for every block."""
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul_naive(x: jax.Array, w: jax.Array, *, bm: int = 8, bn: int = 128) -> jax.Array:
+    """The motivating-example GEMM: no K blocking, no reuse across blocks.
+
+    Every (bm, bn) output block re-streams its full (bm, K) x-strip and
+    (K, bn) w-strip from HBM — the 'naive global-memory dot-product loop'
+    of the paper's Appendix D failure case, expressed as a BlockSpec.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    assert m % bm == 0 and n % bn == 0
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel_naive,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Estimated per-step VMEM residency of the tiled schedule (both live
+    input blocks double-buffered + the output accumulator block).
+
+    Mirrors rust `device::costmodel::vmem_footprint` — kept here so pytest
+    can assert the two implementations agree on the artifact variants.
+    """
+    x_blk = bm * bk * itemsize
+    w_blk = bk * bn * itemsize
+    o_blk = bm * bn * itemsize
+    return 2 * (x_blk + w_blk) + o_blk

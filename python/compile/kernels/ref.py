@@ -1,0 +1,66 @@
+"""Pure-jnp reference oracles (the correctness ground truth for every kernel).
+
+These functions define the semantics that every Pallas variant must match
+(pytest asserts allclose at build time; the rust Verifier re-checks the AOT
+artifacts against the reference artifact at run time).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul: (M, K) @ (K, N) -> (M, N)."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def mish(x: jax.Array) -> jax.Array:
+    """Mish activation: x * tanh(softplus(x))."""
+    return x * jnp.tanh(jax.nn.softplus(x))
+
+
+def fused_epilogue_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    scale: float = 0.5,
+    clamp_min: float = -10.0,
+    clamp_max: float = 10.0,
+) -> jax.Array:
+    """The KernelSkill Appendix-D task (KernelBench L2 style).
+
+    linear -> scale -> residual double -> clamp -> logsumexp(dim=1) -> x*mish(x)
+
+    x: (B, K) activations, w: (K, N) weight (already transposed from the
+    nn.Linear (N, K) layout), b: (N,) bias. Returns (B, 1).
+    """
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    y = y * scale
+    y = y + y
+    y = jnp.clip(y, clamp_min, clamp_max)
+    z = jax.scipy.special.logsumexp(y, axis=1, keepdims=True)
+    return z * mish(z)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Single-head scaled-dot-product attention oracle: (S,d) x3 -> (S,d)."""
+    d = q.shape[-1]
+    scores = jnp.matmul(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.asarray(d, dtype=jnp.float32)
+    )
+    return jnp.matmul(
+        jax.nn.softmax(scores, axis=-1), v, preferred_element_type=jnp.float32
+    )
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    """Numerically-stable row softmax over the last dim."""
+    return jax.nn.softmax(x, axis=-1)
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Row LayerNorm over the last dim."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta

@@ -1,0 +1,32 @@
+"""L1 Pallas row-softmax kernel (KernelBench Level-1 style reduction op)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_rows(x: jax.Array, *, br: int = 64) -> jax.Array:
+    """Numerically-stable softmax over the last dim, row-blocked.
+
+    Each grid step owns a (br, N) strip in VMEM: one load, one store —
+    the single-pass schedule the long-term memory's 'reduction fusion'
+    method prescribes for memory-bound row reductions.
+    """
+    rows, cols = x.shape
+    rb = min(br, rows)
+    assert rows % rb == 0
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,97 @@
+"""L2: the artifact-backed KernelBenchSim tasks as JAX compute graphs.
+
+Each task is a named registry entry with:
+  * ``inputs``   — list of example-arg specs,
+  * ``variants`` — mapping variant name -> jax callable (calls kernels.*),
+    always including ``"ref"`` (the pure-jnp oracle / Torch-Eager stand-in).
+
+``aot.py`` lowers every (task, variant) pair to HLO text; the rust runtime
+loads them, verifies each variant against ``ref`` on seeded inputs, and times
+them. Python never runs after `make artifacts`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn
+from .kernels import fused_epilogue as fe
+from .kernels import layernorm as ln
+from .kernels import matmul as mm
+from .kernels import ref
+from .kernels import softmax as sm
+
+F32 = jnp.float32
+
+# Problem sizes are scaled from the paper's A100 shapes (1024x8192x8192) to
+# CPU-tractable ones; the schedule-space structure (dominant GEMM, fusable
+# epilogue, row reductions) is preserved. DESIGN.md §Substitutions.
+MATMUL_M, MATMUL_K, MATMUL_N = 256, 512, 512
+EPI_B, EPI_K, EPI_N = 256, 512, 512
+SM_ROWS, SM_COLS = 512, 512
+ATTN_S, ATTN_D = 256, 64
+LN_ROWS, LN_COLS = 512, 512
+
+
+def _spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+TASKS = {
+    "matmul": {
+        "inputs": [_spec(MATMUL_M, MATMUL_K), _spec(MATMUL_K, MATMUL_N)],
+        "variants": {
+            "ref": ref.matmul_ref,
+            "naive": mm.matmul_naive,
+            "tiled_64": functools.partial(mm.matmul_tiled, bm=64, bn=64, bk=64),
+            "tiled_128": functools.partial(mm.matmul_tiled, bm=128, bn=128, bk=128),
+        },
+    },
+    "fused_epilogue": {
+        "inputs": [_spec(EPI_B, EPI_K), _spec(EPI_K, EPI_N), _spec(EPI_N)],
+        "variants": {
+            "ref": ref.fused_epilogue_ref,
+            "fused_naive": functools.partial(fe.fused_epilogue, variant="fused_naive"),
+            "tiled": functools.partial(fe.fused_epilogue, variant="tiled"),
+            "tiled_fused": functools.partial(fe.fused_epilogue, variant="tiled_fused"),
+        },
+    },
+    "attention": {
+        "inputs": [
+            _spec(ATTN_S, ATTN_D),
+            _spec(ATTN_S, ATTN_D),
+            _spec(ATTN_S, ATTN_D),
+        ],
+        "variants": {
+            "ref": ref.attention_ref,
+            "rowblock": attn.attention,
+        },
+    },
+    "softmax": {
+        "inputs": [_spec(SM_ROWS, SM_COLS)],
+        "variants": {
+            "ref": ref.softmax_ref,
+            "rowblock": sm.softmax_rows,
+        },
+    },
+    "layernorm": {
+        "inputs": [_spec(LN_ROWS, LN_COLS), _spec(LN_COLS), _spec(LN_COLS)],
+        "variants": {
+            "ref": ref.layernorm_ref,
+            "rowblock": ln.layernorm_rows,
+        },
+    },
+}
+
+
+def lower_variant(task: str, variant: str):
+    """jit + lower one (task, variant) against its example-arg specs."""
+    entry = TASKS[task]
+    fn = entry["variants"][variant]
+
+    # Wrap so the output is always a 1-tuple (the rust side unwraps to_tuple1).
+    def wrapped(*args):
+        return (fn(*args),)
+
+    return jax.jit(wrapped).lower(*entry["inputs"])

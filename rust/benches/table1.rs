@@ -1,0 +1,39 @@
+//! E1 — regenerate Table 1 (Success + Speedup, 7 methods x Levels 1-3) and
+//! the §5.4 per-round-efficiency comparison. `cargo bench --bench table1`.
+
+use kernelskill::harness::bench::time_once;
+use kernelskill::harness::experiments::{self, ExpConfig};
+use kernelskill::harness::tables;
+
+fn main() {
+    let mut cfg = ExpConfig::default();
+    if let Ok(seeds) = std::env::var("KS_SEEDS") {
+        let n: u64 = seeds.parse().unwrap_or(1);
+        cfg.run_seeds = (0..n).collect();
+    }
+    let ((rendered, rows), timing) = time_once("table1(full suite)", || experiments::table1(&cfg));
+    println!("Table 1 — Success and Speedup vs Torch Eager (paper Table 1)");
+    println!("{rendered}");
+    println!("Per-round refinement efficiency (§5.4; speedup / budget rounds)");
+    println!("{}", tables::per_round(&rows));
+    println!("[{}]", timing.report());
+    // Shape assertions: the paper's ordering claims.
+    let get = |name: &str| rows.iter().find(|r| r.method == name).unwrap();
+    let ks = get("KernelSkill");
+    let stark = get("STARK");
+    for lvl in 0..3 {
+        assert!(
+            ks.cells[lvl].speedup >= stark.cells[lvl].speedup * 0.98,
+            "KernelSkill should lead on L{}",
+            lvl + 1
+        );
+        assert!(
+            ks.cells[lvl].speedup_per_round > stark.cells[lvl].speedup_per_round,
+            "KernelSkill should be more round-efficient on L{}",
+            lvl + 1
+        );
+    }
+    let kevin = get("Kevin-32B");
+    assert!(kevin.cells[2].success < 0.85, "Kevin collapses on L3");
+    println!("shape checks passed: KernelSkill leads every level; Kevin collapses on L3");
+}

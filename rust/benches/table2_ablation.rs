@@ -1,0 +1,39 @@
+//! E2 — regenerate Table 2 (memory ablations: Success / Fast1 / Speedup).
+//! `cargo bench --bench table2_ablation`.
+
+use kernelskill::harness::bench::time_once;
+use kernelskill::harness::experiments::{self, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let ((rendered, rows), timing) =
+        time_once("table2(ablations)", || experiments::table2(&cfg));
+    println!("Table 2 — Ablation results (paper Table 2)");
+    println!("{rendered}");
+    println!("[{}]", timing.report());
+
+    let get = |name: &str| rows.iter().find(|r| r.method == name).unwrap();
+    let full = get("KernelSkill");
+    let wo_mem = get("w/o memory");
+    let wo_lt = get("w/o Long_term memory");
+    for lvl in 0..3 {
+        assert!(
+            full.cells[lvl].speedup > wo_mem.cells[lvl].speedup,
+            "memory must help speedup on L{}",
+            lvl + 1
+        );
+        assert!(
+            full.cells[lvl].speedup > wo_lt.cells[lvl].speedup,
+            "long-term memory must drive speedup on L{}",
+            lvl + 1
+        );
+    }
+    // The long-term memory is the speedup driver (paper §5.5): removing it
+    // costs much more speedup than removing the short-term memory.
+    let wo_st = get("w/o Short_term memory");
+    assert!(
+        wo_st.cells[0].speedup > wo_lt.cells[0].speedup,
+        "LT memory drives L1 speedup"
+    );
+    println!("shape checks passed: both memories matter; LT memory drives speedup");
+}

@@ -1,0 +1,138 @@
+//! Diagnoser agent (§4.1.5): root-cause a failure and propose a repair plan,
+//! conditioned on the short-term repair memory when available.
+//!
+//! With memory, the Diagnoser enumerates candidate fixes it has not yet seen
+//! fail on this error signature; without it, each round samples
+//! independently — which is how the cyclic-repair oscillation (fix A, fix B,
+//! fix A, ...) arises in the ablation.
+
+use super::policy::PolicyProfile;
+use crate::device::faults::Fault;
+use crate::memory::short_term::RepairMemory;
+use crate::util::rng::Rng;
+
+/// A repair plan: which candidate fix to apply to which fault.
+#[derive(Debug, Clone)]
+pub struct RepairPlan {
+    pub error_signature: String,
+    pub fix_idx: u8,
+    pub rationale: String,
+}
+
+/// Propose a fix for the first outstanding fault.
+pub fn diagnose(
+    fault: &Fault,
+    memory: Option<&RepairMemory>,
+    policy: &PolicyProfile,
+    rng: &mut Rng,
+) -> RepairPlan {
+    let n = fault.n_candidate_fixes;
+    // Translation-stage defects live in unfamiliar generated code: even a
+    // good diagnoser ranks their candidate fixes poorly.
+    let skill_eff = policy.repair_skill * if fault.hard { 0.55 } else { 1.0 };
+    let fix_idx = match memory {
+        Some(mem) => {
+            let failed = mem.failed_fixes_for(&fault.signature);
+            let untried: Vec<u8> = (0..n).filter(|i| !failed.contains(i)).collect();
+            if untried.is_empty() {
+                // Everything plausible failed: re-roll (rare; the fault's
+                // candidate set is small).
+                rng.range(0, n as u64) as u8
+            } else {
+                // A competent diagnoser ranks candidates well: with prob
+                // repair_skill it picks the most promising untried candidate
+                // (biased toward the true fix when visible in the evidence).
+                if rng.chance(skill_eff) && untried.contains(&fault.true_fix) {
+                    fault.true_fix
+                } else {
+                    *rng.choose(&untried)
+                }
+            }
+        }
+        None => {
+            // Memory-less: condition only on the latest feedback; past
+            // attempts are invisible, so repeats happen.
+            if rng.chance(skill_eff * 0.6) {
+                fault.true_fix
+            } else {
+                rng.range(0, n as u64) as u8
+            }
+        }
+    };
+    RepairPlan {
+        error_signature: fault.signature.clone(),
+        fix_idx,
+        rationale: format!(
+            "candidate fix {} of {} for '{}'",
+            fix_idx, n, fault.signature
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::faults::FaultKind;
+    use crate::kir::transforms::MethodId;
+    use crate::memory::short_term::RepairAttempt;
+
+    fn fault() -> Fault {
+        Fault {
+            kind: FaultKind::WrongNumerics,
+            injected_by: MethodId::TileSmem,
+            signature: "verification failed: max abs err".into(),
+            true_fix: 2,
+            n_candidate_fixes: 4,
+            hard: false,
+        }
+    }
+
+    #[test]
+    fn with_memory_never_repeats_failed_fix() {
+        let f = fault();
+        let mut mem = RepairMemory::new();
+        mem.open_chain(1);
+        for idx in [0u8, 1, 3] {
+            mem.record(RepairAttempt {
+                error_signature: f.signature.clone(),
+                fix_idx: idx,
+                fixed: false,
+                kernel_version: idx as u32 + 2,
+                round: idx as u32 + 1,
+            });
+        }
+        let mut p = PolicyProfile::chatgpt51();
+        p.repair_skill = 0.0; // force the uniform-untried branch
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let plan = diagnose(&f, Some(&mem), &p, &mut rng);
+            assert_eq!(plan.fix_idx, 2, "only the true fix remains untried");
+        }
+    }
+
+    #[test]
+    fn without_memory_repeats_happen() {
+        let f = fault();
+        let mut p = PolicyProfile::chatgpt51();
+        p.repair_skill = 0.0;
+        let mut rng = Rng::new(2);
+        let picks: Vec<u8> = (0..100).map(|_| diagnose(&f, None, &p, &mut rng).fix_idx).collect();
+        // Uniform sampling must hit some index at least twice in a row
+        // somewhere — the oscillation fuel.
+        assert!(picks.windows(2).any(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn skilled_diagnoser_finds_true_fix_faster() {
+        let f = fault();
+        let hit_rate = |skill: f64| {
+            let mut p = PolicyProfile::chatgpt51();
+            p.repair_skill = skill;
+            let mut rng = Rng::new(3);
+            (0..1000)
+                .filter(|_| diagnose(&f, None, &p, &mut rng).fix_idx == f.true_fix)
+                .count()
+        };
+        assert!(hit_rate(0.9) > hit_rate(0.1) + 200);
+    }
+}

@@ -1,0 +1,165 @@
+//! Feature Extractor agent (§4.1.3): the hybrid rule-based / LLM-based
+//! static-feature pipeline.
+//!
+//! Rule-based features come straight off the structured kernel (exact);
+//! LLM-based features (the `LLM_BASED` mask) are extracted by the surrogate
+//! with accuracy `feature_accuracy` — occasionally mis-read, which is
+//! exactly why the decision policy gates on *combinations* of evidence.
+
+use super::policy::PolicyProfile;
+use crate::kir::features::{self, CodeFeatures, OccupancyLimiter, ReductionPattern, LLM_BASED};
+use crate::kir::graph::KernelGraph;
+use crate::kir::schedule::Schedule;
+use crate::util::rng::Rng;
+
+/// Extract the 18 static features with the hybrid mechanism, focused on
+/// the profiler's hot group.
+pub fn extract(
+    graph: &KernelGraph,
+    sched: &Schedule,
+    focus_group: usize,
+    policy: &PolicyProfile,
+    rng: &mut Rng,
+) -> CodeFeatures {
+    let truth = features::ground_truth_at(graph, sched, focus_group);
+    let mut f = truth.clone();
+    // Corrupt each LLM-based feature independently with prob (1 - accuracy).
+    let miss = |rng: &mut Rng, acc: f64| rng.chance(1.0 - acc);
+    let acc = policy.feature_accuracy;
+    if LLM_BASED[0] && miss(rng, acc) {
+        f.naive_gemm_loop = !f.naive_gemm_loop;
+    }
+    if LLM_BASED[4] && miss(rng, acc) {
+        f.coalesced_access = !f.coalesced_access;
+    }
+    if LLM_BASED[5] && miss(rng, acc) {
+        f.bank_conflict_risk = !f.bank_conflict_risk;
+    }
+    if LLM_BASED[6] && miss(rng, acc) {
+        f.fusion_opportunities = f.fusion_opportunities.saturating_sub(1);
+    }
+    if LLM_BASED[12] && miss(rng, acc) {
+        f.register_pressure = (f.register_pressure + 1) % 3;
+    }
+    if LLM_BASED[13] && miss(rng, acc) {
+        f.occupancy_limiter = OccupancyLimiter::None;
+    }
+    if LLM_BASED[14] && miss(rng, acc) {
+        f.strided_access = !f.strided_access;
+    }
+    if LLM_BASED[16] && miss(rng, acc) {
+        f.divergence_risk = !f.divergence_risk;
+    }
+    // Feature 19 (structured operand) is semantic recognition — LLM-based,
+    // and only ever missed in the false-negative direction (an agent does
+    // not hallucinate structure that is not there).
+    if f.structured_operand && miss(rng, acc) {
+        f.structured_operand = false;
+    }
+    f
+}
+
+/// Accuracy of an extraction vs ground truth over the LLM-based features
+/// (used in tests and the calibration harness).
+pub fn llm_feature_agreement(a: &CodeFeatures, b: &CodeFeatures) -> f64 {
+    let mut total = 0.0;
+    let mut agree = 0.0;
+    let mut check = |is_llm: bool, same: bool| {
+        if is_llm {
+            total += 1.0;
+            if same {
+                agree += 1.0;
+            }
+        }
+    };
+    check(LLM_BASED[0], a.naive_gemm_loop == b.naive_gemm_loop);
+    check(LLM_BASED[4], a.coalesced_access == b.coalesced_access);
+    check(LLM_BASED[5], a.bank_conflict_risk == b.bank_conflict_risk);
+    check(LLM_BASED[6], a.fusion_opportunities == b.fusion_opportunities);
+    check(LLM_BASED[12], a.register_pressure == b.register_pressure);
+    check(LLM_BASED[13], a.occupancy_limiter == b.occupancy_limiter);
+    check(LLM_BASED[14], a.strided_access == b.strided_access);
+    check(LLM_BASED[16], a.divergence_risk == b.divergence_risk);
+    if total == 0.0 {
+        1.0
+    } else {
+        agree / total
+    }
+}
+
+/// Sanity helper used by tests: rule-based features must always be exact.
+pub fn rule_based_exact(a: &CodeFeatures, b: &CodeFeatures) -> bool {
+    a.smem_tiling == b.smem_tiling
+        && a.tensor_core == b.tensor_core
+        && a.vectorized_loads == b.vectorized_loads
+        && a.unfused_ew_chain == b.unfused_ew_chain
+        && a.reduction_pattern == b.reduction_pattern
+        && a.mixed_precision == b.mixed_precision
+        && a.double_buffered == b.double_buffered
+        && a.unrolled == b.unrolled
+        && a.uses_atomics == b.uses_atomics
+        && a.kernel_launches == b.kernel_launches
+}
+
+#[allow(unused)]
+fn _pattern_exhaustiveness(r: ReductionPattern) {
+    // Compile-time reminder: extend corruption logic when patterns grow.
+    match r {
+        ReductionPattern::None | ReductionPattern::Row | ReductionPattern::Col | ReductionPattern::Full => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::level2::appendix_d_graph;
+
+    fn setup() -> (KernelGraph, Schedule) {
+        let g = appendix_d_graph(256, 512, 512);
+        let s = Schedule::per_op_naive(&g);
+        (g, s)
+    }
+
+    #[test]
+    fn perfect_accuracy_reproduces_truth() {
+        let (g, s) = setup();
+        let mut p = PolicyProfile::chatgpt51();
+        p.feature_accuracy = 1.0;
+        let mut rng = Rng::new(3);
+        let f = extract(&g, &s, 0, &p, &mut rng);
+        assert_eq!(f, features::ground_truth(&g, &s));
+    }
+
+    #[test]
+    fn rule_based_features_never_corrupted() {
+        let (g, s) = setup();
+        let mut p = PolicyProfile::chatgpt51();
+        p.feature_accuracy = 0.0; // worst case LLM
+        let truth = features::ground_truth(&g, &s);
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let f = extract(&g, &s, 0, &p, &mut rng);
+            assert!(rule_based_exact(&f, &truth));
+        }
+    }
+
+    #[test]
+    fn agreement_tracks_accuracy() {
+        let (g, s) = setup();
+        let truth = features::ground_truth(&g, &s);
+        let measure = |acc: f64| {
+            let mut p = PolicyProfile::chatgpt51();
+            p.feature_accuracy = acc;
+            let mut rng = Rng::new(5);
+            let mut sum = 0.0;
+            for _ in 0..300 {
+                sum += llm_feature_agreement(&extract(&g, &s, 0, &p, &mut rng), &truth);
+            }
+            sum / 300.0
+        };
+        let high = measure(0.95);
+        let low = measure(0.5);
+        assert!(high > 0.9, "high={high}");
+        assert!(low < high - 0.2, "low={low} high={high}");
+    }
+}

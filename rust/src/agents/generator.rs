@@ -1,0 +1,119 @@
+//! Generator agent (§4.1.2): translate the reference program into seed
+//! kernels — correctness-first, one kernel per operator, no speed work.
+
+use super::policy::PolicyProfile;
+use super::KernelState;
+use crate::bench_suite::Task;
+use crate::device::faults;
+use crate::kir::schedule::{Layout, Schedule};
+use crate::kir::transforms::MethodId;
+use crate::util::rng::Rng;
+
+/// Produce `n` seed kernels. Seeds are per-op naive schedules with small
+/// stylistic variations (what different samples of the same prompt produce);
+/// translation itself can introduce bugs on big graphs.
+pub fn generate_seeds(
+    task: &Task,
+    n: usize,
+    policy: &PolicyProfile,
+    rng: &mut Rng,
+) -> Vec<KernelState> {
+    let mut seeds = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut sched = Schedule::per_op_naive(&task.graph);
+        // Sample-to-sample variation: some seeds come out with saner
+        // indexing (coalesced) or slightly different block geometry.
+        for cfg in &mut sched.cfg {
+            if rng.chance(0.35) {
+                cfg.layout = Layout::Coalesced;
+            }
+            if rng.chance(0.25) {
+                cfg.vector_width = 2;
+            }
+            if rng.chance(0.3) {
+                cfg.block_threads = *rng.choose(&[128, 256, 512]);
+            }
+        }
+        let mut state = KernelState::new(sched, i as u32);
+        // Translation bugs: driven by the task's translation risk, amplified
+        // for weaker coders. Whole-model L3 translations are the nightmare
+        // case (Kevin's Table-1 collapse).
+        let skill_scale = (1.5 - policy.coding_skill).powi(2) * 2.4;
+        let p_bug = (task.translation_risk * skill_scale).clamp(0.0, 0.97);
+        if rng.chance(p_bug) {
+            // A broken translation usually has several distinct defects;
+            // nightmare tasks stack more of them (each needs its own repair
+            // chain — where weak, memory-less repair loops bleed out).
+            let mut n_faults = 1;
+            for _ in 0..3 {
+                if rng.chance(task.translation_risk) {
+                    n_faults += 1;
+                }
+            }
+            for _ in 0..n_faults {
+                let mut f = None;
+                for _ in 0..16 {
+                    f = faults::sample_fault(rng, MethodId::LaunchTune, 0.0, 2.0);
+                    if f.is_some() {
+                        break;
+                    }
+                }
+                if let Some(mut f) = f {
+                    f.hard = true;
+                    state.faults.push(f);
+                }
+            }
+        }
+        seeds.push(state);
+    }
+    seeds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+
+    #[test]
+    fn seeds_are_valid_schedules() {
+        let tasks = bench_suite::level_suite(42, 1);
+        let mut rng = Rng::new(1);
+        let seeds = generate_seeds(&tasks[0], 3, &PolicyProfile::chatgpt51(), &mut rng);
+        assert_eq!(seeds.len(), 3);
+        for s in &seeds {
+            assert!(s.sched.validate(&tasks[0].graph).is_ok());
+        }
+    }
+
+    #[test]
+    fn big_graphs_seed_more_bugs() {
+        let l1 = bench_suite::level_suite(42, 1);
+        let l3 = bench_suite::level_suite(42, 3);
+        let p = PolicyProfile::chatgpt51();
+        let count_bugs = |tasks: &[bench_suite::Task]| {
+            let mut rng = Rng::new(9);
+            let mut bugs = 0;
+            for t in tasks.iter().take(30) {
+                for s in generate_seeds(t, 3, &p, &mut rng) {
+                    if !s.is_clean() {
+                        bugs += 1;
+                    }
+                }
+            }
+            bugs
+        };
+        assert!(count_bugs(&l3) > count_bugs(&l1));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let tasks = bench_suite::level_suite(42, 2);
+        let p = PolicyProfile::chatgpt51();
+        let a = generate_seeds(&tasks[3], 3, &p, &mut Rng::new(5));
+        let b = generate_seeds(&tasks[3], 3, &p, &mut Rng::new(5));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sched, y.sched);
+            assert_eq!(x.faults.len(), y.faults.len());
+        }
+    }
+}

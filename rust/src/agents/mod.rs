@@ -1,0 +1,49 @@
+//! The multi-agent roster (§4.1): Generator, Feature Extractor, Reviewer
+//! (Compiler + Verifier + Profiler), Planner, Optimizer, Diagnoser,
+//! Repairer — plus the LLM-surrogate policy core they all draw from.
+
+pub mod diagnoser;
+pub mod feature_extractor;
+pub mod generator;
+pub mod optimizer;
+pub mod planner;
+pub mod policy;
+pub mod repairer;
+pub mod reviewer;
+
+use crate::device::faults::Fault;
+use crate::kir::schedule::Schedule;
+
+/// One candidate kernel in the refinement loop: a schedule plus any latent
+/// defects the surrogate's edits introduced.
+#[derive(Debug, Clone)]
+pub struct KernelState {
+    pub sched: Schedule,
+    pub faults: Vec<Fault>,
+    /// Monotone version counter within a task run (Figure 2/3 numbering).
+    pub version: u32,
+}
+
+impl KernelState {
+    pub fn new(sched: Schedule, version: u32) -> Self {
+        KernelState {
+            sched,
+            faults: Vec::new(),
+            version,
+        }
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// First compile-stage fault, if any (the Compiler reports these).
+    pub fn compile_fault(&self) -> Option<&Fault> {
+        self.faults.iter().find(|f| f.kind.is_compile())
+    }
+
+    /// First runtime fault (the Verifier reports these).
+    pub fn runtime_fault(&self) -> Option<&Fault> {
+        self.faults.iter().find(|f| !f.kind.is_compile())
+    }
+}

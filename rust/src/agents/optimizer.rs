@@ -1,0 +1,137 @@
+//! Optimizer agent (§4.1.7): execute an optimization plan as a concrete
+//! schedule edit, possibly introducing a fault (the surrogate's buggy edit).
+
+use super::planner::OptimizationPlan;
+use super::policy::PolicyProfile;
+use super::KernelState;
+use crate::bench_suite::Task;
+use crate::device::faults;
+use crate::kir::transforms;
+use crate::util::rng::Rng;
+
+/// Apply `plan` to `base` focusing the hot group, producing the round's
+/// candidate kernel.
+pub fn execute(
+    task: &Task,
+    base: &KernelState,
+    plan: &OptimizationPlan,
+    hot_group: usize,
+    policy: &PolicyProfile,
+    version: u32,
+    rng: &mut Rng,
+) -> KernelState {
+    let mut sched = base.sched.clone();
+    transforms::apply_at(plan.method, &task.graph, &mut sched, hot_group);
+    // Companion knobs: a faithful implementation of the method also lands
+    // its implementation cues. Cue-backed plans (long-term memory) land
+    // them reliably; without cues the surrogate's rewrite is sloppier —
+    // this is the concrete mechanism behind the llm_assist store's value.
+    let p_comp = if plan.with_cues {
+        0.55 + 0.45 * policy.coding_skill.min(1.0)
+    } else {
+        0.35 * policy.coding_skill.min(1.0)
+    };
+    for &comp in transforms::companions(plan.method) {
+        let hg = hot_group.min(sched.num_kernels() - 1);
+        if transforms::applicable_at(comp, &task.graph, &sched, hg).is_ok() && rng.chance(p_comp) {
+            transforms::apply_at(comp, &task.graph, &mut sched, hg);
+        }
+    }
+    let mut state = KernelState::new(sched, version);
+    // Base kernels in the optimization branch are clean by construction
+    // (Algorithm 1 only optimizes verified kernels), but the edit itself may
+    // introduce a defect.
+    if let Some(f) = faults::sample_fault(rng, plan.method, policy.coding_skill, task.fault_scale())
+    {
+        // Strict-tolerance tasks turn borderline numeric edits into
+        // verification failures more often.
+        state.faults.push(f);
+    } else if task.strict_tolerance
+        && matches!(
+            plan.method,
+            transforms::MethodId::PrecisionDowncast | transforms::MethodId::UseTensorCore
+        )
+        && rng.chance(0.35)
+    {
+        state.faults.push(crate::device::faults::Fault {
+            kind: crate::device::faults::FaultKind::WrongNumerics,
+            injected_by: plan.method,
+            signature: crate::device::faults::FaultKind::WrongNumerics.signature(plan.method),
+            true_fix: 0,
+            n_candidate_fixes: 2,
+            hard: false,
+        });
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::planner::OptimizationPlan;
+    use crate::bench_suite;
+    use crate::kir::schedule::Schedule;
+    use crate::kir::transforms::MethodId;
+
+    fn plan_for(m: MethodId) -> OptimizationPlan {
+        OptimizationPlan {
+            method: m,
+            steps: vec![],
+            rationale: String::new(),
+            with_cues: true,
+        }
+    }
+
+    #[test]
+    fn execute_applies_the_transform() {
+        let t = bench_suite::level_suite(42, 2).remove(0);
+        let base = KernelState::new(Schedule::per_op_naive(&t.graph), 0);
+        let mut p = PolicyProfile::chatgpt51();
+        p.coding_skill = 1.5; // suppress faults for determinism of this test
+        let mut rng = Rng::new(1);
+        let out = execute(&t, &base, &plan_for(MethodId::TileSmem), 0, &p, 1, &mut rng);
+        assert!(out.sched.cfg[0].staging);
+        assert_eq!(out.version, 1);
+        assert!(out.sched.validate(&t.graph).is_ok());
+    }
+
+    #[test]
+    fn sloppy_policy_injects_faults_sometimes() {
+        let t = bench_suite::level_suite(42, 3).remove(0);
+        let base = KernelState::new(Schedule::per_op_naive(&t.graph), 0);
+        let mut p = PolicyProfile::chatgpt51();
+        p.coding_skill = 0.0;
+        let mut rng = Rng::new(2);
+        let faults = (0..100)
+            .filter(|i| {
+                !execute(&t, &base, &plan_for(MethodId::TileSmem), 0, &p, *i, &mut rng).is_clean()
+            })
+            .count();
+        assert!(faults > 20, "faults={faults}");
+    }
+
+    #[test]
+    fn strict_tasks_risk_numeric_faults_on_downcast() {
+        let mut t = bench_suite::level_suite(42, 1).remove(0);
+        t.strict_tolerance = true;
+        let base = KernelState::new(Schedule::per_op_naive(&t.graph), 0);
+        let mut p = PolicyProfile::chatgpt51();
+        p.coding_skill = 1.5; // isolate the strict-tolerance path
+        let mut rng = Rng::new(3);
+        let faults = (0..200)
+            .filter(|i| {
+                !execute(
+                    &t,
+                    &base,
+                    &plan_for(MethodId::PrecisionDowncast),
+                    0,
+                    &p,
+                    *i,
+                    &mut rng,
+                )
+                .is_clean()
+            })
+            .count();
+        assert!(faults > 30, "faults={faults}");
+    }
+}

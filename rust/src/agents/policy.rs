@@ -1,0 +1,91 @@
+//! The LLM surrogate: a parameterized stochastic policy standing in for the
+//! paper's ChatGPT-5.1 agent calls (DESIGN.md §Substitutions).
+//!
+//! Everything an LLM *would* do in the pipeline is reduced to a handful of
+//! quality parameters; everything the paper's contribution does (the
+//! deterministic decision policy + memories) stays exact. Baselines differ
+//! in these parameters AND in their selection mode (`SelectionMode`).
+
+use crate::kir::transforms::MethodId;
+
+/// Quality parameters of a simulated agent stack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyProfile {
+    /// Probability scale of NOT introducing a bug per edit (1.0 = never).
+    pub coding_skill: f64,
+    /// Repair competence: shrinks regression probability on wrong fixes.
+    pub repair_skill: f64,
+    /// Accuracy of LLM-extracted (non-rule-based) code features.
+    pub feature_accuracy: f64,
+    /// Free-choice bias toward fusion edits (the §3 failure mode).
+    pub fusion_bias: f64,
+    /// Free-choice over-attention to NCU's canned hints (§4.2 failure mode:
+    /// hints always push occupancy/launch knobs).
+    pub hint_following: f64,
+    /// Free-choice probability of identifying the genuinely best method.
+    pub planning_skill: f64,
+}
+
+impl PolicyProfile {
+    /// The paper's base model (ChatGPT-5.1): strong coder, good judgment.
+    pub fn chatgpt51() -> Self {
+        PolicyProfile {
+            coding_skill: 0.85,
+            repair_skill: 0.85,
+            feature_accuracy: 0.92,
+            fusion_bias: 0.3,
+            hint_following: 0.25,
+            planning_skill: 0.22,
+        }
+    }
+
+    /// A trained-from-scratch kernel model (Kevin-32B-like): decent coder,
+    /// no runtime judgment (selection is baked in, see FixedOrdering).
+    pub fn trained_32b() -> Self {
+        PolicyProfile {
+            coding_skill: 0.62,
+            repair_skill: 0.5,
+            feature_accuracy: 0.7,
+            fusion_bias: 0.35,
+            hint_following: 0.0,
+            planning_skill: 0.3,
+        }
+    }
+}
+
+/// How a strategy turns (evidence, candidates) into one method per round.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectionMode {
+    /// KernelSkill: the deterministic long-term-memory decision policy.
+    DecisionPolicy,
+    /// Generic agentic loop (Astra / ablations): LLM free choice over the
+    /// applicable methods, biased by fusion_bias / hint_following.
+    FreeChoice,
+    /// Training-based (Kevin): a fixed learned preference ordering applied
+    /// regardless of profiling feedback.
+    FixedOrdering(Vec<MethodId>),
+    /// QiMeng: a macro plan chosen once from the task category, then
+    /// executed step by step ("macro thinking, micro coding").
+    MacroPlan,
+    /// CudaForge: a Judge that reads raw NCU hints and GPU specs.
+    JudgeHints,
+    /// PRAGMA: a flat profiling->action rule map (no headroom tiers, no
+    /// code-feature gates, no veto rules, no priority resolution).
+    FlatRules,
+    /// STARK: strategic search with grounded instruction — strong free
+    /// choice plus within-task memory and a longer budget.
+    StrategicSearch,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_ordered() {
+        let gpt = PolicyProfile::chatgpt51();
+        let kevin = PolicyProfile::trained_32b();
+        assert!(gpt.coding_skill > kevin.coding_skill);
+        assert!(gpt.repair_skill > kevin.repair_skill);
+    }
+}

@@ -1,0 +1,131 @@
+//! Repairer agent (§4.1.7): apply a repair plan to the latest kernel.
+
+use super::diagnoser::RepairPlan;
+use super::policy::PolicyProfile;
+use super::KernelState;
+use crate::device::faults::{self, RepairOutcome};
+use crate::util::rng::Rng;
+
+/// Result of one repair round.
+#[derive(Debug, Clone)]
+pub struct RepairResult {
+    pub state: KernelState,
+    /// Did the targeted fault get cleared?
+    pub fixed: bool,
+    /// Did the attempt introduce a regression fault?
+    pub regressed: bool,
+}
+
+/// Apply `plan` to the first matching fault of `latest`.
+pub fn execute(
+    latest: &KernelState,
+    plan: &RepairPlan,
+    policy: &PolicyProfile,
+    version: u32,
+    rng: &mut Rng,
+) -> RepairResult {
+    let mut state = latest.clone();
+    state.version = version;
+    let Some(pos) = state
+        .faults
+        .iter()
+        .position(|f| f.signature == plan.error_signature)
+    else {
+        // The fault it diagnosed is gone (stale plan): no-op edit.
+        return RepairResult {
+            state,
+            fixed: false,
+            regressed: false,
+        };
+    };
+    let fault = state.faults[pos].clone();
+    match faults::attempt_fix(rng, &fault, plan.fix_idx, policy.repair_skill) {
+        RepairOutcome::Fixed => {
+            state.faults.remove(pos);
+            RepairResult {
+                state,
+                fixed: true,
+                regressed: false,
+            }
+        }
+        RepairOutcome::StillBroken => RepairResult {
+            state,
+            fixed: false,
+            regressed: false,
+        },
+        RepairOutcome::Regressed(new_fault) => {
+            state.faults.push(new_fault);
+            RepairResult {
+                state,
+                fixed: false,
+                regressed: true,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::faults::{Fault, FaultKind};
+    use crate::kir::schedule::Schedule;
+    use crate::kir::transforms::MethodId;
+
+    fn broken_state() -> KernelState {
+        let mut g = crate::kir::graph::KernelGraph::new();
+        g.push(crate::kir::op::OpKind::MatMul, 64, 64, 64, vec![]);
+        let mut s = KernelState::new(Schedule::per_op_naive(&g), 1);
+        s.faults.push(Fault {
+            kind: FaultKind::CompileSyntax,
+            injected_by: MethodId::TileSmem,
+            signature: "error: expected ';'".into(),
+            true_fix: 1,
+            n_candidate_fixes: 3,
+            hard: false,
+        });
+        s
+    }
+
+    #[test]
+    fn correct_fix_clears_fault() {
+        let s = broken_state();
+        let plan = RepairPlan {
+            error_signature: "error: expected ';'".into(),
+            fix_idx: 1,
+            rationale: String::new(),
+        };
+        let mut rng = Rng::new(1);
+        let r = execute(&s, &plan, &PolicyProfile::chatgpt51(), 2, &mut rng);
+        assert!(r.fixed);
+        assert!(r.state.is_clean());
+        assert_eq!(r.state.version, 2);
+    }
+
+    #[test]
+    fn wrong_fix_leaves_fault() {
+        let s = broken_state();
+        let plan = RepairPlan {
+            error_signature: "error: expected ';'".into(),
+            fix_idx: 0,
+            rationale: String::new(),
+        };
+        let mut rng = Rng::new(2);
+        let r = execute(&s, &plan, &PolicyProfile::chatgpt51(), 2, &mut rng);
+        assert!(!r.fixed);
+        assert!(!r.state.is_clean());
+    }
+
+    #[test]
+    fn stale_plan_is_noop() {
+        let s = broken_state();
+        let plan = RepairPlan {
+            error_signature: "some other error".into(),
+            fix_idx: 0,
+            rationale: String::new(),
+        };
+        let mut rng = Rng::new(3);
+        let r = execute(&s, &plan, &PolicyProfile::chatgpt51(), 2, &mut rng);
+        assert!(!r.fixed);
+        assert_eq!(r.state.faults.len(), 1);
+    }
+}

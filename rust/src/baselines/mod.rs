@@ -1,0 +1,248 @@
+//! Strategy definitions: KernelSkill, its three ablations (Table 2), and the
+//! six published baselines (Table 1/3), all expressed over the same loop
+//! substrate (DESIGN.md §Baselines).
+//!
+//! A [`Strategy`] bundles: the selection mode (where the systems genuinely
+//! differ), which memories are enabled, the refinement budget, and the
+//! surrogate policy profile. `run_task` (coordinator) interprets it.
+
+use crate::agents::policy::{PolicyProfile, SelectionMode};
+use crate::kir::transforms::MethodId;
+
+#[derive(Debug, Clone)]
+pub struct Strategy {
+    pub name: &'static str,
+    /// Max refinement rounds N (paper: 15; STARK: 30).
+    pub rounds: u32,
+    /// Seed kernels sampled by the Generator (paper: 3).
+    pub n_seeds: usize,
+    pub use_long_term: bool,
+    pub use_short_term_opt: bool,
+    pub use_short_term_repair: bool,
+    pub policy: PolicyProfile,
+    pub selection: SelectionMode,
+}
+
+/// KernelSkill as configured in §5.3: ChatGPT-5.1, 3 seeds, 15 rounds,
+/// rt = at = 0.3, both memories.
+pub fn kernelskill() -> Strategy {
+    Strategy {
+        name: "KernelSkill",
+        rounds: 15,
+        n_seeds: 3,
+        use_long_term: true,
+        use_short_term_opt: true,
+        use_short_term_repair: true,
+        policy: PolicyProfile::chatgpt51(),
+        selection: SelectionMode::DecisionPolicy,
+    }
+}
+
+/// Table-2 ablation: no memory at all (free choice, no trajectory state).
+pub fn wo_memory() -> Strategy {
+    Strategy {
+        name: "w/o memory",
+        use_long_term: false,
+        use_short_term_opt: false,
+        use_short_term_repair: false,
+        selection: SelectionMode::FreeChoice,
+        ..kernelskill()
+    }
+}
+
+/// Table-2 ablation: long-term memory only.
+pub fn wo_short_term() -> Strategy {
+    Strategy {
+        name: "w/o Short_term memory",
+        use_short_term_opt: false,
+        use_short_term_repair: false,
+        ..kernelskill()
+    }
+}
+
+/// Table-2 ablation: short-term memory only.
+pub fn wo_long_term() -> Strategy {
+    Strategy {
+        name: "w/o Long_term memory",
+        use_long_term: false,
+        selection: SelectionMode::FreeChoice,
+        ..kernelskill()
+    }
+}
+
+/// Kevin-32B: multi-turn-RL-trained model. Selection is a learned, fixed
+/// preference ordering (no profiling conditioning); weaker coding/repair;
+/// shorter effective budget (the trained policy plateaus).
+pub fn kevin() -> Strategy {
+    Strategy {
+        name: "Kevin-32B",
+        rounds: 12,
+        n_seeds: 3,
+        use_long_term: false,
+        use_short_term_opt: false,
+        use_short_term_repair: false,
+        policy: PolicyProfile::trained_32b(),
+        selection: SelectionMode::FixedOrdering(vec![
+            MethodId::FuseElementwise,
+            MethodId::TileSmem,
+            MethodId::VectorizeLoads,
+            MethodId::CoalesceAccesses,
+            MethodId::FuseEpilogueReduction,
+            MethodId::UnrollInner,
+            MethodId::DoubleBuffer,
+            MethodId::LaunchTune,
+            MethodId::HorizontalFuse,
+        ]),
+    }
+}
+
+/// QiMeng: macro-thinking / micro-coding. A static macro plan per task
+/// category, executed stepwise; competent coder.
+pub fn qimeng() -> Strategy {
+    Strategy {
+        name: "QiMeng",
+        rounds: 15,
+        n_seeds: 3,
+        use_long_term: false,
+        use_short_term_opt: false,
+        use_short_term_repair: false,
+        policy: PolicyProfile {
+            coding_skill: 0.78,
+            repair_skill: 0.7,
+            feature_accuracy: 0.85,
+            fusion_bias: 0.3,
+            hint_following: 0.1,
+            planning_skill: 0.4,
+        },
+        selection: SelectionMode::MacroPlan,
+    }
+}
+
+/// CudaForge: training-free Coder-Judge with NCU/GPU-spec feedback.
+pub fn cudaforge() -> Strategy {
+    Strategy {
+        name: "CudaForge",
+        rounds: 15,
+        n_seeds: 3,
+        use_long_term: false,
+        use_short_term_opt: false,
+        use_short_term_repair: false,
+        policy: PolicyProfile {
+            hint_following: 0.45,
+            ..PolicyProfile::chatgpt51()
+        },
+        selection: SelectionMode::JudgeHints,
+    }
+}
+
+/// Astra: multi-agent roles, implicit method selection, no memory.
+pub fn astra() -> Strategy {
+    Strategy {
+        name: "Astra",
+        rounds: 15,
+        n_seeds: 3,
+        use_long_term: false,
+        use_short_term_opt: false,
+        use_short_term_repair: false,
+        policy: PolicyProfile {
+            fusion_bias: 0.55,
+            hint_following: 0.4,
+            planning_skill: 0.12,
+            ..PolicyProfile::chatgpt51()
+        },
+        selection: SelectionMode::FreeChoice,
+    }
+}
+
+/// PRAGMA: profiling-reasoned bottleneck->action mapping, flat rules.
+pub fn pragma() -> Strategy {
+    Strategy {
+        name: "PRAGMA",
+        rounds: 15,
+        n_seeds: 3,
+        use_long_term: false,
+        use_short_term_opt: false,
+        use_short_term_repair: false,
+        policy: PolicyProfile::chatgpt51(),
+        selection: SelectionMode::FlatRules,
+    }
+}
+
+/// STARK: strategic search + grounded instruction + within-task memory,
+/// 30 refinement rounds (its published budget).
+pub fn stark() -> Strategy {
+    Strategy {
+        name: "STARK",
+        rounds: 30,
+        n_seeds: 3,
+        use_long_term: false,
+        use_short_term_opt: true,
+        use_short_term_repair: true,
+        policy: PolicyProfile {
+            planning_skill: 0.45,
+            fusion_bias: 0.2,
+            hint_following: 0.15,
+            ..PolicyProfile::chatgpt51()
+        },
+        selection: SelectionMode::StrategicSearch,
+    }
+}
+
+/// The Table-1/3 roster, paper order.
+pub fn table1_roster() -> Vec<Strategy> {
+    vec![
+        kevin(),
+        astra(),
+        pragma(),
+        cudaforge(),
+        qimeng(),
+        stark(),
+        kernelskill(),
+    ]
+}
+
+/// The Table-2 roster.
+pub fn table2_roster() -> Vec<Strategy> {
+    vec![wo_memory(), wo_short_term(), wo_long_term(), kernelskill()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rosters_have_unique_names() {
+        let mut names: Vec<&str> = table1_roster()
+            .iter()
+            .chain(table2_roster().iter())
+            .map(|s| s.name)
+            .collect();
+        names.sort();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before - 1, "only KernelSkill appears twice");
+    }
+
+    #[test]
+    fn only_stark_gets_30_rounds() {
+        for s in table1_roster() {
+            if s.name == "STARK" {
+                assert_eq!(s.rounds, 30);
+            } else {
+                assert!(s.rounds <= 15);
+            }
+        }
+    }
+
+    #[test]
+    fn ablations_toggle_exactly_the_memories() {
+        let full = kernelskill();
+        let wo_st = wo_short_term();
+        assert_eq!(wo_st.use_long_term, true);
+        assert_eq!(wo_st.use_short_term_opt, false);
+        let wo_lt = wo_long_term();
+        assert_eq!(wo_lt.use_long_term, false);
+        assert_eq!(wo_lt.use_short_term_opt, true);
+        assert_eq!(full.use_long_term && full.use_short_term_opt, true);
+    }
+}

@@ -1,0 +1,162 @@
+//! Torch-Eager baseline cost + the custom-kernel floor.
+//!
+//! Eager execution = one library-quality kernel per op (cuBLAS/cuDNN for
+//! GEMM-shaped ops, decent-but-generic kernels for the rest), a launch per
+//! op, no cross-op fusion — times the task's `eager_waste`. The custom floor
+//! is `roofline * custom_edge`: no agent-written kernel can beat the task's
+//! roofline, and on library-dominated ops it cannot even reach it.
+
+use super::task::Task;
+use crate::device::costmodel::{self, price_group};
+use crate::device::machine::DeviceSpec;
+use crate::kir::op::{Op, OpKind};
+use crate::kir::schedule::{GroupSchedule, Layout, Schedule};
+
+/// Per-op framework dispatch overhead in eager mode (python dispatcher,
+/// autograd bookkeeping, stream sync) — on top of the raw kernel launch.
+/// This is the structural reason custom kernels win on deep graphs.
+pub const FRAMEWORK_DISPATCH_S: f64 = 9.0e-6;
+
+/// Library schedule the eager framework would dispatch for one op.
+pub fn lib_cfg(op: &Op) -> GroupSchedule {
+    if op.is_gemm_like() {
+        let mut c = GroupSchedule::library_gemm();
+        // Libraries autotune tiles to the problem (parallelism-aware).
+        let (tm, tn) = crate::kir::transforms::gemm_tiles(op.m, op.n);
+        c.tile_m = tm;
+        c.tile_n = tn;
+        c
+    } else {
+        // Generic framework kernel: coalesced, vectorized, unfused.
+        let mut c = GroupSchedule::naive();
+        c.tile_m = 64;
+        c.tile_n = 128;
+        c.layout = Layout::Coalesced;
+        c.vector_width = 4;
+        c.unroll = 2;
+        // Framework reduction kernels are reasonably tuned.
+        if matches!(op.kind, OpKind::Reduction(_) | OpKind::Norm(_)) {
+            c.unroll = 4;
+        }
+        c
+    }
+}
+
+/// Eager latency with no redundant work: one library kernel per op.
+pub fn eager_no_waste_s(task: &Task, dev: &DeviceSpec) -> f64 {
+    let kernels: f64 = task
+        .graph
+        .ops
+        .iter()
+        .map(|op| price_group(&task.graph, &[op.id], &lib_cfg(op), dev).time_s)
+        .sum();
+    kernels + task.graph.len() as f64 * FRAMEWORK_DISPATCH_S
+}
+
+/// Torch-Eager latency for the task (seconds).
+pub fn eager_time_s(task: &Task, dev: &DeviceSpec) -> f64 {
+    eager_no_waste_s(task, dev) * task.eager_waste
+}
+
+/// Hard floor on any custom kernel's latency for this task: the task's
+/// schedule-quality ceiling relative to waste-free eager, but never below
+/// the legality-aware roofline (physics).
+pub fn custom_floor_s(task: &Task, dev: &DeviceSpec) -> f64 {
+    let quality_floor = eager_no_waste_s(task, dev) / task.sched_ceiling;
+    costmodel::legal_roofline_s(&task.graph, dev).max(quality_floor)
+}
+
+/// Latency of a candidate schedule, floored by the task's custom edge.
+///
+/// On structured tasks (diagonal/triangular operands), a faithful custom
+/// translation does the same dense redundant work as eager until the
+/// SpecializeStructure method rewrites the kernel — the waste multiplier
+/// stays on the custom kernel until then.
+pub fn custom_time_s(task: &Task, sched: &Schedule, dev: &DeviceSpec) -> f64 {
+    let mut t = costmodel::price(&task.graph, sched, dev).total_s;
+    if task.graph.structured_operands && !sched.specialized {
+        t *= task.eager_waste;
+    }
+    t.max(custom_floor_s(task, dev))
+}
+
+/// Speedup of a schedule over Torch Eager (the paper's headline metric).
+pub fn speedup(task: &Task, sched: &Schedule, dev: &DeviceSpec) -> f64 {
+    eager_time_s(task, dev) / custom_time_s(task, sched, dev)
+}
+
+/// The best speedup any method could reach on this task (ceiling).
+pub fn max_speedup(task: &Task, dev: &DeviceSpec) -> f64 {
+    eager_time_s(task, dev) / custom_floor_s(task, dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::KernelGraph;
+    use crate::kir::op::EwKind;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::a100_like()
+    }
+
+    fn task(graph: KernelGraph, waste: f64, ceiling: f64) -> Task {
+        Task {
+            id: "t".into(),
+            level: 1,
+            name: "t".into(),
+            graph,
+            eager_waste: waste,
+            sched_ceiling: ceiling,
+            strict_tolerance: false,
+            translation_risk: 0.05,
+            artifact: None,
+        }
+    }
+
+    #[test]
+    fn max_speedup_is_waste_times_ceiling() {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 2048, 2048, 2048, vec![]);
+        let t = task(g, 3.0, 1.1);
+        let max = max_speedup(&t, &dev());
+        assert!((max - 3.3).abs() < 1e-9, "got {max}");
+    }
+
+    #[test]
+    fn physics_caps_the_ceiling() {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 2048, 2048, 2048, vec![]);
+        // An absurd quality ceiling cannot push custom below the roofline.
+        let t = task(g, 1.0, 1000.0);
+        let max = max_speedup(&t, &dev());
+        assert!(max < 10.0, "physics should cap, got {max}");
+    }
+
+    #[test]
+    fn sub_parity_ceiling_forces_fast1_miss() {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 2048, 2048, 2048, vec![]);
+        let t = task(g, 1.0, 0.85);
+        assert!(max_speedup(&t, &dev()) < 1.0);
+    }
+
+    #[test]
+    fn naive_seed_far_below_eager() {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 1024, 1024, 1024, vec![]);
+        let t = task(g, 1.0, 1.05);
+        let seed = Schedule::per_op_naive(&t.graph);
+        let s = speedup(&t, &seed, &dev());
+        assert!(s < 0.1, "naive seed should be ~0.03x (motivating example), got {s}");
+    }
+
+    #[test]
+    fn custom_time_respects_floor() {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 512, 512, 512, vec![]);
+        let t = task(g, 1.0, 0.5);
+        let seed = Schedule::per_op_naive(&t.graph);
+        assert!(custom_time_s(&t, &seed, &dev()) >= custom_floor_s(&t, &dev()));
+    }
+}

@@ -1,0 +1,179 @@
+//! Level 2: 100 multi-operator tasks — fusion-dominated workloads.
+//!
+//! Each task is a short producer-consumer chain (GEMM/conv + elementwise
+//! epilogue, optionally a row-reduction/normalization tail) in the style of
+//! the paper's Appendix-D example. Eager runs one kernel per op, so the
+//! ceiling comes from fusing intermediates away plus saved launches —
+//! the regime where the paper reports 2.82x and Fast₁ = 1.00.
+
+use super::task::Task;
+use crate::kir::graph::KernelGraph;
+use crate::kir::op::{EwKind, NormKind, OpKind, RedKind};
+use crate::util::rng::Rng;
+
+const EW_POOL: [EwKind; 8] = [
+    EwKind::Add,
+    EwKind::Mul,
+    EwKind::Scale,
+    EwKind::Clamp,
+    EwKind::Relu,
+    EwKind::Gelu,
+    EwKind::Bias,
+    EwKind::Residual,
+];
+
+fn dim(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+    (((rng.log_uniform(lo as f64, hi as f64) as u64) + 7) / 8 * 8).max(8)
+}
+
+/// The Appendix-D shape: linear -> scale -> double -> clamp -> logsumexp ->
+/// mish. Kept verbatim as task l2_000 and backed by the real Pallas
+/// artifacts (`fused_epilogue`).
+pub fn appendix_d_graph(b: u64, k: u64, n: u64) -> KernelGraph {
+    let mut g = KernelGraph::new();
+    let mm = g.push(OpKind::MatMul, b, n, k, vec![]);
+    let bias = g.push(OpKind::Elementwise(EwKind::Bias), b, n, 1, vec![mm]);
+    let sc = g.push(OpKind::Elementwise(EwKind::Scale), b, n, 1, vec![bias]);
+    let rs = g.push(OpKind::Elementwise(EwKind::Residual), b, n, 1, vec![sc]);
+    let cl = g.push(OpKind::Elementwise(EwKind::Clamp), b, n, 1, vec![rs]);
+    let lse = g.push(OpKind::Reduction(RedKind::Row), b, n, 1, vec![cl]);
+    let _ = g.push(OpKind::Elementwise(EwKind::Mish), b, 1, 1, vec![lse]);
+    g
+}
+
+pub fn generate(rng: &mut Rng) -> Vec<Task> {
+    let mut tasks = Vec::with_capacity(100);
+
+    // Task 0: the paper's motivating example, artifact-backed.
+    tasks.push(Task {
+        id: "l2_000_fused_epilogue".to_string(),
+        level: 2,
+        name: "fused_epilogue".to_string(),
+        graph: appendix_d_graph(1024, 8192, 8192),
+        eager_waste: 1.0,
+        sched_ceiling: 3.2,
+        strict_tolerance: false,
+        translation_risk: 0.1,
+        artifact: Some("fused_epilogue".to_string()),
+    });
+
+    for i in 1..100 {
+        let mut g = KernelGraph::new();
+        let family = rng.range(0, 4);
+        let name;
+        match family {
+            0 => {
+                // GEMM + elementwise epilogue chain (2-5 ew ops).
+                name = "gemm_epilogue";
+                let m = dim(rng, 256, 2048);
+                let n = dim(rng, 256, 4096);
+                let k = dim(rng, 256, 4096);
+                let mut prev = g.push(OpKind::MatMul, m, n, k, vec![]);
+                for _ in 0..rng.range(2, 6) {
+                    let ew = *rng.choose(&EW_POOL);
+                    prev = g.push(OpKind::Elementwise(ew), m, n, 1, vec![prev]);
+                }
+            }
+            1 => {
+                // GEMM + epilogue + row-reduction tail (Appendix-D style).
+                name = "gemm_reduce";
+                let m = dim(rng, 256, 2048);
+                let n = dim(rng, 512, 4096);
+                let k = dim(rng, 512, 4096);
+                let mut prev = g.push(OpKind::MatMul, m, n, k, vec![]);
+                for _ in 0..rng.range(1, 4) {
+                    prev = g.push(OpKind::Elementwise(*rng.choose(&EW_POOL)), m, n, 1, vec![prev]);
+                }
+                let red = g.push(OpKind::Reduction(RedKind::Row), m, n, 1, vec![prev]);
+                let _ = g.push(OpKind::Elementwise(EwKind::Mish), m, 1, 1, vec![red]);
+            }
+            2 => {
+                // Conv + norm + activation (vision block).
+                name = "conv_norm_act";
+                let m = dim(rng, 512, 4096);
+                let n = dim(rng, 128, 1024);
+                let k = dim(rng, 128, 2048);
+                let c = g.push(OpKind::Conv, m, n, k, vec![]);
+                let bn = g.push(OpKind::Norm(NormKind::BatchNorm), m, n, 1, vec![c]);
+                let _ = g.push(OpKind::Elementwise(EwKind::Relu), m, n, 1, vec![bn]);
+            }
+            _ => {
+                // Pure elementwise/norm chain over a big tensor.
+                name = "ew_chain";
+                let m = dim(rng, 1024, 8192);
+                let n = dim(rng, 1024, 4096);
+                let mut prev = g.push(OpKind::Elementwise(*rng.choose(&EW_POOL)), m, n, 1, vec![]);
+                for _ in 0..rng.range(2, 6) {
+                    prev = g.push(OpKind::Elementwise(*rng.choose(&EW_POOL)), m, n, 1, vec![prev]);
+                }
+                if rng.chance(0.4) {
+                    let _ = g.push(OpKind::Norm(NormKind::LayerNorm), m, n, 1, vec![prev]);
+                }
+            }
+        }
+        // Occasional exotic-chain waste (eager composes transcendentals).
+        let waste = if rng.chance(0.2) {
+            rng.lognormal(1.8f64.ln(), 0.3).clamp(1.0, 4.0)
+        } else {
+            1.0
+        };
+        tasks.push(Task {
+            id: format!("l2_{i:03}_{name}"),
+            level: 2,
+            name: name.to_string(),
+            graph: g,
+            eager_waste: waste,
+            sched_ceiling: rng.lognormal(3.0f64.ln(), 0.35).clamp(1.05, 8.0),
+            strict_tolerance: rng.chance(0.2),
+            translation_risk: if rng.chance(0.08) {
+                rng.log_uniform(0.55, 0.9)
+            } else {
+                rng.log_uniform(0.06, 0.2)
+            },
+            artifact: None,
+        });
+    }
+
+    assert_eq!(tasks.len(), 100);
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::eager;
+    use crate::device::machine::DeviceSpec;
+    use crate::util::stats;
+
+    #[test]
+    fn generates_100_multi_op_tasks() {
+        let tasks = generate(&mut Rng::new(42));
+        assert_eq!(tasks.len(), 100);
+        for t in &tasks {
+            assert!(t.graph.validate().is_ok(), "{}", t.id);
+            assert!(t.graph.len() >= 3, "{} has {} ops", t.id, t.graph.len());
+        }
+    }
+
+    #[test]
+    fn appendix_d_matches_paper_shape() {
+        let g = appendix_d_graph(1024, 8192, 8192);
+        assert_eq!(g.len(), 7);
+        assert!(g.dominant_op().unwrap().is_gemm_like());
+        assert!(g.dominant_flop_fraction() > 0.99);
+        assert!(g.has_row_reduction());
+    }
+
+    #[test]
+    fn ceilings_are_fusion_scaled() {
+        let dev = DeviceSpec::a100_like();
+        let tasks = generate(&mut Rng::new(42));
+        let ceilings: Vec<f64> = tasks.iter().map(|t| eager::max_speedup(t, &dev)).collect();
+        let m = stats::mean(&ceilings);
+        assert!(m > 2.5 && m < 8.0, "L2 mean ceiling {m}");
+        // Fast1 = 1.00 on L2 in the paper: essentially every task's ceiling
+        // clears parity.
+        let below = ceilings.iter().filter(|c| **c < 1.0).count();
+        assert!(below <= 2, "L2 sub-parity tasks: {below}");
+    }
+}

@@ -1,0 +1,49 @@
+//! KernelBenchSim: the 250-task benchmark suite (100 + 100 + 50) standing in
+//! for KernelBench Levels 1-3 (DESIGN.md §Substitutions), plus the
+//! Torch-Eager baseline cost model.
+
+pub mod eager;
+pub mod level1;
+pub mod level2;
+pub mod level3;
+pub mod task;
+
+use crate::util::rng::Rng;
+pub use task::Task;
+
+/// Generate the full suite for one suite seed. Deterministic.
+pub fn full_suite(seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(seed);
+    let mut tasks = level1::generate(&mut rng.child("l1"));
+    tasks.extend(level2::generate(&mut rng.child("l2")));
+    tasks.extend(level3::generate(&mut rng.child("l3")));
+    tasks
+}
+
+/// Tasks of one level only.
+pub fn level_suite(seed: u64, level: u8) -> Vec<Task> {
+    full_suite(seed).into_iter().filter(|t| t.level == level).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_suite_is_250() {
+        let tasks = full_suite(42);
+        assert_eq!(tasks.len(), 250);
+        assert_eq!(tasks.iter().filter(|t| t.level == 1).count(), 100);
+        assert_eq!(tasks.iter().filter(|t| t.level == 2).count(), 100);
+        assert_eq!(tasks.iter().filter(|t| t.level == 3).count(), 50);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let tasks = full_suite(42);
+        let mut ids: Vec<&str> = tasks.iter().map(|t| t.id.as_str()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 250);
+    }
+}

@@ -1,0 +1,95 @@
+//! KernelBenchSim task definition — the KernelBench substitution.
+//!
+//! A task is a graph plus the two scalars that define its *optimization
+//! landscape* relative to Torch Eager:
+//!
+//! * `eager_waste`  — multiplier on the eager baseline's cost: redundant work
+//!   the framework implementation does that a specialized kernel avoids
+//!   (e.g. materializing a diagonal matrix before a GEMM). This is where
+//!   KernelBench's heavy-tailed Level-1 speedups come from.
+//! * `sched_ceiling` — the best speedup *schedule quality alone* can deliver
+//!   over a waste-free eager baseline: >1 where custom kernels beat the
+//!   framework's generic kernels (fusion headroom, better reductions), <1
+//!   where hand-tuned-library magic (cuBLAS/cuDNN) cannot be recovered from
+//!   scratch — those are the Fast₁ misses in Table 3.
+
+use crate::kir::graph::KernelGraph;
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// Stable id, e.g. "l1_017_gemm_diag".
+    pub id: String,
+    /// KernelBench level (1, 2, 3).
+    pub level: u8,
+    /// Operator-family name for traces.
+    pub name: String,
+    pub graph: KernelGraph,
+    /// Eager redundant-work multiplier (>= 1).
+    pub eager_waste: f64,
+    /// Schedule-quality speedup ceiling vs waste-free eager (may be < 1).
+    pub sched_ceiling: f64,
+    /// Strict numeric tolerance: precision downcast is vetoed
+    /// (global_forbidden_rules) and NaN faults are likelier.
+    pub strict_tolerance: bool,
+    /// How hard a faithful CUDA translation of the reference is: the
+    /// Generator's per-seed fault probability scales with this. Exotic ops
+    /// and deep model graphs are translation nightmares.
+    pub translation_risk: f64,
+    /// If set, this task is backed by real AOT Pallas artifacts under
+    /// `artifacts/` and the Verifier runs real PJRT numeric checks.
+    pub artifact: Option<String>,
+}
+
+impl Task {
+    /// Scale factor for the fault model: bigger graphs mean more code per
+    /// edit and harder repairs (the Level-3 brittleness of Table 1).
+    pub fn fault_scale(&self) -> f64 {
+        1.0 + (self.graph.len() as f64).ln().max(0.0) * 0.35
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::op::OpKind;
+
+    #[test]
+    fn fault_scale_grows_with_graph() {
+        let mut small = KernelGraph::new();
+        small.push(OpKind::MatMul, 64, 64, 64, vec![]);
+        let mut big = KernelGraph::new();
+        let mut prev = big.push(OpKind::MatMul, 64, 64, 64, vec![]);
+        for _ in 0..30 {
+            prev = big.push(
+                OpKind::Elementwise(crate::kir::op::EwKind::Relu),
+                64,
+                64,
+                1,
+                vec![prev],
+            );
+        }
+        let t_small = Task {
+            id: "s".into(),
+            level: 1,
+            name: "s".into(),
+            graph: small,
+            eager_waste: 1.0,
+            sched_ceiling: 1.0,
+            strict_tolerance: false,
+            translation_risk: 0.05,
+            artifact: None,
+        };
+        let t_big = Task {
+            id: "b".into(),
+            level: 3,
+            name: "b".into(),
+            graph: big,
+            eager_waste: 1.0,
+            sched_ceiling: 1.0,
+            strict_tolerance: false,
+            translation_risk: 0.4,
+            artifact: None,
+        };
+        assert!(t_big.fault_scale() > t_small.fault_scale());
+    }
+}

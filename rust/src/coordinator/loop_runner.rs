@@ -1,0 +1,517 @@
+//! Algorithm 1: the closed-loop multi-agent refinement for one task.
+//!
+//! Two-branch control flow per round: a broken kernel goes to the
+//! Diagnoser/Repairer (conditioned on short-term repair memory); a healthy
+//! one goes through Feature Extractor -> Retrieval -> Planner -> Optimizer
+//! (conditioned on long-term memory + short-term optimization memory).
+//! Base-kernel promotion follows the rt/at thresholds.
+
+use crate::agents::{
+    diagnoser, feature_extractor, generator, optimizer, planner, repairer, reviewer, KernelState,
+};
+use crate::baselines::Strategy;
+use crate::bench_suite::Task;
+use crate::device::machine::DeviceSpec;
+use crate::device::metrics::ToolVersion;
+use crate::kir::schedule::Schedule;
+use crate::kir::transforms::{self, MethodId, ALL_METHODS};
+use crate::memory::long_term::retrieval;
+use crate::memory::short_term::{OptMemory, RepairAttempt, RepairMemory};
+use crate::util::rng::{derive_seed, label, Rng};
+
+/// Which branch a round took.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Branch {
+    /// Optimization round with the method chosen.
+    Optimize(MethodId),
+    /// Repair round with the candidate-fix index.
+    Repair(u8),
+    /// The optimizer produced a structurally illegal schedule and the agent
+    /// reverted the edit.
+    Revert,
+    /// No plan available (converged / nothing applicable).
+    Converged,
+}
+
+/// Per-round trace record (feeds Figures 2-3 and the trajectory bench).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u32,
+    pub branch: Branch,
+    pub compiled: bool,
+    pub correct: bool,
+    pub speedup: Option<f64>,
+    pub version: u32,
+}
+
+/// Outcome of one task run.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task_id: String,
+    pub level: u8,
+    pub strategy: &'static str,
+    /// A compiling + verifying kernel was produced within budget.
+    pub success: bool,
+    /// Best speedup over Torch Eager (0.0 on failure, per the paper's
+    /// aggregate accounting).
+    pub best_speedup: f64,
+    /// Speedup of the selected seed (None if no seed verified).
+    pub seed_speedup: Option<f64>,
+    pub rounds_used: u32,
+    pub rounds: Vec<RoundRecord>,
+    pub promotions: u32,
+    pub repair_attempts: usize,
+    pub longest_repair_chain: usize,
+    /// The winning schedule (artifact verification / e2e replay).
+    pub best_sched: Schedule,
+}
+
+/// Loop configuration shared across a suite run.
+#[derive(Debug, Clone)]
+pub struct LoopConfig {
+    pub rt: f64,
+    pub at: f64,
+    pub dev: DeviceSpec,
+    pub tool: ToolVersion,
+    /// Experiment-level seed; per-task streams derive from it.
+    pub run_seed: u64,
+}
+
+impl Default for LoopConfig {
+    fn default() -> Self {
+        LoopConfig {
+            rt: 0.3,
+            at: 0.3,
+            dev: DeviceSpec::a100_like(),
+            tool: ToolVersion::Ncu2023,
+            run_seed: 0,
+        }
+    }
+}
+
+/// Run Algorithm 1 on one task under one strategy.
+pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResult {
+    let mut rng = Rng::new(derive_seed(
+        cfg.run_seed,
+        &[label(strategy.name), label(&task.id)],
+    ));
+
+    // Whether this run's agent stack *notices* exploitable operand
+    // structure at all. Noticing is a property of the whole run (a blind
+    // model stays blind across rounds): KernelSkill is prompted to look by
+    // the long-term memory's feature definition (feature 19); strategies
+    // with strategic grounding or macro planning sometimes see it; plain
+    // free choice rarely; fixed/judge/rule pipelines never — structure is
+    // simply not in their repertoire.
+    let notices_structure = task.graph.structured_operands && {
+        use crate::agents::policy::SelectionMode::*;
+        let p = match strategy.selection {
+            DecisionPolicy => {
+                if strategy.use_long_term {
+                    strategy.policy.feature_accuracy
+                } else {
+                    strategy.policy.planning_skill * 0.6
+                }
+            }
+            StrategicSearch => 0.42,
+            MacroPlan => 0.35,
+            FreeChoice => strategy.policy.planning_skill * 0.6,
+            FixedOrdering(_) | JudgeHints | FlatRules => 0.0,
+        };
+        rng.chance(p)
+    };
+    // Per-run judgment draw (see PlanContext::insightful).
+    let insightful = rng.chance(strategy.policy.planning_skill);
+    // §Perf opts 3-4: eager latency and the custom floor are task
+    // constants; price them once.
+    let consts = Some((
+        crate::bench_suite::eager::eager_time_s(task, &cfg.dev),
+        crate::bench_suite::eager::custom_floor_s(task, &cfg.dev),
+    ));
+
+    // ---- Seed generation + selection (Generator + Reviewer) ----
+    let seeds = generator::generate_seeds(task, strategy.n_seeds, &strategy.policy, &mut rng);
+    let mut version_counter = seeds.len() as u32;
+    let mut best: Option<(f64, Schedule)> = None;
+    let mut base: Option<(KernelState, reviewer::Review)> = None;
+    let mut current: Option<KernelState> = None;
+    let mut seed_speedup = None;
+
+    for seed in &seeds {
+        let review = reviewer::review_with_eager(task, seed, &cfg.dev, cfg.tool, &mut rng, consts);
+        if review.ok() {
+            let sp = review.speedup.unwrap();
+            if seed_speedup.map(|s| sp > s).unwrap_or(true) {
+                seed_speedup = Some(sp);
+                best = Some((sp, seed.sched.clone()));
+                base = Some((seed.clone(), review));
+            }
+        } else if current.is_none() {
+            current = Some(seed.clone());
+        }
+    }
+    // Healthy seed wins the "current" slot; else start broken.
+    if base.is_some() {
+        current = None;
+    }
+
+    // Without short-term memory there is no reliable record of which
+    // version was best: the pipeline delivers its LATEST working kernel.
+    let mut latest_valid: Option<(f64, Schedule)> = best.clone();
+    let mut opt_mem = OptMemory::new(cfg.rt, cfg.at, seed_speedup.unwrap_or(0.0));
+    let mut repair_mem = RepairMemory::new();
+    let mut rounds = Vec::new();
+    let mut promotions = 0u32;
+    // Method that produced the currently-broken candidate (for post-repair
+    // bookkeeping in the optimization memory).
+    let mut pending_method: Option<MethodId> = None;
+    let mut last_method: Option<MethodId> = None;
+    let mut rounds_used = 0;
+
+    for round in 1..=strategy.rounds {
+        rounds_used = round;
+        let mut round_rng = rng.child("round");
+
+        if let Some(broken) = current.take() {
+            // ---------------- Repair branch ----------------
+            if strategy.use_short_term_repair {
+                repair_mem.open_chain(broken.version);
+            }
+            let fault = broken
+                .compile_fault()
+                .or_else(|| broken.runtime_fault())
+                .cloned();
+
+            let (state, record) = match fault {
+                Some(fault) => {
+                    let mem = strategy.use_short_term_repair.then_some(&repair_mem);
+                    let plan =
+                        diagnoser::diagnose(&fault, mem, &strategy.policy, &mut round_rng);
+                    version_counter += 1;
+                    // A history-conditioned repair plan avoids re-breaking
+                    // what previous fixes touched (fewer regressions).
+                    let mut repair_policy = strategy.policy.clone();
+                    if strategy.use_short_term_repair {
+                        repair_policy.repair_skill = (repair_policy.repair_skill + 0.25).min(1.0);
+                    }
+                    let result = repairer::execute(
+                        &broken,
+                        &plan,
+                        &repair_policy,
+                        version_counter,
+                        &mut round_rng,
+                    );
+                    repair_mem.record(RepairAttempt {
+                        error_signature: plan.error_signature.clone(),
+                        fix_idx: plan.fix_idx,
+                        fixed: result.fixed,
+                        kernel_version: version_counter,
+                        round,
+                    });
+                    (result.state, Branch::Repair(plan.fix_idx))
+                }
+                None => {
+                    // Structural legality failure without an injected fault:
+                    // the agent reverts the offending edit (back to base or
+                    // the seed schedule).
+                    version_counter += 1;
+                    let sched = base
+                        .as_ref()
+                        .map(|(b, _)| b.sched.clone())
+                        .unwrap_or_else(|| Schedule::per_op_naive(&task.graph));
+                    (KernelState::new(sched, version_counter), Branch::Revert)
+                }
+            };
+
+            let review =
+                reviewer::review_with_eager(task, &state, &cfg.dev, cfg.tool, &mut round_rng, consts);
+            rounds.push(RoundRecord {
+                round,
+                branch: record,
+                compiled: review.compiles,
+                correct: review.correct,
+                speedup: review.speedup,
+                version: state.version,
+            });
+            if review.ok() {
+                repair_mem.close_chain();
+                let sp = review.speedup.unwrap();
+                latest_valid = Some((sp, state.sched.clone()));
+                if best.as_ref().map(|(b, _)| sp > *b).unwrap_or(true) {
+                    best = Some((sp, state.sched.clone()));
+                }
+                // The repaired kernel is this lineage's measurement; apply
+                // the promotion rule for the method that spawned it.
+                let method = pending_method.take().unwrap_or(MethodId::LaunchTune);
+                if strategy.use_short_term_opt {
+                    let promoted = opt_mem.record(method, Some(sp), round, state.version);
+                    if promoted || base.is_none() {
+                        if promoted {
+                            promotions += 1;
+                        }
+                        base = Some((state, review));
+                    }
+                } else {
+                    // No trajectory memory: the agent iterates on its
+                    // latest working kernel, wherever that drifted (§4.2's
+                    // oscillation failure mode). Best-so-far is still
+                    // reported, but refinement builds on `state`.
+                    opt_mem.base_speedup = sp;
+                    promotions += 1;
+                    base = Some((state, review));
+                }
+                // current stays None: next round optimizes from base.
+            } else {
+                current = Some(state);
+            }
+            continue;
+        }
+
+        // ---------------- Optimization branch ----------------
+        let Some((base_state, base_review)) = base.as_ref() else {
+            // No healthy kernel and nothing to repair: cannot proceed.
+            rounds.push(RoundRecord {
+                round,
+                branch: Branch::Converged,
+                compiled: false,
+                correct: false,
+                speedup: None,
+                version: version_counter,
+            });
+            break;
+        };
+
+        let hot_group = base_review.hot_group.min(base_state.sched.num_kernels() - 1);
+        let applicable: Vec<MethodId> = ALL_METHODS
+            .iter()
+            .copied()
+            .filter(|m| {
+                (notices_structure || *m != MethodId::SpecializeStructure)
+                    && transforms::applicable_at(*m, &task.graph, &base_state.sched, hot_group)
+                        .is_ok()
+            })
+            .collect();
+
+        let mut features = feature_extractor::extract(
+            &task.graph,
+            &base_state.sched,
+            hot_group,
+            &strategy.policy,
+            &mut round_rng,
+        );
+        if !notices_structure {
+            features.structured_operand = false;
+        }
+        let profile = base_review
+            .profile
+            .clone()
+            .expect("base kernel always has a profile");
+        let retrieval_result = strategy
+            .use_long_term
+            .then(|| retrieval::retrieve_for(task, &features, &profile));
+
+        let ctx = planner::PlanContext {
+            applicable: &applicable,
+            retrieval: retrieval_result.as_ref(),
+            opt_memory: strategy.use_short_term_opt.then_some(&opt_mem),
+            features: &features,
+            profile: &profile,
+            last_method,
+            rounds_done: round - 1,
+            insightful,
+        };
+        let Some(plan) = planner::plan(&strategy.selection, &ctx, &strategy.policy, &mut round_rng)
+        else {
+            rounds.push(RoundRecord {
+                round,
+                branch: Branch::Converged,
+                compiled: true,
+                correct: true,
+                speedup: base_review.speedup,
+                version: base_state.version,
+            });
+            // Deterministic selectors that found nothing will find nothing
+            // next round either; chance-based ones may (different draw).
+            if matches!(
+                strategy.selection,
+                crate::agents::policy::SelectionMode::DecisionPolicy
+                    | crate::agents::policy::SelectionMode::FixedOrdering(_)
+            ) {
+                break;
+            }
+            last_method = None;
+            continue;
+        };
+        last_method = Some(plan.method);
+
+        version_counter += 1;
+        let candidate = optimizer::execute(
+            task,
+            base_state,
+            &plan,
+            hot_group,
+            &strategy.policy,
+            version_counter,
+            &mut round_rng,
+        );
+        let review =
+            reviewer::review_with_eager(task, &candidate, &cfg.dev, cfg.tool, &mut round_rng, consts);
+        rounds.push(RoundRecord {
+            round,
+            branch: Branch::Optimize(plan.method),
+            compiled: review.compiles,
+            correct: review.correct,
+            speedup: review.speedup,
+            version: candidate.version,
+        });
+
+        if review.ok() {
+            let sp = review.speedup.unwrap();
+            latest_valid = Some((sp, candidate.sched.clone()));
+            if best.as_ref().map(|(b, _)| sp > *b).unwrap_or(true) {
+                best = Some((sp, candidate.sched.clone()));
+            }
+            if strategy.use_short_term_opt {
+                if opt_mem.record(plan.method, Some(sp), round, candidate.version) {
+                    promotions += 1;
+                    base = Some((candidate, review));
+                }
+            } else {
+                // Memory-less drift: always iterate on the latest kernel.
+                opt_mem.base_speedup = sp;
+                promotions += 1;
+                base = Some((candidate, review));
+            }
+        } else {
+            if strategy.use_short_term_opt {
+                opt_mem.record(plan.method, None, round, candidate.version);
+            }
+            pending_method = Some(plan.method);
+            current = Some(candidate);
+        }
+    }
+
+    let success = best.is_some();
+    // Deliverable kernel: best-version tracking requires the short-term
+    // memory's plan->result record; without it the final (latest) working
+    // kernel is what ships — possibly a late regression.
+    let delivered = if strategy.use_short_term_opt { best } else { latest_valid };
+    let (best_speedup, best_sched) = delivered
+        .map(|(s, sched)| (s, sched))
+        .unwrap_or_else(|| (0.0, Schedule::per_op_naive(&task.graph)));
+
+    TaskResult {
+        task_id: task.id.clone(),
+        level: task.level,
+        strategy: strategy.name,
+        success,
+        best_speedup,
+        seed_speedup,
+        rounds_used,
+        rounds,
+        promotions,
+        repair_attempts: repair_mem.total_attempts(),
+        longest_repair_chain: repair_mem.longest_chain(),
+        best_sched,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::bench_suite;
+
+    fn cfg() -> LoopConfig {
+        LoopConfig::default()
+    }
+
+    #[test]
+    fn kernelskill_succeeds_on_the_motivating_example() {
+        let tasks = bench_suite::level_suite(42, 2);
+        let task = tasks.iter().find(|t| t.id.contains("fused_epilogue")).unwrap();
+        let r = run_task(task, &baselines::kernelskill(), &cfg());
+        assert!(r.success);
+        // The Appendix-D instance is physics-capped (the 1024x8192x8192 GEMM
+        // dominates both eager and custom); what matters is the trajectory:
+        // a large climb from the ~0.06x naive seed, driven by GEMM work first.
+        assert!(
+            r.best_speedup > 0.6 && r.best_speedup > r.seed_speedup.unwrap_or(0.0) * 5.0,
+            "KernelSkill should climb far above the naive seed, got {} from {:?}",
+            r.best_speedup,
+            r.seed_speedup
+        );
+        // The first optimization round must target the GEMM (TileSmem), not
+        // fusion — the motivating example's point.
+        let first_opt = r
+            .rounds
+            .iter()
+            .find_map(|rec| match rec.branch {
+                Branch::Optimize(m) => Some(m),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(first_opt, MethodId::TileSmem);
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let tasks = bench_suite::level_suite(42, 1);
+        let a = run_task(&tasks[5], &baselines::kernelskill(), &cfg());
+        let b = run_task(&tasks[5], &baselines::kernelskill(), &cfg());
+        assert_eq!(a.best_speedup, b.best_speedup);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+    }
+
+    #[test]
+    fn different_run_seeds_differ() {
+        let tasks = bench_suite::level_suite(42, 2);
+        let mut c2 = cfg();
+        c2.run_seed = 99;
+        let a = run_task(&tasks[3], &baselines::kernelskill(), &cfg());
+        let b = run_task(&tasks[3], &baselines::kernelskill(), &c2);
+        // Trajectories diverge (round count or speedup).
+        assert!(a.best_speedup != b.best_speedup || a.rounds.len() != b.rounds.len());
+    }
+
+    #[test]
+    fn best_never_below_seed() {
+        let tasks = bench_suite::level_suite(42, 1);
+        for t in tasks.iter().take(20) {
+            let r = run_task(t, &baselines::kernelskill(), &cfg());
+            if let Some(seed) = r.seed_speedup {
+                assert!(r.best_speedup >= seed * 0.999, "{}", t.id);
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_respect_budget() {
+        let tasks = bench_suite::level_suite(42, 3);
+        for t in tasks.iter().take(6) {
+            let r = run_task(t, &baselines::stark(), &cfg());
+            assert!(r.rounds.len() <= 30);
+            let r2 = run_task(t, &baselines::kernelskill(), &cfg());
+            assert!(r2.rounds.len() <= 15);
+        }
+    }
+
+    #[test]
+    fn failure_reports_zero_speedup() {
+        // A hostile strategy: terrible coder, no repair memory, tiny budget.
+        let mut s = baselines::kevin();
+        s.rounds = 2;
+        s.policy.coding_skill = 0.0;
+        s.policy.repair_skill = 0.0;
+        let tasks = bench_suite::level_suite(42, 3);
+        let mut failures = 0;
+        for t in tasks.iter().take(15) {
+            let r = run_task(t, &s, &cfg());
+            if !r.success {
+                failures += 1;
+                assert_eq!(r.best_speedup, 0.0);
+            }
+        }
+        assert!(failures > 0, "expected some failures under a 2-round budget");
+    }
+}

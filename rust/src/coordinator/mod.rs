@@ -1,0 +1,8 @@
+//! Layer-3 coordinator: Algorithm 1's closed loop (`loop_runner`) and the
+//! parallel suite engine (`suite_runner`).
+
+pub mod loop_runner;
+pub mod suite_runner;
+
+pub use loop_runner::{run_task, Branch, LoopConfig, RoundRecord, TaskResult};
+pub use suite_runner::{run_matrix, run_suite, SuiteResult};

@@ -1,0 +1,84 @@
+//! Suite runner: fan (strategy x task x seed) over the thread pool and
+//! aggregate per-level statistics — the engine behind every table bench.
+
+use super::loop_runner::{run_task, LoopConfig, TaskResult};
+use crate::baselines::Strategy;
+use crate::bench_suite::Task;
+use crate::util::pool;
+
+/// All results of one strategy over a task set (possibly several seeds).
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    pub strategy: &'static str,
+    pub results: Vec<TaskResult>,
+}
+
+/// Run one strategy across `tasks` for each seed in `seeds`, in parallel.
+pub fn run_suite(
+    tasks: &[Task],
+    strategy: &Strategy,
+    cfg: &LoopConfig,
+    seeds: &[u64],
+    workers: usize,
+) -> SuiteResult {
+    // Work items: (task index, seed) — tasks is shared by reference.
+    let items: Vec<(usize, u64)> = (0..tasks.len())
+        .flat_map(|t| seeds.iter().map(move |s| (t, *s)))
+        .collect();
+    let results = pool::parallel_map(&items, workers, |&(ti, seed)| {
+        let mut c = cfg.clone();
+        c.run_seed = seed;
+        run_task(&tasks[ti], strategy, &c)
+    });
+    SuiteResult {
+        strategy: strategy.name,
+        results,
+    }
+}
+
+/// Run several strategies over the same tasks/seeds.
+pub fn run_matrix(
+    tasks: &[Task],
+    strategies: &[Strategy],
+    cfg: &LoopConfig,
+    seeds: &[u64],
+    workers: usize,
+) -> Vec<SuiteResult> {
+    strategies
+        .iter()
+        .map(|s| run_suite(tasks, s, cfg, seeds, workers))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::bench_suite;
+
+    #[test]
+    fn parallel_equals_serial() {
+        let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(8).collect();
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        let par = run_suite(&tasks, &strat, &cfg, &[0], 4);
+        let ser = run_suite(&tasks, &strat, &cfg, &[0], 1);
+        for (a, b) in par.results.iter().zip(&ser.results) {
+            assert_eq!(a.task_id, b.task_id);
+            assert_eq!(a.best_speedup, b.best_speedup, "{}", a.task_id);
+        }
+    }
+
+    #[test]
+    fn seeds_multiply_results() {
+        let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(4).collect();
+        let r = run_suite(
+            &tasks,
+            &baselines::kernelskill(),
+            &LoopConfig::default(),
+            &[0, 1, 2],
+            4,
+        );
+        assert_eq!(r.results.len(), 12);
+    }
+}

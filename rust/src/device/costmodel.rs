@@ -1,0 +1,464 @@
+//! Roofline-style analytical cost model: prices a (graph, schedule) pair on
+//! a [`DeviceSpec`].
+//!
+//! This is the Profiler's ground truth (the NCU/nsys substitute, DESIGN.md
+//! §Substitutions). It models exactly the effects the long-term memory's
+//! decision table reasons about: HBM traffic as a function of blocking/reuse,
+//! matrix-unit vs vector-unit throughput, occupancy, pipeline overlap,
+//! scratchpad bank conflicts, layout/vectorization bandwidth efficiency, and
+//! per-kernel launch overhead.
+
+use super::machine::DeviceSpec;
+use crate::kir::graph::KernelGraph;
+use crate::kir::op::OpKind;
+use crate::kir::schedule::{GroupSchedule, Layout, Precision, Schedule};
+
+/// What limits a group's runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Memory,
+    Compute,
+    Launch,
+    Balanced,
+}
+
+/// Cost breakdown for one fusion group (one launched kernel).
+#[derive(Debug, Clone)]
+pub struct GroupCost {
+    pub time_s: f64,
+    pub mem_time_s: f64,
+    pub compute_time_s: f64,
+    pub launch_s: f64,
+    /// HBM bytes moved (first-touch traffic).
+    pub traffic_bytes: f64,
+    /// Re-read bytes served from L2 (naive-GEMM re-streaming).
+    pub l2_traffic_bytes: f64,
+    pub flops: f64,
+    pub occupancy: f64,
+    pub bw_eff_frac: f64,
+    pub compute_eff_frac: f64,
+    pub uses_mxu: bool,
+    pub bound: Bound,
+    /// Scratch bytes resident per block.
+    pub scratch_bytes: u64,
+}
+
+/// Whole-task cost.
+#[derive(Debug, Clone)]
+pub struct TaskCost {
+    pub groups: Vec<GroupCost>,
+    pub total_s: f64,
+}
+
+impl TaskCost {
+    /// Index of the slowest group (the profiling hot spot).
+    pub fn hot_group(&self) -> usize {
+        self.groups
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.time_s.partial_cmp(&b.1.time_s).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    pub fn launch_fraction(&self) -> f64 {
+        if self.total_s == 0.0 {
+            return 0.0;
+        }
+        self.groups.iter().map(|g| g.launch_s).sum::<f64>() / self.total_s
+    }
+}
+
+fn layout_bw_mult(layout: Layout) -> f64 {
+    match layout {
+        Layout::Strided => 0.22,
+        Layout::Coalesced => 0.75,
+        Layout::Tiled => 0.95,
+    }
+}
+
+fn vector_bw_mult(width: u8) -> f64 {
+    match width {
+        0 | 1 => 0.65,
+        2 => 0.85,
+        _ => 1.0,
+    }
+}
+
+/// Effective HBM bandwidth fraction for a group.
+fn bw_eff(cfg: &GroupSchedule, has_unshuffled_reduction: bool) -> f64 {
+    // Staged coalesced loads stream whole tiles sequentially — nearly as
+    // good as an explicitly swizzled layout.
+    let layout = if cfg.staging && matches!(cfg.layout, Layout::Coalesced) {
+        0.9
+    } else {
+        layout_bw_mult(cfg.layout)
+    };
+    let mut f = layout * vector_bw_mult(cfg.vector_width);
+    if has_unshuffled_reduction {
+        // Tree reduction through scratch without lane shuffles / wide loads.
+        f *= 0.6;
+    }
+    f.min(1.0)
+}
+
+/// HBM + L2 traffic for one group. Returns (hbm_bytes, l2_bytes).
+fn group_traffic(graph: &KernelGraph, group: &[usize], cfg: &GroupSchedule) -> (f64, f64) {
+    let mut hbm = 0.0;
+    let mut l2 = 0.0;
+    for &oid in group {
+        let op = graph.op(oid);
+        if op.is_gemm_like() {
+            let b = op.dtype_bytes as f64;
+            let (m, n, k) = (op.m as f64, op.n as f64, op.k as f64);
+            let (tm, tn) = (cfg.tile_m.max(1) as f64, cfg.tile_n.max(1) as f64);
+            let a_bytes = m * k * b;
+            let w_bytes = k * n * b;
+            let out_bytes = m * n * b;
+            // Each operand is read once from HBM; re-reads (from poor
+            // blocking) are served by L2 when they fit, HBM otherwise —
+            // the l2 split is resolved by the caller against the device.
+            let a_rereads = (n / tn - 1.0).max(0.0);
+            let w_rereads = (m / tm - 1.0).max(0.0);
+            hbm += a_bytes + w_bytes + out_bytes;
+            l2 += a_bytes * a_rereads + w_bytes * w_rereads;
+            if cfg.split_k > 1 {
+                // Partials written + re-read for the combine pass.
+                hbm += 2.0 * out_bytes * (cfg.split_k as f64 - 1.0);
+            }
+        } else {
+            // Fused dataflow: in-group producers' outputs stay in registers/
+            // scratch; external inputs are read, external outputs written.
+            let in_group_inputs: f64 = op
+                .inputs
+                .iter()
+                .filter(|i| group.contains(i))
+                .map(|&i| graph.op(i).output_bytes())
+                .sum();
+            let external_read = (op.ideal_bytes() - op.output_bytes() - in_group_inputs).max(0.0);
+            hbm += external_read;
+            let consumed_in_group = graph
+                .consumers(oid)
+                .iter()
+                .all(|c| group.contains(c));
+            let has_consumers = !graph.consumers(oid).is_empty();
+            if !(has_consumers && consumed_in_group) {
+                hbm += op.output_bytes();
+            }
+        }
+    }
+    (hbm, l2)
+}
+
+/// Occupancy fraction: enough blocks to fill the device, and scratch not
+/// over-subscribed.
+fn occupancy(graph: &KernelGraph, group: &[usize], cfg: &GroupSchedule, dev: &DeviceSpec) -> f64 {
+    let big = group
+        .iter()
+        .map(|&o| graph.op(o))
+        .max_by(|a, b| a.flops().partial_cmp(&b.flops()).unwrap());
+    let Some(op) = big else { return 1.0 };
+    let blocks = ((op.m as f64 / cfg.tile_m.max(1) as f64).ceil()
+        * (op.n as f64 / cfg.tile_n.max(1) as f64).ceil()
+        * cfg.split_k as f64)
+        .max(1.0);
+    let mut occ = (blocks / dev.sm_count as f64).min(1.0);
+    let scratch = cfg.scratch_bytes(4);
+    if scratch > dev.scratch_bytes / 2 {
+        occ *= 0.85; // one block per SM: latency hiding suffers
+    }
+    // Thread-count mistuning: tiny blocks under-fill SMs.
+    if cfg.block_threads < 128 {
+        occ *= 0.9;
+    }
+    occ.max(0.02)
+}
+
+/// Compute-efficiency fraction on the selected math path.
+fn compute_eff(cfg: &GroupSchedule, occ: f64, is_gemm: bool) -> f64 {
+    let mut eff = 0.9 * occ;
+    if cfg.staging && !cfg.smem_padding {
+        eff *= 0.75; // bank conflicts on the staged operands
+    }
+    if cfg.unroll <= 1 {
+        // The matrix unit pipelines its own fragment loop; manual unrolling
+        // matters mainly on the vector path.
+        eff *= if is_gemm && cfg.mxu {
+            0.95
+        } else if is_gemm {
+            0.75
+        } else {
+            0.9
+        };
+    }
+    if is_gemm && cfg.mxu && (cfg.tile_m < 32 || cfg.tile_n < 32) {
+        eff *= 0.5; // MXU fragments under-filled
+    }
+    eff.clamp(0.01, 1.0)
+}
+
+/// Price one group.
+pub fn price_group(graph: &KernelGraph, group: &[usize], cfg: &GroupSchedule, dev: &DeviceSpec) -> GroupCost {
+    let flops: f64 = group.iter().map(|&o| graph.op(o).flops()).sum();
+    let is_gemm = group.iter().any(|&o| graph.op(o).is_gemm_like());
+    // Wide (lane-aligned) loads are what keep a reduction tree streaming;
+    // narrow loads serialize it regardless of unrolling.
+    let has_unshuffled_red = group.iter().any(|&o| {
+        matches!(graph.op(o).kind, OpKind::Reduction(_) | OpKind::Norm(_))
+    }) && cfg.vector_width < 4;
+
+    let (hbm_bytes, l2_bytes) = group_traffic(graph, group, cfg);
+    let bwf = bw_eff(cfg, has_unshuffled_red);
+    let bw = dev.hbm_bytes_per_s * bwf;
+
+    // Re-read traffic is served by L2 at ~3x HBM bandwidth when the per-pass
+    // panel working set (an A row-panel plus a B column-panel) fits, else it
+    // spills back to HBM rates.
+    let panel_bytes: f64 = group
+        .iter()
+        .map(|&o| graph.op(o))
+        .filter(|op| op.is_gemm_like())
+        .map(|op| ((cfg.tile_m * op.k + op.k * cfg.tile_n) * op.dtype_bytes) as f64)
+        .fold(0.0, f64::max);
+    let l2_bw = if panel_bytes <= dev.l2_bytes as f64 {
+        dev.hbm_bytes_per_s * 3.0 * bwf
+    } else {
+        bw
+    };
+    let mem_time = hbm_bytes / bw + l2_bytes / l2_bw;
+
+    let occ = occupancy(graph, group, cfg, dev);
+    let ceff = compute_eff(cfg, occ, is_gemm);
+    let use_mxu = is_gemm && cfg.mxu && !matches!(cfg.precision, Precision::F32);
+    let peak = if use_mxu { dev.mxu_flops } else { dev.fp32_flops };
+    // TF32 on the vector path still beats plain f32 slightly.
+    let peak = if !use_mxu && matches!(cfg.precision, Precision::Tf32) {
+        peak * 1.1
+    } else {
+        peak
+    };
+    let compute_time = flops / (peak * ceff);
+
+    // Overlap: double buffering hides the smaller phase under the bigger.
+    let overlap = if cfg.double_buffer { 0.9 } else { 0.35 };
+    let body = mem_time.max(compute_time) + (1.0 - overlap) * mem_time.min(compute_time);
+    let launch = dev.launch_overhead_s;
+    let time = body + launch;
+
+    let bound = if launch > body {
+        Bound::Launch
+    } else if mem_time > 1.5 * compute_time {
+        Bound::Memory
+    } else if compute_time > 1.5 * mem_time {
+        Bound::Compute
+    } else {
+        Bound::Balanced
+    };
+
+    GroupCost {
+        time_s: time,
+        mem_time_s: mem_time,
+        compute_time_s: compute_time,
+        launch_s: launch,
+        traffic_bytes: hbm_bytes,
+        l2_traffic_bytes: l2_bytes,
+        flops,
+        occupancy: occ,
+        bw_eff_frac: bwf,
+        compute_eff_frac: ceff,
+        uses_mxu: use_mxu,
+        bound,
+        scratch_bytes: cfg.scratch_bytes(4),
+    }
+}
+
+/// Price the whole schedule.
+pub fn price(graph: &KernelGraph, sched: &Schedule, dev: &DeviceSpec) -> TaskCost {
+    let groups: Vec<GroupCost> = sched
+        .groups
+        .iter()
+        .zip(&sched.cfg)
+        .map(|(g, c)| price_group(graph, g, c, dev))
+        .collect();
+    let total = groups.iter().map(|g| g.time_s).sum();
+    TaskCost {
+        groups,
+        total_s: total,
+    }
+}
+
+/// Roofline lower bound for the task: perfect fusion, peak matrix unit,
+/// full bandwidth, one launch. The headroom tiers are measured against this.
+pub fn roofline_s(graph: &KernelGraph, dev: &DeviceSpec) -> f64 {
+    let gemm_flops: f64 = graph
+        .ops
+        .iter()
+        .filter(|o| o.is_gemm_like())
+        .map(|o| o.flops())
+        .sum();
+    let other_flops = graph.total_flops() - gemm_flops;
+    let compute = gemm_flops / dev.mxu_flops + other_flops / dev.fp32_flops;
+    let mem = graph.fused_ideal_bytes() / dev.hbm_bytes_per_s;
+    compute.max(mem) + dev.launch_overhead_s
+}
+
+/// Legality-aware roofline: the best latency any *legal* schedule can reach.
+///
+/// Unlike [`roofline_s`], this respects the fusion rules the compiler
+/// enforces: GEMM-shaped ops are fusion barriers (a producer cannot be
+/// inlined into a GEMM's prologue, and two GEMMs never share a kernel), so
+/// every intermediate crossing into a GEMM costs an HBM round-trip, and each
+/// GEMM costs its own launch. This is the custom-kernel floor for deep L3
+/// graphs.
+pub fn legal_roofline_s(graph: &KernelGraph, dev: &DeviceSpec) -> f64 {
+    let gemm_flops: f64 = graph
+        .ops
+        .iter()
+        .filter(|o| o.is_gemm_like())
+        .map(|o| o.flops())
+        .sum();
+    let other_flops = graph.total_flops() - gemm_flops;
+    let compute = gemm_flops / dev.mxu_flops + other_flops / dev.fp32_flops;
+
+    let mut mem_bytes = graph.fused_ideal_bytes();
+    for op in &graph.ops {
+        if op.is_gemm_like() {
+            // Every in-graph producer feeding this GEMM is written + read.
+            for &inp in &op.inputs {
+                mem_bytes += 2.0 * graph.op(inp).output_bytes();
+            }
+        }
+    }
+    let mem = mem_bytes / dev.hbm_bytes_per_s;
+
+    let n_gemms = graph.ops.iter().filter(|o| o.is_gemm_like()).count();
+    let launches = n_gemms.max(1) as f64;
+    compute.max(mem) + launches * dev.launch_overhead_s
+}
+
+/// Estimated VMEM footprint + matrix-unit utilization for a schedule on the
+/// TPU preset — the §Perf L1 report (interpret=True gives no real timings).
+pub fn tpu_perf_estimate(graph: &KernelGraph, sched: &Schedule) -> (u64, f64) {
+    let dev = DeviceSpec::tpu_like();
+    let cost = price(graph, sched, &dev);
+    let footprint = cost.groups.iter().map(|g| g.scratch_bytes).max().unwrap_or(0);
+    let gemm_flops: f64 = graph
+        .ops
+        .iter()
+        .filter(|o| o.is_gemm_like())
+        .map(|o| o.flops())
+        .sum();
+    let mxu_util = if gemm_flops > 0.0 && cost.total_s > 0.0 {
+        (gemm_flops / cost.total_s) / dev.mxu_flops
+    } else {
+        0.0
+    };
+    (footprint, mxu_util)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::op::EwKind;
+    use crate::kir::transforms::{self, MethodId};
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::a100_like()
+    }
+
+    fn gemm_task() -> KernelGraph {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 1024, 1024, 1024, vec![]);
+        g
+    }
+
+    #[test]
+    fn naive_gemm_is_memory_bound_and_slow() {
+        let g = gemm_task();
+        let s = Schedule::per_op_naive(&g);
+        let c = price(&g, &s, &dev());
+        assert_eq!(c.groups[0].bound, Bound::Memory);
+        assert!(c.groups[0].l2_traffic_bytes > c.groups[0].traffic_bytes);
+    }
+
+    #[test]
+    fn tiling_then_mxu_approaches_roofline() {
+        let g = gemm_task();
+        let mut s = Schedule::per_op_naive(&g);
+        let naive = price(&g, &s, &dev()).total_s;
+        transforms::apply(MethodId::TileSmem, &g, &mut s);
+        let tiled = price(&g, &s, &dev()).total_s;
+        transforms::apply(MethodId::UseTensorCore, &g, &mut s);
+        transforms::apply(MethodId::VectorizeLoads, &g, &mut s);
+        transforms::apply(MethodId::DoubleBuffer, &g, &mut s);
+        transforms::apply(MethodId::PadScratch, &g, &mut s);
+        transforms::apply(MethodId::UnrollInner, &g, &mut s);
+        let opt = price(&g, &s, &dev()).total_s;
+        assert!(tiled < naive * 0.5, "tiling should be >2x: {naive} -> {tiled}");
+        assert!(
+            opt < tiled * 0.2,
+            "mxu path should be >5x more: {tiled} -> {opt}"
+        );
+        assert!(
+            opt < naive * 0.05,
+            "naive -> fully optimized should exceed 20x (paper's 0.032x example): {naive} -> {opt}"
+        );
+        let rl = roofline_s(&g, &dev());
+        assert!(
+            opt < rl * 6.0,
+            "optimized within 6x of roofline: {opt} vs {rl}"
+        );
+        assert!(opt > rl * 0.99, "cannot beat roofline");
+    }
+
+    #[test]
+    fn fusion_cuts_traffic_and_launches() {
+        let mut g = KernelGraph::new();
+        let a = g.push(OpKind::Elementwise(EwKind::Add), 2048, 2048, 1, vec![]);
+        let b = g.push(OpKind::Elementwise(EwKind::Relu), 2048, 2048, 1, vec![a]);
+        let _ = g.push(OpKind::Elementwise(EwKind::Scale), 2048, 2048, 1, vec![b]);
+        let unfused = Schedule::per_op_naive(&g);
+        let mut fused = unfused.clone();
+        fused.merge_groups(0, 1);
+        fused.merge_groups(0, 1);
+        let cu = price(&g, &unfused, &dev());
+        let cf = price(&g, &fused, &dev());
+        let tu: f64 = cu.groups.iter().map(|x| x.traffic_bytes).sum();
+        let tf: f64 = cf.groups.iter().map(|x| x.traffic_bytes).sum();
+        assert!(tf < tu * 0.6, "fusion removes intermediate traffic");
+        assert!(cf.total_s < cu.total_s);
+    }
+
+    #[test]
+    fn tiny_ops_are_launch_bound() {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::Elementwise(EwKind::Relu), 32, 32, 1, vec![]);
+        let s = Schedule::per_op_naive(&g);
+        let c = price(&g, &s, &dev());
+        assert_eq!(c.groups[0].bound, Bound::Launch);
+        assert!(c.launch_fraction() > 0.5);
+    }
+
+    #[test]
+    fn roofline_is_a_lower_bound_across_methods() {
+        let g = gemm_task();
+        let rl = roofline_s(&g, &dev());
+        let mut s = Schedule::per_op_naive(&g);
+        for m in crate::kir::transforms::ALL_METHODS {
+            if transforms::applicable(m, &g, &s).is_ok() {
+                transforms::apply(m, &g, &mut s);
+                assert!(price(&g, &s, &dev()).total_s >= rl * 0.999);
+            }
+        }
+    }
+
+    #[test]
+    fn tpu_estimate_reports_footprint() {
+        let g = gemm_task();
+        let mut s = Schedule::per_op_naive(&g);
+        transforms::apply(MethodId::TileSmem, &g, &mut s);
+        let (fp, util) = tpu_perf_estimate(&g, &s);
+        assert!(fp > 0);
+        assert!((0.0..=1.0).contains(&util));
+    }
+}

@@ -1,0 +1,232 @@
+//! Fault model: the LLM-surrogate's buggy edits.
+//!
+//! When the Optimizer/Repairer executes a plan, the edit may introduce a
+//! fault (the paper's compilation failures and correctness violations that
+//! drive the repair branch of Algorithm 1). Every fault carries a *signature*
+//! (what the Compiler/Verifier reports) and a hidden `true_fix` among
+//! `n_candidate_fixes` plausible repairs — diagnosis is the search for that
+//! fix. A Diagnoser **with** short-term repair memory enumerates untried
+//! candidates (expected ~F/2 rounds); one **without** samples with
+//! replacement and can cycle through known-failing edits — exactly the
+//! oscillation failure mode of §4.1.5.
+
+use crate::kir::transforms::{Complexity, MethodId};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Kernel does not build: bad syntax / template instantiation.
+    CompileSyntax,
+    /// Kernel does not build: resource over-subscription from the edit.
+    CompileResource,
+    /// Builds, runs, wrong numbers (indexing / reduction order bug).
+    WrongNumerics,
+    /// Builds, runs, NaN/Inf (overflow in a downcast or missing guard).
+    Nan,
+    /// Builds, intermittently wrong (missing sync after staging edit).
+    Race,
+}
+
+impl FaultKind {
+    /// Compile-stage faults are reported by the Compiler; the rest by the
+    /// Verifier.
+    pub fn is_compile(&self) -> bool {
+        matches!(self, FaultKind::CompileSyntax | FaultKind::CompileResource)
+    }
+
+    pub fn signature(&self, method: MethodId) -> String {
+        let what = match self {
+            FaultKind::CompileSyntax => "error: expected ';' in kernel body",
+            FaultKind::CompileResource => "ptxas error: too much shared data",
+            FaultKind::WrongNumerics => "verification failed: max abs err 3.2e+01",
+            FaultKind::Nan => "verification failed: output contains NaN",
+            FaultKind::Race => "verification failed intermittently (run-to-run variance)",
+        };
+        format!("{what} [after {}]", method.name())
+    }
+}
+
+/// One injected defect attached to a kernel version.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub injected_by: MethodId,
+    pub signature: String,
+    /// Index of the correct fix among the candidate set (hidden from agents).
+    pub true_fix: u8,
+    /// Number of plausible candidate fixes the Diagnoser can see.
+    pub n_candidate_fixes: u8,
+    /// Translation-stage defect in unfamiliar generated code: diagnosis is
+    /// materially harder and botched fixes regress more.
+    pub hard: bool,
+}
+
+/// Base bug probability per edit-complexity class. These rates are the main
+/// lever that reproduces the paper's repair statistics (w/o short-term
+/// memory: 96/98/94% success within 15 rounds — Table 2).
+pub fn base_bug_rate(c: Complexity) -> f64 {
+    match c {
+        Complexity::Low => 0.05,
+        Complexity::Medium => 0.13,
+        Complexity::High => 0.24,
+    }
+}
+
+/// Sample whether applying `method` introduces a fault.
+///
+/// `skill` in [0, 1] is the surrogate's coding reliability (1.0 = never
+/// bugs); `graph_scale` grows bug risk on large L3 graphs (more code
+/// touched per edit).
+pub fn sample_fault(
+    rng: &mut Rng,
+    method: MethodId,
+    skill: f64,
+    graph_scale: f64,
+) -> Option<Fault> {
+    let p = (base_bug_rate(method.complexity()) * (1.5 - skill) * graph_scale).clamp(0.0, 0.95);
+    if !rng.chance(p) {
+        return None;
+    }
+    let kind = *rng.choose_weighted(
+        &[
+            FaultKind::CompileSyntax,
+            FaultKind::CompileResource,
+            FaultKind::WrongNumerics,
+            FaultKind::Nan,
+            FaultKind::Race,
+        ],
+        &[0.30, 0.12, 0.38, 0.12, 0.08],
+    );
+    let n_candidate_fixes = rng.range(3, 8) as u8;
+    let true_fix = rng.range(0, n_candidate_fixes as u64) as u8;
+    Some(Fault {
+        kind,
+        injected_by: method,
+        signature: kind.signature(method),
+        true_fix,
+        n_candidate_fixes,
+        hard: false,
+    })
+}
+
+/// Outcome of applying candidate fix `fix_idx` to `fault`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RepairOutcome {
+    /// Correct fix: the fault is cleared.
+    Fixed,
+    /// Wrong fix: fault persists.
+    StillBroken,
+    /// Wrong fix that also broke something else (regression — the cyclic
+    /// repair fuel).
+    Regressed(Fault),
+}
+
+/// Apply a candidate fix. `repair_skill` shrinks the regression rate.
+pub fn attempt_fix(rng: &mut Rng, fault: &Fault, fix_idx: u8, repair_skill: f64) -> RepairOutcome {
+    if fix_idx == fault.true_fix {
+        return RepairOutcome::Fixed;
+    }
+    let hard_scale = if fault.hard { 1.4 } else { 1.0 };
+    let p_regress = (0.45 * hard_scale * (1.3 - repair_skill)).clamp(0.02, 0.8);
+    if rng.chance(p_regress) {
+        // The botched fix introduces a sibling fault of a (possibly) new kind.
+        let kind = *rng.choose(&[FaultKind::CompileSyntax, FaultKind::WrongNumerics]);
+        let n = rng.range(2, 5) as u8;
+        RepairOutcome::Regressed(Fault {
+            kind,
+            injected_by: fault.injected_by,
+            signature: kind.signature(fault.injected_by),
+            true_fix: rng.range(0, n as u64) as u8,
+            n_candidate_fixes: n,
+            hard: fault.hard,
+        })
+    } else {
+        RepairOutcome::StillBroken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn high_complexity_bugs_more() {
+        assert!(base_bug_rate(Complexity::High) > base_bug_rate(Complexity::Low));
+    }
+
+    #[test]
+    fn skill_reduces_fault_rate() {
+        let trials = 20_000;
+        let count = |skill: f64| {
+            let mut rng = Rng::new(7);
+            (0..trials)
+                .filter(|_| sample_fault(&mut rng, MethodId::TileSmem, skill, 1.0).is_some())
+                .count()
+        };
+        let sloppy = count(0.3);
+        let sharp = count(1.0);
+        assert!(sharp < sloppy / 2, "sharp={sharp} sloppy={sloppy}");
+    }
+
+    #[test]
+    fn true_fix_always_fixes() {
+        let mut rng = Rng::new(1);
+        let fault = loop {
+            if let Some(f) = sample_fault(&mut rng, MethodId::TileSmem, 0.1, 2.0) {
+                break f;
+            }
+        };
+        assert_eq!(
+            attempt_fix(&mut rng, &fault, fault.true_fix, 0.5),
+            RepairOutcome::Fixed
+        );
+    }
+
+    #[test]
+    fn wrong_fix_never_silently_fixes() {
+        let mut rng = Rng::new(2);
+        let fault = Fault {
+            kind: FaultKind::WrongNumerics,
+            injected_by: MethodId::SplitK,
+            signature: "sig".into(),
+            true_fix: 0,
+            n_candidate_fixes: 4,
+            hard: false,
+        };
+        for _ in 0..200 {
+            match attempt_fix(&mut rng, &fault, 2, 0.8) {
+                RepairOutcome::Fixed => panic!("wrong fix fixed the fault"),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn enumerating_candidates_terminates() {
+        // With memory (try each candidate once) the fault is always cleared
+        // within n_candidate_fixes attempts.
+        let mut rng = Rng::new(3);
+        for seed in 0..50 {
+            let mut r = Rng::new(seed);
+            let fault = loop {
+                if let Some(f) = sample_fault(&mut r, MethodId::FuseEpilogueReduction, 0.0, 2.0) {
+                    break f;
+                }
+            };
+            let mut fixed = false;
+            for fix in 0..fault.n_candidate_fixes {
+                if matches!(attempt_fix(&mut rng, &fault, fix, 1.0), RepairOutcome::Fixed) {
+                    fixed = true;
+                    break;
+                }
+            }
+            assert!(fixed);
+        }
+    }
+
+    #[test]
+    fn signatures_name_the_method() {
+        let sig = FaultKind::Nan.signature(MethodId::PrecisionDowncast);
+        assert!(sig.contains("precision_downcast"));
+    }
+}

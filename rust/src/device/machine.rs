@@ -1,0 +1,92 @@
+//! Device specifications for the analytical performance model.
+//!
+//! Two presets: an A100-like card (the paper's testbed) and a TPU-like core
+//! (the hardware-adaptation target). Only *ratios* matter downstream — the
+//! decision workflow normalizes everything to pct-of-peak, and reproduction
+//! targets the tables' shape, not absolute microseconds.
+
+/// Hardware model parameters. Units: bytes, FLOP/s, seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Sustainable HBM bandwidth (bytes/s).
+    pub hbm_bytes_per_s: f64,
+    /// Peak FP32 vector throughput (FLOP/s).
+    pub fp32_flops: f64,
+    /// Peak matrix-unit throughput — tensor core TF32/BF16 or MXU (FLOP/s).
+    pub mxu_flops: f64,
+    /// Scratchpad budget per block: CUDA smem/SM or a VMEM slice (bytes).
+    pub scratch_bytes: u64,
+    /// Number of SMs / cores the grid must fill for full throughput.
+    pub sm_count: u32,
+    /// Fixed cost per kernel launch (seconds) — dominates L3 graphs.
+    pub launch_overhead_s: f64,
+    /// Upper bound on threads per block.
+    pub max_block_threads: u32,
+    /// L2 / CMEM capacity (bytes); caps the naive-GEMM re-read penalty.
+    pub l2_bytes: u64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA A100-80GB-like numbers (the paper's testbed).
+    pub fn a100_like() -> DeviceSpec {
+        DeviceSpec {
+            name: "a100-like",
+            hbm_bytes_per_s: 1.555e12,
+            fp32_flops: 19.5e12,
+            mxu_flops: 156.0e12, // TF32 tensor core
+            scratch_bytes: 160 * 1024,
+            sm_count: 108,
+            launch_overhead_s: 4.0e-6,
+            max_block_threads: 1024,
+            l2_bytes: 40 * 1024 * 1024,
+        }
+    }
+
+    /// TPU-v4-like core (DESIGN.md §Hardware-Adaptation): bigger scratchpad
+    /// (VMEM), stronger matrix unit, fewer-but-fatter cores.
+    pub fn tpu_like() -> DeviceSpec {
+        DeviceSpec {
+            name: "tpu-like",
+            hbm_bytes_per_s: 1.2e12,
+            fp32_flops: 17.0e12,
+            mxu_flops: 275.0e12, // BF16 MXU
+            scratch_bytes: 16 * 1024 * 1024,
+            sm_count: 2, // tensor cores per chip; grid must only fill these
+            launch_overhead_s: 1.5e-6,
+            max_block_threads: 1024,
+            l2_bytes: 128 * 1024 * 1024,
+        }
+    }
+
+    /// Machine balance point (FLOP/byte) above which a kernel is
+    /// compute-bound on the vector path.
+    pub fn ridge_fp32(&self) -> f64 {
+        self.fp32_flops / self.hbm_bytes_per_s
+    }
+
+    /// Balance point for the matrix-unit path.
+    pub fn ridge_mxu(&self) -> f64 {
+        self.mxu_flops / self.hbm_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_sane() {
+        for dev in [DeviceSpec::a100_like(), DeviceSpec::tpu_like()] {
+            assert!(dev.hbm_bytes_per_s > 1e11);
+            assert!(dev.mxu_flops > dev.fp32_flops);
+            assert!(dev.ridge_mxu() > dev.ridge_fp32());
+            assert!(dev.launch_overhead_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn tpu_has_bigger_scratch() {
+        assert!(DeviceSpec::tpu_like().scratch_bytes > DeviceSpec::a100_like().scratch_bytes);
+    }
+}

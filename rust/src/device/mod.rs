@@ -1,0 +1,11 @@
+//! Device substrate: the A100/NCU substitution (DESIGN.md §Substitutions).
+//!
+//! * `machine`   — hardware presets (A100-like, TPU-like)
+//! * `costmodel` — roofline pricing of (graph, schedule) pairs
+//! * `metrics`   — raw NCU/NSYS-flavored signal synthesis
+//! * `faults`    — the LLM-surrogate's buggy-edit model
+
+pub mod costmodel;
+pub mod faults;
+pub mod machine;
+pub mod metrics;

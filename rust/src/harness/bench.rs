@@ -1,0 +1,111 @@
+//! Micro-benchmark harness (criterion is unavailable offline): timed runs
+//! with warmup, iteration control, and mean/median/p95 reporting. Used by
+//! `rust/benches/*` (harness = false) and the §Perf pass.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters  mean {:>12}  median {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            human(self.mean_s),
+            human(self.median_s),
+            human(self.p95_s),
+            human(self.min_s),
+        )
+    }
+}
+
+fn human(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&times),
+        median_s: stats::median(&times),
+        p95_s: stats::percentile(&times, 95.0),
+        min_s: times.iter().copied().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Time a whole-run closure once (for end-to-end experiment benches where
+/// a single run is already minutes of work).
+pub fn time_once<F: FnOnce() -> T, T>(name: &str, f: F) -> (T, BenchResult) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    (
+        out,
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: dt,
+            median_s: dt,
+            p95_s: dt,
+            min_s: dt,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 10, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.median_s <= r.p95_s + 1e-12);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human(2.0).ends_with(" s"));
+        assert!(human(2e-3).ends_with(" ms"));
+        assert!(human(2e-6).ends_with(" us"));
+        assert!(human(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,63 @@
+//! Cost-model calibration against real PJRT executions of the artifact
+//! variants: the analytical device model must *order* schedule variants the
+//! same way real numerics plumbing measures them on the schedule-structure
+//! axis it models (fused < unfused in traffic; more launches = more cost).
+//!
+//! Absolute CPU milliseconds are NOT a GPU proxy (interpret-lowered HLO on
+//! a CPU backend); what we check is internal consistency of the bridge and
+//! record real latencies for EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use crate::runtime::{Registry, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct CalibrationRow {
+    pub task: String,
+    pub variant: String,
+    pub real_latency_s: f64,
+    pub max_abs_err: f64,
+}
+
+/// Measure every artifact variant: numeric error vs ref + real latency.
+pub fn calibrate(seed: u64) -> Result<Vec<CalibrationRow>> {
+    let reg = Registry::load("artifacts")?;
+    let mut rt = Runtime::new("artifacts")?;
+    let mut rows = Vec::new();
+    let tasks: Vec<String> = reg.tasks.keys().cloned().collect();
+    for task in tasks {
+        let variants: Vec<String> = reg.task(&task)?.variants.keys().cloned().collect();
+        for variant in variants {
+            let report = crate::runtime::verify_variant(
+                &mut rt, &reg, &task, &variant, seed, 1e-3, true,
+            )?;
+            rows.push(CalibrationRow {
+                task: task.clone(),
+                variant: variant.clone(),
+                real_latency_s: report.latency_s.unwrap_or(0.0),
+                max_abs_err: report.max_abs_err,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn render(rows: &[CalibrationRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<20} {:<14} {:>14} {:>12}\n",
+        "task", "variant", "latency", "max_abs_err"
+    ));
+    s.push_str(&"-".repeat(64));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:<20} {:<14} {:>11.3} ms {:>12.2e}\n",
+            r.task,
+            r.variant,
+            r.real_latency_s * 1e3,
+            r.max_abs_err
+        ));
+    }
+    s
+}

@@ -1,0 +1,162 @@
+//! Experiment drivers: one function per paper table/figure (DESIGN.md's
+//! experiment index E1-E5). Each returns the rendered table plus raw rows
+//! so benches and the CLI can share the implementation.
+
+use super::metrics::{by_level, cell};
+use super::tables::{self, Row};
+use crate::baselines::{self, Strategy};
+use crate::bench_suite;
+use crate::coordinator::{self, Branch, LoopConfig};
+use crate::util::pool;
+
+/// Shared experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// Suite-generation seed (task population).
+    pub suite_seed: u64,
+    /// Run seeds (repetitions averaged together).
+    pub run_seeds: Vec<u64>,
+    pub workers: usize,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            suite_seed: 42,
+            run_seeds: vec![0],
+            workers: pool::default_workers(),
+        }
+    }
+}
+
+/// Run one roster over the full suite, producing per-level rows.
+pub fn run_roster(roster: &[Strategy], cfg: &ExpConfig) -> Vec<Row> {
+    let tasks = bench_suite::full_suite(cfg.suite_seed);
+    let loop_cfg = LoopConfig::default();
+    roster
+        .iter()
+        .map(|strategy| {
+            let suite = coordinator::run_suite(
+                &tasks,
+                strategy,
+                &loop_cfg,
+                &cfg.run_seeds,
+                cfg.workers,
+            );
+            let split = by_level(&suite.results);
+            Row {
+                method: strategy.name.to_string(),
+                cells: [
+                    cell(&split[0], strategy.rounds),
+                    cell(&split[1], strategy.rounds),
+                    cell(&split[2], strategy.rounds),
+                ],
+            }
+        })
+        .collect()
+}
+
+/// E1 — Table 1: Success + Speedup, 7 methods x 3 levels.
+pub fn table1(cfg: &ExpConfig) -> (String, Vec<Row>) {
+    let rows = run_roster(&baselines::table1_roster(), cfg);
+    (tables::table1(&rows), rows)
+}
+
+/// E2 — Table 2: memory ablations with Fast1.
+pub fn table2(cfg: &ExpConfig) -> (String, Vec<Row>) {
+    let rows = run_roster(&baselines::table2_roster(), cfg);
+    (tables::table2(&rows), rows)
+}
+
+/// E3 — Table 3: Fast1 for the Table-1 roster (same runs, different view).
+pub fn table3(cfg: &ExpConfig) -> (String, Vec<Row>) {
+    let rows = run_roster(&baselines::table1_roster(), cfg);
+    (tables::table3(&rows), rows)
+}
+
+/// §5.4 — per-round refinement efficiency (KernelSkill vs STARK).
+pub fn per_round_efficiency(cfg: &ExpConfig) -> (String, Vec<Row>) {
+    let rows = run_roster(&[baselines::stark(), baselines::kernelskill()], cfg);
+    (tables::per_round(&rows), rows)
+}
+
+/// E4 — Figures 2-3: trajectory traces on a representative task, rendering
+/// the repair chain and the optimization rounds with base promotions.
+pub fn trajectory_figures(cfg: &ExpConfig) -> String {
+    let tasks = bench_suite::level_suite(cfg.suite_seed, 2);
+    let task = tasks
+        .iter()
+        .find(|t| t.id.contains("fused_epilogue"))
+        .expect("appendix-D task present");
+    let mut out = String::new();
+    let loop_cfg = LoopConfig::default();
+    let r = coordinator::run_task(task, &baselines::kernelskill(), &loop_cfg);
+    out.push_str(&format!(
+        "Task {} — KernelSkill trajectory (seed {:.3?}x -> best {:.3}x, {} promotions, {} repair attempts, longest chain {})\n",
+        task.id, r.seed_speedup, r.best_speedup, r.promotions, r.repair_attempts, r.longest_repair_chain
+    ));
+    for rec in &r.rounds {
+        let what = match &rec.branch {
+            Branch::Optimize(m) => format!("optimize[{}]", m.name()),
+            Branch::Repair(fix) => format!("repair[fix {fix}]"),
+            Branch::Revert => "revert".to_string(),
+            Branch::Converged => "converged".to_string(),
+        };
+        out.push_str(&format!(
+            "  round {:>2}: {:<28} compiled={} correct={} speedup={}\n",
+            rec.round,
+            what,
+            rec.compiled,
+            rec.correct,
+            rec.speedup
+                .map(|s| format!("{s:.3}x"))
+                .unwrap_or_else(|| "-".into()),
+        ));
+    }
+    // Aggregate chain statistics across a level (the Figure-2 claim:
+    // short-term memory bounds repair chains).
+    let l3 = bench_suite::level_suite(cfg.suite_seed, 3);
+    for strategy in [baselines::kernelskill(), baselines::wo_short_term()] {
+        let suite = coordinator::run_suite(&l3, &strategy, &loop_cfg, &cfg.run_seeds, cfg.workers);
+        let chains: Vec<f64> = suite
+            .results
+            .iter()
+            .map(|r| r.longest_repair_chain as f64)
+            .collect();
+        let repairs: Vec<f64> = suite
+            .results
+            .iter()
+            .map(|r| r.repair_attempts as f64)
+            .collect();
+        out.push_str(&format!(
+            "{:<24}: mean repair attempts {:.2}, mean longest chain {:.2}, max chain {:.0} (L3)\n",
+            strategy.name,
+            crate::util::stats::mean(&repairs),
+            crate::util::stats::mean(&chains),
+            chains.iter().fold(0.0f64, |a, &b| a.max(b)),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            suite_seed: 42,
+            run_seeds: vec![0],
+            workers: 4,
+        }
+    }
+
+    #[test]
+    fn trajectory_renders() {
+        // Uses only one task + L3 chains; moderately fast.
+        let out = trajectory_figures(&tiny_cfg());
+        assert!(out.contains("KernelSkill trajectory"));
+        assert!(out.contains("round"));
+        assert!(out.contains("mean repair attempts"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Evaluation metrics (§5.1): Success, Speedup (vs Torch Eager), Fast_p.
+
+use crate::coordinator::TaskResult;
+
+/// Aggregate statistics for one (strategy, level) cell.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    pub n: usize,
+    pub success: f64,
+    /// Mean speedup; failed tasks contribute 0 (how Kevin's 0.32x L3
+    /// average coexists with 46% success in Table 1).
+    pub speedup: f64,
+    /// fast_1: fraction at least as fast as Torch Eager.
+    pub fast1: f64,
+    pub mean_rounds: f64,
+    /// Mean speedup divided by the refinement budget (§5.4's per-round
+    /// efficiency comparison).
+    pub speedup_per_round: f64,
+}
+
+/// Compute a cell from task results (already filtered to one level).
+pub fn cell(results: &[&TaskResult], budget_rounds: u32) -> Cell {
+    let n = results.len();
+    if n == 0 {
+        return Cell::default();
+    }
+    let succ = results.iter().filter(|r| r.success).count() as f64 / n as f64;
+    let speedup = results.iter().map(|r| r.best_speedup).sum::<f64>() / n as f64;
+    let fast1 = results.iter().filter(|r| r.best_speedup >= 1.0).count() as f64 / n as f64;
+    let mean_rounds = results.iter().map(|r| r.rounds_used as f64).sum::<f64>() / n as f64;
+    Cell {
+        n,
+        success: succ,
+        speedup,
+        fast1,
+        mean_rounds,
+        speedup_per_round: speedup / budget_rounds.max(1) as f64,
+    }
+}
+
+/// fast_p for an arbitrary threshold (KernelBench's general metric).
+pub fn fast_p(results: &[&TaskResult], p: f64) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().filter(|r| r.best_speedup >= p).count() as f64 / results.len() as f64
+}
+
+/// Split suite results by level.
+pub fn by_level(results: &[TaskResult]) -> [Vec<&TaskResult>; 3] {
+    let mut out: [Vec<&TaskResult>; 3] = [vec![], vec![], vec![]];
+    for r in results {
+        let idx = (r.level as usize).saturating_sub(1).min(2);
+        out[idx].push(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::KernelGraph;
+    use crate::kir::schedule::Schedule;
+
+    fn result(level: u8, success: bool, speedup: f64) -> TaskResult {
+        let mut g = KernelGraph::new();
+        g.push(crate::kir::op::OpKind::MatMul, 8, 8, 8, vec![]);
+        TaskResult {
+            task_id: "t".into(),
+            level,
+            strategy: "x",
+            success,
+            best_speedup: speedup,
+            seed_speedup: None,
+            rounds_used: 10,
+            rounds: vec![],
+            promotions: 0,
+            repair_attempts: 0,
+            longest_repair_chain: 0,
+            best_sched: Schedule::per_op_naive(&g),
+        }
+    }
+
+    #[test]
+    fn cell_counts_failures_as_zero() {
+        let rs = vec![result(1, true, 2.0), result(1, false, 0.0)];
+        let refs: Vec<&TaskResult> = rs.iter().collect();
+        let c = cell(&refs, 15);
+        assert_eq!(c.success, 0.5);
+        assert_eq!(c.speedup, 1.0);
+        assert_eq!(c.fast1, 0.5);
+        assert!((c.speedup_per_round - 1.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fast_p_thresholds() {
+        let rs = vec![result(1, true, 0.5), result(1, true, 1.5), result(1, true, 3.0)];
+        let refs: Vec<&TaskResult> = rs.iter().collect();
+        assert!((fast_p(&refs, 1.0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((fast_p(&refs, 2.0) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn by_level_partitions() {
+        let rs = vec![result(1, true, 1.0), result(2, true, 1.0), result(3, true, 1.0), result(2, true, 1.0)];
+        let split = by_level(&rs);
+        assert_eq!(split[0].len(), 1);
+        assert_eq!(split[1].len(), 2);
+        assert_eq!(split[2].len(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment harness: metrics, table rendering, per-table drivers, the
+//! micro-bench harness, and cost-model calibration against real PJRT runs.
+
+pub mod bench;
+pub mod calibrate;
+pub mod experiments;
+pub mod metrics;
+pub mod tables;

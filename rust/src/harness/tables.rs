@@ -1,0 +1,137 @@
+//! ASCII table printers matching the paper's Tables 1-3 row format.
+
+use super::metrics::Cell;
+
+/// One table row: method name + 3 level cells.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: String,
+    pub cells: [Cell; 3],
+}
+
+/// Render Table 1 (Success + Speedup).
+pub fn table1(rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<24} | {:^17} | {:^17} | {:^17}\n",
+        "Method", "Level 1", "Level 2", "Level 3"
+    ));
+    s.push_str(&format!(
+        "{:<24} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8}\n",
+        "", "Success", "Speedup", "Success", "Speedup", "Success", "Speedup"
+    ));
+    s.push_str(&"-".repeat(84));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:<24} | {:>8.2} {:>8.2} | {:>8.2} {:>8.2} | {:>8.2} {:>8.2}\n",
+            r.method,
+            r.cells[0].success,
+            r.cells[0].speedup,
+            r.cells[1].success,
+            r.cells[1].speedup,
+            r.cells[2].success,
+            r.cells[2].speedup,
+        ));
+    }
+    s
+}
+
+/// Render Table 2 (ablation: Success / Fast1 / Speedup per level).
+pub fn table2(rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<24} | {:^26} | {:^26} | {:^26}\n",
+        "Method", "Level 1", "Level 2", "Level 3"
+    ));
+    s.push_str(&format!(
+        "{:<24} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}\n",
+        "", "Success", "Fast1", "Speedup", "Success", "Fast1", "Speedup", "Success", "Fast1", "Speedup"
+    ));
+    s.push_str(&"-".repeat(112));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:<24} | {:>8.2} {:>8.2} {:>8.2} | {:>8.2} {:>8.2} {:>8.2} | {:>8.2} {:>8.2} {:>8.2}\n",
+            r.method,
+            r.cells[0].success,
+            r.cells[0].fast1,
+            r.cells[0].speedup,
+            r.cells[1].success,
+            r.cells[1].fast1,
+            r.cells[1].speedup,
+            r.cells[2].success,
+            r.cells[2].fast1,
+            r.cells[2].speedup,
+        ));
+    }
+    s
+}
+
+/// Render Table 3 (Fast1 only).
+pub fn table3(rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<24} | {:>8} | {:>8} | {:>8}\n",
+        "Method", "Level 1", "Level 2", "Level 3"
+    ));
+    s.push_str(&"-".repeat(58));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:<24} | {:>8.2} | {:>8.2} | {:>8.2}\n",
+            r.method, r.cells[0].fast1, r.cells[1].fast1, r.cells[2].fast1,
+        ));
+    }
+    s
+}
+
+/// Render the §5.4 per-round-efficiency comparison.
+pub fn per_round(rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<24} | {:>10} | {:>10} | {:>10}   (mean speedup / refinement rounds)\n",
+        "Method", "Level 1", "Level 2", "Level 3"
+    ));
+    s.push_str(&"-".repeat(70));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:<24} | {:>10.3} | {:>10.3} | {:>10.3}\n",
+            r.method,
+            r.cells[0].speedup_per_round,
+            r.cells[1].speedup_per_round,
+            r.cells[2].speedup_per_round,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(name: &str) -> Row {
+        let mut c = Cell::default();
+        c.success = 1.0;
+        c.speedup = 2.5;
+        c.fast1 = 0.8;
+        c.speedup_per_round = 0.17;
+        Row {
+            method: name.into(),
+            cells: [c.clone(), c.clone(), c],
+        }
+    }
+
+    #[test]
+    fn tables_render_all_rows() {
+        let rows = vec![row("KernelSkill"), row("STARK")];
+        for render in [table1(&rows), table2(&rows), table3(&rows), per_round(&rows)] {
+            assert!(render.contains("KernelSkill"));
+            assert!(render.contains("STARK"));
+            assert!(render.contains("Level 3"));
+        }
+        assert!(table1(&rows).contains("2.50"));
+        assert!(table3(&rows).contains("0.80"));
+    }
+}

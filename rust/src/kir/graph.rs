@@ -1,0 +1,191 @@
+//! Task graph: a DAG of [`Op`]s — what a KernelBench PyTorch reference
+//! program looks like after operator capture.
+
+use super::op::{Op, OpId, OpKind, RedKind};
+
+#[derive(Debug, Clone, Default)]
+pub struct KernelGraph {
+    pub ops: Vec<Op>,
+    /// Task-level annotation: an operand has exploitable structure
+    /// (diagonal/triangular/banded/symmetric) that the eager reference
+    /// densifies. Unlocks the SpecializeStructure method.
+    pub structured_operands: bool,
+    /// Consumer adjacency, maintained by `push` (perf: the cost model and
+    /// feature extraction walk consumers on every review — §Perf opt 1).
+    consumer_lists: Vec<Vec<OpId>>,
+}
+
+impl KernelGraph {
+    pub fn new() -> Self {
+        KernelGraph::default()
+    }
+
+    /// Append an op whose inputs are earlier op ids; returns its id.
+    pub fn push(&mut self, kind: OpKind, m: u64, n: u64, k: u64, inputs: Vec<OpId>) -> OpId {
+        let id = self.ops.len();
+        for &i in &inputs {
+            assert!(i < id, "input {i} must precede op {id}");
+            self.consumer_lists[i].push(id);
+        }
+        self.consumer_lists.push(Vec::new());
+        self.ops.push(Op::new(id, kind, m, n, k, inputs));
+        id
+    }
+
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Direct consumers of `id` (O(1): maintained by `push`).
+    pub fn consumers(&self, id: OpId) -> &[OpId] {
+        &self.consumer_lists[id]
+    }
+
+    /// Number of consumers of `id` (O(1)).
+    pub fn consumer_count(&self, id: OpId) -> usize {
+        self.consumer_lists[id].len()
+    }
+
+    /// Total FLOPs across the graph.
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops()).sum()
+    }
+
+    /// Ideal traffic if the whole graph were one perfectly-fused kernel:
+    /// external inputs read once + final outputs written once. Intermediate
+    /// tensors never touch HBM. This is the fusion roofline.
+    pub fn fused_ideal_bytes(&self) -> f64 {
+        let mut total = 0.0;
+        for op in &self.ops {
+            // Bytes for operands that are *external* (not produced in-graph):
+            // approximate as ideal_bytes minus the output write minus re-read
+            // of in-graph producers' outputs.
+            let in_graph_input_bytes: f64 = op
+                .inputs
+                .iter()
+                .map(|&i| self.ops[i].output_bytes())
+                .sum();
+            let external = (op.ideal_bytes() - op.output_bytes() - in_graph_input_bytes).max(0.0);
+            total += external;
+        }
+        // Final outputs: ops with no consumers.
+        for op in &self.ops {
+            if self.consumers(op.id).is_empty() {
+                total += op.output_bytes();
+            }
+        }
+        total
+    }
+
+    /// The op with the largest FLOP share (the "dominant bottleneck" the
+    /// paper's motivating example is about), if any.
+    pub fn dominant_op(&self) -> Option<&Op> {
+        self.ops
+            .iter()
+            .max_by(|a, b| a.flops().partial_cmp(&b.flops()).unwrap())
+    }
+
+    /// FLOP fraction of the dominant op (1.0 for single-op graphs).
+    pub fn dominant_flop_fraction(&self) -> f64 {
+        let total = self.total_flops();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.dominant_op().map(|o| o.flops() / total).unwrap_or(0.0)
+    }
+
+    pub fn gemm_ops(&self) -> Vec<OpId> {
+        self.ops
+            .iter()
+            .filter(|o| o.is_gemm_like())
+            .map(|o| o.id)
+            .collect()
+    }
+
+    pub fn has_row_reduction(&self) -> bool {
+        self.ops.iter().any(|o| {
+            matches!(
+                o.kind,
+                OpKind::Reduction(RedKind::Row) | OpKind::Norm(_)
+            )
+        })
+    }
+
+    /// Validate DAG invariants (used by proptest).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.id != i {
+                return Err(format!("op {i} has id {}", op.id));
+            }
+            for &inp in &op.inputs {
+                if inp >= i {
+                    return Err(format!("op {i} depends on later op {inp}"));
+                }
+            }
+            if op.m == 0 || op.n == 0 || op.k == 0 {
+                return Err(format!("op {i} has zero dim"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::op::EwKind;
+
+    fn epilogue_graph() -> KernelGraph {
+        // The Appendix-D chain: matmul -> scale -> residual -> clamp ->
+        // row-logsumexp -> mish.
+        let mut g = KernelGraph::new();
+        let mm = g.push(OpKind::MatMul, 256, 512, 512, vec![]);
+        let sc = g.push(OpKind::Elementwise(EwKind::Scale), 256, 512, 1, vec![mm]);
+        let rs = g.push(OpKind::Elementwise(EwKind::Residual), 256, 512, 1, vec![sc]);
+        let cl = g.push(OpKind::Elementwise(EwKind::Clamp), 256, 512, 1, vec![rs]);
+        let red = g.push(OpKind::Reduction(RedKind::Row), 256, 512, 1, vec![cl]);
+        let _ = g.push(OpKind::Elementwise(EwKind::Mish), 256, 1, 1, vec![red]);
+        g
+    }
+
+    #[test]
+    fn dag_validates() {
+        assert!(epilogue_graph().validate().is_ok());
+    }
+
+    #[test]
+    fn dominant_op_is_the_gemm() {
+        let g = epilogue_graph();
+        assert!(g.dominant_op().unwrap().is_gemm_like());
+        assert!(g.dominant_flop_fraction() > 0.98);
+    }
+
+    #[test]
+    fn consumers_follow_edges() {
+        let g = epilogue_graph();
+        assert_eq!(g.consumers(0), &[1]);
+        assert!(g.consumers(5).is_empty());
+    }
+
+    #[test]
+    fn fused_ideal_less_than_unfused_sum() {
+        let g = epilogue_graph();
+        let unfused: f64 = g.ops.iter().map(|o| o.ideal_bytes()).sum();
+        assert!(g.fused_ideal_bytes() < unfused);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forward_edge_panics() {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 8, 8, 8, vec![3]);
+    }
+}

@@ -1,0 +1,240 @@
+//! Compile-time legality checking — the Reviewer's "Compiler" half.
+//!
+//! A schedule that violates these rules corresponds to a kernel that fails
+//! to build (resource over-subscription, illegal fusion, broken tiling).
+//! The fault model (`device::faults`) layers *injected* compile errors from
+//! buggy agent edits on top; this module covers the deterministic, structural
+//! ones.
+
+use super::graph::KernelGraph;
+use super::op::{OpKind, RedKind};
+use super::schedule::Schedule;
+use crate::device::machine::DeviceSpec;
+
+/// A compile diagnostic: rule id + message, the `feedbackc` of Algorithm 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompileError {
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl CompileError {
+    fn new(rule: &'static str, message: String) -> Self {
+        CompileError { rule, message }
+    }
+}
+
+/// Check all structural legality rules; empty vec = compiles clean.
+pub fn check(graph: &KernelGraph, sched: &Schedule, dev: &DeviceSpec) -> Vec<CompileError> {
+    let mut errs = Vec::new();
+
+    if let Err(e) = sched.validate(graph) {
+        errs.push(CompileError::new("partition", e));
+        return errs; // downstream checks assume a valid partition
+    }
+
+    for (gi, (group, cfg)) in sched.groups.iter().zip(&sched.cfg).enumerate() {
+        // Scratchpad budget.
+        let scratch = cfg.scratch_bytes(4);
+        if scratch > dev.scratch_bytes {
+            errs.push(CompileError::new(
+                "scratch_overflow",
+                format!(
+                    "group {gi}: scratch {scratch} B exceeds {} B",
+                    dev.scratch_bytes
+                ),
+            ));
+        }
+
+        // Tile sanity.
+        if cfg.tile_m == 0 || cfg.tile_n == 0 {
+            errs.push(CompileError::new(
+                "zero_tile",
+                format!("group {gi}: zero tile dims"),
+            ));
+        }
+        if cfg.block_threads == 0 || cfg.block_threads > dev.max_block_threads {
+            errs.push(CompileError::new(
+                "bad_launch",
+                format!("group {gi}: block_threads {}", cfg.block_threads),
+            ));
+        }
+
+        // MXU path requires staged operands and 8-aligned dims.
+        if cfg.mxu {
+            if !cfg.staging {
+                errs.push(CompileError::new(
+                    "mxu_unstaged",
+                    format!("group {gi}: tensor-core path without staged operands"),
+                ));
+            }
+            for &oid in group {
+                let op = graph.op(oid);
+                if op.is_gemm_like() && (op.m % 8 != 0 || op.n % 8 != 0 || op.k % 8 != 0) {
+                    errs.push(CompileError::new(
+                        "mxu_alignment",
+                        format!("group {gi}: {} not 8-aligned for MXU", op.label()),
+                    ));
+                }
+            }
+        }
+
+        // Split-K needs a cross-block combine: illegal when fused with a
+        // row-reduction consumer in the same kernel.
+        if cfg.split_k > 1 {
+            let has_red = group
+                .iter()
+                .any(|&o| matches!(graph.op(o).kind, OpKind::Reduction(_) | OpKind::Norm(_)));
+            if has_red {
+                errs.push(CompileError::new(
+                    "splitk_fused_reduction",
+                    format!("group {gi}: split-K cannot fuse with a reduction"),
+                ));
+            }
+        }
+
+        // Fusion legality inside the group.
+        errs.extend(check_group_fusion(graph, group, gi));
+    }
+
+    errs
+}
+
+/// A fusion group is legal iff it is a connected producer-consumer chain
+/// where (a) at most one GEMM-like op anchors it, (b) reductions appear only
+/// after every elementwise op that feeds them, and (c) column reductions /
+/// scatter never fuse with a GEMM (cross-block data flow).
+fn check_group_fusion(graph: &KernelGraph, group: &[usize], gi: usize) -> Vec<CompileError> {
+    let mut errs = Vec::new();
+
+    let gemms = group.iter().filter(|&&o| graph.op(o).is_gemm_like()).count();
+    if gemms > 1 {
+        errs.push(CompileError::new(
+            "multi_gemm_fusion",
+            format!("group {gi}: {gemms} GEMMs in one kernel"),
+        ));
+    }
+
+    let has_gemm = gemms > 0;
+    for &oid in group {
+        let op = graph.op(oid);
+        match op.kind {
+            OpKind::Reduction(RedKind::Col) | OpKind::Scatter if has_gemm => {
+                errs.push(CompileError::new(
+                    "cross_block_fusion",
+                    format!("group {gi}: {} cannot fuse with GEMM", op.label()),
+                ));
+            }
+            OpKind::Scan if group.len() > 1 => {
+                errs.push(CompileError::new(
+                    "scan_fusion",
+                    format!("group {gi}: scan must be standalone"),
+                ));
+            }
+            _ => {}
+        }
+    }
+
+    // Connectivity: every op (except the group's first in graph order) must
+    // have an in-group input or consumer; disconnected "fusion" is a
+    // horizontal batch, which is only legal for small elementwise ops.
+    if group.len() > 1 {
+        for &oid in group {
+            let op = graph.op(oid);
+            let connected = op.inputs.iter().any(|i| group.contains(i))
+                || graph.consumers(oid).iter().any(|c| group.contains(c));
+            if !connected {
+                let small = op.flops() < 1e6 && !op.is_gemm_like();
+                if !small {
+                    errs.push(CompileError::new(
+                        "disconnected_fusion",
+                        format!("group {gi}: {} fused without dataflow", op.label()),
+                    ));
+                }
+            }
+        }
+    }
+
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::machine::DeviceSpec;
+    use crate::kir::op::EwKind;
+    use crate::kir::schedule::GroupSchedule;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::a100_like()
+    }
+
+    fn gemm_red_graph() -> KernelGraph {
+        let mut g = KernelGraph::new();
+        let a = g.push(OpKind::MatMul, 128, 128, 512, vec![]);
+        let b = g.push(OpKind::Elementwise(EwKind::Relu), 128, 128, 1, vec![a]);
+        let _ = g.push(OpKind::Reduction(RedKind::Row), 128, 128, 1, vec![b]);
+        g
+    }
+
+    #[test]
+    fn naive_schedule_compiles() {
+        let g = gemm_red_graph();
+        let s = Schedule::per_op_naive(&g);
+        assert!(check(&g, &s, &dev()).is_empty());
+    }
+
+    #[test]
+    fn scratch_overflow_detected() {
+        let g = gemm_red_graph();
+        let mut s = Schedule::per_op_naive(&g);
+        s.cfg[0] = GroupSchedule::library_gemm();
+        s.cfg[0].tile_m = 1024;
+        s.cfg[0].tile_n = 1024;
+        s.cfg[0].tile_k = 128;
+        let errs = check(&g, &s, &dev());
+        assert!(errs.iter().any(|e| e.rule == "scratch_overflow"), "{errs:?}");
+    }
+
+    #[test]
+    fn mxu_requires_staging() {
+        let g = gemm_red_graph();
+        let mut s = Schedule::per_op_naive(&g);
+        s.cfg[0].mxu = true;
+        let errs = check(&g, &s, &dev());
+        assert!(errs.iter().any(|e| e.rule == "mxu_unstaged"));
+    }
+
+    #[test]
+    fn splitk_reduction_fusion_illegal() {
+        let g = gemm_red_graph();
+        let mut s = Schedule::per_op_naive(&g);
+        s.merge_groups(0, 1);
+        s.merge_groups(0, 1);
+        s.cfg[0].split_k = 4;
+        let errs = check(&g, &s, &dev());
+        assert!(errs.iter().any(|e| e.rule == "splitk_fused_reduction"));
+    }
+
+    #[test]
+    fn two_gemms_cannot_fuse() {
+        let mut g = KernelGraph::new();
+        let a = g.push(OpKind::MatMul, 64, 64, 64, vec![]);
+        let _ = g.push(OpKind::MatMul, 64, 64, 64, vec![a]);
+        let mut s = Schedule::per_op_naive(&g);
+        s.merge_groups(0, 1);
+        let errs = check(&g, &s, &dev());
+        assert!(errs.iter().any(|e| e.rule == "multi_gemm_fusion"));
+    }
+
+    #[test]
+    fn col_reduction_gemm_fusion_illegal() {
+        let mut g = KernelGraph::new();
+        let a = g.push(OpKind::MatMul, 64, 64, 64, vec![]);
+        let _ = g.push(OpKind::Reduction(RedKind::Col), 64, 64, 1, vec![a]);
+        let mut s = Schedule::per_op_naive(&g);
+        s.merge_groups(0, 1);
+        let errs = check(&g, &s, &dev());
+        assert!(errs.iter().any(|e| e.rule == "cross_block_fusion"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Kernel IR — the structured stand-in for CUDA kernel source.
+//!
+//! A task is a [`graph::KernelGraph`] (what the PyTorch reference computes);
+//! a candidate kernel is a [`schedule::Schedule`] over that graph (how it is
+//! realized as launched kernels). Optimization methods are IR rewrites
+//! (`transforms`), static code features (§4.1.3) are extracted from the pair
+//! (`features`), and compilation is legality checking (`legality`).
+
+pub mod features;
+pub mod graph;
+pub mod legality;
+pub mod op;
+pub mod schedule;
+pub mod transforms;

@@ -1,0 +1,211 @@
+//! Operator taxonomy for KernelBenchSim tasks.
+//!
+//! Each [`Op`] carries enough shape information for the cost model to compute
+//! FLOPs and ideal memory traffic, and for the legality checker / decision
+//! table to reason about fusion and schedule preconditions. The taxonomy
+//! mirrors the operator families KernelBench draws from (GEMM, conv,
+//! reductions, normalizations, elementwise chains, data movement, attention
+//! sub-ops).
+
+/// Elementwise operator flavor (cost-equivalent; kept for trace readability).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwKind {
+    Add,
+    Mul,
+    Scale,
+    Clamp,
+    Relu,
+    Gelu,
+    Mish,
+    Sigmoid,
+    Tanh,
+    Bias,
+    Residual,
+}
+
+/// Reduction pattern — determines fusion legality and schedule choices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RedKind {
+    Row,       // e.g. logsumexp(dim=1), row-sum
+    Col,       // cross-row; transposed access risk
+    Full,      // scalar output
+    ArgMinMax, // index-producing
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NormKind {
+    Softmax,
+    LayerNorm,
+    RmsNorm,
+    BatchNorm,
+    GroupNorm,
+}
+
+/// Operator kind. Shape fields use the GEMM (m, n, k) convention; non-GEMM
+/// ops use (rows=m, cols=n) with k = 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense matmul (m, k) x (k, n). Convs are represented as implicit GEMM
+    /// (im2col dims), matching how both cuDNN and MXU pipelines lower them.
+    MatMul,
+    Conv,
+    Elementwise(EwKind),
+    Reduction(RedKind),
+    Norm(NormKind),
+    Transpose,
+    Gather,
+    Scatter,
+    Pool,
+    Scan,
+    Embedding,
+}
+
+pub type OpId = usize;
+
+/// One operator node in a task graph.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub kind: OpKind,
+    /// GEMM convention: (m, k) x (k, n); elementwise/reductions use m x n.
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Graph predecessors (data dependencies).
+    pub inputs: Vec<OpId>,
+    /// Element size in bytes of the op's working dtype (4 = f32).
+    pub dtype_bytes: u64,
+}
+
+impl Op {
+    pub fn new(id: OpId, kind: OpKind, m: u64, n: u64, k: u64, inputs: Vec<OpId>) -> Op {
+        Op {
+            id,
+            kind,
+            m,
+            n,
+            k,
+            inputs,
+            dtype_bytes: 4,
+        }
+    }
+
+    /// Floating-point operations performed by this op.
+    pub fn flops(&self) -> f64 {
+        let (m, n, k) = (self.m as f64, self.n as f64, self.k as f64);
+        match self.kind {
+            OpKind::MatMul | OpKind::Conv => 2.0 * m * n * k,
+            OpKind::Elementwise(_) => m * n,
+            // max+exp+sum+div style multi-pass arithmetic.
+            OpKind::Reduction(_) => 2.0 * m * n,
+            OpKind::Norm(_) => 6.0 * m * n,
+            OpKind::Transpose | OpKind::Gather | OpKind::Scatter | OpKind::Embedding => 0.0,
+            OpKind::Pool => m * n,
+            OpKind::Scan => 2.0 * m * n,
+        }
+    }
+
+    /// Ideal (perfect-reuse) HBM traffic in bytes: each operand read once,
+    /// output written once.
+    pub fn ideal_bytes(&self) -> f64 {
+        let b = self.dtype_bytes as f64;
+        let (m, n, k) = (self.m as f64, self.n as f64, self.k as f64);
+        match self.kind {
+            OpKind::MatMul | OpKind::Conv => b * (m * k + k * n + m * n),
+            OpKind::Elementwise(_) => b * 2.0 * m * n,
+            OpKind::Reduction(RedKind::Full) => b * (m * n + 1.0),
+            OpKind::Reduction(_) => b * (m * n + m.max(n)),
+            OpKind::Norm(_) => b * 2.0 * m * n,
+            OpKind::Transpose => b * 2.0 * m * n,
+            OpKind::Gather | OpKind::Scatter | OpKind::Embedding => b * 2.0 * m * n,
+            OpKind::Pool => b * (m * n + m * n / 4.0),
+            OpKind::Scan => b * 2.0 * m * n,
+        }
+    }
+
+    /// Output tensor size in bytes (what a downstream unfused kernel re-reads).
+    pub fn output_bytes(&self) -> f64 {
+        let b = self.dtype_bytes as f64;
+        let (m, n) = (self.m as f64, self.n as f64);
+        match self.kind {
+            OpKind::Reduction(RedKind::Full) => b,
+            OpKind::Reduction(RedKind::Row) => b * m,
+            OpKind::Reduction(RedKind::Col) => b * n,
+            OpKind::Reduction(RedKind::ArgMinMax) => b * m,
+            OpKind::Pool => b * m * n / 4.0,
+            _ => b * m * n,
+        }
+    }
+
+    /// Is this op a dense-contraction (GEMM-shaped) op?
+    pub fn is_gemm_like(&self) -> bool {
+        matches!(self.kind, OpKind::MatMul | OpKind::Conv)
+    }
+
+    /// Is this op memory-movement-only (no arithmetic intensity)?
+    pub fn is_data_movement(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::Transpose | OpKind::Gather | OpKind::Scatter | OpKind::Embedding
+        )
+    }
+
+    /// Arithmetic intensity (flops per ideal byte).
+    pub fn intensity(&self) -> f64 {
+        let b = self.ideal_bytes();
+        if b == 0.0 {
+            0.0
+        } else {
+            self.flops() / b
+        }
+    }
+
+    /// Short label for traces/tables.
+    pub fn label(&self) -> String {
+        match self.kind {
+            OpKind::MatMul => format!("matmul[{}x{}x{}]", self.m, self.n, self.k),
+            OpKind::Conv => format!("conv[{}x{}x{}]", self.m, self.n, self.k),
+            OpKind::Elementwise(e) => format!("ew:{e:?}[{}x{}]", self.m, self.n),
+            OpKind::Reduction(r) => format!("red:{r:?}[{}x{}]", self.m, self.n),
+            OpKind::Norm(nk) => format!("norm:{nk:?}[{}x{}]", self.m, self.n),
+            k => format!("{k:?}[{}x{}]", self.m, self.n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_and_bytes() {
+        let op = Op::new(0, OpKind::MatMul, 256, 512, 512, vec![]);
+        assert_eq!(op.flops(), 2.0 * 256.0 * 512.0 * 512.0);
+        assert_eq!(
+            op.ideal_bytes(),
+            4.0 * (256.0 * 512.0 + 512.0 * 512.0 + 256.0 * 512.0)
+        );
+        assert!(op.is_gemm_like());
+        assert!(op.intensity() > 50.0);
+    }
+
+    #[test]
+    fn elementwise_is_memory_bound() {
+        let op = Op::new(0, OpKind::Elementwise(EwKind::Relu), 1024, 1024, 1, vec![]);
+        assert!(op.intensity() < 1.0);
+        assert!(!op.is_gemm_like());
+    }
+
+    #[test]
+    fn row_reduction_output_is_column() {
+        let op = Op::new(0, OpKind::Reduction(RedKind::Row), 256, 512, 1, vec![]);
+        assert_eq!(op.output_bytes(), 4.0 * 256.0);
+    }
+
+    #[test]
+    fn transpose_has_zero_flops() {
+        let op = Op::new(0, OpKind::Transpose, 128, 128, 1, vec![]);
+        assert_eq!(op.flops(), 0.0);
+        assert!(op.is_data_movement());
+    }
+}

@@ -1,0 +1,258 @@
+//! Schedule representation: how a task graph is realized as launched kernels.
+//!
+//! A [`Schedule`] partitions the graph's ops into *fusion groups* (one
+//! launched kernel each) and gives every group a [`GroupSchedule`] — the
+//! knobs the optimization methods (``kir::transforms``) turn. This is the
+//! "kernel source code" of the simulation: static features are extracted
+//! from it, legality is checked on it, and the device cost model prices it.
+
+use super::graph::KernelGraph;
+use super::op::OpId;
+
+/// Numeric path. Mirrors the CUDA f32 / TF32 / tensor-core-bf16 choice and
+/// the TPU f32-VPU / bf16-MXU choice (DESIGN.md §Hardware-Adaptation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    Tf32,
+    Bf16Acc32,
+}
+
+/// Operand layout seen by the kernel's inner loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Row-major, accesses along rows: coalesced / lane-aligned.
+    Coalesced,
+    /// Accesses stride across rows (e.g. untransposed B operand): poor.
+    Strided,
+    /// Explicitly tiled/swizzled staging layout: best, needs staging pass.
+    Tiled,
+}
+
+/// Per-fusion-group schedule knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupSchedule {
+    /// Output tile (CUDA threadblock tile / Pallas BlockSpec block).
+    pub tile_m: u64,
+    pub tile_n: u64,
+    /// Contraction blocking; 0 = no K blocking (full-K strips — the naive
+    /// no-reuse schedule of the motivating example).
+    pub tile_k: u64,
+    /// Operands staged through shared memory / VMEM before use?
+    pub staging: bool,
+    /// Vector width of global loads (1/2/4 — ld.global.v4 analog).
+    pub vector_width: u8,
+    /// MXU / tensor-core path enabled (requires Precision != F32).
+    pub mxu: bool,
+    pub precision: Precision,
+    /// Double-buffered HBM<->scratch pipeline (cp.async analog).
+    pub double_buffer: bool,
+    pub layout: Layout,
+    /// Inner-loop unroll factor (1 = none).
+    pub unroll: u8,
+    /// Threads per block (CUDA) / rough parallel granularity knob.
+    pub block_threads: u32,
+    /// Scratchpad padding to dodge bank conflicts (CUDA) / lane misalignment.
+    pub smem_padding: bool,
+    /// Split-K factor (1 = off): extra parallelism for small-M GEMMs.
+    pub split_k: u32,
+}
+
+impl GroupSchedule {
+    /// The Generator's seed schedule: correct, unoptimized — exactly what the
+    /// paper says the Generator aims for ("does not optimize for speed").
+    pub fn naive() -> GroupSchedule {
+        GroupSchedule {
+            tile_m: 8,
+            tile_n: 64,
+            tile_k: 0,
+            staging: false,
+            vector_width: 1,
+            mxu: false,
+            precision: Precision::F32,
+            double_buffer: false,
+            layout: Layout::Strided,
+            unroll: 1,
+            block_threads: 256,
+            smem_padding: false,
+            split_k: 1,
+        }
+    }
+
+    /// A vendor-library-quality GEMM schedule (the cuBLAS stand-in used by
+    /// the Torch-Eager baseline cost for GEMM-like ops).
+    pub fn library_gemm() -> GroupSchedule {
+        GroupSchedule {
+            tile_m: 128,
+            tile_n: 128,
+            tile_k: 32,
+            staging: true,
+            vector_width: 4,
+            mxu: true,
+            precision: Precision::Tf32,
+            double_buffer: true,
+            layout: Layout::Tiled,
+            unroll: 4,
+            block_threads: 256,
+            smem_padding: true,
+            split_k: 1,
+        }
+    }
+
+    /// Scratchpad bytes this schedule keeps resident per block (operand
+    /// tiles; doubled when double-buffered) for a GEMM-shaped op.
+    pub fn scratch_bytes(&self, dtype_bytes: u64) -> u64 {
+        if !self.staging {
+            return 0;
+        }
+        let tk = if self.tile_k == 0 { 1 } else { self.tile_k };
+        let a = self.tile_m * tk * dtype_bytes;
+        let b = tk * self.tile_n * dtype_bytes;
+        let acc = self.tile_m * self.tile_n * 4; // f32 accumulator
+        let buf = if self.double_buffer { 2 } else { 1 };
+        let pad = if self.smem_padding { (a + b) / 16 } else { 0 };
+        buf * (a + b) + acc + pad
+    }
+}
+
+/// A full schedule for a task graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// Partition of op ids into fusion groups, each launched as one kernel.
+    /// Groups are in execution order; within a group ops are in graph order.
+    pub groups: Vec<Vec<OpId>>,
+    /// One schedule per group (parallel to `groups`).
+    pub cfg: Vec<GroupSchedule>,
+    /// Structure specialization applied: the kernel exploits operand
+    /// structure (diagonal/triangular/banded) instead of doing the dense
+    /// work the eager reference does. See `bench_suite::eager`.
+    pub specialized: bool,
+}
+
+impl Schedule {
+    /// One kernel per op, all naive — the Generator's seed point.
+    pub fn per_op_naive(graph: &KernelGraph) -> Schedule {
+        Schedule {
+            groups: graph.ops.iter().map(|o| vec![o.id]).collect(),
+            cfg: graph.ops.iter().map(|_| GroupSchedule::naive()).collect(),
+            specialized: false,
+        }
+    }
+
+    pub fn num_kernels(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Index of the group containing `op`, if any.
+    pub fn group_of(&self, op: OpId) -> Option<usize> {
+        self.groups.iter().position(|g| g.contains(&op))
+    }
+
+    /// Merge group `b` into group `a` (b's ops appended, b's cfg dropped,
+    /// a's cfg kept). Caller is responsible for legality checking.
+    pub fn merge_groups(&mut self, a: usize, b: usize) {
+        assert!(a != b && a < self.groups.len() && b < self.groups.len());
+        let (keep, drop) = (a.min(b), a.max(b));
+        let moved = self.groups.remove(drop);
+        self.cfg.remove(drop);
+        self.groups[keep].extend(moved);
+        self.groups[keep].sort_unstable();
+    }
+
+    /// Split `op` out of its group into a fresh naive singleton group.
+    pub fn split_op(&mut self, op: OpId) {
+        if let Some(g) = self.group_of(op) {
+            if self.groups[g].len() <= 1 {
+                return;
+            }
+            self.groups[g].retain(|&o| o != op);
+            self.groups.push(vec![op]);
+            self.cfg.push(GroupSchedule::naive());
+        }
+    }
+
+    /// Structural invariant: groups form a partition of 0..n_ops.
+    pub fn validate(&self, graph: &KernelGraph) -> Result<(), String> {
+        if self.groups.len() != self.cfg.len() {
+            return Err("groups/cfg length mismatch".into());
+        }
+        let mut seen = vec![false; graph.len()];
+        for g in &self.groups {
+            if g.is_empty() {
+                return Err("empty fusion group".into());
+            }
+            for &op in g {
+                if op >= graph.len() {
+                    return Err(format!("op {op} out of range"));
+                }
+                if seen[op] {
+                    return Err(format!("op {op} in two groups"));
+                }
+                seen[op] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("some ops unscheduled".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::op::{EwKind, OpKind};
+
+    fn graph3() -> KernelGraph {
+        let mut g = KernelGraph::new();
+        let a = g.push(OpKind::MatMul, 64, 64, 64, vec![]);
+        let b = g.push(OpKind::Elementwise(EwKind::Relu), 64, 64, 1, vec![a]);
+        let _ = g.push(OpKind::Elementwise(EwKind::Scale), 64, 64, 1, vec![b]);
+        g
+    }
+
+    #[test]
+    fn per_op_naive_is_valid_partition() {
+        let g = graph3();
+        let s = Schedule::per_op_naive(&g);
+        assert_eq!(s.num_kernels(), 3);
+        assert!(s.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn merge_then_split_roundtrip() {
+        let g = graph3();
+        let mut s = Schedule::per_op_naive(&g);
+        s.merge_groups(0, 1);
+        assert_eq!(s.num_kernels(), 2);
+        assert!(s.validate(&g).is_ok());
+        assert_eq!(s.group_of(0), s.group_of(1));
+        s.split_op(1);
+        assert_eq!(s.num_kernels(), 3);
+        assert!(s.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn scratch_bytes_scales_with_buffering() {
+        let mut c = GroupSchedule::library_gemm();
+        let single = {
+            c.double_buffer = false;
+            c.scratch_bytes(4)
+        };
+        c.double_buffer = true;
+        assert!(c.scratch_bytes(4) > single);
+    }
+
+    #[test]
+    fn naive_has_no_scratch() {
+        assert_eq!(GroupSchedule::naive().scratch_bytes(4), 0);
+    }
+
+    #[test]
+    fn validate_catches_double_membership() {
+        let g = graph3();
+        let mut s = Schedule::per_op_naive(&g);
+        s.groups[0].push(1);
+        assert!(s.validate(&g).is_err());
+    }
+}

@@ -1,0 +1,793 @@
+//! The optimization-method vocabulary: every `allowed_methods` entry in the
+//! long-term memory's decision table is one of these IR rewrites.
+//!
+//! Each method has (a) an applicability precondition over the structured
+//! kernel — the same preconditions the paper encodes as `gate_when`
+//! predicates and code-feature gates, (b) a deterministic `apply` that edits
+//! the schedule, and (c) a complexity class that drives the fault model
+//! (riskier edits are more likely to produce buggy kernels when executed by
+//! the LLM-surrogate Optimizer).
+
+use super::graph::KernelGraph;
+use super::op::OpKind;
+use super::schedule::{GroupSchedule, Layout, Precision, Schedule};
+
+/// Edit-complexity class: scales the surrogate's bug probability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Complexity {
+    Low,
+    Medium,
+    High,
+}
+
+/// Every optimization method the system can select. This is the shared
+/// vocabulary between the decision table, the Planner, and the Optimizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MethodId {
+    /// Shared-memory / VMEM tiling of a GEMM group (+K blocking, staging).
+    TileSmem,
+    /// Enable the tensor-core / MXU math path (implies TF32/BF16 accum).
+    UseTensorCore,
+    /// Widen global loads to vector width 4.
+    VectorizeLoads,
+    /// Fix strided access: reorder indexing to coalesced layout.
+    CoalesceAccesses,
+    /// Swizzle staged operands into a tiled scratch layout.
+    TiledLayout,
+    /// Fuse an elementwise consumer into its producer's kernel.
+    FuseElementwise,
+    /// Fuse a row-reduction/normalization epilogue (and its elementwise
+    /// tail) into the producer kernel — the coupled multi-step edit.
+    FuseEpilogueReduction,
+    /// Merge independent small kernels to cut launch overhead.
+    HorizontalFuse,
+    /// Double-buffer the HBM<->scratch pipeline (cp.async analog).
+    DoubleBuffer,
+    /// Unroll the inner loop (factor 4).
+    UnrollInner,
+    /// Pad scratchpad rows to kill bank conflicts.
+    PadScratch,
+    /// Shrink tiles/registers to raise occupancy.
+    IncreaseOccupancy,
+    /// Split the K dimension across blocks (small-M GEMMs).
+    SplitK,
+    /// Downcast the math path to TF32 (keeps f32 accumulate).
+    PrecisionDowncast,
+    /// Retune block thread count.
+    LaunchTune,
+    /// Split an op back out of an over-fused group.
+    KernelFission,
+    /// Recompute cheap values instead of spilling registers.
+    RecomputeCheap,
+    /// Warp-shuffle (lane-reduce) the reduction tree.
+    WarpReduceShuffle,
+    /// Software prefetch for memory-bound non-GEMM groups.
+    AsyncPrefetch,
+    /// L2/cache blocking for large memory-bound ops.
+    CacheBlocking,
+    /// Exploit operand structure (diagonal/triangular/banded): skip the
+    /// dense work the eager reference materializes. The heavy-tailed
+    /// Level-1 wins live behind this method.
+    SpecializeStructure,
+}
+
+pub const ALL_METHODS: [MethodId; 21] = [
+    MethodId::SpecializeStructure,
+    MethodId::TileSmem,
+    MethodId::UseTensorCore,
+    MethodId::VectorizeLoads,
+    MethodId::CoalesceAccesses,
+    MethodId::TiledLayout,
+    MethodId::FuseElementwise,
+    MethodId::FuseEpilogueReduction,
+    MethodId::HorizontalFuse,
+    MethodId::DoubleBuffer,
+    MethodId::UnrollInner,
+    MethodId::PadScratch,
+    MethodId::IncreaseOccupancy,
+    MethodId::SplitK,
+    MethodId::PrecisionDowncast,
+    MethodId::LaunchTune,
+    MethodId::KernelFission,
+    MethodId::RecomputeCheap,
+    MethodId::WarpReduceShuffle,
+    MethodId::AsyncPrefetch,
+    MethodId::CacheBlocking,
+];
+
+impl MethodId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodId::TileSmem => "tile_smem",
+            MethodId::UseTensorCore => "use_tensor_core",
+            MethodId::VectorizeLoads => "vectorize_loads",
+            MethodId::CoalesceAccesses => "coalesce_accesses",
+            MethodId::TiledLayout => "tiled_layout",
+            MethodId::FuseElementwise => "fuse_elementwise",
+            MethodId::FuseEpilogueReduction => "fuse_epilogue_reduction",
+            MethodId::HorizontalFuse => "horizontal_fuse",
+            MethodId::DoubleBuffer => "double_buffer",
+            MethodId::UnrollInner => "unroll_inner",
+            MethodId::PadScratch => "pad_scratch",
+            MethodId::IncreaseOccupancy => "increase_occupancy",
+            MethodId::SplitK => "split_k",
+            MethodId::PrecisionDowncast => "precision_downcast",
+            MethodId::LaunchTune => "launch_tune",
+            MethodId::KernelFission => "kernel_fission",
+            MethodId::RecomputeCheap => "recompute_cheap",
+            MethodId::WarpReduceShuffle => "warp_reduce_shuffle",
+            MethodId::AsyncPrefetch => "async_prefetch",
+            MethodId::CacheBlocking => "cache_blocking",
+            MethodId::SpecializeStructure => "specialize_structure",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<MethodId> {
+        ALL_METHODS.iter().copied().find(|m| m.name() == name)
+    }
+
+    pub fn complexity(&self) -> Complexity {
+        match self {
+            MethodId::VectorizeLoads
+            | MethodId::UnrollInner
+            | MethodId::PadScratch
+            | MethodId::LaunchTune
+            | MethodId::PrecisionDowncast
+            | MethodId::IncreaseOccupancy => Complexity::Low,
+            MethodId::CoalesceAccesses
+            | MethodId::DoubleBuffer
+            | MethodId::FuseElementwise
+            | MethodId::HorizontalFuse
+            | MethodId::KernelFission
+            | MethodId::RecomputeCheap
+            | MethodId::AsyncPrefetch
+            | MethodId::CacheBlocking
+            | MethodId::UseTensorCore => Complexity::Medium,
+            MethodId::TileSmem
+            | MethodId::TiledLayout
+            | MethodId::FuseEpilogueReduction
+            | MethodId::SplitK
+            | MethodId::SpecializeStructure
+            | MethodId::WarpReduceShuffle => Complexity::High,
+        }
+    }
+}
+
+/// Where a method wants to act.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetGroup {
+    /// The group containing the dominant (largest-FLOP) op.
+    Dominant,
+    /// A group whose schedule/ops satisfy the method's shape (first match).
+    FirstEligible,
+}
+
+/// Why a method is not applicable right now (also used as gate explanations
+/// in retrieval audit trails).
+pub type Inapplicable = &'static str;
+
+/// Group containing the dominant (largest-FLOP) op — the default focus.
+pub fn dominant_group(graph: &KernelGraph, sched: &Schedule) -> usize {
+    let dom = graph.dominant_op().map(|o| o.id).unwrap_or(0);
+    sched.group_of(dom).unwrap_or(0)
+}
+
+fn group_has_gemm(graph: &KernelGraph, sched: &Schedule, g: usize) -> bool {
+    sched.groups[g].iter().any(|&o| graph.op(o).is_gemm_like())
+}
+
+/// The GEMM-shaped op in group `g`, if any.
+fn group_gemm<'a>(graph: &'a KernelGraph, sched: &Schedule, g: usize) -> Option<&'a crate::kir::op::Op> {
+    sched.groups[g]
+        .iter()
+        .map(|&o| graph.op(o))
+        .find(|o| o.is_gemm_like())
+}
+
+/// The largest-FLOP op in group `g` (tile-size reference).
+fn group_biggest<'a>(graph: &'a KernelGraph, sched: &Schedule, g: usize) -> &'a crate::kir::op::Op {
+    sched.groups[g]
+        .iter()
+        .map(|&o| graph.op(o))
+        .max_by(|a, b| a.flops().partial_cmp(&b.flops()).unwrap())
+        .unwrap()
+}
+
+/// Find (producer_group, consumer_group) for an elementwise fusion edge.
+fn ew_fusion_edge(graph: &KernelGraph, sched: &Schedule) -> Option<(usize, usize)> {
+    for op in &graph.ops {
+        if !matches!(op.kind, OpKind::Elementwise(_)) {
+            continue;
+        }
+        for &inp in &op.inputs {
+            let (gp, gc) = (sched.group_of(inp)?, sched.group_of(op.id)?);
+            if gp != gc {
+                return Some((gp, gc));
+            }
+        }
+    }
+    None
+}
+
+/// Find a reduction/norm consumer split from its producer group.
+fn reduction_fusion_edge(graph: &KernelGraph, sched: &Schedule) -> Option<(usize, usize)> {
+    for op in &graph.ops {
+        if !matches!(op.kind, OpKind::Reduction(_) | OpKind::Norm(_)) {
+            continue;
+        }
+        for &inp in &op.inputs {
+            let (gp, gc) = (sched.group_of(inp)?, sched.group_of(op.id)?);
+            if gp != gc {
+                return Some((gp, gc));
+            }
+        }
+    }
+    None
+}
+
+/// Check whether `method` can be applied with the dominant group as focus.
+pub fn applicable(
+    method: MethodId,
+    graph: &KernelGraph,
+    sched: &Schedule,
+) -> Result<(), Inapplicable> {
+    applicable_at(method, graph, sched, dominant_group(graph, sched))
+}
+
+/// Check whether `method` can be applied focusing group `dg` (the
+/// profiler's hot kernel). Per-group knob methods are considered applicable
+/// when the focus group — or, failing that, any group — satisfies the local
+/// precondition (the Optimizer's whole-program rewrite reaches them all).
+pub fn applicable_at(
+    method: MethodId,
+    graph: &KernelGraph,
+    sched: &Schedule,
+    dg: usize,
+) -> Result<(), Inapplicable> {
+    let dg = dg.min(sched.num_kernels() - 1);
+    match method {
+        // Graph-structure methods have global preconditions.
+        MethodId::CoalesceAccesses => {
+            if sched.cfg.iter().any(|c| matches!(c.layout, Layout::Strided)) {
+                Ok(())
+            } else {
+                Err("already coalesced")
+            }
+        }
+        MethodId::FuseElementwise => ew_fusion_edge(graph, sched)
+            .map(|_| ())
+            .ok_or("no elementwise fusion edge"),
+        MethodId::FuseEpilogueReduction => reduction_fusion_edge(graph, sched)
+            .map(|_| ())
+            .ok_or("no reduction epilogue to fuse"),
+        MethodId::HorizontalFuse => {
+            if sched.num_kernels() < 4 {
+                Err("too few kernels to batch")
+            } else {
+                Ok(())
+            }
+        }
+        MethodId::KernelFission => {
+            if sched.groups.iter().all(|g| g.len() <= 1) {
+                Err("nothing fused to split")
+            } else {
+                Ok(())
+            }
+        }
+        MethodId::SpecializeStructure => {
+            if !graph.structured_operands {
+                Err("no exploitable operand structure")
+            } else if sched.specialized {
+                Err("already specialized")
+            } else {
+                Ok(())
+            }
+        }
+        MethodId::RecomputeCheap => {
+            let f = super::features::ground_truth_at(graph, sched, dg);
+            if f.register_pressure < 2 {
+                Err("no spill pressure to trade")
+            } else {
+                Ok(())
+            }
+        }
+        // Per-group knob methods: focus group first, any group as fallback.
+        _ => {
+            if group_eligible(method, graph, sched, dg).is_ok() {
+                return Ok(());
+            }
+            let any = (0..sched.num_kernels())
+                .any(|g| group_eligible(method, graph, sched, g).is_ok());
+            if any {
+                Ok(())
+            } else {
+                group_eligible(method, graph, sched, dg)
+            }
+        }
+    }
+}
+
+/// Local (per-group) precondition for the knob methods.
+fn group_eligible(
+    method: MethodId,
+    graph: &KernelGraph,
+    sched: &Schedule,
+    g: usize,
+) -> Result<(), Inapplicable> {
+    let cfg = &sched.cfg[g];
+    match method {
+        MethodId::TileSmem => {
+            if !group_has_gemm(graph, sched, g) {
+                return Err("no GEMM in group");
+            }
+            if cfg.staging && cfg.tile_k > 0 {
+                return Err("already tiled");
+            }
+            Ok(())
+        }
+        MethodId::UseTensorCore => {
+            if !group_has_gemm(graph, sched, g) {
+                return Err("no GEMM to run on MXU");
+            }
+            if cfg.mxu {
+                return Err("already on tensor core path");
+            }
+            if !cfg.staging {
+                return Err("tensor core requires staged operands");
+            }
+            let op = group_gemm(graph, sched, g).unwrap();
+            if op.m % 8 != 0 || op.n % 8 != 0 || op.k % 8 != 0 {
+                return Err("dims not multiple of 8");
+            }
+            Ok(())
+        }
+        MethodId::VectorizeLoads => {
+            if cfg.vector_width >= 4 {
+                return Err("already vectorized");
+            }
+            if matches!(cfg.layout, Layout::Strided) {
+                return Err("strided access cannot vectorize");
+            }
+            Ok(())
+        }
+        MethodId::TiledLayout => {
+            if !cfg.staging {
+                return Err("tiled layout needs staging");
+            }
+            if matches!(cfg.layout, Layout::Tiled) {
+                return Err("already tiled layout");
+            }
+            Ok(())
+        }
+        MethodId::DoubleBuffer => {
+            if !cfg.staging {
+                return Err("double buffering needs staging");
+            }
+            if cfg.double_buffer {
+                return Err("already double buffered");
+            }
+            Ok(())
+        }
+        MethodId::UnrollInner => {
+            if cfg.unroll > 1 {
+                Err("already unrolled")
+            } else {
+                Ok(())
+            }
+        }
+        MethodId::PadScratch => {
+            if !cfg.staging {
+                return Err("no scratch to pad");
+            }
+            if cfg.smem_padding {
+                return Err("already padded");
+            }
+            Ok(())
+        }
+        MethodId::IncreaseOccupancy => {
+            if cfg.tile_m <= 32 && cfg.tile_n <= 32 {
+                Err("tiles already small")
+            } else {
+                Ok(())
+            }
+        }
+        MethodId::SplitK => {
+            if !group_has_gemm(graph, sched, g) {
+                return Err("split-K needs a GEMM");
+            }
+            let op = group_gemm(graph, sched, g).unwrap();
+            if op.k < 4 * op.m.max(op.n) {
+                return Err("K not dominant enough for split-K");
+            }
+            if cfg.split_k > 1 {
+                return Err("already split");
+            }
+            Ok(())
+        }
+        MethodId::PrecisionDowncast => {
+            if matches!(cfg.precision, Precision::F32) {
+                Ok(())
+            } else {
+                Err("already downcast")
+            }
+        }
+        MethodId::LaunchTune => Ok(()),
+        MethodId::WarpReduceShuffle => {
+            let has_red = sched.groups[g].iter().any(|&o| {
+                matches!(graph.op(o).kind, OpKind::Reduction(_) | OpKind::Norm(_))
+            });
+            if !has_red {
+                return Err("no reduction in group");
+            }
+            if cfg.vector_width >= 4 && cfg.unroll > 1 {
+                return Err("reduction already optimized");
+            }
+            Ok(())
+        }
+        MethodId::AsyncPrefetch => {
+            if cfg.double_buffer {
+                return Err("pipeline already hidden");
+            }
+            if group_has_gemm(graph, sched, g) && cfg.staging {
+                return Err("use double_buffer on staged GEMM instead");
+            }
+            Ok(())
+        }
+        MethodId::CacheBlocking => {
+            if group_has_gemm(graph, sched, g) {
+                return Err("use tile_smem for GEMM groups");
+            }
+            if cfg.tile_m >= 64 && cfg.tile_n >= 128 {
+                return Err("already cache blocked");
+            }
+            Ok(())
+        }
+        // Graph-structure methods are handled in applicable_at.
+        _ => Err("not a per-group knob"),
+    }
+}
+
+/// Apply `method` with the dominant group as focus.
+pub fn apply(method: MethodId, graph: &KernelGraph, sched: &mut Schedule) {
+    apply_at(method, graph, sched, dominant_group(graph, sched))
+}
+
+/// Apply `method` across the whole program (the Optimizer rewrites every
+/// kernel the plan's cue touches), with `dg` as the profiler's focus group.
+/// Always produces a *structurally* valid schedule; device legality is
+/// checked separately.
+pub fn apply_at(method: MethodId, graph: &KernelGraph, sched: &mut Schedule, dg: usize) {
+    let dg = dg.min(sched.num_kernels() - 1);
+    match method {
+        // ---- graph-structure edits ----
+        MethodId::CoalesceAccesses => {
+            for c in &mut sched.cfg {
+                if matches!(c.layout, Layout::Strided) {
+                    c.layout = Layout::Coalesced;
+                }
+            }
+        }
+        MethodId::FuseElementwise => {
+            // Inline every elementwise consumer into its producer kernel.
+            while let Some((gp, gc)) = ew_fusion_edge(graph, sched) {
+                sched.merge_groups(gp, gc);
+            }
+        }
+        MethodId::FuseEpilogueReduction => {
+            // Fuse every reduction epilogue, then its elementwise tails —
+            // the coupled multi-step edit.
+            while let Some((gp, gc)) = reduction_fusion_edge(graph, sched) {
+                sched.merge_groups(gp, gc);
+            }
+            while let Some((gp, gc)) = ew_fusion_edge(graph, sched) {
+                sched.merge_groups(gp, gc);
+            }
+        }
+        MethodId::HorizontalFuse => {
+            // Batch tiny kernels together until few remain.
+            loop {
+                if sched.num_kernels() < 3 {
+                    break;
+                }
+                let mut idx: Vec<usize> = (0..sched.num_kernels()).collect();
+                idx.sort_by_key(|&i| {
+                    sched.groups[i]
+                        .iter()
+                        .map(|&o| graph.op(o).flops() as u64)
+                        .sum::<u64>()
+                });
+                let small = |i: usize| {
+                    sched.groups[i]
+                        .iter()
+                        .map(|&o| graph.op(o).flops())
+                        .sum::<f64>()
+                        < 1e7
+                };
+                if small(idx[0]) && small(idx[1]) {
+                    sched.merge_groups(idx[0], idx[1]);
+                } else {
+                    break;
+                }
+            }
+        }
+        MethodId::KernelFission => {
+            if let Some(g) = (0..sched.num_kernels()).max_by_key(|&i| sched.groups[i].len()) {
+                if sched.groups[g].len() > 1 {
+                    let op = *sched.groups[g].last().unwrap();
+                    sched.split_op(op);
+                }
+            }
+        }
+        MethodId::SpecializeStructure => {
+            sched.specialized = true;
+        }
+        MethodId::RecomputeCheap => {
+            let c = &mut sched.cfg[dg];
+            if c.unroll > 1 {
+                c.unroll = 2;
+            }
+        }
+        MethodId::SplitK => {
+            // Targeted: only the focus group's GEMM gets split.
+            if group_eligible(MethodId::SplitK, graph, sched, dg).is_ok() {
+                sched.cfg[dg].split_k = 4;
+            } else if let Some(g) = (0..sched.num_kernels())
+                .find(|&g| group_eligible(MethodId::SplitK, graph, sched, g).is_ok())
+            {
+                sched.cfg[g].split_k = 4;
+            }
+        }
+        // ---- per-group knobs: rewrite every eligible group ----
+        _ => {
+            for g in 0..sched.num_kernels() {
+                if group_eligible(method, graph, sched, g).is_err() {
+                    continue;
+                }
+                apply_knob(method, graph, sched, g);
+            }
+        }
+    }
+}
+
+/// Apply one knob method to one eligible group.
+fn apply_knob(method: MethodId, graph: &KernelGraph, sched: &mut Schedule, g: usize) {
+    match method {
+        MethodId::TileSmem => {
+            let (m, n) = {
+                let op = group_biggest(graph, sched, g);
+                (op.m, op.n)
+            };
+            let (tm, tn) = gemm_tiles(m, n);
+            let c = &mut sched.cfg[g];
+            c.tile_m = tm;
+            c.tile_n = tn;
+            c.tile_k = 32;
+            c.staging = true;
+            c.layout = Layout::Coalesced;
+        }
+        MethodId::UseTensorCore => {
+            let c = &mut sched.cfg[g];
+            c.mxu = true;
+            if matches!(c.precision, Precision::F32) {
+                c.precision = Precision::Tf32;
+            }
+        }
+        MethodId::VectorizeLoads => sched.cfg[g].vector_width = 4,
+        MethodId::TiledLayout => sched.cfg[g].layout = Layout::Tiled,
+        MethodId::DoubleBuffer => sched.cfg[g].double_buffer = true,
+        MethodId::UnrollInner => sched.cfg[g].unroll = 4,
+        MethodId::PadScratch => sched.cfg[g].smem_padding = true,
+        MethodId::IncreaseOccupancy => {
+            let c = &mut sched.cfg[g];
+            c.tile_m = (c.tile_m / 2).max(16);
+            c.tile_n = (c.tile_n / 2).max(16);
+            if c.unroll > 2 {
+                c.unroll = 2;
+            }
+        }
+        MethodId::PrecisionDowncast => sched.cfg[g].precision = Precision::Tf32,
+        MethodId::LaunchTune => {
+            let c = &mut sched.cfg[g];
+            c.block_threads = if c.block_threads >= 256 { 128 } else { 256 };
+        }
+        MethodId::WarpReduceShuffle => {
+            let c = &mut sched.cfg[g];
+            c.vector_width = 4;
+            c.unroll = 4;
+            if matches!(c.layout, Layout::Strided) {
+                c.layout = Layout::Coalesced;
+            }
+        }
+        MethodId::AsyncPrefetch => {
+            let c = &mut sched.cfg[g];
+            c.staging = true;
+            c.double_buffer = true;
+        }
+        MethodId::CacheBlocking => {
+            let (m, n) = {
+                let op = group_biggest(graph, sched, g);
+                (op.m, op.n)
+            };
+            let c = &mut sched.cfg[g];
+            c.tile_m = pick_tile(m, 64);
+            c.tile_n = pick_tile(n, 256);
+        }
+        _ => unreachable!("not a knob method: {method:?}"),
+    }
+}
+
+/// Parallelism-aware GEMM tile choice (what a library autotuner does):
+/// prefer 128x128 tiles, shrink until the grid has enough blocks to fill
+/// the device (~128 blocks), floor at 32.
+pub fn gemm_tiles(m: u64, n: u64) -> (u64, u64) {
+    let mut tm = pick_tile(m, 128);
+    let mut tn = pick_tile(n, 128);
+    let blocks = |tm: u64, tn: u64| {
+        ((m + tm - 1) / tm) * ((n + tn - 1) / tn)
+    };
+    while blocks(tm, tn) < 128 && (tm > 32 || tn > 32) {
+        if tm >= tn && tm > 32 {
+            tm /= 2;
+        } else if tn > 32 {
+            tn /= 2;
+        } else {
+            break;
+        }
+    }
+    (tm.max(16), tn.max(16))
+}
+
+
+/// Companion knobs a *competent implementation* of a method includes "for
+/// free" (the llm_assist cues: a well-written tiled GEMM arrives vectorized
+/// and padded, a tensor-core rewrite unrolls its fragment loop, ...). The
+/// Optimizer applies these alongside the primary method — which is what
+/// makes per-round gains chunky enough to clear the rt/at promotion
+/// thresholds, as in the paper's whole-kernel rewrites.
+pub fn companions(method: MethodId) -> &'static [MethodId] {
+    match method {
+        MethodId::TileSmem => &[MethodId::VectorizeLoads, MethodId::PadScratch],
+        MethodId::UseTensorCore => &[MethodId::UnrollInner],
+        MethodId::CoalesceAccesses => &[MethodId::VectorizeLoads],
+        MethodId::FuseEpilogueReduction => &[MethodId::WarpReduceShuffle],
+        MethodId::AsyncPrefetch => &[MethodId::VectorizeLoads],
+        MethodId::CacheBlocking => &[MethodId::VectorizeLoads],
+        _ => &[],
+    }
+}
+
+/// Tile size for a dimension: the preferred tile, shrunk only when the
+/// whole dimension is smaller. Ragged tails are handled by predicated
+/// ceil-div grids (as real libraries do), so the tile need not divide dim.
+fn pick_tile(dim: u64, pref: u64) -> u64 {
+    if dim >= pref {
+        pref
+    } else {
+        // Round the (small) dimension up to an 8-aligned tile.
+        ((dim + 7) / 8 * 8).max(8)
+    }
+}
+
+/// Reference naive-to-library distance: how many of the headline GEMM knobs
+/// are still unset (used in tests and trace summaries).
+pub fn gemm_knobs_remaining(cfg: &GroupSchedule) -> u32 {
+    let mut n = 0;
+    if !cfg.staging || cfg.tile_k == 0 {
+        n += 1;
+    }
+    if !cfg.mxu {
+        n += 1;
+    }
+    if cfg.vector_width < 4 {
+        n += 1;
+    }
+    if !cfg.double_buffer {
+        n += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::op::{EwKind, RedKind};
+
+    fn epilogue() -> (KernelGraph, Schedule) {
+        let mut g = KernelGraph::new();
+        let mm = g.push(OpKind::MatMul, 256, 512, 512, vec![]);
+        let sc = g.push(OpKind::Elementwise(EwKind::Scale), 256, 512, 1, vec![mm]);
+        let cl = g.push(OpKind::Elementwise(EwKind::Clamp), 256, 512, 1, vec![sc]);
+        let rd = g.push(OpKind::Reduction(RedKind::Row), 256, 512, 1, vec![cl]);
+        let _ = g.push(OpKind::Elementwise(EwKind::Mish), 256, 1, 1, vec![rd]);
+        let s = Schedule::per_op_naive(&g);
+        (g, s)
+    }
+
+    #[test]
+    fn tile_smem_applies_once() {
+        let (g, mut s) = epilogue();
+        assert!(applicable(MethodId::TileSmem, &g, &s).is_ok());
+        apply(MethodId::TileSmem, &g, &mut s);
+        assert!(s.cfg[0].staging);
+        assert!(s.cfg[0].tile_k > 0);
+        assert!(applicable(MethodId::TileSmem, &g, &s).is_err());
+        assert!(s.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn tensor_core_gated_on_staging() {
+        let (g, mut s) = epilogue();
+        assert!(applicable(MethodId::UseTensorCore, &g, &s).is_err());
+        apply(MethodId::TileSmem, &g, &mut s);
+        assert!(applicable(MethodId::UseTensorCore, &g, &s).is_ok());
+        apply(MethodId::UseTensorCore, &g, &mut s);
+        assert!(s.cfg[0].mxu);
+        assert_eq!(s.cfg[0].precision, Precision::Tf32);
+    }
+
+    #[test]
+    fn fuse_elementwise_is_exhaustive() {
+        let (g, mut s) = epilogue();
+        assert!(applicable(MethodId::FuseElementwise, &g, &s).is_ok());
+        apply(MethodId::FuseElementwise, &g, &mut s);
+        // Every elementwise consumer is inlined into its producer kernel
+        // (whole-program rewrite): only the reduction boundary remains.
+        assert!(s.num_kernels() <= 2, "{}", s.num_kernels());
+        assert!(s.validate(&g).is_ok());
+        assert!(applicable(MethodId::FuseElementwise, &g, &s).is_err());
+    }
+
+    #[test]
+    fn epilogue_fusion_is_coupled() {
+        let (g, mut s) = epilogue();
+        apply(MethodId::FuseEpilogueReduction, &g, &mut s);
+        assert!(s.num_kernels() < 4, "coupled fusion merges several groups");
+        assert!(s.validate(&g).is_ok());
+    }
+
+    #[test]
+    fn every_method_applied_keeps_schedule_valid() {
+        // Drive each method through an applicability-respecting apply.
+        for &m in ALL_METHODS.iter() {
+            let (g, mut s) = epilogue();
+            // Make preconditions reachable for staged-only methods.
+            apply(MethodId::TileSmem, &g, &mut s);
+            if applicable(m, &g, &s).is_ok() {
+                apply(m, &g, &mut s);
+                assert!(s.validate(&g).is_ok(), "{m:?} broke the schedule");
+            }
+        }
+    }
+
+    #[test]
+    fn vectorize_blocked_by_strided_layout() {
+        let (g, s) = epilogue();
+        assert!(matches!(s.cfg[0].layout, Layout::Strided));
+        assert_eq!(
+            applicable(MethodId::VectorizeLoads, &g, &s),
+            Err("strided access cannot vectorize")
+        );
+    }
+
+    #[test]
+    fn pick_tile_prefers_full_tiles() {
+        assert_eq!(pick_tile(512, 128), 128);
+        assert_eq!(pick_tile(1464, 128), 128); // ragged dims keep full tiles
+        assert_eq!(pick_tile(96, 128), 96); // small dims shrink the tile
+        assert_eq!(pick_tile(5, 128), 8); // floor at 8
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for &m in ALL_METHODS.iter() {
+            assert_eq!(MethodId::from_name(m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn complexity_classes_cover_all() {
+        let lows = ALL_METHODS.iter().filter(|m| m.complexity() == Complexity::Low).count();
+        let highs = ALL_METHODS.iter().filter(|m| m.complexity() == Complexity::High).count();
+        assert!(lows >= 3 && highs >= 3);
+    }
+}

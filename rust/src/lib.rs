@@ -1,0 +1,20 @@
+//! KernelSkill — a memory-augmented multi-agent framework for GPU kernel
+//! optimization, reproduced as a three-layer Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) implements the paper's contribution: the multi-agent
+//! closed loop (Algorithm 1), the dual-level memory (long-term expert
+//! knowledge + short-term trajectory state), six baselines, the
+//! KernelBenchSim task suite, and the experiment harness. Layers 1/2 (Pallas
+//! kernels + JAX models under `python/`) are AOT-compiled to HLO text and
+//! executed through `runtime` via PJRT — Python never runs at request time.
+
+pub mod agents;
+pub mod baselines;
+pub mod bench_suite;
+pub mod coordinator;
+pub mod device;
+pub mod harness;
+pub mod kir;
+pub mod memory;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,192 @@
+//! KernelSkill CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands map onto the experiment index in DESIGN.md:
+//!   table1 | table2 | table3 | per-round | trajectory   (paper artifacts)
+//!   verify-artifacts | calibrate                        (real PJRT path)
+//!   run-task --task <id> [--strategy <name>]            (single-task trace)
+//!   suite --strategy <name> [--level N]                 (one-strategy suite)
+
+use kernelskill::baselines;
+use kernelskill::bench_suite;
+use kernelskill::coordinator::{self, Branch, LoopConfig};
+use kernelskill::harness::{calibrate, experiments};
+use kernelskill::runtime::{self, Registry, Runtime};
+use kernelskill::util::cli::Args;
+use kernelskill::util::logging::{self, Level};
+
+fn strategy_by_name(name: &str) -> Option<kernelskill::baselines::Strategy> {
+    let all = baselines::table1_roster()
+        .into_iter()
+        .chain(baselines::table2_roster());
+    all.into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
+    let mut cfg = experiments::ExpConfig::default();
+    cfg.suite_seed = args.get_u64("suite-seed", cfg.suite_seed)?;
+    let n_seeds = args.get_usize("seeds", 1)?;
+    cfg.run_seeds = (0..n_seeds as u64).collect();
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    Ok(cfg)
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::from_env()?;
+    if args.has("verbose") {
+        logging::set_level(Level::Debug);
+    }
+    match args.subcommand.as_deref() {
+        Some("table1") => {
+            let cfg = exp_config(&args)?;
+            let (rendered, _) = experiments::table1(&cfg);
+            println!("Table 1 — Success and Speedup vs Torch Eager\n{rendered}");
+        }
+        Some("table2") => {
+            let cfg = exp_config(&args)?;
+            let (rendered, _) = experiments::table2(&cfg);
+            println!("Table 2 — Memory ablations\n{rendered}");
+        }
+        Some("table3") => {
+            let cfg = exp_config(&args)?;
+            let (rendered, _) = experiments::table3(&cfg);
+            println!("Table 3 — Fast_1\n{rendered}");
+        }
+        Some("per-round") => {
+            let cfg = exp_config(&args)?;
+            let (rendered, _) = experiments::per_round_efficiency(&cfg);
+            println!("Per-round refinement efficiency (§5.4)\n{rendered}");
+        }
+        Some("trajectory") => {
+            let cfg = exp_config(&args)?;
+            println!("{}", experiments::trajectory_figures(&cfg));
+        }
+        Some("verify-artifacts") => {
+            let seed = args.get_u64("seed", 7)?;
+            let tol = args.get_f64("tolerance", 1e-3)?;
+            let reg = Registry::load("artifacts").map_err(|e| e.to_string())?;
+            let mut rt = Runtime::new("artifacts").map_err(|e| e.to_string())?;
+            println!("platform = {}", rt.platform());
+            let reports =
+                runtime::verify_all(&mut rt, &reg, seed, tol).map_err(|e| e.to_string())?;
+            let mut failed = 0;
+            for r in &reports {
+                println!(
+                    "{:<20} {:<14} max_abs_err={:<10.2e} {}",
+                    r.task,
+                    r.variant,
+                    r.max_abs_err,
+                    if r.passed { "ok" } else { "FAIL" }
+                );
+                if !r.passed {
+                    failed += 1;
+                }
+            }
+            if failed > 0 {
+                return Err(format!("{failed} variants failed verification"));
+            }
+            println!("all {} variants verified", reports.len());
+        }
+        Some("calibrate") => {
+            let seed = args.get_u64("seed", 7)?;
+            let rows = calibrate::calibrate(seed).map_err(|e| e.to_string())?;
+            println!("{}", calibrate::render(&rows));
+        }
+        Some("run-task") => {
+            let task_id = args.get("task").ok_or("--task <id> required")?;
+            let strat_name = args.get_or("strategy", "KernelSkill");
+            let strategy =
+                strategy_by_name(strat_name).ok_or_else(|| format!("unknown strategy {strat_name}"))?;
+            let suite_seed = args.get_u64("suite-seed", 42)?;
+            let tasks = bench_suite::full_suite(suite_seed);
+            let task = tasks
+                .iter()
+                .find(|t| t.id.contains(task_id))
+                .ok_or_else(|| format!("no task matching {task_id}"))?;
+            let mut cfg = LoopConfig::default();
+            cfg.run_seed = args.get_u64("seed", 0)?;
+            let r = coordinator::run_task(task, &strategy, &cfg);
+            println!(
+                "{} [{}]: success={} best={:.3}x seed={:?} promotions={} repairs={}",
+                r.task_id, r.strategy, r.success, r.best_speedup, r.seed_speedup, r.promotions, r.repair_attempts
+            );
+            for rec in &r.rounds {
+                let what = match &rec.branch {
+                    Branch::Optimize(m) => format!("optimize[{}]", m.name()),
+                    Branch::Repair(f) => format!("repair[{f}]"),
+                    Branch::Revert => "revert".into(),
+                    Branch::Converged => "converged".into(),
+                };
+                println!(
+                    "  round {:>2}: {:<30} ok={} speedup={:?}",
+                    rec.round,
+                    what,
+                    rec.compiled && rec.correct,
+                    rec.speedup
+                );
+            }
+        }
+        Some("suite") => {
+            let strat_name = args.get_or("strategy", "KernelSkill");
+            let strategy =
+                strategy_by_name(strat_name).ok_or_else(|| format!("unknown strategy {strat_name}"))?;
+            let cfg = exp_config(&args)?;
+            let level = args.get_usize("level", 0)?;
+            let tasks = if level == 0 {
+                bench_suite::full_suite(cfg.suite_seed)
+            } else {
+                bench_suite::level_suite(cfg.suite_seed, level as u8)
+            };
+            let suite = coordinator::run_suite(
+                &tasks,
+                &strategy,
+                &LoopConfig::default(),
+                &cfg.run_seeds,
+                cfg.workers,
+            );
+            let split = kernelskill::harness::metrics::by_level(&suite.results);
+            for (i, lv) in split.iter().enumerate() {
+                if lv.is_empty() {
+                    continue;
+                }
+                let c = kernelskill::harness::metrics::cell(lv, strategy.rounds);
+                println!(
+                    "L{}: n={} success={:.2} speedup={:.2} fast1={:.2} rounds={:.1}",
+                    i + 1,
+                    c.n,
+                    c.success,
+                    c.speedup,
+                    c.fast1,
+                    c.mean_rounds
+                );
+            }
+        }
+        _ => {
+            println!(
+                "kernelskill — memory-augmented multi-agent kernel optimization (paper reproduction)\n\
+                 \n\
+                 usage: kernelskill <cmd> [flags]\n\
+                 \n\
+                 experiments:\n\
+                 \x20 table1 | table2 | table3 | per-round | trajectory\n\
+                 \x20     [--seeds N] [--suite-seed S] [--workers W]\n\
+                 real PJRT path:\n\
+                 \x20 verify-artifacts [--seed S] [--tolerance T]\n\
+                 \x20 calibrate [--seed S]\n\
+                 single runs:\n\
+                 \x20 run-task --task <substr> [--strategy <name>] [--seed S]\n\
+                 \x20 suite --strategy <name> [--level 1|2|3]\n\
+                 \n\
+                 strategies: KernelSkill, STARK, CudaForge, Astra, PRAGMA, QiMeng,\n\
+                 \x20          Kevin-32B, 'w/o memory', 'w/o Short_term memory', 'w/o Long_term memory'"
+            );
+        }
+    }
+    Ok(())
+}

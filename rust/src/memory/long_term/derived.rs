@@ -1,0 +1,135 @@
+//! `derived_fields` (Appendix-B field 4): deterministic composite indicators
+//! computed from normalized metrics + run/code features, and
+//! `headroom_tiers` (field 5): discretized optimization headroom.
+
+use super::schema::{Evidence, Tier};
+
+/// Step 3 of the decision workflow: extend evidence with derived fields.
+pub fn compute_derived(ev: &mut Evidence) {
+    let g = |ev: &Evidence, f: &str| ev.get(f).copied().unwrap_or(0.0);
+
+    // How far the hot kernel sits from *any* peak: the headroom proxy.
+    let peak = g(ev, "dram_pct")
+        .max(g(ev, "sm_pct"))
+        .max(g(ev, "tensor_pipe_pct"));
+    ev.insert("drv.peak_pct", peak);
+    // Amdahl view: peak utilization only bounds the hot kernel's share of
+    // the task; the rest of the runtime (other kernels, launches) is
+    // headroom regardless of how saturated the hot kernel is.
+    let hot_frac = ev
+        .get("run.hot_kernel_time_fraction")
+        .copied()
+        .unwrap_or(1.0)
+        .clamp(0.0, 1.0);
+    let headroom = 100.0 - hot_frac * peak;
+    ev.insert("drv.headroom_pct", headroom.max(0.0));
+
+    // Memory-vs-compute skew: positive = memory side dominates.
+    ev.insert(
+        "drv.memory_over_compute",
+        g(ev, "dram_pct") - g(ev, "sm_pct"),
+    );
+
+    // Matrix-unit opportunity: compute-heavy kernel with an idle tensor pipe.
+    let mxu_opp = if g(ev, "task.has_gemm") > 0.5 && g(ev, "tensor_pipe_pct") < 10.0 {
+        1.0
+    } else {
+        0.0
+    };
+    ev.insert("drv.mxu_opportunity", mxu_opp);
+
+    // High L2 hit rate on a GEMM = operands are being re-streamed (poor
+    // blocking), not a win: the naive-loop fingerprint.
+    let restream = if g(ev, "task.has_gemm") > 0.5 && g(ev, "l2_hit_pct") > 70.0 {
+        1.0
+    } else {
+        0.0
+    };
+    ev.insert("drv.gemm_restreaming", restream);
+
+    ev.insert(
+        "drv.coalescing_deficit",
+        (100.0 - g(ev, "coalescing_pct")).max(0.0),
+    );
+    ev.insert(
+        "drv.occupancy_deficit",
+        (100.0 - g(ev, "occupancy_pct")).max(0.0),
+    );
+    ev.insert(
+        "drv.launch_bound_pct",
+        g(ev, "run.launch_overhead_fraction") * 100.0,
+    );
+
+    // Are there more kernels than the graph structurally needs? (fusion debt)
+    let launches = g(ev, "run.kernel_launch_count");
+    ev.insert(
+        "drv.fusion_debt",
+        (launches - 1.0).max(0.0).min(20.0) + g(ev, "feat.fusion_opportunities"),
+    );
+}
+
+/// Step 4: discretize headroom.
+pub fn headroom_tier(ev: &Evidence) -> Tier {
+    let h = ev.get("drv.headroom_pct").copied().unwrap_or(100.0);
+    if h > 55.0 {
+        Tier::High
+    } else if h > 22.0 {
+        Tier::Medium
+    } else {
+        Tier::Low
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(pairs: &[(&'static str, f64)]) -> Evidence {
+        pairs.iter().copied().collect()
+    }
+
+    #[test]
+    fn headroom_from_peak() {
+        let mut e = ev(&[("dram_pct", 30.0), ("sm_pct", 10.0)]);
+        compute_derived(&mut e);
+        assert_eq!(e.get("drv.peak_pct"), Some(&30.0));
+        assert_eq!(e.get("drv.headroom_pct"), Some(&70.0));
+        assert_eq!(headroom_tier(&e), Tier::High);
+    }
+
+    #[test]
+    fn tiers_partition() {
+        for (peak, tier) in [(10.0, Tier::High), (60.0, Tier::Medium), (90.0, Tier::Low)] {
+            let mut e = ev(&[("sm_pct", peak)]);
+            compute_derived(&mut e);
+            assert_eq!(headroom_tier(&e), tier, "peak={peak}");
+        }
+    }
+
+    #[test]
+    fn mxu_opportunity_needs_gemm() {
+        let mut e = ev(&[("task.has_gemm", 1.0), ("tensor_pipe_pct", 0.0)]);
+        compute_derived(&mut e);
+        assert_eq!(e.get("drv.mxu_opportunity"), Some(&1.0));
+        let mut e2 = ev(&[("task.has_gemm", 0.0), ("tensor_pipe_pct", 0.0)]);
+        compute_derived(&mut e2);
+        assert_eq!(e2.get("drv.mxu_opportunity"), Some(&0.0));
+    }
+
+    #[test]
+    fn restreaming_fingerprint() {
+        let mut e = ev(&[("task.has_gemm", 1.0), ("l2_hit_pct", 90.0)]);
+        compute_derived(&mut e);
+        assert_eq!(e.get("drv.gemm_restreaming"), Some(&1.0));
+    }
+
+    #[test]
+    fn fusion_debt_counts_launches_and_edges() {
+        let mut e = ev(&[
+            ("run.kernel_launch_count", 5.0),
+            ("feat.fusion_opportunities", 3.0),
+        ]);
+        compute_derived(&mut e);
+        assert_eq!(e.get("drv.fusion_debt"), Some(&7.0));
+    }
+}

@@ -1,0 +1,675 @@
+//! The curated long-term knowledge base: predicate library, decision table,
+//! global veto rules, and the `llm_assist` method-knowledge store.
+//!
+//! Content is distilled from the GPU-optimization survey taxonomy the paper
+//! cites (Hijma et al., CSUR 2023) following the paper's three-step curation:
+//! scenario abstraction -> evidence formalization -> rule materialization.
+//! Every entry is data, not code: auditable, printable, and extensible.
+
+use once_cell::sync::Lazy;
+
+use super::schema::{
+    Bottleneck, DecisionCase, ForbiddenRule, Gain, MethodKnowledge, NamedPred, Pred, Tier,
+};
+use crate::kir::transforms::MethodId;
+
+// ------------------------------------------------------------------------
+// ncu_predicates — the reusable Boolean predicate library (field 7).
+// ------------------------------------------------------------------------
+
+pub static PREDICATES: Lazy<Vec<NamedPred>> = Lazy::new(|| {
+    vec![
+        NamedPred {
+            name: "dram_saturated",
+            pred: Pred::Gt("dram_pct", 55.0),
+        },
+        NamedPred {
+            name: "compute_saturated",
+            pred: Pred::Gt("sm_pct", 55.0),
+        },
+        NamedPred {
+            name: "tensor_idle",
+            pred: Pred::Lt("tensor_pipe_pct", 10.0),
+        },
+        NamedPred {
+            name: "tensor_busy",
+            pred: Pred::Gt("tensor_pipe_pct", 40.0),
+        },
+        NamedPred {
+            name: "memory_stalls",
+            pred: Pred::Gt("stall_memory_pct", 25.0),
+        },
+        NamedPred {
+            name: "bank_conflicts",
+            pred: Pred::Gt("stall_bank_conflict_pct", 8.0),
+        },
+        NamedPred {
+            name: "low_occupancy",
+            pred: Pred::Lt("occupancy_pct", 40.0),
+        },
+        NamedPred {
+            name: "poor_coalescing",
+            pred: Pred::Gt("drv.coalescing_deficit", 40.0),
+        },
+        NamedPred {
+            name: "gemm_restreaming",
+            pred: Pred::Is("drv.gemm_restreaming"),
+        },
+        NamedPred {
+            name: "mxu_opportunity",
+            pred: Pred::Is("drv.mxu_opportunity"),
+        },
+        NamedPred {
+            name: "launch_heavy",
+            pred: Pred::Gt("drv.launch_bound_pct", 18.0),
+        },
+        NamedPred {
+            name: "fusion_debt",
+            pred: Pred::Gt("drv.fusion_debt", 1.5),
+        },
+        NamedPred {
+            name: "near_roofline",
+            pred: Pred::Gt("drv.peak_pct", 78.0),
+        },
+        NamedPred {
+            name: "memory_dominant",
+            pred: Pred::Gt("drv.memory_over_compute", 15.0),
+        },
+        NamedPred {
+            name: "has_reduction",
+            pred: Pred::Gt("feat.reduction_pattern", 0.5),
+        },
+        NamedPred {
+            name: "divergent",
+            pred: Pred::Is("feat.divergence_risk"),
+        },
+        NamedPred {
+            name: "uses_atomics",
+            pred: Pred::Is("feat.uses_atomics"),
+        },
+        NamedPred {
+            name: "grid_starved",
+            pred: Pred::Gt("feat.occupancy_limiter", 2.5),
+        },
+        NamedPred {
+            name: "l2_friendly",
+            pred: Pred::Lt("l2_hit_pct", 40.0),
+        },
+    ]
+});
+
+pub fn predicate(name: &str) -> Option<&'static NamedPred> {
+    PREDICATES.iter().find(|p| p.name == name)
+}
+
+// ------------------------------------------------------------------------
+// decision_table (field 9) — bottleneck x headroom x code-gates -> methods.
+// ------------------------------------------------------------------------
+
+pub static DECISION_TABLE: Lazy<Vec<DecisionCase>> = Lazy::new(|| {
+    use MethodId::*;
+    vec![
+        // ---- GEMM efficiency (the motivating example's fix, priority 1) --
+        DecisionCase {
+            id: "gemm.structured_operand",
+            bottleneck: Bottleneck::GemmUnderutilized,
+            ncu_signature: vec![],
+            tiers: vec![Tier::High, Tier::Medium, Tier::Low],
+            gate_when: Pred::Is("feat.structured_operand"),
+            allowed_methods: vec![SpecializeStructure],
+            why: "The operand has exploitable structure the reference \
+                  densifies (diagonal/triangular/banded); skipping the dense \
+                  work dwarfs every schedule-level optimization.",
+        },
+        DecisionCase {
+            id: "gemm.naive_loop",
+            bottleneck: Bottleneck::GemmUnderutilized,
+            ncu_signature: vec!["tensor_idle"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::All(vec![
+                Pred::Is("feat.naive_gemm_loop"),
+                Pred::Any(vec![
+                    Pred::Is("drv.gemm_restreaming"),
+                    Pred::Gt("stall_memory_pct", 25.0),
+                    Pred::Gt("drv.memory_over_compute", 15.0),
+                ]),
+            ]),
+            allowed_methods: vec![TileSmem],
+            why: "A GEMM streaming full K-strips per output block is the \
+                  dominant inefficiency; blocking through scratch must land \
+                  before any epilogue work.",
+        },
+        DecisionCase {
+            id: "gemm.no_tensor_core",
+            bottleneck: Bottleneck::GemmUnderutilized,
+            ncu_signature: vec!["tensor_idle", "mxu_opportunity"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::All(vec![
+                Pred::Is("feat.smem_tiling"),
+                Pred::Not("feat.tensor_core"),
+            ]),
+            allowed_methods: vec![UseTensorCore],
+            why: "Staged, blocked GEMM still on the FP32 vector pipe: moving \
+                  math to the matrix unit is the single largest win left.",
+        },
+        DecisionCase {
+            id: "gemm.exposed_pipeline",
+            bottleneck: Bottleneck::GemmUnderutilized,
+            ncu_signature: vec!["memory_stalls"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::All(vec![
+                Pred::Is("feat.smem_tiling"),
+                Pred::Not("feat.double_buffered"),
+            ]),
+            allowed_methods: vec![DoubleBuffer, VectorizeLoads],
+            why: "Copy latency is exposed between tiles; prefetch the next \
+                  tile while computing (cp.async / pipelined BlockSpec grid).",
+        },
+        DecisionCase {
+            id: "gemm.bank_conflicts",
+            bottleneck: Bottleneck::GemmUnderutilized,
+            ncu_signature: vec!["bank_conflicts"],
+            tiers: vec![Tier::High, Tier::Medium, Tier::Low],
+            gate_when: Pred::Is("feat.bank_conflict_risk"),
+            allowed_methods: vec![PadScratch],
+            why: "Staged operands without padding serialize scratch access.",
+        },
+        DecisionCase {
+            id: "gemm.small_m_splitk",
+            bottleneck: Bottleneck::LowOccupancy,
+            ncu_signature: vec!["low_occupancy", "tensor_busy"],
+            tiers: vec![Tier::Medium, Tier::High],
+            gate_when: Pred::All(vec![
+                Pred::Is("task.has_gemm"),
+                Pred::Lt("feat.reduction_pattern", 0.5),
+            ]),
+            allowed_methods: vec![SplitK, IncreaseOccupancy],
+            why: "Few output tiles leave the device idle; split the \
+                  contraction across blocks and combine.",
+        },
+        // ---- Access patterns ---------------------------------------------
+        DecisionCase {
+            id: "access.strided",
+            bottleneck: Bottleneck::PoorAccessPattern,
+            ncu_signature: vec!["poor_coalescing"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::Is("feat.strided_access"),
+            allowed_methods: vec![CoalesceAccesses, TiledLayout],
+            why: "Strided global access wastes most of each memory \
+                  transaction; reorder indexing (or swizzle the staged tile).",
+        },
+        DecisionCase {
+            id: "access.narrow_loads",
+            bottleneck: Bottleneck::PoorAccessPattern,
+            ncu_signature: vec!["memory_dominant"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::All(vec![
+                Pred::Not("feat.vectorized_loads"),
+                Pred::Is("feat.coalesced_access"),
+            ]),
+            allowed_methods: vec![VectorizeLoads],
+            why: "Coalesced but narrow accesses leave bus width unused; issue \
+                  128-bit (lane-aligned) loads.",
+        },
+        // ---- Fusion --------------------------------------------------------
+        DecisionCase {
+            id: "fusion.epilogue_reduction",
+            bottleneck: Bottleneck::FusionOpportunity,
+            ncu_signature: vec!["fusion_debt"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::All(vec![
+                Pred::Gt("feat.reduction_pattern", 0.5),
+                Pred::Gt("feat.fusion_opportunities", 0.5),
+            ]),
+            allowed_methods: vec![FuseEpilogueReduction, FuseElementwise],
+            why: "A row-reduction epilogue and its elementwise tail can ride \
+                  in the producer kernel: one HBM round-trip instead of three.",
+        },
+        DecisionCase {
+            id: "fusion.elementwise_chain",
+            bottleneck: Bottleneck::FusionOpportunity,
+            ncu_signature: vec!["fusion_debt"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::Gt("feat.fusion_opportunities", 0.5),
+            allowed_methods: vec![FuseElementwise],
+            why: "Adjacent elementwise kernels bounce intermediates through \
+                  HBM; inline the consumer into the producer.",
+        },
+        // ---- Reductions ----------------------------------------------------
+        DecisionCase {
+            id: "reduction.scalar_tree",
+            bottleneck: Bottleneck::ReductionInefficiency,
+            ncu_signature: vec!["memory_stalls"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::Gt("feat.reduction_pattern", 0.5),
+            allowed_methods: vec![WarpReduceShuffle, VectorizeLoads],
+            why: "Reduction built through scratch with narrow loads; use lane \
+                  shuffles and wide loads for the tree.",
+        },
+        DecisionCase {
+            id: "access.transpose_movement",
+            bottleneck: Bottleneck::PoorAccessPattern,
+            ncu_signature: vec!["poor_coalescing", "memory_dominant"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::All(vec![
+                Pred::Is("feat.strided_access"),
+                Pred::Not("task.has_gemm"),
+            ]),
+            allowed_methods: vec![CoalesceAccesses, TiledLayout, VectorizeLoads],
+            why: "Pure data-movement kernels (transpose/gather) live or die \
+                  on transaction efficiency; fix the walk order, then stage \
+                  through a swizzled tile for the written side.",
+        },
+        DecisionCase {
+            id: "reduction.divergent_indexing",
+            bottleneck: Bottleneck::ReductionInefficiency,
+            ncu_signature: vec!["divergent"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::Gt("feat.reduction_pattern", 0.5),
+            allowed_methods: vec![VectorizeLoads, CacheBlocking],
+            why: "Data-dependent lanes (argmin/argmax, gathers) cannot use \
+                  plain lane shuffles; wide loads + cache blocking recover \
+                  most of the bandwidth instead.",
+        },
+        DecisionCase {
+            id: "membw.atomic_contention",
+            bottleneck: Bottleneck::MemoryBandwidth,
+            ncu_signature: vec!["uses_atomics", "memory_stalls"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::All(vec![]),
+            allowed_methods: vec![WarpReduceShuffle, CacheBlocking],
+            why: "Cross-block atomics serialize on hot addresses; reduce \
+                  within the block first so each block issues one atomic.",
+        },
+        // ---- Plain memory bandwidth ---------------------------------------
+        DecisionCase {
+            id: "membw.streaming",
+            bottleneck: Bottleneck::MemoryBandwidth,
+            ncu_signature: vec!["dram_saturated", "memory_dominant"],
+            tiers: vec![Tier::Medium, Tier::High],
+            gate_when: Pred::All(vec![
+                Pred::Is("feat.coalesced_access"),
+                Pred::Not("task.has_gemm"),
+            ]),
+            allowed_methods: vec![VectorizeLoads, CacheBlocking, AsyncPrefetch],
+            why: "Streaming kernel already coalesced: widen accesses, block \
+                  for cache, overlap copies.",
+        },
+        // ---- Launch overhead ------------------------------------------------
+        DecisionCase {
+            id: "launch.many_small",
+            bottleneck: Bottleneck::LaunchOverhead,
+            ncu_signature: vec!["launch_heavy"],
+            tiers: vec![Tier::High, Tier::Medium, Tier::Low],
+            gate_when: Pred::Gt("feat.kernel_launches", 3.5),
+            allowed_methods: vec![FuseElementwise, HorizontalFuse],
+            why: "Fixed launch cost dominates many tiny kernels; merge \
+                  producer-consumer pairs first, then batch independents.",
+        },
+        DecisionCase {
+            id: "launch.tiny_single_kernel",
+            bottleneck: Bottleneck::LaunchOverhead,
+            ncu_signature: vec!["launch_heavy"],
+            tiers: vec![Tier::High, Tier::Medium, Tier::Low],
+            gate_when: Pred::Lt("feat.kernel_launches", 3.5),
+            allowed_methods: vec![LaunchTune],
+            why: "A single tiny kernel is launch-bound by definition; only \
+                  geometry tuning is left (batching needs more kernels).",
+        },
+        // ---- Occupancy -------------------------------------------------------
+        DecisionCase {
+            id: "occupancy.resource_bound",
+            bottleneck: Bottleneck::LowOccupancy,
+            ncu_signature: vec!["low_occupancy"],
+            tiers: vec![Tier::Medium, Tier::High],
+            gate_when: Pred::Gt("feat.occupancy_limiter", 0.5),
+            allowed_methods: vec![IncreaseOccupancy, RecomputeCheap, LaunchTune],
+            why: "Blocks are starved by scratch/register appetite; shrink \
+                  tiles or recompute cheap values instead of spilling.",
+        },
+        DecisionCase {
+            id: "occupancy.grid_starved",
+            bottleneck: Bottleneck::LowOccupancy,
+            ncu_signature: vec!["low_occupancy", "grid_starved"],
+            tiers: vec![Tier::High, Tier::Medium],
+            gate_when: Pred::All(vec![]),
+            allowed_methods: vec![IncreaseOccupancy, SplitK, LaunchTune],
+            why: "The grid itself is too small for the device (few huge \
+                  tiles): shrink tiles or split the contraction for \
+                  parallelism before touching anything else.",
+        },
+        // ---- Near roofline: polish only -------------------------------------
+        DecisionCase {
+            id: "roofline.polish",
+            bottleneck: Bottleneck::NearRoofline,
+            ncu_signature: vec!["near_roofline"],
+            tiers: vec![Tier::Low],
+            gate_when: Pred::All(vec![]),
+            allowed_methods: vec![UnrollInner, LaunchTune, PrecisionDowncast],
+            why: "Within ~20% of a peak: only micro-knobs remain; avoid \
+                  speculative restructuring.",
+        },
+    ]
+});
+
+// ------------------------------------------------------------------------
+// global_forbidden_rules (field 8) — veto constraints.
+// ------------------------------------------------------------------------
+
+pub static FORBIDDEN_RULES: Lazy<Vec<ForbiddenRule>> = Lazy::new(|| {
+    use MethodId::*;
+    vec![
+        ForbiddenRule {
+            id: "strict_no_downcast",
+            when: Pred::Is("task.strict"),
+            veto: vec![PrecisionDowncast],
+            why: "Task verifies under a tight tolerance; narrowing the math \
+                  path risks verification failure.",
+        },
+        ForbiddenRule {
+            id: "mxu_needs_alignment",
+            when: Pred::Not("task.mxu_alignable"),
+            veto: vec![UseTensorCore],
+            why: "Matrix-unit fragments need 8-aligned dims; ragged shapes \
+                  would need padding the task does not allow.",
+        },
+        ForbiddenRule {
+            id: "splitk_vs_reduction",
+            when: Pred::Gt("feat.reduction_pattern", 0.5),
+            veto: vec![SplitK],
+            why: "Split-K partial combine conflicts with a fused reduction \
+                  epilogue (cross-block dataflow).",
+        },
+        ForbiddenRule {
+            id: "no_fusion_under_register_pressure",
+            when: Pred::Gt("feat.register_pressure", 1.5),
+            veto: vec![FuseElementwise, FuseEpilogueReduction],
+            why: "Fusing more work into a register-starved kernel forces \
+                  spills that cost more than the saved traffic.",
+        },
+        ForbiddenRule {
+            id: "scratch_budget_guard",
+            when: Pred::Gt("scratch_bytes", 96.0 * 1024.0),
+            veto: vec![DoubleBuffer],
+            why: "Double buffering doubles scratch residency; over ~96KB the \
+                  occupancy loss exceeds the pipelining gain.",
+        },
+        ForbiddenRule {
+            id: "no_fission_single_kernel",
+            when: Pred::Lt("feat.kernel_launches", 1.5),
+            veto: vec![KernelFission],
+            why: "Nothing to split: the task is already one kernel.",
+        },
+    ]
+});
+
+// ------------------------------------------------------------------------
+// llm_assist (field 10) — Method Knowledge store.
+// ------------------------------------------------------------------------
+
+pub static METHOD_KNOWLEDGE: Lazy<Vec<MethodKnowledge>> = Lazy::new(|| {
+    use MethodId::*;
+    vec![
+        MethodKnowledge {
+            method: SpecializeStructure,
+            rationale: "When an operand is diagonal/triangular/banded, the \
+                        dense reference performs O(n) to O(n^2) redundant \
+                        work per output; a structure-aware kernel indexes \
+                        only the nonzero pattern.",
+            cues: "Diagonal B: out[i][j] = A[i][j] * d[j] (one multiply per \
+                   element, no contraction loop). Triangular: bound the K \
+                   loop at the diagonal. Banded: clamp K to the band. \
+                   TPU/Pallas: express as elementwise or short-K BlockSpec.",
+            expected_gain: Gain::Large,
+            risks: "Indexing subtleties (band offsets, unit diagonals) make \
+                    this the most numerics-bug-prone rewrite in the library.",
+        },
+        MethodKnowledge {
+            method: TileSmem,
+            rationale: "Blocking the contraction through scratch converts \
+                        O(N/t) operand re-reads into one cooperative load per \
+                        tile — the canonical fix for a naive GEMM loop.",
+            cues: "CUDA: __shared__ A_tile[tm][tk], B_tile[tk][tn]; loop over \
+                   K in tk steps; __syncthreads() between load/compute. \
+                   TPU/Pallas: BlockSpec((tm, tk), (i,k)) x ((tk, tn), (k,j)) \
+                   with an accumulating out block over the k grid axis.",
+            expected_gain: Gain::Large,
+            risks: "Off-by-one on tail tiles; missing sync (race); scratch \
+                    over-allocation killing occupancy.",
+        },
+        MethodKnowledge {
+            method: UseTensorCore,
+            rationale: "Matrix units deliver ~8x the FP32 vector pipe for \
+                        dense contractions at TF32/BF16.",
+            cues: "CUDA: wmma/mma.sync on 16x16x16 fragments, f32 accumulate. \
+                   TPU/Pallas: jnp.dot(..., preferred_element_type=f32) on \
+                   bf16 tiles — the MXU systolic path.",
+            expected_gain: Gain::Large,
+            risks: "Alignment padding; accuracy drift on strict tasks; \
+                    fragment underfill on small tiles.",
+        },
+        MethodKnowledge {
+            method: VectorizeLoads,
+            rationale: "128-bit loads quadruple bytes-per-transaction on \
+                        coalesced streams.",
+            cues: "CUDA: float4 / ld.global.v4 with 16B-aligned pointers. \
+                   TPU: keep the last dim a multiple of the 128-lane register.",
+            expected_gain: Gain::Medium,
+            risks: "Misaligned base pointers fault; tail elements need a \
+                    scalar epilogue.",
+        },
+        MethodKnowledge {
+            method: CoalesceAccesses,
+            rationale: "Threads in a warp touching contiguous addresses turn \
+                        32 transactions into one.",
+            cues: "Swap the index roles so threadIdx.x walks the contiguous \
+                   dim; or transpose via a staged tile.",
+            expected_gain: Gain::Large,
+            risks: "Easy to silently change the output layout.",
+        },
+        MethodKnowledge {
+            method: TiledLayout,
+            rationale: "Swizzled scratch layouts keep both the load and the \
+                        compute phases conflict-free.",
+            cues: "XOR-swizzle the scratch column index; Pallas: let the \
+                   compiler pick via BlockSpec, avoid manual transposes.",
+            expected_gain: Gain::Small,
+            risks: "Index arithmetic bugs dominate this edit.",
+        },
+        MethodKnowledge {
+            method: FuseElementwise,
+            rationale: "An elementwise consumer re-reads its producer's whole \
+                        output; inlining it is free compute on in-flight data.",
+            cues: "Apply the epilogue op to the accumulator before the store; \
+                   preserve the original store layout.",
+            expected_gain: Gain::Medium,
+            risks: "Fusing into a register-starved kernel causes spills.",
+        },
+        MethodKnowledge {
+            method: FuseEpilogueReduction,
+            rationale: "Row reductions over a producer's output can ride the \
+                        producer's tiles: keep running max/sum per row strip.",
+            cues: "CUDA: block-level partial reduction + one cross-block pass. \
+                   Pallas: row-blocked kernel, jnp.max/sum over the strip \
+                   (logsumexp: track (m, sum_exp) pairs).",
+            expected_gain: Gain::Large,
+            risks: "Numerically unstable if the running-max rewrite is \
+                    skipped; this is a coupled multi-step edit.",
+        },
+        MethodKnowledge {
+            method: HorizontalFuse,
+            rationale: "Independent small kernels can share one launch to \
+                        amortize fixed cost.",
+            cues: "Batch same-shape elementwise ops into one grid with a \
+                   block-id switch; or CUDA Graphs for the launch sequence.",
+            expected_gain: Gain::Medium,
+            risks: "Divergence between batched bodies erodes the win.",
+        },
+        MethodKnowledge {
+            method: DoubleBuffer,
+            rationale: "Prefetching tile k+1 while computing tile k hides copy \
+                        latency behind math.",
+            cues: "CUDA: cp.async into the alternate buffer + commit/wait. \
+                   Pallas: the grid pipeline does this when in/out specs \
+                   differ in the k axis; keep two live buffers in VMEM.",
+            expected_gain: Gain::Medium,
+            risks: "Doubles scratch footprint; wrong wait-stage deadlocks or \
+                    races.",
+        },
+        MethodKnowledge {
+            method: UnrollInner,
+            rationale: "Unrolling exposes independent FMAs to the scheduler \
+                        and trims loop overhead.",
+            cues: "#pragma unroll 4 on the K-fragment loop; keep an eye on \
+                   register count.",
+            expected_gain: Gain::Small,
+            risks: "Register pressure; icache misses on huge bodies.",
+        },
+        MethodKnowledge {
+            method: PadScratch,
+            rationale: "A +1 column pad de-conflicts power-of-two row strides \
+                        across scratch banks.",
+            cues: "__shared__ float tile[TM][TK+1]; TPU: pad the minor dim \
+                   off the 128-lane boundary.",
+            expected_gain: Gain::Small,
+            risks: "Footprint creep past the scratch budget.",
+        },
+        MethodKnowledge {
+            method: IncreaseOccupancy,
+            rationale: "More resident blocks hide latency when a kernel is \
+                        neither bandwidth- nor compute-saturated.",
+            cues: "Halve the tile, cap registers (__launch_bounds__), retune \
+                   block size.",
+            expected_gain: Gain::Medium,
+            risks: "Smaller tiles reduce reuse — can backfire on GEMMs.",
+        },
+        MethodKnowledge {
+            method: SplitK,
+            rationale: "Small-output GEMMs under-fill the device; splitting K \
+                        multiplies available parallelism.",
+            cues: "Partial accumulators per K-slice + a second combine kernel \
+                   (or atomics at low split factors).",
+            expected_gain: Gain::Medium,
+            risks: "Combine-pass traffic; floating-point non-determinism; \
+                    illegal with a fused reduction epilogue.",
+        },
+        MethodKnowledge {
+            method: PrecisionDowncast,
+            rationale: "TF32/BF16 inputs double-to-octuple math throughput \
+                        while keeping f32 accumulation.",
+            cues: "cublasSetMathMode / explicit __nv_bfloat16 casts; Pallas: \
+                   operands .astype(bf16), accumulate f32.",
+            expected_gain: Gain::Medium,
+            risks: "Verification failure on strict-tolerance tasks.",
+        },
+        MethodKnowledge {
+            method: LaunchTune,
+            rationale: "Block geometry interacts with occupancy and tail \
+                        effects; a sweep is cheap.",
+            cues: "Try 128/256/512 threads; prefer multiples of the wave size.",
+            expected_gain: Gain::Small,
+            risks: "Mostly none; occasionally perturbs a tuned balance.",
+        },
+        MethodKnowledge {
+            method: KernelFission,
+            rationale: "Over-fused kernels can exceed resource budgets; \
+                        splitting restores occupancy.",
+            cues: "Move the tail op into its own kernel; re-check traffic.",
+            expected_gain: Gain::Small,
+            risks: "Reintroduces intermediate traffic.",
+        },
+        MethodKnowledge {
+            method: RecomputeCheap,
+            rationale: "Recomputing cheap values beats spilling registers to \
+                        local memory.",
+            cues: "Drop cached indices/masks that are one ALU op to rebuild.",
+            expected_gain: Gain::Small,
+            risks: "Recomputing expensive expressions backfires.",
+        },
+        MethodKnowledge {
+            method: WarpReduceShuffle,
+            rationale: "Lane shuffles reduce within a warp registers-only; \
+                        scratch is touched once per warp, not per element.",
+            cues: "CUDA: __shfl_down_sync tree then one scratch slot per \
+                   warp. TPU/Pallas: keep the reduction in the 8x128 register \
+                   tile; jnp.max/sum over the minor axis.",
+            expected_gain: Gain::Medium,
+            risks: "Width/mask bugs produce silently wrong sums.",
+        },
+        MethodKnowledge {
+            method: AsyncPrefetch,
+            rationale: "Memory-bound streaming kernels can overlap the next \
+                        block's loads with this block's math.",
+            cues: "cp.async / software pipelining; Pallas: stage through VMEM \
+                   with a lookahead block index.",
+            expected_gain: Gain::Medium,
+            risks: "Scratch footprint; stale-buffer bugs.",
+        },
+        MethodKnowledge {
+            method: CacheBlocking,
+            rationale: "Blocking a large streaming op for L2 keeps its reuse \
+                        window resident.",
+            cues: "Process the tensor in L2-sized row panels.",
+            expected_gain: Gain::Small,
+            risks: "Wrong block size just adds loop overhead.",
+        },
+    ]
+});
+
+pub fn knowledge_for(method: MethodId) -> Option<&'static MethodKnowledge> {
+    METHOD_KNOWLEDGE.iter().find(|k| k.method == method)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::transforms::ALL_METHODS;
+
+    #[test]
+    fn every_method_has_knowledge() {
+        for m in ALL_METHODS {
+            assert!(knowledge_for(m).is_some(), "{m:?} missing llm_assist entry");
+        }
+    }
+
+    #[test]
+    fn every_case_signature_resolves() {
+        for case in DECISION_TABLE.iter() {
+            for sig in &case.ncu_signature {
+                assert!(
+                    predicate(sig).is_some(),
+                    "case {} references unknown predicate {sig}",
+                    case.id
+                );
+            }
+            assert!(!case.allowed_methods.is_empty() || case.id == "roofline.stop");
+        }
+    }
+
+    #[test]
+    fn case_ids_unique() {
+        let mut ids: Vec<&str> = DECISION_TABLE.iter().map(|c| c.id).collect();
+        ids.sort();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn every_bottleneck_has_a_case() {
+        use super::super::schema::BOTTLENECK_PRIORITY;
+        for b in BOTTLENECK_PRIORITY {
+            assert!(
+                DECISION_TABLE.iter().any(|c| c.bottleneck == b),
+                "no case for {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn veto_rules_reference_real_methods() {
+        for r in FORBIDDEN_RULES.iter() {
+            assert!(!r.veto.is_empty(), "{}", r.id);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Long-term memory: the externalized expert-knowledge store (§4.2.1) —
+//! a Deterministic Decision Policy (normalize -> derive -> tier -> match ->
+//! veto) plus the Method Knowledge (`llm_assist`) store.
+
+pub mod derived;
+pub mod kb_content;
+pub mod normalize;
+pub mod retrieval;
+pub mod schema;

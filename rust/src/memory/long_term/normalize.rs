@@ -1,0 +1,188 @@
+//! `field_mapping` (Appendix-B field 1) + `run_features_schema` (field 2):
+//! map raw, tool-version-specific NCU/NSYS keys onto standardized evidence
+//! fields so downstream decisions are robust to tool renames.
+
+use super::schema::Evidence;
+use crate::device::metrics::RawProfile;
+use crate::kir::features::{CodeFeatures, OccupancyLimiter, ReductionPattern};
+
+/// Alias table: standardized field <- any of the raw keys (first hit wins).
+/// Covers both the 2023 and 2024 Nsight Compute naming eras emitted by
+/// `device::metrics`.
+pub const FIELD_MAPPING: &[(&str, &[&str])] = &[
+    (
+        "dram_pct",
+        &[
+            "dram__throughput.avg.pct_of_peak_sustained_elapsed",
+            "gpu__dram_throughput.avg.pct_of_peak_sustained_elapsed",
+        ],
+    ),
+    (
+        "sm_pct",
+        &[
+            "sm__throughput.avg.pct_of_peak_sustained_elapsed",
+            "sm__pipe_tensor_op_hmma_cycles_active.avg.pct_of_peak_sustained_elapsed",
+        ],
+    ),
+    (
+        "occupancy_pct",
+        &["sm__warps_active.avg.pct_of_peak_sustained_active"],
+    ),
+    (
+        "tensor_pipe_pct",
+        &["sm__pipe_tensor_cycles_active.avg.pct_of_peak_sustained_elapsed"],
+    ),
+    ("scratch_bytes", &["launch__shared_mem_per_block_dynamic"]),
+    ("regs_per_thread", &["launch__registers_per_thread"]),
+    ("block_size", &["launch__block_size"]),
+    ("duration_ns", &["gpu__time_duration.sum"]),
+    ("l2_hit_pct", &["lts__t_sector_hit_rate.pct"]),
+    (
+        "coalescing_pct",
+        &["smsp__sass_average_data_bytes_per_sector_mem_global_op_ld.pct"],
+    ),
+    (
+        "stall_memory_pct",
+        &["smsp__warp_issue_stalled_long_scoreboard_per_warp_active.pct"],
+    ),
+    (
+        "stall_bank_conflict_pct",
+        &["smsp__warp_issue_stalled_bank_conflict_per_warp_active.pct"],
+    ),
+];
+
+/// Run-feature schema: nsys-side fields copied through under `run.`.
+pub const RUN_FEATURES: &[&str] = &[
+    "kernel_launch_count",
+    "total_time_us",
+    "launch_overhead_fraction",
+    "num_ops",
+    "hot_kernel_time_fraction",
+];
+
+/// Step 2 of the decision workflow: normalize a raw profile into evidence.
+pub fn normalize_profile(raw: &RawProfile) -> Evidence {
+    let mut ev = Evidence::new();
+    for (std_name, aliases) in FIELD_MAPPING {
+        for alias in *aliases {
+            if let Some(v) = raw.ncu_get(alias) {
+                ev.insert(std_name, v);
+                break;
+            }
+        }
+    }
+    for rf in RUN_FEATURES {
+        if let Some(v) = raw.run_get(rf) {
+            // Static key: find the canonical &'static str.
+            let key: &'static str = match *rf {
+                "kernel_launch_count" => "run.kernel_launch_count",
+                "total_time_us" => "run.total_time_us",
+                "launch_overhead_fraction" => "run.launch_overhead_fraction",
+                "num_ops" => "run.num_ops",
+                "hot_kernel_time_fraction" => "run.hot_kernel_time_fraction",
+                _ => unreachable!(),
+            };
+            ev.insert(key, v);
+        }
+    }
+    ev
+}
+
+/// Fold the 18 static code features into the evidence namespace
+/// (`code_features`, Appendix-B field 3).
+pub fn fold_features(ev: &mut Evidence, f: &CodeFeatures) {
+    let b = |x: bool| if x { 1.0 } else { 0.0 };
+    ev.insert("feat.naive_gemm_loop", b(f.naive_gemm_loop));
+    ev.insert("feat.smem_tiling", b(f.smem_tiling));
+    ev.insert("feat.tensor_core", b(f.tensor_core));
+    ev.insert("feat.vectorized_loads", b(f.vectorized_loads));
+    ev.insert("feat.coalesced_access", b(f.coalesced_access));
+    ev.insert("feat.bank_conflict_risk", b(f.bank_conflict_risk));
+    ev.insert("feat.fusion_opportunities", f.fusion_opportunities as f64);
+    ev.insert("feat.unfused_ew_chain", f.unfused_ew_chain as f64);
+    ev.insert(
+        "feat.reduction_pattern",
+        match f.reduction_pattern {
+            ReductionPattern::None => 0.0,
+            ReductionPattern::Row => 1.0,
+            ReductionPattern::Col => 2.0,
+            ReductionPattern::Full => 3.0,
+        },
+    );
+    ev.insert("feat.mixed_precision", b(f.mixed_precision));
+    ev.insert("feat.double_buffered", b(f.double_buffered));
+    ev.insert("feat.unrolled", b(f.unrolled));
+    ev.insert("feat.register_pressure", f.register_pressure as f64);
+    ev.insert(
+        "feat.occupancy_limiter",
+        match f.occupancy_limiter {
+            OccupancyLimiter::None => 0.0,
+            OccupancyLimiter::Scratchpad => 1.0,
+            OccupancyLimiter::Registers => 2.0,
+            OccupancyLimiter::Blocks => 3.0,
+        },
+    );
+    ev.insert("feat.strided_access", b(f.strided_access));
+    ev.insert("feat.uses_atomics", b(f.uses_atomics));
+    ev.insert("feat.divergence_risk", b(f.divergence_risk));
+    ev.insert("feat.kernel_launches", f.kernel_launches as f64);
+    ev.insert("feat.structured_operand", b(f.structured_operand));
+}
+
+/// Task-level facts the veto rules need.
+pub fn fold_task_facts(ev: &mut Evidence, strict_tolerance: bool, mxu_alignable: bool, has_gemm: bool) {
+    let b = |x: bool| if x { 1.0 } else { 0.0 };
+    ev.insert("task.strict", b(strict_tolerance));
+    ev.insert("task.mxu_alignable", b(mxu_alignable));
+    ev.insert("task.has_gemm", b(has_gemm));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::costmodel::price;
+    use crate::device::machine::DeviceSpec;
+    use crate::device::metrics::{synthesize, ToolVersion};
+    use crate::kir::graph::KernelGraph;
+    use crate::kir::op::OpKind;
+    use crate::kir::schedule::Schedule;
+
+    fn raw(version: ToolVersion) -> RawProfile {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 512, 512, 512, vec![]);
+        let s = Schedule::per_op_naive(&g);
+        let c = price(&g, &s, &DeviceSpec::a100_like());
+        synthesize(&g, &s, &c, version)
+    }
+
+    #[test]
+    fn both_tool_versions_normalize_identically() {
+        let a = normalize_profile(&raw(ToolVersion::Ncu2023));
+        let b = normalize_profile(&raw(ToolVersion::Ncu2024));
+        assert_eq!(a.get("dram_pct"), b.get("dram_pct"));
+        assert_eq!(a.get("sm_pct").is_some(), true);
+        assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn run_features_prefixed() {
+        let ev = normalize_profile(&raw(ToolVersion::Ncu2023));
+        assert_eq!(ev.get("run.kernel_launch_count"), Some(&1.0));
+        assert!(ev.get("run.total_time_us").unwrap() > &0.0);
+    }
+
+    #[test]
+    fn features_fold_in() {
+        let mut g = KernelGraph::new();
+        g.push(OpKind::MatMul, 512, 512, 512, vec![]);
+        let s = Schedule::per_op_naive(&g);
+        let f = crate::kir::features::ground_truth(&g, &s);
+        let mut ev = Evidence::new();
+        fold_features(&mut ev, &f);
+        assert_eq!(ev.get("feat.naive_gemm_loop"), Some(&1.0));
+        assert_eq!(ev.get("feat.kernel_launches"), Some(&1.0));
+        fold_task_facts(&mut ev, true, false, true);
+        assert_eq!(ev.get("task.strict"), Some(&1.0));
+        assert_eq!(ev.get("task.mxu_alignable"), Some(&0.0));
+    }
+}

@@ -1,0 +1,295 @@
+//! Optimization-method retrieval: the nine-step Appendix-C decision workflow.
+//!
+//!   1. input aggregation          -> [`aggregate`]
+//!   2. metric normalization       -> `normalize::normalize_profile`
+//!   3. derived-field computation  -> `derived::compute_derived`
+//!   4. headroom tier assignment   -> `derived::headroom_tier`
+//!   5. bottleneck identification  -> signature matching + priority rules
+//!   6. case matching              -> tier + gate_when over the decision table
+//!   7. global rule enforcement    -> `FORBIDDEN_RULES` vetoes
+//!   8. method set retrieval       -> surviving `allowed_methods`
+//!   9. LLM-assisted planning      -> `knowledge` attached for the Planner
+//!
+//! Every step leaves a printable trace in [`RetrievalResult`] — the paper's
+//! auditability claim, mechanically enforced.
+
+use super::derived::{compute_derived, headroom_tier};
+use super::kb_content::{knowledge_for, predicate, DECISION_TABLE, FORBIDDEN_RULES};
+use super::normalize::{fold_features, fold_task_facts, normalize_profile};
+use super::schema::{Bottleneck, Evidence, MethodKnowledge, Tier, BOTTLENECK_PRIORITY};
+use crate::bench_suite::Task;
+use crate::device::metrics::RawProfile;
+use crate::kir::features::CodeFeatures;
+use crate::kir::transforms::MethodId;
+
+/// Full audit trail of one retrieval (steps 4-9 outputs).
+#[derive(Debug, Clone)]
+pub struct RetrievalResult {
+    pub tier: Tier,
+    pub bottleneck: Bottleneck,
+    /// Matched decision-table case id (step 6), if any.
+    pub matched_case: Option<&'static str>,
+    /// Final permitted methods, priority-ordered (step 8).
+    pub allowed_methods: Vec<MethodId>,
+    /// Named predicates that held on this evidence (audit).
+    pub satisfied_predicates: Vec<&'static str>,
+    /// (method, rule id) pairs removed by global vetoes (step 7).
+    pub vetoed: Vec<(MethodId, &'static str)>,
+    /// llm_assist entries for the permitted methods (step 9).
+    pub knowledge: Vec<&'static MethodKnowledge>,
+    /// Why the matched case fired (case rationale).
+    pub case_why: Option<&'static str>,
+}
+
+impl RetrievalResult {
+    /// Render the audit trail (what the paper calls traceable selection).
+    pub fn audit(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "tier={:?} bottleneck={:?} case={}\n",
+            self.tier,
+            self.bottleneck,
+            self.matched_case.unwrap_or("<none>")
+        ));
+        s.push_str(&format!(
+            "evidence: {}\n",
+            self.satisfied_predicates.join(", ")
+        ));
+        for (m, rule) in &self.vetoed {
+            s.push_str(&format!("vetoed: {} by {}\n", m.name(), rule));
+        }
+        s.push_str(&format!(
+            "allowed: [{}]\n",
+            self.allowed_methods
+                .iter()
+                .map(|m| m.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+        s
+    }
+}
+
+/// Step 1: aggregate raw profile + code features + task facts into one
+/// evidence namespace (steps 2-3 applied inside).
+pub fn aggregate(task: &Task, features: &CodeFeatures, raw: &RawProfile) -> Evidence {
+    let mut ev = normalize_profile(raw); // step 2
+    fold_features(&mut ev, features);
+    let dom = task.graph.dominant_op();
+    let mxu_alignable = dom
+        .map(|o| o.m % 8 == 0 && o.n % 8 == 0 && o.k % 8 == 0)
+        .unwrap_or(false);
+    let has_gemm = !task.graph.gemm_ops().is_empty();
+    fold_task_facts(&mut ev, task.strict_tolerance, mxu_alignable, has_gemm);
+    compute_derived(&mut ev); // step 3
+    ev
+}
+
+/// Steps 4-9: run the deterministic decision policy over evidence.
+pub fn retrieve(ev: &Evidence) -> RetrievalResult {
+    // Audit: which named predicates hold.
+    let satisfied: Vec<&'static str> = super::kb_content::PREDICATES
+        .iter()
+        .filter(|p| p.pred.eval(ev))
+        .map(|p| p.name)
+        .collect();
+
+    let tier = headroom_tier(ev); // step 4
+
+    // Step 5+6: walk bottlenecks in priority order; within a bottleneck,
+    // take the first case whose signature, tier, and gate all hold.
+    let mut matched: Option<&super::schema::DecisionCase> = None;
+    'outer: for b in BOTTLENECK_PRIORITY {
+        for case in DECISION_TABLE.iter().filter(|c| c.bottleneck == b) {
+            let sig_ok = case
+                .ncu_signature
+                .iter()
+                .all(|s| predicate(s).map(|p| p.pred.eval(ev)).unwrap_or(false));
+            let tier_ok = case.tiers.contains(&tier);
+            if sig_ok && tier_ok && case.gate_when.eval(ev) {
+                matched = Some(case);
+                break 'outer;
+            }
+        }
+    }
+
+    // Step 7: global veto enforcement.
+    let mut allowed = Vec::new();
+    let mut vetoed = Vec::new();
+    if let Some(case) = matched {
+        'methods: for &m in &case.allowed_methods {
+            for rule in FORBIDDEN_RULES.iter() {
+                if rule.veto.contains(&m) && rule.when.eval(ev) {
+                    vetoed.push((m, rule.id));
+                    continue 'methods;
+                }
+            }
+            allowed.push(m);
+        }
+    }
+
+    // Step 9: attach method knowledge.
+    let knowledge = allowed.iter().filter_map(|&m| knowledge_for(m)).collect();
+
+    RetrievalResult {
+        tier,
+        bottleneck: matched.map(|c| c.bottleneck).unwrap_or(Bottleneck::NearRoofline),
+        matched_case: matched.map(|c| c.id),
+        allowed_methods: allowed,
+        satisfied_predicates: satisfied,
+        vetoed,
+        knowledge,
+        case_why: matched.map(|c| c.why),
+    }
+}
+
+/// Convenience: full pipeline from raw inputs.
+pub fn retrieve_for(task: &Task, features: &CodeFeatures, raw: &RawProfile) -> RetrievalResult {
+    retrieve(&aggregate(task, features, raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::level2::appendix_d_graph;
+    use crate::device::costmodel::price;
+    use crate::device::machine::DeviceSpec;
+    use crate::device::metrics::{synthesize, ToolVersion};
+    use crate::kir::features::ground_truth;
+    use crate::kir::schedule::Schedule;
+    use crate::kir::transforms::{self, MethodId};
+
+    fn appendix_d_task() -> Task {
+        Task {
+            id: "t".into(),
+            level: 2,
+            name: "fused_epilogue".into(),
+            graph: appendix_d_graph(1024, 8192, 8192),
+            eager_waste: 1.0,
+            sched_ceiling: 3.2,
+            strict_tolerance: false,
+            translation_risk: 0.05,
+            artifact: None,
+        }
+    }
+
+    fn retrieval_at(task: &Task, sched: &Schedule) -> RetrievalResult {
+        let dev = DeviceSpec::a100_like();
+        let cost = price(&task.graph, sched, &dev);
+        let raw = synthesize(&task.graph, sched, &cost, ToolVersion::Ncu2023);
+        let feats = ground_truth(&task.graph, sched);
+        retrieve_for(task, &feats, &raw)
+    }
+
+    #[test]
+    fn motivating_example_picks_gemm_tiling_not_fusion() {
+        // The §3 failure mode: a naive seed on the Appendix-D task. The
+        // memory-free optimizer chose fusion; the decision policy must
+        // target the dominant GEMM first.
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let r = retrieval_at(&task, &sched);
+        assert_eq!(r.matched_case, Some("gemm.naive_loop"), "{}", r.audit());
+        assert_eq!(r.allowed_methods.first(), Some(&MethodId::TileSmem));
+    }
+
+    #[test]
+    fn after_tiling_recommends_tensor_core() {
+        let task = appendix_d_task();
+        let mut sched = Schedule::per_op_naive(&task.graph);
+        transforms::apply(MethodId::TileSmem, &task.graph, &mut sched);
+        let r = retrieval_at(&task, &sched);
+        assert_eq!(r.matched_case, Some("gemm.no_tensor_core"), "{}", r.audit());
+        assert!(r.allowed_methods.contains(&MethodId::UseTensorCore));
+    }
+
+    #[test]
+    fn fusion_surfaces_once_gemm_is_healthy() {
+        let task = appendix_d_task();
+        let mut sched = Schedule::per_op_naive(&task.graph);
+        for m in [
+            MethodId::TileSmem,
+            MethodId::UseTensorCore,
+            MethodId::PadScratch,
+            MethodId::DoubleBuffer,
+            MethodId::VectorizeLoads,
+            MethodId::UnrollInner,
+        ] {
+            if transforms::applicable(m, &task.graph, &sched).is_ok() {
+                transforms::apply(m, &task.graph, &mut sched);
+            }
+        }
+        let r = retrieval_at(&task, &sched);
+        // GEMM is now on the matrix unit; the next bottleneck should be the
+        // unfused epilogue (fusion) or access-pattern cleanup on the tail.
+        assert!(
+            matches!(
+                r.bottleneck,
+                Bottleneck::FusionOpportunity
+                    | Bottleneck::PoorAccessPattern
+                    | Bottleneck::LaunchOverhead
+            ),
+            "{}",
+            r.audit()
+        );
+    }
+
+    #[test]
+    fn strict_task_vetoes_downcast() {
+        let mut task = appendix_d_task();
+        task.strict_tolerance = true;
+        let sched = Schedule::per_op_naive(&task.graph);
+        let dev = DeviceSpec::a100_like();
+        let cost = price(&task.graph, &sched, &dev);
+        let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+        let feats = ground_truth(&task.graph, &sched);
+        let ev = aggregate(&task, &feats, &raw);
+        // Force-match the polish case by evaluating vetoes directly.
+        assert!(super::super::kb_content::FORBIDDEN_RULES
+            .iter()
+            .find(|r| r.id == "strict_no_downcast")
+            .unwrap()
+            .when
+            .eval(&ev));
+    }
+
+    #[test]
+    fn ragged_dims_veto_tensor_core() {
+        let mut task = appendix_d_task();
+        // Rebuild with a ragged K.
+        task.graph = appendix_d_graph(1024, 8191, 8192);
+        let mut sched = Schedule::per_op_naive(&task.graph);
+        transforms::apply(MethodId::TileSmem, &task.graph, &mut sched);
+        let r = retrieval_at(&task, &sched);
+        assert!(
+            !r.allowed_methods.contains(&MethodId::UseTensorCore),
+            "{}",
+            r.audit()
+        );
+        if r.matched_case == Some("gemm.no_tensor_core") {
+            assert!(r.vetoed.iter().any(|(m, rule)| {
+                *m == MethodId::UseTensorCore && *rule == "mxu_needs_alignment"
+            }));
+        }
+    }
+
+    #[test]
+    fn audit_trail_is_renderable() {
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let r = retrieval_at(&task, &sched);
+        let audit = r.audit();
+        assert!(audit.contains("bottleneck="));
+        assert!(audit.contains("allowed:"));
+    }
+
+    #[test]
+    fn retrieval_is_deterministic() {
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let a = retrieval_at(&task, &sched);
+        let b = retrieval_at(&task, &sched);
+        assert_eq!(a.matched_case, b.matched_case);
+        assert_eq!(a.allowed_methods, b.allowed_methods);
+    }
+}

@@ -1,0 +1,212 @@
+//! Long-term memory schema — the ten Appendix-B fields as concrete types.
+//!
+//! Everything downstream of `field_mapping` operates on an [`Evidence`] map
+//! of standardized fields (profiling metrics, run features, code features,
+//! and derived fields all share one namespace), so predicates and decision
+//! cases are uniform, printable, and auditable.
+
+use std::collections::BTreeMap;
+
+use crate::kir::transforms::MethodId;
+
+/// Standardized evidence: field name -> value. Conventions:
+///   * NCU-derived percentages:   `dram_pct`, `sm_pct`, ... in [0, 100]
+///   * nsys run features:         `run.kernel_launch_count`, ...
+///   * code features:             `feat.naive_gemm_loop` (0/1), ...
+///   * task facts:                `task.strict` (0/1), `task.mxu_alignable`
+///   * derived fields:            `drv.headroom_pct`, ...
+pub type Evidence = BTreeMap<&'static str, f64>;
+
+/// Optimization-headroom tier (Appendix-B field 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    Low,
+    Medium,
+    High,
+}
+
+/// Bottleneck taxonomy used by `decision_table` signatures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Bottleneck {
+    /// A GEMM running far off the matrix unit (the motivating example).
+    GemmUnderutilized,
+    /// Uncoalesced / strided global access.
+    PoorAccessPattern,
+    /// Producer-consumer intermediates bouncing through HBM.
+    FusionOpportunity,
+    /// Reduction tree built without lane primitives / wide loads.
+    ReductionInefficiency,
+    /// Saturated DRAM on an already-coalesced kernel.
+    MemoryBandwidth,
+    /// Fixed launch cost dominating (deep L3 graphs).
+    LaunchOverhead,
+    /// Grid/resources under-filling the device.
+    LowOccupancy,
+    /// Close to roofline; only polish remains.
+    NearRoofline,
+}
+
+/// A reusable Boolean predicate over standardized evidence (Appendix-B
+/// field 7, `ncu_predicates`). The tree form keeps every decision printable
+/// for the audit trail.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pred {
+    /// field > threshold
+    Gt(&'static str, f64),
+    /// field < threshold
+    Lt(&'static str, f64),
+    /// boolean field (0/1) is set
+    Is(&'static str),
+    /// boolean field (0/1) is clear
+    Not(&'static str),
+    All(Vec<Pred>),
+    Any(Vec<Pred>),
+}
+
+impl Pred {
+    /// Evaluate against evidence; missing fields read as 0.0 (absent signal).
+    pub fn eval(&self, ev: &Evidence) -> bool {
+        let get = |f: &&'static str| ev.get(f).copied().unwrap_or(0.0);
+        match self {
+            Pred::Gt(f, t) => get(f) > *t,
+            Pred::Lt(f, t) => get(f) < *t,
+            Pred::Is(f) => get(f) > 0.5,
+            Pred::Not(f) => get(f) <= 0.5,
+            Pred::All(ps) => ps.iter().all(|p| p.eval(ev)),
+            Pred::Any(ps) => ps.iter().any(|p| p.eval(ev)),
+        }
+    }
+
+    /// Render for the audit trail.
+    pub fn render(&self) -> String {
+        match self {
+            Pred::Gt(f, t) => format!("{f} > {t}"),
+            Pred::Lt(f, t) => format!("{f} < {t}"),
+            Pred::Is(f) => format!("{f}"),
+            Pred::Not(f) => format!("!{f}"),
+            Pred::All(ps) => format!(
+                "({})",
+                ps.iter().map(|p| p.render()).collect::<Vec<_>>().join(" & ")
+            ),
+            Pred::Any(ps) => format!(
+                "({})",
+                ps.iter().map(|p| p.render()).collect::<Vec<_>>().join(" | ")
+            ),
+        }
+    }
+}
+
+/// A named predicate from the `ncu_predicates` library.
+#[derive(Debug, Clone)]
+pub struct NamedPred {
+    pub name: &'static str,
+    pub pred: Pred,
+}
+
+/// One decision-table case (Appendix-B field 9).
+#[derive(Debug, Clone)]
+pub struct DecisionCase {
+    /// Stable id, e.g. "gemm.naive_loop".
+    pub id: &'static str,
+    pub bottleneck: Bottleneck,
+    /// Profiling signature: names into the `ncu_predicates` library.
+    pub ncu_signature: Vec<&'static str>,
+    /// Headroom tiers this case fires in.
+    pub tiers: Vec<Tier>,
+    /// Additional gating predicate over code features / evidence.
+    pub gate_when: Pred,
+    /// Candidate methods, priority-ordered.
+    pub allowed_methods: Vec<MethodId>,
+    /// Human rationale for the audit trail.
+    pub why: &'static str,
+}
+
+/// A global veto rule (Appendix-B field 8).
+#[derive(Debug, Clone)]
+pub struct ForbiddenRule {
+    pub id: &'static str,
+    /// When this predicate holds, the listed methods are vetoed everywhere.
+    pub when: Pred,
+    pub veto: Vec<MethodId>,
+    pub why: &'static str,
+}
+
+/// Expected-benefit class for `llm_assist` method knowledge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Gain {
+    Small,
+    Medium,
+    Large,
+}
+
+/// Method Knowledge entry (Appendix-B field 10, the `llm_assist` store).
+#[derive(Debug, Clone)]
+pub struct MethodKnowledge {
+    pub method: MethodId,
+    /// Why this method addresses its bottleneck.
+    pub rationale: &'static str,
+    /// Concrete implementation cues (CUDA and TPU/Pallas vocabulary).
+    pub cues: &'static str,
+    pub expected_gain: Gain,
+    /// Known failure modes the Optimizer should guard against.
+    pub risks: &'static str,
+}
+
+/// Priority order for bottleneck resolution (Appendix-B field 6): when
+/// several bottlenecks match, the earliest in this list wins. This ordering
+/// IS the fix for the motivating example — the GEMM bottleneck outranks
+/// fusion opportunities.
+pub const BOTTLENECK_PRIORITY: [Bottleneck; 8] = [
+    Bottleneck::GemmUnderutilized,
+    Bottleneck::PoorAccessPattern,
+    Bottleneck::FusionOpportunity,
+    Bottleneck::ReductionInefficiency,
+    Bottleneck::MemoryBandwidth,
+    Bottleneck::LaunchOverhead,
+    Bottleneck::LowOccupancy,
+    Bottleneck::NearRoofline,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(pairs: &[(&'static str, f64)]) -> Evidence {
+        pairs.iter().copied().collect()
+    }
+
+    #[test]
+    fn predicate_eval() {
+        let e = ev(&[("dram_pct", 70.0), ("feat.naive_gemm_loop", 1.0)]);
+        assert!(Pred::Gt("dram_pct", 60.0).eval(&e));
+        assert!(!Pred::Lt("dram_pct", 60.0).eval(&e));
+        assert!(Pred::Is("feat.naive_gemm_loop").eval(&e));
+        assert!(Pred::Not("feat.smem_tiling").eval(&e));
+        assert!(Pred::All(vec![
+            Pred::Gt("dram_pct", 60.0),
+            Pred::Is("feat.naive_gemm_loop")
+        ])
+        .eval(&e));
+        assert!(Pred::Any(vec![Pred::Gt("dram_pct", 90.0), Pred::Is("feat.naive_gemm_loop")]).eval(&e));
+    }
+
+    #[test]
+    fn missing_fields_read_zero() {
+        let e = Evidence::new();
+        assert!(!Pred::Gt("nope", 0.5).eval(&e));
+        assert!(Pred::Lt("nope", 0.5).eval(&e));
+        assert!(Pred::Not("nope").eval(&e));
+    }
+
+    #[test]
+    fn render_is_readable() {
+        let p = Pred::All(vec![Pred::Gt("a", 1.0), Pred::Not("b")]);
+        assert_eq!(p.render(), "(a > 1 & !b)");
+    }
+
+    #[test]
+    fn priority_starts_with_gemm() {
+        assert_eq!(BOTTLENECK_PRIORITY[0], Bottleneck::GemmUnderutilized);
+        assert_eq!(*BOTTLENECK_PRIORITY.last().unwrap(), Bottleneck::NearRoofline);
+    }
+}

@@ -1,0 +1,5 @@
+//! The dual-level memory bank (§4.2): cross-task long-term expert knowledge
+//! and per-task short-term trajectory state.
+
+pub mod long_term;
+pub mod short_term;

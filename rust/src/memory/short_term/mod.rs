@@ -1,0 +1,8 @@
+//! Short-term memory: per-task trajectory state (§4.2.2) — repair chains
+//! (Figure 2) and optimization rounds with base-kernel promotion (Figure 3).
+
+pub mod opt_memory;
+pub mod repair_memory;
+
+pub use opt_memory::OptMemory;
+pub use repair_memory::{RepairAttempt, RepairChain, RepairMemory};

@@ -1,0 +1,169 @@
+//! Short-term *optimization* memory (§4.2.2, Figure 3).
+//!
+//! Tracks every optimization method applied to the **current base kernel**
+//! with its observed outcome, and implements the base-promotion policy of
+//! Algorithm 1: a new kernel becomes the base only on >= rt relative or
+//! >= at absolute speedup gain. The Planner is conditioned on this record,
+//! so unproductive methods are not re-attempted against the same base.
+
+use crate::kir::transforms::MethodId;
+
+/// Outcome of one optimization round against a base kernel.
+#[derive(Debug, Clone)]
+pub struct OptAttempt {
+    pub method: MethodId,
+    /// Speedup (vs eager) the resulting kernel achieved; None = the round
+    /// ended in an unrepaired failure.
+    pub speedup: Option<f64>,
+    /// Did this attempt get promoted to the new base?
+    pub promoted: bool,
+    pub round: u32,
+}
+
+/// Per-task optimization memory.
+#[derive(Debug, Clone)]
+pub struct OptMemory {
+    /// Promotion thresholds (paper: rt = 0.3, at = 0.3).
+    pub rt: f64,
+    pub at: f64,
+    /// Version + speedup of the current base kernel.
+    pub base_version: u32,
+    pub base_speedup: f64,
+    /// Attempts made against the current base (cleared on promotion).
+    pub attempts_on_base: Vec<OptAttempt>,
+    /// Full history across bases (for trace rendering / Figure 3).
+    pub history: Vec<OptAttempt>,
+    /// Promotion events: (round, old base version, new base version).
+    pub promotions: Vec<(u32, u32, u32)>,
+}
+
+impl OptMemory {
+    pub fn new(rt: f64, at: f64, seed_speedup: f64) -> Self {
+        OptMemory {
+            rt,
+            at,
+            base_version: 0,
+            base_speedup: seed_speedup,
+            attempts_on_base: Vec::new(),
+            history: Vec::new(),
+            promotions: Vec::new(),
+        }
+    }
+
+    /// Algorithm 1's promotion test.
+    pub fn should_promote(&self, speedup: f64) -> bool {
+        speedup / self.base_speedup > 1.0 + self.rt || speedup - self.base_speedup > self.at
+    }
+
+    /// Record a completed round; promotes the base when thresholds pass.
+    /// Returns whether promotion happened.
+    pub fn record(
+        &mut self,
+        method: MethodId,
+        speedup: Option<f64>,
+        round: u32,
+        kernel_version: u32,
+    ) -> bool {
+        let promoted = speedup.map(|s| self.should_promote(s)).unwrap_or(false);
+        let attempt = OptAttempt {
+            method,
+            speedup,
+            promoted,
+            round,
+        };
+        self.history.push(attempt.clone());
+        if promoted {
+            self.promotions
+                .push((round, self.base_version, kernel_version));
+            self.base_version = kernel_version;
+            self.base_speedup = speedup.unwrap();
+            self.attempts_on_base.clear();
+        } else {
+            self.attempts_on_base.push(attempt);
+        }
+        promoted
+    }
+
+    /// Methods already tried on the current base that did NOT promote —
+    /// what the Planner must deprioritize (Figure 3's conditioning).
+    pub fn unproductive_on_base(&self) -> Vec<MethodId> {
+        self.attempts_on_base.iter().map(|a| a.method).collect()
+    }
+
+    /// Has `method` failed on the current base already?
+    pub fn tried_on_base(&self, method: MethodId) -> bool {
+        self.attempts_on_base.iter().any(|a| a.method == method)
+    }
+
+    /// Render the Figure-3 style state.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "base #{} at {:.3}x; tried on base: [{}]",
+            self.base_version,
+            self.base_speedup,
+            self.attempts_on_base
+                .iter()
+                .map(|a| format!(
+                    "{}:{}",
+                    a.method.name(),
+                    a.speedup.map(|x| format!("{x:.2}x")).unwrap_or("fail".into())
+                ))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        if !self.promotions.is_empty() {
+            s.push_str(&format!("; promotions: {:?}", self.promotions));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_threshold_promotes() {
+        let mut m = OptMemory::new(0.3, 0.3, 1.0);
+        assert!(!m.record(MethodId::UnrollInner, Some(1.1), 1, 5)); // +10% < 30%
+        assert!(m.record(MethodId::TileSmem, Some(1.5), 2, 6)); // +50%
+        assert_eq!(m.base_version, 6);
+        assert_eq!(m.base_speedup, 1.5);
+        assert!(m.attempts_on_base.is_empty(), "promotion clears base attempts");
+    }
+
+    #[test]
+    fn absolute_threshold_promotes() {
+        // 0.1x -> 0.45x is only +0.35 absolute but 4.5x relative;
+        // 2.0 -> 2.35 is +0.35 absolute (> at) though only +17.5% relative.
+        let mut m = OptMemory::new(0.3, 0.3, 2.0);
+        assert!(m.record(MethodId::DoubleBuffer, Some(2.35), 1, 3));
+    }
+
+    #[test]
+    fn small_fluctuations_do_not_move_base() {
+        let mut m = OptMemory::new(0.3, 0.3, 2.0);
+        assert!(!m.record(MethodId::LaunchTune, Some(2.1), 1, 3));
+        assert_eq!(m.base_version, 0);
+        assert_eq!(m.unproductive_on_base(), vec![MethodId::LaunchTune]);
+        assert!(m.tried_on_base(MethodId::LaunchTune));
+        assert!(!m.tried_on_base(MethodId::TileSmem));
+    }
+
+    #[test]
+    fn failures_recorded_as_unproductive() {
+        let mut m = OptMemory::new(0.3, 0.3, 1.0);
+        assert!(!m.record(MethodId::SplitK, None, 1, 2));
+        assert!(m.tried_on_base(MethodId::SplitK));
+        assert_eq!(m.history.len(), 1);
+    }
+
+    #[test]
+    fn render_mentions_base_and_attempts() {
+        let mut m = OptMemory::new(0.3, 0.3, 1.0);
+        m.record(MethodId::UnrollInner, Some(1.05), 1, 2);
+        let s = m.render();
+        assert!(s.contains("base #0"));
+        assert!(s.contains("unroll_inner:1.05x"));
+    }
+}

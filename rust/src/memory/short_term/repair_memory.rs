@@ -1,0 +1,198 @@
+//! Short-term *repair* memory (§4.2.2, Figure 2).
+//!
+//! Each chain starts at the first kernel version that fails compilation or
+//! verification and accumulates every repair attempt with its outcome. The
+//! Diagnoser is conditioned on the whole chain, so it never re-proposes a
+//! fix already observed to fail on the same error signature — the mechanism
+//! that breaks the cyclic-repair oscillation.
+
+/// One recorded repair attempt.
+#[derive(Debug, Clone)]
+pub struct RepairAttempt {
+    /// Error signature the attempt was responding to.
+    pub error_signature: String,
+    /// Candidate-fix index the Diagnoser proposed.
+    pub fix_idx: u8,
+    /// Did the fix clear the fault?
+    pub fixed: bool,
+    /// Kernel version the Repairer produced.
+    pub kernel_version: u32,
+    /// Round number (for trace rendering).
+    pub round: u32,
+}
+
+/// A chain of repair attempts on one broken lineage (Figure 2).
+#[derive(Debug, Clone, Default)]
+pub struct RepairChain {
+    pub attempts: Vec<RepairAttempt>,
+    /// Version of the kernel that first broke (chain root).
+    pub root_version: u32,
+}
+
+/// The per-task repair memory: the active chain plus closed history.
+#[derive(Debug, Clone, Default)]
+pub struct RepairMemory {
+    pub active: Option<RepairChain>,
+    pub closed: Vec<RepairChain>,
+}
+
+impl RepairMemory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open a chain at the first failure of a lineage (no-op if one is open).
+    pub fn open_chain(&mut self, root_version: u32) {
+        if self.active.is_none() {
+            self.active = Some(RepairChain {
+                attempts: Vec::new(),
+                root_version,
+            });
+        }
+    }
+
+    /// Record an attempt into the active chain.
+    pub fn record(&mut self, attempt: RepairAttempt) {
+        if self.active.is_none() {
+            self.open_chain(attempt.kernel_version);
+        }
+        self.active.as_mut().unwrap().attempts.push(attempt);
+    }
+
+    /// Close the active chain (repair succeeded or budget exhausted).
+    pub fn close_chain(&mut self) {
+        if let Some(chain) = self.active.take() {
+            self.closed.push(chain);
+        }
+    }
+
+    /// Fix indices already tried *and failed* for this error signature in
+    /// the active chain — what the Diagnoser must not repeat.
+    pub fn failed_fixes_for(&self, error_signature: &str) -> Vec<u8> {
+        self.active
+            .as_ref()
+            .map(|c| {
+                c.attempts
+                    .iter()
+                    .filter(|a| !a.fixed && a.error_signature == error_signature)
+                    .map(|a| a.fix_idx)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Total repair attempts across all chains (trace statistic).
+    pub fn total_attempts(&self) -> usize {
+        self.closed.iter().map(|c| c.attempts.len()).sum::<usize>()
+            + self.active.as_ref().map(|c| c.attempts.len()).unwrap_or(0)
+    }
+
+    /// Length of the longest chain (Figure-2 style statistic).
+    pub fn longest_chain(&self) -> usize {
+        self.closed
+            .iter()
+            .chain(self.active.iter())
+            .map(|c| c.attempts.len())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Render the active chain like Figure 2 (kernel #2 -> #3 -> ...).
+    pub fn render_active(&self) -> String {
+        match &self.active {
+            None => "<no active repair chain>".to_string(),
+            Some(c) => {
+                let mut s = format!("chain from kernel #{}:", c.root_version);
+                for a in &c.attempts {
+                    s.push_str(&format!(
+                        " -> #{} (fix {} on '{}': {})",
+                        a.kernel_version,
+                        a.fix_idx,
+                        truncate(&a.error_signature, 28),
+                        if a.fixed { "fixed" } else { "still broken" }
+                    ));
+                }
+                s
+            }
+        }
+    }
+}
+
+fn truncate(s: &str, n: usize) -> &str {
+    if s.len() <= n {
+        s
+    } else {
+        &s[..n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attempt(sig: &str, fix: u8, fixed: bool, v: u32) -> RepairAttempt {
+        RepairAttempt {
+            error_signature: sig.to_string(),
+            fix_idx: fix,
+            fixed,
+            kernel_version: v,
+            round: v,
+        }
+    }
+
+    #[test]
+    fn failed_fixes_accumulate_per_signature() {
+        let mut m = RepairMemory::new();
+        m.open_chain(2);
+        m.record(attempt("sync missing", 0, false, 3));
+        m.record(attempt("sync missing", 2, false, 4));
+        m.record(attempt("other error", 1, false, 5));
+        assert_eq!(m.failed_fixes_for("sync missing"), vec![0, 2]);
+        assert_eq!(m.failed_fixes_for("other error"), vec![1]);
+        assert!(m.failed_fixes_for("fresh").is_empty());
+    }
+
+    #[test]
+    fn closing_resets_the_no_repeat_set() {
+        let mut m = RepairMemory::new();
+        m.open_chain(1);
+        m.record(attempt("e", 0, false, 2));
+        m.close_chain();
+        assert!(m.failed_fixes_for("e").is_empty());
+        assert_eq!(m.closed.len(), 1);
+        assert_eq!(m.total_attempts(), 1);
+    }
+
+    #[test]
+    fn successful_fix_recorded_but_not_blocked() {
+        let mut m = RepairMemory::new();
+        m.record(attempt("e", 1, true, 3));
+        assert!(m.failed_fixes_for("e").is_empty());
+        assert_eq!(m.total_attempts(), 1);
+    }
+
+    #[test]
+    fn figure2_render() {
+        let mut m = RepairMemory::new();
+        m.open_chain(2);
+        m.record(attempt("ptxas error: too much shared data", 0, false, 3));
+        m.record(attempt("ptxas error: too much shared data", 1, true, 4));
+        let s = m.render_active();
+        assert!(s.contains("chain from kernel #2"));
+        assert!(s.contains("fixed"));
+    }
+
+    #[test]
+    fn longest_chain_tracks_max() {
+        let mut m = RepairMemory::new();
+        m.open_chain(1);
+        for i in 0..4 {
+            m.record(attempt("e", i, false, i as u32 + 2));
+        }
+        m.close_chain();
+        m.open_chain(9);
+        m.record(attempt("e2", 0, true, 10));
+        m.close_chain();
+        assert_eq!(m.longest_chain(), 4);
+    }
+}

@@ -1,0 +1,137 @@
+//! PJRT client wrapper: load AOT HLO-text artifacts, compile once, execute
+//! from the rust hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, avoiding the 64-bit-id protos that jax >= 0.5 emits and
+//! xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct Compiled {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, Compiled>,
+    artifacts_dir: PathBuf,
+}
+
+/// A host tensor (f32, row-major) for artifact I/O.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    /// Max |a - b| against another tensor (verification metric).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: BTreeMap::new(),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact file (cached by name).
+    pub fn load(&mut self, name: &str, file: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(
+            name.to_string(),
+            Compiled {
+                name: name.to_string(),
+                exe,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute a loaded artifact on f32 inputs; returns the 1-tuple output.
+    /// (aot.py lowers with return_tuple=True, so outputs unwrap via
+    /// to_tuple1.)
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let compiled = self
+            .cache
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let lit = xla::Literal::vec1(&t.data);
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = compiled.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>()?;
+        Ok(Tensor::new(dims, data))
+    }
+
+    /// Median-of-N wall-clock latency of one artifact (seconds).
+    pub fn time_execution(&self, name: &str, inputs: &[Tensor], warmup: usize, iters: usize) -> Result<f64> {
+        for _ in 0..warmup {
+            self.execute(name, inputs)?;
+        }
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            self.execute(name, inputs)?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(crate::util::stats::median(&times))
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        self.cache.values().map(|c| c.name.as_str()).collect()
+    }
+}

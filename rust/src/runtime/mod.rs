@@ -1,0 +1,12 @@
+//! Runtime: the rust side of the AOT bridge. Loads `artifacts/*.hlo.txt`
+//! (lowered once by `python/compile/aot.py`), compiles via the PJRT C API,
+//! and provides real execution, numeric verification, and timing for
+//! artifact-backed tasks.
+
+pub mod client;
+pub mod registry;
+pub mod verify;
+
+pub use client::{Runtime, Tensor};
+pub use registry::Registry;
+pub use verify::{verify_all, verify_variant, VerifyReport};

@@ -1,0 +1,122 @@
+//! Artifact registry: parse `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into a typed index of tasks x variants.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskEntry {
+    pub inputs: Vec<InputSpec>,
+    pub variants: BTreeMap<String, VariantEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub tasks: BTreeMap<String, TaskEntry>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let tasks_json = json
+            .get("tasks")
+            .and_then(|t| t.as_obj())
+            .context("manifest missing tasks")?;
+
+        let mut tasks = BTreeMap::new();
+        for (name, entry) in tasks_json {
+            let inputs = entry
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .context("task missing inputs")?
+                .iter()
+                .map(|spec| {
+                    let shape = spec
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .context("input missing shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<_>>()?;
+                    let dtype = spec
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<_>>()?;
+            let variants = entry
+                .get("variants")
+                .and_then(|v| v.as_obj())
+                .context("task missing variants")?
+                .iter()
+                .map(|(vn, vv)| {
+                    let file = vv
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .context("variant missing file")?
+                        .to_string();
+                    Ok((vn.clone(), VariantEntry { file }))
+                })
+                .collect::<Result<_>>()?;
+            tasks.insert(name.clone(), TaskEntry { inputs, variants });
+        }
+        Ok(Registry { dir, tasks })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskEntry> {
+        self.tasks
+            .get(name)
+            .with_context(|| format!("task {name} not in manifest"))
+    }
+
+    /// Artifact cache key "<task>/<variant>".
+    pub fn key(task: &str, variant: &str) -> String {
+        format!("{task}/{variant}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Ok(reg) = Registry::load("artifacts") else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        assert!(reg.tasks.contains_key("fused_epilogue"));
+        let t = reg.task("fused_epilogue").unwrap();
+        assert!(t.variants.contains_key("ref"));
+        assert!(t.variants.contains_key("tiled_fused"));
+        assert_eq!(t.inputs.len(), 3);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Registry::load("/nonexistent").is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! Real numeric verification: run a variant artifact and the reference
+//! artifact on identical seeded inputs and compare — the Verifier's ground
+//! truth for artifact-backed tasks (DESIGN.md §Three-layer).
+
+use anyhow::Result;
+
+use super::client::{Runtime, Tensor};
+use super::registry::Registry;
+use crate::util::rng::Rng;
+
+/// Result of verifying one variant against the reference.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub task: String,
+    pub variant: String,
+    pub max_abs_err: f64,
+    pub tolerance: f64,
+    pub passed: bool,
+    /// Median latency of the variant (seconds), if timed.
+    pub latency_s: Option<f64>,
+}
+
+/// Generate seeded standard-normal inputs matching a task's specs.
+pub fn seeded_inputs(reg: &Registry, task: &str, seed: u64) -> Result<Vec<Tensor>> {
+    let entry = reg.task(task)?;
+    let mut rng = Rng::new(seed);
+    Ok(entry
+        .inputs
+        .iter()
+        .map(|spec| {
+            let n: usize = spec.shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            Tensor::new(spec.shape.clone(), data)
+        })
+        .collect())
+}
+
+/// Load (if needed) and verify `variant` of `task` against its `ref`.
+pub fn verify_variant(
+    rt: &mut Runtime,
+    reg: &Registry,
+    task: &str,
+    variant: &str,
+    seed: u64,
+    tolerance: f64,
+    time_it: bool,
+) -> Result<VerifyReport> {
+    let entry = reg.task(task)?;
+    let ref_key = Registry::key(task, "ref");
+    let var_key = Registry::key(task, variant);
+    rt.load(&ref_key, &entry.variants["ref"].file)?;
+    rt.load(&var_key, &entry.variants[variant].file)?;
+
+    let inputs = seeded_inputs(reg, task, seed)?;
+    let expected = rt.execute(&ref_key, &inputs)?;
+    let got = rt.execute(&var_key, &inputs)?;
+    let max_abs_err = got.max_abs_diff(&expected);
+    let latency_s = if time_it {
+        Some(rt.time_execution(&var_key, &inputs, 2, 5)?)
+    } else {
+        None
+    };
+    Ok(VerifyReport {
+        task: task.to_string(),
+        variant: variant.to_string(),
+        max_abs_err,
+        tolerance,
+        passed: max_abs_err <= tolerance,
+        latency_s,
+    })
+}
+
+/// Verify every non-ref variant of every task in the registry.
+pub fn verify_all(rt: &mut Runtime, reg: &Registry, seed: u64, tolerance: f64) -> Result<Vec<VerifyReport>> {
+    let mut reports = Vec::new();
+    let tasks: Vec<String> = reg.tasks.keys().cloned().collect();
+    for task in tasks {
+        let variants: Vec<String> = reg
+            .task(&task)?
+            .variants
+            .keys()
+            .filter(|v| *v != "ref")
+            .cloned()
+            .collect();
+        for v in variants {
+            reports.push(verify_variant(rt, reg, &task, &v, seed, tolerance, false)?);
+        }
+    }
+    Ok(reports)
+}

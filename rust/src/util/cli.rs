@@ -1,0 +1,122 @@
+//! Hand-rolled CLI argument parsing (clap is not vendored offline).
+//!
+//! Grammar: `kernelskill <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["table1", "--seeds", "3", "--quiet", "--out=x.json"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.get("seeds"), Some("3"));
+        assert_eq!(a.get("out"), Some("x.json"));
+        assert!(a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "5", "--r", "0.25"]);
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_f64("r", 0.0).unwrap(), 0.25);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse(&["x", "--n", "zz"]).get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn switch_at_end_and_negative_number_value() {
+        let a = parse(&["run", "--thresh", "-0.5", "--verbose"]);
+        assert_eq!(a.get_f64("thresh", 0.0).unwrap(), -0.5);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+}

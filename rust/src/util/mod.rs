@@ -1,0 +1,11 @@
+//! Infrastructure layer: deterministic RNG, statistics, JSON, CLI parsing,
+//! thread pool, and logging. These stand in for rand/serde/clap/tokio,
+//! which are unavailable in the offline build environment (DESIGN.md
+//! §Infrastructure).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod stats;

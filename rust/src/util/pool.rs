@@ -1,0 +1,116 @@
+//! Tiny work-stealing-free thread pool (tokio is not vendored offline).
+//!
+//! The suite runner fans 250 tasks × strategies × seeds over this pool; each
+//! unit of work is CPU-bound (cost model + retrieval + loop), so a simple
+//! shared-queue pool with `available_parallelism` workers is the right shape.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Map `f` over `items` in parallel, preserving order of results.
+///
+/// `f` must be `Sync` (called from many threads) and items are handed out by
+/// index from an atomic counter — no per-item allocation or channel traffic.
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker completed"))
+        .collect()
+}
+
+/// Default worker count: physical parallelism minus one (leave a core for
+/// the harness/IO thread), at least 1.
+pub fn default_workers() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+/// Shared progress counter for long suite runs (printed by the harness).
+#[derive(Clone)]
+pub struct Progress {
+    done: Arc<AtomicUsize>,
+    total: usize,
+}
+
+impl Progress {
+    pub fn new(total: usize) -> Self {
+        Progress {
+            done: Arc::new(AtomicUsize::new(0)),
+            total,
+        }
+    }
+    pub fn tick(&self) -> usize {
+        self.done.fetch_add(1, Ordering::Relaxed) + 1
+    }
+    pub fn done(&self) -> usize {
+        self.done.load(Ordering::Relaxed)
+    }
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn progress_ticks() {
+        let p = Progress::new(10);
+        assert_eq!(p.tick(), 1);
+        assert_eq!(p.tick(), 2);
+        assert_eq!(p.done(), 2);
+        assert_eq!(p.total(), 10);
+    }
+}

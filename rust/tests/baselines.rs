@@ -1,0 +1,136 @@
+//! Baseline behavioral contracts: each re-implemented baseline must exhibit
+//! the qualitative behavior its paper describes (and that Table 1 encodes).
+
+use kernelskill::baselines;
+use kernelskill::bench_suite;
+use kernelskill::coordinator::{self, Branch, LoopConfig};
+use kernelskill::kir::transforms::MethodId;
+
+fn cfg() -> LoopConfig {
+    LoopConfig::default()
+}
+
+fn mean_speedup(suite: &coordinator::SuiteResult) -> f64 {
+    suite.results.iter().map(|r| r.best_speedup).sum::<f64>() / suite.results.len() as f64
+}
+
+#[test]
+fn kevin_ignores_profiling_feedback() {
+    // Kevin's first optimization move is dictated by its learned ordering,
+    // not by the profile: on an L2 chain it fuses first even though the
+    // GEMM dominates.
+    let tasks = bench_suite::level_suite(42, 2);
+    let task = tasks
+        .iter()
+        .find(|t| t.name == "gemm_epilogue")
+        .expect("gemm_epilogue task");
+    let r = coordinator::run_task(task, &baselines::kevin(), &cfg());
+    let first = r.rounds.iter().find_map(|rec| match rec.branch {
+        Branch::Optimize(m) => Some(m),
+        _ => None,
+    });
+    assert_eq!(first, Some(MethodId::FuseElementwise));
+}
+
+#[test]
+fn training_based_methods_degrade_on_l3() {
+    let l1: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(30).collect();
+    let l3: Vec<_> = bench_suite::level_suite(42, 3).into_iter().take(30).collect();
+    for strat in [baselines::kevin(), baselines::qimeng()] {
+        let s1 = coordinator::run_suite(&l1, &strat, &cfg(), &[0], 4);
+        let s3 = coordinator::run_suite(&l3, &strat, &cfg(), &[0], 4);
+        let succ1 = s1.results.iter().filter(|r| r.success).count() as f64 / 30.0;
+        let succ3 = s3.results.iter().filter(|r| r.success).count() as f64 / 30.0;
+        assert!(
+            succ3 <= succ1,
+            "{}: L3 success {succ3} should not beat L1 {succ1}",
+            strat.name
+        );
+    }
+}
+
+#[test]
+fn stark_is_the_strongest_baseline() {
+    let tasks: Vec<_> = bench_suite::level_suite(42, 2).into_iter().take(30).collect();
+    let stark = mean_speedup(&coordinator::run_suite(
+        &tasks,
+        &baselines::stark(),
+        &cfg(),
+        &[0],
+        4,
+    ));
+    for other in [baselines::kevin(), baselines::astra(), baselines::pragma()] {
+        let v = mean_speedup(&coordinator::run_suite(&tasks, &other, &cfg(), &[0], 4));
+        assert!(
+            stark > v,
+            "STARK {stark:.2} should beat {} {v:.2} on the L2 slice",
+            other.name
+        );
+    }
+}
+
+#[test]
+fn kernelskill_structured_gemm_advantage() {
+    // The heavy-tailed L1 wins require recognizing operand structure —
+    // long-term memory's feature-19 prompt. Judge/rule baselines never
+    // notice it.
+    let tasks: Vec<_> = bench_suite::level_suite(42, 1)
+        .into_iter()
+        .filter(|t| t.graph.structured_operands)
+        .collect();
+    assert!(tasks.len() >= 20);
+    let ks = coordinator::run_suite(&tasks, &baselines::kernelskill(), &cfg(), &[0], 4);
+    let cf = coordinator::run_suite(&tasks, &baselines::cudaforge(), &cfg(), &[0], 4);
+    let ks_mean = mean_speedup(&ks);
+    let cf_mean = mean_speedup(&cf);
+    assert!(
+        ks_mean > cf_mean * 3.0,
+        "structured tasks: KernelSkill {ks_mean:.2} vs CudaForge {cf_mean:.2}"
+    );
+}
+
+#[test]
+fn ablations_bracket_the_full_system() {
+    let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(40).collect();
+    let full = mean_speedup(&coordinator::run_suite(
+        &tasks,
+        &baselines::kernelskill(),
+        &cfg(),
+        &[0],
+        4,
+    ));
+    let wo_mem = mean_speedup(&coordinator::run_suite(
+        &tasks,
+        &baselines::wo_memory(),
+        &cfg(),
+        &[0],
+        4,
+    ));
+    let wo_lt = mean_speedup(&coordinator::run_suite(
+        &tasks,
+        &baselines::wo_long_term(),
+        &cfg(),
+        &[0],
+        4,
+    ));
+    assert!(full > wo_lt, "full {full:.2} vs w/o LT {wo_lt:.2}");
+    assert!(full > wo_mem, "full {full:.2} vs w/o memory {wo_mem:.2}");
+}
+
+#[test]
+fn pragma_mis_prioritizes_on_naive_gemm() {
+    // PRAGMA's flat rule map lacks the GEMM-restructure rule: it must never
+    // choose TileSmem on the motivating example.
+    let tasks = bench_suite::level_suite(42, 2);
+    let task = tasks.iter().find(|t| t.id.contains("fused_epilogue")).unwrap();
+    for seed in 0..3 {
+        let mut c = cfg();
+        c.run_seed = seed;
+        let r = coordinator::run_task(task, &baselines::pragma(), &c);
+        for rec in &r.rounds {
+            if let Branch::Optimize(m) = rec.branch {
+                assert_ne!(m, MethodId::TileSmem, "seed {seed}");
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration tests: the full loop over the real task suite, cross-module
+//! invariants, and the experiment harness end-to-end (small slices).
+
+use kernelskill::baselines;
+use kernelskill::bench_suite::{self, eager};
+use kernelskill::coordinator::{self, Branch, LoopConfig};
+use kernelskill::device::machine::DeviceSpec;
+use kernelskill::harness::metrics;
+use kernelskill::kir::transforms::MethodId;
+
+fn cfg() -> LoopConfig {
+    LoopConfig::default()
+}
+
+#[test]
+fn full_pipeline_on_l2_slice() {
+    let tasks: Vec<_> = bench_suite::level_suite(42, 2).into_iter().take(20).collect();
+    let suite = coordinator::run_suite(&tasks, &baselines::kernelskill(), &cfg(), &[0], 4);
+    assert_eq!(suite.results.len(), 20);
+    let refs: Vec<_> = suite.results.iter().collect();
+    let c = metrics::cell(&refs, 15);
+    assert!(c.success > 0.9, "KernelSkill should almost always succeed");
+    assert!(c.speedup > 1.5, "L2 slice should average well past eager, got {}", c.speedup);
+}
+
+#[test]
+fn kernelskill_beats_no_memory_on_every_level_slice() {
+    for level in [1u8, 2, 3] {
+        let take = if level == 3 { 12 } else { 25 };
+        let tasks: Vec<_> = bench_suite::level_suite(42, level).into_iter().take(take).collect();
+        let ks = coordinator::run_suite(&tasks, &baselines::kernelskill(), &cfg(), &[0], 4);
+        let nm = coordinator::run_suite(&tasks, &baselines::wo_memory(), &cfg(), &[0], 4);
+        let ks_mean: f64 =
+            ks.results.iter().map(|r| r.best_speedup).sum::<f64>() / take as f64;
+        let nm_mean: f64 =
+            nm.results.iter().map(|r| r.best_speedup).sum::<f64>() / take as f64;
+        assert!(
+            ks_mean > nm_mean,
+            "L{level}: KernelSkill {ks_mean:.2} vs w/o memory {nm_mean:.2}"
+        );
+    }
+}
+
+#[test]
+fn speedups_never_exceed_task_ceiling() {
+    let dev = DeviceSpec::a100_like();
+    let tasks: Vec<_> = bench_suite::full_suite(42).into_iter().take(60).collect();
+    let suite = coordinator::run_suite(&tasks, &baselines::kernelskill(), &cfg(), &[0], 4);
+    for (task, result) in tasks.iter().zip(&suite.results) {
+        let ceiling = eager::max_speedup(task, &dev);
+        assert!(
+            result.best_speedup <= ceiling * 1.05,
+            "{}: {} > ceiling {}",
+            task.id,
+            result.best_speedup,
+            ceiling
+        );
+    }
+}
+
+#[test]
+fn winning_schedules_are_structurally_valid_and_legal() {
+    let dev = DeviceSpec::a100_like();
+    let tasks: Vec<_> = bench_suite::full_suite(42).into_iter().take(40).collect();
+    let suite = coordinator::run_suite(&tasks, &baselines::kernelskill(), &cfg(), &[0], 4);
+    for (task, result) in tasks.iter().zip(&suite.results) {
+        assert!(result.best_sched.validate(&task.graph).is_ok(), "{}", task.id);
+        if result.success {
+            let errs = kernelskill::kir::legality::check(&task.graph, &result.best_sched, &dev);
+            assert!(errs.is_empty(), "{}: delivered kernel is illegal: {errs:?}", task.id);
+        }
+    }
+}
+
+#[test]
+fn motivating_example_first_move_is_gemm_not_fusion() {
+    let tasks = bench_suite::level_suite(42, 2);
+    let task = tasks.iter().find(|t| t.id.contains("fused_epilogue")).unwrap();
+    // Across several run seeds, KernelSkill's first optimization move on the
+    // Appendix-D task must be the GEMM fix, never fusion (§3).
+    for seed in 0..5 {
+        let mut c = cfg();
+        c.run_seed = seed;
+        let r = coordinator::run_task(task, &baselines::kernelskill(), &c);
+        let first = r.rounds.iter().find_map(|rec| match rec.branch {
+            Branch::Optimize(m) => Some(m),
+            _ => None,
+        });
+        assert_eq!(first, Some(MethodId::TileSmem), "seed {seed}");
+    }
+}
+
+#[test]
+fn repair_memory_prevents_budget_exhaustion() {
+    // On the repair-heavy L3 slice, KernelSkill (with repair memory) must
+    // succeed strictly more often than the same policy without it.
+    let tasks: Vec<_> = bench_suite::level_suite(42, 3).into_iter().collect();
+    let with_mem = coordinator::run_suite(&tasks, &baselines::kernelskill(), &cfg(), &[0, 1], 4);
+    let without = coordinator::run_suite(&tasks, &baselines::wo_short_term(), &cfg(), &[0, 1], 4);
+    let s_with = with_mem.results.iter().filter(|r| r.success).count();
+    let s_without = without.results.iter().filter(|r| r.success).count();
+    assert!(
+        s_with >= s_without,
+        "repair memory should not hurt success ({s_with} vs {s_without})"
+    );
+}
+
+#[test]
+fn stark_uses_its_30_round_budget() {
+    let tasks: Vec<_> = bench_suite::level_suite(42, 3).into_iter().take(8).collect();
+    let suite = coordinator::run_suite(&tasks, &baselines::stark(), &cfg(), &[0], 4);
+    assert!(suite.results.iter().any(|r| r.rounds_used > 15));
+}
+
+#[test]
+fn results_deterministic_across_parallelism() {
+    let tasks: Vec<_> = bench_suite::level_suite(42, 2).into_iter().take(10).collect();
+    let a = coordinator::run_suite(&tasks, &baselines::cudaforge(), &cfg(), &[3], 1);
+    let b = coordinator::run_suite(&tasks, &baselines::cudaforge(), &cfg(), &[3], 8);
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.best_speedup, y.best_speedup, "{}", x.task_id);
+        assert_eq!(x.rounds.len(), y.rounds.len());
+    }
+}
+
+#[test]
+fn audit_trail_present_for_decision_policy_runs() {
+    use kernelskill::device::costmodel::price;
+    use kernelskill::device::metrics::{synthesize, ToolVersion};
+    use kernelskill::kir::features::ground_truth;
+    use kernelskill::kir::schedule::Schedule;
+    use kernelskill::memory::long_term::retrieval;
+    let tasks = bench_suite::level_suite(42, 2);
+    let task = &tasks[1];
+    let sched = Schedule::per_op_naive(&task.graph);
+    let dev = DeviceSpec::a100_like();
+    let cost = price(&task.graph, &sched, &dev);
+    let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+    let feats = ground_truth(&task.graph, &sched);
+    let r = retrieval::retrieve_for(task, &feats, &raw);
+    let audit = r.audit();
+    assert!(audit.contains("bottleneck="));
+    assert!(audit.contains("allowed:"));
+    // Traceability: the matched case must justify every allowed method.
+    if let Some(case_id) = r.matched_case {
+        let case = kernelskill::memory::long_term::kb_content::DECISION_TABLE
+            .iter()
+            .find(|c| c.id == case_id)
+            .unwrap();
+        for m in &r.allowed_methods {
+            assert!(case.allowed_methods.contains(m));
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Property-based tests over coordinator/kir invariants (hand-rolled
+//! generators over the seeded RNG — the proptest crate is unavailable
+//! offline, so each property sweeps a few hundred random cases).
+
+use kernelskill::bench_suite::eager;
+use kernelskill::device::costmodel;
+use kernelskill::device::machine::DeviceSpec;
+use kernelskill::kir::graph::KernelGraph;
+use kernelskill::kir::op::{EwKind, NormKind, OpKind, RedKind};
+use kernelskill::kir::schedule::Schedule;
+use kernelskill::kir::transforms::{self, ALL_METHODS};
+use kernelskill::memory::short_term::OptMemory;
+use kernelskill::util::rng::Rng;
+
+/// Random DAG generator: 1..=16 ops, chain-with-skips topology.
+fn random_graph(rng: &mut Rng) -> KernelGraph {
+    let mut g = KernelGraph::new();
+    let n = rng.range_usize(1, 17);
+    for i in 0..n {
+        let m = 8 * rng.range(1, 129);
+        let nn = 8 * rng.range(1, 129);
+        let k = 8 * rng.range(1, 129);
+        let kind = match rng.range(0, 8) {
+            0 => OpKind::MatMul,
+            1 => OpKind::Conv,
+            2 => OpKind::Elementwise(EwKind::Relu),
+            3 => OpKind::Elementwise(EwKind::Gelu),
+            4 => OpKind::Reduction(RedKind::Row),
+            5 => OpKind::Norm(NormKind::Softmax),
+            6 => OpKind::Transpose,
+            _ => OpKind::Elementwise(EwKind::Add),
+        };
+        let inputs = if i == 0 || rng.chance(0.15) {
+            vec![]
+        } else {
+            vec![rng.range_usize(0, i)]
+        };
+        let kk = if matches!(kind, OpKind::MatMul | OpKind::Conv) { k } else { 1 };
+        g.push(kind, m, nn, kk, inputs);
+    }
+    if rng.chance(0.2) {
+        g.structured_operands = true;
+    }
+    g
+}
+
+/// Apply a random sequence of applicable transforms.
+fn random_schedule(rng: &mut Rng, g: &KernelGraph) -> Schedule {
+    let mut s = Schedule::per_op_naive(g);
+    for _ in 0..rng.range_usize(0, 12) {
+        let m = *rng.choose(&ALL_METHODS);
+        let tg = rng.range_usize(0, s.num_kernels());
+        if transforms::applicable_at(m, g, &s, tg).is_ok() {
+            transforms::apply_at(m, g, &mut s, tg);
+        }
+    }
+    s
+}
+
+#[test]
+fn prop_transforms_preserve_schedule_validity() {
+    let mut rng = Rng::new(101);
+    for _ in 0..300 {
+        let g = random_graph(&mut rng);
+        let s = random_schedule(&mut rng, &g);
+        assert!(s.validate(&g).is_ok(), "graph={} ops", g.len());
+    }
+}
+
+#[test]
+fn prop_cost_is_positive_and_roofline_bounded() {
+    let mut rng = Rng::new(102);
+    let dev = DeviceSpec::a100_like();
+    for _ in 0..300 {
+        let g = random_graph(&mut rng);
+        let s = random_schedule(&mut rng, &g);
+        let cost = costmodel::price(&g, &s, &dev);
+        assert!(cost.total_s.is_finite() && cost.total_s > 0.0);
+        let rl = costmodel::roofline_s(&g, &dev);
+        assert!(
+            cost.total_s >= rl * 0.999,
+            "cost {} below roofline {}",
+            cost.total_s,
+            rl
+        );
+        let legal_rl = costmodel::legal_roofline_s(&g, &dev);
+        assert!(legal_rl >= rl * 0.999, "legal roofline below ideal roofline");
+    }
+}
+
+#[test]
+fn prop_applicable_respects_apply_idempotence_guards() {
+    // After applying a knob method everywhere, it must not remain
+    // applicable at any group (no infinite self-application).
+    let mut rng = Rng::new(103);
+    let idempotent_guarded = [
+        transforms::MethodId::TileSmem,
+        transforms::MethodId::UseTensorCore,
+        transforms::MethodId::VectorizeLoads,
+        transforms::MethodId::DoubleBuffer,
+        transforms::MethodId::PadScratch,
+        transforms::MethodId::UnrollInner,
+        transforms::MethodId::PrecisionDowncast,
+        transforms::MethodId::SpecializeStructure,
+    ];
+    for _ in 0..200 {
+        let g = random_graph(&mut rng);
+        let mut s = random_schedule(&mut rng, &g);
+        for &m in &idempotent_guarded {
+            if transforms::applicable_at(m, &g, &s, 0).is_ok() {
+                transforms::apply_at(m, &g, &mut s, 0);
+                assert!(
+                    transforms::applicable_at(m, &g, &s, 0).is_err(),
+                    "{m:?} still applicable after whole-program apply"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fusion_methods_reduce_or_keep_kernel_count() {
+    let mut rng = Rng::new(104);
+    for _ in 0..200 {
+        let g = random_graph(&mut rng);
+        let mut s = Schedule::per_op_naive(&g);
+        let before = s.num_kernels();
+        for m in [
+            transforms::MethodId::FuseElementwise,
+            transforms::MethodId::FuseEpilogueReduction,
+            transforms::MethodId::HorizontalFuse,
+        ] {
+            if transforms::applicable(m, &g, &s).is_ok() {
+                transforms::apply(m, &g, &mut s);
+            }
+        }
+        assert!(s.num_kernels() <= before);
+        assert!(s.validate(&g).is_ok());
+    }
+}
+
+#[test]
+fn prop_speedup_monotone_in_custom_time() {
+    // For any task, a schedule with lower custom_time has higher speedup.
+    let mut rng = Rng::new(105);
+    let dev = DeviceSpec::a100_like();
+    let tasks = kernelskill::bench_suite::full_suite(42);
+    for _ in 0..100 {
+        let task = &tasks[rng.range_usize(0, tasks.len())];
+        let a = random_schedule(&mut rng, &task.graph);
+        let b = random_schedule(&mut rng, &task.graph);
+        let (ta, tb) = (
+            eager::custom_time_s(task, &a, &dev),
+            eager::custom_time_s(task, &b, &dev),
+        );
+        let (sa, sb) = (eager::speedup(task, &a, &dev), eager::speedup(task, &b, &dev));
+        if ta < tb {
+            assert!(sa >= sb, "{}: time {ta} < {tb} but speedup {sa} < {sb}", task.id);
+        }
+    }
+}
+
+#[test]
+fn prop_opt_memory_promotion_is_threshold_exact() {
+    let mut rng = Rng::new(106);
+    for _ in 0..500 {
+        let base = rng.log_uniform(0.05, 10.0);
+        let cand = rng.log_uniform(0.05, 10.0);
+        let mem = OptMemory::new(0.3, 0.3, base);
+        let expect = cand / base > 1.3 || cand - base > 0.3;
+        assert_eq!(mem.should_promote(cand), expect, "base={base} cand={cand}");
+    }
+}
+
+#[test]
+fn prop_feature_extraction_total_and_bounded() {
+    let mut rng = Rng::new(107);
+    for _ in 0..200 {
+        let g = random_graph(&mut rng);
+        let s = random_schedule(&mut rng, &g);
+        for focus in 0..s.num_kernels() {
+            let f = kernelskill::kir::features::ground_truth_at(&g, &s, focus);
+            assert!(f.kernel_launches as usize == s.num_kernels());
+            assert!(f.register_pressure <= 2);
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Runtime integration: real PJRT execution of the AOT Pallas artifacts —
+//! the L1/L2 <-> L3 bridge. Requires `make artifacts` (skips otherwise).
+
+use kernelskill::runtime::{self, Registry, Runtime, Tensor};
+
+fn registry() -> Option<Registry> {
+    Registry::load("artifacts").ok()
+}
+
+#[test]
+fn all_variants_verify_against_reference() {
+    let Some(reg) = registry() else {
+        eprintln!("artifacts not built; skipping");
+        return;
+    };
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let reports = runtime::verify_all(&mut rt, &reg, 7, 1e-3).unwrap();
+    assert!(!reports.is_empty());
+    for r in &reports {
+        assert!(r.passed, "{}/{}: err {}", r.task, r.variant, r.max_abs_err);
+    }
+}
+
+#[test]
+fn verification_is_input_seed_sensitive_but_stable() {
+    let Some(reg) = registry() else { return };
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let a = runtime::verify_variant(&mut rt, &reg, "softmax", "rowblock", 1, 1e-3, false).unwrap();
+    let b = runtime::verify_variant(&mut rt, &reg, "softmax", "rowblock", 1, 1e-3, false).unwrap();
+    let c = runtime::verify_variant(&mut rt, &reg, "softmax", "rowblock", 2, 1e-3, false).unwrap();
+    assert_eq!(a.max_abs_err, b.max_abs_err, "same seed => same inputs");
+    assert!(a.passed && c.passed);
+}
+
+#[test]
+fn executes_with_correct_shapes() {
+    let Some(reg) = registry() else { return };
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let entry = reg.task("matmul").unwrap().clone();
+    rt.load("matmul/ref", &entry.variants["ref"].file).unwrap();
+    let inputs = runtime::verify::seeded_inputs(&reg, "matmul", 3).unwrap();
+    let out = rt.execute("matmul/ref", &inputs).unwrap();
+    assert_eq!(out.shape, vec![256, 512]);
+    assert!(out.data.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn tensor_diff_math() {
+    let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let b = Tensor::new(vec![2, 2], vec![1.0, 2.5, 3.0, 3.0]);
+    assert_eq!(a.max_abs_diff(&b), 1.0);
+    assert_eq!(a.max_abs_diff(&a), 0.0);
+}
+
+#[test]
+fn missing_artifact_is_an_error_not_a_panic() {
+    let Some(reg) = registry() else { return };
+    let mut rt = Runtime::new("artifacts").unwrap();
+    assert!(rt.execute("nope/nope", &[]).is_err());
+    assert!(runtime::verify_variant(&mut rt, &reg, "nope", "ref", 0, 1e-3, false).is_err());
+}
+
+#[test]
+fn epilogue_fused_variant_matches_reference_closely() {
+    // The tiled_fused kernel restructures logsumexp (running-max rewrite);
+    // numerics must still be tight — this is the FuseEpilogueReduction
+    // method's "numerically unstable if the rewrite is skipped" risk,
+    // checked for real.
+    let Some(reg) = registry() else { return };
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let r = runtime::verify_variant(&mut rt, &reg, "fused_epilogue", "tiled_fused", 11, 1e-3, false)
+        .unwrap();
+    assert!(r.passed, "err {}", r.max_abs_err);
+    assert!(r.max_abs_err < 1e-3);
+}
