@@ -25,7 +25,7 @@ use kernelskill::kir::schedule::Schedule;
 use kernelskill::kir::transforms::{self, MethodId};
 use kernelskill::runtime::{verify_variant, Registry, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> kernelskill::util::error::Result<()> {
     println!("== stage 1: real artifacts (CPU PJRT; numerics + measured latency) ==");
     let reg = Registry::load("artifacts")?;
     let mut rt = Runtime::new("artifacts")?;

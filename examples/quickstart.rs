@@ -12,7 +12,7 @@ use kernelskill::bench_suite;
 use kernelskill::coordinator::{self, Branch, LoopConfig};
 use kernelskill::runtime::{self, Registry, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> kernelskill::util::error::Result<()> {
     // ---- 1. real AOT path: load + verify every Pallas variant ----------
     let reg = Registry::load("artifacts")?;
     let mut rt = Runtime::new("artifacts")?;

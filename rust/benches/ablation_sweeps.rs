@@ -113,6 +113,31 @@ fn main() {
                 metrics::fast_p(&split[2], p)
             );
         }
+        println!();
+
+        // ---- persistent-memory transfer sweep ----------------------------
+        // Learn skills on Level 1, then warm-start Levels 2-3 from the
+        // persisted store — the orchestration-v2 cross-task transfer path.
+        println!("Persistent-memory transfer (skills learned on L1, applied to L2/L3):");
+        let mem = std::env::temp_dir().join(format!("ks-ablation-mem-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&mem);
+        let mut warm_cfg = LoopConfig::default();
+        warm_cfg.memory_dir = Some(mem.clone());
+        let l1: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(50).collect();
+        coordinator::run_suite(&l1, &baselines::kernelskill(), &warm_cfg, &[0], workers);
+        for level in [2u8, 3] {
+            let lv: Vec<_> = bench_suite::level_suite(42, level).into_iter().take(25).collect();
+            let cold =
+                coordinator::run_suite(&lv, &baselines::kernelskill(), &LoopConfig::default(), &[0], workers);
+            let warm =
+                coordinator::run_suite(&lv, &baselines::kernelskill(), &warm_cfg, &[0], workers);
+            println!(
+                "  L{level}: cold {:.2}x vs warm {:.2}x",
+                mean_speedup(&cold.results),
+                mean_speedup(&warm.results)
+            );
+        }
+        let _ = std::fs::remove_dir_all(&mem);
     });
     println!("\n[{}]", timing.report());
 }

@@ -11,7 +11,18 @@ fn main() {
         let n: u64 = seeds.parse().unwrap_or(1);
         cfg.run_seeds = (0..n).collect();
     }
-    let ((rendered, rows), timing) = time_once("table1(full suite)", || experiments::table1(&cfg));
+    // Orchestration v2: stream every finished cell to a checkpoint dir and
+    // resume a killed bench (KS_RUN_DIR + KS_RESUME=1); warm-start and
+    // persist the long-term skill store with KS_MEMORY_DIR.
+    if let Ok(dir) = std::env::var("KS_RUN_DIR") {
+        cfg.run_dir = Some(dir.into());
+        cfg.resume = std::env::var("KS_RESUME").map(|v| v == "1").unwrap_or(false);
+    }
+    if let Ok(dir) = std::env::var("KS_MEMORY_DIR") {
+        cfg.memory_dir = Some(dir.into());
+    }
+    let ((rendered, rows), timing) =
+        time_once("table1(full suite)", || experiments::table1(&cfg).expect("table1 run failed"));
     println!("Table 1 — Success and Speedup vs Torch Eager (paper Table 1)");
     println!("{rendered}");
     println!("Per-round refinement efficiency (§5.4; speedup / budget rounds)");

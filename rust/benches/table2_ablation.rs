@@ -7,7 +7,7 @@ use kernelskill::harness::experiments::{self, ExpConfig};
 fn main() {
     let cfg = ExpConfig::default();
     let ((rendered, rows), timing) =
-        time_once("table2(ablations)", || experiments::table2(&cfg));
+        time_once("table2(ablations)", || experiments::table2(&cfg).expect("table2 run failed"));
     println!("Table 2 — Ablation results (paper Table 2)");
     println!("{rendered}");
     println!("[{}]", timing.report());

@@ -6,7 +6,8 @@ use kernelskill::harness::experiments::{self, ExpConfig};
 
 fn main() {
     let cfg = ExpConfig::default();
-    let ((rendered, rows), timing) = time_once("table3(fast1)", || experiments::table3(&cfg));
+    let ((rendered, rows), timing) =
+        time_once("table3(fast1)", || experiments::table3(&cfg).expect("table3 run failed"));
     println!("Table 3 — Fast_1 (paper Table 3)");
     println!("{rendered}");
     println!("[{}]", timing.report());

@@ -206,6 +206,15 @@ pub fn table2_roster() -> Vec<Strategy> {
     vec![wo_memory(), wo_short_term(), wo_long_term(), kernelskill()]
 }
 
+/// Resolve any roster strategy by (case-insensitive) name — shared by the
+/// CLI and by checkpoint readers rebuilding tables from streamed results.
+pub fn by_name(name: &str) -> Option<Strategy> {
+    table1_roster()
+        .into_iter()
+        .chain(table2_roster())
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

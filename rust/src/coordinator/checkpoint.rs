@@ -1,0 +1,604 @@
+//! Run-directory checkpointing: incremental JSONL result streaming and
+//! resume for suite runs.
+//!
+//! A run directory holds:
+//!   * `manifest.json`  — the matrix shape (task count, seeds, rt/at, task
+//!     fingerprint); resume refuses a directory written for a different
+//!     matrix.
+//!   * `results.jsonl`  — one line per completed `(strategy, task, seed)`
+//!     cell, appended *as cells finish* (not when the matrix completes), so
+//!     a killed run loses at most the in-flight cells.
+//!   * `memory_snapshot.<strategy>.json` — the skill-store warm-start
+//!     snapshot taken at each strategy's run start; resume reloads it so
+//!     warm-started retrieval is byte-identical to the uninterrupted run.
+//!
+//! Serialization is the full [`TaskResult`] — including the per-round trace
+//! and the winning schedule — via the repo's own JSON layer (serde is not
+//! vendored offline). f64 round-trips exactly (Rust's `Display` prints the
+//! shortest representation that parses back to the same bits), which is what
+//! makes resumed aggregates byte-identical to uninterrupted ones.
+
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use super::loop_runner::{Branch, RoundRecord, TaskResult};
+use crate::kir::schedule::{GroupSchedule, Layout, Precision, Schedule};
+use crate::kir::transforms::MethodId;
+use crate::memory::long_term::SkillObs;
+use crate::util::json::{self, Json};
+use crate::util::rng::label;
+
+/// Identity of one cell in the (strategy × task × seed) matrix.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellKey {
+    pub strategy: String,
+    pub task_id: String,
+    pub seed: u64,
+}
+
+/// Matrix shape recorded at run start; resume validates against it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunManifest {
+    pub n_tasks: usize,
+    pub seeds: Vec<u64>,
+    pub rt: f64,
+    pub at: f64,
+    /// Order-sensitive fold of the task ids.
+    pub fingerprint: u64,
+}
+
+impl RunManifest {
+    pub fn fingerprint_tasks(task_ids: &[&str]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &id in task_ids {
+            h = h.rotate_left(5) ^ label(id);
+        }
+        h
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            ("n_tasks", json::num(self.n_tasks as f64)),
+            (
+                "seeds",
+                json::arr(self.seeds.iter().map(|s| json::s(&s.to_string())).collect()),
+            ),
+            ("rt", json::num(self.rt)),
+            ("at", json::num(self.at)),
+            ("fingerprint", json::s(&self.fingerprint.to_string())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<RunManifest, String> {
+        let n_tasks = j
+            .get("n_tasks")
+            .and_then(|v| v.as_usize())
+            .ok_or("manifest missing n_tasks")?;
+        let seeds = j
+            .get("seeds")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest missing seeds")?
+            .iter()
+            .map(|s| parse_u64(s, "seed"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let rt = j.get("rt").and_then(|v| v.as_f64()).ok_or("manifest missing rt")?;
+        let at = j.get("at").and_then(|v| v.as_f64()).ok_or("manifest missing at")?;
+        let fingerprint = j
+            .get("fingerprint")
+            .map(|f| parse_u64(f, "fingerprint"))
+            .transpose()?
+            .unwrap_or(0);
+        Ok(RunManifest {
+            n_tasks,
+            seeds,
+            rt,
+            at,
+            fingerprint,
+        })
+    }
+}
+
+/// Handle on a run directory.
+#[derive(Debug, Clone)]
+pub struct RunDir {
+    root: PathBuf,
+}
+
+impl RunDir {
+    /// Open (creating if needed) a run directory.
+    pub fn open<P: AsRef<Path>>(root: P) -> io::Result<RunDir> {
+        std::fs::create_dir_all(root.as_ref())?;
+        Ok(RunDir {
+            root: root.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn results_path(&self) -> PathBuf {
+        self.root.join("results.jsonl")
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    /// Skill-store warm-start snapshot for one strategy. Per-strategy files:
+    /// in a matrix run, later strategies legitimately start from a live
+    /// store that already includes earlier strategies' merges, so each
+    /// strategy's snapshot must be captured (and resumed from) separately.
+    pub fn memory_snapshot_path(&self, strategy: &str) -> PathBuf {
+        let slug: String = strategy
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        self.root.join(format!("memory_snapshot.{slug}.json"))
+    }
+
+    /// True once at least one result line has been streamed.
+    pub fn has_results(&self) -> bool {
+        std::fs::metadata(self.results_path())
+            .map(|m| m.len() > 0)
+            .unwrap_or(false)
+    }
+
+    pub fn write_manifest(&self, m: &RunManifest) -> io::Result<()> {
+        std::fs::write(self.manifest_path(), format!("{}\n", m.to_json()))
+    }
+
+    pub fn read_manifest(&self) -> Result<Option<RunManifest>, String> {
+        let path = self.manifest_path();
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("reading {path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("parsing {path:?}: {e}"))?;
+        RunManifest::from_json(&j).map(Some)
+    }
+
+    /// Append one completed cell to `results.jsonl` and flush. One line per
+    /// call; a crash can only tear the final line, which `load` tolerates.
+    pub fn append(&self, key: &CellKey, r: &TaskResult) -> io::Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.results_path())?;
+        f.write_all(format!("{}\n", result_to_json(key, r)).as_bytes())?;
+        f.flush()
+    }
+
+    /// Load all completed cells. Unparseable lines (torn tail of a killed
+    /// run) are skipped with a warning; later duplicates of a key win.
+    pub fn load(&self) -> io::Result<BTreeMap<CellKey, TaskResult>> {
+        let path = self.results_path();
+        let mut out = BTreeMap::new();
+        if !path.exists() {
+            return Ok(out);
+        }
+        let text = std::fs::read_to_string(&path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(line)
+                .map_err(|e| e.to_string())
+                .and_then(|j| result_from_json(&j));
+            match parsed {
+                Ok((key, result)) => {
+                    out.insert(key, result);
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "checkpoint {}:{}: skipping unparseable line ({e})",
+                        path.display(),
+                        lineno + 1
+                    );
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ------------------------------------------------------------------------
+// TaskResult <-> JSON
+// ------------------------------------------------------------------------
+
+fn precision_name(p: Precision) -> &'static str {
+    match p {
+        Precision::F32 => "f32",
+        Precision::Tf32 => "tf32",
+        Precision::Bf16Acc32 => "bf16acc32",
+    }
+}
+
+fn precision_from(s: &str) -> Result<Precision, String> {
+    match s {
+        "f32" => Ok(Precision::F32),
+        "tf32" => Ok(Precision::Tf32),
+        "bf16acc32" => Ok(Precision::Bf16Acc32),
+        other => Err(format!("unknown precision {other:?}")),
+    }
+}
+
+fn layout_name(l: Layout) -> &'static str {
+    match l {
+        Layout::Coalesced => "coalesced",
+        Layout::Strided => "strided",
+        Layout::Tiled => "tiled",
+    }
+}
+
+fn layout_from(s: &str) -> Result<Layout, String> {
+    match s {
+        "coalesced" => Ok(Layout::Coalesced),
+        "strided" => Ok(Layout::Strided),
+        "tiled" => Ok(Layout::Tiled),
+        other => Err(format!("unknown layout {other:?}")),
+    }
+}
+
+fn group_to_json(g: &GroupSchedule) -> Json {
+    json::obj(vec![
+        ("tile_m", json::num(g.tile_m as f64)),
+        ("tile_n", json::num(g.tile_n as f64)),
+        ("tile_k", json::num(g.tile_k as f64)),
+        ("staging", Json::Bool(g.staging)),
+        ("vector_width", json::num(g.vector_width as f64)),
+        ("mxu", Json::Bool(g.mxu)),
+        ("precision", json::s(precision_name(g.precision))),
+        ("double_buffer", Json::Bool(g.double_buffer)),
+        ("layout", json::s(layout_name(g.layout))),
+        ("unroll", json::num(g.unroll as f64)),
+        ("block_threads", json::num(g.block_threads as f64)),
+        ("smem_padding", Json::Bool(g.smem_padding)),
+        ("split_k", json::num(g.split_k as f64)),
+    ])
+}
+
+fn get_f(j: &Json, k: &str) -> Result<f64, String> {
+    j.get(k)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("missing number {k}"))
+}
+
+fn get_b(j: &Json, k: &str) -> Result<bool, String> {
+    match j.get(k) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(format!("missing bool {k}")),
+    }
+}
+
+fn get_s<'a>(j: &'a Json, k: &str) -> Result<&'a str, String> {
+    j.get(k)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("missing string {k}"))
+}
+
+fn get_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json], String> {
+    j.get(k)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("missing array {k}"))
+}
+
+/// Optional float: absent or null reads as None.
+fn get_opt_f(j: &Json, k: &str) -> Option<f64> {
+    j.get(k).and_then(|v| v.as_f64())
+}
+
+fn parse_u64(j: &Json, what: &str) -> Result<u64, String> {
+    match j {
+        Json::Str(s) => s.parse::<u64>().map_err(|e| format!("bad {what}: {e}")),
+        Json::Num(n) => Ok(*n as u64),
+        _ => Err(format!("bad {what}")),
+    }
+}
+
+fn group_from_json(j: &Json) -> Result<GroupSchedule, String> {
+    Ok(GroupSchedule {
+        tile_m: get_f(j, "tile_m")? as u64,
+        tile_n: get_f(j, "tile_n")? as u64,
+        tile_k: get_f(j, "tile_k")? as u64,
+        staging: get_b(j, "staging")?,
+        vector_width: get_f(j, "vector_width")? as u8,
+        mxu: get_b(j, "mxu")?,
+        precision: precision_from(get_s(j, "precision")?)?,
+        double_buffer: get_b(j, "double_buffer")?,
+        layout: layout_from(get_s(j, "layout")?)?,
+        unroll: get_f(j, "unroll")? as u8,
+        block_threads: get_f(j, "block_threads")? as u32,
+        smem_padding: get_b(j, "smem_padding")?,
+        split_k: get_f(j, "split_k")? as u32,
+    })
+}
+
+pub fn schedule_to_json(s: &Schedule) -> Json {
+    json::obj(vec![
+        (
+            "groups",
+            json::arr(
+                s.groups
+                    .iter()
+                    .map(|g| json::arr(g.iter().map(|&op| json::num(op as f64)).collect()))
+                    .collect(),
+            ),
+        ),
+        ("cfg", json::arr(s.cfg.iter().map(group_to_json).collect())),
+        ("specialized", Json::Bool(s.specialized)),
+    ])
+}
+
+pub fn schedule_from_json(j: &Json) -> Result<Schedule, String> {
+    let mut groups = Vec::new();
+    for g in get_arr(j, "groups")? {
+        let ops = g.as_arr().ok_or("group is not an array")?;
+        let mut ids = Vec::new();
+        for op in ops {
+            ids.push(op.as_usize().ok_or("bad op id")?);
+        }
+        groups.push(ids);
+    }
+    let mut cfg = Vec::new();
+    for c in get_arr(j, "cfg")? {
+        cfg.push(group_from_json(c)?);
+    }
+    Ok(Schedule {
+        groups,
+        cfg,
+        specialized: get_b(j, "specialized")?,
+    })
+}
+
+fn branch_to_json(b: &Branch) -> Json {
+    match b {
+        Branch::Optimize(m) => json::obj(vec![("t", json::s("optimize")), ("m", json::s(m.name()))]),
+        Branch::Repair(fix) => json::obj(vec![("t", json::s("repair")), ("fix", json::num(*fix as f64))]),
+        Branch::Revert => json::obj(vec![("t", json::s("revert"))]),
+        Branch::Converged => json::obj(vec![("t", json::s("converged"))]),
+    }
+}
+
+fn branch_from_json(j: &Json) -> Result<Branch, String> {
+    match get_s(j, "t")? {
+        "optimize" => {
+            let name = get_s(j, "m")?;
+            let m = MethodId::from_name(name).ok_or_else(|| format!("unknown method {name:?}"))?;
+            Ok(Branch::Optimize(m))
+        }
+        "repair" => Ok(Branch::Repair(get_f(j, "fix")? as u8)),
+        "revert" => Ok(Branch::Revert),
+        "converged" => Ok(Branch::Converged),
+        other => Err(format!("unknown branch {other:?}")),
+    }
+}
+
+fn round_to_json(r: &RoundRecord) -> Json {
+    json::obj(vec![
+        ("round", json::num(r.round as f64)),
+        ("branch", branch_to_json(&r.branch)),
+        ("compiled", Json::Bool(r.compiled)),
+        ("correct", Json::Bool(r.correct)),
+        ("speedup", r.speedup.map(json::num).unwrap_or(Json::Null)),
+        ("version", json::num(r.version as f64)),
+    ])
+}
+
+fn round_from_json(j: &Json) -> Result<RoundRecord, String> {
+    Ok(RoundRecord {
+        round: get_f(j, "round")? as u32,
+        branch: branch_from_json(j.get("branch").ok_or("missing branch")?)?,
+        compiled: get_b(j, "compiled")?,
+        correct: get_b(j, "correct")?,
+        speedup: get_opt_f(j, "speedup"),
+        version: get_f(j, "version")? as u32,
+    })
+}
+
+fn obs_to_json(o: &SkillObs) -> Json {
+    json::obj(vec![
+        ("case", json::s(&o.case_id)),
+        ("method", json::s(o.method.name())),
+        ("gain", o.gain.map(json::num).unwrap_or(Json::Null)),
+    ])
+}
+
+fn obs_from_json(j: &Json) -> Result<SkillObs, String> {
+    let name = get_s(j, "method")?;
+    Ok(SkillObs {
+        case_id: get_s(j, "case")?.to_string(),
+        method: MethodId::from_name(name).ok_or_else(|| format!("unknown method {name:?}"))?,
+        gain: get_opt_f(j, "gain"),
+    })
+}
+
+/// Serialize one completed cell (key + full result) to a JSONL value.
+pub fn result_to_json(key: &CellKey, r: &TaskResult) -> Json {
+    json::obj(vec![
+        ("strategy", json::s(&key.strategy)),
+        ("task_id", json::s(&r.task_id)),
+        ("seed", json::s(&key.seed.to_string())),
+        ("level", json::num(r.level as f64)),
+        ("success", Json::Bool(r.success)),
+        ("best_speedup", json::num(r.best_speedup)),
+        ("seed_speedup", r.seed_speedup.map(json::num).unwrap_or(Json::Null)),
+        ("rounds_used", json::num(r.rounds_used as f64)),
+        ("rounds", json::arr(r.rounds.iter().map(round_to_json).collect())),
+        ("promotions", json::num(r.promotions as f64)),
+        ("repair_attempts", json::num(r.repair_attempts as f64)),
+        (
+            "longest_repair_chain",
+            json::num(r.longest_repair_chain as f64),
+        ),
+        ("best_sched", schedule_to_json(&r.best_sched)),
+        ("skill_obs", json::arr(r.skill_obs.iter().map(obs_to_json).collect())),
+    ])
+}
+
+/// Map a strategy name from disk back to its `&'static str`. Known roster
+/// names are interned; unknown ones are leaked once per distinct name
+/// (memoized process-wide, so loading a large checkpoint leaks at most one
+/// allocation per strategy, not one per line).
+pub fn intern_strategy_name(name: &str) -> &'static str {
+    use std::sync::{Mutex, OnceLock};
+    static ROSTER: OnceLock<Vec<&'static str>> = OnceLock::new();
+    static EXTRA: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    let roster = ROSTER.get_or_init(|| {
+        crate::baselines::table1_roster()
+            .into_iter()
+            .chain(crate::baselines::table2_roster())
+            .map(|s| s.name)
+            .collect()
+    });
+    if let Some(&n) = roster.iter().find(|&&n| n == name) {
+        return n;
+    }
+    let mut extra = EXTRA.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap();
+    if let Some(&n) = extra.iter().find(|&&n| n == name) {
+        return n;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    extra.push(leaked);
+    leaked
+}
+
+/// Deserialize one JSONL line back into its key + result.
+pub fn result_from_json(j: &Json) -> Result<(CellKey, TaskResult), String> {
+    let strategy = get_s(j, "strategy")?.to_string();
+    let task_id = get_s(j, "task_id")?.to_string();
+    let seed = parse_u64(j.get("seed").ok_or("missing seed")?, "seed")?;
+    let mut rounds = Vec::new();
+    for r in get_arr(j, "rounds")? {
+        rounds.push(round_from_json(r)?);
+    }
+    let mut skill_obs = Vec::new();
+    for o in get_arr(j, "skill_obs")? {
+        skill_obs.push(obs_from_json(o)?);
+    }
+    let result = TaskResult {
+        task_id: task_id.clone(),
+        level: get_f(j, "level")? as u8,
+        strategy: intern_strategy_name(&strategy),
+        success: get_b(j, "success")?,
+        best_speedup: get_f(j, "best_speedup")?,
+        seed_speedup: get_opt_f(j, "seed_speedup"),
+        rounds_used: get_f(j, "rounds_used")? as u32,
+        rounds,
+        promotions: get_f(j, "promotions")? as u32,
+        repair_attempts: get_f(j, "repair_attempts")? as usize,
+        longest_repair_chain: get_f(j, "longest_repair_chain")? as usize,
+        best_sched: schedule_from_json(j.get("best_sched").ok_or("missing best_sched")?)?,
+        skill_obs,
+    };
+    Ok((
+        CellKey {
+            strategy,
+            task_id,
+            seed,
+        },
+        result,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::bench_suite;
+    use crate::coordinator::loop_runner::{run_task, LoopConfig};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ks-ckpt-{tag}-{}", std::process::id()))
+    }
+
+    fn real_result() -> TaskResult {
+        let tasks = bench_suite::level_suite(42, 1);
+        run_task(&tasks[0], &baselines::kernelskill(), &LoopConfig::default())
+    }
+
+    #[test]
+    fn result_roundtrip_is_exact() {
+        let r = real_result();
+        let key = CellKey {
+            strategy: "KernelSkill".to_string(),
+            task_id: r.task_id.clone(),
+            seed: 7,
+        };
+        let line = result_to_json(&key, &r).to_string();
+        let (k2, r2) = result_from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(key, k2);
+        assert_eq!(r.task_id, r2.task_id);
+        assert_eq!(r.level, r2.level);
+        assert_eq!(r.strategy, r2.strategy);
+        assert_eq!(r.success, r2.success);
+        assert_eq!(r.best_speedup, r2.best_speedup, "f64 must round-trip exactly");
+        assert_eq!(r.seed_speedup, r2.seed_speedup);
+        assert_eq!(r.rounds_used, r2.rounds_used);
+        assert_eq!(r.rounds, r2.rounds);
+        assert_eq!(r.promotions, r2.promotions);
+        assert_eq!(r.repair_attempts, r2.repair_attempts);
+        assert_eq!(r.longest_repair_chain, r2.longest_repair_chain);
+        assert_eq!(r.best_sched, r2.best_sched);
+        assert_eq!(r.skill_obs, r2.skill_obs);
+    }
+
+    #[test]
+    fn append_load_and_torn_tail() {
+        let dir = tmp_dir("torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rd = RunDir::open(&dir).unwrap();
+        let r = real_result();
+        let k1 = CellKey {
+            strategy: "KernelSkill".to_string(),
+            task_id: r.task_id.clone(),
+            seed: 0,
+        };
+        let k2 = CellKey {
+            seed: 1,
+            ..k1.clone()
+        };
+        rd.append(&k1, &r).unwrap();
+        rd.append(&k2, &r).unwrap();
+        // Simulate a crash mid-write: torn, unparseable final line.
+        {
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(rd.results_path())
+                .unwrap();
+            f.write_all(b"{\"strategy\":\"KernelSk").unwrap();
+        }
+        let loaded = rd.load().unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert!(loaded.contains_key(&k1) && loaded.contains_key(&k2));
+        assert_eq!(loaded[&k1].best_speedup, r.best_speedup);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_missing() {
+        let dir = tmp_dir("manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rd = RunDir::open(&dir).unwrap();
+        assert!(rd.read_manifest().unwrap().is_none());
+        let m = RunManifest {
+            n_tasks: 8,
+            seeds: vec![0, 1, 2],
+            rt: 0.3,
+            at: 0.3,
+            fingerprint: RunManifest::fingerprint_tasks(&["a", "b"]),
+        };
+        rd.write_manifest(&m).unwrap();
+        assert_eq!(rd.read_manifest().unwrap(), Some(m));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_is_order_sensitive() {
+        let a = RunManifest::fingerprint_tasks(&["x", "y"]);
+        let b = RunManifest::fingerprint_tasks(&["y", "x"]);
+        assert_ne!(a, b);
+    }
+}

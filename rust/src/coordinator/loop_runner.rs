@@ -16,6 +16,7 @@ use crate::device::metrics::ToolVersion;
 use crate::kir::schedule::Schedule;
 use crate::kir::transforms::{self, MethodId, ALL_METHODS};
 use crate::memory::long_term::retrieval;
+use crate::memory::long_term::{SkillObs, SkillStore};
 use crate::memory::short_term::{OptMemory, RepairAttempt, RepairMemory};
 use crate::util::rng::{derive_seed, label, Rng};
 
@@ -34,7 +35,7 @@ pub enum Branch {
 }
 
 /// Per-round trace record (feeds Figures 2-3 and the trajectory bench).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
     pub round: u32,
     pub branch: Branch,
@@ -64,6 +65,10 @@ pub struct TaskResult {
     pub longest_repair_chain: usize,
     /// The winning schedule (artifact verification / e2e replay).
     pub best_sched: Schedule,
+    /// Skill observations harvested this run (matched decision-table case,
+    /// method tried, measured gain). The suite orchestrator folds these
+    /// into the persistent long-term skill store.
+    pub skill_obs: Vec<SkillObs>,
 }
 
 /// Loop configuration shared across a suite run.
@@ -75,6 +80,16 @@ pub struct LoopConfig {
     pub tool: ToolVersion,
     /// Experiment-level seed; per-task streams derive from it.
     pub run_seed: u64,
+    /// Warm-start snapshot of the persistent long-term skill store. When
+    /// set, retrieval reranks allowed methods by persisted observations.
+    /// The snapshot is read-only for the whole run, which keeps task runs
+    /// order-independent (parallel == serial, resume == uninterrupted).
+    pub skills: Option<std::sync::Arc<SkillStore>>,
+    /// Directory holding the live skill store (`skills.json`). `run_task`
+    /// loads a snapshot from here when `skills` is unset; *writing* the
+    /// store back is the suite orchestrator's job (see
+    /// `coordinator::scheduler`).
+    pub memory_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for LoopConfig {
@@ -85,6 +100,8 @@ impl Default for LoopConfig {
             dev: DeviceSpec::a100_like(),
             tool: ToolVersion::Ncu2023,
             run_seed: 0,
+            skills: None,
+            memory_dir: None,
         }
     }
 }
@@ -128,6 +145,21 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
         crate::bench_suite::eager::eager_time_s(task, &cfg.dev),
         crate::bench_suite::eager::custom_floor_s(task, &cfg.dev),
     ));
+
+    // Warm-start snapshot of the persistent skill store (long-term-memory
+    // strategies only). The snapshot is immutable for the whole run, which
+    // keeps task runs order-independent: parallel == serial and a resumed
+    // suite reproduces an uninterrupted one.
+    let skills: Option<std::sync::Arc<SkillStore>> = if strategy.use_long_term {
+        cfg.skills.clone().or_else(|| {
+            cfg.memory_dir.as_ref().map(|d| {
+                std::sync::Arc::new(SkillStore::load(&d.join("skills.json")).unwrap_or_default())
+            })
+        })
+    } else {
+        None
+    };
+    let mut skill_obs: Vec<SkillObs> = Vec::new();
 
     // ---- Seed generation + selection (Generator + Reviewer) ----
     let seeds = generator::generate_seeds(task, strategy.n_seeds, &strategy.policy, &mut rng);
@@ -308,7 +340,7 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             .expect("base kernel always has a profile");
         let retrieval_result = strategy
             .use_long_term
-            .then(|| retrieval::retrieve_for(task, &features, &profile));
+            .then(|| retrieval::retrieve_for_with(task, &features, &profile, skills.as_deref()));
 
         let ctx = planner::PlanContext {
             applicable: &applicable,
@@ -365,6 +397,20 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             version: candidate.version,
         });
 
+        // Harvest the (case, method, outcome) triple for the persistent
+        // skill store; gain is measured against the base kernel the method
+        // was applied to.
+        if let Some(case) = retrieval_result.as_ref().and_then(|r| r.matched_case) {
+            skill_obs.push(SkillObs {
+                case_id: case.to_string(),
+                method: plan.method,
+                gain: review
+                    .speedup
+                    .filter(|_| review.ok())
+                    .map(|sp| sp - base_review.speedup.unwrap_or(0.0)),
+            });
+        }
+
         if review.ok() {
             let sp = review.speedup.unwrap();
             latest_valid = Some((sp, candidate.sched.clone()));
@@ -413,6 +459,7 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
         repair_attempts: repair_mem.total_attempts(),
         longest_repair_chain: repair_mem.longest_chain(),
         best_sched,
+        skill_obs,
     }
 }
 

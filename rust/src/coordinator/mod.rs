@@ -1,8 +1,14 @@
 //! Layer-3 coordinator: Algorithm 1's closed loop (`loop_runner`) and the
-//! parallel suite engine (`suite_runner`).
+//! suite-orchestration v2 engine — work-stealing scheduling (`scheduler`),
+//! incremental JSONL checkpointing + resume (`checkpoint`), and the
+//! suite/matrix entry points (`suite_runner`).
 
+pub mod checkpoint;
 pub mod loop_runner;
+pub mod scheduler;
 pub mod suite_runner;
 
+pub use checkpoint::{CellKey, RunDir, RunManifest};
 pub use loop_runner::{run_task, Branch, LoopConfig, RoundRecord, TaskResult};
-pub use suite_runner::{run_matrix, run_suite, SuiteResult};
+pub use scheduler::SuiteOptions;
+pub use suite_runner::{run_matrix, run_matrix_with, run_suite, run_suite_with, SuiteResult};

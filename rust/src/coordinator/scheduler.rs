@@ -1,0 +1,317 @@
+//! Suite orchestration v2: the work-stealing cell scheduler behind
+//! `run_suite`.
+//!
+//! One *cell* is a `(strategy, task, seed)` triple. The scheduler
+//!   1. restores already-completed cells from the run directory's JSONL
+//!     checkpoint (resume skips them entirely),
+//!   2. dispatches the remaining cells over the work-stealing pool
+//!     (`util::pool::run_streaming`),
+//!   3. streams every finished cell to `results.jsonl` the moment it
+//!     completes, and
+//!   4. folds each finished cell's skill observations into the persistent
+//!     long-term store and rewrites `skills.json` atomically after each
+//!     task.
+//!
+//! Determinism contract: every cell runs against the same immutable
+//! skill-store *snapshot* taken at run start (and persisted into the run
+//! directory), so results are independent of worker count and completion
+//! order — parallel == serial, and a resumed run reproduces an
+//! uninterrupted one bit-for-bit. The *live* store only ever absorbs
+//! additive merges, so its final state is order-independent too.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::checkpoint::{CellKey, RunDir, RunManifest};
+use super::loop_runner::{run_task, LoopConfig, TaskResult};
+use crate::baselines::Strategy;
+use crate::bench_suite::Task;
+use crate::memory::long_term::kb_content;
+use crate::memory::long_term::SkillStore;
+use crate::util::pool;
+
+/// Orchestration options for one suite run.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteOptions {
+    /// Directory for the JSONL checkpoint + memory snapshot. None = fully
+    /// in-memory (the v1 behavior).
+    pub run_dir: Option<PathBuf>,
+    /// Restore completed cells from `run_dir` and run only the rest.
+    pub resume: bool,
+    /// Stop dispatching once this many cells are complete (restored +
+    /// fresh). Simulates a killed run for tests and the CI smoke path; the
+    /// returned results then cover only the completed prefix of the matrix.
+    pub stop_after: Option<usize>,
+}
+
+impl SuiteOptions {
+    pub fn in_dir<P: Into<PathBuf>>(path: P) -> SuiteOptions {
+        SuiteOptions {
+            run_dir: Some(path.into()),
+            ..SuiteOptions::default()
+        }
+    }
+
+    pub fn resumed<P: Into<PathBuf>>(path: P) -> SuiteOptions {
+        SuiteOptions {
+            run_dir: Some(path.into()),
+            resume: true,
+            ..SuiteOptions::default()
+        }
+    }
+}
+
+/// Run one strategy's cells, in deterministic (task-major, seed-minor)
+/// result order. See module docs for the orchestration contract.
+pub fn run_strategy(
+    tasks: &[Task],
+    strategy: &Strategy,
+    cfg: &LoopConfig,
+    seeds: &[u64],
+    workers: usize,
+    opts: &SuiteOptions,
+) -> Result<Vec<TaskResult>, String> {
+    // Cell matrix, task-major (matches the v1 fan-out order).
+    let cells: Vec<(usize, u64)> = (0..tasks.len())
+        .flat_map(|t| seeds.iter().map(move |s| (t, *s)))
+        .collect();
+
+    // ---- checkpoint directory ------------------------------------------
+    let run_dir = match &opts.run_dir {
+        Some(path) => Some(RunDir::open(path).map_err(|e| format!("opening run dir: {e}"))?),
+        None => None,
+    };
+    let task_ids: Vec<&str> = tasks.iter().map(|t| t.id.as_str()).collect();
+    let expected = RunManifest {
+        n_tasks: tasks.len(),
+        seeds: seeds.to_vec(),
+        rt: cfg.rt,
+        at: cfg.at,
+        fingerprint: RunManifest::fingerprint_tasks(&task_ids),
+    };
+    let mut restored: std::collections::BTreeMap<usize, TaskResult> = Default::default();
+    if let Some(rd) = &run_dir {
+        match rd.read_manifest()? {
+            Some(m) if m != expected => {
+                return Err(format!(
+                    "run dir {} was written for a different matrix \
+                     (manifest {m:?} != expected {expected:?}); refusing to mix results",
+                    rd.root().display()
+                ));
+            }
+            Some(_) => {}
+            None => rd
+                .write_manifest(&expected)
+                .map_err(|e| format!("writing manifest: {e}"))?,
+        }
+
+        let on_disk = rd.load().map_err(|e| format!("loading checkpoint: {e}"))?;
+        let mut index = std::collections::BTreeMap::new();
+        for (ci, &(ti, seed)) in cells.iter().enumerate() {
+            index.insert((tasks[ti].id.as_str(), seed), ci);
+        }
+        let mut mine = 0usize;
+        for (key, result) in on_disk {
+            if key.strategy != strategy.name {
+                continue;
+            }
+            mine += 1;
+            match index.get(&(key.task_id.as_str(), key.seed)) {
+                Some(&ci) => {
+                    restored.insert(ci, result);
+                }
+                None => crate::log_warn!(
+                    "checkpoint cell ({}, {}, {}) is not in this matrix; ignoring",
+                    key.strategy,
+                    key.task_id,
+                    key.seed
+                ),
+            }
+        }
+        if !opts.resume && mine > 0 {
+            return Err(format!(
+                "run dir {} already holds {mine} result(s) for strategy {:?}; \
+                 pass resume (--resume) or use a fresh directory",
+                rd.root().display(),
+                strategy.name
+            ));
+        }
+    }
+
+    // ---- persistent long-term memory -----------------------------------
+    let live_path = cfg.memory_dir.as_ref().map(|d| d.join("skills.json"));
+    let snapshot: Option<Arc<SkillStore>> = if let Some(s) = &cfg.skills {
+        Some(s.clone())
+    } else if let Some(rd) = run_dir
+        .as_ref()
+        .filter(|rd| opts.resume && rd.memory_snapshot_path(strategy.name).exists())
+    {
+        // Resume: warm-start from the snapshot this strategy's interrupted
+        // run took, so the remaining cells see exactly what the finished
+        // cells saw (snapshots are per-strategy: in a matrix run, later
+        // strategies start from a live store that already includes earlier
+        // strategies' merges).
+        Some(Arc::new(SkillStore::load(&rd.memory_snapshot_path(strategy.name))?))
+    } else if let Some(path) = &live_path {
+        Some(Arc::new(SkillStore::load(path)?))
+    } else {
+        None
+    };
+    if let (Some(rd), Some(snap)) = (&run_dir, &snapshot) {
+        let snap_path = rd.memory_snapshot_path(strategy.name);
+        if !snap_path.exists() {
+            snap.save(&snap_path)
+                .map_err(|e| format!("writing memory snapshot: {e}"))?;
+        }
+    }
+    // The live store absorbs observations as cells finish. It starts from
+    // the current on-disk state (on resume that already includes the
+    // interrupted run's merges; restored cells are NOT re-merged).
+    let mut live_store: Option<SkillStore> = match &live_path {
+        Some(path) => Some(SkillStore::load(path)?),
+        None => None,
+    };
+    if let Some(dir) = &cfg.memory_dir {
+        // Make the memory directory self-describing: curated KB next to the
+        // learned store.
+        let kb_path = dir.join("kb.json");
+        if !kb_path.exists() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("creating memory dir: {e}"))?;
+            std::fs::write(&kb_path, format!("{}\n", kb_content::export_kb()))
+                .map_err(|e| format!("writing kb export: {e}"))?;
+        }
+    }
+
+    let mut cfg_run = cfg.clone();
+    cfg_run.skills = snapshot;
+
+    // ---- dispatch -------------------------------------------------------
+    let mut pending: Vec<usize> = (0..cells.len()).filter(|ci| !restored.contains_key(ci)).collect();
+    if let Some(stop) = opts.stop_after {
+        pending.truncate(stop.saturating_sub(restored.len()));
+    }
+
+    let mut sink_err: Option<String> = None;
+    let fresh = pool::run_streaming(
+        &pending,
+        workers,
+        |_, &ci| {
+            let (ti, seed) = cells[ci];
+            let mut c = cfg_run.clone();
+            c.run_seed = seed;
+            run_task(&tasks[ti], strategy, &c)
+        },
+        |ip, r| {
+            let (ti, seed) = cells[pending[ip]];
+            if let Some(rd) = &run_dir {
+                let key = CellKey {
+                    strategy: strategy.name.to_string(),
+                    task_id: tasks[ti].id.clone(),
+                    seed,
+                };
+                if let Err(e) = rd.append(&key, r) {
+                    sink_err.get_or_insert(format!("appending checkpoint: {e}"));
+                }
+            }
+            if let (Some(store), Some(path)) = (live_store.as_mut(), live_path.as_ref()) {
+                store.merge(&r.skill_obs);
+                if let Err(e) = store.save(path) {
+                    sink_err.get_or_insert(format!("saving skill store: {e}"));
+                }
+            }
+        },
+    );
+    if let Some(e) = sink_err {
+        return Err(e);
+    }
+
+    // ---- assemble in matrix order ---------------------------------------
+    let mut out = Vec::with_capacity(restored.len() + fresh.len());
+    let mut fresh_iter = fresh.into_iter();
+    let mut next_pending = 0usize;
+    for ci in 0..cells.len() {
+        if let Some(r) = restored.remove(&ci) {
+            out.push(r);
+        } else if next_pending < pending.len() && pending[next_pending] == ci {
+            out.push(fresh_iter.next().expect("one fresh result per pending cell"));
+            next_pending += 1;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::bench_suite;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ks-sched-{tag}-{}", std::process::id()))
+    }
+
+    fn slice(n: usize) -> Vec<Task> {
+        bench_suite::level_suite(42, 1).into_iter().take(n).collect()
+    }
+
+    #[test]
+    fn stop_after_completes_a_prefix_and_resume_finishes_it() {
+        let dir = tmp_dir("resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = slice(4);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+
+        let full = run_strategy(&tasks, &strat, &cfg, &[0, 1], 4, &SuiteOptions::default()).unwrap();
+        assert_eq!(full.len(), 8);
+
+        let mut opts = SuiteOptions::in_dir(&dir);
+        opts.stop_after = Some(3);
+        let partial = run_strategy(&tasks, &strat, &cfg, &[0, 1], 4, &opts).unwrap();
+        assert_eq!(partial.len(), 3);
+
+        // Fresh (non-resume) reuse of a dirty dir is refused.
+        let err = run_strategy(&tasks, &strat, &cfg, &[0, 1], 4, &SuiteOptions::in_dir(&dir));
+        assert!(err.is_err());
+
+        let resumed =
+            run_strategy(&tasks, &strat, &cfg, &[0, 1], 4, &SuiteOptions::resumed(&dir)).unwrap();
+        assert_eq!(resumed.len(), 8);
+        for (a, b) in full.iter().zip(&resumed) {
+            assert_eq!(a.task_id, b.task_id);
+            assert_eq!(a.best_speedup, b.best_speedup, "{}", a.task_id);
+            assert_eq!(a.rounds.len(), b.rounds.len());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_matrix_is_refused() {
+        let dir = tmp_dir("mismatch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = slice(3);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        run_strategy(&tasks, &strat, &cfg, &[0], 2, &SuiteOptions::in_dir(&dir)).unwrap();
+        let other = slice(2);
+        let err = run_strategy(&other, &strat, &cfg, &[0], 2, &SuiteOptions::resumed(&dir));
+        assert!(err.is_err(), "different matrix must be refused");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn memory_dir_persists_skills_and_kb() {
+        let dir = tmp_dir("memdir");
+        let mem = dir.join("memory");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = slice(3);
+        let strat = baselines::kernelskill();
+        let mut cfg = LoopConfig::default();
+        cfg.memory_dir = Some(mem.clone());
+        run_strategy(&tasks, &strat, &cfg, &[0], 2, &SuiteOptions::default()).unwrap();
+        let store = SkillStore::load(&mem.join("skills.json")).unwrap();
+        assert!(store.observations > 0, "L1 slice should produce observations");
+        assert!(mem.join("kb.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,10 +1,17 @@
-//! Suite runner: fan (strategy x task x seed) over the thread pool and
-//! aggregate per-level statistics — the engine behind every table bench.
+//! Suite runner: fan (strategy x task x seed) over the work-stealing
+//! scheduler and aggregate per-level statistics — the engine behind every
+//! table bench.
+//!
+//! v2: orchestration lives in `coordinator::scheduler` (incremental JSONL
+//! checkpointing, resume, persistent skill memory). The plain
+//! [`run_suite`]/[`run_matrix`] entry points keep the v1 signature and
+//! semantics; [`run_suite_with`]/[`run_matrix_with`] expose the
+//! orchestration options.
 
-use super::loop_runner::{run_task, LoopConfig, TaskResult};
+use super::loop_runner::{LoopConfig, TaskResult};
+use super::scheduler::{self, SuiteOptions};
 use crate::baselines::Strategy;
 use crate::bench_suite::Task;
-use crate::util::pool;
 
 /// All results of one strategy over a task set (possibly several seeds).
 #[derive(Debug, Clone)]
@@ -21,19 +28,28 @@ pub fn run_suite(
     seeds: &[u64],
     workers: usize,
 ) -> SuiteResult {
-    // Work items: (task index, seed) — tasks is shared by reference.
-    let items: Vec<(usize, u64)> = (0..tasks.len())
-        .flat_map(|t| seeds.iter().map(move |s| (t, *s)))
-        .collect();
-    let results = pool::parallel_map(&items, workers, |&(ti, seed)| {
-        let mut c = cfg.clone();
-        c.run_seed = seed;
-        run_task(&tasks[ti], strategy, &c)
-    });
-    SuiteResult {
+    // No run dir is involved, but cfg.memory_dir can still make this do IO;
+    // surface the real error instead of pretending it cannot happen.
+    run_suite_with(tasks, strategy, cfg, seeds, workers, &SuiteOptions::default())
+        .unwrap_or_else(|e| panic!("suite run failed: {e}"))
+}
+
+/// [`run_suite`] with orchestration options (checkpoint dir, resume,
+/// stop-after). Results are always in deterministic (task-major,
+/// seed-minor) order, regardless of worker count or restore path.
+pub fn run_suite_with(
+    tasks: &[Task],
+    strategy: &Strategy,
+    cfg: &LoopConfig,
+    seeds: &[u64],
+    workers: usize,
+    opts: &SuiteOptions,
+) -> Result<SuiteResult, String> {
+    let results = scheduler::run_strategy(tasks, strategy, cfg, seeds, workers, opts)?;
+    Ok(SuiteResult {
         strategy: strategy.name,
         results,
-    }
+    })
 }
 
 /// Run several strategies over the same tasks/seeds.
@@ -44,9 +60,24 @@ pub fn run_matrix(
     seeds: &[u64],
     workers: usize,
 ) -> Vec<SuiteResult> {
+    run_matrix_with(tasks, strategies, cfg, seeds, workers, &SuiteOptions::default())
+        .unwrap_or_else(|e| panic!("matrix run failed: {e}"))
+}
+
+/// [`run_matrix`] with orchestration options. All strategies share one run
+/// directory; cells are keyed by strategy, so a resumed matrix picks up
+/// exactly where it was killed.
+pub fn run_matrix_with(
+    tasks: &[Task],
+    strategies: &[Strategy],
+    cfg: &LoopConfig,
+    seeds: &[u64],
+    workers: usize,
+    opts: &SuiteOptions,
+) -> Result<Vec<SuiteResult>, String> {
     strategies
         .iter()
-        .map(|s| run_suite(tasks, s, cfg, seeds, workers))
+        .map(|s| run_suite_with(tasks, s, cfg, seeds, workers, opts))
         .collect()
 }
 
@@ -80,5 +111,28 @@ mod tests {
             4,
         );
         assert_eq!(r.results.len(), 12);
+    }
+
+    #[test]
+    fn matrix_shares_a_run_dir_across_strategies() {
+        let dir = std::env::temp_dir().join(format!("ks-matrix-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(2).collect();
+        let strategies = vec![baselines::kernelskill(), baselines::wo_memory()];
+        let cfg = LoopConfig::default();
+        let opts = SuiteOptions::in_dir(&dir);
+        let live = run_matrix_with(&tasks, &strategies, &cfg, &[0], 2, &opts).unwrap();
+        // A full resume restores every cell without recomputing.
+        let opts = SuiteOptions::resumed(&dir);
+        let restored = run_matrix_with(&tasks, &strategies, &cfg, &[0], 2, &opts).unwrap();
+        assert_eq!(live.len(), restored.len());
+        for (a, b) in live.iter().zip(&restored) {
+            assert_eq!(a.strategy, b.strategy);
+            for (x, y) in a.results.iter().zip(&b.results) {
+                assert_eq!(x.best_speedup, y.best_speedup);
+                assert_eq!(x.rounds, y.rounds);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -7,7 +7,7 @@
 //! a CPU backend); what we check is internal consistency of the bridge and
 //! record real latencies for EXPERIMENTS.md.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::runtime::{Registry, Runtime};
 

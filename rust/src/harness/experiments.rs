@@ -2,11 +2,14 @@
 //! experiment index E1-E5). Each returns the rendered table plus raw rows
 //! so benches and the CLI can share the implementation.
 
+use std::path::{Path, PathBuf};
+
 use super::metrics::{by_level, cell};
 use super::tables::{self, Row};
 use crate::baselines::{self, Strategy};
 use crate::bench_suite;
-use crate::coordinator::{self, Branch, LoopConfig};
+use crate::coordinator::{self, Branch, LoopConfig, RunDir, SuiteOptions, TaskResult};
+use crate::memory::long_term::SkillStore;
 use crate::util::pool;
 
 /// Shared experiment configuration.
@@ -17,6 +20,12 @@ pub struct ExpConfig {
     /// Run seeds (repetitions averaged together).
     pub run_seeds: Vec<u64>,
     pub workers: usize,
+    /// Checkpoint directory: every finished cell streams to
+    /// `<run_dir>/results.jsonl` and `--resume` skips completed cells.
+    pub run_dir: Option<PathBuf>,
+    pub resume: bool,
+    /// Persistent long-term memory directory (`skills.json` + `kb.json`).
+    pub memory_dir: Option<PathBuf>,
 }
 
 impl Default for ExpConfig {
@@ -25,59 +34,91 @@ impl Default for ExpConfig {
             suite_seed: 42,
             run_seeds: vec![0],
             workers: pool::default_workers(),
+            run_dir: None,
+            resume: false,
+            memory_dir: None,
         }
     }
 }
 
+impl ExpConfig {
+    pub fn loop_cfg(&self) -> LoopConfig {
+        LoopConfig {
+            memory_dir: self.memory_dir.clone(),
+            ..LoopConfig::default()
+        }
+    }
+
+    pub fn suite_opts(&self) -> SuiteOptions {
+        SuiteOptions {
+            run_dir: self.run_dir.clone(),
+            resume: self.resume,
+            stop_after: None,
+        }
+    }
+}
+
+/// Build a per-level row for one strategy's results.
+fn row_for(name: &str, budget_rounds: u32, results: &[TaskResult]) -> Row {
+    let split = by_level(results);
+    Row {
+        method: name.to_string(),
+        cells: [
+            cell(&split[0], budget_rounds),
+            cell(&split[1], budget_rounds),
+            cell(&split[2], budget_rounds),
+        ],
+    }
+}
+
 /// Run one roster over the full suite, producing per-level rows.
-pub fn run_roster(roster: &[Strategy], cfg: &ExpConfig) -> Vec<Row> {
+///
+/// Errors are user-facing (dirty run dir without `--resume`, mismatched
+/// matrix manifest, checkpoint IO) and propagate so the CLI can print them
+/// cleanly instead of panicking.
+pub fn run_roster(roster: &[Strategy], cfg: &ExpConfig) -> Result<Vec<Row>, String> {
     let tasks = bench_suite::full_suite(cfg.suite_seed);
-    let loop_cfg = LoopConfig::default();
+    let loop_cfg = cfg.loop_cfg();
+    let opts = cfg.suite_opts();
     roster
         .iter()
         .map(|strategy| {
-            let suite = coordinator::run_suite(
+            let suite = coordinator::run_suite_with(
                 &tasks,
                 strategy,
                 &loop_cfg,
                 &cfg.run_seeds,
                 cfg.workers,
-            );
-            let split = by_level(&suite.results);
-            Row {
-                method: strategy.name.to_string(),
-                cells: [
-                    cell(&split[0], strategy.rounds),
-                    cell(&split[1], strategy.rounds),
-                    cell(&split[2], strategy.rounds),
-                ],
-            }
+                &opts,
+            )
+            .map_err(|e| format!("suite run failed for {}: {e}", strategy.name))?;
+            Ok(row_for(strategy.name, strategy.rounds, &suite.results))
         })
         .collect()
 }
 
 /// E1 — Table 1: Success + Speedup, 7 methods x 3 levels.
-pub fn table1(cfg: &ExpConfig) -> (String, Vec<Row>) {
-    let rows = run_roster(&baselines::table1_roster(), cfg);
-    (tables::table1(&rows), rows)
+pub fn table1(cfg: &ExpConfig) -> Result<(String, Vec<Row>), String> {
+    let rows = run_roster(&baselines::table1_roster(), cfg)?;
+    Ok((tables::table1(&rows), rows))
 }
 
 /// E2 — Table 2: memory ablations with Fast1.
-pub fn table2(cfg: &ExpConfig) -> (String, Vec<Row>) {
-    let rows = run_roster(&baselines::table2_roster(), cfg);
-    (tables::table2(&rows), rows)
+pub fn table2(cfg: &ExpConfig) -> Result<(String, Vec<Row>), String> {
+    let rows = run_roster(&baselines::table2_roster(), cfg)?;
+    Ok((tables::table2(&rows), rows))
 }
 
 /// E3 — Table 3: Fast1 for the Table-1 roster (same runs, different view).
-pub fn table3(cfg: &ExpConfig) -> (String, Vec<Row>) {
-    let rows = run_roster(&baselines::table1_roster(), cfg);
-    (tables::table3(&rows), rows)
+pub fn table3(cfg: &ExpConfig) -> Result<(String, Vec<Row>), String> {
+    let rows = run_roster(&baselines::table1_roster(), cfg)?;
+    Ok((tables::table3(&rows), rows))
 }
 
 /// §5.4 — per-round refinement efficiency (KernelSkill vs STARK).
-pub fn per_round_efficiency(cfg: &ExpConfig) -> (String, Vec<Row>) {
-    let rows = run_roster(&[baselines::stark(), baselines::kernelskill()], cfg);
-    (tables::per_round(&rows), rows)
+pub fn per_round_efficiency(cfg: &ExpConfig) -> Result<(String, Vec<Row>), String> {
+    let rows = run_roster(&[baselines::stark(), baselines::kernelskill()], cfg)?;
+    Ok((tables::per_round(&rows), rows))
 }
 
 /// E4 — Figures 2-3: trajectory traces on a representative task, rendering
@@ -139,6 +180,176 @@ pub fn trajectory_figures(cfg: &ExpConfig) -> String {
     out
 }
 
+// ------------------------------------------------------------------------
+// Streamed-result readers: rebuild tables straight from a run directory's
+// JSONL checkpoint, without re-running anything.
+// ------------------------------------------------------------------------
+
+/// Group a run directory's streamed cells into per-strategy result lists.
+/// Cells arrive sorted by (strategy, task, seed) key — the checkpoint
+/// loader's map order — not in completion order.
+pub fn results_from_run_dir(path: &Path) -> Result<Vec<(String, Vec<TaskResult>)>, String> {
+    if !path.is_dir() {
+        return Err(format!("{} is not a run directory", path.display()));
+    }
+    let rd = RunDir::open(path).map_err(|e| format!("opening run dir: {e}"))?;
+    if !rd.has_results() {
+        return Err(format!("{} has no results.jsonl yet", path.display()));
+    }
+    let cells = rd.load().map_err(|e| format!("loading checkpoint: {e}"))?;
+    let mut out: Vec<(String, Vec<TaskResult>)> = Vec::new();
+    for (key, result) in cells {
+        match out.iter_mut().find(|(name, _)| *name == key.strategy) {
+            Some((_, list)) => list.push(result),
+            None => out.push((key.strategy.clone(), vec![result])),
+        }
+    }
+    Ok(out)
+}
+
+/// Per-level table rows from already-grouped results (budget rounds
+/// resolved from the strategy roster; unknown strategies fall back to the
+/// paper's 15).
+pub fn rows_from_results(grouped: &[(String, Vec<TaskResult>)]) -> Vec<Row> {
+    grouped
+        .iter()
+        .map(|(name, results)| {
+            let budget = baselines::by_name(name).map(|s| s.rounds).unwrap_or(15);
+            row_for(name, budget, results)
+        })
+        .collect()
+}
+
+/// Per-level table rows straight from a run directory.
+pub fn rows_from_run_dir(path: &Path) -> Result<Vec<Row>, String> {
+    Ok(rows_from_results(&results_from_run_dir(path)?))
+}
+
+/// Render a run directory's streamed results as the ablation-style table
+/// (Success / Fast1 / Speedup per level) plus completion counts.
+pub fn report_run_dir(path: &Path) -> Result<String, String> {
+    let grouped = results_from_run_dir(path)?;
+    let rows = rows_from_results(&grouped);
+    let mut out = String::new();
+    out.push_str(&format!("Run directory {} — streamed results\n", path.display()));
+    for (name, results) in &grouped {
+        out.push_str(&format!("  {:<24} {} cells completed\n", name, results.len()));
+    }
+    out.push('\n');
+    out.push_str(&tables::table2(&rows));
+    Ok(out)
+}
+
+// ------------------------------------------------------------------------
+// Bench-smoke: the CI end-to-end proof that orchestration v2 works.
+// ------------------------------------------------------------------------
+
+/// Assert two cells agree exactly (f64 equality is intended: checkpointed
+/// aggregates must be byte-identical to uninterrupted ones).
+fn cells_identical(a: &super::metrics::Cell, b: &super::metrics::Cell) -> bool {
+    a.n == b.n
+        && a.success == b.success
+        && a.speedup == b.speedup
+        && a.fast1 == b.fast1
+        && a.mean_rounds == b.mean_rounds
+        && a.speedup_per_round == b.speedup_per_round
+}
+
+/// Tiny end-to-end suite exercising the whole orchestration stack:
+/// 2 tasks × 1 seed, checkpointed, killed after one cell, resumed, verified
+/// against an uninterrupted in-memory run, reloaded from disk, and run with
+/// persistent memory. Returns a human-readable summary; any mismatch is an
+/// error (CI fails).
+pub fn smoke(root: &Path) -> Result<String, String> {
+    let strategy = baselines::kernelskill();
+    let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(2).collect();
+    let seeds = [0u64];
+    let cfg = LoopConfig::default();
+    let mut log = String::new();
+
+    // Reference: uninterrupted, fully in-memory.
+    let reference = coordinator::run_suite(&tasks, &strategy, &cfg, &seeds, 2);
+    let ref_rows = row_for(strategy.name, strategy.rounds, &reference.results);
+    log.push_str(&format!(
+        "reference run: {} cells, L1 speedup {:.3}\n",
+        reference.results.len(),
+        ref_rows.cells[0].speedup
+    ));
+
+    // Interrupted + resumed, streaming to a run dir.
+    let run_dir = root.join("smoke-run");
+    let _ = std::fs::remove_dir_all(&run_dir);
+    let mut opts = SuiteOptions::in_dir(&run_dir);
+    opts.stop_after = Some(1);
+    let partial = coordinator::run_suite_with(&tasks, &strategy, &cfg, &seeds, 2, &opts)?;
+    if partial.results.len() != 1 {
+        return Err(format!(
+            "stop_after=1 should complete exactly one cell, got {}",
+            partial.results.len()
+        ));
+    }
+    log.push_str("interrupted after 1 cell; checkpoint written\n");
+
+    let resumed = coordinator::run_suite_with(
+        &tasks,
+        &strategy,
+        &cfg,
+        &seeds,
+        2,
+        &SuiteOptions::resumed(&run_dir),
+    )?;
+    let res_rows = row_for(strategy.name, strategy.rounds, &resumed.results);
+    if !cells_identical(&ref_rows.cells[0], &res_rows.cells[0]) {
+        return Err(format!(
+            "resumed aggregates differ from uninterrupted: {:?} vs {:?}",
+            res_rows.cells[0], ref_rows.cells[0]
+        ));
+    }
+    log.push_str("resumed run reproduces uninterrupted aggregates exactly\n");
+
+    // Reload the streamed JSONL and re-derive the same aggregates.
+    let rows = rows_from_run_dir(&run_dir)?;
+    let from_disk = rows
+        .iter()
+        .find(|r| r.method == strategy.name)
+        .ok_or("run dir lost the strategy row")?;
+    if !cells_identical(&from_disk.cells[0], &ref_rows.cells[0]) {
+        return Err("aggregates reloaded from results.jsonl differ".to_string());
+    }
+    log.push_str("results.jsonl round-trips to identical aggregates\n");
+
+    // Persistent memory: run with a memory dir, check the store landed.
+    let mem_dir = root.join("smoke-memory");
+    let _ = std::fs::remove_dir_all(&mem_dir);
+    let mut mem_cfg = cfg.clone();
+    mem_cfg.memory_dir = Some(mem_dir.clone());
+    coordinator::run_suite_with(
+        &tasks,
+        &strategy,
+        &mem_cfg,
+        &seeds,
+        2,
+        &SuiteOptions::default(),
+    )?;
+    let store = SkillStore::load(&mem_dir.join("skills.json"))?;
+    if store.observations == 0 {
+        return Err("persistent skill store recorded no observations".to_string());
+    }
+    if !mem_dir.join("kb.json").exists() {
+        return Err("curated KB export missing from memory dir".to_string());
+    }
+    log.push_str(&format!(
+        "persistent memory: {} observations across {} cases\n",
+        store.observations,
+        store.cases.len()
+    ));
+
+    let _ = std::fs::remove_dir_all(&run_dir);
+    let _ = std::fs::remove_dir_all(&mem_dir);
+    log.push_str("smoke ok\n");
+    Ok(log)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +359,7 @@ mod tests {
             suite_seed: 42,
             run_seeds: vec![0],
             workers: 4,
+            ..ExpConfig::default()
         }
     }
 
@@ -158,5 +370,14 @@ mod tests {
         assert!(out.contains("KernelSkill trajectory"));
         assert!(out.contains("round"));
         assert!(out.contains("mean repair attempts"));
+    }
+
+    #[test]
+    fn smoke_passes() {
+        let root = std::env::temp_dir().join(format!("ks-smoke-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let out = smoke(&root).unwrap();
+        assert!(out.contains("smoke ok"));
+        let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -78,6 +78,7 @@ mod tests {
             repair_attempts: 0,
             longest_repair_chain: 0,
             best_sched: Schedule::per_op_naive(&g),
+            skill_obs: vec![],
         }
     }
 

@@ -5,21 +5,21 @@
 //!   verify-artifacts | calibrate                        (real PJRT path)
 //!   run-task --task <id> [--strategy <name>]            (single-task trace)
 //!   suite --strategy <name> [--level N]                 (one-strategy suite)
+//!   report --run-dir <dir>                              (streamed results)
+//!   smoke                                               (CI orchestration proof)
+//!
+//! Orchestration v2 flags (table*/suite): `--run-dir <dir>` streams every
+//! finished cell to `<dir>/results.jsonl`, `--resume` skips cells already
+//! checkpointed there, and `--memory-dir <dir>` warm-starts the persistent
+//! long-term skill store and rewrites it after each task.
 
 use kernelskill::baselines;
 use kernelskill::bench_suite;
 use kernelskill::coordinator::{self, Branch, LoopConfig};
-use kernelskill::harness::{calibrate, experiments};
+use kernelskill::harness::{calibrate, experiments, metrics};
 use kernelskill::runtime::{self, Registry, Runtime};
 use kernelskill::util::cli::Args;
 use kernelskill::util::logging::{self, Level};
-
-fn strategy_by_name(name: &str) -> Option<kernelskill::baselines::Strategy> {
-    let all = baselines::table1_roster()
-        .into_iter()
-        .chain(baselines::table2_roster());
-    all.into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
-}
 
 fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
     let mut cfg = experiments::ExpConfig::default();
@@ -27,6 +27,9 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
     let n_seeds = args.get_usize("seeds", 1)?;
     cfg.run_seeds = (0..n_seeds as u64).collect();
     cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.run_dir = args.get("run-dir").map(std::path::PathBuf::from);
+    cfg.resume = args.has("resume");
+    cfg.memory_dir = args.get("memory-dir").map(std::path::PathBuf::from);
     Ok(cfg)
 }
 
@@ -45,22 +48,22 @@ fn run() -> Result<(), String> {
     match args.subcommand.as_deref() {
         Some("table1") => {
             let cfg = exp_config(&args)?;
-            let (rendered, _) = experiments::table1(&cfg);
+            let (rendered, _) = experiments::table1(&cfg)?;
             println!("Table 1 — Success and Speedup vs Torch Eager\n{rendered}");
         }
         Some("table2") => {
             let cfg = exp_config(&args)?;
-            let (rendered, _) = experiments::table2(&cfg);
+            let (rendered, _) = experiments::table2(&cfg)?;
             println!("Table 2 — Memory ablations\n{rendered}");
         }
         Some("table3") => {
             let cfg = exp_config(&args)?;
-            let (rendered, _) = experiments::table3(&cfg);
+            let (rendered, _) = experiments::table3(&cfg)?;
             println!("Table 3 — Fast_1\n{rendered}");
         }
         Some("per-round") => {
             let cfg = exp_config(&args)?;
-            let (rendered, _) = experiments::per_round_efficiency(&cfg);
+            let (rendered, _) = experiments::per_round_efficiency(&cfg)?;
             println!("Per-round refinement efficiency (§5.4)\n{rendered}");
         }
         Some("trajectory") => {
@@ -101,8 +104,8 @@ fn run() -> Result<(), String> {
         Some("run-task") => {
             let task_id = args.get("task").ok_or("--task <id> required")?;
             let strat_name = args.get_or("strategy", "KernelSkill");
-            let strategy =
-                strategy_by_name(strat_name).ok_or_else(|| format!("unknown strategy {strat_name}"))?;
+            let strategy = baselines::by_name(strat_name)
+                .ok_or_else(|| format!("unknown strategy {strat_name}"))?;
             let suite_seed = args.get_u64("suite-seed", 42)?;
             let tasks = bench_suite::full_suite(suite_seed);
             let task = tasks
@@ -111,7 +114,25 @@ fn run() -> Result<(), String> {
                 .ok_or_else(|| format!("no task matching {task_id}"))?;
             let mut cfg = LoopConfig::default();
             cfg.run_seed = args.get_u64("seed", 0)?;
+            cfg.memory_dir = args.get("memory-dir").map(std::path::PathBuf::from);
             let r = coordinator::run_task(task, &strategy, &cfg);
+            // Standalone runs persist their own observations (in a suite the
+            // scheduler owns the write cycle), so learning accumulates
+            // across repeated run-task invocations too.
+            if let Some(dir) = &cfg.memory_dir {
+                let path = dir.join("skills.json");
+                let mut store =
+                    kernelskill::memory::long_term::SkillStore::load(&path)?;
+                store.merge(&r.skill_obs);
+                store
+                    .save(&path)
+                    .map_err(|e| format!("saving skill store: {e}"))?;
+                println!(
+                    "memory: {} observation(s) merged into {}",
+                    r.skill_obs.len(),
+                    path.display()
+                );
+            }
             println!(
                 "{} [{}]: success={} best={:.3}x seed={:?} promotions={} repairs={}",
                 r.task_id, r.strategy, r.success, r.best_speedup, r.seed_speedup, r.promotions, r.repair_attempts
@@ -133,9 +154,12 @@ fn run() -> Result<(), String> {
             }
         }
         Some("suite") => {
+            if args.has("smoke") {
+                return run_smoke();
+            }
             let strat_name = args.get_or("strategy", "KernelSkill");
-            let strategy =
-                strategy_by_name(strat_name).ok_or_else(|| format!("unknown strategy {strat_name}"))?;
+            let strategy = baselines::by_name(strat_name)
+                .ok_or_else(|| format!("unknown strategy {strat_name}"))?;
             let cfg = exp_config(&args)?;
             let level = args.get_usize("level", 0)?;
             let tasks = if level == 0 {
@@ -143,19 +167,20 @@ fn run() -> Result<(), String> {
             } else {
                 bench_suite::level_suite(cfg.suite_seed, level as u8)
             };
-            let suite = coordinator::run_suite(
+            let suite = coordinator::run_suite_with(
                 &tasks,
                 &strategy,
-                &LoopConfig::default(),
+                &cfg.loop_cfg(),
                 &cfg.run_seeds,
                 cfg.workers,
-            );
-            let split = kernelskill::harness::metrics::by_level(&suite.results);
+                &cfg.suite_opts(),
+            )?;
+            let split = metrics::by_level(&suite.results);
             for (i, lv) in split.iter().enumerate() {
                 if lv.is_empty() {
                     continue;
                 }
-                let c = kernelskill::harness::metrics::cell(lv, strategy.rounds);
+                let c = metrics::cell(lv, strategy.rounds);
                 println!(
                     "L{}: n={} success={:.2} speedup={:.2} fast1={:.2} rounds={:.1}",
                     i + 1,
@@ -166,7 +191,16 @@ fn run() -> Result<(), String> {
                     c.mean_rounds
                 );
             }
+            if let Some(dir) = &cfg.run_dir {
+                println!("checkpoint streamed to {}", dir.display());
+            }
         }
+        Some("report") => {
+            let dir = args.get("run-dir").ok_or("--run-dir <dir> required")?;
+            let rendered = experiments::report_run_dir(std::path::Path::new(dir))?;
+            println!("{rendered}");
+        }
+        Some("smoke") => return run_smoke(),
         _ => {
             println!(
                 "kernelskill — memory-augmented multi-agent kernel optimization (paper reproduction)\n\
@@ -176,17 +210,31 @@ fn run() -> Result<(), String> {
                  experiments:\n\
                  \x20 table1 | table2 | table3 | per-round | trajectory\n\
                  \x20     [--seeds N] [--suite-seed S] [--workers W]\n\
+                 \x20     [--run-dir D] [--resume] [--memory-dir M]\n\
                  real PJRT path:\n\
                  \x20 verify-artifacts [--seed S] [--tolerance T]\n\
                  \x20 calibrate [--seed S]\n\
                  single runs:\n\
-                 \x20 run-task --task <substr> [--strategy <name>] [--seed S]\n\
+                 \x20 run-task --task <substr> [--strategy <name>] [--seed S] [--memory-dir M]\n\
                  \x20 suite --strategy <name> [--level 1|2|3]\n\
+                 \x20     [--run-dir D] [--resume] [--memory-dir M] [--smoke]\n\
+                 orchestration:\n\
+                 \x20 report --run-dir D     render tables from streamed results.jsonl\n\
+                 \x20 smoke                  tiny checkpoint/resume/memory end-to-end (CI gate)\n\
                  \n\
                  strategies: KernelSkill, STARK, CudaForge, Astra, PRAGMA, QiMeng,\n\
                  \x20          Kevin-32B, 'w/o memory', 'w/o Short_term memory', 'w/o Long_term memory'"
             );
         }
     }
+    Ok(())
+}
+
+/// The CI bench-smoke path: 2 tasks × 1 seed end-to-end through checkpoint,
+/// kill, resume, JSONL reload, and persistent memory.
+fn run_smoke() -> Result<(), String> {
+    let root = std::env::temp_dir().join(format!("kernelskill-smoke-{}", std::process::id()));
+    let out = experiments::smoke(&root)?;
+    print!("{out}");
     Ok(())
 }

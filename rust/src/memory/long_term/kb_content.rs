@@ -6,7 +6,7 @@
 //! scenario abstraction -> evidence formalization -> rule materialization.
 //! Every entry is data, not code: auditable, printable, and extensible.
 
-use once_cell::sync::Lazy;
+use crate::util::lazy::Lazy;
 
 use super::schema::{
     Bottleneck, DecisionCase, ForbiddenRule, Gain, MethodKnowledge, NamedPred, Pred, Tier,
@@ -620,6 +620,72 @@ pub fn knowledge_for(method: MethodId) -> Option<&'static MethodKnowledge> {
     METHOD_KNOWLEDGE.iter().find(|k| k.method == method)
 }
 
+/// Serialize the curated knowledge base (predicate library, decision table,
+/// veto rules, method knowledge) to JSON. The suite orchestrator writes
+/// this next to the learned skill store so a memory directory is a complete,
+/// self-describing snapshot of long-term memory — curated + learned.
+pub fn export_kb() -> crate::util::json::Json {
+    use crate::util::json::{arr, num, obj, s, Json};
+
+    let predicates = PREDICATES
+        .iter()
+        .map(|p| obj(vec![("name", s(p.name)), ("pred", s(&p.pred.render()))]))
+        .collect();
+    let table = DECISION_TABLE
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("id", s(c.id)),
+                ("bottleneck", s(&format!("{:?}", c.bottleneck))),
+                (
+                    "ncu_signature",
+                    arr(c.ncu_signature.iter().map(|&n| s(n)).collect()),
+                ),
+                (
+                    "tiers",
+                    arr(c.tiers.iter().map(|t| s(&format!("{t:?}"))).collect()),
+                ),
+                ("gate_when", s(&c.gate_when.render())),
+                (
+                    "allowed_methods",
+                    arr(c.allowed_methods.iter().map(|m| s(m.name())).collect()),
+                ),
+                ("why", s(c.why)),
+            ])
+        })
+        .collect();
+    let forbidden = FORBIDDEN_RULES
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("id", s(r.id)),
+                ("when", s(&r.when.render())),
+                ("veto", arr(r.veto.iter().map(|m| s(m.name())).collect())),
+                ("why", s(r.why)),
+            ])
+        })
+        .collect();
+    let knowledge = METHOD_KNOWLEDGE
+        .iter()
+        .map(|k| {
+            obj(vec![
+                ("method", s(k.method.name())),
+                ("rationale", s(k.rationale)),
+                ("cues", s(k.cues)),
+                ("expected_gain", s(&format!("{:?}", k.expected_gain))),
+                ("risks", s(k.risks)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("version", num(1.0)),
+        ("predicates", Json::Arr(predicates)),
+        ("decision_table", Json::Arr(table)),
+        ("forbidden_rules", Json::Arr(forbidden)),
+        ("method_knowledge", Json::Arr(knowledge)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -664,6 +730,18 @@ mod tests {
                 "no case for {b:?}"
             );
         }
+    }
+
+    #[test]
+    fn kb_export_parses_and_is_complete() {
+        let j = export_kb();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        let table = parsed.get("decision_table").and_then(|t| t.as_arr()).unwrap();
+        assert_eq!(table.len(), DECISION_TABLE.len());
+        let mk = parsed.get("method_knowledge").and_then(|t| t.as_arr()).unwrap();
+        assert_eq!(mk.len(), METHOD_KNOWLEDGE.len());
+        let preds = parsed.get("predicates").and_then(|t| t.as_arr()).unwrap();
+        assert_eq!(preds.len(), PREDICATES.len());
     }
 
     #[test]

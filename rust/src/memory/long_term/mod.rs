@@ -1,9 +1,14 @@
 //! Long-term memory: the externalized expert-knowledge store (§4.2.1) —
 //! a Deterministic Decision Policy (normalize -> derive -> tier -> match ->
-//! veto) plus the Method Knowledge (`llm_assist`) store.
+//! veto) plus the Method Knowledge (`llm_assist`) store, and the persistent
+//! learned layer (`skill_store`) that survives across tasks, seeds,
+//! strategies, and processes.
 
 pub mod derived;
 pub mod kb_content;
 pub mod normalize;
 pub mod retrieval;
 pub mod schema;
+pub mod skill_store;
+
+pub use skill_store::{SkillObs, SkillStore};

@@ -17,6 +17,7 @@ use super::derived::{compute_derived, headroom_tier};
 use super::kb_content::{knowledge_for, predicate, DECISION_TABLE, FORBIDDEN_RULES};
 use super::normalize::{fold_features, fold_task_facts, normalize_profile};
 use super::schema::{Bottleneck, Evidence, MethodKnowledge, Tier, BOTTLENECK_PRIORITY};
+use super::skill_store::SkillStore;
 use crate::bench_suite::Task;
 use crate::device::metrics::RawProfile;
 use crate::kir::features::CodeFeatures;
@@ -39,6 +40,9 @@ pub struct RetrievalResult {
     pub knowledge: Vec<&'static MethodKnowledge>,
     /// Why the matched case fired (case rationale).
     pub case_why: Option<&'static str>,
+    /// Persisted-skill evidence applied to this retrieval (one line per
+    /// method with recorded outcomes; empty when retrieval ran cold).
+    pub skill_notes: Vec<String>,
 }
 
 impl RetrievalResult {
@@ -66,6 +70,12 @@ impl RetrievalResult {
                 .collect::<Vec<_>>()
                 .join(", ")
         ));
+        if !self.skill_notes.is_empty() {
+            s.push_str("skills (persistent long-term memory):\n");
+            for note in &self.skill_notes {
+                s.push_str(&format!("  {note}\n"));
+            }
+        }
         s
     }
 }
@@ -85,8 +95,16 @@ pub fn aggregate(task: &Task, features: &CodeFeatures, raw: &RawProfile) -> Evid
     ev
 }
 
-/// Steps 4-9: run the deterministic decision policy over evidence.
+/// Steps 4-9: run the deterministic decision policy over evidence (cold —
+/// no persisted skills).
 pub fn retrieve(ev: &Evidence) -> RetrievalResult {
+    retrieve_with(ev, None)
+}
+
+/// Steps 4-9 with an optional warm-started [`SkillStore`]: persisted
+/// observations rerank the matched case's allowed methods (step 8') and are
+/// surfaced in the audit trail.
+pub fn retrieve_with(ev: &Evidence, skills: Option<&SkillStore>) -> RetrievalResult {
     // Audit: which named predicates hold.
     let satisfied: Vec<&'static str> = super::kb_content::PREDICATES
         .iter()
@@ -128,6 +146,27 @@ pub fn retrieve(ev: &Evidence) -> RetrievalResult {
         }
     }
 
+    // Step 8': persisted skills rerank the surviving methods — learned
+    // outcomes take precedence over curated priority, untried methods keep
+    // their curated order.
+    let mut skill_notes = Vec::new();
+    if let (Some(store), Some(case)) = (skills, matched) {
+        store.rerank(case.id, &mut allowed);
+        for &m in &allowed {
+            if let Some(stat) = store.stat(case.id, m) {
+                if stat.attempts > 0 {
+                    skill_notes.push(format!(
+                        "{}: {} attempts, {} wins, mean gain {:+.3}",
+                        m.name(),
+                        stat.attempts,
+                        stat.wins,
+                        stat.mean_gain()
+                    ));
+                }
+            }
+        }
+    }
+
     // Step 9: attach method knowledge.
     let knowledge = allowed.iter().filter_map(|&m| knowledge_for(m)).collect();
 
@@ -140,12 +179,23 @@ pub fn retrieve(ev: &Evidence) -> RetrievalResult {
         vetoed,
         knowledge,
         case_why: matched.map(|c| c.why),
+        skill_notes,
     }
 }
 
-/// Convenience: full pipeline from raw inputs.
+/// Convenience: full pipeline from raw inputs (cold).
 pub fn retrieve_for(task: &Task, features: &CodeFeatures, raw: &RawProfile) -> RetrievalResult {
     retrieve(&aggregate(task, features, raw))
+}
+
+/// Full pipeline from raw inputs with a warm-started skill store.
+pub fn retrieve_for_with(
+    task: &Task,
+    features: &CodeFeatures,
+    raw: &RawProfile,
+    skills: Option<&SkillStore>,
+) -> RetrievalResult {
+    retrieve_with(&aggregate(task, features, raw), skills)
 }
 
 #[cfg(test)]
@@ -281,6 +331,33 @@ mod tests {
         let audit = r.audit();
         assert!(audit.contains("bottleneck="));
         assert!(audit.contains("allowed:"));
+    }
+
+    #[test]
+    fn warm_skills_surface_in_audit() {
+        use super::super::skill_store::{SkillObs, SkillStore};
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let dev = DeviceSpec::a100_like();
+        let cost = price(&task.graph, &sched, &dev);
+        let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+        let feats = ground_truth(&task.graph, &sched);
+        let mut store = SkillStore::new();
+        store.observe(&SkillObs {
+            case_id: "gemm.naive_loop".to_string(),
+            method: MethodId::TileSmem,
+            gain: Some(2.5),
+        });
+        let r = retrieve_for_with(&task, &feats, &raw, Some(&store));
+        assert_eq!(r.matched_case, Some("gemm.naive_loop"), "{}", r.audit());
+        assert!(!r.skill_notes.is_empty());
+        let audit = r.audit();
+        assert!(audit.contains("skills (persistent long-term memory)"));
+        assert!(audit.contains("tile_smem: 1 attempts, 1 wins"));
+        // Cold retrieval is unchanged by the skill layer's existence.
+        let cold = retrieve_for(&task, &feats, &raw);
+        assert_eq!(cold.allowed_methods, r.allowed_methods);
+        assert!(cold.skill_notes.is_empty());
     }
 
     #[test]

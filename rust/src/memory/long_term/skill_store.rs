@@ -1,0 +1,317 @@
+//! Persistent long-term skill memory: the *learned* layer on top of the
+//! curated knowledge base.
+//!
+//! The curated store (`kb_content`) is static expert knowledge; what the
+//! paper's dual-level memory additionally needs is cross-task transfer —
+//! outcomes observed while optimizing one task should inform method choice
+//! on later tasks, seeds, and strategies. This module records, per
+//! decision-table case, how every method actually performed
+//! ([`MethodStat`]), serializes the store to disk after each task (the
+//! suite orchestrator owns the write cycle), and warm-starts retrieval from
+//! it: [`SkillStore::rerank`] reorders a case's `allowed_methods` by
+//! observed mean gain, leaving unobserved methods in curated priority
+//! order.
+//!
+//! Persistence uses the repo's own JSON layer (serde is not vendored
+//! offline) and writes are atomic (tmp + rename) so a killed run never
+//! leaves a torn store behind.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+use crate::kir::transforms::MethodId;
+use crate::util::json::{self, Json};
+
+/// One learned observation: applying `method` while the decision table had
+/// matched `case_id` produced `gain` (speedup delta vs the base kernel), or
+/// failed review (`None`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkillObs {
+    pub case_id: String,
+    pub method: MethodId,
+    pub gain: Option<f64>,
+}
+
+/// Aggregate outcome statistics for one (case, method) pair.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MethodStat {
+    pub attempts: u64,
+    /// Attempts whose candidate compiled, verified, and was measured.
+    pub wins: u64,
+    /// Sum of speedup deltas over winning attempts.
+    pub total_gain: f64,
+}
+
+impl MethodStat {
+    pub fn mean_gain(&self) -> f64 {
+        if self.wins == 0 {
+            0.0
+        } else {
+            self.total_gain / self.wins as f64
+        }
+    }
+
+    pub fn win_rate(&self) -> f64 {
+        if self.attempts == 0 {
+            0.0
+        } else {
+            self.wins as f64 / self.attempts as f64
+        }
+    }
+
+    /// Ranking score: mean gain per attempt. Unobserved methods score 0, so
+    /// known-good methods rise above them and known-bad ones sink below.
+    fn score(&self) -> f64 {
+        if self.attempts == 0 {
+            0.0
+        } else if self.wins == 0 {
+            -1.0
+        } else {
+            self.total_gain / self.attempts as f64
+        }
+    }
+}
+
+/// The persistent skill store: case id -> method -> stats.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SkillStore {
+    pub cases: BTreeMap<String, BTreeMap<MethodId, MethodStat>>,
+    /// Total observations folded in (for the audit trail).
+    pub observations: u64,
+}
+
+impl SkillStore {
+    pub fn new() -> SkillStore {
+        SkillStore::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cases.is_empty()
+    }
+
+    pub fn stat(&self, case_id: &str, method: MethodId) -> Option<&MethodStat> {
+        self.cases.get(case_id).and_then(|m| m.get(&method))
+    }
+
+    /// Fold one observation in.
+    pub fn observe(&mut self, obs: &SkillObs) {
+        let stat = self
+            .cases
+            .entry(obs.case_id.clone())
+            .or_default()
+            .entry(obs.method)
+            .or_default();
+        stat.attempts += 1;
+        if let Some(g) = obs.gain {
+            stat.wins += 1;
+            stat.total_gain += g;
+        }
+        self.observations += 1;
+    }
+
+    /// Fold a task's worth of observations in. Merging is additive, so the
+    /// final store is independent of the order tasks complete in.
+    pub fn merge(&mut self, obs: &[SkillObs]) {
+        for o in obs {
+            self.observe(o);
+        }
+    }
+
+    /// Reorder a case's allowed methods by observed performance: stable
+    /// sort, descending score. Methods never tried keep their curated
+    /// position among themselves (score 0); methods that only ever failed
+    /// sink below untried ones.
+    pub fn rerank(&self, case_id: &str, methods: &mut [MethodId]) {
+        let Some(stats) = self.cases.get(case_id) else {
+            return;
+        };
+        methods.sort_by(|a, b| {
+            let sa = stats.get(a).map(|s| s.score()).unwrap_or(0.0);
+            let sb = stats.get(b).map(|s| s.score()).unwrap_or(0.0);
+            sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
+
+    // ---- persistence ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let cases = self
+            .cases
+            .iter()
+            .map(|(case, methods)| {
+                let m = methods
+                    .iter()
+                    .map(|(method, s)| {
+                        (
+                            method.name().to_string(),
+                            json::obj(vec![
+                                ("attempts", json::num(s.attempts as f64)),
+                                ("wins", json::num(s.wins as f64)),
+                                ("total_gain", json::num(s.total_gain)),
+                            ]),
+                        )
+                    })
+                    .collect();
+                (case.clone(), Json::Obj(m))
+            })
+            .collect();
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            ("observations", json::num(self.observations as f64)),
+            ("cases", Json::Obj(cases)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SkillStore, String> {
+        let mut store = SkillStore::new();
+        store.observations = j
+            .get("observations")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        let cases = j
+            .get("cases")
+            .and_then(|c| c.as_obj())
+            .ok_or_else(|| "skill store missing cases".to_string())?;
+        for (case, methods) in cases {
+            let methods = methods
+                .as_obj()
+                .ok_or_else(|| format!("case {case}: not an object"))?;
+            let mut out = BTreeMap::new();
+            for (mname, stat) in methods {
+                let Some(method) = MethodId::from_name(mname) else {
+                    // Unknown method (newer writer): skip, keep the rest.
+                    continue;
+                };
+                let get = |k: &str| stat.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                out.insert(
+                    method,
+                    MethodStat {
+                        attempts: get("attempts") as u64,
+                        wins: get("wins") as u64,
+                        total_gain: get("total_gain"),
+                    },
+                );
+            }
+            store.cases.insert(case.clone(), out);
+        }
+        Ok(store)
+    }
+
+    /// Atomic save: write a tmp file, then rename over the target.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, format!("{}\n", self.to_json()))?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Load a store; a missing file is an empty (cold) store, a corrupt
+    /// file is an error.
+    pub fn load(path: &Path) -> Result<SkillStore, String> {
+        if !path.exists() {
+            return Ok(SkillStore::new());
+        }
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("parsing {path:?}: {e}"))?;
+        SkillStore::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(case: &str, m: MethodId, gain: Option<f64>) -> SkillObs {
+        SkillObs {
+            case_id: case.to_string(),
+            method: m,
+            gain,
+        }
+    }
+
+    #[test]
+    fn observe_accumulates() {
+        let mut s = SkillStore::new();
+        s.observe(&obs("c", MethodId::TileSmem, Some(1.0)));
+        s.observe(&obs("c", MethodId::TileSmem, Some(3.0)));
+        s.observe(&obs("c", MethodId::TileSmem, None));
+        let st = s.stat("c", MethodId::TileSmem).unwrap();
+        assert_eq!(st.attempts, 3);
+        assert_eq!(st.wins, 2);
+        assert_eq!(st.mean_gain(), 2.0);
+        assert_eq!(s.observations, 3);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let a = vec![obs("c", MethodId::TileSmem, Some(1.0)), obs("d", MethodId::SplitK, None)];
+        let b = vec![obs("c", MethodId::TileSmem, Some(0.5))];
+        let mut s1 = SkillStore::new();
+        s1.merge(&a);
+        s1.merge(&b);
+        let mut s2 = SkillStore::new();
+        s2.merge(&b);
+        s2.merge(&a);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn rerank_promotes_observed_winners_and_sinks_losers() {
+        let mut s = SkillStore::new();
+        // VectorizeLoads observed great, DoubleBuffer observed failing.
+        s.observe(&obs("c", MethodId::VectorizeLoads, Some(2.0)));
+        s.observe(&obs("c", MethodId::DoubleBuffer, None));
+        let mut methods = vec![
+            MethodId::DoubleBuffer,
+            MethodId::TileSmem,
+            MethodId::VectorizeLoads,
+        ];
+        s.rerank("c", &mut methods);
+        assert_eq!(
+            methods,
+            vec![MethodId::VectorizeLoads, MethodId::TileSmem, MethodId::DoubleBuffer]
+        );
+    }
+
+    #[test]
+    fn rerank_unknown_case_is_noop() {
+        let s = SkillStore::new();
+        let mut methods = vec![MethodId::TileSmem, MethodId::SplitK];
+        s.rerank("nope", &mut methods);
+        assert_eq!(methods, vec![MethodId::TileSmem, MethodId::SplitK]);
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let mut s = SkillStore::new();
+        s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, Some(1.2345678901234)));
+        s.observe(&obs("gemm.naive_loop", MethodId::UseTensorCore, None));
+        s.observe(&obs("fusion.elementwise_chain", MethodId::FuseElementwise, Some(0.25)));
+        let j = s.to_json();
+        let back = SkillStore::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ks-skills-{}", std::process::id()));
+        let path = dir.join("skills.json");
+        let mut s = SkillStore::new();
+        s.observe(&obs("c", MethodId::TileSmem, Some(0.5)));
+        s.save(&path).unwrap();
+        let back = SkillStore::load(&path).unwrap();
+        assert_eq!(s, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_missing_is_cold() {
+        let s = SkillStore::load(Path::new("/nonexistent/skills.json")).unwrap();
+        assert!(s.is_empty());
+    }
+}

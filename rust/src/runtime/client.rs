@@ -4,25 +4,14 @@
 //! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
 //! instruction ids, avoiding the 64-bit-id protos that jax >= 0.5 emits and
 //! xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+//!
+//! The real client links the `xla` crate, which the offline build image
+//! does not vendor; it is therefore gated behind the `pjrt` cargo feature.
+//! The default build compiles an API-identical stub whose constructor
+//! returns an error, so everything downstream (verify, calibrate, the CLI
+//! subcommands, the artifact tests) compiles and degrades gracefully.
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
-
-use anyhow::{Context, Result};
-
-/// A compiled artifact ready to execute.
-pub struct Compiled {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// PJRT CPU client + executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: BTreeMap<String, Compiled>,
-    artifacts_dir: PathBuf,
-}
+use crate::util::error::Result;
 
 /// A host tensor (f32, row-major) for artifact I/O.
 #[derive(Debug, Clone, PartialEq)]
@@ -48,90 +37,201 @@ impl Tensor {
     }
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
-    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            cache: BTreeMap::new(),
-            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
-        })
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
+    use std::time::Instant;
+
+    use super::Tensor;
+    use crate::util::error::{Context, Result};
+
+    /// A compiled artifact ready to execute.
+    pub struct Compiled {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// PJRT CPU client + executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: BTreeMap<String, Compiled>,
+        artifacts_dir: PathBuf,
     }
 
-    /// Load + compile one artifact file (cached by name).
-    pub fn load(&mut self, name: &str, file: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
-        }
-        let path = self.artifacts_dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        self.cache.insert(
-            name.to_string(),
-            Compiled {
-                name: name.to_string(),
-                exe,
-            },
-        );
-        Ok(())
-    }
-
-    pub fn is_loaded(&self, name: &str) -> bool {
-        self.cache.contains_key(name)
-    }
-
-    /// Execute a loaded artifact on f32 inputs; returns the 1-tuple output.
-    /// (aot.py lowers with return_tuple=True, so outputs unwrap via
-    /// to_tuple1.)
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
-        let compiled = self
-            .cache
-            .get(name)
-            .with_context(|| format!("artifact {name} not loaded"))?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let lit = xla::Literal::vec1(&t.data);
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).context("reshaping input literal")
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at an artifacts directory.
+        pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                cache: BTreeMap::new(),
+                artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
             })
-            .collect::<Result<_>>()?;
-        let result = compiled.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
-        let shape = out.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = out.to_vec::<f32>()?;
-        Ok(Tensor::new(dims, data))
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one artifact file (cached by name).
+        pub fn load(&mut self, name: &str, file: &str) -> Result<()> {
+            if self.cache.contains_key(name) {
+                return Ok(());
+            }
+            let path = self.artifacts_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Compiled {
+                    name: name.to_string(),
+                    exe,
+                },
+            );
+            Ok(())
+        }
+
+        pub fn is_loaded(&self, name: &str) -> bool {
+            self.cache.contains_key(name)
+        }
+
+        /// Execute a loaded artifact on f32 inputs; returns the 1-tuple
+        /// output. (aot.py lowers with return_tuple=True, so outputs unwrap
+        /// via to_tuple1.)
+        pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+            let compiled = self
+                .cache
+                .get(name)
+                .with_context(|| format!("artifact {name} not loaded"))?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let lit = xla::Literal::vec1(&t.data);
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).context("reshaping input literal")
+                })
+                .collect::<Result<_>>()?;
+            let result = compiled.exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+            let shape = out.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = out.to_vec::<f32>()?;
+            Ok(Tensor::new(dims, data))
+        }
+
+        /// Median-of-N wall-clock latency of one artifact (seconds).
+        pub fn time_execution(
+            &self,
+            name: &str,
+            inputs: &[Tensor],
+            warmup: usize,
+            iters: usize,
+        ) -> Result<f64> {
+            for _ in 0..warmup {
+                self.execute(name, inputs)?;
+            }
+            let mut times = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let t0 = Instant::now();
+                self.execute(name, inputs)?;
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            Ok(crate::util::stats::median(&times))
+        }
+
+        pub fn loaded_names(&self) -> Vec<&str> {
+            self.cache.values().map(|c| c.name.as_str()).collect()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::{Path, PathBuf};
+
+    use super::Tensor;
+    use crate::util::error::{Error, Result};
+
+    /// Stub runtime: the build has no `xla` crate. Construction fails with
+    /// instructions; callers that guard on `Runtime::new` (the artifact
+    /// tests, quickstart) skip cleanly.
+    pub struct Runtime {
+        _artifacts_dir: PathBuf,
     }
 
-    /// Median-of-N wall-clock latency of one artifact (seconds).
-    pub fn time_execution(&self, name: &str, inputs: &[Tensor], warmup: usize, iters: usize) -> Result<f64> {
-        for _ in 0..warmup {
-            self.execute(name, inputs)?;
-        }
-        let mut times = Vec::with_capacity(iters);
-        for _ in 0..iters {
-            let t0 = Instant::now();
-            self.execute(name, inputs)?;
-            times.push(t0.elapsed().as_secs_f64());
-        }
-        Ok(crate::util::stats::median(&times))
+    fn unavailable() -> Error {
+        Error::msg(
+            "PJRT runtime unavailable: this binary was built without the \
+             `pjrt` cargo feature (the offline image does not vendor the \
+             `xla` crate). Rebuild with `cargo build --features pjrt` in an \
+             environment that provides it.",
+        )
     }
 
-    pub fn loaded_names(&self) -> Vec<&str> {
-        self.cache.values().map(|c| c.name.as_str()).collect()
+    impl Runtime {
+        pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+            let _ = artifacts_dir.as_ref();
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn load(&mut self, _name: &str, _file: &str) -> Result<()> {
+            Err(unavailable())
+        }
+
+        pub fn is_loaded(&self, _name: &str) -> bool {
+            false
+        }
+
+        pub fn execute(&self, _name: &str, _inputs: &[Tensor]) -> Result<Tensor> {
+            Err(unavailable())
+        }
+
+        pub fn time_execution(
+            &self,
+            _name: &str,
+            _inputs: &[Tensor],
+            _warmup: usize,
+            _iters: usize,
+        ) -> Result<f64> {
+            Err(unavailable())
+        }
+
+        pub fn loaded_names(&self) -> Vec<&str> {
+            Vec::new()
+        }
+    }
+}
+
+pub use imp::Runtime;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_max_abs_diff() {
+        let a = Tensor::new(vec![2, 2], vec![0.0, 1.0, 2.0, 3.0]);
+        let b = Tensor::new(vec![2, 2], vec![0.5, 1.0, 2.0, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_errors_with_instructions() {
+        let e = Runtime::new("artifacts").err().expect("stub must fail");
+        assert!(e.to_string().contains("pjrt"));
     }
 }

@@ -4,7 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Error, Result};
 
 use crate::util::json::Json;
 
@@ -38,7 +38,7 @@ impl Registry {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| Error::msg(format!("manifest parse: {e}")))?;
         let tasks_json = json
             .get("tasks")
             .and_then(|t| t.as_obj())

@@ -2,7 +2,7 @@
 //! artifact on identical seeded inputs and compare — the Verifier's ground
 //! truth for artifact-backed tasks (DESIGN.md §Three-layer).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::client::{Runtime, Tensor};
 use super::registry::Registry;

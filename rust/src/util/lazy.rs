@@ -1,0 +1,55 @@
+//! Lazily-initialized statics over `std::sync::OnceLock` (once_cell is not
+//! vendored offline).
+//!
+//! API-compatible with the `once_cell::sync::Lazy<T>` subset this repo uses:
+//! `static X: Lazy<T> = Lazy::new(|| ...)` with a non-capturing closure
+//! (which coerces to `fn() -> T`), then transparent `Deref` access.
+
+use std::ops::Deref;
+use std::sync::OnceLock;
+
+pub struct Lazy<T> {
+    cell: OnceLock<T>,
+    init: fn() -> T,
+}
+
+impl<T> Lazy<T> {
+    pub const fn new(init: fn() -> T) -> Lazy<T> {
+        Lazy {
+            cell: OnceLock::new(),
+            init,
+        }
+    }
+
+    /// Force initialization and return a reference to the value.
+    pub fn force(this: &Lazy<T>) -> &T {
+        this.cell.get_or_init(this.init)
+    }
+}
+
+impl<T> Deref for Lazy<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        Lazy::force(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static NUMS: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+
+    #[test]
+    fn static_initializes_once() {
+        assert_eq!(NUMS.len(), 3);
+        assert_eq!(NUMS.iter().sum::<u32>(), 6);
+    }
+
+    #[test]
+    fn local_lazy() {
+        let l: Lazy<String> = Lazy::new(|| "hi".to_string());
+        assert_eq!(&*l, "hi");
+        assert_eq!(&*l, "hi");
+    }
+}

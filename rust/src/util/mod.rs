@@ -1,10 +1,12 @@
 //! Infrastructure layer: deterministic RNG, statistics, JSON, CLI parsing,
-//! thread pool, and logging. These stand in for rand/serde/clap/tokio,
-//! which are unavailable in the offline build environment (DESIGN.md
-//! §Infrastructure).
+//! thread pool, lazy statics, error plumbing, and logging. These stand in
+//! for rand/serde/clap/tokio/once_cell/anyhow, which are unavailable in the
+//! offline build environment (DESIGN.md §Infrastructure).
 
 pub mod cli;
+pub mod error;
 pub mod json;
+pub mod lazy;
 pub mod logging;
 pub mod pool;
 pub mod rng;

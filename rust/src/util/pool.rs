@@ -1,22 +1,47 @@
-//! Tiny work-stealing-free thread pool (tokio is not vendored offline).
+//! Work-stealing thread pool primitives (tokio/rayon are not vendored
+//! offline).
 //!
-//! The suite runner fans 250 tasks × strategies × seeds over this pool; each
-//! unit of work is CPU-bound (cost model + retrieval + loop), so a simple
-//! shared-queue pool with `available_parallelism` workers is the right shape.
+//! The suite orchestrator fans 250 tasks × strategies × seeds over
+//! [`run_streaming`]: jobs are dealt round-robin into per-worker deques,
+//! idle workers steal from the back of a victim's deque, and every finished
+//! result is handed to a single-threaded `sink` on the calling thread *as it
+//! completes* — that is what lets the scheduler append checkpoint JSONL
+//! lines and persist the skill store incrementally instead of holding the
+//! whole matrix in memory until the end.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
-/// Map `f` over `items` in parallel, preserving order of results.
+/// Pop from our own queue front, else steal from a victim's back.
+fn pop_or_steal(queues: &[Mutex<VecDeque<usize>>], w: usize) -> Option<usize> {
+    if let Some(i) = queues[w].lock().unwrap().pop_front() {
+        return Some(i);
+    }
+    let n = queues.len();
+    for off in 1..n {
+        let victim = (w + off) % n;
+        if let Some(i) = queues[victim].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Map `f` over `items` on a work-stealing pool, streaming completions.
 ///
-/// `f` must be `Sync` (called from many threads) and items are handed out by
-/// index from an atomic counter — no per-item allocation or channel traffic.
-pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+/// * `f(index, &item)` runs on worker threads; it must be pure per item for
+///   results to be order-independent.
+/// * `sink(index, &result)` runs on the calling thread, once per item, in
+///   *completion* order (nondeterministic under parallelism).
+/// * The returned vector is in item order regardless of completion order.
+pub fn run_streaming<T, R, F, S>(items: &[T], workers: usize, f: F, mut sink: S) -> Vec<R>
 where
     T: Sync,
     R: Send,
-    F: Fn(&T) -> R + Sync,
+    F: Fn(usize, &T) -> R + Sync,
+    S: FnMut(usize, &R),
 {
     let n = items.len();
     if n == 0 {
@@ -24,29 +49,65 @@ where
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        return items.iter().map(|t| f(t)).collect();
+        // Serial fast path: same streaming contract, no threads.
+        let mut out = Vec::with_capacity(n);
+        for (i, t) in items.iter().enumerate() {
+            let r = f(i, t);
+            sink(i, &r);
+            out.push(r);
+        }
+        return out;
     }
 
-    let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let queues: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for i in 0..n {
+        queues[i % workers].lock().unwrap().push_back(i);
+    }
+
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
 
     thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+        for w in 0..workers {
+            let tx = tx.clone();
+            let queues = &queues;
+            let f = &f;
+            scope.spawn(move || {
+                while let Some(i) = pop_or_steal(queues, w) {
+                    let r = f(i, &items[i]);
+                    if tx.send((i, r)).is_err() {
+                        break;
+                    }
                 }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
             });
+        }
+        drop(tx);
+        // Drain completions on the calling thread so the sink needs no
+        // synchronization (it owns the checkpoint writer / skill store).
+        for (i, r) in rx {
+            sink(i, &r);
+            slots[i] = Some(r);
         }
     });
 
-    results
+    slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker completed"))
+        .map(|s| s.expect("worker completed every job"))
         .collect()
+}
+
+/// Map `f` over `items` in parallel, preserving order of results.
+///
+/// Thin wrapper over [`run_streaming`] with a no-op sink; kept for callers
+/// that don't need completion streaming.
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    run_streaming(items, workers, |_, t| f(t), |_, _| {})
 }
 
 /// Default worker count: physical parallelism minus one (leave a core for
@@ -103,6 +164,47 @@ mod tests {
     fn empty_input() {
         let items: Vec<u32> = vec![];
         assert!(parallel_map(&items, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn streaming_sink_sees_every_completion_once() {
+        let items: Vec<u64> = (0..200).collect();
+        let mut seen = vec![0u32; items.len()];
+        let out = run_streaming(&items, 8, |_, x| x + 1, |i, r| {
+            seen[i] += 1;
+            assert_eq!(*r, items[i] + 1);
+        });
+        assert!(seen.iter().all(|&c| c == 1));
+        assert_eq!(out.len(), items.len());
+        assert_eq!(out[7], 8);
+    }
+
+    #[test]
+    fn streaming_serial_is_in_order() {
+        let items = vec![10, 20, 30];
+        let mut order = Vec::new();
+        let out = run_streaming(&items, 1, |_, x| *x, |i, _| order.push(i));
+        assert_eq!(order, vec![0, 1, 2]);
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn work_stealing_drains_unbalanced_queues() {
+        // More workers than a single queue's share: stealing must finish
+        // the whole range even when per-item cost is wildly skewed.
+        let items: Vec<u64> = (0..64).collect();
+        let out = run_streaming(
+            &items,
+            6,
+            |_, x| {
+                if x % 7 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                x * x
+            },
+            |_, _| {},
+        );
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
     }
 
     #[test]

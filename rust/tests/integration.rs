@@ -1,15 +1,34 @@
 //! Integration tests: the full loop over the real task suite, cross-module
-//! invariants, and the experiment harness end-to-end (small slices).
+//! invariants, the experiment harness end-to-end (small slices), and the
+//! orchestration-v2 checkpoint/resume + persistent-memory contracts.
+
+use std::path::PathBuf;
 
 use kernelskill::baselines;
 use kernelskill::bench_suite::{self, eager};
-use kernelskill::coordinator::{self, Branch, LoopConfig};
+use kernelskill::coordinator::{self, Branch, LoopConfig, SuiteOptions};
 use kernelskill::device::machine::DeviceSpec;
 use kernelskill::harness::metrics;
 use kernelskill::kir::transforms::MethodId;
+use kernelskill::memory::long_term::SkillStore;
 
 fn cfg() -> LoopConfig {
     LoopConfig::default()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ks-integ-{tag}-{}", std::process::id()))
+}
+
+/// Exact equality of aggregate cells: a resumed run must be byte-identical
+/// to an uninterrupted one, so f64 `==` is intended.
+fn assert_cells_identical(a: &metrics::Cell, b: &metrics::Cell, what: &str) {
+    assert_eq!(a.n, b.n, "{what}: n");
+    assert_eq!(a.success, b.success, "{what}: success");
+    assert_eq!(a.speedup, b.speedup, "{what}: speedup");
+    assert_eq!(a.fast1, b.fast1, "{what}: fast1");
+    assert_eq!(a.mean_rounds, b.mean_rounds, "{what}: mean_rounds");
+    assert_eq!(a.speedup_per_round, b.speedup_per_round, "{what}: speedup_per_round");
 }
 
 #[test]
@@ -151,4 +170,176 @@ fn audit_trail_present_for_decision_policy_runs() {
             assert!(case.allowed_methods.contains(m));
         }
     }
+}
+
+// ------------------------------------------------------------------------
+// Orchestration v2: checkpoint / resume / persistent long-term memory.
+// ------------------------------------------------------------------------
+
+#[test]
+fn interrupted_run_resumes_to_identical_aggregates() {
+    let dir = tmp_dir("resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(6).collect();
+    let strat = baselines::kernelskill();
+    let seeds = [0u64, 1];
+
+    // Uninterrupted reference (fully in-memory).
+    let full = coordinator::run_suite(&tasks, &strat, &cfg(), &seeds, 4);
+
+    // Kill the checkpointed run mid-matrix (5 of 12 cells complete) ...
+    let mut opts = SuiteOptions::in_dir(&dir);
+    opts.stop_after = Some(5);
+    let partial = coordinator::run_suite_with(&tasks, &strat, &cfg(), &seeds, 4, &opts).unwrap();
+    assert_eq!(partial.results.len(), 5, "kill point respected");
+
+    // ... tear the checkpoint tail the way a hard kill would ...
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("results.jsonl"))
+            .unwrap();
+        f.write_all(b"{\"strategy\":\"KernelSkill\",\"task_id\":\"tr").unwrap();
+    }
+
+    // ... and resume.
+    let resumed = coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &cfg(),
+        &seeds,
+        4,
+        &SuiteOptions::resumed(&dir),
+    )
+    .unwrap();
+    assert_eq!(resumed.results.len(), full.results.len());
+    for (a, b) in full.results.iter().zip(&resumed.results) {
+        assert_eq!(a.task_id, b.task_id);
+        assert_eq!(a.best_speedup, b.best_speedup, "{}", a.task_id);
+        assert_eq!(a.rounds, b.rounds, "{}", a.task_id);
+    }
+    let split_full = metrics::by_level(&full.results);
+    let split_res = metrics::by_level(&resumed.results);
+    for lvl in 0..3 {
+        assert_cells_identical(
+            &metrics::cell(&split_full[lvl], strat.rounds),
+            &metrics::cell(&split_res[lvl], strat.rounds),
+            &format!("level {}", lvl + 1),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resumed_run_with_warm_memory_matches_uninterrupted() {
+    // Seed both memory dirs with the same learned store, then compare an
+    // uninterrupted warm run against a killed + resumed warm run: the
+    // snapshot persisted in the run dir must make them identical.
+    let root = tmp_dir("warm-resume");
+    let _ = std::fs::remove_dir_all(&root);
+    let learn_dir = root.join("learn");
+    let tasks_l1: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(4).collect();
+    let strat = baselines::kernelskill();
+    let mut learn_cfg = cfg();
+    learn_cfg.memory_dir = Some(learn_dir.clone());
+    coordinator::run_suite_with(&tasks_l1, &strat, &learn_cfg, &[0], 4, &SuiteOptions::default())
+        .unwrap();
+    let learned = SkillStore::load(&learn_dir.join("skills.json")).unwrap();
+    assert!(learned.observations > 0, "learning run must record skills");
+
+    let tasks_l2: Vec<_> = bench_suite::level_suite(42, 2).into_iter().take(4).collect();
+    let mem_a = root.join("mem-a");
+    let mem_b = root.join("mem-b");
+    learned.save(&mem_a.join("skills.json")).unwrap();
+    learned.save(&mem_b.join("skills.json")).unwrap();
+
+    let mut cfg_a = cfg();
+    cfg_a.memory_dir = Some(mem_a);
+    let uninterrupted =
+        coordinator::run_suite_with(&tasks_l2, &strat, &cfg_a, &[0], 4, &SuiteOptions::default())
+            .unwrap();
+
+    let run_dir = root.join("run");
+    let mut cfg_b = cfg();
+    cfg_b.memory_dir = Some(mem_b);
+    let mut opts = SuiteOptions::in_dir(&run_dir);
+    opts.stop_after = Some(2);
+    coordinator::run_suite_with(&tasks_l2, &strat, &cfg_b, &[0], 4, &opts).unwrap();
+    let resumed = coordinator::run_suite_with(
+        &tasks_l2,
+        &strat,
+        &cfg_b,
+        &[0],
+        4,
+        &SuiteOptions::resumed(&run_dir),
+    )
+    .unwrap();
+
+    for (a, b) in uninterrupted.results.iter().zip(&resumed.results) {
+        assert_eq!(a.best_speedup, b.best_speedup, "{}", a.task_id);
+        assert_eq!(a.rounds, b.rounds, "{}", a.task_id);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn warm_memory_loads_from_disk_and_shows_in_audit() {
+    use kernelskill::device::costmodel::price;
+    use kernelskill::device::metrics::{synthesize, ToolVersion};
+    use kernelskill::kir::features::ground_truth;
+    use kernelskill::kir::schedule::Schedule;
+    use kernelskill::memory::long_term::retrieval;
+
+    let root = tmp_dir("warm-audit");
+    let _ = std::fs::remove_dir_all(&root);
+    let mem = root.join("memory");
+
+    // Learn on a slice that includes the Appendix-D task: its first move is
+    // the gemm.naive_loop -> TileSmem decision, so the store must end up
+    // with that skill recorded.
+    let tasks: Vec<_> = bench_suite::level_suite(42, 2)
+        .into_iter()
+        .filter(|t| t.id.contains("fused_epilogue"))
+        .chain(bench_suite::level_suite(42, 1).into_iter().take(2))
+        .collect();
+    assert!(!tasks.is_empty());
+    let mut mem_cfg = cfg();
+    mem_cfg.memory_dir = Some(mem.clone());
+    coordinator::run_suite_with(
+        &tasks,
+        &baselines::kernelskill(),
+        &mem_cfg,
+        &[0],
+        2,
+        &SuiteOptions::default(),
+    )
+    .unwrap();
+
+    // The store was persisted to disk and holds the motivating skill.
+    let store = SkillStore::load(&mem.join("skills.json")).unwrap();
+    assert!(store.observations > 0);
+    let stat = store
+        .stat("gemm.naive_loop", MethodId::TileSmem)
+        .expect("appendix-D run must record the TileSmem skill");
+    assert!(stat.attempts > 0);
+
+    // Warm-started retrieval reflects the persisted skills in its audit.
+    let task = bench_suite::level_suite(42, 2)
+        .into_iter()
+        .find(|t| t.id.contains("fused_epilogue"))
+        .unwrap();
+    let sched = Schedule::per_op_naive(&task.graph);
+    let dev = DeviceSpec::a100_like();
+    let cost = price(&task.graph, &sched, &dev);
+    let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+    let feats = ground_truth(&task.graph, &sched);
+    let r = retrieval::retrieve_for_with(&task, &feats, &raw, Some(&store));
+    let audit = r.audit();
+    assert!(
+        audit.contains("skills (persistent long-term memory)"),
+        "audit must surface persisted skills:\n{audit}"
+    );
+    assert!(audit.contains("tile_smem:"), "{audit}");
+    let _ = std::fs::remove_dir_all(&root);
 }
