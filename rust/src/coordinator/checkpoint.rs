@@ -37,7 +37,10 @@ pub struct CellKey {
     pub seed: u64,
 }
 
-/// Matrix shape recorded at run start; resume validates against it.
+/// Matrix shape recorded at run start; resume validates against it. Shard
+/// runs additionally record which slice of the matrix this directory owns,
+/// so resume cannot silently mix shard assignments and `merge` can check
+/// that its inputs partition one and the same matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunManifest {
     pub n_tasks: usize,
@@ -46,6 +49,10 @@ pub struct RunManifest {
     pub at: f64,
     /// Order-sensitive fold of the task ids.
     pub fingerprint: u64,
+    /// Total shard count this directory was written under (1 = unsharded).
+    pub shards: usize,
+    /// This directory's shard index (0 when unsharded).
+    pub shard_index: usize,
 }
 
 impl RunManifest {
@@ -55,6 +62,17 @@ impl RunManifest {
             h = h.rotate_left(5) ^ label(id);
         }
         h
+    }
+
+    /// True when `other` describes the same (strategy-independent) cell
+    /// matrix — shard fields excluded, since different shards of one run
+    /// legitimately differ there. This is `merge`'s compatibility check.
+    pub fn same_matrix(&self, other: &RunManifest) -> bool {
+        self.n_tasks == other.n_tasks
+            && self.seeds == other.seeds
+            && self.rt == other.rt
+            && self.at == other.at
+            && self.fingerprint == other.fingerprint
     }
 
     fn to_json(&self) -> Json {
@@ -68,6 +86,8 @@ impl RunManifest {
             ("rt", json::num(self.rt)),
             ("at", json::num(self.at)),
             ("fingerprint", json::s(&self.fingerprint.to_string())),
+            ("shards", json::num(self.shards as f64)),
+            ("shard_index", json::num(self.shard_index as f64)),
         ])
     }
 
@@ -90,12 +110,18 @@ impl RunManifest {
             .map(|f| parse_u64(f, "fingerprint"))
             .transpose()?
             .unwrap_or(0);
+        // Pre-sharding manifests carry no shard fields: they were written
+        // by a single process, i.e. shard 0 of 1.
+        let shards = j.get("shards").and_then(|v| v.as_usize()).unwrap_or(1);
+        let shard_index = j.get("shard_index").and_then(|v| v.as_usize()).unwrap_or(0);
         Ok(RunManifest {
             n_tasks,
             seeds,
             rt,
             at,
             fingerprint,
+            shards,
+            shard_index,
         })
     }
 }
@@ -125,6 +151,15 @@ impl RunDir {
 
     pub fn manifest_path(&self) -> PathBuf {
         self.root.join("manifest.json")
+    }
+
+    /// Per-run-dir skill store: the fold of every checkpointed cell's
+    /// observations. The scheduler rebuilds it from the checkpoint on open
+    /// and saves it once per dispatch round, which is what lets `merge`
+    /// combine shards' stores without re-running anything (`merge` treats
+    /// the checkpointed cells as authoritative if this file ever lags).
+    pub fn skills_path(&self) -> PathBuf {
+        self.root.join("skills.json")
     }
 
     /// Skill-store warm-start snapshot for one strategy. Per-strategy files:
@@ -163,19 +198,42 @@ impl RunDir {
     /// Append one completed cell to `results.jsonl` and flush. One line per
     /// call; a crash can only tear the final line, which `load` tolerates.
     pub fn append(&self, key: &CellKey, r: &TaskResult) -> io::Result<()> {
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(self.results_path())?;
+        let path = self.results_path();
+        // Heal a torn tail first: a hard kill can leave a partial record
+        // with no trailing newline, and appending straight after it would
+        // glue the new record onto the fragment — corrupting a *complete*
+        // cell, not just the torn one. A lone newline isolates the fragment
+        // so `load`/`load_all` skip exactly the torn line and nothing else.
+        let needs_newline = match std::fs::File::open(&path) {
+            Ok(mut f) => {
+                use std::io::{Read, Seek, SeekFrom};
+                let len = f.metadata()?.len();
+                if len == 0 {
+                    false
+                } else {
+                    f.seek(SeekFrom::End(-1))?;
+                    let mut last = [0u8; 1];
+                    f.read_exact(&mut last)?;
+                    last[0] != b'\n'
+                }
+            }
+            Err(_) => false, // no file yet
+        };
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        if needs_newline {
+            f.write_all(b"\n")?;
+        }
         f.write_all(format!("{}\n", result_to_json(key, r)).as_bytes())?;
         f.flush()
     }
 
-    /// Load all completed cells. Unparseable lines (torn tail of a killed
-    /// run) are skipped with a warning; later duplicates of a key win.
-    pub fn load(&self) -> io::Result<BTreeMap<CellKey, TaskResult>> {
+    /// Load every parseable cell line, duplicates included, in file order.
+    /// Unparseable lines (torn tail of a killed run) are skipped with a
+    /// warning. `merge` uses this directly so it can *see* duplicate keys
+    /// and decide between deduplication and a loud conflict error.
+    pub fn load_all(&self) -> io::Result<Vec<(CellKey, TaskResult)>> {
         let path = self.results_path();
-        let mut out = BTreeMap::new();
+        let mut out = Vec::new();
         if !path.exists() {
             return Ok(out);
         }
@@ -188,9 +246,7 @@ impl RunDir {
                 .map_err(|e| e.to_string())
                 .and_then(|j| result_from_json(&j));
             match parsed {
-                Ok((key, result)) => {
-                    out.insert(key, result);
-                }
+                Ok(cell) => out.push(cell),
                 Err(e) => {
                     crate::log_warn!(
                         "checkpoint {}:{}: skipping unparseable line ({e})",
@@ -201,6 +257,12 @@ impl RunDir {
             }
         }
         Ok(out)
+    }
+
+    /// Load all completed cells. Unparseable lines (torn tail of a killed
+    /// run) are skipped with a warning; later duplicates of a key win.
+    pub fn load(&self) -> io::Result<BTreeMap<CellKey, TaskResult>> {
+        Ok(self.load_all()?.into_iter().collect())
     }
 }
 
@@ -578,6 +640,39 @@ mod tests {
     }
 
     #[test]
+    fn append_after_torn_tail_does_not_glue_records() {
+        // A record appended after a hard kill (torn line, no trailing
+        // newline) must not be swallowed by the fragment: resume-then-merge
+        // depends on every *complete* cell surviving on disk.
+        let dir = tmp_dir("heal");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rd = RunDir::open(&dir).unwrap();
+        let r = real_result();
+        let k1 = CellKey {
+            strategy: "KernelSkill".to_string(),
+            task_id: r.task_id.clone(),
+            seed: 0,
+        };
+        let k2 = CellKey {
+            seed: 1,
+            ..k1.clone()
+        };
+        rd.append(&k1, &r).unwrap();
+        {
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(rd.results_path())
+                .unwrap();
+            f.write_all(b"{\"strategy\":\"KernelSk").unwrap();
+        }
+        rd.append(&k2, &r).unwrap();
+        let loaded = rd.load().unwrap();
+        assert_eq!(loaded.len(), 2, "the post-tear append must survive");
+        assert!(loaded.contains_key(&k1) && loaded.contains_key(&k2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn manifest_roundtrip_and_missing() {
         let dir = tmp_dir("manifest");
         let _ = std::fs::remove_dir_all(&dir);
@@ -589,9 +684,65 @@ mod tests {
             rt: 0.3,
             at: 0.3,
             fingerprint: RunManifest::fingerprint_tasks(&["a", "b"]),
+            shards: 3,
+            shard_index: 2,
         };
         rd.write_manifest(&m).unwrap();
         assert_eq!(rd.read_manifest().unwrap(), Some(m));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_without_shard_fields_reads_as_unsharded() {
+        let dir = tmp_dir("manifest-v1");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rd = RunDir::open(&dir).unwrap();
+        std::fs::write(
+            rd.manifest_path(),
+            r#"{"version":1,"n_tasks":4,"seeds":["0"],"rt":0.3,"at":0.3,"fingerprint":"7"}"#,
+        )
+        .unwrap();
+        let m = rd.read_manifest().unwrap().unwrap();
+        assert_eq!(m.shards, 1);
+        assert_eq!(m.shard_index, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn same_matrix_ignores_shard_fields_only() {
+        let base = RunManifest {
+            n_tasks: 4,
+            seeds: vec![0, 1],
+            rt: 0.3,
+            at: 0.3,
+            fingerprint: 99,
+            shards: 1,
+            shard_index: 0,
+        };
+        let mut other_shard = base.clone();
+        other_shard.shards = 4;
+        other_shard.shard_index = 3;
+        assert!(base.same_matrix(&other_shard));
+        let mut other_matrix = base.clone();
+        other_matrix.seeds = vec![0];
+        assert!(!base.same_matrix(&other_matrix));
+    }
+
+    #[test]
+    fn load_all_keeps_duplicates_load_dedupes() {
+        let dir = tmp_dir("dups");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rd = RunDir::open(&dir).unwrap();
+        let r = real_result();
+        let k = CellKey {
+            strategy: "KernelSkill".to_string(),
+            task_id: r.task_id.clone(),
+            seed: 0,
+        };
+        rd.append(&k, &r).unwrap();
+        rd.append(&k, &r).unwrap();
+        assert_eq!(rd.load_all().unwrap().len(), 2);
+        assert_eq!(rd.load().unwrap().len(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,314 @@
+//! Merge per-shard run directories back into one.
+//!
+//! A sharded suite run leaves N run dirs, each holding a disjoint slice of
+//! the (strategy, task, seed) cell matrix (`Shard::owns`), a manifest, a
+//! `results.jsonl` checkpoint, and a per-dir `skills.json` fold of its
+//! cells' observations. [`merge_run_dirs`] unions them into an output run
+//! dir that is indistinguishable from a single-process run:
+//!
+//!   * manifests are validated — every input must describe the same cell
+//!     matrix (shard fields aside); the output manifest is unsharded, so
+//!     the merged dir can itself be `report`ed, `--resume`d, or merged
+//!     again.
+//!   * `results.jsonl` lines are unioned with torn tails tolerated
+//!     (`RunDir::load_all`) and written in canonical key order, so merge
+//!     output is byte-deterministic whatever order shards are given in.
+//!   * duplicate cells are deduplicated when their payloads are
+//!     bit-identical and a **loud error** otherwise — never
+//!     last-writer-wins: two different results for one cell mean the
+//!     shards disagree about the experiment, and silently picking one
+//!     would corrupt the aggregates.
+//!   * `skills.json` stores are folded with [`SkillStore::merge_store`],
+//!     whose exact-sum stats make the fold commutative/associative at the
+//!     bit level; the fold is cross-checked against a store rebuilt from
+//!     the unioned cells' observations (a lagging shard store — the same
+//!     crash class as a torn tail — is tolerated with a warning, and the
+//!     cell-derived store is what gets written).
+//!   * warm-start memory snapshots must agree byte-for-byte across shards
+//!     (otherwise the shards did not run slices of one experiment — hard
+//!     error) and are carried into the output for resumability.
+//!
+//! Net effect: `report` over the merged dir is byte-identical to `report`
+//! over an unsharded run of the same matrix, and so is the skill store —
+//! the property the determinism test battery (tests/sharding.rs and the CI
+//! `shard-smoke` job) pins down.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::checkpoint::{result_to_json, CellKey, RunDir, RunManifest};
+use super::loop_runner::TaskResult;
+use crate::memory::long_term::SkillStore;
+
+/// What one input directory contributed.
+#[derive(Debug, Clone)]
+pub struct ShardSummary {
+    pub dir: PathBuf,
+    pub shard_index: usize,
+    pub shards: usize,
+    pub cells: usize,
+}
+
+/// Outcome of a successful merge.
+#[derive(Debug, Clone)]
+pub struct MergeReport {
+    pub inputs: Vec<ShardSummary>,
+    /// Distinct cells written to the output.
+    pub merged_cells: usize,
+    /// Duplicate lines dropped because they were bit-identical.
+    pub deduplicated: usize,
+    pub skill_observations: u64,
+    /// Shard indices the inputs' manifests declare but no input covered.
+    /// Non-empty means the output holds a partial matrix (merge-then-resume
+    /// is supported, but the gap should never be silent).
+    pub missing_shards: Vec<usize>,
+}
+
+impl MergeReport {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "merged {} run dir(s): {} cell(s), {} bit-identical duplicate(s) dropped\n",
+            self.inputs.len(),
+            self.merged_cells,
+            self.deduplicated
+        ));
+        for s in &self.inputs {
+            out.push_str(&format!(
+                "  shard {}/{}  {:<40} {} cell(s)\n",
+                s.shard_index,
+                s.shards,
+                s.dir.display(),
+                s.cells
+            ));
+        }
+        if !self.missing_shards.is_empty() {
+            out.push_str(&format!(
+                "WARNING: shard index(es) {:?} missing — the output covers a partial \
+                 matrix; merge the missing dirs or --resume the output to finish it\n",
+                self.missing_shards
+            ));
+        }
+        out.push_str(&format!(
+            "skill store: {} observation(s) merged\n",
+            self.skill_observations
+        ));
+        out
+    }
+}
+
+/// Union per-shard run dirs into `out`. See the module docs for the rules.
+pub fn merge_run_dirs(out: &Path, inputs: &[PathBuf]) -> Result<MergeReport, String> {
+    if inputs.is_empty() {
+        return Err("merge needs at least one input run dir".to_string());
+    }
+    let out_rd = RunDir::open(out).map_err(|e| format!("opening output dir {}: {e}", out.display()))?;
+    if out_rd.has_results() {
+        return Err(format!(
+            "output dir {} already holds results; merge refuses to overwrite",
+            out.display()
+        ));
+    }
+    let out_canon = std::fs::canonicalize(out).map_err(|e| format!("resolving {}: {e}", out.display()))?;
+
+    let mut base: Option<RunManifest> = None;
+    // key -> (canonical serialized line, parsed result)
+    let mut merged: BTreeMap<CellKey, (String, TaskResult)> = BTreeMap::new();
+    let mut deduplicated = 0usize;
+    let mut summaries: Vec<ShardSummary> = Vec::new();
+    // Per-shard skills.json stores, folded commutatively. None once any
+    // input lacks one (pre-sharding dirs) — then only the cell-derived
+    // store below is available.
+    let mut folded_stores: Option<SkillStore> = Some(SkillStore::new());
+    // Warm-start snapshots (memory_snapshot.<strategy>.json): cells of a
+    // sharded warm run are only equivalent to a single-process run if every
+    // shard started from the same snapshot, so inputs must carry the same
+    // snapshot set with identical bytes — a warm shard merged with a cold
+    // one (or with different warm stores) is a hard error. Identical
+    // snapshots are carried into the output so the merged dir stays
+    // resumable with identical warm-started retrieval.
+    let mut snapshots: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+    let mut snapshot_names_of_first: Option<Vec<String>> = None;
+
+    for dir in inputs {
+        let canon = std::fs::canonicalize(dir).map_err(|e| format!("resolving {}: {e}", dir.display()))?;
+        if canon == out_canon {
+            return Err(format!(
+                "output dir {} is also a merge input; pick a fresh output directory",
+                out.display()
+            ));
+        }
+        let rd = RunDir::open(dir).map_err(|e| format!("opening {}: {e}", dir.display()))?;
+        let manifest = rd
+            .read_manifest()?
+            .ok_or_else(|| format!("{}: no manifest.json — not a run directory", dir.display()))?;
+        match &base {
+            None => base = Some(manifest.clone()),
+            Some(b) if !b.same_matrix(&manifest) => {
+                return Err(format!(
+                    "{} was written for a different cell matrix than {} \
+                     ({manifest:?} vs {b:?}); refusing to mix results",
+                    dir.display(),
+                    inputs[0].display()
+                ));
+            }
+            Some(_) => {}
+        }
+
+        let cells = rd
+            .load_all()
+            .map_err(|e| format!("loading {}: {e}", dir.display()))?;
+        let mut count = 0usize;
+        for (key, result) in cells {
+            count += 1;
+            let line = result_to_json(&key, &result).to_string();
+            match merged.get(&key) {
+                None => {
+                    merged.insert(key, (line, result));
+                }
+                Some((existing, _)) if *existing == line => deduplicated += 1,
+                Some(_) => {
+                    return Err(format!(
+                        "conflicting results for cell ({}, {}, {}): {} holds a payload \
+                         that differs from an earlier input; refusing to merge \
+                         (same cell, different outcome means the shards did not run \
+                         the same experiment)",
+                        key.strategy,
+                        key.task_id,
+                        key.seed,
+                        dir.display()
+                    ));
+                }
+            }
+        }
+        summaries.push(ShardSummary {
+            dir: dir.clone(),
+            shard_index: manifest.shard_index,
+            shards: manifest.shards,
+            cells: count,
+        });
+
+        let sp = rd.skills_path();
+        if sp.exists() {
+            if let Some(fold) = folded_stores.as_mut() {
+                fold.merge_store(&SkillStore::load(&sp)?);
+            }
+        } else {
+            folded_stores = None;
+        }
+
+        let mut names: Vec<String> = Vec::new();
+        for entry in std::fs::read_dir(dir).map_err(|e| format!("listing {}: {e}", dir.display()))? {
+            let entry = entry.map_err(|e| format!("listing {}: {e}", dir.display()))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !(name.starts_with("memory_snapshot.") && name.ends_with(".json")) {
+                continue;
+            }
+            let bytes = std::fs::read(entry.path())
+                .map_err(|e| format!("reading {}: {e}", entry.path().display()))?;
+            names.push(name.clone());
+            match snapshots.get(&name) {
+                None => {
+                    snapshots.insert(name, bytes);
+                }
+                Some(prev) if *prev == bytes => {}
+                Some(_) => {
+                    return Err(format!(
+                        "{}: {name} differs between shards — the shards warm-started \
+                         from different skill stores, so their cells are not slices of \
+                         one experiment; refusing to merge",
+                        dir.display()
+                    ));
+                }
+            }
+        }
+        names.sort();
+        match &snapshot_names_of_first {
+            None => snapshot_names_of_first = Some(names),
+            Some(first) if *first == names => {}
+            Some(_) => {
+                return Err(format!(
+                    "{}: warm-start snapshot set differs from {} — a warm shard \
+                     cannot be merged with a cold one (their cells did not see the \
+                     same memory); refusing to merge",
+                    dir.display(),
+                    inputs[0].display()
+                ));
+            }
+        }
+    }
+
+    // The authoritative merged store: fold of the unioned cells'
+    // observations (exact sums make the order irrelevant). Deduplicated
+    // cells contribute once, which is why this — not the per-shard fold —
+    // is what gets written.
+    let mut store = SkillStore::new();
+    for (_, (_, result)) in &merged {
+        store.merge(&result.skill_obs);
+    }
+    // Cross-check: with disjoint shards (nothing deduplicated), folding the
+    // per-shard stores reproduces the cell-derived store bit for bit. A
+    // mismatch is the same crash class as a torn tail — a shard killed
+    // between a results append and its store save lags by one cell — so it
+    // is tolerated with a warning; the cell-derived store is authoritative
+    // either way (resuming the shard also reconciles its store).
+    if deduplicated == 0 {
+        if let Some(fold) = &folded_stores {
+            if *fold != store {
+                crate::log_warn!(
+                    "per-shard skills.json stores lag their checkpoints (interrupted \
+                     shard?); using the store rebuilt from the checkpointed cells"
+                );
+            }
+        }
+    }
+
+    // Write the output dir: unsharded manifest, canonically-ordered
+    // results.jsonl (atomic via tmp + rename), merged skill store.
+    let mut manifest = base.expect("at least one input");
+    manifest.shards = 1;
+    manifest.shard_index = 0;
+    out_rd
+        .write_manifest(&manifest)
+        .map_err(|e| format!("writing merged manifest: {e}"))?;
+    let mut buf = String::new();
+    for (_, (line, _)) in &merged {
+        buf.push_str(line);
+        buf.push('\n');
+    }
+    let results_path = out_rd.results_path();
+    let tmp = results_path.with_extension("jsonl.tmp");
+    std::fs::write(&tmp, buf).map_err(|e| format!("writing merged results: {e}"))?;
+    std::fs::rename(&tmp, &results_path).map_err(|e| format!("writing merged results: {e}"))?;
+    store
+        .save(&out_rd.skills_path())
+        .map_err(|e| format!("writing merged skill store: {e}"))?;
+    for (name, bytes) in &snapshots {
+        std::fs::write(out_rd.root().join(name), bytes)
+            .map_err(|e| format!("writing merged snapshot {name}: {e}"))?;
+    }
+
+    // Coverage check: the manifests declare how many shards the matrix was
+    // split into; missing indices mean a partial merge. Supported (the
+    // output can be --resume'd to completion), but never silent.
+    let declared = summaries.iter().map(|s| s.shards).max().unwrap_or(1);
+    let missing_shards: Vec<usize> = (0..declared)
+        .filter(|i| !summaries.iter().any(|s| s.shard_index == *i))
+        .collect();
+    if !missing_shards.is_empty() {
+        crate::log_warn!(
+            "merged {} input(s) but the manifests declare {declared} shard(s); \
+             missing shard index(es) {missing_shards:?} — the output covers a \
+             partial matrix",
+            summaries.len()
+        );
+    }
+
+    Ok(MergeReport {
+        inputs: summaries,
+        merged_cells: merged.len(),
+        deduplicated,
+        skill_observations: store.observations,
+        missing_shards,
+    })
+}

@@ -1,14 +1,17 @@
 //! Layer-3 coordinator: Algorithm 1's closed loop (`loop_runner`) and the
 //! suite-orchestration v2 engine — work-stealing scheduling (`scheduler`),
-//! incremental JSONL checkpointing + resume (`checkpoint`), and the
-//! suite/matrix entry points (`suite_runner`).
+//! incremental JSONL checkpointing + resume (`checkpoint`), sharded
+//! execution with run-dir merging (`merge`), and the suite/matrix entry
+//! points (`suite_runner`).
 
 pub mod checkpoint;
 pub mod loop_runner;
+pub mod merge;
 pub mod scheduler;
 pub mod suite_runner;
 
 pub use checkpoint::{CellKey, RunDir, RunManifest};
 pub use loop_runner::{run_task, Branch, LoopConfig, RoundRecord, TaskResult};
-pub use scheduler::SuiteOptions;
+pub use merge::{merge_run_dirs, MergeReport};
+pub use scheduler::{Shard, SuiteOptions};
 pub use suite_runner::{run_matrix, run_matrix_with, run_suite, run_suite_with, SuiteResult};

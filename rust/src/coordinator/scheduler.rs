@@ -17,7 +17,14 @@
 //! directory), so results are independent of worker count and completion
 //! order — parallel == serial, and a resumed run reproduces an
 //! uninterrupted one bit-for-bit. The *live* store only ever absorbs
-//! additive merges, so its final state is order-independent too.
+//! additive merges (exact-sum gain totals), so its final state is
+//! order-independent too — at the bit level.
+//!
+//! Sharding: with [`SuiteOptions::shard`] set, the scheduler claims only a
+//! deterministic round-robin slice of the cell matrix ([`Shard::owns`]) and
+//! streams it to this process's own run dir; `coordinator::merge` unions
+//! the per-shard dirs back into one that is indistinguishable from a
+//! single-process run.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -29,6 +36,42 @@ use crate::bench_suite::Task;
 use crate::memory::long_term::kb_content;
 use crate::memory::long_term::SkillStore;
 use crate::util::pool;
+
+/// One process's deterministic slice of the cell matrix.
+///
+/// Cells are claimed round-robin over the flat task-major cell index:
+/// shard `i` of `N` owns exactly the cells whose index is `i (mod N)`.
+/// The claim is a pure function of (index, count, cell position), so the
+/// shard slices are a disjoint exact cover of the matrix, stable under
+/// re-enumeration, and balanced to within one cell — no coordination
+/// between processes is ever needed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// This process's shard index, in `0..count`.
+    pub index: usize,
+    /// Total number of shards the matrix is split across.
+    pub count: usize,
+}
+
+impl Shard {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.count == 0 {
+            return Err("--shards must be >= 1".to_string());
+        }
+        if self.index >= self.count {
+            return Err(format!(
+                "--shard-index {} out of range for --shards {}",
+                self.index, self.count
+            ));
+        }
+        Ok(())
+    }
+
+    /// Does this shard own the cell at flat (task-major) index `cell_index`?
+    pub fn owns(&self, cell_index: usize) -> bool {
+        cell_index % self.count == self.index
+    }
+}
 
 /// Orchestration options for one suite run.
 #[derive(Debug, Clone, Default)]
@@ -42,6 +85,9 @@ pub struct SuiteOptions {
     /// fresh). Simulates a killed run for tests and the CI smoke path; the
     /// returned results then cover only the completed prefix of the matrix.
     pub stop_after: Option<usize>,
+    /// Run only this shard's slice of the cell matrix (None = all cells).
+    /// Each shard must stream to its own run dir; `merge` unions them.
+    pub shard: Option<Shard>,
 }
 
 impl SuiteOptions {
@@ -59,6 +105,11 @@ impl SuiteOptions {
             ..SuiteOptions::default()
         }
     }
+
+    pub fn with_shard(mut self, index: usize, count: usize) -> SuiteOptions {
+        self.shard = Some(Shard { index, count });
+        self
+    }
 }
 
 /// Run one strategy's cells, in deterministic (task-major, seed-minor)
@@ -75,12 +126,32 @@ pub fn run_strategy(
     let cells: Vec<(usize, u64)> = (0..tasks.len())
         .flat_map(|t| seeds.iter().map(move |s| (t, *s)))
         .collect();
+    if let Some(s) = &opts.shard {
+        s.validate()?;
+    }
+    let owns = |ci: usize| opts.shard.map_or(true, |s| s.owns(ci));
 
     // ---- checkpoint directory ------------------------------------------
     let run_dir = match &opts.run_dir {
         Some(path) => Some(RunDir::open(path).map_err(|e| format!("opening run dir: {e}"))?),
         None => None,
     };
+    // Both the run dir and the memory dir own a `skills.json` (checkpoint
+    // fold vs. live long-term store); sharing one directory would have them
+    // silently clobber each other, so refuse before writing anything.
+    if let (Some(rd), Some(mem)) = (&run_dir, &cfg.memory_dir) {
+        let same = match (std::fs::canonicalize(rd.root()), std::fs::canonicalize(mem)) {
+            (Ok(a), Ok(b)) => a == b,
+            _ => rd.root() == mem.as_path(),
+        };
+        if same {
+            return Err(format!(
+                "--run-dir and --memory-dir must be different directories \
+                 ({}): both write a skills.json there",
+                rd.root().display()
+            ));
+        }
+    }
     let task_ids: Vec<&str> = tasks.iter().map(|t| t.id.as_str()).collect();
     let expected = RunManifest {
         n_tasks: tasks.len(),
@@ -88,13 +159,22 @@ pub fn run_strategy(
         rt: cfg.rt,
         at: cfg.at,
         fingerprint: RunManifest::fingerprint_tasks(&task_ids),
+        shards: opts.shard.map_or(1, |s| s.count),
+        shard_index: opts.shard.map_or(0, |s| s.index),
     };
     let mut restored: std::collections::BTreeMap<usize, TaskResult> = Default::default();
+    // Fold of every checkpointed cell's observations (all strategies), so
+    // `merge` can combine shards' stores without re-running anything.
+    // Rebuilt from the checkpoint on open (never loaded) and saved once
+    // after dispatch: a killed run's on-disk copy may lag results.jsonl,
+    // but reopening — or `merge`, which derives the authoritative store
+    // from the cells — always reconciles it.
+    let mut run_store: Option<SkillStore> = None;
     if let Some(rd) = &run_dir {
         match rd.read_manifest()? {
             Some(m) if m != expected => {
                 return Err(format!(
-                    "run dir {} was written for a different matrix \
+                    "run dir {} was written for a different matrix or shard \
                      (manifest {m:?} != expected {expected:?}); refusing to mix results",
                     rd.root().display()
                 ));
@@ -106,6 +186,14 @@ pub fn run_strategy(
         }
 
         let on_disk = rd.load().map_err(|e| format!("loading checkpoint: {e}"))?;
+        let mut rs = SkillStore::new();
+        for result in on_disk.values() {
+            rs.merge(&result.skill_obs);
+        }
+        rs.save(&rd.skills_path())
+            .map_err(|e| format!("writing run-dir skill store: {e}"))?;
+        run_store = Some(rs);
+
         let mut index = std::collections::BTreeMap::new();
         for (ci, &(ti, seed)) in cells.iter().enumerate() {
             index.insert((tasks[ti].id.as_str(), seed), ci);
@@ -117,9 +205,15 @@ pub fn run_strategy(
             }
             mine += 1;
             match index.get(&(key.task_id.as_str(), key.seed)) {
-                Some(&ci) => {
+                Some(&ci) if owns(ci) => {
                     restored.insert(ci, result);
                 }
+                Some(_) => crate::log_warn!(
+                    "checkpoint cell ({}, {}, {}) belongs to another shard; ignoring",
+                    key.strategy,
+                    key.task_id,
+                    key.seed
+                ),
                 None => crate::log_warn!(
                     "checkpoint cell ({}, {}, {}) is not in this matrix; ignoring",
                     key.strategy,
@@ -186,7 +280,10 @@ pub fn run_strategy(
     cfg_run.skills = snapshot;
 
     // ---- dispatch -------------------------------------------------------
-    let mut pending: Vec<usize> = (0..cells.len()).filter(|ci| !restored.contains_key(ci)).collect();
+    // Only this shard's slice of the matrix (every cell when unsharded).
+    let mut pending: Vec<usize> = (0..cells.len())
+        .filter(|&ci| owns(ci) && !restored.contains_key(&ci))
+        .collect();
     if let Some(stop) = opts.stop_after {
         pending.truncate(stop.saturating_sub(restored.len()));
     }
@@ -219,10 +316,22 @@ pub fn run_strategy(
                     sink_err.get_or_insert(format!("saving skill store: {e}"));
                 }
             }
+            if let Some(rs) = run_store.as_mut() {
+                // Folded per cell, saved once after the dispatch loop: the
+                // on-disk copy is only advisory (it is rebuilt from the
+                // checkpoint on open, and `merge` derives the authoritative
+                // store from the cells), so per-cell rewrites would be
+                // wasted I/O.
+                rs.merge(&r.skill_obs);
+            }
         },
     );
     if let Some(e) = sink_err {
         return Err(e);
+    }
+    if let (Some(rs), Some(rd)) = (&run_store, &run_dir) {
+        rs.save(&rd.skills_path())
+            .map_err(|e| format!("saving run-dir skill store: {e}"))?;
     }
 
     // ---- assemble in matrix order ---------------------------------------
@@ -296,6 +405,97 @@ mod tests {
         let other = slice(2);
         let err = run_strategy(&other, &strat, &cfg, &[0], 2, &SuiteOptions::resumed(&dir));
         assert!(err.is_err(), "different matrix must be refused");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_runs_only_its_slice_and_slices_union_to_the_full_run() {
+        let tasks = slice(3);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        let seeds = [0u64, 1];
+        let full = run_strategy(&tasks, &strat, &cfg, &seeds, 4, &SuiteOptions::default()).unwrap();
+        assert_eq!(full.len(), 6);
+
+        for count in [2usize, 3] {
+            let mut seen = 0usize;
+            for index in 0..count {
+                let opts = SuiteOptions::default().with_shard(index, count);
+                let part = run_strategy(&tasks, &strat, &cfg, &seeds, 4, &opts).unwrap();
+                let owned: Vec<usize> = (0..6).filter(|&ci| Shard { index, count }.owns(ci)).collect();
+                assert_eq!(part.len(), owned.len(), "shard {index}/{count}");
+                for (r, &ci) in part.iter().zip(&owned) {
+                    assert_eq!(r.task_id, full[ci].task_id, "shard {index}/{count}");
+                    assert_eq!(r.best_speedup, full[ci].best_speedup, "shard {index}/{count}");
+                    assert_eq!(r.rounds, full[ci].rounds, "shard {index}/{count}");
+                }
+                seen += part.len();
+            }
+            assert_eq!(seen, 6, "{count} shards must exactly cover the matrix");
+        }
+    }
+
+    #[test]
+    fn invalid_shard_is_refused() {
+        let tasks = slice(1);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        for (index, count) in [(0usize, 0usize), (2, 2), (5, 3)] {
+            let opts = SuiteOptions::default().with_shard(index, count);
+            assert!(
+                run_strategy(&tasks, &strat, &cfg, &[0], 1, &opts).is_err(),
+                "shard {index}/{count} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn resume_with_different_shard_settings_is_refused() {
+        let dir = tmp_dir("shard-mix");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = slice(2);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        let opts = SuiteOptions::in_dir(&dir).with_shard(0, 2);
+        run_strategy(&tasks, &strat, &cfg, &[0], 2, &opts).unwrap();
+        // Same dir, different shard assignment (or unsharded): refused.
+        let other = SuiteOptions::resumed(&dir).with_shard(1, 2);
+        assert!(run_strategy(&tasks, &strat, &cfg, &[0], 2, &other).is_err());
+        let unsharded = SuiteOptions::resumed(&dir);
+        assert!(run_strategy(&tasks, &strat, &cfg, &[0], 2, &unsharded).is_err());
+        // The matching shard resumes cleanly.
+        let same = SuiteOptions::resumed(&dir).with_shard(0, 2);
+        assert!(run_strategy(&tasks, &strat, &cfg, &[0], 2, &same).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_dir_equal_to_memory_dir_is_refused() {
+        // Both dirs own a skills.json (checkpoint fold vs. live long-term
+        // store); sharing one path would silently clobber the memory.
+        let dir = tmp_dir("collide");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = slice(1);
+        let strat = baselines::kernelskill();
+        let mut cfg = LoopConfig::default();
+        cfg.memory_dir = Some(dir.clone());
+        let err = run_strategy(&tasks, &strat, &cfg, &[0], 1, &SuiteOptions::in_dir(&dir));
+        assert!(err.is_err(), "run_dir == memory_dir must be rejected");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_dir_skill_store_tracks_checkpointed_observations() {
+        let dir = tmp_dir("rundir-skills");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = slice(2);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        let results =
+            run_strategy(&tasks, &strat, &cfg, &[0], 2, &SuiteOptions::in_dir(&dir)).unwrap();
+        let store = SkillStore::load(&dir.join("skills.json")).unwrap();
+        let expected: u64 = results.iter().map(|r| r.skill_obs.len() as u64).sum();
+        assert_eq!(store.observations, expected);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

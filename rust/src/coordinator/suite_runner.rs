@@ -6,7 +6,10 @@
 //! checkpointing, resume, persistent skill memory). The plain
 //! [`run_suite`]/[`run_matrix`] entry points keep the v1 signature and
 //! semantics; [`run_suite_with`]/[`run_matrix_with`] expose the
-//! orchestration options.
+//! orchestration options, including sharded execution: with
+//! `SuiteOptions::shard` set, each process runs a disjoint round-robin
+//! slice of every strategy's cell matrix into its own run dir, and
+//! `coordinator::merge` reunites the shards afterwards.
 
 use super::loop_runner::{LoopConfig, TaskResult};
 use super::scheduler::{self, SuiteOptions};
@@ -111,6 +114,48 @@ mod tests {
             4,
         );
         assert_eq!(r.results.len(), 12);
+    }
+
+    #[test]
+    fn sharded_matrix_covers_every_strategy_slice() {
+        // Each shard runs its slice of *every* strategy's matrix; unioning
+        // the shards' results reproduces the full matrix run exactly.
+        let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(2).collect();
+        let strategies = vec![baselines::kernelskill(), baselines::wo_memory()];
+        let cfg = LoopConfig::default();
+        let full = run_matrix(&tasks, &strategies, &cfg, &[0, 1], 2);
+        let shard0 = run_matrix_with(
+            &tasks,
+            &strategies,
+            &cfg,
+            &[0, 1],
+            2,
+            &SuiteOptions::default().with_shard(0, 2),
+        )
+        .unwrap();
+        let shard1 = run_matrix_with(
+            &tasks,
+            &strategies,
+            &cfg,
+            &[0, 1],
+            2,
+            &SuiteOptions::default().with_shard(1, 2),
+        )
+        .unwrap();
+        for ((f, a), b) in full.iter().zip(&shard0).zip(&shard1) {
+            assert_eq!(f.strategy, a.strategy);
+            assert_eq!(f.results.len(), a.results.len() + b.results.len());
+            // Round-robin: shard 0 owns even flat indices, shard 1 odd.
+            let mut union: Vec<&super::TaskResult> = Vec::new();
+            let (mut ia, mut ib) = (a.results.iter(), b.results.iter());
+            for ci in 0..f.results.len() {
+                union.push(if ci % 2 == 0 { ia.next().unwrap() } else { ib.next().unwrap() });
+            }
+            for (x, y) in f.results.iter().zip(union) {
+                assert_eq!(x.task_id, y.task_id);
+                assert_eq!(x.best_speedup, y.best_speedup, "{}", x.task_id);
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,11 @@ pub struct ExpConfig {
     pub resume: bool,
     /// Persistent long-term memory directory (`skills.json` + `kb.json`).
     pub memory_dir: Option<PathBuf>,
+    /// Shard the cell matrix across this many independent processes
+    /// (`--shards`); 1 = unsharded.
+    pub shards: usize,
+    /// This process's slice, in `0..shards` (`--shard-index`).
+    pub shard_index: usize,
 }
 
 impl Default for ExpConfig {
@@ -37,6 +42,8 @@ impl Default for ExpConfig {
             run_dir: None,
             resume: false,
             memory_dir: None,
+            shards: 1,
+            shard_index: 0,
         }
     }
 }
@@ -54,6 +61,16 @@ impl ExpConfig {
             run_dir: self.run_dir.clone(),
             resume: self.resume,
             stop_after: None,
+            // Plain `--shards 1` stays the unsharded fast path; an
+            // out-of-range index still reaches the scheduler's validation.
+            shard: if self.shards != 1 || self.shard_index != 0 {
+                Some(coordinator::Shard {
+                    index: self.shard_index,
+                    count: self.shards,
+                })
+            } else {
+                None
+            },
         }
     }
 }
@@ -227,11 +244,16 @@ pub fn rows_from_run_dir(path: &Path) -> Result<Vec<Row>, String> {
 
 /// Render a run directory's streamed results as the ablation-style table
 /// (Success / Fast1 / Speedup per level) plus completion counts.
+///
+/// The rendering is a pure function of the directory's *cells* — the path
+/// itself never appears — so two dirs holding the same results render
+/// byte-identically. The CI `shard-smoke` job diffs a merged shard run
+/// against a single-process run on exactly this property.
 pub fn report_run_dir(path: &Path) -> Result<String, String> {
     let grouped = results_from_run_dir(path)?;
     let rows = rows_from_results(&grouped);
     let mut out = String::new();
-    out.push_str(&format!("Run directory {} — streamed results\n", path.display()));
+    out.push_str("Run report — streamed results\n");
     for (name, results) in &grouped {
         out.push_str(&format!("  {:<24} {} cells completed\n", name, results.len()));
     }

@@ -6,12 +6,18 @@
 //!   run-task --task <id> [--strategy <name>]            (single-task trace)
 //!   suite --strategy <name> [--level N]                 (one-strategy suite)
 //!   report --run-dir <dir>                              (streamed results)
+//!   merge --out <dir> <shard-dir>...                    (union shard run dirs)
 //!   smoke                                               (CI orchestration proof)
 //!
 //! Orchestration v2 flags (table*/suite): `--run-dir <dir>` streams every
 //! finished cell to `<dir>/results.jsonl`, `--resume` skips cells already
 //! checkpointed there, and `--memory-dir <dir>` warm-starts the persistent
 //! long-term skill store and rewrites it after each task.
+//!
+//! Sharding (table*/suite): `--shards N --shard-index i` runs only shard
+//! i's deterministic slice of the (strategy, task, seed) matrix into its
+//! own `--run-dir`; `merge` unions the per-shard dirs into one whose
+//! `report` and skill store are byte-identical to a single-process run.
 
 use kernelskill::baselines;
 use kernelskill::bench_suite;
@@ -30,6 +36,13 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
     cfg.run_dir = args.get("run-dir").map(std::path::PathBuf::from);
     cfg.resume = args.has("resume");
     cfg.memory_dir = args.get("memory-dir").map(std::path::PathBuf::from);
+    cfg.shards = args.get_usize("shards", 1)?;
+    cfg.shard_index = args.get_usize("shard-index", 0)?;
+    if cfg.shards != 1 && cfg.run_dir.is_none() {
+        return Err("--shards requires --run-dir (each shard streams its slice to its own \
+                    run dir, then `merge` unions them)"
+            .to_string());
+    }
     Ok(cfg)
 }
 
@@ -162,11 +175,17 @@ fn run() -> Result<(), String> {
                 .ok_or_else(|| format!("unknown strategy {strat_name}"))?;
             let cfg = exp_config(&args)?;
             let level = args.get_usize("level", 0)?;
-            let tasks = if level == 0 {
+            let mut tasks = if level == 0 {
                 bench_suite::full_suite(cfg.suite_seed)
             } else {
                 bench_suite::level_suite(cfg.suite_seed, level as u8)
             };
+            // Deterministic prefix slice: small fixed matrices for smokes
+            // and the sharding CI job.
+            let take = args.get_usize("take", 0)?;
+            if take > 0 {
+                tasks.truncate(take);
+            }
             let suite = coordinator::run_suite_with(
                 &tasks,
                 &strategy,
@@ -200,6 +219,19 @@ fn run() -> Result<(), String> {
             let rendered = experiments::report_run_dir(std::path::Path::new(dir))?;
             println!("{rendered}");
         }
+        Some("merge") => {
+            let out = args.get("out").ok_or("--out <dir> required")?;
+            if args.positional.is_empty() {
+                return Err(
+                    "usage: merge --out <dir> <shard-run-dir> [<shard-run-dir>...]".to_string()
+                );
+            }
+            let inputs: Vec<std::path::PathBuf> =
+                args.positional.iter().map(std::path::PathBuf::from).collect();
+            let report = coordinator::merge_run_dirs(std::path::Path::new(out), &inputs)?;
+            print!("{}", report.render());
+            println!("merged run dir: {out} (report it with: report --run-dir {out})");
+        }
         Some("smoke") => return run_smoke(),
         _ => {
             println!(
@@ -211,15 +243,18 @@ fn run() -> Result<(), String> {
                  \x20 table1 | table2 | table3 | per-round | trajectory\n\
                  \x20     [--seeds N] [--suite-seed S] [--workers W]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M]\n\
+                 \x20     [--shards N --shard-index I]\n\
                  real PJRT path:\n\
                  \x20 verify-artifacts [--seed S] [--tolerance T]\n\
                  \x20 calibrate [--seed S]\n\
                  single runs:\n\
                  \x20 run-task --task <substr> [--strategy <name>] [--seed S] [--memory-dir M]\n\
-                 \x20 suite --strategy <name> [--level 1|2|3]\n\
+                 \x20 suite --strategy <name> [--level 1|2|3] [--take N]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M] [--smoke]\n\
+                 \x20     [--shards N --shard-index I]\n\
                  orchestration:\n\
                  \x20 report --run-dir D     render tables from streamed results.jsonl\n\
+                 \x20 merge --out D S0 S1..  union per-shard run dirs (checkpoints + skill stores)\n\
                  \x20 smoke                  tiny checkpoint/resume/memory end-to-end (CI gate)\n\
                  \n\
                  strategies: KernelSkill, STARK, CudaForge, Astra, PRAGMA, QiMeng,\n\

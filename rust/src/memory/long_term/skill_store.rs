@@ -15,12 +15,20 @@
 //! Persistence uses the repo's own JSON layer (serde is not vendored
 //! offline) and writes are atomic (tmp + rename) so a killed run never
 //! leaves a torn store behind.
+//!
+//! Merging is exact: per-(case, method) gain totals accumulate through
+//! [`ExactSum`], so folding observations — or whole stores, via
+//! [`SkillStore::merge_store`] — is commutative and associative *at the bit
+//! level*, with the empty store as identity. That is the property the
+//! sharded suite relies on: N shards merged in any order serialize to the
+//! same bytes a single process would have written.
 
 use std::collections::BTreeMap;
 use std::io;
 use std::path::Path;
 
 use crate::kir::transforms::MethodId;
+use crate::util::fsum::ExactSum;
 use crate::util::json::{self, Json};
 
 /// One learned observation: applying `method` while the decision table had
@@ -34,21 +42,29 @@ pub struct SkillObs {
 }
 
 /// Aggregate outcome statistics for one (case, method) pair.
+///
+/// The gain total is an exact accumulator, not a plain f64, so stats from
+/// different shards/orders combine to bit-identical results.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MethodStat {
     pub attempts: u64,
     /// Attempts whose candidate compiled, verified, and was measured.
     pub wins: u64,
-    /// Sum of speedup deltas over winning attempts.
-    pub total_gain: f64,
+    /// Exact sum of speedup deltas over winning attempts.
+    gain: ExactSum,
 }
 
 impl MethodStat {
+    /// Sum of speedup deltas over winning attempts (correctly rounded).
+    pub fn total_gain(&self) -> f64 {
+        self.gain.value()
+    }
+
     pub fn mean_gain(&self) -> f64 {
         if self.wins == 0 {
             0.0
         } else {
-            self.total_gain / self.wins as f64
+            self.total_gain() / self.wins as f64
         }
     }
 
@@ -68,8 +84,15 @@ impl MethodStat {
         } else if self.wins == 0 {
             -1.0
         } else {
-            self.total_gain / self.attempts as f64
+            self.total_gain() / self.attempts as f64
         }
+    }
+
+    /// Add another stat's counts and exact gain total into this one.
+    fn absorb(&mut self, other: &MethodStat) {
+        self.attempts += other.attempts;
+        self.wins += other.wins;
+        self.gain.add_sum(&other.gain);
     }
 }
 
@@ -105,17 +128,32 @@ impl SkillStore {
         stat.attempts += 1;
         if let Some(g) = obs.gain {
             stat.wins += 1;
-            stat.total_gain += g;
+            stat.gain.add(g);
         }
         self.observations += 1;
     }
 
-    /// Fold a task's worth of observations in. Merging is additive, so the
-    /// final store is independent of the order tasks complete in.
+    /// Fold a task's worth of observations in. Merging is additive and gain
+    /// totals accumulate exactly, so the final store is bit-identical
+    /// regardless of the order tasks complete in.
     pub fn merge(&mut self, obs: &[SkillObs]) {
         for o in obs {
             self.observe(o);
         }
+    }
+
+    /// Fold an entire store into this one: per-(case, method) stats add,
+    /// counts and exact gain totals alike. This fold is commutative and
+    /// associative at the bit level, with the empty store as identity —
+    /// the contract the sharded suite's `merge` subcommand depends on.
+    pub fn merge_store(&mut self, other: &SkillStore) {
+        for (case, methods) in &other.cases {
+            let dst = self.cases.entry(case.clone()).or_default();
+            for (method, stat) in methods {
+                dst.entry(*method).or_default().absorb(stat);
+            }
+        }
+        self.observations += other.observations;
     }
 
     /// Reorder a case's allowed methods by observed performance: stable
@@ -143,12 +181,22 @@ impl SkillStore {
                 let m = methods
                     .iter()
                     .map(|(method, s)| {
+                        // `gain_parts` is the canonical exact decomposition
+                        // (f64 Display round-trips exactly), `total_gain`
+                        // the rounded convenience value. Canonical parts
+                        // make equal stores serialize to equal bytes.
                         (
                             method.name().to_string(),
                             json::obj(vec![
                                 ("attempts", json::num(s.attempts as f64)),
                                 ("wins", json::num(s.wins as f64)),
-                                ("total_gain", json::num(s.total_gain)),
+                                ("total_gain", json::num(s.total_gain())),
+                                (
+                                    "gain_parts",
+                                    json::arr(
+                                        s.gain.canonical().iter().map(|&p| json::num(p)).collect(),
+                                    ),
+                                ),
                             ]),
                         )
                     })
@@ -157,7 +205,7 @@ impl SkillStore {
             })
             .collect();
         json::obj(vec![
-            ("version", json::num(1.0)),
+            ("version", json::num(2.0)),
             ("observations", json::num(self.observations as f64)),
             ("cases", Json::Obj(cases)),
         ])
@@ -184,12 +232,21 @@ impl SkillStore {
                     continue;
                 };
                 let get = |k: &str| stat.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                // Exact parts when present; v1 stores (rounded total only)
+                // load the rounded value as the single component.
+                let gain = match stat.get("gain_parts").and_then(|v| v.as_arr()) {
+                    Some(parts) => {
+                        let vals: Vec<f64> = parts.iter().filter_map(|p| p.as_f64()).collect();
+                        ExactSum::from_parts(&vals)
+                    }
+                    None => ExactSum::from_parts(&[get("total_gain")]),
+                };
                 out.insert(
                     method,
                     MethodStat {
                         attempts: get("attempts") as u64,
                         wins: get("wins") as u64,
-                        total_gain: get("total_gain"),
+                        gain,
                     },
                 );
             }
@@ -313,5 +370,100 @@ mod tests {
     fn load_missing_is_cold() {
         let s = SkillStore::load(Path::new("/nonexistent/skills.json")).unwrap();
         assert!(s.is_empty());
+    }
+
+    // ---- store-level merge: the sharding contract ----------------------
+
+    /// Gains chosen so naive f64 summation is order-sensitive; exact
+    /// accumulation must not be.
+    fn shard_store(tag: u64) -> SkillStore {
+        let mut s = SkillStore::new();
+        let gains = [0.1, 0.2, 1e15, -1e15, 0.30000000000000004, 1e-9];
+        for (i, g) in gains.iter().enumerate() {
+            let gain = if i as u64 % 3 == tag % 3 { None } else { Some(g * (tag as f64 + 0.5)) };
+            s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, gain));
+            s.observe(&obs("fusion.elementwise_chain", MethodId::FuseElementwise, gain));
+        }
+        s
+    }
+
+    /// Serialized bytes, the strongest equality the merge promises.
+    fn bytes(s: &SkillStore) -> String {
+        s.to_json().to_string()
+    }
+
+    #[test]
+    fn merge_store_is_commutative_at_byte_level() {
+        let (a, b) = (shard_store(0), shard_store(1));
+        let mut ab = a.clone();
+        ab.merge_store(&b);
+        let mut ba = b.clone();
+        ba.merge_store(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(bytes(&ab), bytes(&ba));
+    }
+
+    #[test]
+    fn merge_store_is_associative_at_byte_level() {
+        let (a, b, c) = (shard_store(0), shard_store(1), shard_store(2));
+        let mut left = a.clone(); // (a + b) + c
+        left.merge_store(&b);
+        left.merge_store(&c);
+        let mut bc = b.clone();
+        bc.merge_store(&c);
+        let mut right = a.clone(); // a + (b + c)
+        right.merge_store(&bc);
+        assert_eq!(left, right);
+        assert_eq!(bytes(&left), bytes(&right));
+    }
+
+    #[test]
+    fn merge_store_empty_is_identity() {
+        let a = shard_store(1);
+        let mut left = SkillStore::new();
+        left.merge_store(&a);
+        let mut right = a.clone();
+        right.merge_store(&SkillStore::new());
+        assert_eq!(left, a);
+        assert_eq!(right, a);
+        assert_eq!(bytes(&left), bytes(&a));
+        assert_eq!(bytes(&right), bytes(&a));
+    }
+
+    #[test]
+    fn store_fold_matches_observation_fold_in_any_order() {
+        // Folding per-shard stores must equal folding the union of raw
+        // observations, whatever the interleaving — the invariant `merge`
+        // cross-checks between per-shard skills.json files and the
+        // checkpointed cells.
+        let all: Vec<SkillObs> = (0..3)
+            .flat_map(|t| {
+                [0.1, 0.7, 1e12, -1e12 + 3.0]
+                    .iter()
+                    .map(move |g| obs("reduction.rowwise", MethodId::VectorizeLoads, Some(g * (t + 1) as f64)))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let mut by_obs = SkillStore::new();
+        for o in all.iter().rev() {
+            by_obs.observe(o);
+        }
+        let mut by_stores = SkillStore::new();
+        for chunk in all.chunks(4) {
+            let mut shard = SkillStore::new();
+            shard.merge(chunk);
+            by_stores.merge_store(&shard);
+        }
+        assert_eq!(by_obs, by_stores);
+        assert_eq!(bytes(&by_obs), bytes(&by_stores));
+    }
+
+    #[test]
+    fn v1_store_without_gain_parts_still_loads() {
+        let text = r#"{"version":1,"observations":2,"cases":{"c":{"tile_smem":{"attempts":2,"wins":1,"total_gain":0.75}}}}"#;
+        let s = SkillStore::from_json(&Json::parse(text).unwrap()).unwrap();
+        let st = s.stat("c", MethodId::TileSmem).unwrap();
+        assert_eq!(st.attempts, 2);
+        assert_eq!(st.total_gain(), 0.75);
     }
 }

@@ -1,0 +1,236 @@
+//! Exactly-rounded, order-independent f64 accumulation (Shewchuk
+//! expansions, the algorithm behind Python's `math.fsum`).
+//!
+//! Why this exists: the sharded suite (`coordinator::merge`) promises that
+//! merging per-shard skill stores is *commutative and associative at the
+//! bit level* — the merged `skills.json` must be byte-identical to the one
+//! a single process would have written, no matter how the cell matrix was
+//! partitioned or in which order cells completed. Plain `f64 +=` breaks
+//! that promise: floating-point addition rounds, so different fold orders
+//! can differ in the last ulp. [`ExactSum`] instead keeps the running sum
+//! as a non-overlapping expansion of f64 components whose exact real sum
+//! is the true sum; adding is error-free, so the represented value is a
+//! function of the *multiset* of addends only. [`ExactSum::value`] rounds
+//! the exact sum correctly (once), and [`ExactSum::canonical`] produces a
+//! unique component decomposition for serialization and equality.
+//!
+//! Finite inputs only: infinities/NaNs would poison the expansion, and the
+//! cost model never produces them.
+
+/// Error-free transform: returns `(s, e)` with `s = fl(a + b)` and
+/// `a + b = s + e` exactly (Knuth two-sum; no magnitude precondition).
+#[inline]
+fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let z = s - a;
+    let e = (a - (s - z)) + (b - z);
+    (s, e)
+}
+
+/// An exact f64 accumulator: the value is the exact real sum of `parts`,
+/// maintained as a non-overlapping expansion in increasing magnitude order
+/// with no zero components.
+#[derive(Debug, Clone, Default)]
+pub struct ExactSum {
+    parts: Vec<f64>,
+}
+
+impl ExactSum {
+    pub fn new() -> ExactSum {
+        ExactSum::default()
+    }
+
+    /// Rebuild an accumulator from serialized components (any finite f64
+    /// list; the canonical form from [`ExactSum::canonical`] round-trips).
+    pub fn from_parts(parts: &[f64]) -> ExactSum {
+        let mut s = ExactSum::new();
+        for &p in parts {
+            s.add(p);
+        }
+        s
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    /// Add one addend, exactly (grow-expansion with zero elimination).
+    pub fn add(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "ExactSum::add requires finite input");
+        let mut x = x;
+        let mut out = Vec::with_capacity(self.parts.len() + 1);
+        for &p in &self.parts {
+            let (hi, lo) = two_sum(x, p);
+            if lo != 0.0 {
+                out.push(lo);
+            }
+            x = hi;
+        }
+        if x != 0.0 {
+            out.push(x);
+        }
+        self.parts = out;
+    }
+
+    /// Add another accumulator, exactly.
+    pub fn add_sum(&mut self, other: &ExactSum) {
+        for &p in &other.parts {
+            self.add(p);
+        }
+    }
+
+    /// The correctly-rounded f64 nearest the exact sum. Because rounding is
+    /// correct, this depends only on the exact value, never on which
+    /// expansion happens to represent it.
+    pub fn value(&self) -> f64 {
+        let p = &self.parts;
+        let mut n = p.len();
+        if n == 0 {
+            return 0.0;
+        }
+        n -= 1;
+        let mut hi = p[n];
+        let mut lo = 0.0;
+        while n > 0 {
+            let x = hi;
+            n -= 1;
+            let y = p[n];
+            hi = x + y;
+            let yr = hi - x;
+            lo = y - yr;
+            if lo != 0.0 {
+                break;
+            }
+        }
+        // Halfway correction (CPython math.fsum): if the truncated partials
+        // all push the same way as `lo`, round-half-even would otherwise
+        // land on the wrong neighbor.
+        if n > 0 && ((lo < 0.0 && p[n - 1] < 0.0) || (lo > 0.0 && p[n - 1] > 0.0)) {
+            let y = lo * 2.0;
+            let x = hi + y;
+            if y == x - hi {
+                hi = x;
+            }
+        }
+        hi
+    }
+
+    /// Unique greedy decomposition of the exact value: component k is the
+    /// correctly-rounded remainder after subtracting components 0..k. Two
+    /// accumulators holding the same exact value canonicalize identically,
+    /// whatever their internal expansions look like — this is what makes
+    /// serialized stores byte-comparable.
+    pub fn canonical(&self) -> Vec<f64> {
+        let mut rem = self.clone();
+        let mut out = Vec::new();
+        while !rem.parts.is_empty() {
+            let v = rem.value();
+            if v == 0.0 {
+                break;
+            }
+            out.push(v);
+            rem.add(-v); // v is representable, so this subtraction is exact
+        }
+        out.reverse(); // increasing magnitude, like the internal invariant
+        out
+    }
+}
+
+/// Equality of the represented exact values (not of internal expansions).
+impl PartialEq for ExactSum {
+    fn eq(&self, other: &ExactSum) -> bool {
+        self.canonical() == other.canonical()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_is_zero() {
+        let s = ExactSum::new();
+        assert!(s.is_zero());
+        assert_eq!(s.value(), 0.0);
+        assert!(s.canonical().is_empty());
+    }
+
+    #[test]
+    fn cancellation_is_exact() {
+        let mut s = ExactSum::new();
+        s.add(1e16);
+        s.add(1.0);
+        s.add(-1e16);
+        // Naive left-to-right f64 addition loses the 1.0 entirely.
+        assert_eq!(s.value(), 1.0);
+        s.add(-1.0);
+        assert!(s.is_zero());
+    }
+
+    #[test]
+    fn value_beats_naive_summation() {
+        // Ten 0.1's: naive left-to-right f64 addition gives
+        // 0.9999999999999999, but the exact sum of ten nearest-0.1 doubles
+        // correctly rounds to exactly 1.0 (as math.fsum does).
+        let naive = (0..10).fold(0.0f64, |acc, _| acc + 0.1);
+        assert_ne!(naive, 1.0);
+        let mut s = ExactSum::new();
+        for _ in 0..10 {
+            s.add(0.1);
+        }
+        assert_eq!(s.value(), 1.0);
+    }
+
+    #[test]
+    fn order_independent_at_bit_level() {
+        // Sum a nasty mix in many different orders; exact accumulation must
+        // give the same rounded value and the same canonical form always.
+        let vals = [1e16, 3.14159, -1e16, 0.1, 0.2, -0.3, 1e-12, 7.5e9, -2.5e-7, 0.30000000000000004];
+        let mut rng = Rng::new(42);
+        let reference = ExactSum::from_parts(&vals);
+        for _ in 0..200 {
+            let mut shuffled = vals.to_vec();
+            rng.shuffle(&mut shuffled);
+            let s = ExactSum::from_parts(&shuffled);
+            assert_eq!(s.value(), reference.value());
+            assert_eq!(s.canonical(), reference.canonical());
+            assert_eq!(s, reference);
+        }
+    }
+
+    #[test]
+    fn add_sum_is_associative_and_commutative() {
+        let a = ExactSum::from_parts(&[0.1, 1e15, -7.25]);
+        let b = ExactSum::from_parts(&[0.2, -1e15]);
+        let c = ExactSum::from_parts(&[1e-9, 0.30000000000000004]);
+        let mut ab_c = a.clone();
+        ab_c.add_sum(&b);
+        ab_c.add_sum(&c);
+        let mut bc = b.clone();
+        bc.add_sum(&c);
+        let mut a_bc = a.clone();
+        a_bc.add_sum(&bc);
+        assert_eq!(ab_c, a_bc);
+        assert_eq!(ab_c.canonical(), a_bc.canonical());
+        let mut ba = b.clone();
+        ba.add_sum(&a);
+        let mut ab = a.clone();
+        ab.add_sum(&b);
+        assert_eq!(ab, ba);
+        // Identity.
+        let mut with_zero = a.clone();
+        with_zero.add_sum(&ExactSum::new());
+        assert_eq!(with_zero, a);
+    }
+
+    #[test]
+    fn canonical_roundtrips_through_from_parts() {
+        let s = ExactSum::from_parts(&[1e16, 1.0, 0.1, -3.0e-13]);
+        let c = s.canonical();
+        let back = ExactSum::from_parts(&c);
+        assert_eq!(back, s);
+        assert_eq!(back.canonical(), c);
+        assert_eq!(back.value(), s.value());
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod fsum;
 pub mod json;
 pub mod lazy;
 pub mod logging;

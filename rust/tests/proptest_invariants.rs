@@ -3,6 +3,7 @@
 //! offline, so each property sweeps a few hundred random cases).
 
 use kernelskill::bench_suite::eager;
+use kernelskill::coordinator::Shard;
 use kernelskill::device::costmodel;
 use kernelskill::device::machine::DeviceSpec;
 use kernelskill::kir::graph::KernelGraph;
@@ -169,6 +170,41 @@ fn prop_opt_memory_promotion_is_threshold_exact() {
         let mem = OptMemory::new(0.3, 0.3, base);
         let expect = cand / base > 1.3 || cand - base > 0.3;
         assert_eq!(mem.should_promote(cand), expect, "base={base} cand={cand}");
+    }
+}
+
+#[test]
+fn prop_shard_slices_are_a_disjoint_exact_cover() {
+    // For arbitrary matrix shapes and shard counts 1..=8: every cell of the
+    // (task x seed) matrix is owned by exactly one shard, slices are stable
+    // under re-enumeration, and sizes are balanced to within one cell.
+    let mut rng = Rng::new(108);
+    for _ in 0..300 {
+        let n_tasks = rng.range_usize(1, 21);
+        let n_seeds = rng.range_usize(1, 7);
+        let n_cells = n_tasks * n_seeds;
+        let count = rng.range_usize(1, 9);
+        let mut owners = vec![0u32; n_cells];
+        for index in 0..count {
+            let shard = Shard { index, count };
+            assert!(shard.validate().is_ok());
+            let owned: Vec<usize> = (0..n_cells).filter(|&ci| shard.owns(ci)).collect();
+            let again: Vec<usize> = (0..n_cells).filter(|&ci| shard.owns(ci)).collect();
+            assert_eq!(owned, again, "slice must be stable under re-enumeration");
+            let fair = n_cells / count;
+            assert!(
+                owned.len() == fair || owned.len() == fair + 1,
+                "shard {index}/{count} owns {} of {n_cells} cells — unbalanced",
+                owned.len()
+            );
+            for ci in owned {
+                owners[ci] += 1;
+            }
+        }
+        assert!(
+            owners.iter().all(|&c| c == 1),
+            "{n_tasks}x{n_seeds} matrix, {count} shards: not a disjoint exact cover"
+        );
     }
 }
 

@@ -1,0 +1,376 @@
+//! Determinism battery for sharded suite execution + merge.
+//!
+//! The contract under test: splitting the (strategy, task, seed) cell
+//! matrix across N independent processes (each streaming to its own run
+//! dir) and then `merge`-ing the shards produces a run directory whose
+//! `report` rendering AND skill store are *byte-identical* to a
+//! single-process run of the same matrix — including when a shard is
+//! killed mid-run (torn checkpoint tail) and resumed, and including the
+//! failure modes: conflicting duplicate cells and mismatched matrices must
+//! fail loudly, never last-writer-wins.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use kernelskill::baselines;
+use kernelskill::bench_suite::{self, Task};
+use kernelskill::coordinator::{
+    self, checkpoint, merge_run_dirs, LoopConfig, RunDir, SuiteOptions,
+};
+use kernelskill::harness::experiments;
+use kernelskill::memory::long_term::SkillStore;
+use kernelskill::util::json::Json;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ks-shard-{tag}-{}", std::process::id()))
+}
+
+fn small_tasks() -> Vec<Task> {
+    bench_suite::level_suite(42, 1).into_iter().take(3).collect()
+}
+
+const SEEDS: [u64; 2] = [0, 1];
+
+/// Run the full matrix for both roster strategies into `dir`, optionally as
+/// one shard of `count`.
+fn run_into(dir: &PathBuf, shard: Option<(usize, usize)>) {
+    let tasks = small_tasks();
+    let strategies = vec![baselines::kernelskill(), baselines::wo_memory()];
+    let mut opts = SuiteOptions::in_dir(dir);
+    if let Some((index, count)) = shard {
+        opts = opts.with_shard(index, count);
+    }
+    coordinator::run_matrix_with(&tasks, &strategies, &LoopConfig::default(), &SEEDS, 4, &opts)
+        .unwrap();
+}
+
+fn read_bytes(path: &PathBuf) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+#[test]
+fn three_shard_merge_is_byte_identical_to_single_process() {
+    let root = tmp_root("merge3");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let single = root.join("single");
+    run_into(&single, None);
+
+    let shard_dirs: Vec<PathBuf> = (0..3)
+        .map(|i| {
+            let d = root.join(format!("shard{i}"));
+            run_into(&d, Some((i, 3)));
+            d
+        })
+        .collect();
+
+    let merged = root.join("merged");
+    let report = merge_run_dirs(&merged, &shard_dirs).unwrap();
+    // 3 tasks x 2 seeds x 2 strategies, nothing duplicated.
+    assert_eq!(report.merged_cells, 12);
+    assert_eq!(report.deduplicated, 0);
+
+    // report over the merged dir == report over the single-process dir,
+    // byte for byte.
+    assert_eq!(
+        experiments::report_run_dir(&merged).unwrap(),
+        experiments::report_run_dir(&single).unwrap()
+    );
+    // ... and so is the skill store file.
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json"))
+    );
+    // Folding the per-shard stores by hand (in any order) reproduces the
+    // merged store too — the commutative store-merge contract end-to-end.
+    let mut fold = SkillStore::new();
+    for d in shard_dirs.iter().rev() {
+        fold.merge_store(&SkillStore::load(&d.join("skills.json")).unwrap());
+    }
+    let merged_store = SkillStore::load(&merged.join("skills.json")).unwrap();
+    assert_eq!(fold, merged_store);
+    assert_eq!(
+        fold.to_json().to_string(),
+        merged_store.to_json().to_string()
+    );
+
+    // Merging in a different input order writes identical bytes.
+    let merged_rev = root.join("merged-rev");
+    let rev: Vec<PathBuf> = shard_dirs.iter().rev().cloned().collect();
+    merge_run_dirs(&merged_rev, &rev).unwrap();
+    assert_eq!(
+        read_bytes(&merged.join("results.jsonl")),
+        read_bytes(&merged_rev.join("results.jsonl"))
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&merged_rev.join("skills.json"))
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn killed_shard_with_torn_tail_resumes_and_merges_identically() {
+    let root = tmp_root("kill-resume");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let single = root.join("single");
+    run_into(&single, None);
+
+    let s0 = root.join("shard0");
+    run_into(&s0, Some((0, 2)));
+
+    // Kill shard 1 after a single cell and tear the checkpoint tail the way
+    // a hard kill mid-append would.
+    let tasks = small_tasks();
+    let strategies = vec![baselines::kernelskill(), baselines::wo_memory()];
+    let s1 = root.join("shard1");
+    let mut opts = SuiteOptions::in_dir(&s1).with_shard(1, 2);
+    opts.stop_after = Some(1);
+    coordinator::run_matrix_with(&tasks, &strategies, &LoopConfig::default(), &SEEDS, 4, &opts)
+        .unwrap();
+    {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(s1.join("results.jsonl"))
+            .unwrap();
+        f.write_all(b"{\"strategy\":\"KernelSkill\",\"task_id\":\"to").unwrap();
+    }
+
+    // A merge of the partial shard recovers every *complete* cell: shard 0
+    // holds 6 (both strategies), the killed shard 1 cell per strategy.
+    let partial = root.join("merged-partial");
+    let report = merge_run_dirs(&partial, &[s0.clone(), s1.clone()]).unwrap();
+    assert_eq!(report.merged_cells, 8, "all complete cells recovered");
+
+    // Resume the killed shard, then merge again: byte-identical to the
+    // single-process run.
+    let opts = SuiteOptions::resumed(&s1).with_shard(1, 2);
+    coordinator::run_matrix_with(&tasks, &strategies, &LoopConfig::default(), &SEEDS, 4, &opts)
+        .unwrap();
+    let merged = root.join("merged");
+    let report = merge_run_dirs(&merged, &[s0, s1]).unwrap();
+    assert_eq!(report.merged_cells, 12);
+    assert_eq!(
+        experiments::report_run_dir(&merged).unwrap(),
+        experiments::report_run_dir(&single).unwrap()
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json"))
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn partially_merged_dir_resumes_to_the_full_matrix() {
+    // The merged dir's manifest is unsharded, so `--resume` over it can
+    // finish cells a missing shard never ran.
+    let root = tmp_root("merge-resume");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let single = root.join("single");
+    run_into(&single, None);
+
+    // Only shard 0 of 2 ever runs; shard 1's cells are missing.
+    let s0 = root.join("shard0");
+    run_into(&s0, Some((0, 2)));
+    let merged = root.join("merged");
+    let report = merge_run_dirs(&merged, &[s0]).unwrap();
+    assert_eq!(report.merged_cells, 6);
+    assert_eq!(report.missing_shards, vec![1], "the gap must be surfaced");
+    assert!(report.render().contains("WARNING"), "partial merges are never silent");
+
+    let tasks = small_tasks();
+    let strategies = vec![baselines::kernelskill(), baselines::wo_memory()];
+    coordinator::run_matrix_with(
+        &tasks,
+        &strategies,
+        &LoopConfig::default(),
+        &SEEDS,
+        4,
+        &SuiteOptions::resumed(&merged),
+    )
+    .unwrap();
+    assert_eq!(
+        experiments::report_run_dir(&merged).unwrap(),
+        experiments::report_run_dir(&single).unwrap()
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json"))
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn warm_sharded_run_merges_identically_when_snapshots_agree() {
+    // Sharding a warm run is sound when every shard starts from the same
+    // persistent store: the per-shard warm-start snapshots then agree, and
+    // the merged dir reproduces the warm single-process run byte for byte
+    // (snapshots included, so it stays resumable).
+    let root = tmp_root("warm");
+    let _ = std::fs::remove_dir_all(&root);
+    let tasks = small_tasks();
+    let strat = baselines::kernelskill();
+
+    // Learn a store first, then hand identical copies to every process.
+    let learn = root.join("learn-mem");
+    let mut learn_cfg = LoopConfig::default();
+    learn_cfg.memory_dir = Some(learn.clone());
+    coordinator::run_suite_with(&tasks, &strat, &learn_cfg, &[0], 4, &SuiteOptions::default())
+        .unwrap();
+    let learned = SkillStore::load(&learn.join("skills.json")).unwrap();
+    assert!(learned.observations > 0);
+    let mems: Vec<PathBuf> = ["single", "s0", "s1"]
+        .iter()
+        .map(|t| root.join(format!("mem-{t}")))
+        .collect();
+    for m in &mems {
+        learned.save(&m.join("skills.json")).unwrap();
+    }
+
+    let single = root.join("single");
+    let mut cfg = LoopConfig::default();
+    cfg.memory_dir = Some(mems[0].clone());
+    coordinator::run_suite_with(&tasks, &strat, &cfg, &SEEDS, 4, &SuiteOptions::in_dir(&single))
+        .unwrap();
+
+    let mut shard_dirs = Vec::new();
+    for i in 0..2usize {
+        let d = root.join(format!("shard{i}"));
+        let mut cfg = LoopConfig::default();
+        cfg.memory_dir = Some(mems[i + 1].clone());
+        coordinator::run_suite_with(
+            &tasks,
+            &strat,
+            &cfg,
+            &SEEDS,
+            4,
+            &SuiteOptions::in_dir(&d).with_shard(i, 2),
+        )
+        .unwrap();
+        shard_dirs.push(d);
+    }
+
+    let merged = root.join("merged");
+    merge_run_dirs(&merged, &shard_dirs).unwrap();
+    assert_eq!(
+        experiments::report_run_dir(&merged).unwrap(),
+        experiments::report_run_dir(&single).unwrap()
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json"))
+    );
+    let snap = "memory_snapshot.kernelskill.json";
+    assert_eq!(
+        read_bytes(&merged.join(snap)),
+        read_bytes(&single.join(snap)),
+        "warm-start snapshot must be carried into the merged dir"
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn merge_refuses_shards_with_divergent_warm_snapshots() {
+    let root = tmp_root("warm-divergent");
+    let _ = std::fs::remove_dir_all(&root);
+    let s0 = root.join("shard0");
+    run_into(&s0, Some((0, 2)));
+    let s1 = root.join("shard1");
+    run_into(&s1, Some((1, 2)));
+    // Plant disagreeing warm-start snapshots: these shards did not run the
+    // same experiment, so merging their cells would be meaningless.
+    std::fs::write(s0.join("memory_snapshot.kernelskill.json"), b"{\"a\":1}\n").unwrap();
+    std::fs::write(s1.join("memory_snapshot.kernelskill.json"), b"{\"a\":2}\n").unwrap();
+    let err = merge_run_dirs(&root.join("merged"), &[s0.clone(), s1.clone()]).unwrap_err();
+    assert!(err.contains("differs between shards"), "{err}");
+
+    // A warm shard may not merge with a cold one either: remove one side's
+    // snapshot entirely and the snapshot *sets* disagree.
+    std::fs::remove_file(s1.join("memory_snapshot.kernelskill.json")).unwrap();
+    let err = merge_run_dirs(&root.join("merged2"), &[s0, s1]).unwrap_err();
+    assert!(err.contains("snapshot set differs"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn merge_fails_loudly_on_conflicting_duplicate_cells() {
+    let root = tmp_root("conflict");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let s0 = root.join("shard0");
+    run_into(&s0, Some((0, 2)));
+
+    // Forge a dir holding one of shard 0's cells with a *different* payload.
+    let evil = root.join("evil");
+    std::fs::create_dir_all(&evil).unwrap();
+    std::fs::copy(s0.join("manifest.json"), evil.join("manifest.json")).unwrap();
+    let text = std::fs::read_to_string(s0.join("results.jsonl")).unwrap();
+    let first = text.lines().next().unwrap();
+    let (key, mut result) =
+        checkpoint::result_from_json(&Json::parse(first).unwrap()).unwrap();
+    result.best_speedup += 1.0;
+    std::fs::write(
+        evil.join("results.jsonl"),
+        format!("{}\n", checkpoint::result_to_json(&key, &result)),
+    )
+    .unwrap();
+
+    let out = root.join("merged");
+    let err = merge_run_dirs(&out, &[s0.clone(), evil]).unwrap_err();
+    assert!(
+        err.contains("conflicting results") && err.contains(&key.task_id),
+        "conflict must be loud and name the cell, got: {err}"
+    );
+
+    // Bit-identical duplicates, by contrast, deduplicate cleanly: merging a
+    // shard dir with itself yields the dir's own cells once.
+    let out2 = root.join("merged-dup");
+    let report = merge_run_dirs(&out2, &[s0.clone(), s0]).unwrap();
+    assert_eq!(report.merged_cells, 6);
+    assert_eq!(report.deduplicated, 6);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn merge_refuses_mismatched_matrices_and_missing_manifests() {
+    let root = tmp_root("mismatch");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let s0 = root.join("shard0");
+    run_into(&s0, Some((0, 2)));
+
+    // A run over a *different* matrix (2 tasks instead of 3).
+    let other = root.join("other");
+    let tasks: Vec<Task> = bench_suite::level_suite(42, 1).into_iter().take(2).collect();
+    coordinator::run_suite_with(
+        &tasks,
+        &baselines::kernelskill(),
+        &LoopConfig::default(),
+        &SEEDS,
+        2,
+        &SuiteOptions::in_dir(&other),
+    )
+    .unwrap();
+    let err = merge_run_dirs(&root.join("m1"), &[s0.clone(), other]).unwrap_err();
+    assert!(err.contains("different cell matrix"), "{err}");
+
+    // A directory without a manifest is not a run dir.
+    let bare = root.join("bare");
+    RunDir::open(&bare).unwrap();
+    let err = merge_run_dirs(&root.join("m2"), &[s0.clone(), bare]).unwrap_err();
+    assert!(err.contains("no manifest"), "{err}");
+
+    // The output dir may not double as an input.
+    let err = merge_run_dirs(&s0, &[s0.clone()]).unwrap_err();
+    assert!(err.contains("also a merge input") || err.contains("already holds results"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
