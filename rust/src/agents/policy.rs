@@ -57,6 +57,11 @@ impl PolicyProfile {
 #[derive(Debug, Clone, PartialEq)]
 pub enum SelectionMode {
     /// KernelSkill: the deterministic long-term-memory decision policy.
+    /// With a warm skill store the retrieved method order is additionally
+    /// reranked by learned, device-partitioned, confidence-weighted
+    /// outcome stats (see `memory::long_term::skill_store`), so the same
+    /// evidence can rank methods differently on A100-like vs TPU-like
+    /// hardware once the store has seen both.
     DecisionPolicy,
     /// Generic agentic loop (Astra / ablations): LLM free choice over the
     /// applicable methods, biased by fusion_bias / hint_following.

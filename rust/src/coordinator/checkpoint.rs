@@ -32,8 +32,11 @@ use crate::util::rng::label;
 /// Identity of one cell in the (strategy × task × seed) matrix.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct CellKey {
+    /// Strategy name the cell ran under.
     pub strategy: String,
+    /// Task id of the cell.
     pub task_id: String,
+    /// Run seed of the cell.
     pub seed: u64,
 }
 
@@ -43,9 +46,13 @@ pub struct CellKey {
 /// that its inputs partition one and the same matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunManifest {
+    /// Number of tasks in the matrix.
     pub n_tasks: usize,
+    /// Run seeds the matrix fans over.
     pub seeds: Vec<u64>,
+    /// Relative promotion threshold the run used.
     pub rt: f64,
+    /// Absolute promotion threshold the run used.
     pub at: f64,
     /// Order-sensitive fold of the task ids.
     pub fingerprint: u64,
@@ -56,6 +63,8 @@ pub struct RunManifest {
 }
 
 impl RunManifest {
+    /// Order-sensitive fingerprint of a task-id list (resume and merge use
+    /// it to detect a different matrix at equal shape).
     pub fn fingerprint_tasks(task_ids: &[&str]) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         for &id in task_ids {
@@ -141,14 +150,17 @@ impl RunDir {
         })
     }
 
+    /// The directory this handle points at.
     pub fn root(&self) -> &Path {
         &self.root
     }
 
+    /// Path of the JSONL cell checkpoint.
     pub fn results_path(&self) -> PathBuf {
         self.root.join("results.jsonl")
     }
 
+    /// Path of the matrix-shape manifest.
     pub fn manifest_path(&self) -> PathBuf {
         self.root.join("manifest.json")
     }
@@ -181,10 +193,12 @@ impl RunDir {
             .unwrap_or(false)
     }
 
+    /// Write the matrix-shape manifest.
     pub fn write_manifest(&self, m: &RunManifest) -> io::Result<()> {
         std::fs::write(self.manifest_path(), format!("{}\n", m.to_json()))
     }
 
+    /// Read the manifest; `None` when the directory has none yet.
     pub fn read_manifest(&self) -> Result<Option<RunManifest>, String> {
         let path = self.manifest_path();
         if !path.exists() {
@@ -378,6 +392,7 @@ fn group_from_json(j: &Json) -> Result<GroupSchedule, String> {
     })
 }
 
+/// Serialize a full schedule (groups + per-group config) for checkpoints.
 pub fn schedule_to_json(s: &Schedule) -> Json {
     json::obj(vec![
         (
@@ -394,6 +409,7 @@ pub fn schedule_to_json(s: &Schedule) -> Json {
     ])
 }
 
+/// Parse a schedule serialized by [`schedule_to_json`].
 pub fn schedule_from_json(j: &Json) -> Result<Schedule, String> {
     let mut groups = Vec::new();
     for g in get_arr(j, "groups")? {
@@ -465,6 +481,7 @@ fn obs_to_json(o: &SkillObs) -> Json {
         ("case", json::s(&o.case_id)),
         ("method", json::s(o.method.name())),
         ("gain", o.gain.map(json::num).unwrap_or(Json::Null)),
+        ("device", json::s(&o.device)),
     ])
 }
 
@@ -474,6 +491,13 @@ fn obs_from_json(j: &Json) -> Result<SkillObs, String> {
         case_id: get_s(j, "case")?.to_string(),
         method: MethodId::from_name(name).ok_or_else(|| format!("unknown method {name:?}"))?,
         gain: get_opt_f(j, "gain"),
+        // Pre-v3 checkpoints carried no device field; every pre-v3 run
+        // used the default (A100-like) preset.
+        device: j
+            .get("device")
+            .and_then(|v| v.as_str())
+            .unwrap_or(crate::memory::long_term::skill_store::LEGACY_DEVICE)
+            .to_string(),
     })
 }
 

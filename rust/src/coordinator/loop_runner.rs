@@ -37,19 +37,28 @@ pub enum Branch {
 /// Per-round trace record (feeds Figures 2-3 and the trajectory bench).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
+    /// Round number (1-based).
     pub round: u32,
+    /// Which branch the round took and with what choice.
     pub branch: Branch,
+    /// Did the round's candidate compile?
     pub compiled: bool,
+    /// Did the round's candidate verify?
     pub correct: bool,
+    /// Measured speedup of the candidate, when it ran.
     pub speedup: Option<f64>,
+    /// Kernel version the round produced (or re-reported).
     pub version: u32,
 }
 
 /// Outcome of one task run.
 #[derive(Debug, Clone)]
 pub struct TaskResult {
+    /// Task the run was about.
     pub task_id: String,
+    /// KernelBenchSim level of the task.
     pub level: u8,
+    /// Strategy name the run used.
     pub strategy: &'static str,
     /// A compiling + verifying kernel was produced within budget.
     pub success: bool,
@@ -58,10 +67,15 @@ pub struct TaskResult {
     pub best_speedup: f64,
     /// Speedup of the selected seed (None if no seed verified).
     pub seed_speedup: Option<f64>,
+    /// Rounds actually consumed (<= the strategy budget).
     pub rounds_used: u32,
+    /// Full per-round trace.
     pub rounds: Vec<RoundRecord>,
+    /// Base-kernel promotions that happened.
     pub promotions: u32,
+    /// Total repair attempts across all chains.
     pub repair_attempts: usize,
+    /// Length of the longest repair chain (Figure-2 statistic).
     pub longest_repair_chain: usize,
     /// The winning schedule (artifact verification / e2e replay).
     pub best_sched: Schedule,
@@ -74,9 +88,14 @@ pub struct TaskResult {
 /// Loop configuration shared across a suite run.
 #[derive(Debug, Clone)]
 pub struct LoopConfig {
+    /// Relative base-promotion threshold (paper: 0.3).
     pub rt: f64,
+    /// Absolute base-promotion threshold (paper: 0.3).
     pub at: f64,
+    /// Device preset priced by the cost model; its `name` also keys the
+    /// skill-store partition observations land in.
     pub dev: DeviceSpec,
+    /// Profiling-tool naming era the synthesized profiles emulate.
     pub tool: ToolVersion,
     /// Experiment-level seed; per-task streams derive from it.
     pub run_seed: u64,
@@ -338,9 +357,9 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             .profile
             .clone()
             .expect("base kernel always has a profile");
-        let retrieval_result = strategy
-            .use_long_term
-            .then(|| retrieval::retrieve_for_with(task, &features, &profile, skills.as_deref()));
+        let retrieval_result = strategy.use_long_term.then(|| {
+            retrieval::retrieve_for_with(task, &features, &profile, skills.as_deref(), cfg.dev.name)
+        });
 
         let ctx = planner::PlanContext {
             applicable: &applicable,
@@ -397,9 +416,10 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             version: candidate.version,
         });
 
-        // Harvest the (case, method, outcome) triple for the persistent
-        // skill store; gain is measured against the base kernel the method
-        // was applied to.
+        // Harvest the (case, method, outcome) observation for the
+        // persistent skill store; gain is measured against the base kernel
+        // the method was applied to, and the device preset keys the store
+        // partition the stat lands in.
         if let Some(case) = retrieval_result.as_ref().and_then(|r| r.matched_case) {
             skill_obs.push(SkillObs {
                 case_id: case.to_string(),
@@ -408,6 +428,7 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
                     .speedup
                     .filter(|_| review.ok())
                     .map(|sp| sp - base_review.speedup.unwrap_or(0.0)),
+                device: cfg.dev.name.to_string(),
             });
         }
 

@@ -19,11 +19,14 @@
 //!     shards disagree about the experiment, and silently picking one
 //!     would corrupt the aggregates.
 //!   * `skills.json` stores are folded with [`SkillStore::merge_store`],
-//!     whose exact-sum stats make the fold commutative/associative at the
-//!     bit level; the fold is cross-checked against a store rebuilt from
-//!     the unioned cells' observations (a lagging shard store — the same
-//!     crash class as a torn tail — is tolerated with a warning, and the
-//!     cell-derived store is what gets written).
+//!     whose exact-sum gain totals and max-combined generation stamps make
+//!     the fold commutative/associative at the bit level; the fold is
+//!     cross-checked against a store rebuilt from the unioned cells'
+//!     observations (a lagging shard store — the same crash class as a
+//!     torn tail — is tolerated with a warning, and the cell-derived store
+//!     is what gets written). Run-dir stores fold at epoch 1 over a cold
+//!     base, so the rebuild lands on identical generation stamps whatever
+//!     the partitioning was.
 //!   * warm-start memory snapshots must agree byte-for-byte across shards
 //!     (otherwise the shards did not run slices of one experiment — hard
 //!     error) and are carried into the output for resumability.
@@ -43,20 +46,26 @@ use crate::memory::long_term::SkillStore;
 /// What one input directory contributed.
 #[derive(Debug, Clone)]
 pub struct ShardSummary {
+    /// The input run directory.
     pub dir: PathBuf,
+    /// Shard index its manifest declared.
     pub shard_index: usize,
+    /// Total shard count its manifest declared.
     pub shards: usize,
+    /// Parseable cells it contributed.
     pub cells: usize,
 }
 
 /// Outcome of a successful merge.
 #[derive(Debug, Clone)]
 pub struct MergeReport {
+    /// Per-input contribution summaries.
     pub inputs: Vec<ShardSummary>,
     /// Distinct cells written to the output.
     pub merged_cells: usize,
     /// Duplicate lines dropped because they were bit-identical.
     pub deduplicated: usize,
+    /// Observations in the merged (cell-derived) skill store.
     pub skill_observations: u64,
     /// Shard indices the inputs' manifests declare but no input covered.
     /// Non-empty means the output holds a partial matrix (merge-then-resume
@@ -65,6 +74,7 @@ pub struct MergeReport {
 }
 
 impl MergeReport {
+    /// Human-readable multi-line summary (the `merge` CLI output).
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(

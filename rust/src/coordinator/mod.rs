@@ -3,6 +3,11 @@
 //! incremental JSONL checkpointing + resume (`checkpoint`), sharded
 //! execution with run-dir merging (`merge`), and the suite/matrix entry
 //! points (`suite_runner`).
+//!
+//! The run-directory layout and the byte-level merge determinism contract
+//! are specified normatively in `docs/memory-formats.md`.
+
+#![warn(missing_docs)]
 
 pub mod checkpoint;
 pub mod loop_runner;

@@ -17,8 +17,12 @@
 //! directory), so results are independent of worker count and completion
 //! order — parallel == serial, and a resumed run reproduces an
 //! uninterrupted one bit-for-bit. The *live* store only ever absorbs
-//! additive merges (exact-sum gain totals), so its final state is
-//! order-independent too — at the bit level.
+//! additive merges (exact-sum gain totals; generation stamps via `max`),
+//! so its final state is order-independent too — at the bit level. Skill
+//! observations are stamped with a fold epoch fixed at run start (the
+//! warm-start snapshot's generation + 1; run-dir stores always fold at
+//! epoch 1 over a cold base), never with completion order or wall clock —
+//! the v3 aging clock that keeps resume and merge byte-deterministic.
 //!
 //! Sharding: with [`SuiteOptions::shard`] set, the scheduler claims only a
 //! deterministic round-robin slice of the cell matrix ([`Shard::owns`]) and
@@ -54,6 +58,7 @@ pub struct Shard {
 }
 
 impl Shard {
+    /// Reject impossible assignments (zero shards, index out of range).
     pub fn validate(&self) -> Result<(), String> {
         if self.count == 0 {
             return Err("--shards must be >= 1".to_string());
@@ -91,6 +96,7 @@ pub struct SuiteOptions {
 }
 
 impl SuiteOptions {
+    /// Fresh checkpointed run streaming into `path`.
     pub fn in_dir<P: Into<PathBuf>>(path: P) -> SuiteOptions {
         SuiteOptions {
             run_dir: Some(path.into()),
@@ -98,6 +104,7 @@ impl SuiteOptions {
         }
     }
 
+    /// Resume a checkpointed run from `path`.
     pub fn resumed<P: Into<PathBuf>>(path: P) -> SuiteOptions {
         SuiteOptions {
             run_dir: Some(path.into()),
@@ -106,6 +113,7 @@ impl SuiteOptions {
         }
     }
 
+    /// Restrict the run to shard `index` of `count`.
     pub fn with_shard(mut self, index: usize, count: usize) -> SuiteOptions {
         self.shard = Some(Shard { index, count });
         self
@@ -261,10 +269,24 @@ pub fn run_strategy(
     // The live store absorbs observations as cells finish. It starts from
     // the current on-disk state (on resume that already includes the
     // interrupted run's merges; restored cells are NOT re-merged).
+    //
+    // Fold epoch: this run's observations are stamped with generation
+    // snapshot+1, derived from the warm-start snapshot rather than the
+    // live store itself so a resumed run reuses the interrupted run's
+    // epoch (the on-disk store already carries the bump) — fold order and
+    // kill points can never change a stamp. Advancing the clock per
+    // strategy-suite run is what ages stats that stop being re-observed.
     let mut live_store: Option<SkillStore> = match &live_path {
         Some(path) => Some(SkillStore::load(path)?),
         None => None,
     };
+    if let Some(store) = live_store.as_mut() {
+        let base_gen = snapshot
+            .as_deref()
+            .map(|s| s.generation)
+            .unwrap_or(store.generation);
+        store.generation = store.generation.max(base_gen + 1);
+    }
     if let Some(dir) = &cfg.memory_dir {
         // Make the memory directory self-describing: curated KB next to the
         // learned store.

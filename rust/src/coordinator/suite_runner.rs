@@ -19,7 +19,9 @@ use crate::bench_suite::Task;
 /// All results of one strategy over a task set (possibly several seeds).
 #[derive(Debug, Clone)]
 pub struct SuiteResult {
+    /// Strategy the suite ran.
     pub strategy: &'static str,
+    /// One result per (task, seed) cell, task-major.
     pub results: Vec<TaskResult>,
 }
 

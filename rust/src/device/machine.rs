@@ -59,6 +59,18 @@ impl DeviceSpec {
         }
     }
 
+    /// All built-in presets. Preset `name`s double as skill-store partition
+    /// keys: learned stats are recorded per device so A100-like and
+    /// TPU-like evidence never pollute each other.
+    pub fn presets() -> Vec<DeviceSpec> {
+        vec![DeviceSpec::a100_like(), DeviceSpec::tpu_like()]
+    }
+
+    /// Look up a preset by its `name` (e.g. a skill-store partition key).
+    pub fn by_name(name: &str) -> Option<DeviceSpec> {
+        DeviceSpec::presets().into_iter().find(|d| d.name == name)
+    }
+
     /// Machine balance point (FLOP/byte) above which a kernel is
     /// compute-bound on the vector path.
     pub fn ridge_fp32(&self) -> f64 {
@@ -88,5 +100,13 @@ mod tests {
     #[test]
     fn tpu_has_bigger_scratch() {
         assert!(DeviceSpec::tpu_like().scratch_bytes > DeviceSpec::a100_like().scratch_bytes);
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for dev in DeviceSpec::presets() {
+            assert_eq!(DeviceSpec::by_name(dev.name).map(|d| d.name), Some(dev.name));
+        }
+        assert!(DeviceSpec::by_name("h100-like").is_none());
     }
 }

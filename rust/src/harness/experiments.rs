@@ -361,9 +361,10 @@ pub fn smoke(root: &Path) -> Result<String, String> {
         return Err("curated KB export missing from memory dir".to_string());
     }
     log.push_str(&format!(
-        "persistent memory: {} observations across {} cases\n",
+        "persistent memory: {} observations across {} cases (generation {})\n",
         store.observations,
-        store.cases.len()
+        store.case_count(),
+        store.generation
     ));
 
     let _ = std::fs::remove_dir_all(&run_dir);

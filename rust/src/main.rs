@@ -7,6 +7,7 @@
 //!   suite --strategy <name> [--level N]                 (one-strategy suite)
 //!   report --run-dir <dir>                              (streamed results)
 //!   merge --out <dir> <shard-dir>...                    (union shard run dirs)
+//!   skills inspect|gc --memory-dir <dir>                (learned-store tooling)
 //!   smoke                                               (CI orchestration proof)
 //!
 //! Orchestration v2 flags (table*/suite): `--run-dir <dir>` streams every
@@ -28,22 +29,25 @@ use kernelskill::util::cli::Args;
 use kernelskill::util::logging::{self, Level};
 
 fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
-    let mut cfg = experiments::ExpConfig::default();
-    cfg.suite_seed = args.get_u64("suite-seed", cfg.suite_seed)?;
+    let defaults = experiments::ExpConfig::default();
     let n_seeds = args.get_usize("seeds", 1)?;
-    cfg.run_seeds = (0..n_seeds as u64).collect();
-    cfg.workers = args.get_usize("workers", cfg.workers)?;
-    cfg.run_dir = args.get("run-dir").map(std::path::PathBuf::from);
-    cfg.resume = args.has("resume");
-    cfg.memory_dir = args.get("memory-dir").map(std::path::PathBuf::from);
-    cfg.shards = args.get_usize("shards", 1)?;
-    cfg.shard_index = args.get_usize("shard-index", 0)?;
-    if cfg.shards != 1 && cfg.run_dir.is_none() {
+    let shards = args.get_usize("shards", 1)?;
+    let run_dir = args.get("run-dir").map(std::path::PathBuf::from);
+    if shards != 1 && run_dir.is_none() {
         return Err("--shards requires --run-dir (each shard streams its slice to its own \
                     run dir, then `merge` unions them)"
             .to_string());
     }
-    Ok(cfg)
+    Ok(experiments::ExpConfig {
+        suite_seed: args.get_u64("suite-seed", defaults.suite_seed)?,
+        run_seeds: (0..n_seeds as u64).collect(),
+        workers: args.get_usize("workers", defaults.workers)?,
+        run_dir,
+        resume: args.has("resume"),
+        memory_dir: args.get("memory-dir").map(std::path::PathBuf::from),
+        shards,
+        shard_index: args.get_usize("shard-index", 0)?,
+    })
 }
 
 fn main() {
@@ -136,14 +140,20 @@ fn run() -> Result<(), String> {
                 let path = dir.join("skills.json");
                 let mut store =
                     kernelskill::memory::long_term::SkillStore::load(&path)?;
+                // One completed task = one fold epoch: the generation
+                // clock advances even when the run produced no
+                // observations, which is what ages stats that stop being
+                // re-observed.
+                let generation = store.advance_generation();
                 store.merge(&r.skill_obs);
                 store
                     .save(&path)
                     .map_err(|e| format!("saving skill store: {e}"))?;
                 println!(
-                    "memory: {} observation(s) merged into {}",
+                    "memory: {} observation(s) merged into {} (generation {})",
                     r.skill_obs.len(),
-                    path.display()
+                    path.display(),
+                    generation
                 );
             }
             println!(
@@ -232,6 +242,7 @@ fn run() -> Result<(), String> {
             print!("{}", report.render());
             println!("merged run dir: {out} (report it with: report --run-dir {out})");
         }
+        Some("skills") => return run_skills(&args),
         Some("smoke") => return run_smoke(),
         _ => {
             println!(
@@ -256,10 +267,77 @@ fn run() -> Result<(), String> {
                  \x20 report --run-dir D     render tables from streamed results.jsonl\n\
                  \x20 merge --out D S0 S1..  union per-shard run dirs (checkpoints + skill stores)\n\
                  \x20 smoke                  tiny checkpoint/resume/memory end-to-end (CI gate)\n\
+                 learned memory (skills.json, see docs/memory-formats.md):\n\
+                 \x20 skills inspect --memory-dir M [--device D] [--case SUBSTR]\n\
+                 \x20     per-partition stats, confidence, staleness, learned cases\n\
+                 \x20 skills gc --memory-dir M [--max-age N] [--dry-run]\n\
+                 \x20     drop stats older than N generations (default 8)\n\
                  \n\
                  strategies: KernelSkill, STARK, CudaForge, Astra, PRAGMA, QiMeng,\n\
                  \x20          Kevin-32B, 'w/o memory', 'w/o Short_term memory', 'w/o Long_term memory'"
             );
+        }
+    }
+    Ok(())
+}
+
+/// The `skills` subcommand family: introspect and maintain a persistent
+/// learned store (`skills.json`) without running anything.
+fn run_skills(args: &Args) -> Result<(), String> {
+    use kernelskill::device::machine::DeviceSpec;
+    use kernelskill::memory::long_term::SkillStore;
+
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("inspect");
+    let dir = args
+        .get("memory-dir")
+        .or_else(|| args.get("run-dir"))
+        .ok_or("skills: --memory-dir <dir> (or --run-dir <dir>) required")?;
+    let path = std::path::Path::new(dir).join("skills.json");
+    if !path.exists() {
+        return Err(format!("no skill store at {}", path.display()));
+    }
+    let mut store = SkillStore::load(&path)?;
+    match action {
+        "inspect" => {
+            if let Some(d) = args.get("device") {
+                if DeviceSpec::by_name(d).is_none() {
+                    println!(
+                        "note: {d:?} is not a built-in device preset \
+                         (known: {:?})",
+                        DeviceSpec::presets().iter().map(|p| p.name).collect::<Vec<_>>()
+                    );
+                }
+            }
+            print!("{}", store.render_inspect(args.get("device"), args.get("case")));
+        }
+        "gc" => {
+            // A run-dir skills.json is *derived* — rebuilt from the
+            // checkpointed cells on every open — so gc'ing it would be
+            // silently undone by the next resume/merge. Only the live
+            // memory-dir store is gc-able.
+            if args.get("memory-dir").is_none() {
+                return Err(
+                    "skills gc needs --memory-dir: a run dir's skills.json is rebuilt \
+                     from results.jsonl on every open, so gc there would not stick"
+                        .to_string(),
+                );
+            }
+            let max_age = args.get_u64("max-age", 8)?;
+            let report = store.gc(max_age);
+            println!("{}", report.render());
+            if args.has("dry-run") {
+                println!("dry run: {} left untouched", path.display());
+            } else {
+                store
+                    .save(&path)
+                    .map_err(|e| format!("rewriting {}: {e}", path.display()))?;
+                println!("rewrote {}", path.display());
+            }
+        }
+        other => {
+            return Err(format!(
+                "unknown skills action {other:?}; expected `inspect` or `gc`"
+            ));
         }
     }
     Ok(())

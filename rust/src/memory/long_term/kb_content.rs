@@ -17,6 +17,8 @@ use crate::kir::transforms::MethodId;
 // ncu_predicates — the reusable Boolean predicate library (field 7).
 // ------------------------------------------------------------------------
 
+/// The reusable Boolean predicate library (`ncu_predicates`, field 7):
+/// every named profiling condition decision-case signatures can reference.
 pub static PREDICATES: Lazy<Vec<NamedPred>> = Lazy::new(|| {
     vec![
         NamedPred {
@@ -98,6 +100,7 @@ pub static PREDICATES: Lazy<Vec<NamedPred>> = Lazy::new(|| {
     ]
 });
 
+/// Look up a named predicate from the `PREDICATES` library.
 pub fn predicate(name: &str) -> Option<&'static NamedPred> {
     PREDICATES.iter().find(|p| p.name == name)
 }
@@ -106,6 +109,10 @@ pub fn predicate(name: &str) -> Option<&'static NamedPred> {
 // decision_table (field 9) — bottleneck x headroom x code-gates -> methods.
 // ------------------------------------------------------------------------
 
+/// The curated decision table (field 9): bottleneck x headroom-tier x
+/// code-feature gates -> priority-ordered method sets. Retrieval walks it
+/// in [`super::schema::BOTTLENECK_PRIORITY`] order and takes the first
+/// case whose signature, tier, and gate all hold.
 pub static DECISION_TABLE: Lazy<Vec<DecisionCase>> = Lazy::new(|| {
     use MethodId::*;
     vec![
@@ -356,6 +363,8 @@ pub static DECISION_TABLE: Lazy<Vec<DecisionCase>> = Lazy::new(|| {
 // global_forbidden_rules (field 8) — veto constraints.
 // ------------------------------------------------------------------------
 
+/// The global veto rules (field 8): while a rule's predicate holds, its
+/// methods are removed from every matched case (step 7 of retrieval).
 pub static FORBIDDEN_RULES: Lazy<Vec<ForbiddenRule>> = Lazy::new(|| {
     use MethodId::*;
     vec![
@@ -407,6 +416,9 @@ pub static FORBIDDEN_RULES: Lazy<Vec<ForbiddenRule>> = Lazy::new(|| {
 // llm_assist (field 10) — Method Knowledge store.
 // ------------------------------------------------------------------------
 
+/// The `llm_assist` Method Knowledge store (field 10): per-method
+/// rationale, implementation cues, expected gain, and known risks attached
+/// to retrieval results for the Planner.
 pub static METHOD_KNOWLEDGE: Lazy<Vec<MethodKnowledge>> = Lazy::new(|| {
     use MethodId::*;
     vec![
@@ -616,6 +628,7 @@ pub static METHOD_KNOWLEDGE: Lazy<Vec<MethodKnowledge>> = Lazy::new(|| {
     ]
 });
 
+/// Look up the `METHOD_KNOWLEDGE` entry for one method.
 pub fn knowledge_for(method: MethodId) -> Option<&'static MethodKnowledge> {
     METHOD_KNOWLEDGE.iter().find(|k| k.method == method)
 }

@@ -1,8 +1,9 @@
 //! Long-term memory: the externalized expert-knowledge store (§4.2.1) —
 //! a Deterministic Decision Policy (normalize -> derive -> tier -> match ->
 //! veto) plus the Method Knowledge (`llm_assist`) store, and the persistent
-//! learned layer (`skill_store`) that survives across tasks, seeds,
-//! strategies, and processes.
+//! learned layer (`skill_store`, v3: device-partitioned,
+//! confidence-weighted, generation-aged) that survives across tasks,
+//! seeds, strategies, and processes.
 
 pub mod derived;
 pub mod kb_content;

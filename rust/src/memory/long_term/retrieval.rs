@@ -26,7 +26,9 @@ use crate::kir::transforms::MethodId;
 /// Full audit trail of one retrieval (steps 4-9 outputs).
 #[derive(Debug, Clone)]
 pub struct RetrievalResult {
+    /// Headroom tier assigned in step 4.
     pub tier: Tier,
+    /// Bottleneck the matched case addresses (step 5).
     pub bottleneck: Bottleneck,
     /// Matched decision-table case id (step 6), if any.
     pub matched_case: Option<&'static str>,
@@ -42,7 +44,13 @@ pub struct RetrievalResult {
     pub case_why: Option<&'static str>,
     /// Persisted-skill evidence applied to this retrieval (one line per
     /// method with recorded outcomes; empty when retrieval ran cold).
+    /// Each line names the partition the evidence came from (`[<device>]`
+    /// or `[pooled]` for the cross-device fallback).
     pub skill_notes: Vec<String>,
+    /// Learned decision cases the store synthesized for the matched case
+    /// on this device (promotions/demotions/extensions of the curated KB);
+    /// empty when retrieval ran cold or nothing was learned.
+    pub learned_notes: Vec<String>,
 }
 
 impl RetrievalResult {
@@ -76,6 +84,12 @@ impl RetrievalResult {
                 s.push_str(&format!("  {note}\n"));
             }
         }
+        if !self.learned_notes.is_empty() {
+            s.push_str("learned decision cases:\n");
+            for note in &self.learned_notes {
+                s.push_str(&format!("  {note}\n"));
+            }
+        }
         s
     }
 }
@@ -98,13 +112,19 @@ pub fn aggregate(task: &Task, features: &CodeFeatures, raw: &RawProfile) -> Evid
 /// Steps 4-9: run the deterministic decision policy over evidence (cold —
 /// no persisted skills).
 pub fn retrieve(ev: &Evidence) -> RetrievalResult {
-    retrieve_with(ev, None)
+    retrieve_with(ev, None, "")
 }
 
 /// Steps 4-9 with an optional warm-started [`SkillStore`]: persisted
-/// observations rerank the matched case's allowed methods (step 8') and are
-/// surfaced in the audit trail.
-pub fn retrieve_with(ev: &Evidence, skills: Option<&SkillStore>) -> RetrievalResult {
+/// observations rerank the matched case's allowed methods (step 8') with a
+/// confidence-weighted, staleness-decayed score, and are surfaced in the
+/// audit trail together with any learned decision cases.
+///
+/// `device` names the partition to consult first (`DeviceSpec::name`, e.g.
+/// `a100-like`); methods the partition never observed fall back to the
+/// pooled cross-device view at a discount. An empty `device` ranks on the
+/// pooled view at full weight.
+pub fn retrieve_with(ev: &Evidence, skills: Option<&SkillStore>, device: &str) -> RetrievalResult {
     // Audit: which named predicates hold.
     let satisfied: Vec<&'static str> = super::kb_content::PREDICATES
         .iter()
@@ -147,23 +167,35 @@ pub fn retrieve_with(ev: &Evidence, skills: Option<&SkillStore>) -> RetrievalRes
     }
 
     // Step 8': persisted skills rerank the surviving methods — learned
-    // outcomes take precedence over curated priority, untried methods keep
+    // outcomes take precedence over curated priority (confidence-weighted
+    // and staleness-decayed, device partition first), untried methods keep
     // their curated order.
     let mut skill_notes = Vec::new();
+    let mut learned_notes = Vec::new();
     if let (Some(store), Some(case)) = (skills, matched) {
-        store.rerank(case.id, &mut allowed);
+        store.rerank(device, case.id, &mut allowed);
         for &m in &allowed {
-            if let Some(stat) = store.stat(case.id, m) {
+            let (stat, src) = match store.stat_in(device, case.id, m) {
+                Some(s) => (Some(s.clone()), device),
+                None => (store.pooled_stat(case.id, m), "pooled"),
+            };
+            if let Some(stat) = stat {
                 if stat.attempts > 0 {
                     skill_notes.push(format!(
-                        "{}: {} attempts, {} wins, mean gain {:+.3}",
+                        "{}: {} attempts, {} wins, mean gain {:+.3}, conf {:.2}, staleness x{:.2} [{}]",
                         m.name(),
                         stat.attempts,
                         stat.wins,
-                        stat.mean_gain()
+                        stat.mean_gain(),
+                        stat.wilson_lower_bound(),
+                        stat.staleness_weight(store.generation),
+                        src
                     ));
                 }
             }
+        }
+        for lc in store.learned_for(device, case.id) {
+            learned_notes.push(lc.render());
         }
     }
 
@@ -180,6 +212,7 @@ pub fn retrieve_with(ev: &Evidence, skills: Option<&SkillStore>) -> RetrievalRes
         knowledge,
         case_why: matched.map(|c| c.why),
         skill_notes,
+        learned_notes,
     }
 }
 
@@ -189,13 +222,16 @@ pub fn retrieve_for(task: &Task, features: &CodeFeatures, raw: &RawProfile) -> R
 }
 
 /// Full pipeline from raw inputs with a warm-started skill store.
+/// `device` selects the store partition consulted first (see
+/// [`retrieve_with`]).
 pub fn retrieve_for_with(
     task: &Task,
     features: &CodeFeatures,
     raw: &RawProfile,
     skills: Option<&SkillStore>,
+    device: &str,
 ) -> RetrievalResult {
-    retrieve_with(&aggregate(task, features, raw), skills)
+    retrieve_with(&aggregate(task, features, raw), skills, device)
 }
 
 #[cfg(test)]
@@ -347,17 +383,47 @@ mod tests {
             case_id: "gemm.naive_loop".to_string(),
             method: MethodId::TileSmem,
             gain: Some(2.5),
+            device: dev.name.to_string(),
         });
-        let r = retrieve_for_with(&task, &feats, &raw, Some(&store));
+        let r = retrieve_for_with(&task, &feats, &raw, Some(&store), dev.name);
         assert_eq!(r.matched_case, Some("gemm.naive_loop"), "{}", r.audit());
         assert!(!r.skill_notes.is_empty());
         let audit = r.audit();
         assert!(audit.contains("skills (persistent long-term memory)"));
         assert!(audit.contains("tile_smem: 1 attempts, 1 wins"));
+        assert!(audit.contains("[a100-like]"), "note must name its partition:\n{audit}");
         // Cold retrieval is unchanged by the skill layer's existence.
         let cold = retrieve_for(&task, &feats, &raw);
         assert_eq!(cold.allowed_methods, r.allowed_methods);
         assert!(cold.skill_notes.is_empty());
+    }
+
+    #[test]
+    fn learned_cases_surface_in_audit() {
+        use super::super::skill_store::{SkillObs, SkillStore};
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let dev = DeviceSpec::a100_like();
+        let cost = price(&task.graph, &sched, &dev);
+        let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+        let feats = ground_truth(&task.graph, &sched);
+        // Enough consistent failures of the curated first choice to
+        // synthesize a demotion for the matched case.
+        let mut store = SkillStore::new();
+        for _ in 0..8 {
+            store.observe(&SkillObs {
+                case_id: "gemm.naive_loop".to_string(),
+                method: MethodId::TileSmem,
+                gain: None,
+                device: dev.name.to_string(),
+            });
+        }
+        let r = retrieve_for_with(&task, &feats, &raw, Some(&store), dev.name);
+        assert_eq!(r.matched_case, Some("gemm.naive_loop"), "{}", r.audit());
+        assert!(!r.learned_notes.is_empty(), "{}", r.audit());
+        let audit = r.audit();
+        assert!(audit.contains("learned decision cases:"), "{audit}");
+        assert!(audit.contains("[demotion]"), "{audit}");
     }
 
     #[test]

@@ -20,8 +20,11 @@ pub type Evidence = BTreeMap<&'static str, f64>;
 /// Optimization-headroom tier (Appendix-B field 5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Tier {
+    /// Little headroom left: the kernel is close to its roofline.
     Low,
+    /// Moderate headroom: targeted fixes still pay off.
     Medium,
+    /// Large headroom: structural optimizations are on the table.
     High,
 }
 
@@ -59,7 +62,9 @@ pub enum Pred {
     Is(&'static str),
     /// boolean field (0/1) is clear
     Not(&'static str),
+    /// conjunction: every sub-predicate holds
     All(Vec<Pred>),
+    /// disjunction: at least one sub-predicate holds
     Any(Vec<Pred>),
 }
 
@@ -99,7 +104,9 @@ impl Pred {
 /// A named predicate from the `ncu_predicates` library.
 #[derive(Debug, Clone)]
 pub struct NamedPred {
+    /// Stable name decision-case signatures reference.
     pub name: &'static str,
+    /// The predicate tree itself.
     pub pred: Pred,
 }
 
@@ -108,6 +115,7 @@ pub struct NamedPred {
 pub struct DecisionCase {
     /// Stable id, e.g. "gemm.naive_loop".
     pub id: &'static str,
+    /// Bottleneck class this case addresses (priority resolution key).
     pub bottleneck: Bottleneck,
     /// Profiling signature: names into the `ncu_predicates` library.
     pub ncu_signature: Vec<&'static str>,
@@ -124,29 +132,108 @@ pub struct DecisionCase {
 /// A global veto rule (Appendix-B field 8).
 #[derive(Debug, Clone)]
 pub struct ForbiddenRule {
+    /// Stable id surfaced in the audit trail.
     pub id: &'static str,
     /// When this predicate holds, the listed methods are vetoed everywhere.
     pub when: Pred,
+    /// Methods removed from every case while `when` holds.
     pub veto: Vec<MethodId>,
+    /// Human rationale for the audit trail.
     pub why: &'static str,
 }
 
 /// Expected-benefit class for `llm_assist` method knowledge.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Gain {
+    /// Single-digit-percent improvements (polish).
     Small,
+    /// Tens of percent.
     Medium,
+    /// Multiples (structural fixes).
     Large,
+}
+
+/// How a learned decision case relates to the curated knowledge base.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LearnedOrigin {
+    /// Evidence contradicts the curated priority order: a lower-priority
+    /// (but curated-allowed) method consistently beats the first choice.
+    Promotion,
+    /// Evidence contradicts the curated recommendation outright: the
+    /// curated first choice consistently fails on this hardware.
+    Demotion,
+    /// Evidence extends the curated method set: a method outside the
+    /// case's `allowed_methods` consistently wins here.
+    Extension,
+}
+
+impl LearnedOrigin {
+    /// Stable serialization name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LearnedOrigin::Promotion => "promotion",
+            LearnedOrigin::Demotion => "demotion",
+            LearnedOrigin::Extension => "extension",
+        }
+    }
+}
+
+/// A decision case synthesized from the learned skill store (skill-store
+/// v3) when observed outcomes consistently contradict or extend the
+/// curated decision table. Unlike [`DecisionCase`], a learned case is
+/// *derived* — recomputed deterministically from the recorded stats, never
+/// hand-authored — and is scoped to one device partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LearnedCase {
+    /// Device partition the evidence came from (`DeviceSpec::name`).
+    pub device: String,
+    /// Curated decision-table case id the evidence is about.
+    pub base_case: String,
+    /// Method the evidence concerns.
+    pub method: MethodId,
+    /// Relationship to the curated KB (promotion / demotion / extension).
+    pub origin: LearnedOrigin,
+    /// Attempts backing the synthesis.
+    pub attempts: u64,
+    /// Wins among those attempts.
+    pub wins: u64,
+    /// Mean speedup delta over winning attempts.
+    pub mean_gain: f64,
+    /// Wilson-lower-bound confidence in the observed direction.
+    pub confidence: f64,
+    /// Deterministic human rationale (audit trail).
+    pub why: String,
+}
+
+impl LearnedCase {
+    /// Stable id, e.g. `learned.gemm.naive_loop@tile_smem/a100-like`.
+    pub fn id(&self) -> String {
+        format!("learned.{}@{}/{}", self.base_case, self.method.name(), self.device)
+    }
+
+    /// One-line rendering for audit trails and `skills inspect`.
+    pub fn render(&self) -> String {
+        format!(
+            "[{}] {}: {} (conf {:.2}, {} attempts)",
+            self.origin.name(),
+            self.id(),
+            self.why,
+            self.confidence,
+            self.attempts
+        )
+    }
 }
 
 /// Method Knowledge entry (Appendix-B field 10, the `llm_assist` store).
 #[derive(Debug, Clone)]
 pub struct MethodKnowledge {
+    /// Method this knowledge is about.
     pub method: MethodId,
     /// Why this method addresses its bottleneck.
     pub rationale: &'static str,
     /// Concrete implementation cues (CUDA and TPU/Pallas vocabulary).
     pub cues: &'static str,
+    /// Expected-benefit class when the method lands.
     pub expected_gain: Gain,
     /// Known failure modes the Optimizer should guard against.
     pub risks: &'static str,

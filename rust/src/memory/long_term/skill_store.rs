@@ -1,25 +1,48 @@
-//! Persistent long-term skill memory: the *learned* layer on top of the
+//! Persistent long-term skill memory v3: the *learned* layer on top of the
 //! curated knowledge base.
 //!
 //! The curated store (`kb_content`) is static expert knowledge; what the
 //! paper's dual-level memory additionally needs is cross-task transfer —
 //! outcomes observed while optimizing one task should inform method choice
-//! on later tasks, seeds, and strategies. This module records, per
-//! decision-table case, how every method actually performed
+//! on later tasks, seeds, strategies, and processes. This module records,
+//! per decision-table case, how every method actually performed
 //! ([`MethodStat`]), serializes the store to disk after each task (the
-//! suite orchestrator owns the write cycle), and warm-starts retrieval from
-//! it: [`SkillStore::rerank`] reorders a case's `allowed_methods` by
-//! observed mean gain, leaving unobserved methods in curated priority
-//! order.
+//! suite orchestrator owns the write cycle), and warm-starts retrieval
+//! from it.
+//!
+//! v3 adds three things on top of the v2 outcome ledger (the on-disk
+//! contract is specified normatively in `docs/memory-formats.md`):
+//!
+//! * **Device partitions.** Stats are keyed by the device preset that
+//!   produced them (`DeviceSpec::name`, e.g. `a100-like` vs `tpu-like`):
+//!   what wins on a GPU-shaped machine is not evidence about a TPU-shaped
+//!   one. Retrieval consults the matching partition first and falls back
+//!   to the pooled cross-device view at a discount
+//!   ([`CROSS_DEVICE_DISCOUNT`]).
+//! * **Confidence-weighted, decaying scores.** Reranking no longer uses
+//!   the raw mean gain: [`MethodStat::score`] shrinks the observed mean
+//!   toward the curated prior by [`PRIOR_WEIGHT`] pseudo-attempts (small
+//!   samples barely move the curated order; strong evidence dominates it)
+//!   and down-weights stale stats by [`STALENESS_DECAY`] per generation of
+//!   age. The generation counter is deterministic — bumped per completed
+//!   fold epoch, never wall clock — so resume/merge determinism holds.
+//! * **Learned decision cases.** When the evidence in one partition
+//!   consistently contradicts or extends the curated decision table, the
+//!   store synthesizes a [`LearnedCase`] (promotion / demotion /
+//!   extension). Learned cases are *derived* deterministically from the
+//!   stats — serialized for inspectability, recomputed on load — so they
+//!   can never break the merge algebra. Retrieval surfaces them in
+//!   [`RetrievalResult::audit`](super::retrieval::RetrievalResult::audit).
 //!
 //! Persistence uses the repo's own JSON layer (serde is not vendored
 //! offline) and writes are atomic (tmp + rename) so a killed run never
 //! leaves a torn store behind.
 //!
-//! Merging is exact: per-(case, method) gain totals accumulate through
-//! [`ExactSum`], so folding observations — or whole stores, via
-//! [`SkillStore::merge_store`] — is commutative and associative *at the bit
-//! level*, with the empty store as identity. That is the property the
+//! Merging is exact: per-(partition, case, method) gain totals accumulate
+//! through [`ExactSum`], counts add, and generation stamps combine through
+//! `max`, so folding observations — or whole stores, via
+//! [`SkillStore::merge_store`] — is commutative and associative *at the
+//! bit level*, with the empty store as identity. That is the property the
 //! sharded suite relies on: N shards merged in any order serialize to the
 //! same bytes a single process would have written.
 
@@ -27,31 +50,88 @@ use std::collections::BTreeMap;
 use std::io;
 use std::path::Path;
 
+use super::kb_content::DECISION_TABLE;
+use super::schema::{LearnedCase, LearnedOrigin};
 use crate::kir::transforms::MethodId;
 use crate::util::fsum::ExactSum;
 use crate::util::json::{self, Json};
 
-/// One learned observation: applying `method` while the decision table had
-/// matched `case_id` produced `gain` (speedup delta vs the base kernel), or
-/// failed review (`None`).
+/// Partition key assigned to observations loaded from v1/v2 stores and
+/// pre-v3 checkpoints, which carried no device field. Every pre-v3 run used
+/// the default `LoopConfig` device, which is the A100-like preset.
+pub const LEGACY_DEVICE: &str = "a100-like";
+
+/// Pseudo-attempts of the curated prior a stat is shrunk toward: with `n`
+/// real attempts, the observed mean gain is scaled by `n / (n + this)`, so
+/// one lucky observation cannot overturn the curated order but sustained
+/// evidence can.
+pub const PRIOR_WEIGHT: f64 = 2.0;
+
+/// Per-generation-of-age multiplier applied to a stat's score: a stat last
+/// re-observed `d` fold epochs ago contributes `STALENESS_DECAY^d` of its
+/// fresh weight, decaying toward the curated prior rather than below it.
+pub const STALENESS_DECAY: f64 = 0.85;
+
+/// Score multiplier applied when retrieval falls back from the requested
+/// device partition to the pooled cross-device view: evidence gathered on
+/// different hardware is suggestive, not conclusive.
+pub const CROSS_DEVICE_DISCOUNT: f64 = 0.25;
+
+/// Minimum attempts a (partition, case, method) stat needs before the store
+/// will synthesize a [`LearnedCase`] from it.
+pub const MIN_LEARN_EVIDENCE: u64 = 5;
+
+/// Minimum Wilson-lower-bound confidence a stat needs before the store will
+/// synthesize a [`LearnedCase`] from it.
+pub const MIN_LEARN_CONFIDENCE: f64 = 0.5;
+
+/// One learned observation: applying `method` on `device` while the
+/// decision table had matched `case_id` produced `gain` (speedup delta vs
+/// the base kernel), or failed review (`None`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SkillObs {
+    /// Matched decision-table case id (e.g. `gemm.naive_loop`).
     pub case_id: String,
+    /// Optimization method that was applied.
     pub method: MethodId,
+    /// Measured speedup delta vs the base kernel; `None` = failed review.
     pub gain: Option<f64>,
+    /// Device preset the observation was measured on (`DeviceSpec::name`);
+    /// selects the store partition the stat lands in.
+    pub device: String,
 }
 
-/// Aggregate outcome statistics for one (case, method) pair.
+/// Wilson score-interval lower bound (z = 1, one-sided ~84%) on the success
+/// probability after `successes` out of `trials`. Zero trials score 0.
+pub fn wilson_lower_bound(successes: u64, trials: u64) -> f64 {
+    if trials == 0 {
+        return 0.0;
+    }
+    let n = trials as f64;
+    let p = successes as f64 / n;
+    // z = 1, so z^2 = 1 throughout.
+    let centre = p + 1.0 / (2.0 * n);
+    let margin = (p * (1.0 - p) / n + 1.0 / (4.0 * n * n)).sqrt();
+    ((centre - margin) / (1.0 + 1.0 / n)).max(0.0)
+}
+
+/// Aggregate outcome statistics for one (partition, case, method) triple.
 ///
 /// The gain total is an exact accumulator, not a plain f64, so stats from
-/// different shards/orders combine to bit-identical results.
+/// different shards/orders combine to bit-identical results; the freshness
+/// stamp (`last_gen`) combines through `max`, which is equally
+/// order-independent.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MethodStat {
+    /// Times the method was tried while this case was matched.
     pub attempts: u64,
     /// Attempts whose candidate compiled, verified, and was measured.
     pub wins: u64,
     /// Exact sum of speedup deltas over winning attempts.
     gain: ExactSum,
+    /// Fold epoch (store generation) at which this stat last absorbed an
+    /// observation; drives the staleness decay.
+    pub last_gen: u64,
 }
 
 impl MethodStat {
@@ -60,6 +140,7 @@ impl MethodStat {
         self.gain.value()
     }
 
+    /// Mean speedup delta over winning attempts (0 when nothing won).
     pub fn mean_gain(&self) -> f64 {
         if self.wins == 0 {
             0.0
@@ -68,6 +149,7 @@ impl MethodStat {
         }
     }
 
+    /// Fraction of attempts that survived review.
     pub fn win_rate(&self) -> f64 {
         if self.attempts == 0 {
             0.0
@@ -76,51 +158,165 @@ impl MethodStat {
         }
     }
 
-    /// Ranking score: mean gain per attempt. Unobserved methods score 0, so
-    /// known-good methods rise above them and known-bad ones sink below.
-    fn score(&self) -> f64 {
-        if self.attempts == 0 {
-            0.0
-        } else if self.wins == 0 {
-            -1.0
-        } else {
-            self.total_gain() / self.attempts as f64
-        }
+    /// Wilson lower bound on the win rate — the confidence weight the
+    /// rerank and the learned-case synthesis both use.
+    pub fn wilson_lower_bound(&self) -> f64 {
+        wilson_lower_bound(self.wins, self.attempts)
     }
 
-    /// Add another stat's counts and exact gain total into this one.
+    /// Staleness multiplier relative to the store's current generation: 1.0
+    /// when re-observed this epoch, decaying by [`STALENESS_DECAY`] per
+    /// epoch of age (exponent capped so ancient stats cannot underflow).
+    pub fn staleness_weight(&self, store_generation: u64) -> f64 {
+        let d = store_generation.saturating_sub(self.last_gen).min(64);
+        STALENESS_DECAY.powi(d as i32)
+    }
+
+    /// Confidence-weighted ranking score at the given store generation.
+    ///
+    /// The observed mean gain per attempt is shrunk toward the curated
+    /// prior (score 0 — "keep the curated order") by [`PRIOR_WEIGHT`]
+    /// pseudo-attempts, then staleness-decayed. Methods that only ever
+    /// failed score negative (sinking below untried ones), with magnitude
+    /// that also grows with evidence and decays with age. Unobserved
+    /// methods score exactly 0, so they keep their curated position.
+    pub fn score(&self, store_generation: u64) -> f64 {
+        if self.attempts == 0 {
+            return 0.0;
+        }
+        let n = self.attempts as f64;
+        let shrunk = if self.wins == 0 {
+            -(n / (n + PRIOR_WEIGHT))
+        } else {
+            self.total_gain() / (n + PRIOR_WEIGHT)
+        };
+        shrunk * self.staleness_weight(store_generation)
+    }
+
+    /// Add another stat's counts, exact gain total, and freshness stamp
+    /// into this one. Counts add, gains add exactly, stamps take the max —
+    /// all commutative and associative.
     fn absorb(&mut self, other: &MethodStat) {
         self.attempts += other.attempts;
         self.wins += other.wins;
         self.gain.add_sum(&other.gain);
+        self.last_gen = self.last_gen.max(other.last_gen);
     }
 }
 
-/// The persistent skill store: case id -> method -> stats.
+/// Stats for one case: method -> outcome stats.
+pub type CaseStats = BTreeMap<MethodId, MethodStat>;
+
+/// One device partition: case id -> per-method stats.
+pub type Partition = BTreeMap<String, CaseStats>;
+
+/// What [`SkillStore::gc`] removed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GcReport {
+    /// Age threshold the sweep ran with (generations since last observed).
+    pub max_age: u64,
+    /// Individual (partition, case, method) stats dropped.
+    pub dropped_stats: usize,
+    /// Case entries left empty by the sweep and removed.
+    pub dropped_cases: usize,
+    /// Partitions left empty by the sweep and removed.
+    pub dropped_partitions: usize,
+}
+
+impl GcReport {
+    /// Human-readable one-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "gc (max age {} generation(s)): dropped {} stat(s), {} emptied case(s), {} emptied partition(s)",
+            self.max_age, self.dropped_stats, self.dropped_cases, self.dropped_partitions
+        )
+    }
+}
+
+/// The persistent skill store: device partition -> case id -> method ->
+/// stats, plus the deterministic generation clock.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SkillStore {
-    pub cases: BTreeMap<String, BTreeMap<MethodId, MethodStat>>,
-    /// Total observations folded in (for the audit trail).
+    /// Per-device-preset stat partitions. Keys are `DeviceSpec::name`
+    /// values ([`LEGACY_DEVICE`] for data migrated from v1/v2 stores).
+    pub partitions: BTreeMap<String, Partition>,
+    /// Total observations folded in (for the audit trail). A historical
+    /// counter: [`SkillStore::gc`] does not decrement it.
     pub observations: u64,
+    /// Deterministic fold-epoch clock. Observations are stamped with the
+    /// generation current at fold time; the suite orchestrator advances it
+    /// once per fold epoch (one `run-task` invocation, one strategy-suite
+    /// run), never per wall clock — see `coordinator::scheduler`.
+    pub generation: u64,
 }
 
 impl SkillStore {
+    /// An empty (cold) store at generation 0.
     pub fn new() -> SkillStore {
         SkillStore::default()
     }
 
+    /// True when the store holds no stats at all.
     pub fn is_empty(&self) -> bool {
-        self.cases.is_empty()
+        self.partitions.is_empty()
     }
 
-    pub fn stat(&self, case_id: &str, method: MethodId) -> Option<&MethodStat> {
-        self.cases.get(case_id).and_then(|m| m.get(&method))
+    /// Number of distinct case ids observed across all partitions.
+    pub fn case_count(&self) -> usize {
+        let mut ids: std::collections::BTreeSet<&str> = Default::default();
+        for cases in self.partitions.values() {
+            for case in cases.keys() {
+                ids.insert(case);
+            }
+        }
+        ids.len()
     }
 
-    /// Fold one observation in.
+    /// Advance the generation clock by one fold epoch and return the new
+    /// generation. Standalone `run-task` invocations call this before
+    /// folding a task's observations ("bumped per completed task"); the
+    /// suite orchestrator instead derives the epoch from the warm-start
+    /// snapshot so resumed runs reuse the interrupted run's epoch.
+    pub fn advance_generation(&mut self) -> u64 {
+        self.generation += 1;
+        self.generation
+    }
+
+    /// Stat recorded for `method` under `case_id` in the `device`
+    /// partition, if any.
+    pub fn stat_in(&self, device: &str, case_id: &str, method: MethodId) -> Option<&MethodStat> {
+        self.partitions
+            .get(device)
+            .and_then(|p| p.get(case_id))
+            .and_then(|m| m.get(&method))
+    }
+
+    /// Pooled cross-device stat for (case, method): the fold of every
+    /// partition's stat. `None` when no partition observed the pair.
+    pub fn pooled_stat(&self, case_id: &str, method: MethodId) -> Option<MethodStat> {
+        let mut out: Option<MethodStat> = None;
+        for p in self.partitions.values() {
+            if let Some(s) = p.get(case_id).and_then(|m| m.get(&method)) {
+                out.get_or_insert_with(MethodStat::default).absorb(s);
+            }
+        }
+        out
+    }
+
+    /// Fold one observation in, stamped with the current fold epoch.
+    ///
+    /// The stamp is `max(generation, 1)` — a cold store's first fold is
+    /// epoch 1 — and folding never *advances* the clock, so folding a
+    /// multiset of observations is order-independent at the bit level
+    /// (which is what lets the work-stealing scheduler fold cells in
+    /// completion order).
     pub fn observe(&mut self, obs: &SkillObs) {
+        let epoch = self.generation.max(1);
+        self.generation = epoch;
         let stat = self
-            .cases
+            .partitions
+            .entry(obs.device.clone())
+            .or_default()
             .entry(obs.case_id.clone())
             .or_default()
             .entry(obs.method)
@@ -130,127 +326,475 @@ impl SkillStore {
             stat.wins += 1;
             stat.gain.add(g);
         }
+        stat.last_gen = stat.last_gen.max(epoch);
         self.observations += 1;
     }
 
-    /// Fold a task's worth of observations in. Merging is additive and gain
-    /// totals accumulate exactly, so the final store is bit-identical
-    /// regardless of the order tasks complete in.
+    /// Fold a task's worth of observations in (all at the current epoch).
+    /// Merging is additive and gain totals accumulate exactly, so the
+    /// final store is bit-identical regardless of the order tasks complete
+    /// in.
     pub fn merge(&mut self, obs: &[SkillObs]) {
         for o in obs {
             self.observe(o);
         }
     }
 
-    /// Fold an entire store into this one: per-(case, method) stats add,
-    /// counts and exact gain totals alike. This fold is commutative and
-    /// associative at the bit level, with the empty store as identity —
-    /// the contract the sharded suite's `merge` subcommand depends on.
+    /// Fold an entire store into this one: per-(partition, case, method)
+    /// stats add (counts and exact gain totals alike), freshness stamps
+    /// and the generation clock combine through `max`. This fold is
+    /// commutative and associative at the bit level, with the empty store
+    /// as identity — the contract the sharded suite's `merge` subcommand
+    /// depends on.
     pub fn merge_store(&mut self, other: &SkillStore) {
-        for (case, methods) in &other.cases {
-            let dst = self.cases.entry(case.clone()).or_default();
-            for (method, stat) in methods {
-                dst.entry(*method).or_default().absorb(stat);
+        for (device, cases) in &other.partitions {
+            for (case, methods) in cases {
+                if methods.is_empty() {
+                    continue;
+                }
+                let dst = self
+                    .partitions
+                    .entry(device.clone())
+                    .or_default()
+                    .entry(case.clone())
+                    .or_default();
+                for (method, stat) in methods {
+                    dst.entry(*method).or_default().absorb(stat);
+                }
             }
         }
         self.observations += other.observations;
+        self.generation = self.generation.max(other.generation);
     }
 
-    /// Reorder a case's allowed methods by observed performance: stable
-    /// sort, descending score. Methods never tried keep their curated
-    /// position among themselves (score 0); methods that only ever failed
-    /// sink below untried ones.
-    pub fn rerank(&self, case_id: &str, methods: &mut [MethodId]) {
-        let Some(stats) = self.cases.get(case_id) else {
-            return;
-        };
-        methods.sort_by(|a, b| {
-            let sa = stats.get(a).map(|s| s.score()).unwrap_or(0.0);
-            let sb = stats.get(b).map(|s| s.score()).unwrap_or(0.0);
-            sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+    /// Reorder a case's allowed methods by learned performance on `device`:
+    /// stable sort, descending confidence-weighted score. The matching
+    /// device partition is consulted first; methods it never observed fall
+    /// back to the pooled cross-device view at [`CROSS_DEVICE_DISCOUNT`].
+    /// Methods never tried anywhere keep their curated position among
+    /// themselves (score 0); methods that only ever failed sink below
+    /// untried ones. An empty `device` skips the partition preference and
+    /// ranks on the pooled view at full weight.
+    pub fn rerank(&self, device: &str, case_id: &str, methods: &mut [MethodId]) {
+        let scores: Vec<f64> = methods
+            .iter()
+            .map(|&m| self.rank_score(device, case_id, m))
+            .collect();
+        let mut order: Vec<usize> = (0..methods.len()).collect();
+        order.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
         });
+        let reordered: Vec<MethodId> = order.iter().map(|&i| methods[i]).collect();
+        methods.copy_from_slice(&reordered);
+    }
+
+    /// The score [`SkillStore::rerank`] sorts by: device partition first,
+    /// pooled fallback at [`CROSS_DEVICE_DISCOUNT`], 0 when unobserved.
+    pub fn rank_score(&self, device: &str, case_id: &str, method: MethodId) -> f64 {
+        if !device.is_empty() {
+            if let Some(s) = self.stat_in(device, case_id, method) {
+                return s.score(self.generation);
+            }
+        }
+        match self.pooled_stat(case_id, method) {
+            Some(s) => {
+                let x = s.score(self.generation);
+                if device.is_empty() {
+                    x
+                } else {
+                    x * CROSS_DEVICE_DISCOUNT
+                }
+            }
+            None => 0.0,
+        }
+    }
+
+    // ---- learned decision cases -----------------------------------------
+
+    /// Synthesize learned decision cases from the recorded evidence.
+    ///
+    /// Derived — not stored — so two stores holding the same stats always
+    /// agree on their learned cases, whatever order they were merged in.
+    /// Per (partition, curated case), with at least [`MIN_LEARN_EVIDENCE`]
+    /// attempts and [`MIN_LEARN_CONFIDENCE`] Wilson confidence:
+    ///
+    /// * **Promotion** — a method other than the curated first choice whose
+    ///   confidence-weighted score beats the first choice's *observed*
+    ///   score in the same partition (the first choice must have been
+    ///   tried there — an unmeasured comparison is not a contradiction).
+    /// * **Demotion** — the curated first choice failed every attempt: the
+    ///   evidence contradicts the curated recommendation outright.
+    /// * **Extension** — a winning method outside the case's curated
+    ///   `allowed_methods` (free-choice strategies can discover these): the
+    ///   evidence extends the curated method set.
+    pub fn learned_cases(&self) -> Vec<LearnedCase> {
+        let mut out = Vec::new();
+        for (device, cases) in &self.partitions {
+            for (case_id, methods) in cases {
+                self.synthesize_case(device, case_id, methods, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Learned cases for one (device, case) pair — what retrieval surfaces
+    /// in the audit trail. An empty `device` matches every partition.
+    /// Synthesis runs only over the requested slice of the store (this
+    /// sits in the per-round retrieval hot path).
+    pub fn learned_for(&self, device: &str, case_id: &str) -> Vec<LearnedCase> {
+        let mut out = Vec::new();
+        for (dev, cases) in &self.partitions {
+            if !device.is_empty() && dev.as_str() != device {
+                continue;
+            }
+            if let Some(methods) = cases.get(case_id) {
+                self.synthesize_case(dev, case_id, methods, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Synthesis core for one (partition, case): see [`SkillStore::learned_cases`].
+    fn synthesize_case(
+        &self,
+        device: &str,
+        case_id: &str,
+        methods: &CaseStats,
+        out: &mut Vec<LearnedCase>,
+    ) {
+        let curated = DECISION_TABLE.iter().find(|c| c.id == case_id);
+        let curated_first = curated.and_then(|c| c.allowed_methods.first().copied());
+        let first_stat = curated_first.and_then(|m| methods.get(&m));
+        let first_observed = first_stat.map(|s| s.attempts > 0).unwrap_or(false);
+        let first_score = first_stat.map(|s| s.score(self.generation)).unwrap_or(0.0);
+        for (&method, stat) in methods {
+            if stat.attempts < MIN_LEARN_EVIDENCE {
+                continue;
+            }
+            if Some(method) == curated_first {
+                // Contradiction of the curated recommendation itself: it
+                // consistently fails here. The evidence floor above is the
+                // whole gate — at MIN_LEARN_EVIDENCE all-failed attempts,
+                // the Wilson bound on the failure rate (recorded as the
+                // case's confidence) already clears any sane threshold.
+                if stat.wins == 0 {
+                    out.push(self.learned_case(
+                        device,
+                        case_id,
+                        method,
+                        stat,
+                        LearnedOrigin::Demotion,
+                    ));
+                }
+                continue;
+            }
+            let confidence = stat.wilson_lower_bound();
+            if confidence < MIN_LEARN_CONFIDENCE || stat.score(self.generation) <= 0.0 {
+                continue;
+            }
+            let in_curated = curated
+                .map(|c| c.allowed_methods.contains(&method))
+                .unwrap_or(true);
+            if !in_curated {
+                out.push(self.learned_case(
+                    device,
+                    case_id,
+                    method,
+                    stat,
+                    LearnedOrigin::Extension,
+                ));
+            } else if first_observed && stat.score(self.generation) > first_score {
+                // A promotion is only a *contradiction* when the curated
+                // first choice was actually measured in this partition.
+                out.push(self.learned_case(
+                    device,
+                    case_id,
+                    method,
+                    stat,
+                    LearnedOrigin::Promotion,
+                ));
+            }
+        }
+    }
+
+    fn learned_case(
+        &self,
+        device: &str,
+        case_id: &str,
+        method: MethodId,
+        stat: &MethodStat,
+        origin: LearnedOrigin,
+    ) -> LearnedCase {
+        let why = match origin {
+            LearnedOrigin::Promotion => format!(
+                "{} outperforms the curated first choice on {device} \
+                 ({}/{} wins, mean gain {:+.3})",
+                method.name(),
+                stat.wins,
+                stat.attempts,
+                stat.mean_gain()
+            ),
+            LearnedOrigin::Demotion => format!(
+                "curated first choice {} failed all {} attempt(s) on {device}",
+                method.name(),
+                stat.attempts
+            ),
+            LearnedOrigin::Extension => format!(
+                "{} wins outside the curated method set on {device} \
+                 ({}/{} wins, mean gain {:+.3})",
+                method.name(),
+                stat.wins,
+                stat.attempts,
+                stat.mean_gain()
+            ),
+        };
+        let confidence = match origin {
+            LearnedOrigin::Demotion => wilson_lower_bound(stat.attempts, stat.attempts),
+            _ => stat.wilson_lower_bound(),
+        };
+        LearnedCase {
+            device: device.to_string(),
+            base_case: case_id.to_string(),
+            method,
+            origin,
+            attempts: stat.attempts,
+            wins: stat.wins,
+            mean_gain: stat.mean_gain(),
+            confidence,
+            why,
+        }
+    }
+
+    // ---- maintenance ----------------------------------------------------
+
+    /// Drop stats that have not been re-observed for more than `max_age`
+    /// generations (then prune emptied cases/partitions). The
+    /// `observations` and `generation` counters are historical and remain
+    /// untouched. This is the `skills gc` CLI surface; run-dir stores are
+    /// derived from checkpoints and never need it.
+    pub fn gc(&mut self, max_age: u64) -> GcReport {
+        let mut report = GcReport {
+            max_age,
+            ..GcReport::default()
+        };
+        let gen = self.generation;
+        self.partitions.retain(|_, cases| {
+            cases.retain(|_, methods| {
+                let before = methods.len();
+                methods.retain(|_, stat| gen.saturating_sub(stat.last_gen) <= max_age);
+                report.dropped_stats += before - methods.len();
+                if methods.is_empty() {
+                    report.dropped_cases += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            if cases.is_empty() {
+                report.dropped_partitions += 1;
+                false
+            } else {
+                true
+            }
+        });
+        report
+    }
+
+    /// Render the store for the `skills inspect` CLI: header, per-partition
+    /// stat tables (optionally filtered by partition key / case-id
+    /// substring), and the synthesized learned cases.
+    pub fn render_inspect(&self, device: Option<&str>, case: Option<&str>) -> String {
+        let mut out = format!(
+            "skill store v3: generation {}, {} observation(s), {} partition(s), {} case(s)\n",
+            self.generation,
+            self.observations,
+            self.partitions.len(),
+            self.case_count()
+        );
+        if self.is_empty() {
+            out.push_str("(no recorded stats)\n");
+            return out;
+        }
+        if let Some(d) = device {
+            if !self.partitions.contains_key(d) {
+                out.push_str(&format!("(no partition {d:?}; known: {:?})\n", self.partition_names()));
+                return out;
+            }
+        }
+        for (dev, cases) in &self.partitions {
+            if device.map(|d| d != dev.as_str()).unwrap_or(false) {
+                continue;
+            }
+            out.push_str(&format!("partition {dev}:\n"));
+            for (case_id, methods) in cases {
+                if case.map(|c| !case_id.contains(c)).unwrap_or(false) {
+                    continue;
+                }
+                out.push_str(&format!("  case {case_id}:\n"));
+                for (method, s) in methods {
+                    out.push_str(&format!(
+                        "    {:<24} attempts {:>4}  wins {:>4}  win% {:>5.1}  conf {:.2}  \
+                         mean gain {:+.3}  last_gen {:>3}  staleness x{:.2}  score {:+.4}\n",
+                        method.name(),
+                        s.attempts,
+                        s.wins,
+                        100.0 * s.win_rate(),
+                        s.wilson_lower_bound(),
+                        s.mean_gain(),
+                        s.last_gen,
+                        s.staleness_weight(self.generation),
+                        s.score(self.generation)
+                    ));
+                }
+            }
+        }
+        let learned = self.learned_cases();
+        if !learned.is_empty() {
+            out.push_str("learned decision cases:\n");
+            for lc in learned {
+                if device.map(|d| d != lc.device).unwrap_or(false) {
+                    continue;
+                }
+                if case.map(|c| !lc.base_case.contains(c)).unwrap_or(false) {
+                    continue;
+                }
+                out.push_str(&format!("  {}\n", lc.render()));
+            }
+        }
+        out
+    }
+
+    fn partition_names(&self) -> Vec<&str> {
+        self.partitions.keys().map(|k| k.as_str()).collect()
     }
 
     // ---- persistence ----------------------------------------------------
 
+    /// Serialize to the canonical v3 JSON form (see
+    /// `docs/memory-formats.md`). Equal stores serialize to equal bytes:
+    /// maps are sorted, gain totals use the canonical exact decomposition,
+    /// and the `learned` section is derived deterministically from the
+    /// stats.
     pub fn to_json(&self) -> Json {
-        let cases = self
-            .cases
+        let partitions = self
+            .partitions
             .iter()
-            .map(|(case, methods)| {
-                let m = methods
+            .map(|(device, cases)| {
+                let cs = cases
                     .iter()
-                    .map(|(method, s)| {
-                        // `gain_parts` is the canonical exact decomposition
-                        // (f64 Display round-trips exactly), `total_gain`
-                        // the rounded convenience value. Canonical parts
-                        // make equal stores serialize to equal bytes.
-                        (
-                            method.name().to_string(),
-                            json::obj(vec![
-                                ("attempts", json::num(s.attempts as f64)),
-                                ("wins", json::num(s.wins as f64)),
-                                ("total_gain", json::num(s.total_gain())),
+                    .map(|(case, methods)| {
+                        let m = methods
+                            .iter()
+                            .map(|(method, s)| {
+                                // `gain_parts` is the canonical exact
+                                // decomposition (f64 Display round-trips
+                                // exactly), `total_gain` the rounded
+                                // convenience value. Canonical parts make
+                                // equal stores serialize to equal bytes.
                                 (
-                                    "gain_parts",
-                                    json::arr(
-                                        s.gain.canonical().iter().map(|&p| json::num(p)).collect(),
-                                    ),
-                                ),
-                            ]),
-                        )
+                                    method.name().to_string(),
+                                    json::obj(vec![
+                                        ("attempts", json::num(s.attempts as f64)),
+                                        ("wins", json::num(s.wins as f64)),
+                                        ("total_gain", json::num(s.total_gain())),
+                                        (
+                                            "gain_parts",
+                                            json::arr(
+                                                s.gain
+                                                    .canonical()
+                                                    .iter()
+                                                    .map(|&p| json::num(p))
+                                                    .collect(),
+                                            ),
+                                        ),
+                                        ("last_gen", json::num(s.last_gen as f64)),
+                                    ]),
+                                )
+                            })
+                            .collect();
+                        (case.clone(), Json::Obj(m))
                     })
                     .collect();
-                (case.clone(), Json::Obj(m))
+                (device.clone(), Json::Obj(cs))
+            })
+            .collect();
+        let learned = self
+            .learned_cases()
+            .iter()
+            .map(|lc| {
+                json::obj(vec![
+                    ("id", json::s(&lc.id())),
+                    ("origin", json::s(lc.origin.name())),
+                    ("device", json::s(&lc.device)),
+                    ("case", json::s(&lc.base_case)),
+                    ("method", json::s(lc.method.name())),
+                    ("attempts", json::num(lc.attempts as f64)),
+                    ("wins", json::num(lc.wins as f64)),
+                    ("mean_gain", json::num(lc.mean_gain)),
+                    ("confidence", json::num(lc.confidence)),
+                    ("why", json::s(&lc.why)),
+                ])
             })
             .collect();
         json::obj(vec![
-            ("version", json::num(2.0)),
+            ("version", json::num(3.0)),
+            ("generation", json::num(self.generation as f64)),
             ("observations", json::num(self.observations as f64)),
-            ("cases", Json::Obj(cases)),
+            ("partitions", Json::Obj(partitions)),
+            ("learned", Json::Arr(learned)),
         ])
     }
 
+    /// Parse any store version. v3 reads the partitioned form (the
+    /// `learned` section is derived data and ignored); v1/v2 stores — a
+    /// flat top-level `cases` map, with (`v2`) or without (`v1`) exact
+    /// `gain_parts` — load into the [`LEGACY_DEVICE`] partition at
+    /// generation 1 and re-save canonically as v3.
     pub fn from_json(j: &Json) -> Result<SkillStore, String> {
         let mut store = SkillStore::new();
         store.observations = j
             .get("observations")
             .and_then(|v| v.as_f64())
             .unwrap_or(0.0) as u64;
+        if let Some(partitions) = j.get("partitions").and_then(|p| p.as_obj()) {
+            // v3 form.
+            store.generation = j.get("generation").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            for (device, cases) in partitions {
+                let cases = cases
+                    .as_obj()
+                    .ok_or_else(|| format!("partition {device}: not an object"))?;
+                for (case, methods) in cases {
+                    let parsed = parse_case(case, methods, None)?;
+                    if !parsed.is_empty() {
+                        store
+                            .partitions
+                            .entry(device.clone())
+                            .or_default()
+                            .insert(case.clone(), parsed);
+                    }
+                }
+            }
+            return Ok(store);
+        }
+        // v1/v2 form: flat cases, no device partitions, no generation.
         let cases = j
             .get("cases")
             .and_then(|c| c.as_obj())
-            .ok_or_else(|| "skill store missing cases".to_string())?;
+            .ok_or_else(|| "skill store missing cases/partitions".to_string())?;
         for (case, methods) in cases {
-            let methods = methods
-                .as_obj()
-                .ok_or_else(|| format!("case {case}: not an object"))?;
-            let mut out = BTreeMap::new();
-            for (mname, stat) in methods {
-                let Some(method) = MethodId::from_name(mname) else {
-                    // Unknown method (newer writer): skip, keep the rest.
-                    continue;
-                };
-                let get = |k: &str| stat.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
-                // Exact parts when present; v1 stores (rounded total only)
-                // load the rounded value as the single component.
-                let gain = match stat.get("gain_parts").and_then(|v| v.as_arr()) {
-                    Some(parts) => {
-                        let vals: Vec<f64> = parts.iter().filter_map(|p| p.as_f64()).collect();
-                        ExactSum::from_parts(&vals)
-                    }
-                    None => ExactSum::from_parts(&[get("total_gain")]),
-                };
-                out.insert(
-                    method,
-                    MethodStat {
-                        attempts: get("attempts") as u64,
-                        wins: get("wins") as u64,
-                        gain,
-                    },
-                );
+            let parsed = parse_case(case, methods, Some(1))?;
+            if !parsed.is_empty() {
+                store
+                    .partitions
+                    .entry(LEGACY_DEVICE.to_string())
+                    .or_default()
+                    .insert(case.clone(), parsed);
             }
-            store.cases.insert(case.clone(), out);
+        }
+        if !store.partitions.is_empty() || store.observations > 0 {
+            store.generation = 1;
         }
         Ok(store)
     }
@@ -279,15 +823,55 @@ impl SkillStore {
     }
 }
 
+/// Parse one case's method map. `legacy_gen` forces the freshness stamp
+/// (v1/v2 stores recorded none); v3 reads the stored `last_gen`.
+fn parse_case(case: &str, methods: &Json, legacy_gen: Option<u64>) -> Result<CaseStats, String> {
+    let methods = methods
+        .as_obj()
+        .ok_or_else(|| format!("case {case}: not an object"))?;
+    let mut out = CaseStats::new();
+    for (mname, stat) in methods {
+        let Some(method) = MethodId::from_name(mname) else {
+            // Unknown method (newer writer): skip, keep the rest.
+            continue;
+        };
+        let get = |k: &str| stat.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        // Exact parts when present; v1 stores (rounded total only) load
+        // the rounded value as the single component.
+        let gain = match stat.get("gain_parts").and_then(|v| v.as_arr()) {
+            Some(parts) => {
+                let vals: Vec<f64> = parts.iter().filter_map(|p| p.as_f64()).collect();
+                ExactSum::from_parts(&vals)
+            }
+            None => ExactSum::from_parts(&[get("total_gain")]),
+        };
+        out.insert(
+            method,
+            MethodStat {
+                attempts: get("attempts") as u64,
+                wins: get("wins") as u64,
+                gain,
+                last_gen: legacy_gen.unwrap_or_else(|| get("last_gen").max(1.0) as u64),
+            },
+        );
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn obs(case: &str, m: MethodId, gain: Option<f64>) -> SkillObs {
+        obs_on(LEGACY_DEVICE, case, m, gain)
+    }
+
+    fn obs_on(device: &str, case: &str, m: MethodId, gain: Option<f64>) -> SkillObs {
         SkillObs {
             case_id: case.to_string(),
             method: m,
             gain,
+            device: device.to_string(),
         }
     }
 
@@ -297,11 +881,13 @@ mod tests {
         s.observe(&obs("c", MethodId::TileSmem, Some(1.0)));
         s.observe(&obs("c", MethodId::TileSmem, Some(3.0)));
         s.observe(&obs("c", MethodId::TileSmem, None));
-        let st = s.stat("c", MethodId::TileSmem).unwrap();
+        let st = s.stat_in(LEGACY_DEVICE, "c", MethodId::TileSmem).unwrap();
         assert_eq!(st.attempts, 3);
         assert_eq!(st.wins, 2);
         assert_eq!(st.mean_gain(), 2.0);
+        assert_eq!(st.last_gen, 1);
         assert_eq!(s.observations, 3);
+        assert_eq!(s.generation, 1, "cold folds land in epoch 1");
     }
 
     #[test]
@@ -315,6 +901,21 @@ mod tests {
         s2.merge(&b);
         s2.merge(&a);
         assert_eq!(s1, s2);
+        assert_eq!(s1.to_json().to_string(), s2.to_json().to_string());
+    }
+
+    #[test]
+    fn partitions_isolate_devices() {
+        let mut s = SkillStore::new();
+        s.observe(&obs_on("a100-like", "c", MethodId::TileSmem, Some(2.0)));
+        s.observe(&obs_on("tpu-like", "c", MethodId::TileSmem, None));
+        let a = s.stat_in("a100-like", "c", MethodId::TileSmem).unwrap();
+        let t = s.stat_in("tpu-like", "c", MethodId::TileSmem).unwrap();
+        assert_eq!((a.attempts, a.wins), (1, 1));
+        assert_eq!((t.attempts, t.wins), (1, 0));
+        let pooled = s.pooled_stat("c", MethodId::TileSmem).unwrap();
+        assert_eq!((pooled.attempts, pooled.wins), (2, 1));
+        assert_eq!(s.case_count(), 1);
     }
 
     #[test]
@@ -328,7 +929,7 @@ mod tests {
             MethodId::TileSmem,
             MethodId::VectorizeLoads,
         ];
-        s.rerank("c", &mut methods);
+        s.rerank(LEGACY_DEVICE, "c", &mut methods);
         assert_eq!(
             methods,
             vec![MethodId::VectorizeLoads, MethodId::TileSmem, MethodId::DoubleBuffer]
@@ -339,8 +940,66 @@ mod tests {
     fn rerank_unknown_case_is_noop() {
         let s = SkillStore::new();
         let mut methods = vec![MethodId::TileSmem, MethodId::SplitK];
-        s.rerank("nope", &mut methods);
+        s.rerank(LEGACY_DEVICE, "nope", &mut methods);
         assert_eq!(methods, vec![MethodId::TileSmem, MethodId::SplitK]);
+    }
+
+    #[test]
+    fn rerank_prefers_matching_partition_over_pooled() {
+        // On the TPU partition SplitK failed; on the A100 partition it won
+        // big. TPU retrieval must rank on its own partition's evidence, and
+        // a device with no evidence of its own sees the pooled view at a
+        // discount (still positive, so the method rises above untried).
+        let mut s = SkillStore::new();
+        s.observe(&obs_on("tpu-like", "c", MethodId::SplitK, None));
+        for _ in 0..3 {
+            s.observe(&obs_on("a100-like", "c", MethodId::SplitK, Some(3.0)));
+        }
+        assert!(s.rank_score("tpu-like", "c", MethodId::SplitK) < 0.0);
+        assert!(s.rank_score("a100-like", "c", MethodId::SplitK) > 0.0);
+        // A third device has no partition: pooled fallback, discounted.
+        let pooled = s.rank_score("", "c", MethodId::SplitK);
+        let other = s.rank_score("h100-like", "c", MethodId::SplitK);
+        assert!(other > 0.0 && other < pooled);
+        assert_eq!(other, pooled * CROSS_DEVICE_DISCOUNT);
+    }
+
+    #[test]
+    fn small_samples_shrink_toward_curated_prior() {
+        // One observation moves the score far less than its raw mean.
+        let mut s = SkillStore::new();
+        s.observe(&obs("c", MethodId::TileSmem, Some(3.0)));
+        let one = s.rank_score(LEGACY_DEVICE, "c", MethodId::TileSmem);
+        assert!(one < 3.0 / 1.0, "shrinkage must pull below the raw mean");
+        for _ in 0..9 {
+            s.observe(&obs("c", MethodId::TileSmem, Some(3.0)));
+        }
+        let ten = s.rank_score(LEGACY_DEVICE, "c", MethodId::TileSmem);
+        assert!(ten > one, "more evidence must increase the score");
+    }
+
+    #[test]
+    fn stale_stats_decay_toward_the_prior() {
+        let mut s = SkillStore::new();
+        s.observe(&obs("c", MethodId::TileSmem, Some(2.0)));
+        let fresh = s.rank_score(LEGACY_DEVICE, "c", MethodId::TileSmem);
+        for _ in 0..10 {
+            s.advance_generation();
+        }
+        let stale = s.rank_score(LEGACY_DEVICE, "c", MethodId::TileSmem);
+        assert!(stale > 0.0 && stale < fresh, "fresh {fresh} stale {stale}");
+        let st = s.stat_in(LEGACY_DEVICE, "c", MethodId::TileSmem).unwrap();
+        assert!(st.staleness_weight(s.generation) < 1.0);
+        assert_eq!(st.staleness_weight(st.last_gen), 1.0);
+    }
+
+    #[test]
+    fn wilson_bound_is_sane() {
+        assert_eq!(wilson_lower_bound(0, 0), 0.0);
+        let one = wilson_lower_bound(1, 1);
+        let ten = wilson_lower_bound(10, 10);
+        assert!(one > 0.0 && one < ten && ten < 1.0);
+        assert!(wilson_lower_bound(0, 10) < wilson_lower_bound(5, 10));
     }
 
     #[test]
@@ -348,10 +1007,13 @@ mod tests {
         let mut s = SkillStore::new();
         s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, Some(1.2345678901234)));
         s.observe(&obs("gemm.naive_loop", MethodId::UseTensorCore, None));
-        s.observe(&obs("fusion.elementwise_chain", MethodId::FuseElementwise, Some(0.25)));
+        s.observe(&obs_on("tpu-like", "fusion.elementwise_chain", MethodId::FuseElementwise, Some(0.25)));
+        s.advance_generation();
+        s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, Some(0.5)));
         let j = s.to_json();
         let back = SkillStore::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(s, back);
+        assert_eq!(j.to_string(), back.to_json().to_string());
     }
 
     #[test]
@@ -370,19 +1032,22 @@ mod tests {
     fn load_missing_is_cold() {
         let s = SkillStore::load(Path::new("/nonexistent/skills.json")).unwrap();
         assert!(s.is_empty());
+        assert_eq!(s.generation, 0);
     }
 
     // ---- store-level merge: the sharding contract ----------------------
 
     /// Gains chosen so naive f64 summation is order-sensitive; exact
-    /// accumulation must not be.
+    /// accumulation must not be. Spreads observations across two device
+    /// partitions so the partitioned merge algebra is exercised too.
     fn shard_store(tag: u64) -> SkillStore {
         let mut s = SkillStore::new();
         let gains = [0.1, 0.2, 1e15, -1e15, 0.30000000000000004, 1e-9];
         for (i, g) in gains.iter().enumerate() {
             let gain = if i as u64 % 3 == tag % 3 { None } else { Some(g * (tag as f64 + 0.5)) };
-            s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, gain));
-            s.observe(&obs("fusion.elementwise_chain", MethodId::FuseElementwise, gain));
+            let device = if i % 2 == 0 { "a100-like" } else { "tpu-like" };
+            s.observe(&obs_on(device, "gemm.naive_loop", MethodId::TileSmem, gain));
+            s.observe(&obs_on(device, "fusion.elementwise_chain", MethodId::FuseElementwise, gain));
         }
         s
     }
@@ -459,11 +1124,198 @@ mod tests {
     }
 
     #[test]
+    fn generation_merges_by_max_and_stamps_survive() {
+        let mut old = SkillStore::new();
+        old.observe(&obs("c", MethodId::TileSmem, Some(1.0))); // gen 1
+        let mut new = SkillStore::new();
+        new.generation = 4;
+        new.observe(&obs("c", MethodId::SplitK, Some(1.0))); // stamped 4
+        let mut ab = old.clone();
+        ab.merge_store(&new);
+        let mut ba = new.clone();
+        ba.merge_store(&old);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.generation, 4);
+        assert_eq!(ab.stat_in(LEGACY_DEVICE, "c", MethodId::TileSmem).unwrap().last_gen, 1);
+        assert_eq!(ab.stat_in(LEGACY_DEVICE, "c", MethodId::SplitK).unwrap().last_gen, 4);
+    }
+
+    #[test]
     fn v1_store_without_gain_parts_still_loads() {
         let text = r#"{"version":1,"observations":2,"cases":{"c":{"tile_smem":{"attempts":2,"wins":1,"total_gain":0.75}}}}"#;
         let s = SkillStore::from_json(&Json::parse(text).unwrap()).unwrap();
-        let st = s.stat("c", MethodId::TileSmem).unwrap();
+        let st = s.stat_in(LEGACY_DEVICE, "c", MethodId::TileSmem).unwrap();
         assert_eq!(st.attempts, 2);
         assert_eq!(st.total_gain(), 0.75);
+        assert_eq!(st.last_gen, 1, "legacy stats load at generation 1");
+        assert_eq!(s.generation, 1);
+    }
+
+    #[test]
+    fn v2_store_loads_into_legacy_partition() {
+        let text = r#"{"version":2,"observations":3,"cases":{"c":{"tile_smem":{"attempts":3,"wins":2,"gain_parts":[1.75],"total_gain":1.75}}}}"#;
+        let s = SkillStore::from_json(&Json::parse(text).unwrap()).unwrap();
+        let st = s.stat_in(LEGACY_DEVICE, "c", MethodId::TileSmem).unwrap();
+        assert_eq!((st.attempts, st.wins), (3, 2));
+        assert_eq!(st.total_gain(), 1.75);
+        let v3 = s.to_json().to_string();
+        assert!(v3.contains("\"version\":3") && v3.contains("\"partitions\""));
+    }
+
+    // ---- learned decision cases ----------------------------------------
+
+    #[test]
+    fn consistent_contradiction_synthesizes_a_promotion() {
+        // gemm.exposed_pipeline's curated priority is [DoubleBuffer,
+        // VectorizeLoads]; feed the store evidence that VectorizeLoads
+        // consistently beats the curated first choice.
+        let mut s = SkillStore::new();
+        for _ in 0..8 {
+            s.observe(&obs("gemm.exposed_pipeline", MethodId::VectorizeLoads, Some(2.0)));
+            s.observe(&obs("gemm.exposed_pipeline", MethodId::DoubleBuffer, Some(0.05)));
+        }
+        let learned = s.learned_for(LEGACY_DEVICE, "gemm.exposed_pipeline");
+        assert!(
+            learned
+                .iter()
+                .any(|c| c.method == MethodId::VectorizeLoads && c.origin == LearnedOrigin::Promotion),
+            "{learned:?}"
+        );
+    }
+
+    #[test]
+    fn promotion_requires_the_first_choice_to_have_been_observed() {
+        // VectorizeLoads wins big, but the curated first choice
+        // (DoubleBuffer) was never tried in this partition: there is no
+        // measured comparison, so no promotion may be synthesized.
+        let mut s = SkillStore::new();
+        for _ in 0..8 {
+            s.observe(&obs("gemm.exposed_pipeline", MethodId::VectorizeLoads, Some(2.0)));
+        }
+        assert!(
+            s.learned_for(LEGACY_DEVICE, "gemm.exposed_pipeline").is_empty(),
+            "unmeasured first choice must not be 'contradicted'"
+        );
+    }
+
+    #[test]
+    fn learned_for_matches_the_full_synthesis() {
+        // The hot-path slice synthesis must agree with the full scan.
+        let mut s = SkillStore::new();
+        for _ in 0..8 {
+            s.observe(&obs("gemm.exposed_pipeline", MethodId::VectorizeLoads, Some(2.0)));
+            s.observe(&obs("gemm.exposed_pipeline", MethodId::DoubleBuffer, Some(0.05)));
+            s.observe(&obs_on("tpu-like", "gemm.naive_loop", MethodId::TileSmem, None));
+        }
+        let full = s.learned_cases();
+        for lc in &full {
+            let sliced = s.learned_for(&lc.device, &lc.base_case);
+            assert!(sliced.contains(lc), "{lc:?} missing from sliced synthesis");
+        }
+        let n_sliced: usize = [
+            s.learned_for(LEGACY_DEVICE, "gemm.exposed_pipeline").len(),
+            s.learned_for("tpu-like", "gemm.naive_loop").len(),
+        ]
+        .iter()
+        .sum();
+        assert_eq!(n_sliced, full.len());
+    }
+
+    #[test]
+    fn consistent_failure_of_first_choice_synthesizes_a_demotion() {
+        let mut s = SkillStore::new();
+        for _ in 0..8 {
+            s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, None));
+        }
+        let learned = s.learned_for(LEGACY_DEVICE, "gemm.naive_loop");
+        assert!(
+            learned
+                .iter()
+                .any(|c| c.method == MethodId::TileSmem && c.origin == LearnedOrigin::Demotion),
+            "{learned:?}"
+        );
+    }
+
+    #[test]
+    fn off_table_winner_synthesizes_an_extension() {
+        // KernelFission is not in gemm.naive_loop's curated method set.
+        let mut s = SkillStore::new();
+        for _ in 0..8 {
+            s.observe(&obs("gemm.naive_loop", MethodId::KernelFission, Some(1.0)));
+        }
+        let learned = s.learned_for(LEGACY_DEVICE, "gemm.naive_loop");
+        assert!(
+            learned
+                .iter()
+                .any(|c| c.method == MethodId::KernelFission && c.origin == LearnedOrigin::Extension),
+            "{learned:?}"
+        );
+    }
+
+    #[test]
+    fn thin_evidence_synthesizes_nothing() {
+        let mut s = SkillStore::new();
+        s.observe(&obs("gemm.naive_loop", MethodId::VectorizeLoads, Some(10.0)));
+        assert!(s.learned_cases().is_empty(), "one lucky obs is not a skill");
+    }
+
+    #[test]
+    fn learned_cases_are_partition_scoped() {
+        let mut s = SkillStore::new();
+        for _ in 0..8 {
+            s.observe(&obs_on("tpu-like", "gemm.naive_loop", MethodId::TileSmem, None));
+        }
+        assert!(!s.learned_for("tpu-like", "gemm.naive_loop").is_empty());
+        assert!(s.learned_for("a100-like", "gemm.naive_loop").is_empty());
+        // Empty device filter sees every partition's learned cases.
+        assert!(!s.learned_for("", "gemm.naive_loop").is_empty());
+    }
+
+    // ---- gc + inspect ---------------------------------------------------
+
+    #[test]
+    fn gc_drops_only_stale_stats() {
+        let mut s = SkillStore::new();
+        s.observe(&obs("old", MethodId::TileSmem, Some(1.0))); // gen 1
+        for _ in 0..5 {
+            s.advance_generation();
+        }
+        s.observe(&obs("fresh", MethodId::SplitK, Some(1.0))); // gen 6
+        let report = s.gc(3);
+        assert_eq!(report.dropped_stats, 1);
+        assert_eq!(report.dropped_cases, 1);
+        assert!(s.stat_in(LEGACY_DEVICE, "old", MethodId::TileSmem).is_none());
+        assert!(s.stat_in(LEGACY_DEVICE, "fresh", MethodId::SplitK).is_some());
+        assert_eq!(s.generation, 6, "gc never rewinds the clock");
+        assert!(report.render().contains("dropped 1 stat"));
+    }
+
+    #[test]
+    fn gc_prunes_emptied_partitions() {
+        let mut s = SkillStore::new();
+        s.observe(&obs_on("tpu-like", "c", MethodId::TileSmem, Some(1.0)));
+        for _ in 0..10 {
+            s.advance_generation();
+        }
+        let report = s.gc(2);
+        assert_eq!(report.dropped_partitions, 1);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn inspect_renders_partitions_and_filters() {
+        let mut s = SkillStore::new();
+        s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, Some(1.0)));
+        s.observe(&obs_on("tpu-like", "fusion.elementwise_chain", MethodId::FuseElementwise, None));
+        let all = s.render_inspect(None, None);
+        assert!(all.contains("partition a100-like"));
+        assert!(all.contains("partition tpu-like"));
+        assert!(all.contains("tile_smem"));
+        let filtered = s.render_inspect(Some("tpu-like"), None);
+        assert!(!filtered.contains("tile_smem"));
+        assert!(filtered.contains("fuse_elementwise"));
+        let missing = s.render_inspect(Some("h100-like"), None);
+        assert!(missing.contains("no partition"));
+        assert!(SkillStore::new().render_inspect(None, None).contains("no recorded stats"));
     }
 }

@@ -1,5 +1,13 @@
 //! The dual-level memory bank (§4.2): cross-task long-term expert knowledge
 //! and per-task short-term trajectory state.
+//!
+//! The long-term side is itself two-layered — a curated knowledge base
+//! (`long_term::kb_content`) and a learned, device-partitioned skill store
+//! (`long_term::skill_store`) that persists across tasks, seeds,
+//! strategies, and processes. See `docs/architecture.md` for the dataflow
+//! and `docs/memory-formats.md` for every on-disk format.
+
+#![warn(missing_docs)]
 
 pub mod long_term;
 pub mod short_term;

@@ -11,23 +11,27 @@ use crate::kir::transforms::MethodId;
 /// Outcome of one optimization round against a base kernel.
 #[derive(Debug, Clone)]
 pub struct OptAttempt {
+    /// Method the Planner selected for the round.
     pub method: MethodId,
     /// Speedup (vs eager) the resulting kernel achieved; None = the round
     /// ended in an unrepaired failure.
     pub speedup: Option<f64>,
     /// Did this attempt get promoted to the new base?
     pub promoted: bool,
+    /// Round number the attempt happened in.
     pub round: u32,
 }
 
 /// Per-task optimization memory.
 #[derive(Debug, Clone)]
 pub struct OptMemory {
-    /// Promotion thresholds (paper: rt = 0.3, at = 0.3).
+    /// Relative promotion threshold (paper: rt = 0.3).
     pub rt: f64,
+    /// Absolute promotion threshold (paper: at = 0.3).
     pub at: f64,
-    /// Version + speedup of the current base kernel.
+    /// Version of the current base kernel.
     pub base_version: u32,
+    /// Speedup of the current base kernel.
     pub base_speedup: f64,
     /// Attempts made against the current base (cleared on promotion).
     pub attempts_on_base: Vec<OptAttempt>,
@@ -38,6 +42,7 @@ pub struct OptMemory {
 }
 
 impl OptMemory {
+    /// Fresh per-task memory with the selected seed as base kernel #0.
     pub fn new(rt: f64, at: f64, seed_speedup: f64) -> Self {
         OptMemory {
             rt,

@@ -24,6 +24,7 @@ pub struct RepairAttempt {
 /// A chain of repair attempts on one broken lineage (Figure 2).
 #[derive(Debug, Clone, Default)]
 pub struct RepairChain {
+    /// Attempts in chain order, outcomes included.
     pub attempts: Vec<RepairAttempt>,
     /// Version of the kernel that first broke (chain root).
     pub root_version: u32,
@@ -32,11 +33,14 @@ pub struct RepairChain {
 /// The per-task repair memory: the active chain plus closed history.
 #[derive(Debug, Clone, Default)]
 pub struct RepairMemory {
+    /// Chain currently being repaired, if any.
     pub active: Option<RepairChain>,
+    /// Chains that ended (repair succeeded or the lineage was abandoned).
     pub closed: Vec<RepairChain>,
 }
 
 impl RepairMemory {
+    /// Fresh per-task memory with no chains.
     pub fn new() -> Self {
         Self::default()
     }

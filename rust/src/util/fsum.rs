@@ -16,6 +16,29 @@
 //!
 //! Finite inputs only: infinities/NaNs would poison the expansion, and the
 //! cost model never produces them.
+//!
+//! # Example: order-independent shard merges
+//!
+//! Two shards accumulate gains in different orders; folding either into
+//! the other produces the same exact value *and* the same canonical
+//! serialization — which is why merged `skills.json` files are
+//! byte-identical to single-process ones:
+//!
+//! ```
+//! use kernelskill::util::fsum::ExactSum;
+//!
+//! let mut a_then_b = ExactSum::from_parts(&[0.1, 1e16]);
+//! a_then_b.add_sum(&ExactSum::from_parts(&[0.2, -1e16]));
+//!
+//! let mut b_then_a = ExactSum::from_parts(&[0.2, -1e16]);
+//! b_then_a.add_sum(&ExactSum::from_parts(&[0.1, 1e16]));
+//!
+//! assert_eq!(a_then_b, b_then_a);
+//! assert_eq!(a_then_b.canonical(), b_then_a.canonical());
+//! assert_eq!(a_then_b.value(), b_then_a.value());
+//! ```
+
+#![warn(missing_docs)]
 
 /// Error-free transform: returns `(s, e)` with `s = fl(a + b)` and
 /// `a + b = s + e` exactly (Knuth two-sum; no magnitude precondition).
@@ -36,6 +59,7 @@ pub struct ExactSum {
 }
 
 impl ExactSum {
+    /// An empty accumulator (exact value 0).
     pub fn new() -> ExactSum {
         ExactSum::default()
     }
@@ -50,6 +74,7 @@ impl ExactSum {
         s
     }
 
+    /// True when the exact value is 0 (the expansion has no components).
     pub fn is_zero(&self) -> bool {
         self.parts.is_empty()
     }

@@ -320,9 +320,15 @@ fn warm_memory_loads_from_disk_and_shows_in_audit() {
     let store = SkillStore::load(&mem.join("skills.json")).unwrap();
     assert!(store.observations > 0);
     let stat = store
-        .stat("gemm.naive_loop", MethodId::TileSmem)
+        .pooled_stat("gemm.naive_loop", MethodId::TileSmem)
         .expect("appendix-D run must record the TileSmem skill");
     assert!(stat.attempts > 0);
+    // v3: suite runs record under the device partition they ran on (the
+    // default LoopConfig device is the A100-like preset).
+    assert!(
+        store.stat_in("a100-like", "gemm.naive_loop", MethodId::TileSmem).is_some(),
+        "observations must land in the matching device partition"
+    );
 
     // Warm-started retrieval reflects the persisted skills in its audit.
     let task = bench_suite::level_suite(42, 2)
@@ -334,7 +340,7 @@ fn warm_memory_loads_from_disk_and_shows_in_audit() {
     let cost = price(&task.graph, &sched, &dev);
     let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
     let feats = ground_truth(&task.graph, &sched);
-    let r = retrieval::retrieve_for_with(&task, &feats, &raw, Some(&store));
+    let r = retrieval::retrieve_for_with(&task, &feats, &raw, Some(&store), dev.name);
     let audit = r.audit();
     assert!(
         audit.contains("skills (persistent long-term memory)"),

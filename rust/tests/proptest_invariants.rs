@@ -10,6 +10,7 @@ use kernelskill::kir::graph::KernelGraph;
 use kernelskill::kir::op::{EwKind, NormKind, OpKind, RedKind};
 use kernelskill::kir::schedule::Schedule;
 use kernelskill::kir::transforms::{self, ALL_METHODS};
+use kernelskill::memory::long_term::{SkillObs, SkillStore};
 use kernelskill::memory::short_term::OptMemory;
 use kernelskill::util::rng::Rng;
 
@@ -205,6 +206,70 @@ fn prop_shard_slices_are_a_disjoint_exact_cover() {
             owners.iter().all(|&c| c == 1),
             "{n_tasks}x{n_seeds} matrix, {count} shards: not a disjoint exact cover"
         );
+    }
+}
+
+#[test]
+fn prop_confidence_rerank_is_invariant_under_shard_merge_order() {
+    // The v3 contract: however a multiset of observations is partitioned
+    // into shard stores and in whatever order those stores are merged, the
+    // merged store serializes to the same bytes AND ranks methods
+    // identically (confidence weighting, device partitions, and staleness
+    // decay included) as the store a single process would have built.
+    let cases = ["gemm.naive_loop", "gemm.exposed_pipeline", "access.strided"];
+    let devices = ["a100-like", "tpu-like"];
+    let mut rng = Rng::new(109);
+    for _ in 0..40 {
+        let n_obs = rng.range_usize(1, 60);
+        let obs: Vec<SkillObs> = (0..n_obs)
+            .map(|_| SkillObs {
+                case_id: cases[rng.range_usize(0, cases.len())].to_string(),
+                method: *rng.choose(&ALL_METHODS),
+                gain: if rng.chance(0.3) {
+                    None
+                } else {
+                    Some(rng.log_uniform(0.01, 10.0) - 1.0)
+                },
+                device: devices[rng.range_usize(0, devices.len())].to_string(),
+            })
+            .collect();
+
+        let mut reference = SkillStore::new();
+        reference.merge(&obs);
+        let reference_bytes = reference.to_json().to_string();
+
+        for &shards in &[2usize, 3, 5] {
+            // Round-robin partition, then merge the shard stores in a
+            // random order.
+            let mut stores: Vec<SkillStore> = (0..shards).map(|_| SkillStore::new()).collect();
+            for (i, o) in obs.iter().enumerate() {
+                stores[i % shards].observe(o);
+            }
+            let mut order: Vec<usize> = (0..shards).collect();
+            rng.shuffle(&mut order);
+            let mut merged = SkillStore::new();
+            for &i in &order {
+                merged.merge_store(&stores[i]);
+            }
+            assert_eq!(merged, reference, "{shards} shards, order {order:?}");
+            assert_eq!(
+                merged.to_json().to_string(),
+                reference_bytes,
+                "merge must be byte-identical ({shards} shards, order {order:?})"
+            );
+            // Rerank parity on every (device, case) the run could consult —
+            // including a device with no partition (pooled fallback) and
+            // the pooled view itself.
+            for device in devices.iter().copied().chain(["h100-like", ""]) {
+                for case in &cases {
+                    let mut a: Vec<_> = ALL_METHODS.to_vec();
+                    let mut b: Vec<_> = ALL_METHODS.to_vec();
+                    reference.rerank(device, case, &mut a);
+                    merged.rerank(device, case, &mut b);
+                    assert_eq!(a, b, "rerank diverged for ({device:?}, {case})");
+                }
+            }
+        }
     }
 }
 

@@ -1,0 +1,136 @@
+//! Golden-file compatibility battery for the skill-store on-disk contract
+//! (`docs/memory-formats.md`): v1 and v2 `skills.json` fixtures must keep
+//! loading forever, and re-saving them must produce the canonical v3 form
+//! — idempotently, so one byte representation exists per store state.
+
+use std::path::{Path, PathBuf};
+
+use kernelskill::kir::transforms::MethodId;
+use kernelskill::memory::long_term::skill_store::LEGACY_DEVICE;
+use kernelskill::memory::long_term::{SkillObs, SkillStore};
+use kernelskill::util::json::Json;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ks-compat-{tag}-{}", std::process::id()))
+}
+
+/// Load a store, then assert that serialization is a fixed point: the
+/// first re-save is canonical v3 and further load/save cycles reproduce it
+/// byte for byte.
+fn assert_canonical_v3_resave(store: &SkillStore) -> String {
+    let v3 = store.to_json().to_string();
+    assert!(v3.contains("\"version\":3"), "{v3}");
+    assert!(v3.contains("\"partitions\""), "{v3}");
+    assert!(v3.contains("\"generation\""), "{v3}");
+    assert!(v3.contains("\"last_gen\""), "{v3}");
+    let back = SkillStore::from_json(&Json::parse(&v3).unwrap()).unwrap();
+    assert_eq!(&back, store, "reload must reproduce the store exactly");
+    assert_eq!(back.to_json().to_string(), v3, "serialization must be idempotent");
+    v3
+}
+
+#[test]
+fn v1_golden_file_loads_and_resaves_as_v3() {
+    let store = SkillStore::load(&fixture("skills_v1.json")).unwrap();
+    assert_eq!(store.observations, 4);
+    assert_eq!(store.generation, 1, "legacy stores load at generation 1");
+    // All v1 data lands in the legacy (A100-like) partition.
+    assert_eq!(store.partitions.len(), 1);
+    let ts = store.stat_in(LEGACY_DEVICE, "gemm.naive_loop", MethodId::TileSmem).unwrap();
+    assert_eq!((ts.attempts, ts.wins), (3, 2));
+    assert_eq!(ts.total_gain(), 1.75);
+    assert_eq!(ts.last_gen, 1);
+    let db = store.stat_in(LEGACY_DEVICE, "gemm.naive_loop", MethodId::DoubleBuffer).unwrap();
+    assert_eq!((db.attempts, db.wins), (1, 0));
+    assert_canonical_v3_resave(&store);
+}
+
+#[test]
+fn v2_golden_file_loads_and_resaves_as_v3() {
+    let store = SkillStore::load(&fixture("skills_v2.json")).unwrap();
+    assert_eq!(store.observations, 6);
+    assert_eq!(store.generation, 1);
+    let ts = store.stat_in(LEGACY_DEVICE, "gemm.naive_loop", MethodId::TileSmem).unwrap();
+    assert_eq!(ts.total_gain(), 1.75);
+    let tc = store.stat_in(LEGACY_DEVICE, "gemm.naive_loop", MethodId::UseTensorCore).unwrap();
+    assert_eq!(tc.total_gain(), -0.5, "v2 exact gain_parts must load");
+    let fe = store
+        .stat_in(LEGACY_DEVICE, "fusion.elementwise_chain", MethodId::FuseElementwise)
+        .unwrap();
+    assert_eq!((fe.attempts, fe.wins), (1, 1));
+    assert_canonical_v3_resave(&store);
+}
+
+#[test]
+fn golden_files_resave_through_disk_round_trip() {
+    let dir = tmp_dir("resave");
+    let _ = std::fs::remove_dir_all(&dir);
+    for name in ["skills_v1.json", "skills_v2.json"] {
+        let store = SkillStore::load(&fixture(name)).unwrap();
+        let path = dir.join(name);
+        store.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"version\":3"), "{name} must re-save as v3");
+        let back = SkillStore::load(&path).unwrap();
+        assert_eq!(back, store, "{name}");
+        back.save(&path).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            text,
+            "{name}: save/load/save must be byte-stable"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_store_merges_cleanly_with_v3_partitions() {
+    // A migrated v2 store and a fresh v3 store with TPU-partition evidence
+    // must merge commutatively at the byte level.
+    let legacy = SkillStore::load(&fixture("skills_v2.json")).unwrap();
+    let mut fresh = SkillStore::new();
+    fresh.generation = 3;
+    fresh.observe(&SkillObs {
+        case_id: "gemm.naive_loop".to_string(),
+        method: MethodId::TileSmem,
+        gain: Some(0.5),
+        device: "tpu-like".to_string(),
+    });
+    let mut ab = legacy.clone();
+    ab.merge_store(&fresh);
+    let mut ba = fresh.clone();
+    ba.merge_store(&legacy);
+    assert_eq!(ab, ba);
+    assert_eq!(ab.to_json().to_string(), ba.to_json().to_string());
+    assert_eq!(ab.generation, 3);
+    // Both partitions survive, and the pooled view folds across them.
+    assert!(ab.stat_in(LEGACY_DEVICE, "gemm.naive_loop", MethodId::TileSmem).is_some());
+    assert!(ab.stat_in("tpu-like", "gemm.naive_loop", MethodId::TileSmem).is_some());
+    let pooled = ab.pooled_stat("gemm.naive_loop", MethodId::TileSmem).unwrap();
+    assert_eq!(pooled.attempts, 4);
+    assert_eq!(pooled.total_gain(), 2.25);
+}
+
+#[test]
+fn unknown_partition_and_method_entries_are_tolerated() {
+    // A newer writer may add device presets and methods this build does
+    // not know; loading must keep everything it understands.
+    let text = r#"{"version":3,"generation":2,"observations":3,"partitions":{
+        "a100-like":{"gemm.naive_loop":{"tile_smem":{"attempts":1,"wins":1,"total_gain":0.5,"gain_parts":[0.5],"last_gen":2},
+                                         "warp_specialize_v9":{"attempts":1,"wins":1,"total_gain":1,"gain_parts":[1],"last_gen":2}}},
+        "h100-like":{"gemm.naive_loop":{"tile_smem":{"attempts":1,"wins":0,"total_gain":0,"gain_parts":[],"last_gen":1}}}}}"#;
+    let store = SkillStore::from_json(&Json::parse(text).unwrap()).unwrap();
+    assert_eq!(store.generation, 2);
+    assert!(store.stat_in("a100-like", "gemm.naive_loop", MethodId::TileSmem).is_some());
+    assert!(
+        store.stat_in("h100-like", "gemm.naive_loop", MethodId::TileSmem).is_some(),
+        "unknown device partitions are data, not errors"
+    );
+    // The unknown method was skipped, the known one kept.
+    let pooled = store.pooled_stat("gemm.naive_loop", MethodId::TileSmem).unwrap();
+    assert_eq!(pooled.attempts, 2);
+}
