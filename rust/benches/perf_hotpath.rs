@@ -2,6 +2,12 @@
 //! request path): cost-model pricing, metric synthesis, retrieval, feature
 //! extraction, and one full task loop. Used for the before/after log in
 //! EXPERIMENTS.md §Perf. `cargo bench --bench perf_hotpath`.
+//!
+//! Regression gate: `-- --min-suite-throughput <task-runs/s>` exits
+//! non-zero when the whole-suite throughput lands below the threshold. The
+//! CI `perf` job runs it as an *advisory* check (shared-runner timings are
+//! too noisy to block merges on; the threshold is set well below the
+//! healthy range so only a real hot-path regression trips it).
 
 use kernelskill::baselines;
 use kernelskill::bench_suite;
@@ -66,8 +72,27 @@ fn main() {
         ));
     });
     println!("  {}", r.report());
-    println!(
-        "suite throughput: {:.0} task-runs/s",
-        100.0 / r.median_s
-    );
+    let throughput = 100.0 / r.median_s;
+    println!("suite throughput: {throughput:.0} task-runs/s");
+
+    // Advisory threshold check (see module docs). Parsed by hand: the bench
+    // is a plain `fn main` binary with no CLI layer of its own.
+    let argv: Vec<String> = std::env::args().collect();
+    if let Some(i) = argv.iter().position(|a| a == "--min-suite-throughput") {
+        let min: f64 = argv
+            .get(i + 1)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                eprintln!("--min-suite-throughput needs a numeric argument");
+                std::process::exit(2);
+            });
+        if throughput < min {
+            eprintln!(
+                "PERF REGRESSION: suite throughput {throughput:.0} task-runs/s is below \
+                 the {min:.0} task-runs/s threshold"
+            );
+            std::process::exit(1);
+        }
+        println!("perf threshold ok: {throughput:.0} >= {min:.0} task-runs/s");
+    }
 }

@@ -60,6 +60,11 @@ pub struct RunManifest {
     pub shards: usize,
     /// This directory's shard index (0 when unsharded).
     pub shard_index: usize,
+    /// Cells per live memory-exchange epoch (0 = exchange disabled). Part
+    /// of the experiment identity, not the shard assignment: cells of an
+    /// exchange run retrieve against epoch-folded snapshots, so results
+    /// from different epoch lengths may not be mixed by resume *or* merge.
+    pub exchange_epoch: usize,
 }
 
 impl RunManifest {
@@ -75,13 +80,17 @@ impl RunManifest {
 
     /// True when `other` describes the same (strategy-independent) cell
     /// matrix — shard fields excluded, since different shards of one run
-    /// legitimately differ there. This is `merge`'s compatibility check.
+    /// legitimately differ there. The exchange epoch *is* included: an
+    /// exchange run's cells saw epoch-folded memory, so its results are not
+    /// slices of a differently-epoched experiment. This is `merge`'s
+    /// compatibility check.
     pub fn same_matrix(&self, other: &RunManifest) -> bool {
         self.n_tasks == other.n_tasks
             && self.seeds == other.seeds
             && self.rt == other.rt
             && self.at == other.at
             && self.fingerprint == other.fingerprint
+            && self.exchange_epoch == other.exchange_epoch
     }
 
     fn to_json(&self) -> Json {
@@ -97,6 +106,7 @@ impl RunManifest {
             ("fingerprint", json::s(&self.fingerprint.to_string())),
             ("shards", json::num(self.shards as f64)),
             ("shard_index", json::num(self.shard_index as f64)),
+            ("exchange_epoch", json::num(self.exchange_epoch as f64)),
         ])
     }
 
@@ -123,6 +133,8 @@ impl RunManifest {
         // by a single process, i.e. shard 0 of 1.
         let shards = j.get("shards").and_then(|v| v.as_usize()).unwrap_or(1);
         let shard_index = j.get("shard_index").and_then(|v| v.as_usize()).unwrap_or(0);
+        // Pre-exchange manifests never ran with live memory exchange.
+        let exchange_epoch = j.get("exchange_epoch").and_then(|v| v.as_usize()).unwrap_or(0);
         Ok(RunManifest {
             n_tasks,
             seeds,
@@ -131,8 +143,18 @@ impl RunManifest {
             fingerprint,
             shards,
             shard_index,
+            exchange_epoch,
         })
     }
+}
+
+/// Filesystem slug for a strategy name (lowercased, non-alphanumerics to
+/// `_`) — shared by the warm-start snapshot files and the memory-exchange
+/// directory layout.
+pub fn strategy_slug(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
 }
 
 /// Handle on a run directory.
@@ -179,11 +201,8 @@ impl RunDir {
     /// store that already includes earlier strategies' merges, so each
     /// strategy's snapshot must be captured (and resumed from) separately.
     pub fn memory_snapshot_path(&self, strategy: &str) -> PathBuf {
-        let slug: String = strategy
-            .chars()
-            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
-            .collect();
-        self.root.join(format!("memory_snapshot.{slug}.json"))
+        self.root
+            .join(format!("memory_snapshot.{}.json", strategy_slug(strategy)))
     }
 
     /// True once at least one result line has been streamed.
@@ -193,9 +212,39 @@ impl RunDir {
             .unwrap_or(false)
     }
 
-    /// Write the matrix-shape manifest.
+    /// Name of the completion marker file inside a run directory. Exposed
+    /// so observers (the streaming merge) can probe for it without
+    /// constructing a `RunDir` — `RunDir::open` creates the directory,
+    /// which a read-only probe of a possibly-missing path must not do.
+    pub const COMPLETE_MARKER: &'static str = "complete";
+
+    /// Path of the completion marker (see [`RunDir::mark_complete`]).
+    pub fn complete_path(&self) -> PathBuf {
+        self.root.join(Self::COMPLETE_MARKER)
+    }
+
+    /// Write the completion marker: the producing process finished its whole
+    /// slice of the matrix and will append nothing more. `merge --watch` and
+    /// the shard launcher use it to know when tail-following can stop;
+    /// resuming a marked directory is still legal (resume re-validates
+    /// against the manifest, not the marker).
+    pub fn mark_complete(&self) -> io::Result<()> {
+        std::fs::write(self.complete_path(), "complete\n")
+    }
+
+    /// True once [`RunDir::mark_complete`] has run.
+    pub fn is_complete(&self) -> bool {
+        self.complete_path().exists()
+    }
+
+    /// Write the matrix-shape manifest. Atomic (tmp + rename): a streaming
+    /// merge may read the manifest the moment it appears, so a torn
+    /// half-written file must never be observable.
     pub fn write_manifest(&self, m: &RunManifest) -> io::Result<()> {
-        std::fs::write(self.manifest_path(), format!("{}\n", m.to_json()))
+        let path = self.manifest_path();
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, format!("{}\n", m.to_json()))?;
+        std::fs::rename(&tmp, &path)
     }
 
     /// Read the manifest; `None` when the directory has none yet.
@@ -710,6 +759,7 @@ mod tests {
             fingerprint: RunManifest::fingerprint_tasks(&["a", "b"]),
             shards: 3,
             shard_index: 2,
+            exchange_epoch: 4,
         };
         rd.write_manifest(&m).unwrap();
         assert_eq!(rd.read_manifest().unwrap(), Some(m));
@@ -729,6 +779,7 @@ mod tests {
         let m = rd.read_manifest().unwrap().unwrap();
         assert_eq!(m.shards, 1);
         assert_eq!(m.shard_index, 0);
+        assert_eq!(m.exchange_epoch, 0, "pre-exchange manifests read as exchange-off");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -742,6 +793,7 @@ mod tests {
             fingerprint: 99,
             shards: 1,
             shard_index: 0,
+            exchange_epoch: 0,
         };
         let mut other_shard = base.clone();
         other_shard.shards = 4;
@@ -750,6 +802,22 @@ mod tests {
         let mut other_matrix = base.clone();
         other_matrix.seeds = vec![0];
         assert!(!base.same_matrix(&other_matrix));
+        // A different exchange-epoch length is a different experiment: its
+        // cells retrieved against differently-folded memory.
+        let mut other_epoch = base.clone();
+        other_epoch.exchange_epoch = 8;
+        assert!(!base.same_matrix(&other_epoch));
+    }
+
+    #[test]
+    fn complete_marker_roundtrip() {
+        let dir = tmp_dir("complete");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rd = RunDir::open(&dir).unwrap();
+        assert!(!rd.is_complete());
+        rd.mark_complete().unwrap();
+        assert!(rd.is_complete());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Shard launcher: one command that runs a whole distributed suite.
+//!
+//! `launch` replaces the hand-run N-process + `merge` dance: it spawns
+//! `--shards N` child processes of this very binary (std::process only —
+//! nothing to install), one per shard of the cell matrix, each streaming
+//! to `<run-dir>/shard-<i>`; monitors them; restarts a crashed child with
+//! `--resume` (children are always spawned resumable, so a restart picks
+//! up exactly at the checkpointed cells); follows the shard checkpoints
+//! live through [`MergeWatcher`]; and finalizes the streaming merge into
+//! `<run-dir>` itself once every child has exited cleanly. The merged
+//! output is byte-identical to a single-process run of the same matrix —
+//! the `tests/launcher.rs` battery and the CI `launch-smoke` job (which
+//! force-kills a child mid-run) pin that down.
+//!
+//! With [`LaunchConfig::exchange_epoch`] set, children run with epoch-based
+//! live memory exchange through `<run-dir>/exchange` (see
+//! `coordinator::scheduler` and `docs/memory-formats.md`): late shards
+//! retrieve against skills learned anywhere in the fleet, and the result
+//! is still a pure function of (matrix, base memory, epoch length) —
+//! byte-identical to a `--shards 1` launch with the same epoch length.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use super::checkpoint::RunDir;
+use super::merge::{MergeReport, MergeWatcher};
+
+/// What to launch and how to supervise it.
+#[derive(Debug, Clone)]
+pub struct LaunchConfig {
+    /// Binary to spawn — normally `std::env::current_exe()`.
+    pub program: PathBuf,
+    /// Subcommand the children run (`suite`, `table1`, …); it must accept
+    /// `--run-dir/--shards/--shard-index/--resume`.
+    pub subcommand: String,
+    /// Flags forwarded verbatim to every child (strategy, level, seeds, …).
+    pub passthrough: Vec<String>,
+    /// Parent directory: shard `i` streams to `<run_dir>/shard-<i>`, child
+    /// logs go to `<run_dir>/shard-<i>.log`, and the final merge lands in
+    /// `<run_dir>` itself.
+    pub run_dir: PathBuf,
+    /// Number of shard processes to run (>= 1).
+    pub shards: usize,
+    /// Crash budget per shard: a child that exits non-zero is relaunched
+    /// (with `--resume`) at most this many times before the launch fails.
+    pub max_restarts: usize,
+    /// Supervision poll interval in milliseconds.
+    pub poll_ms: u64,
+    /// Enable live memory exchange with this epoch length (cells); the
+    /// exchange dir is `<run_dir>/exchange`.
+    pub exchange_epoch: Option<usize>,
+    /// Extra environment variables for the children (used by the crash-test
+    /// hook in CI and tests).
+    pub child_env: Vec<(String, String)>,
+}
+
+impl LaunchConfig {
+    /// A launch of `shards` children of `program` running `subcommand`
+    /// under `run_dir`, with default supervision settings.
+    pub fn new<P: Into<PathBuf>, Q: Into<PathBuf>>(
+        program: P,
+        subcommand: &str,
+        run_dir: Q,
+        shards: usize,
+    ) -> LaunchConfig {
+        LaunchConfig {
+            program: program.into(),
+            subcommand: subcommand.to_string(),
+            passthrough: Vec::new(),
+            run_dir: run_dir.into(),
+            shards,
+            max_restarts: 2,
+            poll_ms: 50,
+            exchange_epoch: None,
+            child_env: Vec::new(),
+        }
+    }
+}
+
+/// One shard's supervision outcome.
+#[derive(Debug, Clone)]
+pub struct ShardOutcome {
+    /// Shard index.
+    pub index: usize,
+    /// The shard's run directory.
+    pub dir: PathBuf,
+    /// The shard's captured stdout/stderr log.
+    pub log: PathBuf,
+    /// Times the child was relaunched after a non-zero exit.
+    pub restarts: usize,
+}
+
+/// Outcome of a successful [`launch`].
+#[derive(Debug, Clone)]
+pub struct LaunchReport {
+    /// Per-shard supervision outcomes.
+    pub shards: Vec<ShardOutcome>,
+    /// The final streaming-merge report.
+    pub merge: MergeReport,
+}
+
+impl LaunchReport {
+    /// Human-readable multi-line summary (the `launch` CLI output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let restarts: usize = self.shards.iter().map(|s| s.restarts).sum();
+        out.push_str(&format!(
+            "launched {} shard(s), {} crash-restart(s)\n",
+            self.shards.len(),
+            restarts
+        ));
+        for s in &self.shards {
+            out.push_str(&format!(
+                "  shard {}  {} restart(s)  log {}\n",
+                s.index,
+                s.restarts,
+                s.log.display()
+            ));
+        }
+        out.push_str(&self.merge.render());
+        out
+    }
+}
+
+/// The run directory shard `i` of a launch streams to.
+pub fn shard_dir(run_dir: &Path, index: usize) -> PathBuf {
+    run_dir.join(format!("shard-{index}"))
+}
+
+/// One supervised child.
+struct ShardProc {
+    index: usize,
+    child: Option<Child>,
+    restarts: usize,
+    done: bool,
+}
+
+/// Kills every still-running child on scope exit, so an error return (or a
+/// panic) never leaks orphan shard processes.
+struct ReapOnDrop<'a>(&'a mut Vec<ShardProc>);
+
+impl Drop for ReapOnDrop<'_> {
+    fn drop(&mut self) {
+        for s in self.0.iter_mut() {
+            if let Some(child) = s.child.as_mut() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+fn spawn_shard(cfg: &LaunchConfig, index: usize, resume_note: bool) -> Result<Child, String> {
+    let dir = shard_dir(&cfg.run_dir, index);
+    let log_path = cfg.run_dir.join(format!("shard-{index}.log"));
+    let log = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&log_path)
+        .map_err(|e| format!("opening {}: {e}", log_path.display()))?;
+    let log_err = log
+        .try_clone()
+        .map_err(|e| format!("opening {}: {e}", log_path.display()))?;
+    let mut cmd = Command::new(&cfg.program);
+    cmd.arg(&cfg.subcommand)
+        .args(&cfg.passthrough)
+        .arg("--run-dir")
+        .arg(&dir)
+        .arg("--shards")
+        .arg(cfg.shards.to_string())
+        .arg("--shard-index")
+        .arg(index.to_string())
+        // Children are always resumable: the first run of a fresh dir is a
+        // no-op resume, and a crash-restart picks up at the checkpoint.
+        .arg("--resume");
+    if let Some(epoch) = cfg.exchange_epoch {
+        cmd.arg("--exchange-dir")
+            .arg(cfg.run_dir.join("exchange"))
+            .arg("--exchange-epoch")
+            .arg(epoch.to_string());
+    }
+    for (k, v) in &cfg.child_env {
+        cmd.env(k, v);
+    }
+    cmd.stdin(Stdio::null()).stdout(log).stderr(log_err);
+    let child = cmd
+        .spawn()
+        .map_err(|e| format!("spawning shard {index} ({}): {e}", cfg.program.display()))?;
+    if resume_note {
+        crate::log_warn!("shard {index}: relaunched with --resume (pid {})", child.id());
+    } else {
+        crate::log_info!("shard {index}: spawned (pid {})", child.id());
+    }
+    Ok(child)
+}
+
+/// Spawn, supervise, crash-restart, and merge a sharded run. See the module
+/// docs; returns once the merged output in `cfg.run_dir` is complete.
+pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport, String> {
+    if cfg.shards == 0 {
+        return Err("launch needs --shards >= 1".to_string());
+    }
+    if let Some(0) = cfg.exchange_epoch {
+        return Err("--exchange-epoch must be >= 1".to_string());
+    }
+    std::fs::create_dir_all(&cfg.run_dir)
+        .map_err(|e| format!("creating {}: {e}", cfg.run_dir.display()))?;
+    let out_rd = RunDir::open(&cfg.run_dir)
+        .map_err(|e| format!("opening {}: {e}", cfg.run_dir.display()))?;
+    if out_rd.has_results() {
+        return Err(format!(
+            "{} already holds merged results; pick a fresh --run-dir",
+            cfg.run_dir.display()
+        ));
+    }
+
+    // Create the shard dirs up front so the streaming merge can safely
+    // canonicalize them before the children get going.
+    let shard_dirs: Vec<PathBuf> = (0..cfg.shards)
+        .map(|i| {
+            let d = shard_dir(&cfg.run_dir, i);
+            std::fs::create_dir_all(&d).map(|_| d)
+        })
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("creating shard dirs: {e}"))?;
+    let mut watcher = MergeWatcher::new(&cfg.run_dir, &shard_dirs)?;
+
+    let mut procs: Vec<ShardProc> = Vec::new();
+    for index in 0..cfg.shards {
+        procs.push(ShardProc {
+            index,
+            child: Some(spawn_shard(cfg, index, false)?),
+            restarts: 0,
+            done: false,
+        });
+    }
+
+    let mut last_cells = usize::MAX;
+    let supervise = |procs: &mut Vec<ShardProc>,
+                     watcher: &mut MergeWatcher,
+                     last_cells: &mut usize|
+     -> Result<bool, String> {
+        let mut all_done = true;
+        for s in procs.iter_mut() {
+            if s.done {
+                continue;
+            }
+            all_done = false;
+            let Some(child) = s.child.as_mut() else {
+                continue;
+            };
+            match child.try_wait() {
+                Ok(None) => {}
+                Ok(Some(status)) if status.success() => {
+                    s.child = None;
+                    s.done = true;
+                }
+                Ok(Some(status)) => {
+                    s.child = None;
+                    if s.restarts >= cfg.max_restarts {
+                        return Err(format!(
+                            "shard {} failed with {status} after {} restart(s); see {}",
+                            s.index,
+                            s.restarts,
+                            cfg.run_dir.join(format!("shard-{}.log", s.index)).display()
+                        ));
+                    }
+                    s.restarts += 1;
+                    crate::log_warn!(
+                        "shard {} exited with {status}; restarting ({}/{})",
+                        s.index,
+                        s.restarts,
+                        cfg.max_restarts
+                    );
+                    s.child = Some(spawn_shard(cfg, s.index, true)?);
+                }
+                Err(e) => return Err(format!("waiting on shard {}: {e}", s.index)),
+            }
+        }
+        // Live streaming merge: fold whatever the shards appended since the
+        // last cycle and narrate progress on change.
+        let status = watcher.poll()?;
+        if status.cells != *last_cells {
+            *last_cells = status.cells;
+            crate::log_info!("launch: {}", status.render());
+        }
+        Ok(all_done)
+    };
+
+    {
+        let guard = ReapOnDrop(&mut procs);
+        loop {
+            match supervise(&mut *guard.0, &mut watcher, &mut last_cells) {
+                Ok(true) => break,
+                Ok(false) => std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1))),
+                Err(e) => return Err(e), // guard kills the survivors
+            }
+        }
+        // All children exited cleanly; nothing left for the guard to reap.
+    }
+
+    let merge = watcher.finalize()?;
+    out_rd
+        .mark_complete()
+        .map_err(|e| format!("writing completion marker: {e}"))?;
+    Ok(LaunchReport {
+        shards: procs
+            .iter()
+            .map(|s| ShardOutcome {
+                index: s.index,
+                dir: shard_dir(&cfg.run_dir, s.index),
+                log: cfg.run_dir.join(format!("shard-{}.log", s.index)),
+                restarts: s.restarts,
+            })
+            .collect(),
+        merge,
+    })
+}

@@ -353,10 +353,24 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
         if !notices_structure {
             features.structured_operand = false;
         }
-        let profile = base_review
-            .profile
-            .clone()
-            .expect("base kernel always has a profile");
+        // A healthy base review carries a profile by construction, but a
+        // panic here would take down every cell of a launched shard with
+        // it; degrade to convergence instead of aborting the fleet.
+        let Some(profile) = base_review.profile.clone() else {
+            crate::log_warn!(
+                "task {}: healthy base kernel has no profile; stopping refinement",
+                task.id
+            );
+            rounds.push(RoundRecord {
+                round,
+                branch: Branch::Converged,
+                compiled: true,
+                correct: true,
+                speedup: base_review.speedup,
+                version: base_state.version,
+            });
+            break;
+        };
         let retrieval_result = strategy.use_long_term.then(|| {
             retrieval::retrieve_for_with(task, &features, &profile, skills.as_deref(), cfg.dev.name)
         });

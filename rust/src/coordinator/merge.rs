@@ -1,4 +1,4 @@
-//! Merge per-shard run directories back into one.
+//! Merge per-shard run directories back into one — one-shot or streaming.
 //!
 //! A sharded suite run leaves N run dirs, each holding a disjoint slice of
 //! the (strategy, task, seed) cell matrix (`Shard::owns`), a manifest, a
@@ -10,9 +10,9 @@
 //!     matrix (shard fields aside); the output manifest is unsharded, so
 //!     the merged dir can itself be `report`ed, `--resume`d, or merged
 //!     again.
-//!   * `results.jsonl` lines are unioned with torn tails tolerated
-//!     (`RunDir::load_all`) and written in canonical key order, so merge
-//!     output is byte-deterministic whatever order shards are given in.
+//!   * `results.jsonl` lines are unioned with torn tails tolerated and
+//!     written in canonical key order, so merge output is
+//!     byte-deterministic whatever order shards are given in.
 //!   * duplicate cells are deduplicated when their payloads are
 //!     bit-identical and a **loud error** otherwise — never
 //!     last-writer-wins: two different results for one cell mean the
@@ -31,17 +31,28 @@
 //!     (otherwise the shards did not run slices of one experiment — hard
 //!     error) and are carried into the output for resumability.
 //!
+//! [`MergeWatcher`] is the *streaming* form of the same union: it follows
+//! the per-shard `results.jsonl` tails while the shards are still running
+//! (consuming only newline-terminated lines, so a mid-append read can
+//! never tear a record), maintains the live folded cell set, and
+//! [`MergeWatcher::finalize`]s into the output dir. One-shot
+//! [`merge_run_dirs`] is implemented *as* a finalize-immediately watcher,
+//! so the streaming result after every shard completes is byte-identical
+//! to a one-shot merge by construction — and pinned by a test on top.
+//!
 //! Net effect: `report` over the merged dir is byte-identical to `report`
 //! over an unsharded run of the same matrix, and so is the skill store —
 //! the property the determinism test battery (tests/sharding.rs and the CI
-//! `shard-smoke` job) pins down.
+//! `shard-smoke` / `launch-smoke` jobs) pins down.
 
 use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 
-use super::checkpoint::{result_to_json, CellKey, RunDir, RunManifest};
+use super::checkpoint::{result_from_json, result_to_json, CellKey, RunDir, RunManifest};
 use super::loop_runner::TaskResult;
 use crate::memory::long_term::SkillStore;
+use crate::util::json::Json;
 
 /// What one input directory contributed.
 #[derive(Debug, Clone)]
@@ -107,218 +118,473 @@ impl MergeReport {
     }
 }
 
-/// Union per-shard run dirs into `out`. See the module docs for the rules.
-pub fn merge_run_dirs(out: &Path, inputs: &[PathBuf]) -> Result<MergeReport, String> {
-    if inputs.is_empty() {
-        return Err("merge needs at least one input run dir".to_string());
-    }
-    let out_rd = RunDir::open(out).map_err(|e| format!("opening output dir {}: {e}", out.display()))?;
-    if out_rd.has_results() {
-        return Err(format!(
-            "output dir {} already holds results; merge refuses to overwrite",
-            out.display()
-        ));
-    }
-    let out_canon = std::fs::canonicalize(out).map_err(|e| format!("resolving {}: {e}", out.display()))?;
+/// One streamed input of a [`MergeWatcher`].
+#[derive(Debug)]
+struct WatchInput {
+    dir: PathBuf,
+    /// Byte offset into `results.jsonl` already consumed (always at a line
+    /// boundary until the final drain).
+    offset: u64,
+    /// Parseable cells folded from this input so far.
+    cells: usize,
+    /// Manifest, once it appeared on disk and validated.
+    manifest: Option<RunManifest>,
+    /// Whether the dir has been canonicalized and checked against the
+    /// output dir (deferred until the dir exists — shards create their dirs
+    /// after the watcher typically starts).
+    checked_distinct: bool,
+}
 
-    let mut base: Option<RunManifest> = None;
-    // key -> (canonical serialized line, parsed result)
-    let mut merged: BTreeMap<CellKey, (String, TaskResult)> = BTreeMap::new();
-    let mut deduplicated = 0usize;
-    let mut summaries: Vec<ShardSummary> = Vec::new();
-    // Per-shard skills.json stores, folded commutatively. None once any
-    // input lacks one (pre-sharding dirs) — then only the cell-derived
-    // store below is available.
-    let mut folded_stores: Option<SkillStore> = Some(SkillStore::new());
-    // Warm-start snapshots (memory_snapshot.<strategy>.json): cells of a
-    // sharded warm run are only equivalent to a single-process run if every
-    // shard started from the same snapshot, so inputs must carry the same
-    // snapshot set with identical bytes — a warm shard merged with a cold
-    // one (or with different warm stores) is a hard error. Identical
-    // snapshots are carried into the output so the merged dir stays
-    // resumable with identical warm-started retrieval.
-    let mut snapshots: BTreeMap<String, Vec<u8>> = BTreeMap::new();
-    let mut snapshot_names_of_first: Option<Vec<String>> = None;
+/// Live progress of a [`MergeWatcher`].
+#[derive(Debug, Clone)]
+pub struct WatchStatus {
+    /// Distinct cells folded so far.
+    pub cells: usize,
+    /// Bit-identical duplicate lines dropped so far.
+    pub deduplicated: usize,
+    /// Parseable cells consumed per input, in input order.
+    pub per_input: Vec<usize>,
+    /// Per input: has the producing process written its `complete` marker?
+    pub complete: Vec<bool>,
+}
 
-    for dir in inputs {
-        let canon = std::fs::canonicalize(dir).map_err(|e| format!("resolving {}: {e}", dir.display()))?;
-        if canon == out_canon {
+impl WatchStatus {
+    /// True once every input carries the `complete` marker.
+    pub fn all_complete(&self) -> bool {
+        self.complete.iter().all(|&c| c)
+    }
+
+    /// One-line live summary for the `merge --watch` / `launch` CLIs.
+    pub fn render(&self) -> String {
+        let per: Vec<String> = self.per_input.iter().map(|c| c.to_string()).collect();
+        format!(
+            "{} cell(s) merged live [{}], {} duplicate(s), {}/{} input(s) complete",
+            self.cells,
+            per.join(" + "),
+            self.deduplicated,
+            self.complete.iter().filter(|&&c| c).count(),
+            self.complete.len()
+        )
+    }
+}
+
+/// Incremental merge over still-growing shard run dirs. See the module docs
+/// for the contract; construct with [`MergeWatcher::new`], drive with
+/// [`MergeWatcher::poll`], and [`MergeWatcher::finalize`] once the
+/// producers are done (all inputs `complete`, or their processes exited).
+#[derive(Debug)]
+pub struct MergeWatcher {
+    out: PathBuf,
+    out_canon: PathBuf,
+    inputs: Vec<WatchInput>,
+    base: Option<RunManifest>,
+    first_dir: PathBuf,
+    /// key -> (canonical serialized line, parsed result)
+    merged: BTreeMap<CellKey, (String, TaskResult)>,
+    deduplicated: usize,
+}
+
+impl MergeWatcher {
+    /// Start watching `inputs` for an eventual merge into `out`. `out` is
+    /// created immediately and must not already hold results; the inputs
+    /// need not exist yet.
+    pub fn new(out: &Path, inputs: &[PathBuf]) -> Result<MergeWatcher, String> {
+        if inputs.is_empty() {
+            return Err("merge needs at least one input run dir".to_string());
+        }
+        let out_rd =
+            RunDir::open(out).map_err(|e| format!("opening output dir {}: {e}", out.display()))?;
+        if out_rd.has_results() {
             return Err(format!(
-                "output dir {} is also a merge input; pick a fresh output directory",
+                "output dir {} already holds results; merge refuses to overwrite",
                 out.display()
             ));
         }
-        let rd = RunDir::open(dir).map_err(|e| format!("opening {}: {e}", dir.display()))?;
-        let manifest = rd
-            .read_manifest()?
-            .ok_or_else(|| format!("{}: no manifest.json — not a run directory", dir.display()))?;
-        match &base {
-            None => base = Some(manifest.clone()),
+        let out_canon = std::fs::canonicalize(out)
+            .map_err(|e| format!("resolving {}: {e}", out.display()))?;
+        Ok(MergeWatcher {
+            out: out.to_path_buf(),
+            out_canon,
+            inputs: inputs
+                .iter()
+                .map(|dir| WatchInput {
+                    dir: dir.clone(),
+                    offset: 0,
+                    cells: 0,
+                    manifest: None,
+                    checked_distinct: false,
+                })
+                .collect(),
+            base: None,
+            first_dir: inputs[0].clone(),
+            merged: BTreeMap::new(),
+            deduplicated: 0,
+        })
+    }
+
+    /// Fold one parsed cell in, enforcing the dedup/conflict rules.
+    fn fold_cell(
+        merged: &mut BTreeMap<CellKey, (String, TaskResult)>,
+        deduplicated: &mut usize,
+        dir: &Path,
+        key: CellKey,
+        result: TaskResult,
+    ) -> Result<(), String> {
+        let line = result_to_json(&key, &result).to_string();
+        match merged.get(&key) {
+            None => {
+                merged.insert(key, (line, result));
+            }
+            Some((existing, _)) if *existing == line => *deduplicated += 1,
+            Some(_) => {
+                return Err(format!(
+                    "conflicting results for cell ({}, {}, {}): {} holds a payload \
+                     that differs from an earlier input; refusing to merge \
+                     (same cell, different outcome means the shards did not run \
+                     the same experiment)",
+                    key.strategy,
+                    key.task_id,
+                    key.seed,
+                    dir.display()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate a newly appeared manifest against the first one seen.
+    fn fold_manifest(&mut self, i: usize, manifest: RunManifest) -> Result<(), String> {
+        match &self.base {
+            None => self.base = Some(manifest.clone()),
             Some(b) if !b.same_matrix(&manifest) => {
                 return Err(format!(
                     "{} was written for a different cell matrix than {} \
                      ({manifest:?} vs {b:?}); refusing to mix results",
-                    dir.display(),
-                    inputs[0].display()
+                    self.inputs[i].dir.display(),
+                    self.first_dir.display()
                 ));
             }
             Some(_) => {}
         }
+        self.inputs[i].manifest = Some(manifest);
+        Ok(())
+    }
 
-        let cells = rd
-            .load_all()
-            .map_err(|e| format!("loading {}: {e}", dir.display()))?;
-        let mut count = 0usize;
-        for (key, result) in cells {
-            count += 1;
-            let line = result_to_json(&key, &result).to_string();
-            match merged.get(&key) {
-                None => {
-                    merged.insert(key, (line, result));
-                }
-                Some((existing, _)) if *existing == line => deduplicated += 1,
-                Some(_) => {
-                    return Err(format!(
-                        "conflicting results for cell ({}, {}, {}): {} holds a payload \
-                         that differs from an earlier input; refusing to merge \
-                         (same cell, different outcome means the shards did not run \
-                         the same experiment)",
-                        key.strategy,
-                        key.task_id,
-                        key.seed,
-                        dir.display()
-                    ));
-                }
-            }
+    /// Consume one input's new bytes. Only newline-terminated lines are
+    /// taken (a concurrent append can tear at most the unterminated tail,
+    /// which stays unconsumed until the next poll); with `drain_tail` the
+    /// final unterminated fragment is attempted too — exactly what a
+    /// one-shot loader would do after the producer is gone.
+    fn poll_input(&mut self, i: usize, drain_tail: bool) -> Result<(), String> {
+        let dir = self.inputs[i].dir.clone();
+        if !dir.exists() {
+            // The shard has not created its run dir yet (streaming) or the
+            // path is wrong (one-shot) — finalize reports the latter as a
+            // missing manifest.
+            return Ok(());
         }
-        summaries.push(ShardSummary {
-            dir: dir.clone(),
-            shard_index: manifest.shard_index,
-            shards: manifest.shards,
-            cells: count,
-        });
-
-        let sp = rd.skills_path();
-        if sp.exists() {
-            if let Some(fold) = folded_stores.as_mut() {
-                fold.merge_store(&SkillStore::load(&sp)?);
-            }
-        } else {
-            folded_stores = None;
-        }
-
-        let mut names: Vec<String> = Vec::new();
-        for entry in std::fs::read_dir(dir).map_err(|e| format!("listing {}: {e}", dir.display()))? {
-            let entry = entry.map_err(|e| format!("listing {}: {e}", dir.display()))?;
-            let name = entry.file_name().to_string_lossy().into_owned();
-            if !(name.starts_with("memory_snapshot.") && name.ends_with(".json")) {
-                continue;
-            }
-            let bytes = std::fs::read(entry.path())
-                .map_err(|e| format!("reading {}: {e}", entry.path().display()))?;
-            names.push(name.clone());
-            match snapshots.get(&name) {
-                None => {
-                    snapshots.insert(name, bytes);
-                }
-                Some(prev) if *prev == bytes => {}
-                Some(_) => {
-                    return Err(format!(
-                        "{}: {name} differs between shards — the shards warm-started \
-                         from different skill stores, so their cells are not slices of \
-                         one experiment; refusing to merge",
-                        dir.display()
-                    ));
-                }
-            }
-        }
-        names.sort();
-        match &snapshot_names_of_first {
-            None => snapshot_names_of_first = Some(names),
-            Some(first) if *first == names => {}
-            Some(_) => {
+        if !self.inputs[i].checked_distinct {
+            let canon = std::fs::canonicalize(&dir)
+                .map_err(|e| format!("resolving {}: {e}", dir.display()))?;
+            if canon == self.out_canon {
                 return Err(format!(
-                    "{}: warm-start snapshot set differs from {} — a warm shard \
-                     cannot be merged with a cold one (their cells did not see the \
-                     same memory); refusing to merge",
-                    dir.display(),
-                    inputs[0].display()
+                    "output dir {} is also a merge input; pick a fresh output directory",
+                    self.out.display()
                 ));
             }
+            self.inputs[i].checked_distinct = true;
         }
-    }
-
-    // The authoritative merged store: fold of the unioned cells'
-    // observations (exact sums make the order irrelevant). Deduplicated
-    // cells contribute once, which is why this — not the per-shard fold —
-    // is what gets written.
-    let mut store = SkillStore::new();
-    for (_, (_, result)) in &merged {
-        store.merge(&result.skill_obs);
-    }
-    // Cross-check: with disjoint shards (nothing deduplicated), folding the
-    // per-shard stores reproduces the cell-derived store bit for bit. A
-    // mismatch is the same crash class as a torn tail — a shard killed
-    // between a results append and its store save lags by one cell — so it
-    // is tolerated with a warning; the cell-derived store is authoritative
-    // either way (resuming the shard also reconciles its store).
-    if deduplicated == 0 {
-        if let Some(fold) = &folded_stores {
-            if *fold != store {
-                crate::log_warn!(
-                    "per-shard skills.json stores lag their checkpoints (interrupted \
-                     shard?); using the store rebuilt from the checkpointed cells"
-                );
+        let rd = match RunDir::open(&dir) {
+            Ok(rd) => rd,
+            Err(e) => return Err(format!("opening {}: {e}", dir.display())),
+        };
+        if self.inputs[i].manifest.is_none() && rd.manifest_path().exists() {
+            if let Some(m) = rd.read_manifest()? {
+                self.fold_manifest(i, m)?;
             }
         }
+
+        let path = rd.results_path();
+        if !path.exists() {
+            return Ok(());
+        }
+        let mut f = std::fs::File::open(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let len = f
+            .metadata()
+            .map_err(|e| format!("reading {}: {e}", path.display()))?
+            .len();
+        let offset = self.inputs[i].offset;
+        if len <= offset {
+            return Ok(());
+        }
+        f.seek(SeekFrom::Start(offset))
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let mut buf = Vec::with_capacity((len - offset) as usize);
+        f.read_to_end(&mut buf)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        // Consume up to the last newline; the remainder may still be
+        // mid-append. The final drain takes the unterminated fragment too —
+        // the same attempt a one-shot loader makes once the producer is
+        // gone.
+        let advanced = if drain_tail {
+            buf.len()
+        } else {
+            buf.iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1)
+        };
+        let chunk = &buf[..advanced];
+        for line in chunk.split(|&b| b == b'\n') {
+            let text = match std::str::from_utf8(line) {
+                Ok(t) => t,
+                Err(e) => {
+                    crate::log_warn!(
+                        "checkpoint {}: skipping undecodable line ({e})",
+                        path.display()
+                    );
+                    continue;
+                }
+            };
+            if text.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(text)
+                .map_err(|e| e.to_string())
+                .and_then(|j| result_from_json(&j));
+            match parsed {
+                Ok((key, result)) => {
+                    self.inputs[i].cells += 1;
+                    Self::fold_cell(
+                        &mut self.merged,
+                        &mut self.deduplicated,
+                        &dir,
+                        key,
+                        result,
+                    )?;
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "checkpoint {}: skipping unparseable line ({e})",
+                        path.display()
+                    );
+                }
+            }
+        }
+        self.inputs[i].offset = offset + advanced as u64;
+        Ok(())
     }
 
-    // Write the output dir: unsharded manifest, canonically-ordered
-    // results.jsonl (atomic via tmp + rename), merged skill store.
-    let mut manifest = base.expect("at least one input");
-    manifest.shards = 1;
-    manifest.shard_index = 0;
-    out_rd
-        .write_manifest(&manifest)
-        .map_err(|e| format!("writing merged manifest: {e}"))?;
-    let mut buf = String::new();
-    for (_, (line, _)) in &merged {
-        buf.push_str(line);
-        buf.push('\n');
-    }
-    let results_path = out_rd.results_path();
-    let tmp = results_path.with_extension("jsonl.tmp");
-    std::fs::write(&tmp, buf).map_err(|e| format!("writing merged results: {e}"))?;
-    std::fs::rename(&tmp, &results_path).map_err(|e| format!("writing merged results: {e}"))?;
-    store
-        .save(&out_rd.skills_path())
-        .map_err(|e| format!("writing merged skill store: {e}"))?;
-    for (name, bytes) in &snapshots {
-        std::fs::write(out_rd.root().join(name), bytes)
-            .map_err(|e| format!("writing merged snapshot {name}: {e}"))?;
+    /// Fold every input's newly appended complete lines and report live
+    /// progress. Safe to call while the shards are still appending; errors
+    /// (conflicting cells, mismatched manifests) are permanent.
+    pub fn poll(&mut self) -> Result<WatchStatus, String> {
+        for i in 0..self.inputs.len() {
+            self.poll_input(i, false)?;
+        }
+        Ok(self.status())
     }
 
-    // Coverage check: the manifests declare how many shards the matrix was
-    // split into; missing indices mean a partial merge. Supported (the
-    // output can be --resume'd to completion), but never silent.
-    let declared = summaries.iter().map(|s| s.shards).max().unwrap_or(1);
-    let missing_shards: Vec<usize> = (0..declared)
-        .filter(|i| !summaries.iter().any(|s| s.shard_index == *i))
-        .collect();
-    if !missing_shards.is_empty() {
-        crate::log_warn!(
-            "merged {} input(s) but the manifests declare {declared} shard(s); \
-             missing shard index(es) {missing_shards:?} — the output covers a \
-             partial matrix",
-            summaries.len()
+    /// Current progress without reading anything new. A plain path probe —
+    /// never `RunDir::open`, which would *create* a missing (e.g. typo'd)
+    /// input directory as a side effect of polling.
+    pub fn status(&self) -> WatchStatus {
+        WatchStatus {
+            cells: self.merged.len(),
+            deduplicated: self.deduplicated,
+            per_input: self.inputs.iter().map(|s| s.cells).collect(),
+            complete: self
+                .inputs
+                .iter()
+                .map(|s| s.dir.join(RunDir::COMPLETE_MARKER).exists())
+                .collect(),
+        }
+    }
+
+    /// Drain every remaining byte (unterminated tails included), validate
+    /// manifests/snapshots/stores, and write the merged output dir. The
+    /// result is byte-identical to a one-shot [`merge_run_dirs`] over the
+    /// same final inputs.
+    pub fn finalize(mut self) -> Result<MergeReport, String> {
+        for i in 0..self.inputs.len() {
+            self.poll_input(i, true)?;
+        }
+
+        // Every input must have turned out to be a run directory.
+        let mut summaries: Vec<ShardSummary> = Vec::new();
+        for input in &self.inputs {
+            let manifest = input.manifest.as_ref().ok_or_else(|| {
+                format!(
+                    "{}: no manifest.json — not a run directory",
+                    input.dir.display()
+                )
+            })?;
+            summaries.push(ShardSummary {
+                dir: input.dir.clone(),
+                shard_index: manifest.shard_index,
+                shards: manifest.shards,
+                cells: input.cells,
+            });
+        }
+        let base = match self.base {
+            Some(b) => b,
+            // Unreachable in practice (inputs is non-empty and each input
+            // above proved it has a manifest), but a missing base must be a
+            // clean error, never a panic that takes a fleet down.
+            None => return Err("merge needs at least one input run dir".to_string()),
+        };
+
+        // Per-shard skills.json stores, folded commutatively. None once any
+        // input lacks one (pre-sharding dirs) — then only the cell-derived
+        // store below is available.
+        let mut folded_stores: Option<SkillStore> = Some(SkillStore::new());
+        // Warm-start snapshots (memory_snapshot.<strategy>.json): cells of a
+        // sharded warm run are only equivalent to a single-process run if
+        // every shard started from the same snapshot, so inputs must carry
+        // the same snapshot set with identical bytes — a warm shard merged
+        // with a cold one (or with different warm stores) is a hard error.
+        // Identical snapshots are carried into the output so the merged dir
+        // stays resumable with identical warm-started retrieval.
+        let mut snapshots: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+        let mut snapshot_names_of_first: Option<Vec<String>> = None;
+        for input in &self.inputs {
+            let dir = &input.dir;
+            let rd = RunDir::open(dir).map_err(|e| format!("opening {}: {e}", dir.display()))?;
+            let sp = rd.skills_path();
+            if sp.exists() {
+                if let Some(fold) = folded_stores.as_mut() {
+                    fold.merge_store(&SkillStore::load(&sp)?);
+                }
+            } else {
+                folded_stores = None;
+            }
+
+            let mut names: Vec<String> = Vec::new();
+            for entry in
+                std::fs::read_dir(dir).map_err(|e| format!("listing {}: {e}", dir.display()))?
+            {
+                let entry = entry.map_err(|e| format!("listing {}: {e}", dir.display()))?;
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if !(name.starts_with("memory_snapshot.") && name.ends_with(".json")) {
+                    continue;
+                }
+                let bytes = std::fs::read(entry.path())
+                    .map_err(|e| format!("reading {}: {e}", entry.path().display()))?;
+                names.push(name.clone());
+                match snapshots.get(&name) {
+                    None => {
+                        snapshots.insert(name, bytes);
+                    }
+                    Some(prev) if *prev == bytes => {}
+                    Some(_) => {
+                        return Err(format!(
+                            "{}: {name} differs between shards — the shards warm-started \
+                             from different skill stores, so their cells are not slices of \
+                             one experiment; refusing to merge",
+                            dir.display()
+                        ));
+                    }
+                }
+            }
+            names.sort();
+            match &snapshot_names_of_first {
+                None => snapshot_names_of_first = Some(names),
+                Some(first) if *first == names => {}
+                Some(_) => {
+                    return Err(format!(
+                        "{}: warm-start snapshot set differs from {} — a warm shard \
+                         cannot be merged with a cold one (their cells did not see the \
+                         same memory); refusing to merge",
+                        dir.display(),
+                        self.first_dir.display()
+                    ));
+                }
+            }
+        }
+
+        // The authoritative merged store: cold fold of the unioned cells'
+        // observations (exact sums make the order irrelevant). Deduplicated
+        // cells contribute once, which is why this — not the per-shard fold
+        // — is what gets written.
+        let store = SkillStore::from_observations(
+            self.merged
+                .values()
+                .flat_map(|(_, result)| result.skill_obs.iter()),
         );
-    }
+        // Cross-check: with disjoint shards (nothing deduplicated), folding
+        // the per-shard stores reproduces the cell-derived store bit for
+        // bit. A mismatch is the same crash class as a torn tail — a shard
+        // killed between a results append and its store save lags by one
+        // cell — so it is tolerated with a warning; the cell-derived store
+        // is authoritative either way (resuming the shard also reconciles
+        // its store).
+        if self.deduplicated == 0 {
+            if let Some(fold) = &folded_stores {
+                if *fold != store {
+                    crate::log_warn!(
+                        "per-shard skills.json stores lag their checkpoints (interrupted \
+                         shard?); using the store rebuilt from the checkpointed cells"
+                    );
+                }
+            }
+        }
 
-    Ok(MergeReport {
-        inputs: summaries,
-        merged_cells: merged.len(),
-        deduplicated,
-        skill_observations: store.observations,
-        missing_shards,
-    })
+        // Write the output dir: unsharded manifest, canonically-ordered
+        // results.jsonl (atomic via tmp + rename), merged skill store.
+        let out_rd = RunDir::open(&self.out)
+            .map_err(|e| format!("opening output dir {}: {e}", self.out.display()))?;
+        let mut manifest = base;
+        manifest.shards = 1;
+        manifest.shard_index = 0;
+        out_rd
+            .write_manifest(&manifest)
+            .map_err(|e| format!("writing merged manifest: {e}"))?;
+        let mut buf = String::new();
+        for (line, _) in self.merged.values() {
+            buf.push_str(line);
+            buf.push('\n');
+        }
+        let results_path = out_rd.results_path();
+        let tmp = results_path.with_extension("jsonl.tmp");
+        std::fs::write(&tmp, buf).map_err(|e| format!("writing merged results: {e}"))?;
+        std::fs::rename(&tmp, &results_path)
+            .map_err(|e| format!("writing merged results: {e}"))?;
+        store
+            .save(&out_rd.skills_path())
+            .map_err(|e| format!("writing merged skill store: {e}"))?;
+        for (name, bytes) in &snapshots {
+            std::fs::write(out_rd.root().join(name), bytes)
+                .map_err(|e| format!("writing merged snapshot {name}: {e}"))?;
+        }
+
+        // Coverage check: the manifests declare how many shards the matrix
+        // was split into; missing indices mean a partial merge. Supported
+        // (the output can be --resume'd to completion), but never silent.
+        let declared = summaries.iter().map(|s| s.shards).max().unwrap_or(1);
+        let missing_shards: Vec<usize> = (0..declared)
+            .filter(|i| !summaries.iter().any(|s| s.shard_index == *i))
+            .collect();
+        if !missing_shards.is_empty() {
+            crate::log_warn!(
+                "merged {} input(s) but the manifests declare {declared} shard(s); \
+                 missing shard index(es) {missing_shards:?} — the output covers a \
+                 partial matrix",
+                summaries.len()
+            );
+        }
+
+        Ok(MergeReport {
+            inputs: summaries,
+            merged_cells: self.merged.len(),
+            deduplicated: self.deduplicated,
+            skill_observations: store.observations,
+            missing_shards,
+        })
+    }
+}
+
+/// Union per-shard run dirs into `out` in one shot. See the module docs for
+/// the rules. Implemented as a [`MergeWatcher`] that finalizes immediately,
+/// so one-shot and streaming merges share every validation and every output
+/// byte.
+pub fn merge_run_dirs(out: &Path, inputs: &[PathBuf]) -> Result<MergeReport, String> {
+    MergeWatcher::new(out, inputs)?.finalize()
 }

@@ -1,22 +1,27 @@
 //! Layer-3 coordinator: Algorithm 1's closed loop (`loop_runner`) and the
-//! suite-orchestration v2 engine — work-stealing scheduling (`scheduler`),
-//! incremental JSONL checkpointing + resume (`checkpoint`), sharded
-//! execution with run-dir merging (`merge`), and the suite/matrix entry
-//! points (`suite_runner`).
+//! suite-orchestration v2 engine — work-stealing scheduling (`scheduler`,
+//! including epoch-based live memory exchange between shards), incremental
+//! JSONL checkpointing + resume (`checkpoint`), sharded execution with
+//! one-shot *and* streaming run-dir merging (`merge`), the shard process
+//! launcher (`launcher`), and the suite/matrix entry points
+//! (`suite_runner`).
 //!
-//! The run-directory layout and the byte-level merge determinism contract
-//! are specified normatively in `docs/memory-formats.md`.
+//! The run-directory layout, the exchange protocol, and the byte-level
+//! merge determinism contract are specified normatively in
+//! `docs/memory-formats.md`.
 
 #![warn(missing_docs)]
 
 pub mod checkpoint;
+pub mod launcher;
 pub mod loop_runner;
 pub mod merge;
 pub mod scheduler;
 pub mod suite_runner;
 
 pub use checkpoint::{CellKey, RunDir, RunManifest};
+pub use launcher::{launch, LaunchConfig, LaunchReport};
 pub use loop_runner::{run_task, Branch, LoopConfig, RoundRecord, TaskResult};
-pub use merge::{merge_run_dirs, MergeReport};
-pub use scheduler::{Shard, SuiteOptions};
+pub use merge::{merge_run_dirs, MergeReport, MergeWatcher, WatchStatus};
+pub use scheduler::{ExchangeOptions, Shard, SuiteOptions, DEFAULT_EXCHANGE_EPOCH};
 pub use suite_runner::{run_matrix, run_matrix_with, run_suite, run_suite_with, SuiteResult};

@@ -12,10 +12,11 @@
 //!     long-term store and rewrites `skills.json` atomically after each
 //!     task.
 //!
-//! Determinism contract: every cell runs against the same immutable
-//! skill-store *snapshot* taken at run start (and persisted into the run
-//! directory), so results are independent of worker count and completion
-//! order — parallel == serial, and a resumed run reproduces an
+//! Determinism contract: every cell runs against an immutable skill-store
+//! *snapshot* — the run-start snapshot (persisted into the run directory),
+//! advanced only at deterministic exchange-epoch boundaries when live
+//! memory exchange is on — so results are independent of worker count and
+//! completion order — parallel == serial, and a resumed run reproduces an
 //! uninterrupted one bit-for-bit. The *live* store only ever absorbs
 //! additive merges (exact-sum gain totals; generation stamps via `max`),
 //! so its final state is order-independent too — at the bit level. Skill
@@ -29,11 +30,25 @@
 //! streams it to this process's own run dir; `coordinator::merge` unions
 //! the per-shard dirs back into one that is indistinguishable from a
 //! single-process run.
+//!
+//! Live memory exchange: with [`SuiteOptions::exchange`] set, the matrix is
+//! additionally cut into fixed-length *epochs* over the global cell index.
+//! At the end of each epoch every shard publishes the skill-store delta of
+//! its own cells in that window (`<exchange-dir>/<strategy>/epoch-K.shard-I
+//! .json`, written atomically), and before running epoch K+1 it folds every
+//! shard's epoch-K delta into its retrieval snapshot — so late cells
+//! benefit from skills learned anywhere in the fleet. Determinism is
+//! preserved because the epoch cut is a pure function of the matrix, delta
+//! stores fold commutatively at the bit level, and shards *wait* for their
+//! peers at each boundary: the snapshot any cell sees depends only on
+//! (matrix, base memory, epoch length) — never on shard count, worker
+//! count, completion order, or crash/resume history. The protocol is
+//! specified in `docs/memory-formats.md`.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use super::checkpoint::{CellKey, RunDir, RunManifest};
+use super::checkpoint::{strategy_slug, CellKey, RunDir, RunManifest};
 use super::loop_runner::{run_task, LoopConfig, TaskResult};
 use crate::baselines::Strategy;
 use crate::bench_suite::Task;
@@ -78,6 +93,44 @@ impl Shard {
     }
 }
 
+/// Default epoch length (cells) when live memory exchange is enabled
+/// without an explicit `--exchange-epoch`.
+pub const DEFAULT_EXCHANGE_EPOCH: usize = 8;
+
+/// Live memory-exchange configuration: shards publish per-epoch skill-store
+/// deltas into a shared directory and fold every peer's deltas at epoch
+/// boundaries. The on-disk protocol is specified in
+/// `docs/memory-formats.md`.
+#[derive(Debug, Clone)]
+pub struct ExchangeOptions {
+    /// Shared exchange directory (one per distributed run; per-strategy
+    /// subdirectories are derived internally). Every shard of the run must
+    /// point at the same directory.
+    pub dir: PathBuf,
+    /// Cells per epoch, over the global task-major cell index. Must match
+    /// across shards (recorded in the manifest, so resume and merge refuse
+    /// a mismatch).
+    pub epoch_cells: usize,
+    /// How long to wait for a peer's delta at an epoch boundary before
+    /// failing (milliseconds). Must cover a launcher crash-restart cycle.
+    pub wait_timeout_ms: u64,
+    /// Poll interval while waiting for peer deltas (milliseconds).
+    pub poll_ms: u64,
+}
+
+impl ExchangeOptions {
+    /// Exchange through `dir` with `epoch_cells`-cell epochs and default
+    /// wait/poll timings.
+    pub fn new<P: Into<PathBuf>>(dir: P, epoch_cells: usize) -> ExchangeOptions {
+        ExchangeOptions {
+            dir: dir.into(),
+            epoch_cells,
+            wait_timeout_ms: 600_000,
+            poll_ms: 20,
+        }
+    }
+}
+
 /// Orchestration options for one suite run.
 #[derive(Debug, Clone, Default)]
 pub struct SuiteOptions {
@@ -93,6 +146,9 @@ pub struct SuiteOptions {
     /// Run only this shard's slice of the cell matrix (None = all cells).
     /// Each shard must stream to its own run dir; `merge` unions them.
     pub shard: Option<Shard>,
+    /// Epoch-based live memory exchange between shards (None = off, the
+    /// pre-exchange behavior).
+    pub exchange: Option<ExchangeOptions>,
 }
 
 impl SuiteOptions {
@@ -118,6 +174,97 @@ impl SuiteOptions {
         self.shard = Some(Shard { index, count });
         self
     }
+
+    /// Enable epoch-based live memory exchange through `dir`.
+    pub fn with_exchange<P: Into<PathBuf>>(mut self, dir: P, epoch_cells: usize) -> SuiteOptions {
+        self.exchange = Some(ExchangeOptions::new(dir, epoch_cells));
+        self
+    }
+}
+
+/// Path of one shard's delta for one epoch inside a per-strategy exchange
+/// directory.
+fn exchange_delta_path(dir: &Path, epoch: usize, shard_index: usize) -> PathBuf {
+    dir.join(format!("epoch-{epoch}.shard-{shard_index}.json"))
+}
+
+/// Block until a peer's exchange delta appears (writes are atomic renames,
+/// so existence implies a complete file).
+fn wait_for_exchange_file(path: &Path, ex: &ExchangeOptions) -> Result<(), String> {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(ex.wait_timeout_ms);
+    while !path.exists() {
+        if std::time::Instant::now() >= deadline {
+            return Err(format!(
+                "timed out after {}ms waiting for exchange delta {} — a peer shard died \
+                 without being restarted, or the shards disagree about --shards / \
+                 --exchange-epoch / --exchange-dir",
+                ex.wait_timeout_ms,
+                path.display()
+            ));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(ex.poll_ms.max(1)));
+    }
+    Ok(())
+}
+
+/// Publish one epoch delta. Deltas are deterministic (a cold fold of the
+/// window's observations), so an already-present file — written by the
+/// pre-crash process, or by a concurrently resuming peer — must agree; a
+/// disagreeing file means the exchange dir belongs to a different run and
+/// continuing would poison every peer.
+fn write_exchange_delta(path: &Path, delta: &SkillStore) -> Result<(), String> {
+    if path.exists() {
+        let existing = SkillStore::load(path)?;
+        if existing != *delta {
+            return Err(format!(
+                "exchange delta {} disagrees with this run's checkpointed cells; the \
+                 exchange dir was produced by a different run — refusing to continue",
+                path.display()
+            ));
+        }
+        return Ok(());
+    }
+    delta
+        .save(path)
+        .map_err(|e| format!("writing exchange delta {}: {e}", path.display()))
+}
+
+/// Test-only crash hook for the launcher tests and the CI `launch-smoke`
+/// job: with `KS_TEST_CRASH_AFTER=<n>` and `KS_TEST_CRASH_MARKER=<path>`
+/// both set, the process hard-exits (code 86) immediately after appending
+/// its n-th checkpoint line — once per `<path>.shard-<index>` marker file,
+/// so the relaunched process resumes and runs to completion.
+struct CrashHook {
+    after: usize,
+    marker: PathBuf,
+    appended: usize,
+}
+
+impl CrashHook {
+    fn from_env(shard_index: usize) -> Option<CrashHook> {
+        let after: usize = std::env::var("KS_TEST_CRASH_AFTER").ok()?.parse().ok()?;
+        let marker = std::env::var("KS_TEST_CRASH_MARKER").ok()?;
+        if marker.is_empty() || after == 0 {
+            return None;
+        }
+        Some(CrashHook {
+            after,
+            marker: PathBuf::from(format!("{marker}.shard-{shard_index}")),
+            appended: 0,
+        })
+    }
+
+    fn tick(&mut self) {
+        self.appended += 1;
+        if self.appended >= self.after && !self.marker.exists() {
+            let _ = std::fs::write(&self.marker, "crashed\n");
+            crate::log_warn!(
+                "KS_TEST_CRASH_AFTER: simulating a hard kill after {} checkpoint append(s)",
+                self.appended
+            );
+            std::process::exit(86);
+        }
+    }
 }
 
 /// Run one strategy's cells, in deterministic (task-major, seed-minor)
@@ -136,6 +283,11 @@ pub fn run_strategy(
         .collect();
     if let Some(s) = &opts.shard {
         s.validate()?;
+    }
+    if let Some(ex) = &opts.exchange {
+        if ex.epoch_cells == 0 {
+            return Err("--exchange-epoch must be >= 1".to_string());
+        }
     }
     let owns = |ci: usize| opts.shard.map_or(true, |s| s.owns(ci));
 
@@ -169,6 +321,7 @@ pub fn run_strategy(
         fingerprint: RunManifest::fingerprint_tasks(&task_ids),
         shards: opts.shard.map_or(1, |s| s.count),
         shard_index: opts.shard.map_or(0, |s| s.index),
+        exchange_epoch: opts.exchange.as_ref().map_or(0, |ex| ex.epoch_cells),
     };
     let mut restored: std::collections::BTreeMap<usize, TaskResult> = Default::default();
     // Fold of every checkpointed cell's observations (all strategies), so
@@ -299,57 +452,157 @@ pub fn run_strategy(
     }
 
     let mut cfg_run = cfg.clone();
-    cfg_run.skills = snapshot;
+    cfg_run.skills = snapshot.clone();
 
     // ---- dispatch -------------------------------------------------------
-    // Only this shard's slice of the matrix (every cell when unsharded).
-    let mut pending: Vec<usize> = (0..cells.len())
-        .filter(|&ci| owns(ci) && !restored.contains_key(&ci))
-        .collect();
-    if let Some(stop) = opts.stop_after {
-        pending.truncate(stop.saturating_sub(restored.len()));
+    // The matrix is cut into epoch windows over the *global* flat cell
+    // index; without exchange the whole matrix is a single window, which
+    // preserves the pre-exchange scheduler's behavior (and bytes) exactly.
+    let shard = opts.shard.unwrap_or(Shard { index: 0, count: 1 });
+    let epoch_len = opts
+        .exchange
+        .as_ref()
+        .map_or(cells.len().max(1), |ex| ex.epoch_cells);
+    // (Not `div_ceil`: the crate's MSRV predates its stabilization.)
+    let n_windows = (cells.len() + epoch_len - 1) / epoch_len;
+    let exchange_dir = match &opts.exchange {
+        Some(ex) => {
+            let dir = ex.dir.join(strategy_slug(strategy.name));
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("creating exchange dir {}: {e}", dir.display()))?;
+            Some(dir)
+        }
+        None => None,
+    };
+    // The snapshot cells retrieve against. Exchange runs fold every shard's
+    // earlier-epoch deltas in at each boundary; otherwise it stays the
+    // run-start snapshot for the whole run.
+    let mut working: Arc<SkillStore> =
+        snapshot.clone().unwrap_or_else(|| Arc::new(SkillStore::new()));
+    if opts.exchange.is_some() {
+        cfg_run.skills = Some(working.clone());
     }
+    // Epochs whose deltas (from every shard) are already folded into
+    // `working`. Folding is caught up lazily, right before the first window
+    // that actually has cells to run, so resume fast-forward and stop_after
+    // never block on peers they no longer need.
+    let mut folded_through = 0usize;
 
+    let mut crash_hook = CrashHook::from_env(shard.index);
+    let mut budget = opts.stop_after.map(|s| s.saturating_sub(restored.len()));
+    let mut all_fresh: std::collections::BTreeMap<usize, TaskResult> = Default::default();
     let mut sink_err: Option<String> = None;
-    let fresh = pool::run_streaming(
-        &pending,
-        workers,
-        |_, &ci| {
-            let (ti, seed) = cells[ci];
-            let mut c = cfg_run.clone();
-            c.run_seed = seed;
-            run_task(&tasks[ti], strategy, &c)
-        },
-        |ip, r| {
-            let (ti, seed) = cells[pending[ip]];
-            if let Some(rd) = &run_dir {
-                let key = CellKey {
-                    strategy: strategy.name.to_string(),
-                    task_id: tasks[ti].id.clone(),
-                    seed,
-                };
-                if let Err(e) = rd.append(&key, r) {
-                    sink_err.get_or_insert(format!("appending checkpoint: {e}"));
+
+    for w in 0..n_windows {
+        let lo = w * epoch_len;
+        let hi = ((w + 1) * epoch_len).min(cells.len());
+
+        // This shard's unfinished cells in the window, budget-capped.
+        let mut pending: Vec<usize> = (lo..hi)
+            .filter(|&ci| owns(ci) && !restored.contains_key(&ci))
+            .collect();
+        let mut truncated = false;
+        if let Some(b) = budget.as_mut() {
+            if pending.len() > *b {
+                pending.truncate(*b);
+                truncated = true;
+            }
+            *b -= pending.len();
+        }
+
+        if let (Some(ex), Some(dir)) = (&opts.exchange, &exchange_dir) {
+            if !pending.is_empty() {
+                // Epoch boundary: fold every shard's deltas for the epochs
+                // before this window into the working snapshot.
+                // `merge_store` is commutative and associative at the bit
+                // level, so fold order cannot matter; *waiting* for peers
+                // is what makes the snapshot a pure function of the matrix
+                // rather than of timing.
+                while folded_through < w {
+                    let mut folded = (*working).clone();
+                    for peer in 0..shard.count {
+                        let path = exchange_delta_path(dir, folded_through, peer);
+                        wait_for_exchange_file(&path, ex)?;
+                        folded.merge_store(&SkillStore::load(&path)?);
+                    }
+                    working = Arc::new(folded);
+                    folded_through += 1;
                 }
+                cfg_run.skills = Some(working.clone());
             }
-            if let (Some(store), Some(path)) = (live_store.as_mut(), live_path.as_ref()) {
-                store.merge(&r.skill_obs);
-                if let Err(e) = store.save(path) {
-                    sink_err.get_or_insert(format!("saving skill store: {e}"));
+        }
+
+        let fresh = pool::run_streaming(
+            &pending,
+            workers,
+            |_, &ci| {
+                let (ti, seed) = cells[ci];
+                let mut c = cfg_run.clone();
+                c.run_seed = seed;
+                run_task(&tasks[ti], strategy, &c)
+            },
+            |ip, r| {
+                let (ti, seed) = cells[pending[ip]];
+                if let Some(rd) = &run_dir {
+                    let key = CellKey {
+                        strategy: strategy.name.to_string(),
+                        task_id: tasks[ti].id.clone(),
+                        seed,
+                    };
+                    if let Err(e) = rd.append(&key, r) {
+                        sink_err.get_or_insert(format!("appending checkpoint: {e}"));
+                    }
+                    if let Some(hook) = crash_hook.as_mut() {
+                        hook.tick();
+                    }
                 }
+                if let (Some(store), Some(path)) = (live_store.as_mut(), live_path.as_ref()) {
+                    store.merge(&r.skill_obs);
+                    if let Err(e) = store.save(path) {
+                        sink_err.get_or_insert(format!("saving skill store: {e}"));
+                    }
+                }
+                if let Some(rs) = run_store.as_mut() {
+                    // Folded per cell, saved once after the dispatch loop:
+                    // the on-disk copy is only advisory (it is rebuilt from
+                    // the checkpoint on open, and `merge` derives the
+                    // authoritative store from the cells), so per-cell
+                    // rewrites would be wasted I/O.
+                    rs.merge(&r.skill_obs);
+                }
+            },
+        );
+        if let Some(e) = sink_err.take() {
+            return Err(e);
+        }
+        for (ci, r) in pending.iter().copied().zip(fresh) {
+            all_fresh.insert(ci, r);
+        }
+
+        if let Some(dir) = &exchange_dir {
+            // Publish this shard's epoch delta once every owned cell in the
+            // window has a result. A stop_after kill leaves it unwritten;
+            // resume recomputes it from the restored checkpoint cells, so a
+            // crashed shard's peers unblock as soon as it is relaunched.
+            let own: Vec<usize> = (lo..hi).filter(|&ci| owns(ci)).collect();
+            let complete = own
+                .iter()
+                .all(|ci| restored.contains_key(ci) || all_fresh.contains_key(ci));
+            if complete {
+                let delta = SkillStore::from_observations(own.iter().flat_map(|ci| {
+                    restored
+                        .get(ci)
+                        .or_else(|| all_fresh.get(ci))
+                        .map(|r| r.skill_obs.as_slice())
+                        .unwrap_or(&[])
+                        .iter()
+                }));
+                write_exchange_delta(&exchange_delta_path(dir, w, shard.index), &delta)?;
             }
-            if let Some(rs) = run_store.as_mut() {
-                // Folded per cell, saved once after the dispatch loop: the
-                // on-disk copy is only advisory (it is rebuilt from the
-                // checkpoint on open, and `merge` derives the authoritative
-                // store from the cells), so per-cell rewrites would be
-                // wasted I/O.
-                rs.merge(&r.skill_obs);
-            }
-        },
-    );
-    if let Some(e) = sink_err {
-        return Err(e);
+        }
+        if truncated {
+            break;
+        }
     }
     if let (Some(rs), Some(rd)) = (&run_store, &run_dir) {
         rs.save(&rd.skills_path())
@@ -357,15 +610,12 @@ pub fn run_strategy(
     }
 
     // ---- assemble in matrix order ---------------------------------------
-    let mut out = Vec::with_capacity(restored.len() + fresh.len());
-    let mut fresh_iter = fresh.into_iter();
-    let mut next_pending = 0usize;
+    let mut out = Vec::with_capacity(restored.len() + all_fresh.len());
     for ci in 0..cells.len() {
         if let Some(r) = restored.remove(&ci) {
             out.push(r);
-        } else if next_pending < pending.len() && pending[next_pending] == ci {
-            out.push(fresh_iter.next().expect("one fresh result per pending cell"));
-            next_pending += 1;
+        } else if let Some(r) = all_fresh.remove(&ci) {
+            out.push(r);
         }
     }
     Ok(out)

@@ -31,6 +31,12 @@ pub struct ExpConfig {
     pub shards: usize,
     /// This process's slice, in `0..shards` (`--shard-index`).
     pub shard_index: usize,
+    /// Shared live memory-exchange directory (`--exchange-dir`); None =
+    /// exchange off.
+    pub exchange_dir: Option<PathBuf>,
+    /// Cells per exchange epoch (`--exchange-epoch`); 0 picks the default
+    /// when `exchange_dir` is set.
+    pub exchange_epoch: usize,
 }
 
 impl Default for ExpConfig {
@@ -44,6 +50,8 @@ impl Default for ExpConfig {
             memory_dir: None,
             shards: 1,
             shard_index: 0,
+            exchange_dir: None,
+            exchange_epoch: 0,
         }
     }
 }
@@ -71,6 +79,16 @@ impl ExpConfig {
             } else {
                 None
             },
+            exchange: self.exchange_dir.as_ref().map(|dir| {
+                coordinator::ExchangeOptions::new(
+                    dir.clone(),
+                    if self.exchange_epoch == 0 {
+                        coordinator::DEFAULT_EXCHANGE_EPOCH
+                    } else {
+                        self.exchange_epoch
+                    },
+                )
+            }),
         }
     }
 }

@@ -6,7 +6,8 @@
 //!   run-task --task <id> [--strategy <name>]            (single-task trace)
 //!   suite --strategy <name> [--level N]                 (one-strategy suite)
 //!   report --run-dir <dir>                              (streamed results)
-//!   merge --out <dir> <shard-dir>...                    (union shard run dirs)
+//!   merge [--watch] --out <dir> <shard-dir>...          (union shard run dirs)
+//!   launch --shards N --run-dir <dir> [flags]           (spawn+supervise+merge)
 //!   skills inspect|gc --memory-dir <dir>                (learned-store tooling)
 //!   smoke                                               (CI orchestration proof)
 //!
@@ -19,6 +20,10 @@
 //! i's deterministic slice of the (strategy, task, seed) matrix into its
 //! own `--run-dir`; `merge` unions the per-shard dirs into one whose
 //! `report` and skill store are byte-identical to a single-process run.
+//! `launch` wraps the whole dance — it spawns the shard processes,
+//! restarts crashed ones into `--resume`, streams the merge live, and
+//! finalizes it — and `--exchange-epoch N` additionally lets shards trade
+//! learned skills at deterministic epoch boundaries mid-run.
 
 use kernelskill::baselines;
 use kernelskill::bench_suite;
@@ -38,6 +43,13 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
                     run dir, then `merge` unions them)"
             .to_string());
     }
+    let exchange_dir = args.get("exchange-dir").map(std::path::PathBuf::from);
+    let exchange_epoch = args.get_usize("exchange-epoch", 0)?;
+    if exchange_dir.is_none() && exchange_epoch != 0 {
+        return Err("--exchange-epoch requires --exchange-dir (every shard of the run must \
+                    point at one shared exchange directory)"
+            .to_string());
+    }
     Ok(experiments::ExpConfig {
         suite_seed: args.get_u64("suite-seed", defaults.suite_seed)?,
         run_seeds: (0..n_seeds as u64).collect(),
@@ -47,7 +59,21 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
         memory_dir: args.get("memory-dir").map(std::path::PathBuf::from),
         shards,
         shard_index: args.get_usize("shard-index", 0)?,
+        exchange_dir,
+        exchange_epoch,
     })
+}
+
+/// Mark a checkpointed run's directory complete once its whole slice of the
+/// matrix is on disk, so `merge --watch` and `launch` know tail-following
+/// can stop.
+fn finish_run_dir(cfg: &experiments::ExpConfig) -> Result<(), String> {
+    if let Some(dir) = &cfg.run_dir {
+        kernelskill::coordinator::RunDir::open(dir)
+            .and_then(|rd| rd.mark_complete())
+            .map_err(|e| format!("writing completion marker in {}: {e}", dir.display()))?;
+    }
+    Ok(())
 }
 
 fn main() {
@@ -66,21 +92,25 @@ fn run() -> Result<(), String> {
         Some("table1") => {
             let cfg = exp_config(&args)?;
             let (rendered, _) = experiments::table1(&cfg)?;
+            finish_run_dir(&cfg)?;
             println!("Table 1 — Success and Speedup vs Torch Eager\n{rendered}");
         }
         Some("table2") => {
             let cfg = exp_config(&args)?;
             let (rendered, _) = experiments::table2(&cfg)?;
+            finish_run_dir(&cfg)?;
             println!("Table 2 — Memory ablations\n{rendered}");
         }
         Some("table3") => {
             let cfg = exp_config(&args)?;
             let (rendered, _) = experiments::table3(&cfg)?;
+            finish_run_dir(&cfg)?;
             println!("Table 3 — Fast_1\n{rendered}");
         }
         Some("per-round") => {
             let cfg = exp_config(&args)?;
             let (rendered, _) = experiments::per_round_efficiency(&cfg)?;
+            finish_run_dir(&cfg)?;
             println!("Per-round refinement efficiency (§5.4)\n{rendered}");
         }
         Some("trajectory") => {
@@ -220,6 +250,7 @@ fn run() -> Result<(), String> {
                     c.mean_rounds
                 );
             }
+            finish_run_dir(&cfg)?;
             if let Some(dir) = &cfg.run_dir {
                 println!("checkpoint streamed to {}", dir.display());
             }
@@ -231,16 +262,93 @@ fn run() -> Result<(), String> {
         }
         Some("merge") => {
             let out = args.get("out").ok_or("--out <dir> required")?;
-            if args.positional.is_empty() {
+            // The hand-rolled parser reads `--watch <path>` as a flag+value
+            // pair, which would silently swallow the first shard dir (and
+            // drop watch mode) when `--watch` directly precedes a
+            // positional. Reclaim the swallowed path instead: merge output
+            // is input-order-independent, so recovered-first is safe.
+            let watch = args.has("watch") || args.get("watch").is_some();
+            let mut inputs: Vec<std::path::PathBuf> = Vec::new();
+            if let Some(v) = args.get("watch") {
+                inputs.push(std::path::PathBuf::from(v));
+            }
+            inputs.extend(args.positional.iter().map(std::path::PathBuf::from));
+            if inputs.is_empty() {
                 return Err(
-                    "usage: merge --out <dir> <shard-run-dir> [<shard-run-dir>...]".to_string()
+                    "usage: merge [--watch [--interval-ms N]] --out <dir> <shard-run-dir> \
+                     [<shard-run-dir>...]"
+                        .to_string(),
                 );
             }
-            let inputs: Vec<std::path::PathBuf> =
-                args.positional.iter().map(std::path::PathBuf::from).collect();
-            let report = coordinator::merge_run_dirs(std::path::Path::new(out), &inputs)?;
+            let report = if watch {
+                // Streaming merge: follow the shard checkpoints while their
+                // processes are still running, then finalize once every
+                // input carries the `complete` marker. The result is
+                // byte-identical to a one-shot merge of the finished dirs.
+                let interval = args.get_u64("interval-ms", 500)?.max(1);
+                let mut watcher =
+                    coordinator::MergeWatcher::new(std::path::Path::new(out), &inputs)?;
+                let mut last = String::new();
+                loop {
+                    let status = watcher.poll()?;
+                    let line = status.render();
+                    if line != last {
+                        println!("watch: {line}");
+                        last = line;
+                    }
+                    if status.all_complete() {
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(interval));
+                }
+                watcher.finalize()?
+            } else {
+                coordinator::merge_run_dirs(std::path::Path::new(out), &inputs)?
+            };
             print!("{}", report.render());
             println!("merged run dir: {out} (report it with: report --run-dir {out})");
+        }
+        Some("launch") => {
+            let run_dir = args.get("run-dir").ok_or("--run-dir <dir> required")?;
+            if args.get("memory-dir").is_some() {
+                return Err("launch does not take --memory-dir: every shard would fight over \
+                            one live store. Use --exchange-epoch for live cross-shard \
+                            learning, or run the shards by hand with per-shard copies of the \
+                            same skills.json"
+                    .to_string());
+            }
+            if args.get("shard-index").is_some() {
+                return Err("launch owns the shard assignment; drop --shard-index".to_string());
+            }
+            let sub = args.get_or("cmd", "suite").to_string();
+            if !["suite", "table1", "table2", "table3", "per-round"].contains(&sub.as_str()) {
+                return Err(format!(
+                    "launch --cmd {sub:?} is not shardable; expected suite, table1, table2, \
+                     table3, or per-round"
+                ));
+            }
+            let program = std::env::current_exe()
+                .map_err(|e| format!("resolving the current executable: {e}"))?;
+            let shards = args.get_usize("shards", 2)?;
+            let mut lc = coordinator::LaunchConfig::new(program, &sub, run_dir, shards);
+            for flag in ["strategy", "level", "take", "seeds", "suite-seed", "workers"] {
+                if let Some(v) = args.get(flag) {
+                    lc.passthrough.push(format!("--{flag}"));
+                    lc.passthrough.push(v.to_string());
+                }
+            }
+            lc.max_restarts = args.get_usize("max-restarts", 2)?;
+            if args.has("exchange") {
+                lc.exchange_epoch = Some(coordinator::DEFAULT_EXCHANGE_EPOCH);
+            }
+            if args.get("exchange-epoch").is_some() {
+                lc.exchange_epoch = Some(args.get_usize("exchange-epoch", 0)?);
+            }
+            let report = coordinator::launch(&lc)?;
+            print!("{}", report.render());
+            println!(
+                "merged run dir: {run_dir} (report it with: report --run-dir {run_dir})"
+            );
         }
         Some("skills") => return run_skills(&args),
         Some("smoke") => return run_smoke(),
@@ -255,6 +363,7 @@ fn run() -> Result<(), String> {
                  \x20     [--seeds N] [--suite-seed S] [--workers W]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M]\n\
                  \x20     [--shards N --shard-index I]\n\
+                 \x20     [--exchange-dir X --exchange-epoch E]\n\
                  real PJRT path:\n\
                  \x20 verify-artifacts [--seed S] [--tolerance T]\n\
                  \x20 calibrate [--seed S]\n\
@@ -266,6 +375,11 @@ fn run() -> Result<(), String> {
                  orchestration:\n\
                  \x20 report --run-dir D     render tables from streamed results.jsonl\n\
                  \x20 merge --out D S0 S1..  union per-shard run dirs (checkpoints + skill stores)\n\
+                 \x20     [--watch [--interval-ms N]]   follow still-running shards, then finalize\n\
+                 \x20 launch --shards N --run-dir D [--cmd suite|table1|..]\n\
+                 \x20     [--strategy S] [--level L] [--take K] [--seeds M] [--workers W]\n\
+                 \x20     [--exchange-epoch E] [--max-restarts R]\n\
+                 \x20     spawn N shard processes, restart crashes into --resume, merge into D\n\
                  \x20 smoke                  tiny checkpoint/resume/memory end-to-end (CI gate)\n\
                  learned memory (skills.json, see docs/memory-formats.md):\n\
                  \x20 skills inspect --memory-dir M [--device D] [--case SUBSTR]\n\

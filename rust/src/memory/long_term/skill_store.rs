@@ -340,6 +340,24 @@ impl SkillStore {
         }
     }
 
+    /// Cold fold of a batch of observations: an empty store with every stat
+    /// stamped at epoch 1, exactly the shape run-dir stores and the live
+    /// memory-exchange deltas (`exchange/<strategy>/epoch-K.shard-I.json`)
+    /// use. Because the fold starts from the identity and stamps are fixed,
+    /// the result is a pure function of the observation multiset — any
+    /// partitioning of the same cells produces deltas whose
+    /// [`SkillStore::merge_store`] union is bit-identical.
+    pub fn from_observations<'a, I>(obs: I) -> SkillStore
+    where
+        I: IntoIterator<Item = &'a SkillObs>,
+    {
+        let mut store = SkillStore::new();
+        for o in obs {
+            store.observe(o);
+        }
+        store
+    }
+
     /// Fold an entire store into this one: per-(partition, case, method)
     /// stats add (counts and exact gain totals alike), freshness stamps
     /// and the generation clock combine through `max`. This fold is
@@ -888,6 +906,31 @@ mod tests {
         assert_eq!(st.last_gen, 1);
         assert_eq!(s.observations, 3);
         assert_eq!(s.generation, 1, "cold folds land in epoch 1");
+    }
+
+    #[test]
+    fn from_observations_is_partition_independent() {
+        // Any split of one observation multiset into cold deltas must union
+        // (in any order) to the same bytes as the one-shot cold fold — the
+        // exchange protocol's core invariant.
+        let all: Vec<SkillObs> = (0..6)
+            .map(|i| {
+                obs_on(
+                    if i % 2 == 0 { "a100-like" } else { "tpu-like" },
+                    "gemm.naive_loop",
+                    MethodId::TileSmem,
+                    if i % 3 == 0 { None } else { Some(0.1 * i as f64 + 1e15) },
+                )
+            })
+            .collect();
+        let whole = SkillStore::from_observations(&all);
+        let mut pieced = SkillStore::new();
+        for chunk in all.chunks(2).rev().collect::<Vec<_>>() {
+            pieced.merge_store(&SkillStore::from_observations(chunk.iter()));
+        }
+        assert_eq!(whole, pieced);
+        assert_eq!(whole.to_json().to_string(), pieced.to_json().to_string());
+        assert_eq!(whole.generation, 1, "cold deltas live at epoch 1");
     }
 
     #[test]

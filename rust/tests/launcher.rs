@@ -1,0 +1,210 @@
+//! End-to-end battery for the shard launcher: real child processes of the
+//! `kernelskill` binary (CARGO_BIN_EXE), forced crashes via the scheduler's
+//! test hook, crash-restart into `--resume`, streaming merge, and — with
+//! exchange enabled — the live memory-exchange protocol across processes.
+//!
+//! The contract under test is the launch acceptance criterion: `launch
+//! --shards N --run-dir D` (spawn, crash-restart, merge) produces `report`
+//! and `skills.json` byte-identical to a single-process run of the same
+//! matrix, including with memory exchange enabled.
+
+use std::path::PathBuf;
+
+use kernelskill::baselines;
+use kernelskill::bench_suite;
+use kernelskill::coordinator::{self, LaunchConfig, LoopConfig, SuiteOptions};
+use kernelskill::harness::experiments;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ks-launch-{tag}-{}", std::process::id()))
+}
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_kernelskill"))
+}
+
+fn read_bytes(path: &PathBuf) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// The matrix every test here runs: level 1, first 3 tasks, 2 seeds — small
+/// enough for CI, large enough for several exchange epochs.
+const TAKE: usize = 3;
+const SEEDS: usize = 2;
+
+fn launch_cfg(run_dir: &PathBuf, shards: usize) -> LaunchConfig {
+    let mut cfg = LaunchConfig::new(bin(), "suite", run_dir, shards);
+    cfg.passthrough = [
+        "--level", "1", "--take", "3", "--seeds", "2", "--workers", "2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    cfg.max_restarts = 3;
+    // Quarantine the children from an outer test-runner environment (the
+    // crash hook only arms when both variables are non-empty).
+    cfg.child_env = vec![
+        ("KS_TEST_CRASH_AFTER".to_string(), String::new()),
+        ("KS_TEST_CRASH_MARKER".to_string(), String::new()),
+    ];
+    cfg
+}
+
+/// Arm the crash hook: every child shard hard-exits (code 86) right after
+/// its n-th checkpoint append, once per shard marker file.
+fn arm_crash(cfg: &mut LaunchConfig, marker: &PathBuf, after: usize) {
+    cfg.child_env = vec![
+        ("KS_TEST_CRASH_AFTER".to_string(), after.to_string()),
+        (
+            "KS_TEST_CRASH_MARKER".to_string(),
+            marker.to_string_lossy().into_owned(),
+        ),
+    ];
+}
+
+/// In-process single-process reference run of the same matrix.
+fn reference_run(dir: &PathBuf) {
+    let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(TAKE).collect();
+    let seeds: Vec<u64> = (0..SEEDS as u64).collect();
+    coordinator::run_suite_with(
+        &tasks,
+        &baselines::kernelskill(),
+        &LoopConfig::default(),
+        &seeds,
+        4,
+        &SuiteOptions::in_dir(dir),
+    )
+    .unwrap();
+}
+
+#[test]
+fn launch_with_forced_kill_matches_single_process() {
+    let root = tmp_root("kill");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+
+    let single = root.join("single");
+    reference_run(&single);
+
+    let merged = root.join("launched");
+    let marker = root.join("crash");
+    let mut cfg = launch_cfg(&merged, 2);
+    arm_crash(&mut cfg, &marker, 1);
+    let report = coordinator::launch(&cfg).unwrap();
+
+    // The forced kill actually happened and was ridden out.
+    let restarts: usize = report.shards.iter().map(|s| s.restarts).sum();
+    assert!(restarts >= 1, "expected at least one crash-restart: {report:?}");
+    for shard in 0..2 {
+        assert!(
+            root.join(format!("crash.shard-{shard}")).exists(),
+            "shard {shard} never hit the crash hook"
+        );
+    }
+    assert_eq!(report.merge.merged_cells, TAKE * SEEDS);
+    assert!(report.merge.missing_shards.is_empty());
+    assert!(report.render().contains("crash-restart(s)"));
+
+    // ... and the merged output is indistinguishable from one process.
+    assert_eq!(
+        experiments::report_run_dir(&merged).unwrap(),
+        experiments::report_run_dir(&single).unwrap()
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json"))
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn launch_with_exchange_and_kill_matches_single_process_launch() {
+    // With exchange on, the single-process baseline is a --shards 1 launch
+    // with the SAME epoch length: exchange changes the experiment (cells
+    // retrieve against epoch-folded memory), and the determinism contract
+    // is that the result is a pure function of (matrix, base memory, epoch
+    // length) — independent of shard count, crashes, and resumes.
+    let root = tmp_root("exchange");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+
+    let single = root.join("single");
+    let mut cfg = launch_cfg(&single, 1);
+    cfg.exchange_epoch = Some(2);
+    coordinator::launch(&cfg).unwrap();
+
+    let merged = root.join("launched");
+    let marker = root.join("crash");
+    let mut cfg = launch_cfg(&merged, 2);
+    cfg.exchange_epoch = Some(2);
+    arm_crash(&mut cfg, &marker, 1);
+    let report = coordinator::launch(&cfg).unwrap();
+
+    let restarts: usize = report.shards.iter().map(|s| s.restarts).sum();
+    assert!(restarts >= 1, "expected at least one mid-epoch crash-restart");
+    assert_eq!(report.merge.merged_cells, TAKE * SEEDS);
+
+    assert_eq!(
+        experiments::report_run_dir(&merged).unwrap(),
+        experiments::report_run_dir(&single).unwrap()
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json"))
+    );
+    // The cross-process protocol really ran: every epoch delta from every
+    // shard is on disk, and the per-epoch union equals the single-process
+    // deltas bit for bit.
+    let ex2 = merged.join("exchange").join("kernelskill");
+    let ex1 = single.join("exchange").join("kernelskill");
+    for epoch in 0..(TAKE * SEEDS + 1) / 2 {
+        let mut union = kernelskill::memory::long_term::SkillStore::new();
+        for shard in 0..2 {
+            let path = ex2.join(format!("epoch-{epoch}.shard-{shard}.json"));
+            assert!(path.exists(), "missing {}", path.display());
+            union.merge_store(&kernelskill::memory::long_term::SkillStore::load(&path).unwrap());
+        }
+        let solo = kernelskill::memory::long_term::SkillStore::load(
+            &ex1.join(format!("epoch-{epoch}.shard-0.json")),
+        )
+        .unwrap();
+        assert_eq!(
+            union.to_json().to_string(),
+            solo.to_json().to_string(),
+            "epoch {epoch}: sharded delta union must equal the solo delta"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn launch_rejects_bad_configs() {
+    let root = tmp_root("bad");
+    let _ = std::fs::remove_dir_all(&root);
+    let cfg = LaunchConfig::new(bin(), "suite", root.join("out"), 0);
+    assert!(coordinator::launch(&cfg).unwrap_err().contains("--shards"));
+    let mut cfg = LaunchConfig::new(bin(), "suite", root.join("out"), 1);
+    cfg.exchange_epoch = Some(0);
+    assert!(coordinator::launch(&cfg).unwrap_err().contains("--exchange-epoch"));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn launch_fails_cleanly_when_a_shard_cannot_succeed() {
+    // A child that exits non-zero every time must exhaust the restart
+    // budget and surface a pointed error (with the log path), not hang or
+    // panic. An unknown strategy makes the child fail immediately.
+    let root = tmp_root("doomed");
+    let _ = std::fs::remove_dir_all(&root);
+    let mut cfg = LaunchConfig::new(bin(), "suite", root.join("out"), 2);
+    cfg.passthrough = vec!["--strategy".to_string(), "NoSuchStrategy".to_string()];
+    cfg.max_restarts = 1;
+    let err = coordinator::launch(&cfg).unwrap_err();
+    assert!(
+        err.contains("after 1 restart(s)") && err.contains("shard-"),
+        "{err}"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}

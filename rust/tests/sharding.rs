@@ -340,6 +340,300 @@ fn merge_fails_loudly_on_conflicting_duplicate_cells() {
 }
 
 #[test]
+fn merge_with_zero_inputs_is_a_clean_error() {
+    // Regression: this used to reach a `base.expect("at least one input")`
+    // panic path; an empty input list must be a clean CLI-grade error.
+    let root = tmp_root("zero-inputs");
+    let _ = std::fs::remove_dir_all(&root);
+    let err = merge_run_dirs(&root.join("out"), &[]).unwrap_err();
+    assert!(err.contains("at least one input"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn streaming_merge_is_byte_identical_to_one_shot() {
+    // MergeWatcher follows growing checkpoints (torn mid-append tails
+    // included) and must finalize to exactly the bytes a one-shot merge of
+    // the finished dirs writes.
+    let root = tmp_root("stream");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let s0 = root.join("shard0");
+    run_into(&s0, Some((0, 2)));
+    let s1 = root.join("shard1");
+    run_into(&s1, Some((1, 2)));
+    let oneshot = root.join("oneshot");
+    merge_run_dirs(&oneshot, &[s0.clone(), s1.clone()]).unwrap();
+
+    // Re-play the shards as *growing* dirs, polling between appends.
+    let g0 = root.join("grow0");
+    let g1 = root.join("grow1");
+    for (src, dst) in [(&s0, &g0), (&s1, &g1)] {
+        std::fs::create_dir_all(dst).unwrap();
+        std::fs::copy(src.join("manifest.json"), dst.join("manifest.json")).unwrap();
+    }
+    let append = |dst: &PathBuf, text: &str| {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dst.join("results.jsonl"))
+            .unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+    };
+    let lines = |src: &PathBuf| -> Vec<String> {
+        std::fs::read_to_string(src.join("results.jsonl"))
+            .unwrap()
+            .lines()
+            .map(|l| l.to_string())
+            .collect()
+    };
+    let (l0, l1) = (lines(&s0), lines(&s1));
+
+    let streamed = root.join("streamed");
+    let mut watcher =
+        coordinator::MergeWatcher::new(&streamed, &[g0.clone(), g1.clone()]).unwrap();
+    for i in 0..l0.len().max(l1.len()) {
+        if let Some(l) = l0.get(i) {
+            append(&g0, &format!("{l}\n"));
+        }
+        watcher.poll().unwrap();
+        if let Some(l) = l1.get(i) {
+            // Tear this append in two: the fragment (no newline) must not
+            // be consumed by the intervening poll.
+            let (a, b) = l.split_at(l.len() / 2);
+            append(&g1, a);
+            let before = watcher.poll().unwrap().cells;
+            append(&g1, &format!("{b}\n"));
+            let after = watcher.poll().unwrap().cells;
+            assert!(after > before, "completing the torn line must fold a cell");
+        }
+    }
+    for (src, dst) in [(&s0, &g0), (&s1, &g1)] {
+        std::fs::copy(src.join("skills.json"), dst.join("skills.json")).unwrap();
+        RunDir::open(dst).unwrap().mark_complete().unwrap();
+    }
+    let status = watcher.poll().unwrap();
+    assert!(status.all_complete(), "{status:?}");
+    let report = watcher.finalize().unwrap();
+    assert_eq!(report.merged_cells, 12);
+    for f in ["results.jsonl", "skills.json", "manifest.json"] {
+        assert_eq!(
+            read_bytes(&streamed.join(f)),
+            read_bytes(&oneshot.join(f)),
+            "{f} must match the one-shot merge byte for byte"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Suite options for an exchange-enabled run (shortened peer-wait timeout
+/// so a protocol bug fails the test instead of hanging it for 10 minutes).
+fn exchange_opts(
+    exchange_dir: &PathBuf,
+    run_dir: &PathBuf,
+    shard: Option<(usize, usize)>,
+    epoch: usize,
+) -> SuiteOptions {
+    let mut opts = SuiteOptions::in_dir(run_dir).with_exchange(exchange_dir, epoch);
+    if let Some((index, count)) = shard {
+        opts = opts.with_shard(index, count);
+    }
+    if let Some(ex) = opts.exchange.as_mut() {
+        ex.wait_timeout_ms = 60_000;
+    }
+    opts
+}
+
+#[test]
+fn exchange_sharded_threads_match_single_process_with_same_epochs() {
+    // The exchange determinism contract: with live memory exchange on, the
+    // final report and skill store are a pure function of (matrix, base
+    // memory, epoch length) — a 2-shard run trading deltas through a shared
+    // exchange dir merges byte-identical to a single process running the
+    // same epochs alone.
+    let root = tmp_root("exchange");
+    let _ = std::fs::remove_dir_all(&root);
+    let tasks = small_tasks();
+    let strat = baselines::kernelskill();
+    let cfg = LoopConfig::default();
+
+    let single = root.join("single");
+    let ex_single = root.join("ex-single");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &cfg,
+        &SEEDS,
+        4,
+        &exchange_opts(&ex_single, &single, None, 2),
+    )
+    .unwrap();
+
+    let ex = root.join("ex-sharded");
+    let s0 = root.join("shard0");
+    let s1 = root.join("shard1");
+    std::thread::scope(|scope| {
+        let t0 = scope.spawn(|| {
+            coordinator::run_suite_with(
+                &tasks,
+                &strat,
+                &cfg,
+                &SEEDS,
+                4,
+                &exchange_opts(&ex, &s0, Some((0, 2)), 2),
+            )
+            .unwrap();
+        });
+        let t1 = scope.spawn(|| {
+            coordinator::run_suite_with(
+                &tasks,
+                &strat,
+                &cfg,
+                &SEEDS,
+                4,
+                &exchange_opts(&ex, &s1, Some((1, 2)), 2),
+            )
+            .unwrap();
+        });
+        t0.join().unwrap();
+        t1.join().unwrap();
+    });
+
+    let merged = root.join("merged");
+    let report = merge_run_dirs(&merged, &[s0, s1]).unwrap();
+    assert_eq!(report.merged_cells, 6);
+    assert_eq!(
+        experiments::report_run_dir(&merged).unwrap(),
+        experiments::report_run_dir(&single).unwrap()
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json"))
+    );
+    // The protocol actually ran: 3 epochs x 2 shards of published deltas.
+    for epoch in 0..3 {
+        for shard in 0..2 {
+            let delta = ex
+                .join("kernelskill")
+                .join(format!("epoch-{epoch}.shard-{shard}.json"));
+            assert!(delta.exists(), "missing {}", delta.display());
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn exchange_run_killed_mid_epoch_resumes_identically() {
+    // Kill an exchange run mid-epoch (checkpoint tail torn, epoch delta
+    // unpublished), resume it, and require byte-identity with an
+    // uninterrupted run — including every published epoch delta.
+    let root = tmp_root("exchange-resume");
+    let _ = std::fs::remove_dir_all(&root);
+    let tasks = small_tasks();
+    let strat = baselines::kernelskill();
+    let cfg = LoopConfig::default();
+
+    let full = root.join("full");
+    let ex_full = root.join("ex-full");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &cfg,
+        &SEEDS,
+        4,
+        &exchange_opts(&ex_full, &full, None, 2),
+    )
+    .unwrap();
+
+    // Interrupted twin: stop after 3 of 6 cells — one cell into epoch 1 —
+    // and tear the checkpoint tail the way a hard kill mid-append would.
+    let part = root.join("part");
+    let ex_part = root.join("ex-part");
+    let mut opts = exchange_opts(&ex_part, &part, None, 2);
+    opts.stop_after = Some(3);
+    coordinator::run_suite_with(&tasks, &strat, &cfg, &SEEDS, 4, &opts).unwrap();
+    assert!(
+        ex_part.join("kernelskill").join("epoch-0.shard-0.json").exists(),
+        "the completed epoch's delta must be on disk"
+    );
+    assert!(
+        !ex_part.join("kernelskill").join("epoch-1.shard-0.json").exists(),
+        "the interrupted epoch's delta must not be on disk yet"
+    );
+    {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(part.join("results.jsonl"))
+            .unwrap();
+        f.write_all(b"{\"strategy\":\"KernelSkill\",\"task_id\":\"to").unwrap();
+    }
+
+    let mut opts = exchange_opts(&ex_part, &part, None, 2);
+    opts.resume = true;
+    coordinator::run_suite_with(&tasks, &strat, &cfg, &SEEDS, 4, &opts).unwrap();
+
+    assert_eq!(
+        experiments::report_run_dir(&part).unwrap(),
+        experiments::report_run_dir(&full).unwrap()
+    );
+    assert_eq!(
+        read_bytes(&part.join("skills.json")),
+        read_bytes(&full.join("skills.json"))
+    );
+    for epoch in 0..3 {
+        let name = format!("epoch-{epoch}.shard-0.json");
+        assert_eq!(
+            read_bytes(&ex_part.join("kernelskill").join(&name)),
+            read_bytes(&ex_full.join("kernelskill").join(&name)),
+            "{name} must be recomputed bit-exactly on resume"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn merge_refuses_mixing_exchange_and_plain_runs() {
+    // The exchange epoch is part of the experiment identity (cells saw
+    // epoch-folded memory), so a plain shard and an exchange shard of the
+    // "same" matrix may not be merged.
+    let root = tmp_root("exchange-mix");
+    let _ = std::fs::remove_dir_all(&root);
+    let tasks = small_tasks();
+    let strat = baselines::kernelskill();
+    let cfg = LoopConfig::default();
+
+    let s0 = root.join("shard0");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &cfg,
+        &SEEDS,
+        4,
+        &SuiteOptions::in_dir(&s0).with_shard(0, 2),
+    )
+    .unwrap();
+    // Epoch 8 >= the 6-cell matrix: a single window, so the lone exchange
+    // shard never waits on its (absent) peer.
+    let s1 = root.join("shard1");
+    let ex = root.join("ex");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &cfg,
+        &SEEDS,
+        4,
+        &exchange_opts(&ex, &s1, Some((1, 2)), 8),
+    )
+    .unwrap();
+    let err = merge_run_dirs(&root.join("merged"), &[s0, s1]).unwrap_err();
+    assert!(err.contains("different cell matrix"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
 fn merge_refuses_mismatched_matrices_and_missing_manifests() {
     let root = tmp_root("mismatch");
     let _ = std::fs::remove_dir_all(&root);
