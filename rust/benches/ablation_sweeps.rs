@@ -30,9 +30,11 @@ fn main() {
         // ---- rt/at promotion-threshold sweep ----------------------------
         println!("rt/at promotion-threshold sweep (KernelSkill, 100-task slice):");
         for (rt, at) in [(0.0, 0.0), (0.1, 0.1), (0.3, 0.3), (0.6, 0.6), (1.0, 1.0)] {
-            let mut cfg = LoopConfig::default();
-            cfg.rt = rt;
-            cfg.at = at;
+            let cfg = LoopConfig {
+                rt,
+                at,
+                ..LoopConfig::default()
+            };
             let suite =
                 coordinator::run_suite(&slice, &baselines::kernelskill(), &cfg, &[0], workers);
             let promos: f64 = suite.results.iter().map(|r| r.promotions as f64).sum::<f64>()
@@ -80,8 +82,10 @@ fn main() {
         println!("Device-preset robustness (A100-like vs TPU-like, L2 slice):");
         let l2: Vec<_> = bench_suite::level_suite(42, 2).into_iter().take(50).collect();
         for dev in [DeviceSpec::a100_like(), DeviceSpec::tpu_like()] {
-            let mut cfg = LoopConfig::default();
-            cfg.dev = dev.clone();
+            let cfg = LoopConfig {
+                dev: dev.clone(),
+                ..LoopConfig::default()
+            };
             let ks = coordinator::run_suite(&l2, &baselines::kernelskill(), &cfg, &[0], workers);
             let nm = coordinator::run_suite(&l2, &baselines::wo_memory(), &cfg, &[0], workers);
             println!(
@@ -121,14 +125,21 @@ fn main() {
         println!("Persistent-memory transfer (skills learned on L1, applied to L2/L3):");
         let mem = std::env::temp_dir().join(format!("ks-ablation-mem-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&mem);
-        let mut warm_cfg = LoopConfig::default();
-        warm_cfg.memory_dir = Some(mem.clone());
+        let warm_cfg = LoopConfig {
+            memory_dir: Some(mem.clone()),
+            ..LoopConfig::default()
+        };
         let l1: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(50).collect();
         coordinator::run_suite(&l1, &baselines::kernelskill(), &warm_cfg, &[0], workers);
         for level in [2u8, 3] {
             let lv: Vec<_> = bench_suite::level_suite(42, level).into_iter().take(25).collect();
-            let cold =
-                coordinator::run_suite(&lv, &baselines::kernelskill(), &LoopConfig::default(), &[0], workers);
+            let cold = coordinator::run_suite(
+                &lv,
+                &baselines::kernelskill(),
+                &LoopConfig::default(),
+                &[0],
+                workers,
+            );
             let warm =
                 coordinator::run_suite(&lv, &baselines::kernelskill(), &warm_cfg, &[0], workers);
             println!(

@@ -5,9 +5,13 @@
 //!
 //! Regression gate: `-- --min-suite-throughput <task-runs/s>` exits
 //! non-zero when the whole-suite throughput lands below the threshold. The
-//! CI `perf` job runs it as an *advisory* check (shared-runner timings are
-//! too noisy to block merges on; the threshold is set well below the
-//! healthy range so only a real hot-path regression trips it).
+//! CI `perf` job runs it as a *blocking* check at a conservative floor set
+//! well below healthy shared-runner numbers, so only a real hot-path
+//! regression (or a pathological runner) trips it.
+//!
+//! `-- --json-out <path>` additionally writes the measured numbers as one
+//! JSON entry in the `BENCH_perf_hotpath.json` schema (see that file at
+//! the repo root), so the CI log carries machine-readable trajectory data.
 
 use kernelskill::baselines;
 use kernelskill::bench_suite;
@@ -75,9 +79,34 @@ fn main() {
     let throughput = 100.0 / r.median_s;
     println!("suite throughput: {throughput:.0} task-runs/s");
 
-    // Advisory threshold check (see module docs). Parsed by hand: the bench
-    // is a plain `fn main` binary with no CLI layer of its own.
+    // Flags parsed by hand: the bench is a plain `fn main` binary with no
+    // CLI layer of its own.
     let argv: Vec<String> = std::env::args().collect();
+
+    // Machine-readable entry for the BENCH_perf_hotpath.json trajectory.
+    if let Some(i) = argv.iter().position(|a| a == "--json-out") {
+        let path = argv.get(i + 1).cloned().unwrap_or_else(|| {
+            eprintln!("--json-out needs a path argument");
+            std::process::exit(2);
+        });
+        let hotpaths: Vec<String> = results
+            .iter()
+            .map(|r| format!(r#"{{"name":{:?},"median_s":{}}}"#, r.name, r.median_s))
+            .collect();
+        let entry = format!(
+            r#"{{"bench":"perf_hotpath","suite_tasks":100,"suite_median_s":{},"suite_throughput_task_runs_per_s":{},"hotpaths":[{}]}}"#,
+            r.median_s,
+            throughput,
+            hotpaths.join(",")
+        );
+        if let Err(e) = std::fs::write(&path, format!("{entry}\n")) {
+            eprintln!("writing {path}: {e}");
+            std::process::exit(2);
+        }
+        println!("bench entry written to {path}");
+    }
+
+    // Blocking threshold check (see module docs).
     if let Some(i) = argv.iter().position(|a| a == "--min-suite-throughput") {
         let min: f64 = argv
             .get(i + 1)

@@ -105,7 +105,10 @@ pub fn rule_based_exact(a: &CodeFeatures, b: &CodeFeatures) -> bool {
 fn _pattern_exhaustiveness(r: ReductionPattern) {
     // Compile-time reminder: extend corruption logic when patterns grow.
     match r {
-        ReductionPattern::None | ReductionPattern::Row | ReductionPattern::Col | ReductionPattern::Full => {}
+        ReductionPattern::None
+        | ReductionPattern::Row
+        | ReductionPattern::Col
+        | ReductionPattern::Full => {}
     }
 }
 

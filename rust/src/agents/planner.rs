@@ -441,7 +441,9 @@ mod tests {
                 .method;
             if matches!(
                 m,
-                MethodId::FuseElementwise | MethodId::FuseEpilogueReduction | MethodId::HorizontalFuse
+                MethodId::FuseElementwise
+                    | MethodId::FuseEpilogueReduction
+                    | MethodId::HorizontalFuse
             ) {
                 fusion_picks += 1;
             }
@@ -497,6 +499,8 @@ mod tests {
         let (_, _, f, p, _) = setup();
         let c = ctx(&f, &p, &[]);
         let mut rng = Rng::new(1);
-        assert!(plan(&SelectionMode::FreeChoice, &c, &PolicyProfile::chatgpt51(), &mut rng).is_none());
+        assert!(
+            plan(&SelectionMode::FreeChoice, &c, &PolicyProfile::chatgpt51(), &mut rng).is_none()
+        );
     }
 }

@@ -92,7 +92,8 @@ pub fn generate(rng: &mut Rng) -> Vec<Task> {
         g.push(OpKind::Reduction(red), rows, cols, 1, vec![]);
         let waste = rng.lognormal(1.7f64.ln(), 0.3).clamp(1.0, 4.0);
         let risk = if rng.chance(0.15) { rng.log_uniform(0.55, 0.9) } else { 0.12 };
-        push(&mut tasks, "reduction", g, waste, ceiling(rng, 1.35, 0.25), rng.chance(0.2), risk, None);
+        let ceil = ceiling(rng, 1.35, 0.25);
+        push(&mut tasks, "reduction", g, waste, ceil, rng.chance(0.2), risk, None);
     }
 
     // -- 16 normalizations --------------------------------------------------
@@ -115,7 +116,8 @@ pub fn generate(rng: &mut Rng) -> Vec<Task> {
             _ => None,
         };
         let risk = if rng.chance(0.12) { rng.log_uniform(0.55, 0.9) } else { 0.10 };
-        push(&mut tasks, "norm", g, waste, ceiling(rng, 1.45, 0.25), rng.chance(0.25), risk, artifact);
+        let ceil = ceiling(rng, 1.45, 0.25);
+        push(&mut tasks, "norm", g, waste, ceil, rng.chance(0.25), risk, artifact);
     }
 
     // -- 10 elementwise ------------------------------------------------------
@@ -127,8 +129,13 @@ pub fn generate(rng: &mut Rng) -> Vec<Task> {
         g.push(OpKind::Elementwise(ew), rows, cols, 1, vec![]);
         // Transcendental activations: eager sometimes uses a slow composed
         // form (mish = softplus+tanh+mul as three kernels).
-        let waste = if i % 5 == 1 { rng.lognormal(2.6f64.ln(), 0.3) } else { rng.lognormal(1.15f64.ln(), 0.12) };
-        push(&mut tasks, "elementwise", g, waste.clamp(1.0, 6.0), ceiling(rng, 1.03, 0.10), false, 0.03, None);
+        let waste = if i % 5 == 1 {
+            rng.lognormal(2.6f64.ln(), 0.3)
+        } else {
+            rng.lognormal(1.15f64.ln(), 0.12)
+        };
+        let ceil = ceiling(rng, 1.03, 0.10);
+        push(&mut tasks, "elementwise", g, waste.clamp(1.0, 6.0), ceil, false, 0.03, None);
     }
 
     // -- 8 data movement ------------------------------------------------------

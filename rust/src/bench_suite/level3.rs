@@ -18,7 +18,13 @@ fn dim(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
 
 /// One transformer encoder block: qkv projections, attention score GEMM,
 /// softmax, value GEMM, output projection, residual/norm, MLP.
-fn transformer_block(g: &mut KernelGraph, rng: &mut Rng, seq: u64, d: u64, prev_in: Option<usize>) -> usize {
+fn transformer_block(
+    g: &mut KernelGraph,
+    rng: &mut Rng,
+    seq: u64,
+    d: u64,
+    prev_in: Option<usize>,
+) -> usize {
     let inp = prev_in.map(|p| vec![p]).unwrap_or_default();
     let q = g.push(OpKind::MatMul, seq, d, d, inp.clone());
     let k = g.push(OpKind::MatMul, seq, d, d, inp.clone());

@@ -65,6 +65,12 @@ pub struct RunManifest {
     /// exchange run retrieve against epoch-folded snapshots, so results
     /// from different epoch lengths may not be mixed by resume *or* merge.
     pub exchange_epoch: usize,
+    /// Device preset the run priced against (`DeviceSpec::name`). Part of
+    /// the experiment identity: the cost model and the skill-store
+    /// partition observations land in both depend on it, so results from
+    /// different devices may not be mixed by resume or merge. Pre-device
+    /// manifests read as the legacy (A100-like) preset.
+    pub device: String,
 }
 
 impl RunManifest {
@@ -80,10 +86,11 @@ impl RunManifest {
 
     /// True when `other` describes the same (strategy-independent) cell
     /// matrix — shard fields excluded, since different shards of one run
-    /// legitimately differ there. The exchange epoch *is* included: an
-    /// exchange run's cells saw epoch-folded memory, so its results are not
-    /// slices of a differently-epoched experiment. This is `merge`'s
-    /// compatibility check.
+    /// legitimately differ there. The exchange epoch and the device preset
+    /// *are* included: an exchange run's cells saw epoch-folded memory, and
+    /// a run's cells were priced against (and recorded skills for) one
+    /// device — neither is a slice of a differently-configured experiment.
+    /// This is `merge`'s compatibility check.
     pub fn same_matrix(&self, other: &RunManifest) -> bool {
         self.n_tasks == other.n_tasks
             && self.seeds == other.seeds
@@ -91,6 +98,7 @@ impl RunManifest {
             && self.at == other.at
             && self.fingerprint == other.fingerprint
             && self.exchange_epoch == other.exchange_epoch
+            && self.device == other.device
     }
 
     fn to_json(&self) -> Json {
@@ -107,6 +115,7 @@ impl RunManifest {
             ("shards", json::num(self.shards as f64)),
             ("shard_index", json::num(self.shard_index as f64)),
             ("exchange_epoch", json::num(self.exchange_epoch as f64)),
+            ("device", json::s(&self.device)),
         ])
     }
 
@@ -135,6 +144,12 @@ impl RunManifest {
         let shard_index = j.get("shard_index").and_then(|v| v.as_usize()).unwrap_or(0);
         // Pre-exchange manifests never ran with live memory exchange.
         let exchange_epoch = j.get("exchange_epoch").and_then(|v| v.as_usize()).unwrap_or(0);
+        // Pre-device manifests were all priced against the default preset.
+        let device = j
+            .get("device")
+            .and_then(|v| v.as_str())
+            .unwrap_or(crate::memory::long_term::skill_store::LEGACY_DEVICE)
+            .to_string();
         Ok(RunManifest {
             n_tasks,
             seeds,
@@ -144,6 +159,7 @@ impl RunManifest {
             shards,
             shard_index,
             exchange_epoch,
+            device,
         })
     }
 }
@@ -482,8 +498,12 @@ pub fn schedule_from_json(j: &Json) -> Result<Schedule, String> {
 
 fn branch_to_json(b: &Branch) -> Json {
     match b {
-        Branch::Optimize(m) => json::obj(vec![("t", json::s("optimize")), ("m", json::s(m.name()))]),
-        Branch::Repair(fix) => json::obj(vec![("t", json::s("repair")), ("fix", json::num(*fix as f64))]),
+        Branch::Optimize(m) => {
+            json::obj(vec![("t", json::s("optimize")), ("m", json::s(m.name()))])
+        }
+        Branch::Repair(fix) => {
+            json::obj(vec![("t", json::s("repair")), ("fix", json::num(*fix as f64))])
+        }
         Branch::Revert => json::obj(vec![("t", json::s("revert"))]),
         Branch::Converged => json::obj(vec![("t", json::s("converged"))]),
     }
@@ -760,6 +780,7 @@ mod tests {
             shards: 3,
             shard_index: 2,
             exchange_epoch: 4,
+            device: "tpu-like".to_string(),
         };
         rd.write_manifest(&m).unwrap();
         assert_eq!(rd.read_manifest().unwrap(), Some(m));
@@ -780,6 +801,7 @@ mod tests {
         assert_eq!(m.shards, 1);
         assert_eq!(m.shard_index, 0);
         assert_eq!(m.exchange_epoch, 0, "pre-exchange manifests read as exchange-off");
+        assert_eq!(m.device, "a100-like", "pre-device manifests read as the legacy preset");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -794,6 +816,7 @@ mod tests {
             shards: 1,
             shard_index: 0,
             exchange_epoch: 0,
+            device: "a100-like".to_string(),
         };
         let mut other_shard = base.clone();
         other_shard.shards = 4;
@@ -807,6 +830,11 @@ mod tests {
         let mut other_epoch = base.clone();
         other_epoch.exchange_epoch = 8;
         assert!(!base.same_matrix(&other_epoch));
+        // So is a different device preset: its cells were priced against
+        // different hardware and recorded skills in a different partition.
+        let mut other_device = base.clone();
+        other_device.device = "tpu-like".to_string();
+        assert!(!base.same_matrix(&other_device));
     }
 
     #[test]

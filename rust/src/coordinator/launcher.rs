@@ -1,30 +1,50 @@
-//! Shard launcher: one command that runs a whole distributed suite.
+//! Shard launchers: one command that runs a whole distributed suite —
+//! on one machine (`launch`) or across many (`launch --manifest` +
+//! `worker`).
 //!
-//! `launch` replaces the hand-run N-process + `merge` dance: it spawns
-//! `--shards N` child processes of this very binary (std::process only —
-//! nothing to install), one per shard of the cell matrix, each streaming
-//! to `<run-dir>/shard-<i>`; monitors them; restarts a crashed child with
-//! `--resume` (children are always spawned resumable, so a restart picks
-//! up exactly at the checkpointed cells); follows the shard checkpoints
-//! live through [`MergeWatcher`]; and finalizes the streaming merge into
-//! `<run-dir>` itself once every child has exited cleanly. The merged
-//! output is byte-identical to a single-process run of the same matrix —
-//! the `tests/launcher.rs` battery and the CI `launch-smoke` job (which
-//! force-kills a child mid-run) pin that down.
+//! **Single-machine `launch`** replaces the hand-run N-process + `merge`
+//! dance: it spawns `--shards N` child processes of this very binary
+//! (std::process only — nothing to install), one per shard of the cell
+//! matrix, each streaming to `<run-dir>/shard-<i>`; monitors them;
+//! restarts a crashed child with `--resume` (children are always spawned
+//! resumable, so a restart picks up exactly at the checkpointed cells);
+//! follows the shard checkpoints live through [`MergeWatcher`]; and
+//! finalizes the streaming merge into `<run-dir>` itself once every child
+//! has exited cleanly. The merged output is byte-identical to a
+//! single-process run of the same matrix — the `tests/launcher.rs` battery
+//! and the CI `launch-smoke` job (which force-kills a child mid-run) pin
+//! that down.
+//!
+//! **Cross-machine launch** splits the same dance over run-dir transports
+//! (`coordinator::transport`): each machine runs the [`run_worker`] loop —
+//! spawn and supervise its manifest-assigned slice of the global shards,
+//! publish their run dirs through its transport, pull the fleet's exchange
+//! deltas back down — while one machine runs the [`launch_workers`]
+//! pull-based supervisor: tail-sync every worker's checkpoints into local
+//! mirrors, feed them to the *same* [`MergeWatcher`], relay exchange
+//! deltas between workers, and finalize. Because every byte still flows
+//! through the ordinary merge path, the final output is byte-identical to
+//! a single-process run — independent of worker placement, sync timing,
+//! worker kills, and interrupted transfers (`tests/distributed.rs`, CI
+//! `multi-node-smoke`).
 //!
 //! With [`LaunchConfig::exchange_epoch`] set, children run with epoch-based
-//! live memory exchange through `<run-dir>/exchange` (see
-//! `coordinator::scheduler` and `docs/memory-formats.md`): late shards
-//! retrieve against skills learned anywhere in the fleet, and the result
-//! is still a pure function of (matrix, base memory, epoch length) —
-//! byte-identical to a `--shards 1` launch with the same epoch length.
+//! live memory exchange (see `coordinator::scheduler` and
+//! `docs/memory-formats.md`): late shards retrieve against skills learned
+//! anywhere in the fleet, and the result is still a pure function of
+//! (matrix, base memory, epoch length) — byte-identical to a `--shards 1`
+//! launch with the same epoch length.
 
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::checkpoint::RunDir;
 use super::merge::{MergeReport, MergeWatcher};
+use super::transport::{
+    up_shard_rel, ExchangeHub, ExchangePull, ExchangePush, RunDirTransport, ShardPull, ShardPush,
+    WorkerManifest, WorkerSpec, UP_EXCHANGE,
+};
 
 /// What to launch and how to supervise it.
 #[derive(Debug, Clone)]
@@ -142,57 +162,143 @@ struct ReapOnDrop<'a>(&'a mut Vec<ShardProc>);
 
 impl Drop for ReapOnDrop<'_> {
     fn drop(&mut self) {
-        for s in self.0.iter_mut() {
-            if let Some(child) = s.child.as_mut() {
-                let _ = child.kill();
-                let _ = child.wait();
-            }
+        reap_all(self.0);
+    }
+}
+
+fn reap_all(procs: &mut [ShardProc]) {
+    for s in procs.iter_mut() {
+        if let Some(child) = s.child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
         }
     }
 }
 
-fn spawn_shard(cfg: &LaunchConfig, index: usize, resume_note: bool) -> Result<Child, String> {
-    let dir = shard_dir(&cfg.run_dir, index);
-    let log_path = cfg.run_dir.join(format!("shard-{index}.log"));
+/// Everything needed to spawn (or respawn) one shard child process.
+struct ChildParams {
+    program: PathBuf,
+    subcommand: String,
+    passthrough: Vec<String>,
+    /// Run dir the child streams to.
+    dir: PathBuf,
+    /// Captured stdout/stderr log.
+    log_path: PathBuf,
+    /// Fleet-wide shard count.
+    total_shards: usize,
+    /// This child's global shard index.
+    index: usize,
+    /// Live memory exchange: (shared exchange dir, epoch length).
+    exchange: Option<(PathBuf, usize)>,
+    env: Vec<(String, String)>,
+}
+
+fn spawn_child(p: &ChildParams, resume_note: bool) -> Result<Child, String> {
     let log = std::fs::OpenOptions::new()
         .create(true)
         .append(true)
-        .open(&log_path)
-        .map_err(|e| format!("opening {}: {e}", log_path.display()))?;
+        .open(&p.log_path)
+        .map_err(|e| format!("opening {}: {e}", p.log_path.display()))?;
     let log_err = log
         .try_clone()
-        .map_err(|e| format!("opening {}: {e}", log_path.display()))?;
-    let mut cmd = Command::new(&cfg.program);
-    cmd.arg(&cfg.subcommand)
-        .args(&cfg.passthrough)
+        .map_err(|e| format!("opening {}: {e}", p.log_path.display()))?;
+    let mut cmd = Command::new(&p.program);
+    cmd.arg(&p.subcommand)
+        .args(&p.passthrough)
         .arg("--run-dir")
-        .arg(&dir)
+        .arg(&p.dir)
         .arg("--shards")
-        .arg(cfg.shards.to_string())
+        .arg(p.total_shards.to_string())
         .arg("--shard-index")
-        .arg(index.to_string())
+        .arg(p.index.to_string())
         // Children are always resumable: the first run of a fresh dir is a
         // no-op resume, and a crash-restart picks up at the checkpoint.
         .arg("--resume");
-    if let Some(epoch) = cfg.exchange_epoch {
+    if let Some((dir, epoch)) = &p.exchange {
         cmd.arg("--exchange-dir")
-            .arg(cfg.run_dir.join("exchange"))
+            .arg(dir)
             .arg("--exchange-epoch")
             .arg(epoch.to_string());
     }
-    for (k, v) in &cfg.child_env {
+    for (k, v) in &p.env {
         cmd.env(k, v);
     }
     cmd.stdin(Stdio::null()).stdout(log).stderr(log_err);
     let child = cmd
         .spawn()
-        .map_err(|e| format!("spawning shard {index} ({}): {e}", cfg.program.display()))?;
+        .map_err(|e| format!("spawning shard {} ({}): {e}", p.index, p.program.display()))?;
     if resume_note {
-        crate::log_warn!("shard {index}: relaunched with --resume (pid {})", child.id());
+        crate::log_warn!("shard {}: relaunched with --resume (pid {})", p.index, child.id());
     } else {
-        crate::log_info!("shard {index}: spawned (pid {})", child.id());
+        crate::log_info!("shard {}: spawned (pid {})", p.index, child.id());
     }
     Ok(child)
+}
+
+fn shard_params(cfg: &LaunchConfig, index: usize) -> ChildParams {
+    ChildParams {
+        program: cfg.program.clone(),
+        subcommand: cfg.subcommand.clone(),
+        passthrough: cfg.passthrough.clone(),
+        dir: shard_dir(&cfg.run_dir, index),
+        log_path: cfg.run_dir.join(format!("shard-{index}.log")),
+        total_shards: cfg.shards,
+        index,
+        exchange: cfg
+            .exchange_epoch
+            .map(|epoch| (cfg.run_dir.join("exchange"), epoch)),
+        env: cfg.child_env.clone(),
+    }
+}
+
+/// One supervision pass over the children: reap clean exits, restart
+/// crashes with `--resume` (bounded by `max_restarts`), and report whether
+/// every child is done. A shard that exhausts its crash budget is a fatal
+/// error naming its log.
+fn poll_procs(
+    procs: &mut [ShardProc],
+    max_restarts: usize,
+    log_dir: &Path,
+    respawn: &mut dyn FnMut(usize) -> Result<Child, String>,
+) -> Result<bool, String> {
+    let mut all_done = true;
+    for s in procs.iter_mut() {
+        if s.done {
+            continue;
+        }
+        all_done = false;
+        let Some(child) = s.child.as_mut() else {
+            continue;
+        };
+        match child.try_wait() {
+            Ok(None) => {}
+            Ok(Some(status)) if status.success() => {
+                s.child = None;
+                s.done = true;
+            }
+            Ok(Some(status)) => {
+                s.child = None;
+                if s.restarts >= max_restarts {
+                    return Err(format!(
+                        "shard {} failed with {status} after {} restart(s); see {}",
+                        s.index,
+                        s.restarts,
+                        log_dir.join(format!("shard-{}.log", s.index)).display()
+                    ));
+                }
+                s.restarts += 1;
+                crate::log_warn!(
+                    "shard {} exited with {status}; restarting ({}/{})",
+                    s.index,
+                    s.restarts,
+                    max_restarts
+                );
+                s.child = Some(respawn(s.index)?);
+            }
+            Err(e) => return Err(format!("waiting on shard {}: {e}", s.index)),
+        }
+    }
+    Ok(all_done)
 }
 
 /// Spawn, supervise, crash-restart, and merge a sharded run. See the module
@@ -230,72 +336,32 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport, String> {
     for index in 0..cfg.shards {
         procs.push(ShardProc {
             index,
-            child: Some(spawn_shard(cfg, index, false)?),
+            child: Some(spawn_child(&shard_params(cfg, index), false)?),
             restarts: 0,
             done: false,
         });
     }
 
     let mut last_cells = usize::MAX;
-    let supervise = |procs: &mut Vec<ShardProc>,
-                     watcher: &mut MergeWatcher,
-                     last_cells: &mut usize|
-     -> Result<bool, String> {
-        let mut all_done = true;
-        for s in procs.iter_mut() {
-            if s.done {
-                continue;
-            }
-            all_done = false;
-            let Some(child) = s.child.as_mut() else {
-                continue;
-            };
-            match child.try_wait() {
-                Ok(None) => {}
-                Ok(Some(status)) if status.success() => {
-                    s.child = None;
-                    s.done = true;
-                }
-                Ok(Some(status)) => {
-                    s.child = None;
-                    if s.restarts >= cfg.max_restarts {
-                        return Err(format!(
-                            "shard {} failed with {status} after {} restart(s); see {}",
-                            s.index,
-                            s.restarts,
-                            cfg.run_dir.join(format!("shard-{}.log", s.index)).display()
-                        ));
-                    }
-                    s.restarts += 1;
-                    crate::log_warn!(
-                        "shard {} exited with {status}; restarting ({}/{})",
-                        s.index,
-                        s.restarts,
-                        cfg.max_restarts
-                    );
-                    s.child = Some(spawn_shard(cfg, s.index, true)?);
-                }
-                Err(e) => return Err(format!("waiting on shard {}: {e}", s.index)),
-            }
-        }
-        // Live streaming merge: fold whatever the shards appended since the
-        // last cycle and narrate progress on change.
-        let status = watcher.poll()?;
-        if status.cells != *last_cells {
-            *last_cells = status.cells;
-            crate::log_info!("launch: {}", status.render());
-        }
-        Ok(all_done)
-    };
-
     {
         let guard = ReapOnDrop(&mut procs);
         loop {
-            match supervise(&mut *guard.0, &mut watcher, &mut last_cells) {
-                Ok(true) => break,
-                Ok(false) => std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1))),
-                Err(e) => return Err(e), // guard kills the survivors
+            // Any error below returns out of `launch`; the guard kills the
+            // surviving children on its way out.
+            let all_done = poll_procs(&mut *guard.0, cfg.max_restarts, &cfg.run_dir, &mut |i| {
+                spawn_child(&shard_params(cfg, i), true)
+            })?;
+            // Live streaming merge: fold whatever the shards appended since
+            // the last cycle and narrate progress on change.
+            let status = watcher.poll()?;
+            if status.cells != last_cells {
+                last_cells = status.cells;
+                crate::log_info!("launch: {}", status.render());
             }
+            if all_done {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)));
         }
         // All children exited cleanly; nothing left for the guard to reap.
     }
@@ -312,6 +378,581 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport, String> {
                 dir: shard_dir(&cfg.run_dir, s.index),
                 log: cfg.run_dir.join(format!("shard-{}.log", s.index)),
                 restarts: s.restarts,
+            })
+            .collect(),
+        merge,
+    })
+}
+
+// ------------------------------------------------------------------------
+// Cross-machine: the worker side
+// ------------------------------------------------------------------------
+
+/// What one worker machine runs: its manifest row's shard range, published
+/// through its manifest row's transport.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Binary to spawn — normally `std::env::current_exe()`.
+    pub program: PathBuf,
+    /// Subcommand the shard children run (`suite`, `table1`, …). Every
+    /// worker of a fleet must use the same subcommand and passthrough
+    /// flags; a mismatch is caught by the coordinator's manifest
+    /// compatibility check at merge time.
+    pub subcommand: String,
+    /// Flags forwarded verbatim to every shard child.
+    pub passthrough: Vec<String>,
+    /// The validated fleet manifest.
+    pub manifest: WorkerManifest,
+    /// Which manifest row this machine is.
+    pub worker_id: String,
+    /// Local scratch directory: shard run dirs (unless the transport is
+    /// zero-copy), child logs, and the local exchange mirror live here.
+    pub run_dir: PathBuf,
+    /// Crash budget per shard child (same semantics as [`LaunchConfig`]).
+    pub max_restarts: usize,
+    /// Supervision/sync poll interval in milliseconds.
+    pub poll_ms: u64,
+    /// Epoch length for live memory exchange (must match the rest of the
+    /// fleet; `None` = exchange off).
+    pub exchange_epoch: Option<usize>,
+    /// Consecutive failed sync cycles tolerated before the worker gives up
+    /// (transient transport errors are retried; a vanished root is fatal
+    /// immediately).
+    pub sync_error_budget: usize,
+    /// Extra environment variables for the shard children.
+    pub child_env: Vec<(String, String)>,
+}
+
+impl WorkerConfig {
+    /// A worker running `subcommand` as manifest row `worker_id`, with
+    /// default supervision settings.
+    pub fn new<P: Into<PathBuf>, Q: Into<PathBuf>>(
+        program: P,
+        subcommand: &str,
+        run_dir: Q,
+        manifest: WorkerManifest,
+        worker_id: &str,
+    ) -> WorkerConfig {
+        WorkerConfig {
+            program: program.into(),
+            subcommand: subcommand.to_string(),
+            passthrough: Vec::new(),
+            manifest,
+            worker_id: worker_id.to_string(),
+            run_dir: run_dir.into(),
+            max_restarts: 2,
+            poll_ms: 100,
+            exchange_epoch: None,
+            sync_error_budget: 100,
+            child_env: Vec::new(),
+        }
+    }
+}
+
+/// Outcome of a successful [`run_worker`].
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    /// Which manifest row ran.
+    pub worker_id: String,
+    /// Per-shard supervision outcomes (global shard indices).
+    pub shards: Vec<ShardOutcome>,
+    /// Transport sync cycles executed.
+    pub sync_cycles: usize,
+}
+
+impl WorkerReport {
+    /// Human-readable multi-line summary (the `worker` CLI output).
+    pub fn render(&self) -> String {
+        let restarts: usize = self.shards.iter().map(|s| s.restarts).sum();
+        let mut out = format!(
+            "worker {}: {} shard(s) done, {} crash-restart(s), {} sync cycle(s)\n",
+            self.worker_id,
+            self.shards.len(),
+            restarts,
+            self.sync_cycles
+        );
+        for s in &self.shards {
+            out.push_str(&format!(
+                "  shard {}  {} restart(s)  log {}\n",
+                s.index,
+                s.restarts,
+                s.log.display()
+            ));
+        }
+        out
+    }
+}
+
+/// Test hook for the distributed batteries and the CI `multi-node-smoke`
+/// job: with `KS_TEST_WORKER_CRASH_AFTER_SYNCS=<n>` and
+/// `KS_TEST_WORKER_CRASH_MARKER=<path>` both set, the worker simulates its
+/// whole machine dying after its n-th sync cycle — it hard-kills every
+/// shard child and exits 86 — once per `<path>.worker-<id>` marker, so the
+/// restarted worker resumes and runs to completion.
+struct WorkerCrashHook {
+    after: usize,
+    marker: PathBuf,
+    cycles: usize,
+}
+
+impl WorkerCrashHook {
+    fn from_env(worker_id: &str) -> Option<WorkerCrashHook> {
+        let after: usize = std::env::var("KS_TEST_WORKER_CRASH_AFTER_SYNCS")
+            .ok()?
+            .parse()
+            .ok()?;
+        let marker = std::env::var("KS_TEST_WORKER_CRASH_MARKER").ok()?;
+        if marker.is_empty() || after == 0 {
+            return None;
+        }
+        Some(WorkerCrashHook {
+            after,
+            marker: PathBuf::from(format!("{marker}.worker-{worker_id}")),
+            cycles: 0,
+        })
+    }
+
+    fn tick(&mut self, procs: &mut [ShardProc]) {
+        self.cycles += 1;
+        if self.cycles >= self.after && !self.marker.exists() {
+            let _ = std::fs::write(&self.marker, "crashed\n");
+            crate::log_warn!(
+                "KS_TEST_WORKER_CRASH_AFTER_SYNCS: simulating a dead worker machine after \
+                 {} sync cycle(s)",
+                self.cycles
+            );
+            reap_all(procs);
+            std::process::exit(86);
+        }
+    }
+}
+
+/// One worker-side transport sync pass: push the shard run dirs and own
+/// exchange deltas up, install the fleet's deltas down.
+fn worker_sync_cycle(
+    pushes: &mut [ShardPush],
+    exchange_push: &mut Option<ExchangePush>,
+    exchange_pull: &mut Option<ExchangePull>,
+    transport: &dyn RunDirTransport,
+) -> Result<bool, String> {
+    let mut progress = false;
+    for push in pushes.iter_mut() {
+        progress |= push.cycle(transport)?;
+    }
+    if let Some(xp) = exchange_push.as_mut() {
+        progress |= xp.cycle(transport)?;
+    }
+    if let Some(xl) = exchange_pull.as_mut() {
+        progress |= xl.cycle(transport)?;
+    }
+    Ok(progress)
+}
+
+/// Run this machine's manifest row: spawn and supervise its shard range
+/// (with the same crash-restart policy as [`launch`]), publish the shard
+/// run dirs through the row's transport, and pull the fleet's exchange
+/// deltas down for the local shards to fold. Restart-safe: a rerun resumes
+/// the children from their checkpoints and the pushes from the transport's
+/// current state. Returns once every shard has finished *and* every byte
+/// (including the `complete` markers) is published.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
+    let spec = cfg.manifest.worker(&cfg.worker_id).ok_or_else(|| {
+        format!(
+            "worker id {:?} is not in the manifest (known: {:?})",
+            cfg.worker_id,
+            cfg.manifest.worker_ids()
+        )
+    })?;
+    if let Some(0) = cfg.exchange_epoch {
+        return Err("--exchange-epoch must be >= 1".to_string());
+    }
+    std::fs::create_dir_all(&cfg.run_dir)
+        .map_err(|e| format!("creating {}: {e}", cfg.run_dir.display()))?;
+    let transport = spec.transport.build()?;
+    // Zero-copy transports (a shared filesystem) let the children stream
+    // straight into the transport root; otherwise they run in local dirs
+    // the push engines mirror outward.
+    let zero_copy = transport.local_dir("up").is_some();
+    crate::log_info!(
+        "worker {}: shards {}-{} via {}{}",
+        spec.id,
+        spec.shard_lo,
+        spec.shard_hi,
+        transport.describe(),
+        if zero_copy { " (zero-copy)" } else { "" }
+    );
+
+    let indices: Vec<usize> = spec.shard_indices().collect();
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    for &i in &indices {
+        let dir = transport
+            .local_dir(&up_shard_rel(i))
+            .unwrap_or_else(|| cfg.run_dir.join(format!("shard-{i}")));
+        std::fs::create_dir_all(&dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        dirs.push(dir);
+    }
+    let exchange_dir = match cfg.exchange_epoch {
+        Some(_) => {
+            let dir = transport
+                .local_dir(UP_EXCHANGE)
+                .unwrap_or_else(|| cfg.run_dir.join("exchange"));
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+            Some(dir)
+        }
+        None => None,
+    };
+
+    let mut pushes: Vec<ShardPush> = Vec::new();
+    if !zero_copy {
+        for (&i, dir) in indices.iter().zip(&dirs) {
+            pushes.push(ShardPush::new(dir, i, transport.as_ref())?);
+        }
+    }
+    let mut exchange_push = match (&exchange_dir, zero_copy) {
+        (Some(dir), false) => Some(ExchangePush::new(dir, indices.clone())),
+        _ => None,
+    };
+    let mut exchange_pull = exchange_dir.as_ref().map(|dir| ExchangePull::new(dir));
+
+    let child_params = |i: usize, dir: &Path| ChildParams {
+        program: cfg.program.clone(),
+        subcommand: cfg.subcommand.clone(),
+        passthrough: cfg.passthrough.clone(),
+        dir: dir.to_path_buf(),
+        log_path: cfg.run_dir.join(format!("shard-{i}.log")),
+        total_shards: cfg.manifest.total_shards,
+        index: i,
+        exchange: exchange_dir
+            .as_ref()
+            .and_then(|d| cfg.exchange_epoch.map(|e| (d.clone(), e))),
+        env: cfg.child_env.clone(),
+    };
+
+    let mut procs: Vec<ShardProc> = Vec::new();
+    for (&i, dir) in indices.iter().zip(&dirs) {
+        procs.push(ShardProc {
+            index: i,
+            child: Some(spawn_child(&child_params(i, dir), false)?),
+            restarts: 0,
+            done: false,
+        });
+    }
+
+    let mut crash_hook = WorkerCrashHook::from_env(&cfg.worker_id);
+    let mut sync_cycles = 0usize;
+    let mut consecutive_sync_errors = 0usize;
+    let mut post_exit_cycles = 0usize;
+    let mut last_sync_ok = false;
+    {
+        let guard = ReapOnDrop(&mut procs);
+        loop {
+            let all_done = poll_procs(&mut *guard.0, cfg.max_restarts, &cfg.run_dir, &mut |i| {
+                let pos = indices.iter().position(|&x| x == i).ok_or_else(|| {
+                    format!("internal: asked to respawn shard {i}, which this worker does not own")
+                })?;
+                spawn_child(&child_params(i, &dirs[pos]), true)
+            })?;
+            // A vanished transport root is immediately fatal; transient
+            // sync failures are warned about and retried within a budget.
+            transport.check()?;
+            let sync = worker_sync_cycle(
+                &mut pushes,
+                &mut exchange_push,
+                &mut exchange_pull,
+                transport.as_ref(),
+            );
+            sync_cycles += 1;
+            match sync {
+                Ok(_) => {
+                    consecutive_sync_errors = 0;
+                    last_sync_ok = true;
+                }
+                Err(e) => {
+                    consecutive_sync_errors += 1;
+                    last_sync_ok = false;
+                    if consecutive_sync_errors > cfg.sync_error_budget {
+                        return Err(format!(
+                            "sync with {} failed {consecutive_sync_errors} cycle(s) in a \
+                             row; giving up ({e})",
+                            transport.describe()
+                        ));
+                    }
+                    crate::log_warn!("worker {}: sync cycle failed (will retry): {e}", spec.id);
+                }
+            }
+            if let Some(hook) = crash_hook.as_mut() {
+                hook.tick(&mut *guard.0);
+            }
+            if all_done {
+                // Children exited cleanly (each wrote its `complete`
+                // marker); keep syncing until every byte is published. The
+                // last cycle must have *succeeded* in full: a transient
+                // failure after the `complete` markers landed could
+                // otherwise leave a final exchange delta unpublished,
+                // starving peer machines' shards at their epoch boundary.
+                if last_sync_ok && pushes.iter().all(|p| p.is_complete()) {
+                    break;
+                }
+                post_exit_cycles += 1;
+                if post_exit_cycles > cfg.sync_error_budget {
+                    return Err(format!(
+                        "shard children exited but their run dirs never finished \
+                         publishing through {} — is a child missing its `complete` \
+                         marker?",
+                        transport.describe()
+                    ));
+                }
+            }
+            std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)));
+        }
+    }
+
+    Ok(WorkerReport {
+        worker_id: spec.id.clone(),
+        shards: procs
+            .iter()
+            .enumerate()
+            .map(|(pos, s)| ShardOutcome {
+                index: s.index,
+                dir: dirs[pos].clone(),
+                log: cfg.run_dir.join(format!("shard-{}.log", s.index)),
+                restarts: s.restarts,
+            })
+            .collect(),
+        sync_cycles,
+    })
+}
+
+// ------------------------------------------------------------------------
+// Cross-machine: the coordinator side
+// ------------------------------------------------------------------------
+
+/// What the fleet coordinator supervises: the manifest's workers, pulled
+/// into mirrors under `run_dir` and merged there.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// The validated fleet manifest.
+    pub manifest: WorkerManifest,
+    /// Output run dir: per-worker mirrors stream into
+    /// `<run_dir>/mirror/shard-<i>`, the merge lands in `<run_dir>`.
+    pub run_dir: PathBuf,
+    /// Pull/relay poll interval in milliseconds.
+    pub poll_ms: u64,
+    /// With no progress from any worker for this long, the launch fails
+    /// with a per-worker status instead of hanging forever (workers that
+    /// die stay down until their machine restarts them).
+    pub stall_timeout_ms: u64,
+    /// Consecutive failed sync cycles tolerated before giving up.
+    pub sync_error_budget: usize,
+}
+
+impl FleetConfig {
+    /// A coordinator for `manifest` merging into `run_dir`, with default
+    /// supervision settings.
+    pub fn new<P: Into<PathBuf>>(manifest: WorkerManifest, run_dir: P) -> FleetConfig {
+        FleetConfig {
+            manifest,
+            run_dir: run_dir.into(),
+            poll_ms: 200,
+            stall_timeout_ms: 600_000,
+            sync_error_budget: 100,
+        }
+    }
+}
+
+/// One worker's row in a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct FleetWorkerSummary {
+    /// Worker id.
+    pub id: String,
+    /// Global shard indices the worker ran.
+    pub shards: Vec<usize>,
+    /// Transport endpoint description.
+    pub transport: String,
+    /// Whether the zero-copy path was used (no mirror copies).
+    pub zero_copy: bool,
+}
+
+/// Outcome of a successful [`launch_workers`].
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Per-worker summaries, in manifest order.
+    pub workers: Vec<FleetWorkerSummary>,
+    /// The final streaming-merge report.
+    pub merge: MergeReport,
+}
+
+impl FleetReport {
+    /// Human-readable multi-line summary (the fleet `launch` CLI output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "coordinated {} worker(s) over run-dir transports\n",
+            self.workers.len()
+        );
+        for w in &self.workers {
+            out.push_str(&format!(
+                "  {:<12} shards {:?}  {}{}\n",
+                w.id,
+                w.shards,
+                w.transport,
+                if w.zero_copy { "  (zero-copy)" } else { "" }
+            ));
+        }
+        out.push_str(&self.merge.render());
+        out
+    }
+}
+
+/// One coordinator-side transport sync pass: tail-pull every worker's
+/// shard mirrors and relay the fleet's exchange deltas.
+fn fleet_sync_cycle(
+    pulls: &mut [Option<ShardPull>],
+    owner: &[usize],
+    transports: &[Box<dyn RunDirTransport>],
+    hub: &mut ExchangeHub,
+    workers: &[WorkerSpec],
+) -> Result<bool, String> {
+    let mut progress = false;
+    for (i, pull) in pulls.iter_mut().enumerate() {
+        if let Some(p) = pull {
+            progress |= p.cycle(transports[owner[i]].as_ref())?;
+        }
+    }
+    progress |= hub.cycle(workers, transports)?;
+    Ok(progress)
+}
+
+/// Supervise a cross-machine launch: tail-sync every worker's published
+/// run dirs into local mirrors, feed them to the streaming merge, relay
+/// exchange deltas between workers mid-run, and finalize once every
+/// worker's slice is complete — byte-identical to a single-process run of
+/// the same matrix. The coordinator spawns nothing: workers are started
+/// (and, if their machines die, restarted) out of band with the `worker`
+/// subcommand, and a restarted coordinator resumes its mirrors in place.
+pub fn launch_workers(cfg: &FleetConfig) -> Result<FleetReport, String> {
+    cfg.manifest.validate()?;
+    std::fs::create_dir_all(&cfg.run_dir)
+        .map_err(|e| format!("creating {}: {e}", cfg.run_dir.display()))?;
+    let out_rd = RunDir::open(&cfg.run_dir)
+        .map_err(|e| format!("opening {}: {e}", cfg.run_dir.display()))?;
+    if out_rd.has_results() {
+        return Err(format!(
+            "{} already holds merged results; pick a fresh --run-dir",
+            cfg.run_dir.display()
+        ));
+    }
+
+    let total = cfg.manifest.total_shards;
+    let mut transports: Vec<Box<dyn RunDirTransport>> = Vec::new();
+    for w in &cfg.manifest.workers {
+        transports.push(w.transport.build().map_err(|e| format!("worker {:?}: {e}", w.id))?);
+    }
+    // Global shard index -> (owning worker, mirror dir, pull engine). Pull
+    // is None on the zero-copy path, where the mirror *is* the transport's
+    // directory and the worker's children write it directly.
+    let mut owner: Vec<usize> = vec![0; total];
+    let mut mirror_dirs: Vec<PathBuf> = vec![PathBuf::new(); total];
+    let mut pulls: Vec<Option<ShardPull>> = (0..total).map(|_| None).collect();
+    for (wi, w) in cfg.manifest.workers.iter().enumerate() {
+        for i in w.shard_indices() {
+            owner[i] = wi;
+            match transports[wi].local_dir(&up_shard_rel(i)) {
+                Some(dir) => {
+                    std::fs::create_dir_all(&dir)
+                        .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+                    mirror_dirs[i] = dir;
+                }
+                None => {
+                    let dir = cfg.run_dir.join("mirror").join(format!("shard-{i}"));
+                    pulls[i] = Some(ShardPull::new(&dir, i)?);
+                    mirror_dirs[i] = dir;
+                }
+            }
+        }
+    }
+
+    let mut watcher = MergeWatcher::new(&cfg.run_dir, &mirror_dirs)?;
+    let mut hub = ExchangeHub::new();
+    let mut last_cells = usize::MAX;
+    let mut last_progress = Instant::now();
+    let mut consecutive_sync_errors = 0usize;
+    loop {
+        for (wi, t) in transports.iter().enumerate() {
+            t.check()
+                .map_err(|e| format!("worker {:?}: {e}", cfg.manifest.workers[wi].id))?;
+        }
+        let sync = fleet_sync_cycle(
+            &mut pulls,
+            &owner,
+            &transports,
+            &mut hub,
+            &cfg.manifest.workers,
+        );
+        let mut progress = false;
+        match sync {
+            Ok(p) => {
+                progress |= p;
+                consecutive_sync_errors = 0;
+            }
+            Err(e) => {
+                consecutive_sync_errors += 1;
+                if consecutive_sync_errors > cfg.sync_error_budget {
+                    return Err(format!(
+                        "worker sync failed {consecutive_sync_errors} cycle(s) in a row; \
+                         giving up ({e})"
+                    ));
+                }
+                crate::log_warn!("launch: sync cycle failed (will retry): {e}");
+            }
+        }
+        let status = watcher.poll()?;
+        if status.cells != last_cells {
+            last_cells = status.cells;
+            progress = true;
+            crate::log_info!("launch: {}", status.render());
+        }
+        if status.all_complete() {
+            break;
+        }
+        if progress {
+            last_progress = Instant::now();
+        } else if last_progress.elapsed() >= Duration::from_millis(cfg.stall_timeout_ms) {
+            let stalled: Vec<String> = cfg
+                .manifest
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(wi, _)| {
+                    (0..total).any(|i| owner[i] == *wi && !status.complete[i])
+                })
+                .map(|(_, w)| w.id.clone())
+                .collect();
+            return Err(format!(
+                "no progress for {}ms waiting on worker(s) {stalled:?} — are their \
+                 `worker` processes running? ({})",
+                cfg.stall_timeout_ms,
+                status.render()
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)));
+    }
+
+    let merge = watcher.finalize()?;
+    out_rd
+        .mark_complete()
+        .map_err(|e| format!("writing completion marker: {e}"))?;
+    Ok(FleetReport {
+        workers: cfg
+            .manifest
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(wi, w)| FleetWorkerSummary {
+                id: w.id.clone(),
+                shards: w.shard_indices().collect(),
+                transport: transports[wi].describe(),
+                zero_copy: transports[wi].local_dir("up").is_some(),
             })
             .collect(),
         merge,

@@ -274,8 +274,14 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
                 }
             };
 
-            let review =
-                reviewer::review_with_eager(task, &state, &cfg.dev, cfg.tool, &mut round_rng, consts);
+            let review = reviewer::review_with_eager(
+                task,
+                &state,
+                &cfg.dev,
+                cfg.tool,
+                &mut round_rng,
+                consts,
+            );
             rounds.push(RoundRecord {
                 round,
                 branch: record,
@@ -419,8 +425,14 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             version_counter,
             &mut round_rng,
         );
-        let review =
-            reviewer::review_with_eager(task, &candidate, &cfg.dev, cfg.tool, &mut round_rng, consts);
+        let review = reviewer::review_with_eager(
+            task,
+            &candidate,
+            &cfg.dev,
+            cfg.tool,
+            &mut round_rng,
+            consts,
+        );
         rounds.push(RoundRecord {
             round,
             branch: Branch::Optimize(plan.method),

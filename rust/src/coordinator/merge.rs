@@ -40,6 +40,14 @@
 //! so the streaming result after every shard completes is byte-identical
 //! to a one-shot merge by construction — and pinned by a test on top.
 //!
+//! The cross-machine launch (`coordinator::transport` +
+//! `launch --manifest`) feeds this same watcher with *mirrors* of remote
+//! shard run dirs. That works without any merge-side special casing
+//! because the transports guarantee exactly the visibility this module
+//! already assumes: whole files appear atomically, and checkpoint mirrors
+//! only ever grow by newline-terminated lines — so to the watcher a
+//! remote worker is indistinguishable from a local shard process.
+//!
 //! Net effect: `report` over the merged dir is byte-identical to `report`
 //! over an unsharded run of the same matrix, and so is the skill store —
 //! the property the determinism test battery (tests/sharding.rs and the CI

@@ -3,12 +3,13 @@
 //! including epoch-based live memory exchange between shards), incremental
 //! JSONL checkpointing + resume (`checkpoint`), sharded execution with
 //! one-shot *and* streaming run-dir merging (`merge`), the shard process
-//! launcher (`launcher`), and the suite/matrix entry points
-//! (`suite_runner`).
+//! launcher and cross-machine worker/fleet runtimes (`launcher`), and the
+//! pluggable run-dir transports that move artifacts between machines
+//! (`transport`), plus the suite/matrix entry points (`suite_runner`).
 //!
-//! The run-directory layout, the exchange protocol, and the byte-level
-//! merge determinism contract are specified normatively in
-//! `docs/memory-formats.md`.
+//! The run-directory layout, the exchange protocol, the worker-manifest
+//! format, and the byte-level merge determinism contract are specified
+//! normatively in `docs/memory-formats.md`.
 
 #![warn(missing_docs)]
 
@@ -18,10 +19,17 @@ pub mod loop_runner;
 pub mod merge;
 pub mod scheduler;
 pub mod suite_runner;
+pub mod transport;
 
 pub use checkpoint::{CellKey, RunDir, RunManifest};
-pub use launcher::{launch, LaunchConfig, LaunchReport};
+pub use launcher::{
+    launch, launch_workers, run_worker, FleetConfig, FleetReport, LaunchConfig, LaunchReport,
+    WorkerConfig, WorkerReport,
+};
 pub use loop_runner::{run_task, Branch, LoopConfig, RoundRecord, TaskResult};
 pub use merge::{merge_run_dirs, MergeReport, MergeWatcher, WatchStatus};
 pub use scheduler::{ExchangeOptions, Shard, SuiteOptions, DEFAULT_EXCHANGE_EPOCH};
 pub use suite_runner::{run_matrix, run_matrix_with, run_suite, run_suite_with, SuiteResult};
+pub use transport::{
+    LocalFs, MirrorDir, RunDirTransport, TransportKind, TransportSpec, WorkerManifest, WorkerSpec,
+};

@@ -182,10 +182,26 @@ impl SuiteOptions {
     }
 }
 
+/// File name of one shard's delta for one epoch inside a per-strategy
+/// exchange directory. The cross-machine transport layer parses these names
+/// back with [`parse_exchange_delta_name`] to route deltas to the workers
+/// that do not own them.
+pub fn exchange_delta_name(epoch: usize, shard_index: usize) -> String {
+    format!("epoch-{epoch}.shard-{shard_index}.json")
+}
+
+/// Parse an exchange-delta file name back into `(epoch, shard_index)`;
+/// `None` for anything that is not a delta (staging debris, foreign files).
+pub fn parse_exchange_delta_name(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix("epoch-")?.strip_suffix(".json")?;
+    let (epoch, shard) = rest.split_once(".shard-")?;
+    Some((epoch.parse().ok()?, shard.parse().ok()?))
+}
+
 /// Path of one shard's delta for one epoch inside a per-strategy exchange
 /// directory.
 fn exchange_delta_path(dir: &Path, epoch: usize, shard_index: usize) -> PathBuf {
-    dir.join(format!("epoch-{epoch}.shard-{shard_index}.json"))
+    dir.join(exchange_delta_name(epoch, shard_index))
 }
 
 /// Block until a peer's exchange delta appears (writes are atomic renames,
@@ -322,6 +338,7 @@ pub fn run_strategy(
         shards: opts.shard.map_or(1, |s| s.count),
         shard_index: opts.shard.map_or(0, |s| s.index),
         exchange_epoch: opts.exchange.as_ref().map_or(0, |ex| ex.epoch_cells),
+        device: cfg.dev.name.to_string(),
     };
     let mut restored: std::collections::BTreeMap<usize, TaskResult> = Default::default();
     // Fold of every checkpointed cell's observations (all strategies), so
@@ -643,7 +660,8 @@ mod tests {
         let strat = baselines::kernelskill();
         let cfg = LoopConfig::default();
 
-        let full = run_strategy(&tasks, &strat, &cfg, &[0, 1], 4, &SuiteOptions::default()).unwrap();
+        let full =
+            run_strategy(&tasks, &strat, &cfg, &[0, 1], 4, &SuiteOptions::default()).unwrap();
         assert_eq!(full.len(), 8);
 
         let mut opts = SuiteOptions::in_dir(&dir);
@@ -694,7 +712,8 @@ mod tests {
             for index in 0..count {
                 let opts = SuiteOptions::default().with_shard(index, count);
                 let part = run_strategy(&tasks, &strat, &cfg, &seeds, 4, &opts).unwrap();
-                let owned: Vec<usize> = (0..6).filter(|&ci| Shard { index, count }.owns(ci)).collect();
+                let owned: Vec<usize> =
+                    (0..6).filter(|&ci| Shard { index, count }.owns(ci)).collect();
                 assert_eq!(part.len(), owned.len(), "shard {index}/{count}");
                 for (r, &ci) in part.iter().zip(&owned) {
                     assert_eq!(r.task_id, full[ci].task_id, "shard {index}/{count}");
@@ -749,8 +768,10 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let tasks = slice(1);
         let strat = baselines::kernelskill();
-        let mut cfg = LoopConfig::default();
-        cfg.memory_dir = Some(dir.clone());
+        let cfg = LoopConfig {
+            memory_dir: Some(dir.clone()),
+            ..LoopConfig::default()
+        };
         let err = run_strategy(&tasks, &strat, &cfg, &[0], 1, &SuiteOptions::in_dir(&dir));
         assert!(err.is_err(), "run_dir == memory_dir must be rejected");
         let _ = std::fs::remove_dir_all(&dir);
@@ -778,8 +799,10 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let tasks = slice(3);
         let strat = baselines::kernelskill();
-        let mut cfg = LoopConfig::default();
-        cfg.memory_dir = Some(mem.clone());
+        let cfg = LoopConfig {
+            memory_dir: Some(mem.clone()),
+            ..LoopConfig::default()
+        };
         run_strategy(&tasks, &strat, &cfg, &[0], 2, &SuiteOptions::default()).unwrap();
         let store = SkillStore::load(&mem.join("skills.json")).unwrap();
         assert!(store.observations > 0, "L1 slice should produce observations");

@@ -1,0 +1,1468 @@
+//! Run-dir transports: the cross-machine synchronization layer under
+//! `launch --manifest` / `worker`.
+//!
+//! A *transport* is the channel one worker machine shares with the
+//! coordinator: the worker publishes its run-dir artifacts (checkpoint
+//! lines, manifest, skill store, warm-start snapshots, exchange deltas)
+//! into its transport root, and the coordinator pulls them into local
+//! mirrors it feeds to the ordinary [`MergeWatcher`] — so the distributed
+//! merge machinery never learns that a network was involved.
+//!
+//! Visibility contract (what makes the tail-follow safe over any medium):
+//!
+//!   * **Whole-file publishes are atomic.** [`RunDirTransport::publish`]
+//!     stages the bytes and renames them into place; a reader can never
+//!     observe a partially transferred file. An interrupted transfer leaves
+//!     only staging debris that `list`/`fetch` ignore.
+//!   * **Checkpoints are published at newline boundaries only.** The push
+//!     engine ([`ShardPush`]) publishes `results.jsonl` up to its last
+//!     newline, so the pulled mirror can only ever end at a complete line —
+//!     exactly the torn-tail contract `MergeWatcher` already enforces for
+//!     local concurrent appends.
+//!   * **`complete` is published last**, after every byte it vouches for,
+//!     and the pull engine ([`ShardPull`]) re-reads the checkpoint *after*
+//!     observing the marker — so a mirror carrying `complete` is guaranteed
+//!     to hold the worker's whole slice.
+//!
+//! Two implementations ship: [`LocalFs`] (a shared filesystem; zero-copy —
+//! it exposes its paths directly so workers stream straight into the root
+//! and the coordinator tails it in place) and [`MirrorDir`] (an
+//! object-store-shaped backend that only speaks `list`/`fetch`/`publish`
+//! with staged atomic writes — the stand-in for S3/GCS/rsync, fully
+//! testable in CI without a network).
+//!
+//! The worker fleet is described by a [`WorkerManifest`] (`--manifest`):
+//! worker ids, the contiguous shard range each runs, and each worker's
+//! transport. Validation is strict — duplicate ids, overlapping or gapped
+//! shard ranges, and unknown transport kinds are refused before anything
+//! spawns.
+//!
+//! On-transport layout under each worker's root:
+//!
+//! ```text
+//! <root>/
+//!   up/shard-<i>/...              worker -> coordinator: mirror of shard i's run dir
+//!   up/exchange/<slug>/<delta>    worker -> coordinator: its own shards' epoch deltas
+//!   down/exchange/<slug>/<delta>  coordinator -> worker: every peer's epoch deltas
+//!   .staging/                     atomic-publish scratch (never read)
+//! ```
+//!
+//! The byte-determinism consequence — worker placement and sync timing
+//! cannot change a single output byte — is specified as invariants 11-13
+//! in `docs/memory-formats.md` and pinned by `tests/distributed.rs` plus
+//! the CI `multi-node-smoke` job.
+//!
+//! [`MergeWatcher`]: super::merge::MergeWatcher
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::checkpoint::RunDir;
+use super::scheduler::parse_exchange_delta_name;
+use crate::memory::long_term::SkillStore;
+use crate::util::json::Json;
+
+/// File name of the per-cell checkpoint inside a (mirrored) run dir.
+const RESULTS: &str = "results.jsonl";
+/// File name of the matrix-shape manifest inside a (mirrored) run dir.
+const MANIFEST: &str = "manifest.json";
+/// File name of the per-dir skill-store fold inside a (mirrored) run dir.
+const SKILLS: &str = "skills.json";
+
+/// Relative transport directory a worker publishes shard `i`'s run dir to.
+pub fn up_shard_rel(shard_index: usize) -> String {
+    format!("up/shard-{shard_index}")
+}
+
+/// Relative transport directory a worker publishes its own exchange deltas
+/// to.
+pub const UP_EXCHANGE: &str = "up/exchange";
+
+/// Relative transport directory the coordinator re-publishes the fleet's
+/// exchange deltas into for one worker to pull.
+pub const DOWN_EXCHANGE: &str = "down/exchange";
+
+/// Join a validated relative transport path onto a root. Rejects absolute
+/// paths, `..`, and empty segments so a malformed manifest can never
+/// escape its transport root.
+fn rel_path(root: &Path, rel: &str) -> Result<PathBuf, String> {
+    let mut out = root.to_path_buf();
+    if rel.is_empty() {
+        return Ok(out);
+    }
+    for seg in rel.split('/') {
+        if seg.is_empty() || seg == "." || seg == ".." || seg.contains('\\') {
+            return Err(format!("invalid transport path {rel:?}"));
+        }
+        out.push(seg);
+    }
+    Ok(out)
+}
+
+/// Map io NotFound to `None`, everything else to a clean error.
+fn absent_to_none<T>(r: std::io::Result<T>, what: &Path) -> Result<Option<T>, String> {
+    match r {
+        Ok(v) => Ok(Some(v)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(format!("transport io on {}: {e}", what.display())),
+    }
+}
+
+/// Byte length of the newline-terminated prefix of a checkpoint buffer —
+/// the only part of `results.jsonl` a transport is allowed to publish.
+fn newline_prefix(bytes: &[u8]) -> usize {
+    bytes.iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1)
+}
+
+/// Atomically materialize `bytes` at `dest` on the *local* filesystem
+/// (tmp + rename in the destination directory) — used for everything the
+/// pull engines install where another process may be reading or folding.
+fn install_atomic(dest: &Path, bytes: &[u8]) -> Result<(), String> {
+    if let Some(parent) = dest.parent() {
+        std::fs::create_dir_all(parent)
+            .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+    }
+    let mut name = dest
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    name.push_str(".install-tmp");
+    let tmp = dest.with_file_name(name);
+    std::fs::write(&tmp, bytes).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, dest).map_err(|e| format!("installing {}: {e}", dest.display()))
+}
+
+// ------------------------------------------------------------------------
+// The transport abstraction
+// ------------------------------------------------------------------------
+
+/// One worker's channel for moving run-dir artifacts between machines.
+///
+/// All paths are `/`-separated *relative* paths under the transport root.
+/// Every method is callable from a single thread at a time per endpoint;
+/// concurrent endpoints (the worker's pushes vs. the coordinator's pulls)
+/// are safe because visibility is atomic (see the module docs).
+pub trait RunDirTransport {
+    /// Human-readable endpoint description for logs and errors.
+    fn describe(&self) -> String;
+
+    /// Cheap liveness probe: the transport root still exists and is
+    /// reachable. Sync loops call it every cycle so a root that disappears
+    /// mid-run becomes a clean, immediate error instead of a silent stall.
+    fn check(&self) -> Result<(), String>;
+
+    /// Byte length of a published file; `None` when absent.
+    fn len(&self, rel: &str) -> Result<Option<u64>, String>;
+
+    /// Full contents of a published file; `None` when absent.
+    fn fetch(&self, rel: &str) -> Result<Option<Vec<u8>>, String>;
+
+    /// Contents of a published file from byte `offset` to its end (the
+    /// tail-sync primitive); `None` when absent, empty when `offset` is at
+    /// or past the end.
+    fn fetch_from(&self, rel: &str, offset: u64) -> Result<Option<Vec<u8>>, String>;
+
+    /// Atomically publish `bytes` at `rel`, creating parents as needed. A
+    /// reader observes either the previous contents or all of `bytes` —
+    /// never a partial transfer.
+    fn publish(&self, rel: &str, bytes: &[u8]) -> Result<(), String>;
+
+    /// Sorted names of the files directly under `rel` (staging and other
+    /// dot-entries excluded); empty when the directory is absent.
+    fn list(&self, rel: &str) -> Result<Vec<String>, String>;
+
+    /// Sorted names of the subdirectories directly under `rel` (dot-entries
+    /// excluded); empty when the directory is absent.
+    fn list_dirs(&self, rel: &str) -> Result<Vec<String>, String>;
+
+    /// For transports backed by a locally reachable directory: the absolute
+    /// path `rel` maps to. `Some` enables the zero-copy path — workers run
+    /// their shards directly inside the root and the coordinator tails it
+    /// in place, skipping the push/pull copies entirely.
+    fn local_dir(&self, _rel: &str) -> Option<PathBuf> {
+        None
+    }
+}
+
+/// Shared filesystem core behind both built-in transports.
+#[derive(Debug, Clone)]
+struct FsCore {
+    root: PathBuf,
+}
+
+static PUBLISH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl FsCore {
+    fn new(root: &Path) -> Result<FsCore, String> {
+        std::fs::create_dir_all(root)
+            .map_err(|e| format!("creating transport root {}: {e}", root.display()))?;
+        Ok(FsCore {
+            root: root.to_path_buf(),
+        })
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.root.is_dir() {
+            Ok(())
+        } else {
+            Err(format!(
+                "transport root {} disappeared mid-run",
+                self.root.display()
+            ))
+        }
+    }
+
+    fn len(&self, rel: &str) -> Result<Option<u64>, String> {
+        let path = rel_path(&self.root, rel)?;
+        Ok(absent_to_none(std::fs::metadata(&path), &path)?.map(|m| m.len()))
+    }
+
+    fn fetch(&self, rel: &str) -> Result<Option<Vec<u8>>, String> {
+        let path = rel_path(&self.root, rel)?;
+        absent_to_none(std::fs::read(&path), &path)
+    }
+
+    fn fetch_from(&self, rel: &str, offset: u64) -> Result<Option<Vec<u8>>, String> {
+        let path = rel_path(&self.root, rel)?;
+        let Some(mut f) = absent_to_none(std::fs::File::open(&path), &path)? else {
+            return Ok(None);
+        };
+        let len = f
+            .metadata()
+            .map_err(|e| format!("transport io on {}: {e}", path.display()))?
+            .len();
+        if offset >= len {
+            return Ok(Some(Vec::new()));
+        }
+        f.seek(SeekFrom::Start(offset))
+            .map_err(|e| format!("transport io on {}: {e}", path.display()))?;
+        let mut buf = Vec::with_capacity((len - offset) as usize);
+        f.read_to_end(&mut buf)
+            .map_err(|e| format!("transport io on {}: {e}", path.display()))?;
+        Ok(Some(buf))
+    }
+
+    /// Staged atomic publish. `fault` simulates a mid-file transfer
+    /// interruption for the determinism batteries (see [`MirrorDir`]).
+    fn publish(
+        &self,
+        rel: &str,
+        bytes: &[u8],
+        fault: Option<&TransferFault>,
+    ) -> Result<(), String> {
+        let target = rel_path(&self.root, rel)?;
+        if let Some(parent) = target.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+        }
+        let staging_dir = self.root.join(".staging");
+        std::fs::create_dir_all(&staging_dir)
+            .map_err(|e| format!("creating {}: {e}", staging_dir.display()))?;
+        let seq = PUBLISH_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = staging_dir.join(format!("pub-{}-{seq}", std::process::id()));
+        if let Some(f) = fault {
+            if let Some(msg) = f.fire(rel, &tmp, bytes) {
+                return Err(msg);
+            }
+        }
+        std::fs::write(&tmp, bytes).map_err(|e| format!("staging {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &target)
+            .map_err(|e| format!("publishing {}: {e}", target.display()))
+    }
+
+    fn list_entries(&self, rel: &str, dirs: bool) -> Result<Vec<String>, String> {
+        let path = rel_path(&self.root, rel)?;
+        let Some(rd) = absent_to_none(std::fs::read_dir(&path), &path)? else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        for entry in rd {
+            let entry = entry.map_err(|e| format!("transport io on {}: {e}", path.display()))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with('.') {
+                continue;
+            }
+            let is_dir = entry
+                .file_type()
+                .map_err(|e| format!("transport io on {}: {e}", path.display()))?
+                .is_dir();
+            if is_dir == dirs {
+                out.push(name);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// Test hook configuration: the first [`MirrorDir`] publish whose relative
+/// path contains `substr` writes *half* its bytes to the staging file and
+/// fails — the exact footprint of a transfer cut off mid-file — once per
+/// `marker` file, so the retry on the next sync cycle succeeds and the
+/// batteries can assert byte-identical output through the interruption.
+///
+/// Armed from `KS_TEST_TRANSPORT_FAIL_SUBSTR` /
+/// `KS_TEST_TRANSPORT_FAIL_MARKER` *once, at transport construction* (the
+/// CLI/CI path sets them on the spawned worker process), or directly via
+/// [`MirrorDir::with_fault_hook`] (the in-process test path — no
+/// process-global env mutation, which would race other threads' getenv).
+#[derive(Debug, Clone)]
+struct TransferFault {
+    substr: String,
+    marker: PathBuf,
+}
+
+impl TransferFault {
+    fn from_env() -> Option<TransferFault> {
+        let substr = std::env::var("KS_TEST_TRANSPORT_FAIL_SUBSTR").ok()?;
+        let marker = std::env::var("KS_TEST_TRANSPORT_FAIL_MARKER").ok()?;
+        if substr.is_empty() || marker.is_empty() {
+            return None;
+        }
+        Some(TransferFault {
+            substr,
+            marker: PathBuf::from(marker),
+        })
+    }
+
+    fn fire(&self, rel: &str, staging: &Path, bytes: &[u8]) -> Option<String> {
+        if !rel.contains(&self.substr) || self.marker.exists() {
+            return None;
+        }
+        let _ = std::fs::write(&self.marker, "interrupted\n");
+        let _ = std::fs::write(staging, &bytes[..bytes.len() / 2]);
+        Some(format!(
+            "KS_TEST_TRANSPORT_FAIL_SUBSTR: simulated mid-file interruption publishing {rel}"
+        ))
+    }
+}
+
+/// Shared-filesystem transport: the root is a directory every party can
+/// already reach (NFS, a bind mount, one machine). Zero-copy: it exposes
+/// its paths via [`RunDirTransport::local_dir`], so workers stream their
+/// run dirs directly into the root and the coordinator tail-follows them
+/// in place — exactly the single-machine launcher dataflow.
+#[derive(Debug, Clone)]
+pub struct LocalFs {
+    core: FsCore,
+}
+
+impl LocalFs {
+    /// Open (creating if needed) a shared-directory transport at `root`.
+    pub fn new(root: &Path) -> Result<LocalFs, String> {
+        Ok(LocalFs {
+            core: FsCore::new(root)?,
+        })
+    }
+}
+
+impl RunDirTransport for LocalFs {
+    fn describe(&self) -> String {
+        format!("local-fs {}", self.core.root.display())
+    }
+    fn check(&self) -> Result<(), String> {
+        self.core.check()
+    }
+    fn len(&self, rel: &str) -> Result<Option<u64>, String> {
+        self.core.len(rel)
+    }
+    fn fetch(&self, rel: &str) -> Result<Option<Vec<u8>>, String> {
+        self.core.fetch(rel)
+    }
+    fn fetch_from(&self, rel: &str, offset: u64) -> Result<Option<Vec<u8>>, String> {
+        self.core.fetch_from(rel, offset)
+    }
+    fn publish(&self, rel: &str, bytes: &[u8]) -> Result<(), String> {
+        self.core.publish(rel, bytes, None)
+    }
+    fn list(&self, rel: &str) -> Result<Vec<String>, String> {
+        self.core.list_entries(rel, false)
+    }
+    fn list_dirs(&self, rel: &str) -> Result<Vec<String>, String> {
+        self.core.list_entries(rel, true)
+    }
+    fn local_dir(&self, rel: &str) -> Option<PathBuf> {
+        rel_path(&self.core.root, rel).ok()
+    }
+}
+
+/// Object-store-shaped transport: a directory that is only ever accessed
+/// through `list`/`fetch`/`publish` with staged atomic writes — the CI
+/// stand-in for S3/GCS/rsync-over-ssh. It deliberately does *not* expose
+/// local paths, so every byte moves through the same push/pull engines a
+/// networked backend would use, and its publish path carries the
+/// interrupted-transfer test hook.
+#[derive(Debug, Clone)]
+pub struct MirrorDir {
+    core: FsCore,
+    fault: Option<TransferFault>,
+}
+
+impl MirrorDir {
+    /// Open (creating if needed) an object-store-shaped transport at
+    /// `root`. The interrupted-transfer test hook is armed from the
+    /// `KS_TEST_TRANSPORT_FAIL_*` environment (read once, here) when the
+    /// spawning process set it.
+    pub fn new(root: &Path) -> Result<MirrorDir, String> {
+        Ok(MirrorDir {
+            core: FsCore::new(root)?,
+            fault: TransferFault::from_env(),
+        })
+    }
+
+    /// Test-only: arm the interrupted-transfer hook directly — the first
+    /// publish whose relative path contains `substr` is cut off mid-file
+    /// (half the bytes reach staging, the call errors), once per `marker`
+    /// file — without touching the process environment, where an
+    /// in-process `set_var` would race other threads' `getenv` under the
+    /// parallel test harness.
+    pub fn with_fault_hook(mut self, substr: &str, marker: &Path) -> MirrorDir {
+        self.fault = Some(TransferFault {
+            substr: substr.to_string(),
+            marker: marker.to_path_buf(),
+        });
+        self
+    }
+}
+
+impl RunDirTransport for MirrorDir {
+    fn describe(&self) -> String {
+        format!("mirror-dir {}", self.core.root.display())
+    }
+    fn check(&self) -> Result<(), String> {
+        self.core.check()
+    }
+    fn len(&self, rel: &str) -> Result<Option<u64>, String> {
+        self.core.len(rel)
+    }
+    fn fetch(&self, rel: &str) -> Result<Option<Vec<u8>>, String> {
+        self.core.fetch(rel)
+    }
+    fn fetch_from(&self, rel: &str, offset: u64) -> Result<Option<Vec<u8>>, String> {
+        self.core.fetch_from(rel, offset)
+    }
+    fn publish(&self, rel: &str, bytes: &[u8]) -> Result<(), String> {
+        self.core.publish(rel, bytes, self.fault.as_ref())
+    }
+    fn list(&self, rel: &str) -> Result<Vec<String>, String> {
+        self.core.list_entries(rel, false)
+    }
+    fn list_dirs(&self, rel: &str) -> Result<Vec<String>, String> {
+        self.core.list_entries(rel, true)
+    }
+}
+
+// ------------------------------------------------------------------------
+// Worker manifest
+// ------------------------------------------------------------------------
+
+/// Which transport implementation a worker uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Shared filesystem (zero-copy); manifest kind `"local-fs"`.
+    LocalFs,
+    /// Object-store-shaped staging directory; manifest kind `"mirror-dir"`.
+    MirrorDir,
+}
+
+impl TransportKind {
+    fn parse(s: &str) -> Result<TransportKind, String> {
+        match s {
+            "local-fs" => Ok(TransportKind::LocalFs),
+            "mirror-dir" => Ok(TransportKind::MirrorDir),
+            other => Err(format!(
+                "unknown transport kind {other:?} (expected \"local-fs\" or \"mirror-dir\")"
+            )),
+        }
+    }
+}
+
+/// One worker's transport endpoint description.
+#[derive(Debug, Clone)]
+pub struct TransportSpec {
+    /// Which implementation to build.
+    pub kind: TransportKind,
+    /// The transport root (a shared path for `local-fs`, the store
+    /// directory for `mirror-dir`).
+    pub root: PathBuf,
+}
+
+impl TransportSpec {
+    /// Build the transport, creating its root.
+    pub fn build(&self) -> Result<Box<dyn RunDirTransport>, String> {
+        Ok(match self.kind {
+            TransportKind::LocalFs => Box::new(LocalFs::new(&self.root)?),
+            TransportKind::MirrorDir => Box::new(MirrorDir::new(&self.root)?),
+        })
+    }
+}
+
+/// One row of the worker manifest: a worker id, the contiguous shard range
+/// it runs, and the transport it publishes through.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// Unique worker id (used in paths, logs, and crash markers).
+    pub id: String,
+    /// First global shard index this worker runs (inclusive).
+    pub shard_lo: usize,
+    /// Last global shard index this worker runs (inclusive).
+    pub shard_hi: usize,
+    /// The worker's transport endpoint.
+    pub transport: TransportSpec,
+}
+
+impl WorkerSpec {
+    /// Does this worker run global shard `index`?
+    pub fn owns(&self, index: usize) -> bool {
+        (self.shard_lo..=self.shard_hi).contains(&index)
+    }
+
+    /// The global shard indices this worker runs.
+    pub fn shard_indices(&self) -> std::ops::RangeInclusive<usize> {
+        self.shard_lo..=self.shard_hi
+    }
+}
+
+/// The fleet description `launch --manifest <file>` and `worker` read: the
+/// total shard count plus one [`WorkerSpec`] per machine. Parsing
+/// validates the whole document — the ranges must be an exact, disjoint
+/// cover of `0..total_shards` and the ids unique — so a bad manifest is a
+/// clean error before any process spawns.
+#[derive(Debug, Clone)]
+pub struct WorkerManifest {
+    /// Total number of shards the matrix is split into, fleet-wide.
+    pub total_shards: usize,
+    /// The workers, in file order.
+    pub workers: Vec<WorkerSpec>,
+}
+
+impl WorkerManifest {
+    /// Parse and validate a manifest document. The format:
+    ///
+    /// ```json
+    /// {"version": 1, "total_shards": 2, "workers": [
+    ///   {"id": "w0", "shard_lo": 0, "shard_hi": 0,
+    ///    "transport": {"kind": "mirror-dir", "root": "/srv/ks/w0"}},
+    ///   {"id": "w1", "shard_lo": 1, "shard_hi": 1,
+    ///    "transport": {"kind": "local-fs", "root": "/mnt/shared/w1"}}
+    /// ]}
+    /// ```
+    pub fn parse(text: &str) -> Result<WorkerManifest, String> {
+        let j = Json::parse(text).map_err(|e| format!("worker manifest: {e}"))?;
+        if let Some(v) = j.get("version").and_then(|v| v.as_f64()) {
+            if v != 1.0 {
+                return Err(format!("worker manifest: unsupported version {v}"));
+            }
+        }
+        let total_shards = j
+            .get("total_shards")
+            .and_then(|v| v.as_usize())
+            .ok_or("worker manifest: missing total_shards")?;
+        let workers_json = j
+            .get("workers")
+            .and_then(|v| v.as_arr())
+            .ok_or("worker manifest: missing workers array")?;
+        let mut workers = Vec::new();
+        for (i, w) in workers_json.iter().enumerate() {
+            let at = |what: &str| format!("worker manifest entry {i}: missing {what}");
+            let id = w
+                .get("id")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| at("id"))?
+                .to_string();
+            let shard_lo = w
+                .get("shard_lo")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| at("shard_lo"))?;
+            let shard_hi = w
+                .get("shard_hi")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| at("shard_hi"))?;
+            let t = w.get("transport").ok_or_else(|| at("transport"))?;
+            let kind = TransportKind::parse(
+                t.get("kind")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| at("transport.kind"))?,
+            )
+            .map_err(|e| format!("worker manifest entry {i}: {e}"))?;
+            let root = t
+                .get("root")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| at("transport.root"))?;
+            if id.is_empty() {
+                return Err(format!("worker manifest entry {i}: empty id"));
+            }
+            if root.is_empty() {
+                return Err(format!("worker manifest entry {i} ({id}): empty transport root"));
+            }
+            workers.push(WorkerSpec {
+                id,
+                shard_lo,
+                shard_hi,
+                transport: TransportSpec {
+                    kind,
+                    root: PathBuf::from(root),
+                },
+            });
+        }
+        let m = WorkerManifest {
+            total_shards,
+            workers,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Read and parse a manifest file.
+    pub fn load(path: &Path) -> Result<WorkerManifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading worker manifest {}: {e}", path.display()))?;
+        WorkerManifest::parse(&text)
+    }
+
+    /// The structural rules: at least one worker, unique non-empty ids,
+    /// well-formed ranges, and shard coverage that is exact (no gaps) and
+    /// disjoint (no overlaps).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.total_shards == 0 {
+            return Err("worker manifest: total_shards must be >= 1".to_string());
+        }
+        if self.workers.is_empty() {
+            return Err("worker manifest: needs at least one worker".to_string());
+        }
+        let mut owners: Vec<Vec<&str>> = vec![Vec::new(); self.total_shards];
+        let mut seen_ids: BTreeSet<&str> = BTreeSet::new();
+        for w in &self.workers {
+            if !seen_ids.insert(&w.id) {
+                return Err(format!("worker manifest: duplicate worker id {:?}", w.id));
+            }
+            if w.shard_lo > w.shard_hi {
+                return Err(format!(
+                    "worker manifest: worker {:?} has shard_lo {} > shard_hi {}",
+                    w.id, w.shard_lo, w.shard_hi
+                ));
+            }
+            if w.shard_hi >= self.total_shards {
+                return Err(format!(
+                    "worker manifest: worker {:?} claims shard {} but total_shards is {}",
+                    w.id, w.shard_hi, self.total_shards
+                ));
+            }
+            for i in w.shard_indices() {
+                owners[i].push(&w.id);
+            }
+        }
+        let overlapping: Vec<String> = owners
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.len() > 1)
+            .map(|(i, o)| format!("shard {i} claimed by {o:?}"))
+            .collect();
+        if !overlapping.is_empty() {
+            return Err(format!(
+                "worker manifest: overlapping shard ranges ({})",
+                overlapping.join("; ")
+            ));
+        }
+        let gaps: Vec<usize> = owners
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.is_empty())
+            .map(|(i, _)| i)
+            .collect();
+        if !gaps.is_empty() {
+            return Err(format!(
+                "worker manifest: shard index(es) {gaps:?} are covered by no worker \
+                 (ranges must exactly cover 0..{})",
+                self.total_shards
+            ));
+        }
+        Ok(())
+    }
+
+    /// Look up one worker by id.
+    pub fn worker(&self, id: &str) -> Option<&WorkerSpec> {
+        self.workers.iter().find(|w| w.id == id)
+    }
+
+    /// All worker ids, in file order (for error messages).
+    pub fn worker_ids(&self) -> Vec<&str> {
+        self.workers.iter().map(|w| w.id.as_str()).collect()
+    }
+}
+
+// ------------------------------------------------------------------------
+// Worker-side sync engines (push own artifacts up, pull peers' deltas down)
+// ------------------------------------------------------------------------
+
+/// Publishes one local shard run dir through a transport, incrementally:
+/// the manifest once it exists, `results.jsonl` at newline boundaries as
+/// it grows, `skills.json` and warm-start snapshots whenever their bytes
+/// change, and the `complete` marker strictly last.
+#[derive(Debug)]
+pub struct ShardPush {
+    dir: PathBuf,
+    rel: String,
+    results_pushed: u64,
+    /// Local checkpoint length at the last cycle that read it; the file is
+    /// append-only, so an unchanged length means unchanged content and the
+    /// (potentially large) re-read can be skipped. `None` = never read —
+    /// the first cycle always reads, so the stale-root check always runs.
+    results_seen_len: Option<u64>,
+    manifest_pushed: bool,
+    complete_pushed: bool,
+    skills_last: Option<Vec<u8>>,
+    skills_stat: Option<(u64, std::time::SystemTime)>,
+    snapshots_last: BTreeMap<String, Vec<u8>>,
+    snapshots_stat: BTreeMap<String, (u64, std::time::SystemTime)>,
+}
+
+/// (len, mtime) of a file, when both are available — the cheap
+/// has-it-changed probe the push engine uses to skip re-reading unchanged
+/// stores and snapshots. `None` (no mtime support) degrades to re-reading.
+fn file_stat(path: &Path) -> Option<(u64, std::time::SystemTime)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.len(), meta.modified().ok()?))
+}
+
+impl ShardPush {
+    /// Start pushing local run dir `dir` as global shard `shard_index`.
+    /// Picks up where a previous (crashed) worker process left off: the
+    /// already-published checkpoint prefix is read back from the transport,
+    /// and a transport that holds *more* than the local checkpoint is a
+    /// clean error (a stale or foreign root, never silently overwritten).
+    pub fn new(
+        dir: &Path,
+        shard_index: usize,
+        transport: &dyn RunDirTransport,
+    ) -> Result<ShardPush, String> {
+        let rel = up_shard_rel(shard_index);
+        let remote = transport.len(&format!("{rel}/{RESULTS}"))?.unwrap_or(0);
+        Ok(ShardPush {
+            dir: dir.to_path_buf(),
+            rel,
+            results_pushed: remote,
+            results_seen_len: None,
+            manifest_pushed: false,
+            complete_pushed: false,
+            skills_last: None,
+            skills_stat: None,
+            snapshots_last: BTreeMap::new(),
+            snapshots_stat: BTreeMap::new(),
+        })
+    }
+
+    /// Every artifact (including `complete`) has been published.
+    pub fn is_complete(&self) -> bool {
+        self.complete_pushed
+    }
+
+    /// One push cycle; returns whether anything was published. Errors are
+    /// retryable — state only advances after a successful publish, so the
+    /// next cycle re-attempts exactly the failed transfer.
+    pub fn cycle(&mut self, transport: &dyn RunDirTransport) -> Result<bool, String> {
+        if self.complete_pushed {
+            return Ok(false);
+        }
+        let mut progress = false;
+        // Observe completion *before* reading anything: the producer writes
+        // `complete` after its last byte, so files read after a positive
+        // probe are final — and `complete` itself is published strictly
+        // last, below.
+        let local_complete = self.dir.join(RunDir::COMPLETE_MARKER).exists();
+
+        if !self.manifest_pushed {
+            let path = self.dir.join(MANIFEST);
+            if path.exists() {
+                let bytes = std::fs::read(&path)
+                    .map_err(|e| format!("reading {}: {e}", path.display()))?;
+                transport.publish(&format!("{}/{MANIFEST}", self.rel), &bytes)?;
+                self.manifest_pushed = true;
+                progress = true;
+            }
+        }
+
+        let results = self.dir.join(RESULTS);
+        if results.exists() {
+            // Append-only file: an unchanged length means unchanged
+            // content, so the (large, 10x/second) re-read is skipped. The
+            // very first cycle always reads, so the stale-root check below
+            // cannot be bypassed.
+            let len = std::fs::metadata(&results)
+                .map(|m| m.len())
+                .map_err(|e| format!("reading {}: {e}", results.display()))?;
+            if self.results_seen_len != Some(len) {
+                let bytes = std::fs::read(&results)
+                    .map_err(|e| format!("reading {}: {e}", results.display()))?;
+                let prefix = newline_prefix(&bytes);
+                if (prefix as u64) < self.results_pushed {
+                    return Err(format!(
+                        "{} already holds {} byte(s) but the local checkpoint has only {} \
+                         newline-terminated byte(s) — the transport root belongs to a \
+                         different (or newer) run; refusing to publish over it",
+                        transport.describe(),
+                        self.results_pushed,
+                        prefix
+                    ));
+                }
+                if (prefix as u64) > self.results_pushed {
+                    transport.publish(&format!("{}/{RESULTS}", self.rel), &bytes[..prefix])?;
+                    self.results_pushed = prefix as u64;
+                    progress = true;
+                }
+                // Only remember the length once everything consumable from
+                // it has been published, so a failed publish is retried.
+                self.results_seen_len = Some(bytes.len() as u64);
+            }
+        } else if self.results_pushed > 0 {
+            return Err(format!(
+                "local checkpoint {} vanished after {} byte(s) were published",
+                results.display(),
+                self.results_pushed
+            ));
+        }
+
+        // Stores and snapshots are small but rewritten rarely: skip the
+        // read while (len, mtime) is unchanged. A positive completion probe
+        // forces one final read, so the published bytes always end at the
+        // files' final state even on filesystems with coarse timestamps.
+        let skills = self.dir.join(SKILLS);
+        if skills.exists() {
+            let stat = file_stat(&skills);
+            if local_complete || stat.is_none() || stat != self.skills_stat {
+                let bytes = std::fs::read(&skills)
+                    .map_err(|e| format!("reading {}: {e}", skills.display()))?;
+                if self.skills_last.as_deref() != Some(bytes.as_slice()) {
+                    transport.publish(&format!("{}/{SKILLS}", self.rel), &bytes)?;
+                    self.skills_last = Some(bytes);
+                    progress = true;
+                }
+                self.skills_stat = stat;
+            }
+        }
+
+        for entry in std::fs::read_dir(&self.dir)
+            .map_err(|e| format!("listing {}: {e}", self.dir.display()))?
+        {
+            let entry = entry.map_err(|e| format!("listing {}: {e}", self.dir.display()))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !(name.starts_with("memory_snapshot.") && name.ends_with(".json")) {
+                continue;
+            }
+            let stat = file_stat(&entry.path());
+            if !local_complete && stat.is_some() && stat == self.snapshots_stat.get(&name).copied()
+            {
+                continue;
+            }
+            let bytes = std::fs::read(entry.path())
+                .map_err(|e| format!("reading {}: {e}", entry.path().display()))?;
+            if self.snapshots_last.get(&name).map(|b| b.as_slice()) != Some(bytes.as_slice()) {
+                transport.publish(&format!("{}/{name}", self.rel), &bytes)?;
+                self.snapshots_last.insert(name.clone(), bytes);
+                progress = true;
+            }
+            if let Some(st) = stat {
+                self.snapshots_stat.insert(name, st);
+            }
+        }
+
+        if local_complete {
+            transport.publish(
+                &format!("{}/{}", self.rel, RunDir::COMPLETE_MARKER),
+                b"complete\n",
+            )?;
+            self.complete_pushed = true;
+            progress = true;
+        }
+        Ok(progress)
+    }
+}
+
+/// Publishes a worker's *own* shards' exchange deltas from its local
+/// exchange directory up through its transport. Deltas are immutable once
+/// written (atomic save, deterministic content), so each file is pushed
+/// exactly once per process lifetime — a restarted worker harmlessly
+/// re-publishes identical bytes.
+#[derive(Debug)]
+pub struct ExchangePush {
+    local: PathBuf,
+    owned: Vec<usize>,
+    pushed: BTreeSet<(String, String)>,
+}
+
+impl ExchangePush {
+    /// Push deltas for the `owned` global shard indices from the local
+    /// exchange directory `local`.
+    pub fn new(local: &Path, owned: Vec<usize>) -> ExchangePush {
+        ExchangePush {
+            local: local.to_path_buf(),
+            owned,
+            pushed: BTreeSet::new(),
+        }
+    }
+
+    /// One push cycle; returns whether anything was published.
+    pub fn cycle(&mut self, transport: &dyn RunDirTransport) -> Result<bool, String> {
+        if !self.local.exists() {
+            return Ok(false);
+        }
+        let mut progress = false;
+        for slug_entry in std::fs::read_dir(&self.local)
+            .map_err(|e| format!("listing {}: {e}", self.local.display()))?
+        {
+            let slug_entry =
+                slug_entry.map_err(|e| format!("listing {}: {e}", self.local.display()))?;
+            if !slug_entry.path().is_dir() {
+                continue;
+            }
+            let slug = slug_entry.file_name().to_string_lossy().into_owned();
+            if slug.starts_with('.') {
+                continue;
+            }
+            for entry in std::fs::read_dir(slug_entry.path())
+                .map_err(|e| format!("listing {}: {e}", slug_entry.path().display()))?
+            {
+                let entry =
+                    entry.map_err(|e| format!("listing {}: {e}", slug_entry.path().display()))?;
+                let name = entry.file_name().to_string_lossy().into_owned();
+                let Some((_, shard)) = parse_exchange_delta_name(&name) else {
+                    continue;
+                };
+                if !self.owned.contains(&shard) {
+                    // A peer's delta the pull engine installed locally —
+                    // its owner publishes it; echoing it would be noise.
+                    continue;
+                }
+                let key = (slug.clone(), name.clone());
+                if self.pushed.contains(&key) {
+                    continue;
+                }
+                let bytes = std::fs::read(entry.path())
+                    .map_err(|e| format!("reading {}: {e}", entry.path().display()))?;
+                transport.publish(&format!("{UP_EXCHANGE}/{slug}/{name}"), &bytes)?;
+                self.pushed.insert(key);
+                progress = true;
+            }
+        }
+        Ok(progress)
+    }
+}
+
+/// Installs the fleet's exchange deltas (re-published by the coordinator
+/// into `down/exchange`) into a worker's local exchange directory, where
+/// its shard processes wait for them at epoch boundaries. Every delta is
+/// parsed before installation — a file that does not parse as a store is
+/// skipped with a warning (once) rather than handed to a folding shard or
+/// allowed to wedge the whole sync loop: publishes are atomic, so a
+/// corrupt delta is foreign junk, not a half transfer, and if a shard
+/// genuinely needed it the peer-wait timeout surfaces a pointed error.
+#[derive(Debug)]
+pub struct ExchangePull {
+    local: PathBuf,
+    skipped: BTreeSet<(String, String)>,
+}
+
+impl ExchangePull {
+    /// Install pulled deltas into the local exchange directory `local`.
+    pub fn new(local: &Path) -> ExchangePull {
+        ExchangePull {
+            local: local.to_path_buf(),
+            skipped: BTreeSet::new(),
+        }
+    }
+
+    /// One pull cycle; returns whether anything was installed.
+    pub fn cycle(&mut self, transport: &dyn RunDirTransport) -> Result<bool, String> {
+        let mut progress = false;
+        for slug in transport.list_dirs(DOWN_EXCHANGE)? {
+            for name in transport.list(&format!("{DOWN_EXCHANGE}/{slug}"))? {
+                if parse_exchange_delta_name(&name).is_none() {
+                    continue;
+                }
+                let dest = self.local.join(&slug).join(&name);
+                if dest.exists() || self.skipped.contains(&(slug.clone(), name.clone())) {
+                    continue;
+                }
+                let rel = format!("{DOWN_EXCHANGE}/{slug}/{name}");
+                let Some(bytes) = transport.fetch(&rel)? else {
+                    continue;
+                };
+                if let Err(e) = SkillStore::from_bytes(&bytes) {
+                    crate::log_warn!(
+                        "exchange delta {rel} does not parse as a skill store ({e}); \
+                         skipping it"
+                    );
+                    self.skipped.insert((slug.clone(), name));
+                    continue;
+                }
+                install_atomic(&dest, &bytes)?;
+                progress = true;
+            }
+        }
+        Ok(progress)
+    }
+}
+
+// ------------------------------------------------------------------------
+// Coordinator-side sync engines (pull worker run dirs, re-publish deltas)
+// ------------------------------------------------------------------------
+
+/// Tail-syncs one remote shard run dir into a local mirror the
+/// [`MergeWatcher`] can follow: the manifest once it appears, the
+/// checkpoint tail as it grows, and — only after the remote `complete`
+/// marker is observed — the final skill store, snapshots, and the local
+/// `complete` marker itself, in that order.
+///
+/// [`MergeWatcher`]: super::merge::MergeWatcher
+#[derive(Debug)]
+pub struct ShardPull {
+    rel: String,
+    mirror: PathBuf,
+    results_offset: u64,
+    manifest_done: bool,
+    complete_done: bool,
+}
+
+impl ShardPull {
+    /// Mirror global shard `shard_index` into local directory `mirror`
+    /// (created; resuming a coordinator restarts the tail at the mirror's
+    /// current length).
+    pub fn new(mirror: &Path, shard_index: usize) -> Result<ShardPull, String> {
+        std::fs::create_dir_all(mirror)
+            .map_err(|e| format!("creating mirror {}: {e}", mirror.display()))?;
+        let results_offset = std::fs::metadata(mirror.join(RESULTS))
+            .map(|m| m.len())
+            .unwrap_or(0);
+        Ok(ShardPull {
+            rel: up_shard_rel(shard_index),
+            mirror: mirror.to_path_buf(),
+            results_offset,
+            manifest_done: mirror.join(MANIFEST).exists(),
+            complete_done: mirror.join(RunDir::COMPLETE_MARKER).exists(),
+        })
+    }
+
+    /// The mirror carries the worker's whole slice (its `complete` marker
+    /// is installed).
+    pub fn is_complete(&self) -> bool {
+        self.complete_done
+    }
+
+    /// One pull cycle; returns whether anything new landed in the mirror.
+    pub fn cycle(&mut self, transport: &dyn RunDirTransport) -> Result<bool, String> {
+        if self.complete_done {
+            return Ok(false);
+        }
+        let mut progress = false;
+        if !self.manifest_done {
+            if let Some(bytes) = transport.fetch(&format!("{}/{MANIFEST}", self.rel))? {
+                install_atomic(&self.mirror.join(MANIFEST), &bytes)?;
+                self.manifest_done = true;
+                progress = true;
+            }
+        }
+        // Probe remote completion *before* pulling the tail: everything the
+        // worker published before its `complete` marker is then guaranteed
+        // to be in this same cycle's pull, so installing the local marker
+        // below can never orphan trailing cells.
+        let remote_complete = transport
+            .len(&format!("{}/{}", self.rel, RunDir::COMPLETE_MARKER))?
+            .is_some();
+        if let Some(bytes) =
+            transport.fetch_from(&format!("{}/{RESULTS}", self.rel), self.results_offset)?
+        {
+            if !bytes.is_empty() {
+                use std::io::Write;
+                let path = self.mirror.join(RESULTS);
+                let mut f = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&path)
+                    .map_err(|e| format!("appending {}: {e}", path.display()))?;
+                f.write_all(&bytes)
+                    .map_err(|e| format!("appending {}: {e}", path.display()))?;
+                self.results_offset += bytes.len() as u64;
+                progress = true;
+            }
+        }
+        if remote_complete && self.manifest_done {
+            if let Some(bytes) = transport.fetch(&format!("{}/{SKILLS}", self.rel))? {
+                install_atomic(&self.mirror.join(SKILLS), &bytes)?;
+            }
+            for name in transport.list(&self.rel)? {
+                if !(name.starts_with("memory_snapshot.") && name.ends_with(".json")) {
+                    continue;
+                }
+                if let Some(bytes) = transport.fetch(&format!("{}/{name}", self.rel))? {
+                    install_atomic(&self.mirror.join(&name), &bytes)?;
+                }
+            }
+            install_atomic(&self.mirror.join(RunDir::COMPLETE_MARKER), b"complete\n")?;
+            self.complete_done = true;
+            progress = true;
+        }
+        Ok(progress)
+    }
+}
+
+/// The coordinator's exchange relay: every delta a worker publishes under
+/// its `up/exchange` is re-published verbatim into every *other* worker's
+/// `down/exchange`, so cross-machine shards keep learning from each other
+/// mid-run. Deltas are immutable and deterministic, so verbatim relay
+/// preserves the exchange determinism contract bit for bit.
+#[derive(Debug, Default)]
+pub struct ExchangeHub {
+    forwarded: BTreeSet<(usize, String, String)>,
+}
+
+impl ExchangeHub {
+    /// A hub with no relay history (a restarted coordinator re-relays
+    /// identical bytes, which is harmless).
+    pub fn new() -> ExchangeHub {
+        ExchangeHub::default()
+    }
+
+    /// One relay cycle over the whole fleet; returns whether anything was
+    /// forwarded. `workers[i]` must describe the endpoint `transports[i]`
+    /// was built from.
+    pub fn cycle(
+        &mut self,
+        workers: &[WorkerSpec],
+        transports: &[Box<dyn RunDirTransport>],
+    ) -> Result<bool, String> {
+        let mut progress = false;
+        for (src, spec) in workers.iter().enumerate() {
+            let t = &transports[src];
+            for slug in t.list_dirs(UP_EXCHANGE)? {
+                for name in t.list(&format!("{UP_EXCHANGE}/{slug}"))? {
+                    let Some((_, shard)) = parse_exchange_delta_name(&name) else {
+                        continue;
+                    };
+                    if !spec.owns(shard) {
+                        // Shared-root fleets see peers' deltas in each
+                        // other's listings; each delta is relayed once, by
+                        // its owner's row.
+                        continue;
+                    }
+                    let key = (src, slug.clone(), name.clone());
+                    if self.forwarded.contains(&key) {
+                        continue;
+                    }
+                    let rel = format!("{UP_EXCHANGE}/{slug}/{name}");
+                    let Some(bytes) = t.fetch(&rel)? else {
+                        continue;
+                    };
+                    // Publishes are atomic, so an unparseable delta is
+                    // foreign junk, not a half transfer: warn once and
+                    // never relay it, rather than wedging the fleet's
+                    // whole sync loop on it.
+                    if let Err(e) = SkillStore::from_bytes(&bytes) {
+                        crate::log_warn!(
+                            "exchange delta {rel} from worker {:?} does not parse as a \
+                             skill store ({e}); not relaying it",
+                            spec.id
+                        );
+                        self.forwarded.insert(key);
+                        continue;
+                    }
+                    for (dst, dt) in transports.iter().enumerate() {
+                        if dst == src {
+                            continue;
+                        }
+                        dt.publish(&format!("{DOWN_EXCHANGE}/{slug}/{name}"), &bytes)?;
+                    }
+                    self.forwarded.insert(key);
+                    progress = true;
+                }
+            }
+        }
+        Ok(progress)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ks-transport-{tag}-{}", std::process::id()))
+    }
+
+    fn manifest_text(total: usize, rows: &[(&str, usize, usize)]) -> String {
+        let workers: Vec<String> = rows
+            .iter()
+            .map(|(id, lo, hi)| {
+                format!(
+                    r#"{{"id":"{id}","shard_lo":{lo},"shard_hi":{hi},"transport":{{"kind":"mirror-dir","root":"/tmp/ks-mt-{id}"}}}}"#
+                )
+            })
+            .collect();
+        format!(
+            r#"{{"version":1,"total_shards":{total},"workers":[{}]}}"#,
+            workers.join(",")
+        )
+    }
+
+    #[test]
+    fn manifest_parses_and_validates_cover() {
+        let m = WorkerManifest::parse(&manifest_text(4, &[("a", 0, 1), ("b", 2, 3)])).unwrap();
+        assert_eq!(m.total_shards, 4);
+        assert_eq!(m.workers.len(), 2);
+        assert!(m.worker("a").unwrap().owns(1));
+        assert!(!m.worker("a").unwrap().owns(2));
+        assert_eq!(m.worker_ids(), vec!["a", "b"]);
+        assert!(m.worker("missing").is_none());
+    }
+
+    #[test]
+    fn manifest_refuses_duplicate_ids() {
+        let err =
+            WorkerManifest::parse(&manifest_text(4, &[("a", 0, 1), ("a", 2, 3)])).unwrap_err();
+        assert!(err.contains("duplicate worker id"), "{err}");
+    }
+
+    #[test]
+    fn manifest_refuses_overlap_and_gaps() {
+        let err =
+            WorkerManifest::parse(&manifest_text(4, &[("a", 0, 2), ("b", 2, 3)])).unwrap_err();
+        assert!(err.contains("overlapping") && err.contains("shard 2"), "{err}");
+        let err =
+            WorkerManifest::parse(&manifest_text(4, &[("a", 0, 1), ("b", 3, 3)])).unwrap_err();
+        assert!(err.contains("covered by no worker") && err.contains('2'), "{err}");
+        // A top-end gap (ranges legal, total too big) is still a gap.
+        let err =
+            WorkerManifest::parse(&manifest_text(5, &[("a", 0, 1), ("b", 2, 3)])).unwrap_err();
+        assert!(err.contains("covered by no worker"), "{err}");
+    }
+
+    #[test]
+    fn manifest_refuses_malformed_rows() {
+        let err =
+            WorkerManifest::parse(&manifest_text(2, &[("a", 1, 0), ("b", 1, 1)])).unwrap_err();
+        assert!(err.contains("shard_lo"), "{err}");
+        let err =
+            WorkerManifest::parse(&manifest_text(2, &[("a", 0, 0), ("b", 1, 5)])).unwrap_err();
+        assert!(err.contains("total_shards is 2"), "{err}");
+        let err = WorkerManifest::parse(&manifest_text(0, &[])).unwrap_err();
+        assert!(err.contains("total_shards must be >= 1"), "{err}");
+        let err = WorkerManifest::parse(r#"{"total_shards":1,"workers":[]}"#).unwrap_err();
+        assert!(err.contains("at least one worker"), "{err}");
+        let err = WorkerManifest::parse(
+            r#"{"total_shards":1,"workers":[{"id":"a","shard_lo":0,"shard_hi":0,
+                "transport":{"kind":"carrier-pigeon","root":"/tmp/x"}}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown transport kind"), "{err}");
+        assert!(WorkerManifest::load(Path::new("/no/such/manifest.json")).is_err());
+    }
+
+    #[test]
+    fn mirror_dir_roundtrips_atomically() {
+        let root = tmp_dir("mirror");
+        let _ = std::fs::remove_dir_all(&root);
+        let t = MirrorDir::new(&root).unwrap();
+        assert!(t.fetch("a/b.txt").unwrap().is_none());
+        assert!(t.len("a/b.txt").unwrap().is_none());
+        assert_eq!(t.list("a").unwrap(), Vec::<String>::new());
+        t.publish("a/b.txt", b"hello\nworld\n").unwrap();
+        assert_eq!(t.fetch("a/b.txt").unwrap().unwrap(), b"hello\nworld\n");
+        assert_eq!(t.len("a/b.txt").unwrap(), Some(12));
+        assert_eq!(t.fetch_from("a/b.txt", 6).unwrap().unwrap(), b"world\n");
+        assert_eq!(t.fetch_from("a/b.txt", 99).unwrap().unwrap(), b"");
+        t.publish("a/b.txt", b"rewritten\n").unwrap();
+        assert_eq!(t.fetch("a/b.txt").unwrap().unwrap(), b"rewritten\n");
+        assert_eq!(t.list("a").unwrap(), vec!["b.txt".to_string()]);
+        assert_eq!(t.list_dirs("").unwrap(), vec!["a".to_string()]);
+        // The staging area never shows up in listings.
+        assert!(!t.list_dirs("").unwrap().contains(&".staging".to_string()));
+        // MirrorDir is deliberately opaque; LocalFs is the zero-copy one.
+        assert!(t.local_dir("a").is_none());
+        let lt = LocalFs::new(&root).unwrap();
+        assert_eq!(lt.local_dir("a").unwrap(), root.join("a"));
+        // Escapes are refused.
+        assert!(t.publish("../evil", b"x").is_err());
+        assert!(t.fetch("/abs").is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn mirror_dir_check_detects_vanished_root() {
+        let root = tmp_dir("vanish");
+        let _ = std::fs::remove_dir_all(&root);
+        let t = MirrorDir::new(&root).unwrap();
+        t.check().unwrap();
+        std::fs::remove_dir_all(&root).unwrap();
+        let err = t.check().unwrap_err();
+        assert!(err.contains("disappeared"), "{err}");
+    }
+
+    #[test]
+    fn interrupted_publish_is_invisible_and_retryable() {
+        // The fault hook cuts the first matching publish off mid-file (the
+        // staging file holds half the bytes); nothing may become visible,
+        // and the retry must land the full contents.
+        let root = tmp_dir("fault");
+        let _ = std::fs::remove_dir_all(&root);
+        let marker = tmp_dir("fault-marker");
+        let _ = std::fs::remove_file(&marker);
+        let t = MirrorDir::new(&root)
+            .unwrap()
+            .with_fault_hook("unique-fault-probe", &marker);
+        let err = t.publish("x/unique-fault-probe.bin", b"0123456789").unwrap_err();
+        assert!(err.contains("interruption"), "{err}");
+        assert!(marker.exists(), "the simulated interruption must have fired");
+        assert!(
+            t.fetch("x/unique-fault-probe.bin").unwrap().is_none(),
+            "a torn transfer must never become visible"
+        );
+        t.publish("x/unique-fault-probe.bin", b"0123456789").unwrap();
+        assert_eq!(
+            t.fetch("x/unique-fault-probe.bin").unwrap().unwrap(),
+            b"0123456789"
+        );
+        let _ = std::fs::remove_file(&marker);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn shard_push_publishes_at_newline_boundaries_and_complete_last() {
+        let root = tmp_dir("push");
+        let _ = std::fs::remove_dir_all(&root);
+        let local = root.join("local");
+        std::fs::create_dir_all(&local).unwrap();
+        let t = MirrorDir::new(&root.join("remote")).unwrap();
+        let mut push = ShardPush::new(&local, 0, &t).unwrap();
+
+        std::fs::write(local.join(MANIFEST), b"{\"m\":1}\n").unwrap();
+        std::fs::write(local.join(RESULTS), b"line-one\nline-two\ntorn-tai").unwrap();
+        assert!(push.cycle(&t).unwrap());
+        assert_eq!(t.fetch("up/shard-0/manifest.json").unwrap().unwrap(), b"{\"m\":1}\n");
+        assert_eq!(
+            t.fetch("up/shard-0/results.jsonl").unwrap().unwrap(),
+            b"line-one\nline-two\n",
+            "only the newline-terminated prefix may be published"
+        );
+        assert!(!push.is_complete());
+        assert!(!push.cycle(&t).unwrap(), "no growth, nothing to publish");
+
+        // Completing the torn line and marking complete publishes the rest,
+        // with the marker observable only after the data.
+        std::fs::write(local.join(RESULTS), b"line-one\nline-two\ntorn-tail-done\n").unwrap();
+        std::fs::write(local.join(SKILLS), b"{\"s\":1}\n").unwrap();
+        std::fs::write(local.join(RunDir::COMPLETE_MARKER), b"complete\n").unwrap();
+        assert!(push.cycle(&t).unwrap());
+        assert!(push.is_complete());
+        assert_eq!(
+            t.fetch("up/shard-0/results.jsonl").unwrap().unwrap(),
+            b"line-one\nline-two\ntorn-tail-done\n"
+        );
+        assert!(t.len("up/shard-0/complete").unwrap().is_some());
+
+        // A fresh push over a transport that is *ahead* of the local
+        // checkpoint refuses to publish (stale/foreign root).
+        std::fs::write(local.join(RESULTS), b"line-one\n").unwrap();
+        let mut stale = ShardPush::new(&local, 0, &t).unwrap();
+        let err = stale.cycle(&t).unwrap_err();
+        assert!(err.contains("different"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn shard_pull_mirrors_and_installs_complete_last() {
+        let root = tmp_dir("pull");
+        let _ = std::fs::remove_dir_all(&root);
+        let t = MirrorDir::new(&root.join("remote")).unwrap();
+        let mirror = root.join("mirror");
+        let mut pull = ShardPull::new(&mirror, 3).unwrap();
+
+        assert!(!pull.cycle(&t).unwrap(), "nothing remote yet");
+        t.publish("up/shard-3/manifest.json", b"{\"m\":1}\n").unwrap();
+        t.publish("up/shard-3/results.jsonl", b"one\n").unwrap();
+        assert!(pull.cycle(&t).unwrap());
+        assert_eq!(std::fs::read(mirror.join(RESULTS)).unwrap(), b"one\n");
+        assert!(!pull.is_complete());
+
+        t.publish("up/shard-3/results.jsonl", b"one\ntwo\n").unwrap();
+        t.publish("up/shard-3/skills.json", b"{\"s\":1}\n").unwrap();
+        t.publish("up/shard-3/complete", b"complete\n").unwrap();
+        assert!(pull.cycle(&t).unwrap());
+        assert!(pull.is_complete());
+        assert_eq!(std::fs::read(mirror.join(RESULTS)).unwrap(), b"one\ntwo\n");
+        assert_eq!(std::fs::read(mirror.join(SKILLS)).unwrap(), b"{\"s\":1}\n");
+        assert!(mirror.join(RunDir::COMPLETE_MARKER).exists());
+
+        // A restarted coordinator resumes the tail where the mirror ends.
+        let resumed = ShardPull::new(&mirror, 3).unwrap();
+        assert!(resumed.is_complete());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn exchange_push_pull_and_hub_route_by_ownership() {
+        let root = tmp_dir("exchange");
+        let _ = std::fs::remove_dir_all(&root);
+        let specs = vec![
+            WorkerSpec {
+                id: "a".to_string(),
+                shard_lo: 0,
+                shard_hi: 0,
+                transport: TransportSpec {
+                    kind: TransportKind::MirrorDir,
+                    root: root.join("ta"),
+                },
+            },
+            WorkerSpec {
+                id: "b".to_string(),
+                shard_lo: 1,
+                shard_hi: 1,
+                transport: TransportSpec {
+                    kind: TransportKind::MirrorDir,
+                    root: root.join("tb"),
+                },
+            },
+        ];
+        let transports: Vec<Box<dyn RunDirTransport>> =
+            specs.iter().map(|s| s.transport.build().unwrap()).collect();
+
+        // Worker a publishes its shard-0 delta for epoch 0.
+        let delta = SkillStore::new().canonical_bytes();
+        let local_a = root.join("ex-a");
+        std::fs::create_dir_all(local_a.join("kernelskill")).unwrap();
+        std::fs::write(local_a.join("kernelskill/epoch-0.shard-0.json"), &delta).unwrap();
+        // A stray non-delta file and a peer's installed delta are ignored.
+        std::fs::write(local_a.join("kernelskill/notes.txt"), b"x").unwrap();
+        std::fs::write(local_a.join("kernelskill/epoch-0.shard-1.json"), &delta).unwrap();
+        let mut push = ExchangePush::new(&local_a, vec![0]);
+        assert!(push.cycle(transports[0].as_ref()).unwrap());
+        assert_eq!(
+            transports[0].list("up/exchange/kernelskill").unwrap(),
+            vec!["epoch-0.shard-0.json".to_string()],
+            "only owned deltas are published"
+        );
+        assert!(!push.cycle(transports[0].as_ref()).unwrap(), "pushed once");
+
+        // The hub relays a's delta into b's down/exchange — and not back
+        // into a's.
+        let mut hub = ExchangeHub::new();
+        assert!(hub.cycle(&specs, &transports).unwrap());
+        assert!(!hub.cycle(&specs, &transports).unwrap(), "relayed once");
+        assert_eq!(
+            transports[1].list("down/exchange/kernelskill").unwrap(),
+            vec!["epoch-0.shard-0.json".to_string()]
+        );
+        assert!(transports[0].list("down/exchange/kernelskill").unwrap().is_empty());
+
+        // Worker b installs it where its shards wait for it.
+        let local_b = root.join("ex-b");
+        let mut pull = ExchangePull::new(&local_b);
+        assert!(pull.cycle(transports[1].as_ref()).unwrap());
+        assert_eq!(
+            std::fs::read(local_b.join("kernelskill/epoch-0.shard-0.json")).unwrap(),
+            delta
+        );
+        assert!(!pull.cycle(transports[1].as_ref()).unwrap(), "installed once");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -198,7 +198,12 @@ fn compute_eff(cfg: &GroupSchedule, occ: f64, is_gemm: bool) -> f64 {
 }
 
 /// Price one group.
-pub fn price_group(graph: &KernelGraph, group: &[usize], cfg: &GroupSchedule, dev: &DeviceSpec) -> GroupCost {
+pub fn price_group(
+    graph: &KernelGraph,
+    group: &[usize],
+    cfg: &GroupSchedule,
+    dev: &DeviceSpec,
+) -> GroupCost {
     let flops: f64 = group.iter().map(|&o| graph.op(o).flops()).sum();
     let is_gemm = group.iter().any(|&o| graph.op(o).is_gemm_like());
     // Wide (lane-aligned) loads are what keep a reduction tree streaming;

@@ -49,7 +49,8 @@ pub fn synthesize(
     let hot = cost.hot_group();
     let g = &cost.groups[hot];
 
-    let dram_pct = (g.mem_time_s / g.time_s.max(1e-12) * 100.0).min(100.0) * g.bw_eff_frac.max(0.05);
+    let dram_pct =
+        (g.mem_time_s / g.time_s.max(1e-12) * 100.0).min(100.0) * g.bw_eff_frac.max(0.05);
     let sm_pct = (g.compute_time_s / g.time_s.max(1e-12) * 100.0).min(100.0) * g.compute_eff_frac;
     let occ_pct = g.occupancy * 100.0;
     let cfg = &sched.cfg[hot];
@@ -154,7 +155,9 @@ pub fn synthesize(
         hints.push("Est. Speedup: increase occupancy by reducing block resources".into());
     }
     if dram_pct > 50.0 {
-        hints.push("Memory is more heavily utilized than compute: look at memory access patterns".into());
+        hints.push(
+            "Memory is more heavily utilized than compute: look at memory access patterns".into(),
+        );
     }
     if cfg.staging && !cfg.smem_padding {
         hints.push("Shared memory bank conflicts detected".into());

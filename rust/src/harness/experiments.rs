@@ -37,6 +37,11 @@ pub struct ExpConfig {
     /// Cells per exchange epoch (`--exchange-epoch`); 0 picks the default
     /// when `exchange_dir` is set.
     pub exchange_epoch: usize,
+    /// Device preset to price against (`--device`); None = the default
+    /// (A100-like). Part of the experiment identity: it is recorded in the
+    /// run manifest and keys the skill-store partition observations land
+    /// in, so resume and merge refuse to mix presets.
+    pub device: Option<crate::device::machine::DeviceSpec>,
 }
 
 impl Default for ExpConfig {
@@ -52,16 +57,21 @@ impl Default for ExpConfig {
             shard_index: 0,
             exchange_dir: None,
             exchange_epoch: 0,
+            device: None,
         }
     }
 }
 
 impl ExpConfig {
     pub fn loop_cfg(&self) -> LoopConfig {
-        LoopConfig {
+        let mut cfg = LoopConfig {
             memory_dir: self.memory_dir.clone(),
             ..LoopConfig::default()
+        };
+        if let Some(dev) = &self.device {
+            cfg.dev = dev.clone();
         }
+        cfg
     }
 
     pub fn suite_opts(&self) -> SuiteOptions {
@@ -169,7 +179,12 @@ pub fn trajectory_figures(cfg: &ExpConfig) -> String {
     let r = coordinator::run_task(task, &baselines::kernelskill(), &loop_cfg);
     out.push_str(&format!(
         "Task {} — KernelSkill trajectory (seed {:.3?}x -> best {:.3}x, {} promotions, {} repair attempts, longest chain {})\n",
-        task.id, r.seed_speedup, r.best_speedup, r.promotions, r.repair_attempts, r.longest_repair_chain
+        task.id,
+        r.seed_speedup,
+        r.best_speedup,
+        r.promotions,
+        r.repair_attempts,
+        r.longest_repair_chain
     ));
     for rec in &r.rounds {
         let what = match &rec.branch {

@@ -103,7 +103,12 @@ mod tests {
 
     #[test]
     fn by_level_partitions() {
-        let rs = vec![result(1, true, 1.0), result(2, true, 1.0), result(3, true, 1.0), result(2, true, 1.0)];
+        let rs = vec![
+            result(1, true, 1.0),
+            result(2, true, 1.0),
+            result(3, true, 1.0),
+            result(2, true, 1.0),
+        ];
         let split = by_level(&rs);
         assert_eq!(split[0].len(), 1);
         assert_eq!(split[1].len(), 2);

@@ -46,7 +46,8 @@ pub fn table2(rows: &[Row]) -> String {
     ));
     s.push_str(&format!(
         "{:<24} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}\n",
-        "", "Success", "Fast1", "Speedup", "Success", "Fast1", "Speedup", "Success", "Fast1", "Speedup"
+        "", "Success", "Fast1", "Speedup", "Success", "Fast1", "Speedup", "Success", "Fast1",
+        "Speedup"
     ));
     s.push_str(&"-".repeat(112));
     s.push('\n');
@@ -112,11 +113,13 @@ mod tests {
     use super::*;
 
     fn row(name: &str) -> Row {
-        let mut c = Cell::default();
-        c.success = 1.0;
-        c.speedup = 2.5;
-        c.fast1 = 0.8;
-        c.speedup_per_round = 0.17;
+        let c = Cell {
+            success: 1.0,
+            speedup: 2.5,
+            fast1: 0.8,
+            speedup_per_round: 0.17,
+            ..Cell::default()
+        };
         Row {
             method: name.into(),
             cells: [c.clone(), c.clone(), c],

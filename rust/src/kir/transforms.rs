@@ -177,7 +177,11 @@ fn group_has_gemm(graph: &KernelGraph, sched: &Schedule, g: usize) -> bool {
 }
 
 /// The GEMM-shaped op in group `g`, if any.
-fn group_gemm<'a>(graph: &'a KernelGraph, sched: &Schedule, g: usize) -> Option<&'a crate::kir::op::Op> {
+fn group_gemm<'a>(
+    graph: &'a KernelGraph,
+    sched: &Schedule,
+    g: usize,
+) -> Option<&'a crate::kir::op::Op> {
     sched.groups[g]
         .iter()
         .map(|&o| graph.op(o))

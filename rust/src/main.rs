@@ -28,10 +28,55 @@
 use kernelskill::baselines;
 use kernelskill::bench_suite;
 use kernelskill::coordinator::{self, Branch, LoopConfig};
+use kernelskill::device::machine::DeviceSpec;
 use kernelskill::harness::{calibrate, experiments, metrics};
 use kernelskill::runtime::{self, Registry, Runtime};
 use kernelskill::util::cli::Args;
 use kernelskill::util::logging::{self, Level};
+
+/// Subcommands a `launch` / `worker` fleet may fan out (they must accept
+/// `--run-dir/--shards/--shard-index/--resume`).
+const SHARDABLE: [&str; 5] = ["suite", "table1", "table2", "table3", "per-round"];
+
+/// Matrix-defining flags forwarded verbatim to shard children by `launch`
+/// and `worker`.
+const PASSTHROUGH_FLAGS: [&str; 7] =
+    ["strategy", "level", "take", "seeds", "suite-seed", "workers", "device"];
+
+/// The flags `launch` and `worker` share when fanning a matrix out to
+/// shard children: the verbatim passthrough list, the exchange epoch, and
+/// the per-shard crash budget. One parser for both, so the two fan-out
+/// surfaces can never drift apart.
+fn fanout_flags(args: &Args) -> Result<(Vec<String>, Option<usize>, usize), String> {
+    let mut passthrough = Vec::new();
+    for flag in PASSTHROUGH_FLAGS {
+        if let Some(v) = args.get(flag) {
+            passthrough.push(format!("--{flag}"));
+            passthrough.push(v.to_string());
+        }
+    }
+    let mut exchange_epoch = None;
+    if args.has("exchange") {
+        exchange_epoch = Some(coordinator::DEFAULT_EXCHANGE_EPOCH);
+    }
+    if args.get("exchange-epoch").is_some() {
+        exchange_epoch = Some(args.get_usize("exchange-epoch", 0)?);
+    }
+    let max_restarts = args.get_usize("max-restarts", 2)?;
+    Ok((passthrough, exchange_epoch, max_restarts))
+}
+
+fn parse_device(args: &Args) -> Result<Option<DeviceSpec>, String> {
+    match args.get("device") {
+        None => Ok(None),
+        Some(name) => DeviceSpec::by_name(name).map(Some).ok_or_else(|| {
+            format!(
+                "unknown device preset {name:?} (known: {:?})",
+                DeviceSpec::presets().iter().map(|p| p.name).collect::<Vec<_>>()
+            )
+        }),
+    }
+}
 
 fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
     let defaults = experiments::ExpConfig::default();
@@ -61,6 +106,7 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
         shard_index: args.get_usize("shard-index", 0)?,
         exchange_dir,
         exchange_epoch,
+        device: parse_device(args)?,
     })
 }
 
@@ -159,9 +205,16 @@ fn run() -> Result<(), String> {
                 .iter()
                 .find(|t| t.id.contains(task_id))
                 .ok_or_else(|| format!("no task matching {task_id}"))?;
-            let mut cfg = LoopConfig::default();
-            cfg.run_seed = args.get_u64("seed", 0)?;
-            cfg.memory_dir = args.get("memory-dir").map(std::path::PathBuf::from);
+            let mut cfg = LoopConfig {
+                run_seed: args.get_u64("seed", 0)?,
+                memory_dir: args.get("memory-dir").map(std::path::PathBuf::from),
+                ..LoopConfig::default()
+            };
+            // The device preset keys the skill partition the observations
+            // land in, so run-task must honor it like every suite command.
+            if let Some(dev) = parse_device(&args)? {
+                cfg.dev = dev;
+            }
             let r = coordinator::run_task(task, &strategy, &cfg);
             // Standalone runs persist their own observations (in a suite the
             // scheduler owns the write cycle), so learning accumulates
@@ -188,7 +241,13 @@ fn run() -> Result<(), String> {
             }
             println!(
                 "{} [{}]: success={} best={:.3}x seed={:?} promotions={} repairs={}",
-                r.task_id, r.strategy, r.success, r.best_speedup, r.seed_speedup, r.promotions, r.repair_attempts
+                r.task_id,
+                r.strategy,
+                r.success,
+                r.best_speedup,
+                r.seed_speedup,
+                r.promotions,
+                r.repair_attempts
             );
             for rec in &r.rounds {
                 let what = match &rec.branch {
@@ -320,36 +379,47 @@ fn run() -> Result<(), String> {
             if args.get("shard-index").is_some() {
                 return Err("launch owns the shard assignment; drop --shard-index".to_string());
             }
-            let sub = args.get_or("cmd", "suite").to_string();
-            if !["suite", "table1", "table2", "table3", "per-round"].contains(&sub.as_str()) {
+            // Fleet mode: a worker manifest turns `launch` into the
+            // pull-based cross-machine coordinator. `--manifest <file>` is
+            // canonical; a non-numeric `--workers <file>` is accepted too
+            // (a numeric value keeps its meaning: the children's
+            // worker-pool size) — but only when it names a real file, so a
+            // typo'd pool size gets a pointed error instead of a silent
+            // mode switch.
+            if let Some(path) = args.get("manifest") {
+                return run_fleet(&args, path, run_dir);
+            }
+            if let Some(v) = args.get("workers").filter(|v| v.parse::<usize>().is_err()) {
+                if std::path::Path::new(v).is_file() {
+                    return run_fleet(&args, v, run_dir);
+                }
                 return Err(format!(
-                    "launch --cmd {sub:?} is not shardable; expected suite, table1, table2, \
-                     table3, or per-round"
+                    "--workers {v:?} is neither a worker-pool size nor an existing worker \
+                     manifest file (fleet mode prefers --manifest <file>)"
                 ));
             }
+            let sub = args.get_or("cmd", "suite").to_string();
+            if !SHARDABLE.contains(&sub.as_str()) {
+                return Err(format!(
+                    "launch --cmd {sub:?} is not shardable; expected one of {SHARDABLE:?}"
+                ));
+            }
+            parse_device(&args)?; // refuse an unknown preset before spawning
             let program = std::env::current_exe()
                 .map_err(|e| format!("resolving the current executable: {e}"))?;
             let shards = args.get_usize("shards", 2)?;
             let mut lc = coordinator::LaunchConfig::new(program, &sub, run_dir, shards);
-            for flag in ["strategy", "level", "take", "seeds", "suite-seed", "workers"] {
-                if let Some(v) = args.get(flag) {
-                    lc.passthrough.push(format!("--{flag}"));
-                    lc.passthrough.push(v.to_string());
-                }
-            }
-            lc.max_restarts = args.get_usize("max-restarts", 2)?;
-            if args.has("exchange") {
-                lc.exchange_epoch = Some(coordinator::DEFAULT_EXCHANGE_EPOCH);
-            }
-            if args.get("exchange-epoch").is_some() {
-                lc.exchange_epoch = Some(args.get_usize("exchange-epoch", 0)?);
-            }
+            let (passthrough, exchange_epoch, max_restarts) = fanout_flags(&args)?;
+            lc.passthrough = passthrough;
+            lc.exchange_epoch = exchange_epoch;
+            lc.max_restarts = max_restarts;
             let report = coordinator::launch(&lc)?;
             print!("{}", report.render());
             println!(
                 "merged run dir: {run_dir} (report it with: report --run-dir {run_dir})"
             );
         }
+        Some("worker") => return run_worker_cmd(&args),
         Some("skills") => return run_skills(&args),
         Some("smoke") => return run_smoke(),
         _ => {
@@ -360,7 +430,7 @@ fn run() -> Result<(), String> {
                  \n\
                  experiments:\n\
                  \x20 table1 | table2 | table3 | per-round | trajectory\n\
-                 \x20     [--seeds N] [--suite-seed S] [--workers W]\n\
+                 \x20     [--seeds N] [--suite-seed S] [--workers W] [--device D]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M]\n\
                  \x20     [--shards N --shard-index I]\n\
                  \x20     [--exchange-dir X --exchange-epoch E]\n\
@@ -368,18 +438,25 @@ fn run() -> Result<(), String> {
                  \x20 verify-artifacts [--seed S] [--tolerance T]\n\
                  \x20 calibrate [--seed S]\n\
                  single runs:\n\
-                 \x20 run-task --task <substr> [--strategy <name>] [--seed S] [--memory-dir M]\n\
+                 \x20 run-task --task <substr> [--strategy <name>] [--seed S] [--memory-dir M] [--device D]\n\
                  \x20 suite --strategy <name> [--level 1|2|3] [--take N]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M] [--smoke]\n\
-                 \x20     [--shards N --shard-index I]\n\
+                 \x20     [--shards N --shard-index I] [--device a100-like|tpu-like]\n\
                  orchestration:\n\
                  \x20 report --run-dir D     render tables from streamed results.jsonl\n\
                  \x20 merge --out D S0 S1..  union per-shard run dirs (checkpoints + skill stores)\n\
                  \x20     [--watch [--interval-ms N]]   follow still-running shards, then finalize\n\
                  \x20 launch --shards N --run-dir D [--cmd suite|table1|..]\n\
                  \x20     [--strategy S] [--level L] [--take K] [--seeds M] [--workers W]\n\
-                 \x20     [--exchange-epoch E] [--max-restarts R]\n\
+                 \x20     [--device D] [--exchange-epoch E] [--max-restarts R]\n\
                  \x20     spawn N shard processes, restart crashes into --resume, merge into D\n\
+                 \x20 launch --manifest workers.json --run-dir D\n\
+                 \x20     [--stall-timeout-ms T] [--poll-ms P]\n\
+                 \x20     cross-machine coordinator: pull every worker's run dirs through\n\
+                 \x20     their transports, relay exchange deltas, merge byte-identically\n\
+                 \x20 worker --manifest workers.json --worker-id ID --run-dir D\n\
+                 \x20     [--cmd suite|table1|..] [matrix flags as in launch]\n\
+                 \x20     run this machine's manifest shard range and publish it\n\
                  \x20 smoke                  tiny checkpoint/resume/memory end-to-end (CI gate)\n\
                  learned memory (skills.json, see docs/memory-formats.md):\n\
                  \x20 skills inspect --memory-dir M [--device D] [--case SUBSTR]\n\
@@ -395,10 +472,97 @@ fn run() -> Result<(), String> {
     Ok(())
 }
 
+/// `launch --manifest <file>`: the cross-machine coordinator. Spawns
+/// nothing — it pulls every worker's published run dirs through their
+/// transports, merges them live, and relays exchange deltas between
+/// workers. The workers themselves are started out of band with the
+/// `worker` subcommand.
+fn run_fleet(args: &Args, manifest_path: &str, run_dir: &str) -> Result<(), String> {
+    if args.get("shards").is_some() {
+        return Err("launch --manifest: the manifest owns the shard assignment; drop --shards"
+            .to_string());
+    }
+    // Matrix and supervision flags must live on the (uniform) `worker`
+    // invocations; a flag here would silently apply to nothing.
+    let matrix_flags = ["cmd", "exchange", "exchange-epoch", "strategy", "level", "take",
+        "seeds", "suite-seed", "device", "max-restarts"];
+    for flag in matrix_flags {
+        if args.get(flag).is_some() || args.has(flag) {
+            return Err(format!(
+                "launch --manifest: --{flag} belongs on the `worker` invocations (every \
+                 worker must run the same matrix flags); the coordinator only pulls, \
+                 relays, and merges"
+            ));
+        }
+    }
+    // `--workers` doubles as the manifest-path spelling; any *other* value
+    // here is the children's pool size and belongs on the workers too.
+    if let Some(w) = args.get("workers") {
+        if w != manifest_path {
+            return Err(
+                "launch --manifest: --workers <N> belongs on the `worker` invocations; \
+                 the coordinator spawns nothing"
+                    .to_string(),
+            );
+        }
+    }
+    let manifest =
+        coordinator::WorkerManifest::load(std::path::Path::new(manifest_path))?;
+    let mut fc = coordinator::FleetConfig::new(manifest, run_dir);
+    fc.poll_ms = args.get_u64("poll-ms", fc.poll_ms)?;
+    fc.stall_timeout_ms = args.get_u64("stall-timeout-ms", fc.stall_timeout_ms)?;
+    let report = coordinator::launch_workers(&fc)?;
+    print!("{}", report.render());
+    println!("merged run dir: {run_dir} (report it with: report --run-dir {run_dir})");
+    Ok(())
+}
+
+/// The `worker` subcommand: run this machine's manifest row of a
+/// cross-machine launch — spawn and supervise its shard range, publish
+/// through its transport, pull the fleet's exchange deltas down.
+fn run_worker_cmd(args: &Args) -> Result<(), String> {
+    let manifest_path = args
+        .get("manifest")
+        .ok_or("worker: --manifest <workers.json> required")?;
+    let id = args.get("worker-id").ok_or("worker: --worker-id <id> required")?;
+    let run_dir = args
+        .get("run-dir")
+        .ok_or("worker: --run-dir <dir> required (local scratch for checkpoints and logs)")?;
+    if args.get("memory-dir").is_some() {
+        return Err("worker does not take --memory-dir: every shard would fight over one \
+                    live store. Use --exchange-epoch for live cross-shard learning"
+            .to_string());
+    }
+    if args.get("shards").is_some() || args.get("shard-index").is_some() {
+        return Err(
+            "the worker manifest owns the shard assignment; drop --shards/--shard-index"
+                .to_string(),
+        );
+    }
+    let sub = args.get_or("cmd", "suite").to_string();
+    if !SHARDABLE.contains(&sub.as_str()) {
+        return Err(format!(
+            "worker --cmd {sub:?} is not shardable; expected one of {SHARDABLE:?}"
+        ));
+    }
+    parse_device(args)?; // refuse an unknown preset before spawning
+    let manifest = coordinator::WorkerManifest::load(std::path::Path::new(manifest_path))?;
+    let program = std::env::current_exe()
+        .map_err(|e| format!("resolving the current executable: {e}"))?;
+    let mut wc = coordinator::WorkerConfig::new(program, &sub, run_dir, manifest, id);
+    let (passthrough, exchange_epoch, max_restarts) = fanout_flags(args)?;
+    wc.passthrough = passthrough;
+    wc.exchange_epoch = exchange_epoch;
+    wc.max_restarts = max_restarts;
+    wc.poll_ms = args.get_u64("poll-ms", wc.poll_ms)?;
+    let report = coordinator::run_worker(&wc)?;
+    print!("{}", report.render());
+    Ok(())
+}
+
 /// The `skills` subcommand family: introspect and maintain a persistent
 /// learned store (`skills.json`) without running anything.
 fn run_skills(args: &Args) -> Result<(), String> {
-    use kernelskill::device::machine::DeviceSpec;
     use kernelskill::memory::long_term::SkillStore;
 
     let action = args.positional.first().map(|s| s.as_str()).unwrap_or("inspect");

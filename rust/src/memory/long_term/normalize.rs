@@ -130,7 +130,12 @@ pub fn fold_features(ev: &mut Evidence, f: &CodeFeatures) {
 }
 
 /// Task-level facts the veto rules need.
-pub fn fold_task_facts(ev: &mut Evidence, strict_tolerance: bool, mxu_alignable: bool, has_gemm: bool) {
+pub fn fold_task_facts(
+    ev: &mut Evidence,
+    strict_tolerance: bool,
+    mxu_alignable: bool,
+    has_gemm: bool,
+) {
     let b = |x: bool| if x { 1.0 } else { 0.0 };
     ev.insert("task.strict", b(strict_tolerance));
     ev.insert("task.mxu_alignable", b(mxu_alignable));

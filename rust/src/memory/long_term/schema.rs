@@ -274,7 +274,9 @@ mod tests {
             Pred::Is("feat.naive_gemm_loop")
         ])
         .eval(&e));
-        assert!(Pred::Any(vec![Pred::Gt("dram_pct", 90.0), Pred::Is("feat.naive_gemm_loop")]).eval(&e));
+        assert!(
+            Pred::Any(vec![Pred::Gt("dram_pct", 90.0), Pred::Is("feat.naive_gemm_loop")]).eval(&e)
+        );
     }
 
     #[test]

@@ -637,7 +637,10 @@ impl SkillStore {
         }
         if let Some(d) = device {
             if !self.partitions.contains_key(d) {
-                out.push_str(&format!("(no partition {d:?}; known: {:?})\n", self.partition_names()));
+                out.push_str(&format!(
+                    "(no partition {d:?}; known: {:?})\n",
+                    self.partition_names()
+                ));
                 return out;
             }
         }
@@ -817,6 +820,25 @@ impl SkillStore {
         Ok(store)
     }
 
+    /// The exact bytes [`SkillStore::save`] writes: the canonical v3 JSON
+    /// form plus a trailing newline. Equal stores produce equal bytes, which
+    /// is what lets transports and tests compare stores without touching
+    /// disk.
+    pub fn canonical_bytes(&self) -> Vec<u8> {
+        format!("{}\n", self.to_json()).into_bytes()
+    }
+
+    /// Parse a store from raw bytes (any accepted version) — the in-memory
+    /// twin of [`SkillStore::load`]. Run-dir transports use it to validate a
+    /// pulled exchange delta *before* installing it where a waiting shard
+    /// would fold it.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SkillStore, String> {
+        let text =
+            std::str::from_utf8(bytes).map_err(|e| format!("skill store is not UTF-8: {e}"))?;
+        let j = Json::parse(text).map_err(|e| format!("parsing skill store: {e}"))?;
+        SkillStore::from_json(&j)
+    }
+
     /// Atomic save: write a tmp file, then rename over the target.
     pub fn save(&self, path: &Path) -> io::Result<()> {
         if let Some(parent) = path.parent() {
@@ -825,7 +847,7 @@ impl SkillStore {
             }
         }
         let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, format!("{}\n", self.to_json()))?;
+        std::fs::write(&tmp, self.canonical_bytes())?;
         std::fs::rename(&tmp, path)
     }
 
@@ -835,9 +857,8 @@ impl SkillStore {
         if !path.exists() {
             return Ok(SkillStore::new());
         }
-        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path:?}: {e}"))?;
-        let j = Json::parse(&text).map_err(|e| format!("parsing {path:?}: {e}"))?;
-        SkillStore::from_json(&j)
+        let bytes = std::fs::read(path).map_err(|e| format!("reading {path:?}: {e}"))?;
+        SkillStore::from_bytes(&bytes).map_err(|e| format!("{}: {e}", path.display()))
     }
 }
 
@@ -1050,7 +1071,12 @@ mod tests {
         let mut s = SkillStore::new();
         s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, Some(1.2345678901234)));
         s.observe(&obs("gemm.naive_loop", MethodId::UseTensorCore, None));
-        s.observe(&obs_on("tpu-like", "fusion.elementwise_chain", MethodId::FuseElementwise, Some(0.25)));
+        s.observe(&obs_on(
+            "tpu-like",
+            "fusion.elementwise_chain",
+            MethodId::FuseElementwise,
+            Some(0.25),
+        ));
         s.advance_generation();
         s.observe(&obs("gemm.naive_loop", MethodId::TileSmem, Some(0.5)));
         let j = s.to_json();
@@ -1148,7 +1174,9 @@ mod tests {
             .flat_map(|t| {
                 [0.1, 0.7, 1e12, -1e12 + 3.0]
                     .iter()
-                    .map(move |g| obs("reduction.rowwise", MethodId::VectorizeLoads, Some(g * (t + 1) as f64)))
+                    .map(move |g| {
+                        obs("reduction.rowwise", MethodId::VectorizeLoads, Some(g * (t + 1) as f64))
+                    })
                     .collect::<Vec<_>>()
             })
             .collect();
@@ -1221,7 +1249,8 @@ mod tests {
         assert!(
             learned
                 .iter()
-                .any(|c| c.method == MethodId::VectorizeLoads && c.origin == LearnedOrigin::Promotion),
+                .any(|c| c.method == MethodId::VectorizeLoads
+                    && c.origin == LearnedOrigin::Promotion),
             "{learned:?}"
         );
     }
@@ -1290,7 +1319,8 @@ mod tests {
         assert!(
             learned
                 .iter()
-                .any(|c| c.method == MethodId::KernelFission && c.origin == LearnedOrigin::Extension),
+                .any(|c| c.method == MethodId::KernelFission
+                    && c.origin == LearnedOrigin::Extension),
             "{learned:?}"
         );
     }

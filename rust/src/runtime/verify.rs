@@ -71,7 +71,12 @@ pub fn verify_variant(
 }
 
 /// Verify every non-ref variant of every task in the registry.
-pub fn verify_all(rt: &mut Runtime, reg: &Registry, seed: u64, tolerance: f64) -> Result<Vec<VerifyReport>> {
+pub fn verify_all(
+    rt: &mut Runtime,
+    reg: &Registry,
+    seed: u64,
+    tolerance: f64,
+) -> Result<Vec<VerifyReport>> {
     let mut reports = Vec::new();
     let tasks: Vec<String> = reg.tasks.keys().cloned().collect();
     for task in tasks {

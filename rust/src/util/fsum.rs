@@ -211,7 +211,18 @@ mod tests {
     fn order_independent_at_bit_level() {
         // Sum a nasty mix in many different orders; exact accumulation must
         // give the same rounded value and the same canonical form always.
-        let vals = [1e16, 3.14159, -1e16, 0.1, 0.2, -0.3, 1e-12, 7.5e9, -2.5e-7, 0.30000000000000004];
+        let vals = [
+            1e16,
+            3.14159,
+            -1e16,
+            0.1,
+            0.2,
+            -0.3,
+            1e-12,
+            7.5e9,
+            -2.5e-7,
+            0.30000000000000004,
+        ];
         let mut rng = Rng::new(42);
         let reference = ExactSum::from_parts(&vals);
         for _ in 0..200 {

@@ -1,0 +1,406 @@
+//! End-to-end battery for the cross-machine launch layer: real worker
+//! processes (CARGO_BIN_EXE) and in-process worker/coordinator runtimes
+//! syncing through `MirrorDir` transports, with forced worker-machine
+//! deaths and interrupted mid-file transfers.
+//!
+//! The contract under test is ISSUE-5's acceptance criterion: a 2-worker
+//! `launch --manifest` run over MirrorDir transports — including a worker
+//! kill + resume and an interrupted mid-file sync — produces `report`
+//! output and `skills.json` byte-identical to a single-process run of the
+//! same matrix. Worker placement and sync timing must never change a
+//! byte (invariants 11-13 in docs/memory-formats.md).
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+
+use kernelskill::baselines;
+use kernelskill::bench_suite;
+use kernelskill::coordinator::{
+    self, FleetConfig, LaunchConfig, LoopConfig, SuiteOptions, WorkerConfig, WorkerManifest,
+};
+use kernelskill::harness::experiments;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ks-dist-{tag}-{}", std::process::id()))
+}
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_kernelskill"))
+}
+
+fn read_bytes(path: &Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// The matrix every test here runs: level 1, first 3 tasks, 2 seeds.
+const TAKE: usize = 3;
+const SEEDS: usize = 2;
+
+/// In-process single-process reference run of the same matrix.
+fn reference_run(dir: &Path) {
+    let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(TAKE).collect();
+    let seeds: Vec<u64> = (0..SEEDS as u64).collect();
+    coordinator::run_suite_with(
+        &tasks,
+        &baselines::kernelskill(),
+        &LoopConfig::default(),
+        &seeds,
+        4,
+        &SuiteOptions::in_dir(dir),
+    )
+    .unwrap();
+}
+
+/// Write a 2-worker mirror-dir manifest splitting `total` shards as
+/// `(lo, hi)` ranges.
+fn write_manifest(path: &Path, total: usize, rows: &[(&str, usize, usize, &Path)]) {
+    let workers: Vec<String> = rows
+        .iter()
+        .map(|(id, lo, hi, root)| {
+            format!(
+                r#"{{"id":"{id}","shard_lo":{lo},"shard_hi":{hi},"transport":{{"kind":"mirror-dir","root":"{}"}}}}"#,
+                root.to_string_lossy()
+            )
+        })
+        .collect();
+    std::fs::write(
+        path,
+        format!(
+            r#"{{"version":1,"total_shards":{total},"workers":[{}]}}"#,
+            workers.join(",")
+        ),
+    )
+    .unwrap();
+}
+
+/// In-process worker config for one manifest row, quarantined from any
+/// outer crash-hook environment.
+fn worker_cfg(manifest: &WorkerManifest, id: &str, run_dir: &Path) -> WorkerConfig {
+    let mut cfg = WorkerConfig::new(bin(), "suite", run_dir, manifest.clone(), id);
+    cfg.passthrough = [
+        "--level", "1", "--take", "3", "--seeds", "2", "--workers", "2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    cfg.poll_ms = 25;
+    cfg.child_env = vec![
+        ("KS_TEST_CRASH_AFTER".to_string(), String::new()),
+        ("KS_TEST_CRASH_MARKER".to_string(), String::new()),
+    ];
+    cfg
+}
+
+fn fleet_cfg(manifest: WorkerManifest, run_dir: &Path) -> FleetConfig {
+    let mut cfg = FleetConfig::new(manifest, run_dir);
+    cfg.poll_ms = 25;
+    cfg
+}
+
+fn assert_identical_to_single(merged: &Path, single: &Path) {
+    assert_eq!(
+        experiments::report_run_dir(merged).unwrap(),
+        experiments::report_run_dir(single).unwrap(),
+        "report over the fleet-merged dir must be byte-identical"
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json")),
+        "merged skills.json must be byte-identical"
+    );
+}
+
+#[test]
+fn two_workers_over_mirror_dir_match_single_process() {
+    let root = tmp_root("basic");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+
+    let single = root.join("single");
+    reference_run(&single);
+
+    let mpath = root.join("workers.json");
+    let (t0, t1) = (root.join("t0"), root.join("t1"));
+    write_manifest(&mpath, 2, &[("w0", 0, 0, &t0), ("w1", 1, 1, &t1)]);
+    let manifest = WorkerManifest::load(&mpath).unwrap();
+
+    let merged = root.join("merged");
+    let w0 = worker_cfg(&manifest, "w0", &root.join("w0"));
+    let w1 = worker_cfg(&manifest, "w1", &root.join("w1"));
+    let report = std::thread::scope(|scope| {
+        let h0 = scope.spawn(|| coordinator::run_worker(&w0).unwrap());
+        let h1 = scope.spawn(|| coordinator::run_worker(&w1).unwrap());
+        let fleet = coordinator::launch_workers(&fleet_cfg(manifest.clone(), &merged)).unwrap();
+        let r0 = h0.join().unwrap();
+        let r1 = h1.join().unwrap();
+        assert_eq!(r0.shards.len(), 1);
+        assert_eq!(r1.shards.len(), 1);
+        assert!(r0.sync_cycles > 0);
+        fleet
+    });
+
+    assert_eq!(report.workers.len(), 2);
+    assert_eq!(report.merge.merged_cells, TAKE * SEEDS);
+    assert!(report.merge.missing_shards.is_empty());
+    assert!(!report.workers[0].zero_copy, "mirror-dir must not use the zero-copy path");
+    assert!(report.render().contains("coordinated 2 worker(s)"));
+    assert_identical_to_single(&merged, &single);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Spawn a real `worker` CLI process.
+fn spawn_worker_cli(
+    manifest: &Path,
+    id: &str,
+    run_dir: &Path,
+    log: &Path,
+    envs: &[(&str, &str)],
+) -> std::process::Child {
+    let logf = std::fs::File::create(log).unwrap();
+    let loge = logf.try_clone().unwrap();
+    let mut cmd = Command::new(bin());
+    cmd.arg("worker")
+        .arg("--manifest")
+        .arg(manifest)
+        .arg("--worker-id")
+        .arg(id)
+        .arg("--run-dir")
+        .arg(run_dir)
+        .args(["--cmd", "suite", "--level", "1", "--take", "3", "--seeds", "2"])
+        .args(["--workers", "2", "--poll-ms", "50"])
+        // Quarantine the shard-child crash hook from outer environments.
+        .env("KS_TEST_CRASH_AFTER", "")
+        .env("KS_TEST_CRASH_MARKER", "");
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.stdin(Stdio::null()).stdout(logf).stderr(loge);
+    cmd.spawn().unwrap()
+}
+
+#[test]
+fn worker_kill_and_interrupted_transfer_resume_identically() {
+    // The full failure battery in one run: worker w1's "machine" dies
+    // mid-run (the worker kills its children and exits 86) and is
+    // restarted; worker w0's first checkpoint publish is cut off mid-file
+    // and retried. The merged output must still be byte-identical to a
+    // single process.
+    let root = tmp_root("kill");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+
+    let single = root.join("single");
+    reference_run(&single);
+
+    let mpath = root.join("workers.json");
+    let (t0, t1) = (root.join("t0"), root.join("t1"));
+    write_manifest(&mpath, 2, &[("w0", 0, 0, &t0), ("w1", 1, 1, &t1)]);
+    let manifest = WorkerManifest::load(&mpath).unwrap();
+
+    let crash_marker = root.join("crash");
+    let xfer_marker = root.join("xfer");
+    let merged = root.join("merged");
+    std::thread::scope(|scope| {
+        let coord =
+            scope.spawn(|| coordinator::launch_workers(&fleet_cfg(manifest.clone(), &merged)));
+
+        // w0: its first results.jsonl publish gets interrupted mid-file.
+        let mut w0 = spawn_worker_cli(
+            &mpath,
+            "w0",
+            &root.join("w0"),
+            &root.join("w0.log"),
+            &[
+                ("KS_TEST_TRANSPORT_FAIL_SUBSTR", "results.jsonl"),
+                ("KS_TEST_TRANSPORT_FAIL_MARKER", &xfer_marker.to_string_lossy()),
+            ],
+        );
+        // w1: the whole worker machine dies after 3 sync cycles.
+        let mut w1 = spawn_worker_cli(
+            &mpath,
+            "w1",
+            &root.join("w1"),
+            &root.join("w1.log"),
+            &[
+                ("KS_TEST_WORKER_CRASH_AFTER_SYNCS", "3"),
+                ("KS_TEST_WORKER_CRASH_MARKER", &crash_marker.to_string_lossy()),
+            ],
+        );
+
+        let status = w1.wait().unwrap();
+        assert_eq!(status.code(), Some(86), "w1 must die via the crash hook");
+        assert!(
+            crash_marker.with_file_name("crash.worker-w1").exists(),
+            "the worker crash marker must exist"
+        );
+        // The operator restarts the dead machine's worker; the marker file
+        // keeps the still-set hook disarmed, and the worker resumes its
+        // children from their checkpoints.
+        let mut w1b = spawn_worker_cli(
+            &mpath,
+            "w1",
+            &root.join("w1"),
+            &root.join("w1b.log"),
+            &[
+                ("KS_TEST_WORKER_CRASH_AFTER_SYNCS", "3"),
+                ("KS_TEST_WORKER_CRASH_MARKER", &crash_marker.to_string_lossy()),
+            ],
+        );
+        assert!(w1b.wait().unwrap().success(), "restarted w1 must finish cleanly");
+        assert!(w0.wait().unwrap().success(), "w0 must finish cleanly");
+        assert!(
+            xfer_marker.exists(),
+            "the simulated mid-file transfer interruption must have fired"
+        );
+
+        let fleet = coord.join().unwrap().unwrap();
+        assert_eq!(fleet.merge.merged_cells, TAKE * SEEDS);
+        assert!(fleet.merge.missing_shards.is_empty());
+    });
+
+    assert_identical_to_single(&merged, &single);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn exchange_across_workers_matches_single_process_launch() {
+    // Live memory exchange across machines: each worker's shards fold
+    // deltas that traveled worker -> transport -> coordinator -> transport
+    // -> worker, and the result must be byte-identical to a --shards 1
+    // launch with the same epoch length (the exchange determinism
+    // contract, now independent of placement).
+    let root = tmp_root("exchange");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+
+    let single = root.join("single");
+    let mut lc = LaunchConfig::new(bin(), "suite", &single, 1);
+    lc.passthrough = [
+        "--level", "1", "--take", "3", "--seeds", "2", "--workers", "2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    lc.exchange_epoch = Some(2);
+    lc.child_env = vec![
+        ("KS_TEST_CRASH_AFTER".to_string(), String::new()),
+        ("KS_TEST_CRASH_MARKER".to_string(), String::new()),
+    ];
+    coordinator::launch(&lc).unwrap();
+
+    let mpath = root.join("workers.json");
+    let (t0, t1) = (root.join("t0"), root.join("t1"));
+    write_manifest(&mpath, 2, &[("w0", 0, 0, &t0), ("w1", 1, 1, &t1)]);
+    let manifest = WorkerManifest::load(&mpath).unwrap();
+
+    let merged = root.join("merged");
+    let mut w0 = worker_cfg(&manifest, "w0", &root.join("w0"));
+    let mut w1 = worker_cfg(&manifest, "w1", &root.join("w1"));
+    w0.exchange_epoch = Some(2);
+    w1.exchange_epoch = Some(2);
+    std::thread::scope(|scope| {
+        let h0 = scope.spawn(|| coordinator::run_worker(&w0).unwrap());
+        let h1 = scope.spawn(|| coordinator::run_worker(&w1).unwrap());
+        coordinator::launch_workers(&fleet_cfg(manifest.clone(), &merged)).unwrap();
+        h0.join().unwrap();
+        h1.join().unwrap();
+    });
+
+    assert_identical_to_single(&merged, &single);
+    // The cross-machine protocol really ran. Every epoch's own delta was
+    // published to each worker's transport root (6 cells / epoch 2 = 3
+    // epochs) ...
+    for epoch in 0..3 {
+        for (transport_root, own) in [(&t0, 0), (&t1, 1)] {
+            let delta = transport_root
+                .join("up/exchange/kernelskill")
+                .join(format!("epoch-{epoch}.shard-{own}.json"));
+            assert!(delta.exists(), "missing published delta {}", delta.display());
+        }
+    }
+    // ... and the *peer's* deltas each worker actually had to fold (epochs
+    // before its last window) were relayed into its local exchange dir.
+    // The final epoch's peer delta is never folded by anyone, so it may
+    // legitimately still be in flight when a worker exits.
+    for epoch in 0..2 {
+        for (dir, peer) in [(root.join("w0"), 1), (root.join("w1"), 0)] {
+            let delta = dir
+                .join("exchange")
+                .join("kernelskill")
+                .join(format!("epoch-{epoch}.shard-{peer}.json"));
+            assert!(delta.exists(), "missing relayed peer delta {}", delta.display());
+        }
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn fleet_and_worker_refuse_bad_configs() {
+    let root = tmp_root("bad");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let mpath = root.join("workers.json");
+    let (t0, t1) = (root.join("t0"), root.join("t1"));
+    write_manifest(&mpath, 2, &[("w0", 0, 0, &t0), ("w1", 1, 1, &t1)]);
+    let manifest = WorkerManifest::load(&mpath).unwrap();
+
+    // Unknown worker id names the known ones.
+    let cfg = worker_cfg(&manifest, "w9", &root.join("w9"));
+    let err = coordinator::run_worker(&cfg).unwrap_err();
+    assert!(err.contains("w9") && err.contains("w0") && err.contains("w1"), "{err}");
+
+    // Exchange epoch 0 is refused.
+    let mut cfg = worker_cfg(&manifest, "w0", &root.join("w0"));
+    cfg.exchange_epoch = Some(0);
+    let err = coordinator::run_worker(&cfg).unwrap_err();
+    assert!(err.contains("--exchange-epoch"), "{err}");
+
+    // A run dir already holding merged results is refused by the fleet
+    // coordinator before any pulling starts.
+    let dirty = root.join("dirty");
+    std::fs::create_dir_all(&dirty).unwrap();
+    std::fs::write(dirty.join("results.jsonl"), b"{\"x\":1}\n").unwrap();
+    let err = coordinator::launch_workers(&fleet_cfg(manifest, &dirty)).unwrap_err();
+    assert!(err.contains("already holds"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn vanished_transport_root_and_absent_workers_fail_cleanly() {
+    let root = tmp_root("vanish");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let mpath = root.join("workers.json");
+    let t0 = root.join("t0");
+    write_manifest(&mpath, 1, &[("w0", 0, 0, &t0)]);
+    let manifest = WorkerManifest::load(&mpath).unwrap();
+
+    // A transport root that disappears mid-run is an immediate, clean
+    // error naming the worker — no panic, no hang.
+    let mut cfg = fleet_cfg(manifest.clone(), &root.join("out1"));
+    cfg.stall_timeout_ms = 30_000;
+    let t0_del = t0.clone();
+    let err = std::thread::scope(|scope| {
+        // Delete the root repeatedly so one removal is guaranteed to land
+        // after the coordinator built (and thereby created) the transport.
+        scope.spawn(move || {
+            for _ in 0..12 {
+                std::thread::sleep(std::time::Duration::from_millis(250));
+                let _ = std::fs::remove_dir_all(&t0_del);
+            }
+        });
+        coordinator::launch_workers(&cfg).unwrap_err()
+    });
+    assert!(err.contains("disappeared") && err.contains("w0"), "{err}");
+
+    // No worker ever publishing anything trips the stall timeout with a
+    // pointed per-worker message instead of hanging forever.
+    let mut cfg = fleet_cfg(manifest, &root.join("out2"));
+    cfg.stall_timeout_ms = 1_000;
+    let err = coordinator::launch_workers(&cfg).unwrap_err();
+    assert!(err.contains("no progress") && err.contains("w0"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}

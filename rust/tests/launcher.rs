@@ -8,7 +8,7 @@
 //! and `skills.json` byte-identical to a single-process run of the same
 //! matrix, including with memory exchange enabled.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use kernelskill::baselines;
 use kernelskill::bench_suite;
@@ -23,7 +23,7 @@ fn bin() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_kernelskill"))
 }
 
-fn read_bytes(path: &PathBuf) -> Vec<u8> {
+fn read_bytes(path: &Path) -> Vec<u8> {
     std::fs::read(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
 }
 
@@ -32,7 +32,7 @@ fn read_bytes(path: &PathBuf) -> Vec<u8> {
 const TAKE: usize = 3;
 const SEEDS: usize = 2;
 
-fn launch_cfg(run_dir: &PathBuf, shards: usize) -> LaunchConfig {
+fn launch_cfg(run_dir: &Path, shards: usize) -> LaunchConfig {
     let mut cfg = LaunchConfig::new(bin(), "suite", run_dir, shards);
     cfg.passthrough = [
         "--level", "1", "--take", "3", "--seeds", "2", "--workers", "2",
@@ -52,7 +52,7 @@ fn launch_cfg(run_dir: &PathBuf, shards: usize) -> LaunchConfig {
 
 /// Arm the crash hook: every child shard hard-exits (code 86) right after
 /// its n-th checkpoint append, once per shard marker file.
-fn arm_crash(cfg: &mut LaunchConfig, marker: &PathBuf, after: usize) {
+fn arm_crash(cfg: &mut LaunchConfig, marker: &Path, after: usize) {
     cfg.child_env = vec![
         ("KS_TEST_CRASH_AFTER".to_string(), after.to_string()),
         (
@@ -63,7 +63,7 @@ fn arm_crash(cfg: &mut LaunchConfig, marker: &PathBuf, after: usize) {
 }
 
 /// In-process single-process reference run of the same matrix.
-fn reference_run(dir: &PathBuf) {
+fn reference_run(dir: &Path) {
     let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(TAKE).collect();
     let seeds: Vec<u64> = (0..SEEDS as u64).collect();
     coordinator::run_suite_with(

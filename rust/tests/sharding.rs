@@ -10,13 +10,14 @@
 //! fail loudly, never last-writer-wins.
 
 use std::io::Write;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use kernelskill::baselines;
 use kernelskill::bench_suite::{self, Task};
 use kernelskill::coordinator::{
     self, checkpoint, merge_run_dirs, LoopConfig, RunDir, SuiteOptions,
 };
+use kernelskill::device::machine::DeviceSpec;
 use kernelskill::harness::experiments;
 use kernelskill::memory::long_term::SkillStore;
 use kernelskill::util::json::Json;
@@ -33,7 +34,7 @@ const SEEDS: [u64; 2] = [0, 1];
 
 /// Run the full matrix for both roster strategies into `dir`, optionally as
 /// one shard of `count`.
-fn run_into(dir: &PathBuf, shard: Option<(usize, usize)>) {
+fn run_into(dir: &Path, shard: Option<(usize, usize)>) {
     let tasks = small_tasks();
     let strategies = vec![baselines::kernelskill(), baselines::wo_memory()];
     let mut opts = SuiteOptions::in_dir(dir);
@@ -44,7 +45,7 @@ fn run_into(dir: &PathBuf, shard: Option<(usize, usize)>) {
         .unwrap();
 }
 
-fn read_bytes(path: &PathBuf) -> Vec<u8> {
+fn read_bytes(path: &Path) -> Vec<u8> {
     std::fs::read(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
 }
 
@@ -219,8 +220,10 @@ fn warm_sharded_run_merges_identically_when_snapshots_agree() {
 
     // Learn a store first, then hand identical copies to every process.
     let learn = root.join("learn-mem");
-    let mut learn_cfg = LoopConfig::default();
-    learn_cfg.memory_dir = Some(learn.clone());
+    let learn_cfg = LoopConfig {
+        memory_dir: Some(learn.clone()),
+        ..LoopConfig::default()
+    };
     coordinator::run_suite_with(&tasks, &strat, &learn_cfg, &[0], 4, &SuiteOptions::default())
         .unwrap();
     let learned = SkillStore::load(&learn.join("skills.json")).unwrap();
@@ -234,16 +237,20 @@ fn warm_sharded_run_merges_identically_when_snapshots_agree() {
     }
 
     let single = root.join("single");
-    let mut cfg = LoopConfig::default();
-    cfg.memory_dir = Some(mems[0].clone());
+    let cfg = LoopConfig {
+        memory_dir: Some(mems[0].clone()),
+        ..LoopConfig::default()
+    };
     coordinator::run_suite_with(&tasks, &strat, &cfg, &SEEDS, 4, &SuiteOptions::in_dir(&single))
         .unwrap();
 
     let mut shard_dirs = Vec::new();
     for i in 0..2usize {
         let d = root.join(format!("shard{i}"));
-        let mut cfg = LoopConfig::default();
-        cfg.memory_dir = Some(mems[i + 1].clone());
+        let cfg = LoopConfig {
+            memory_dir: Some(mems[i + 1].clone()),
+            ..LoopConfig::default()
+        };
         coordinator::run_suite_with(
             &tasks,
             &strat,
@@ -430,8 +437,8 @@ fn streaming_merge_is_byte_identical_to_one_shot() {
 /// Suite options for an exchange-enabled run (shortened peer-wait timeout
 /// so a protocol bug fails the test instead of hanging it for 10 minutes).
 fn exchange_opts(
-    exchange_dir: &PathBuf,
-    run_dir: &PathBuf,
+    exchange_dir: &Path,
+    run_dir: &Path,
     shard: Option<(usize, usize)>,
     epoch: usize,
 ) -> SuiteOptions {
@@ -630,6 +637,70 @@ fn merge_refuses_mixing_exchange_and_plain_runs() {
     .unwrap();
     let err = merge_run_dirs(&root.join("merged"), &[s0, s1]).unwrap_err();
     assert!(err.contains("different cell matrix"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn device_preset_is_part_of_the_experiment_identity() {
+    // A run priced against a different device preset is a different
+    // experiment: its cost model differs and its skill observations land
+    // in a different store partition. Resume and merge must refuse to mix
+    // presets, and tpu-like evidence must actually reach the tpu-like
+    // partition (the CI bench-smoke TPU step gates on the same property).
+    let root = tmp_root("device");
+    let _ = std::fs::remove_dir_all(&root);
+    let tasks = small_tasks();
+    let strat = baselines::kernelskill();
+    let tpu_cfg = LoopConfig {
+        dev: DeviceSpec::tpu_like(),
+        ..LoopConfig::default()
+    };
+
+    let tpu = root.join("tpu");
+    coordinator::run_suite_with(&tasks, &strat, &tpu_cfg, &SEEDS, 4, &SuiteOptions::in_dir(&tpu))
+        .unwrap();
+    let store = std::fs::read_to_string(tpu.join("skills.json")).unwrap();
+    assert!(
+        store.contains("\"tpu-like\""),
+        "tpu-like evidence must land in the tpu-like partition"
+    );
+
+    // Resuming under a different preset is refused ...
+    let err = coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &LoopConfig::default(),
+        &SEEDS,
+        4,
+        &SuiteOptions::resumed(&tpu),
+    )
+    .unwrap_err();
+    assert!(err.contains("different matrix"), "{err}");
+
+    // ... and so is merging an a100-like shard with a tpu-like shard.
+    let a100_shard = root.join("a100-shard");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &LoopConfig::default(),
+        &SEEDS,
+        4,
+        &SuiteOptions::in_dir(&a100_shard).with_shard(0, 2),
+    )
+    .unwrap();
+    let tpu_shard = root.join("tpu-shard");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &tpu_cfg,
+        &SEEDS,
+        4,
+        &SuiteOptions::in_dir(&tpu_shard).with_shard(1, 2),
+    )
+    .unwrap();
+    let err = merge_run_dirs(&root.join("merged"), &[a100_shard, tpu_shard]).unwrap_err();
+    assert!(err.contains("different cell matrix"), "{err}");
+
     let _ = std::fs::remove_dir_all(&root);
 }
 
