@@ -12,6 +12,11 @@
 //! `-- --json-out <path>` additionally writes the measured numbers as one
 //! JSON entry in the `BENCH_perf_hotpath.json` schema (see that file at
 //! the repo root), so the CI log carries machine-readable trajectory data.
+//!
+//! Built with `--features alloc-count`, the bench installs the counting
+//! allocator from `util::alloc_count` and adds `allocs_per_task_run`
+//! (heap allocations per task run over a dedicated 100-task suite pass)
+//! to the report and JSON entry; without the feature the field is `null`.
 
 use kernelskill::baselines;
 use kernelskill::bench_suite;
@@ -22,7 +27,14 @@ use kernelskill::device::metrics::{synthesize, ToolVersion};
 use kernelskill::harness::bench::bench;
 use kernelskill::kir::features;
 use kernelskill::kir::schedule::Schedule;
-use kernelskill::memory::long_term::retrieval;
+use kernelskill::kir::transforms::{self, ALL_METHODS};
+use kernelskill::memory::long_term::retrieval::{self, RetrievalCache};
+use kernelskill::memory::long_term::{SkillObs, SkillStore};
+
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static ALLOC: kernelskill::util::alloc_count::CountingAlloc =
+    kernelskill::util::alloc_count::CountingAlloc;
 
 fn main() {
     let dev = DeviceSpec::a100_like();
@@ -45,6 +57,51 @@ fn main() {
     }));
     results.push(bench("retrieval (aggregate+decide, audited)", 100, 2000, || {
         std::hint::black_box(retrieval::retrieve_for(l3, &feats, &raw));
+    }));
+
+    // Warm retrieval: a populated skill store activates step 8' (rerank +
+    // note formatting), which is where repeat retrievals spend their time.
+    // Benched twice — without and with the per-task-run RetrievalCache the
+    // loop runner uses — to keep the cache's win (or regression) visible.
+    let seed_case = retrieval::retrieve_for(l3, &feats, &raw)
+        .matched_case
+        .unwrap_or("gemm.naive_loop");
+    let mut store = SkillStore::new();
+    for (i, &m) in ALL_METHODS.iter().enumerate() {
+        store.observe(&SkillObs {
+            case_id: seed_case.to_string(),
+            method: m,
+            gain: if i % 3 == 0 { Some(0.12) } else { None },
+            device: dev.name.to_string(),
+        });
+    }
+    results.push(bench("retrieval (warm store, uncached)", 100, 2000, || {
+        std::hint::black_box(retrieval::retrieve_for_with(
+            l3,
+            &feats,
+            &raw,
+            Some(&store),
+            dev.name,
+        ));
+    }));
+    let mut cache = RetrievalCache::new();
+    results.push(bench("retrieval (warm store, cached)", 100, 2000, || {
+        std::hint::black_box(retrieval::retrieve_for_with_cache(
+            l3,
+            &feats,
+            &raw,
+            Some(&store),
+            dev.name,
+            Some(&mut cache),
+        ));
+    }));
+
+    // Legality sweep: every method's applicability check against the naive
+    // schedule — the per-round planner cost the op->group map targets.
+    results.push(bench("transforms::applicable (21-method sweep)", 100, 2000, || {
+        for &m in ALL_METHODS.iter() {
+            std::hint::black_box(transforms::applicable(m, &l3.graph, &sched).is_ok());
+        }
     }));
     results.push(bench("eager::eager_time_s", 100, 2000, || {
         std::hint::black_box(bench_suite::eager::eager_time_s(l3, &dev));
@@ -79,6 +136,26 @@ fn main() {
     let throughput = 100.0 / r.median_s;
     println!("suite throughput: {throughput:.0} task-runs/s");
 
+    // Heap allocations per task run (alloc-count builds only). Measured on
+    // one dedicated suite pass, after the timing loops, so the bench
+    // harness's own bookkeeping does not leak into the number.
+    #[cfg(feature = "alloc-count")]
+    let allocs_per_task_run: Option<f64> = {
+        let before = kernelskill::util::alloc_count::allocations();
+        std::hint::black_box(coordinator::run_suite(
+            &suite_tasks,
+            &strategy,
+            &cfg,
+            &[0],
+            kernelskill::util::pool::default_workers(),
+        ));
+        let per = (kernelskill::util::alloc_count::allocations() - before) as f64 / 100.0;
+        println!("allocations per task run: {per:.0}");
+        Some(per)
+    };
+    #[cfg(not(feature = "alloc-count"))]
+    let allocs_per_task_run: Option<f64> = None;
+
     // Flags parsed by hand: the bench is a plain `fn main` binary with no
     // CLI layer of its own.
     let argv: Vec<String> = std::env::args().collect();
@@ -93,10 +170,15 @@ fn main() {
             .iter()
             .map(|r| format!(r#"{{"name":{:?},"median_s":{}}}"#, r.name, r.median_s))
             .collect();
+        let allocs_json = match allocs_per_task_run {
+            Some(a) => format!("{a}"),
+            None => "null".to_string(),
+        };
         let entry = format!(
-            r#"{{"bench":"perf_hotpath","suite_tasks":100,"suite_median_s":{},"suite_throughput_task_runs_per_s":{},"hotpaths":[{}]}}"#,
+            r#"{{"bench":"perf_hotpath","suite_tasks":100,"suite_median_s":{},"suite_throughput_task_runs_per_s":{},"allocs_per_task_run":{},"hotpaths":[{}]}}"#,
             r.median_s,
             throughput,
+            allocs_json,
             hotpaths.join(",")
         );
         if let Err(e) = std::fs::write(&path, format!("{entry}\n")) {

@@ -475,7 +475,7 @@ mod tests {
         // PRAGMA's flat map checks occupancy before the GEMM bottleneck.
         let (_, _, f, mut p, applicable) = setup();
         for (k, v) in p.ncu.iter_mut() {
-            if k == "sm__warps_active.avg.pct_of_peak_sustained_active" {
+            if *k == "sm__warps_active.avg.pct_of_peak_sustained_active" {
                 *v = 20.0;
             }
         }

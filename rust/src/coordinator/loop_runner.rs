@@ -109,6 +109,12 @@ pub struct LoopConfig {
     /// store back is the suite orchestrator's job (see
     /// `coordinator::scheduler`).
     pub memory_dir: Option<std::path::PathBuf>,
+    /// Memoize skill-layer retrieval lookups across the rounds of one task
+    /// run (see [`retrieval::RetrievalCache`]). Byte-identical output
+    /// either way — the cache exists purely to keep repeat store walks out
+    /// of the per-round hot path; `--no-retrieval-cache` turns it off for
+    /// A/B runs.
+    pub retrieval_cache: bool,
 }
 
 impl Default for LoopConfig {
@@ -121,6 +127,7 @@ impl Default for LoopConfig {
             run_seed: 0,
             skills: None,
             memory_dir: None,
+            retrieval_cache: true,
         }
     }
 }
@@ -208,7 +215,10 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
 
     // Without short-term memory there is no reliable record of which
     // version was best: the pipeline delivers its LATEST working kernel.
-    let mut latest_valid: Option<(f64, Schedule)> = best.clone();
+    // Only memory-less strategies ever read it, so only they pay the
+    // per-round schedule clone that keeps it current.
+    let track_latest = !strategy.use_short_term_opt;
+    let mut latest_valid: Option<(f64, Schedule)> = if track_latest { best.clone() } else { None };
     let mut opt_mem = OptMemory::new(cfg.rt, cfg.at, seed_speedup.unwrap_or(0.0));
     let mut repair_mem = RepairMemory::new();
     let mut rounds = Vec::new();
@@ -218,10 +228,19 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
     let mut pending_method: Option<MethodId> = None;
     let mut last_method: Option<MethodId> = None;
     let mut rounds_used = 0;
+    // The strategy-adjusted repair policy is round-invariant; built on the
+    // first repair round actually taken, reused afterwards.
+    let mut repair_policy: Option<crate::agents::policy::PolicyProfile> = None;
+    // Skill-layer retrieval memo, valid for this run's immutable store
+    // snapshot (one per task run; see `RetrievalCache`).
+    let mut retrieval_cache = cfg.retrieval_cache.then(retrieval::RetrievalCache::new);
+    // The per-round child-stream label is a compile-time constant; hash it
+    // once instead of re-running FNV over "round" every round.
+    let round_label = label("round");
 
     for round in 1..=strategy.rounds {
         rounds_used = round;
-        let mut round_rng = rng.child("round");
+        let mut round_rng = rng.child_with(round_label);
 
         if let Some(broken) = current.take() {
             // ---------------- Repair branch ----------------
@@ -241,25 +260,29 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
                     version_counter += 1;
                     // A history-conditioned repair plan avoids re-breaking
                     // what previous fixes touched (fewer regressions).
-                    let mut repair_policy = strategy.policy.clone();
-                    if strategy.use_short_term_repair {
-                        repair_policy.repair_skill = (repair_policy.repair_skill + 0.25).min(1.0);
-                    }
+                    let repair_policy = repair_policy.get_or_insert_with(|| {
+                        let mut p = strategy.policy.clone();
+                        if strategy.use_short_term_repair {
+                            p.repair_skill = (p.repair_skill + 0.25).min(1.0);
+                        }
+                        p
+                    });
                     let result = repairer::execute(
                         &broken,
                         &plan,
-                        &repair_policy,
+                        repair_policy,
                         version_counter,
                         &mut round_rng,
                     );
+                    let fix_idx = plan.fix_idx;
                     repair_mem.record(RepairAttempt {
-                        error_signature: plan.error_signature.clone(),
-                        fix_idx: plan.fix_idx,
+                        error_signature: plan.error_signature,
+                        fix_idx,
                         fixed: result.fixed,
                         kernel_version: version_counter,
                         round,
                     });
-                    (result.state, Branch::Repair(plan.fix_idx))
+                    (result.state, Branch::Repair(fix_idx))
                 }
                 None => {
                     // Structural legality failure without an injected fault:
@@ -293,7 +316,9 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             if review.ok() {
                 repair_mem.close_chain();
                 let sp = review.speedup.unwrap();
-                latest_valid = Some((sp, state.sched.clone()));
+                if track_latest {
+                    latest_valid = Some((sp, state.sched.clone()));
+                }
                 if best.as_ref().map(|(b, _)| sp > *b).unwrap_or(true) {
                     best = Some((sp, state.sched.clone()));
                 }
@@ -362,7 +387,7 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
         // A healthy base review carries a profile by construction, but a
         // panic here would take down every cell of a launched shard with
         // it; degrade to convergence instead of aborting the fleet.
-        let Some(profile) = base_review.profile.clone() else {
+        let Some(profile) = base_review.profile.as_ref() else {
             crate::log_warn!(
                 "task {}: healthy base kernel has no profile; stopping refinement",
                 task.id
@@ -378,7 +403,14 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             break;
         };
         let retrieval_result = strategy.use_long_term.then(|| {
-            retrieval::retrieve_for_with(task, &features, &profile, skills.as_deref(), cfg.dev.name)
+            retrieval::retrieve_for_with_cache(
+                task,
+                &features,
+                profile,
+                skills.as_deref(),
+                cfg.dev.name,
+                retrieval_cache.as_mut(),
+            )
         });
 
         let ctx = planner::PlanContext {
@@ -386,7 +418,7 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             retrieval: retrieval_result.as_ref(),
             opt_memory: strategy.use_short_term_opt.then_some(&opt_mem),
             features: &features,
-            profile: &profile,
+            profile,
             last_method,
             rounds_done: round - 1,
             insightful,
@@ -460,7 +492,9 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
 
         if review.ok() {
             let sp = review.speedup.unwrap();
-            latest_valid = Some((sp, candidate.sched.clone()));
+            if track_latest {
+                latest_valid = Some((sp, candidate.sched.clone()));
+            }
             if best.as_ref().map(|(b, _)| sp > *b).unwrap_or(true) {
                 best = Some((sp, candidate.sched.clone()));
             }

@@ -9,8 +9,10 @@
 //!   3. streams every finished cell to `results.jsonl` the moment it
 //!     completes, and
 //!   4. folds each finished cell's skill observations into the persistent
-//!     long-term store and rewrites `skills.json` atomically after each
-//!     task.
+//!     long-term store in memory, rewriting `skills.json` atomically at
+//!     window (fold-epoch) boundaries — serde stays out of the per-cell
+//!     path, and because store merges are additive and exact the final
+//!     bytes match per-cell saving.
 //!
 //! Determinism contract: every cell runs against an immutable skill-store
 //! *snapshot* — the run-start snapshot (persisted into the run directory),
@@ -573,11 +575,11 @@ pub fn run_strategy(
                         hook.tick();
                     }
                 }
-                if let (Some(store), Some(path)) = (live_store.as_mut(), live_path.as_ref()) {
+                if let Some(store) = live_store.as_mut() {
+                    // Merged per cell, serialized at the window boundary
+                    // below: `skills.json` rewrites are checkpoint-boundary
+                    // work, not per-round/per-cell work.
                     store.merge(&r.skill_obs);
-                    if let Err(e) = store.save(path) {
-                        sink_err.get_or_insert(format!("saving skill store: {e}"));
-                    }
                 }
                 if let Some(rs) = run_store.as_mut() {
                     // Folded per cell, saved once after the dispatch loop:
@@ -591,6 +593,19 @@ pub fn run_strategy(
         );
         if let Some(e) = sink_err.take() {
             return Err(e);
+        }
+        // Window boundary: one atomic `skills.json` rewrite for everything
+        // the window merged. A kill can now lose at most a window of
+        // *live-store* lag (the checkpoint is still per-cell, and a crashed
+        // cell's observations were already lost under per-cell saving too,
+        // since the crash hook fires before the live merge); the byte gates
+        // never compare live stores — launch/worker refuse `--memory-dir`.
+        if !pending.is_empty() {
+            if let (Some(store), Some(path)) = (live_store.as_ref(), live_path.as_ref()) {
+                store
+                    .save(path)
+                    .map_err(|e| format!("saving skill store: {e}"))?;
+            }
         }
         for (ci, r) in pending.iter().copied().zip(fresh) {
             all_fresh.insert(ci, r);

@@ -6,6 +6,11 @@
 //! own heuristic "hints" — the noisy, tool-suggested signals the paper says
 //! memory-free optimizers over-attend to (§4.2). The long-term memory's
 //! `field_mapping` is what normalizes this back into decision-ready fields.
+//!
+//! Every key the synthesizer can emit is a `&'static str` drawn from a fixed
+//! vocabulary, so a profile costs two small `Vec`s and zero string
+//! allocations — `synthesize` runs once per round in the inner loop and used
+//! to dominate its allocation count.
 
 use super::costmodel::{Bound, TaskCost};
 use crate::kir::graph::KernelGraph;
@@ -15,12 +20,12 @@ use crate::kir::schedule::Schedule;
 #[derive(Debug, Clone, Default)]
 pub struct RawProfile {
     /// NCU-like metrics for the *hot* kernel: (tool-specific key, value).
-    pub ncu: Vec<(String, f64)>,
+    pub ncu: Vec<(&'static str, f64)>,
     /// NSYS-like run features for the whole task.
-    pub run: Vec<(String, f64)>,
+    pub run: Vec<(&'static str, f64)>,
     /// NCU's heuristic rule hints (strings like "consider increasing
     /// occupancy") — noisy advice, NOT ground truth.
-    pub hints: Vec<String>,
+    pub hints: Vec<&'static str>,
     /// End-to-end latency in seconds.
     pub latency_s: f64,
 }
@@ -32,10 +37,10 @@ pub enum ToolVersion {
     Ncu2024,
 }
 
-fn key(v: ToolVersion, old: &str, new: &str) -> String {
+fn key(v: ToolVersion, old: &'static str, new: &'static str) -> &'static str {
     match v {
-        ToolVersion::Ncu2023 => old.to_string(),
-        ToolVersion::Ncu2024 => new.to_string(),
+        ToolVersion::Ncu2023 => old,
+        ToolVersion::Ncu2024 => new,
     }
 }
 
@@ -73,31 +78,28 @@ pub fn synthesize(
             sm_pct,
         ),
         (
-            "sm__warps_active.avg.pct_of_peak_sustained_active".to_string(),
+            "sm__warps_active.avg.pct_of_peak_sustained_active",
             occ_pct,
         ),
         (
-            "launch__shared_mem_per_block_dynamic".to_string(),
+            "launch__shared_mem_per_block_dynamic",
             g.scratch_bytes as f64,
         ),
         (
-            "launch__registers_per_thread".to_string(),
+            "launch__registers_per_thread",
             32.0 + 24.0 * (cfg.unroll as f64) + if cfg.mxu { 32.0 } else { 0.0 },
         ),
+        ("launch__block_size", cfg.block_threads as f64),
         (
-            "launch__block_size".to_string(),
-            cfg.block_threads as f64,
-        ),
-        (
-            "gpu__time_duration.sum".to_string(),
+            "gpu__time_duration.sum",
             g.time_s * 1e9, // ns, like NCU
         ),
         (
-            "l1tex__t_sectors_pipe_lsu_mem_global_op_ld.sum".to_string(),
+            "l1tex__t_sectors_pipe_lsu_mem_global_op_ld.sum",
             (g.traffic_bytes + g.l2_traffic_bytes) / 32.0,
         ),
         (
-            "lts__t_sector_hit_rate.pct".to_string(),
+            "lts__t_sector_hit_rate.pct",
             if g.l2_traffic_bytes > 0.0 {
                 (g.l2_traffic_bytes / (g.traffic_bytes + g.l2_traffic_bytes) * 100.0).min(99.0)
             } else {
@@ -105,7 +107,7 @@ pub fn synthesize(
             },
         ),
         (
-            "smsp__sass_average_data_bytes_per_sector_mem_global_op_ld.pct".to_string(),
+            "smsp__sass_average_data_bytes_per_sector_mem_global_op_ld.pct",
             match cfg.layout {
                 crate::kir::schedule::Layout::Strided => 25.0,
                 crate::kir::schedule::Layout::Coalesced => 80.0,
@@ -113,11 +115,11 @@ pub fn synthesize(
             },
         ),
         (
-            "sm__pipe_tensor_cycles_active.avg.pct_of_peak_sustained_elapsed".to_string(),
+            "sm__pipe_tensor_cycles_active.avg.pct_of_peak_sustained_elapsed",
             if g.uses_mxu { sm_pct } else { 0.0 },
         ),
         (
-            "smsp__warp_issue_stalled_long_scoreboard_per_warp_active.pct".to_string(),
+            "smsp__warp_issue_stalled_long_scoreboard_per_warp_active.pct",
             if matches!(g.bound, Bound::Memory) {
                 55.0 * (1.0 - g.bw_eff_frac)
                     + if cfg.double_buffer { 5.0 } else { 25.0 }
@@ -126,22 +128,19 @@ pub fn synthesize(
             },
         ),
         (
-            "smsp__warp_issue_stalled_bank_conflict_per_warp_active.pct".to_string(),
+            "smsp__warp_issue_stalled_bank_conflict_per_warp_active.pct",
             if cfg.staging && !cfg.smem_padding { 22.0 } else { 1.0 },
         ),
     ];
-    ncu.sort_by(|a, b| a.0.cmp(&b.0));
+    ncu.sort_by(|a, b| a.0.cmp(b.0));
 
     let run = vec![
-        ("kernel_launch_count".to_string(), sched.num_kernels() as f64),
-        ("total_time_us".to_string(), cost.total_s * 1e6),
+        ("kernel_launch_count", sched.num_kernels() as f64),
+        ("total_time_us", cost.total_s * 1e6),
+        ("launch_overhead_fraction", cost.launch_fraction()),
+        ("num_ops", graph.len() as f64),
         (
-            "launch_overhead_fraction".to_string(),
-            cost.launch_fraction(),
-        ),
-        ("num_ops".to_string(), graph.len() as f64),
-        (
-            "hot_kernel_time_fraction".to_string(),
+            "hot_kernel_time_fraction",
             g.time_s / cost.total_s.max(1e-12),
         ),
     ];
@@ -152,17 +151,17 @@ pub fn synthesize(
     // policy ignores them.
     let mut hints = Vec::new();
     if occ_pct < 60.0 {
-        hints.push("Est. Speedup: increase occupancy by reducing block resources".into());
+        hints.push("Est. Speedup: increase occupancy by reducing block resources");
     }
     if dram_pct > 50.0 {
         hints.push(
-            "Memory is more heavily utilized than compute: look at memory access patterns".into(),
+            "Memory is more heavily utilized than compute: look at memory access patterns",
         );
     }
     if cfg.staging && !cfg.smem_padding {
-        hints.push("Shared memory bank conflicts detected".into());
+        hints.push("Shared memory bank conflicts detected");
     }
-    hints.push("This kernel grid is too small to fill the available resources".into());
+    hints.push("This kernel grid is too small to fill the available resources");
 
     RawProfile {
         ncu,
@@ -174,10 +173,10 @@ pub fn synthesize(
 
 impl RawProfile {
     pub fn ncu_get(&self, k: &str) -> Option<f64> {
-        self.ncu.iter().find(|(n, _)| n == k).map(|(_, v)| *v)
+        self.ncu.iter().find(|(n, _)| *n == k).map(|(_, v)| *v)
     }
     pub fn run_get(&self, k: &str) -> Option<f64> {
-        self.run.iter().find(|(n, _)| n == k).map(|(_, v)| *v)
+        self.run.iter().find(|(n, _)| *n == k).map(|(_, v)| *v)
     }
 }
 

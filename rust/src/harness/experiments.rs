@@ -42,6 +42,11 @@ pub struct ExpConfig {
     /// run manifest and keys the skill-store partition observations land
     /// in, so resume and merge refuse to mix presets.
     pub device: Option<crate::device::machine::DeviceSpec>,
+    /// Memoize per-task-run retrieval lookups (`--no-retrieval-cache`
+    /// turns it off). Byte-identical either way — the flag exists for A/B
+    /// timing and for bisecting a suspected cache bug, not for changing
+    /// results.
+    pub retrieval_cache: bool,
 }
 
 impl Default for ExpConfig {
@@ -58,6 +63,7 @@ impl Default for ExpConfig {
             exchange_dir: None,
             exchange_epoch: 0,
             device: None,
+            retrieval_cache: true,
         }
     }
 }
@@ -66,6 +72,7 @@ impl ExpConfig {
     pub fn loop_cfg(&self) -> LoopConfig {
         let mut cfg = LoopConfig {
             memory_dir: self.memory_dir.clone(),
+            retrieval_cache: self.retrieval_cache,
             ..LoopConfig::default()
         };
         if let Some(dev) = &self.device {

@@ -197,14 +197,32 @@ fn group_biggest<'a>(graph: &'a KernelGraph, sched: &Schedule, g: usize) -> &'a 
         .unwrap()
 }
 
+/// One-pass op-id -> group-index map (`usize::MAX` = not scheduled). The
+/// fusion-edge scans below run per round in the inner loop; with the map
+/// they cost O(ops) instead of one O(groups x group-size) `group_of` walk
+/// per operand.
+fn op_group_map(graph: &KernelGraph, sched: &Schedule) -> Vec<usize> {
+    let mut map = vec![usize::MAX; graph.len()];
+    for (g, group) in sched.groups.iter().enumerate() {
+        for &o in group {
+            if let Some(slot) = map.get_mut(o) {
+                *slot = g;
+            }
+        }
+    }
+    map
+}
+
 /// Find (producer_group, consumer_group) for an elementwise fusion edge.
 fn ew_fusion_edge(graph: &KernelGraph, sched: &Schedule) -> Option<(usize, usize)> {
+    let groups = op_group_map(graph, sched);
+    let lookup = |id: usize| groups.get(id).copied().filter(|&g| g != usize::MAX);
     for op in &graph.ops {
         if !matches!(op.kind, OpKind::Elementwise(_)) {
             continue;
         }
         for &inp in &op.inputs {
-            let (gp, gc) = (sched.group_of(inp)?, sched.group_of(op.id)?);
+            let (gp, gc) = (lookup(inp)?, lookup(op.id)?);
             if gp != gc {
                 return Some((gp, gc));
             }
@@ -215,12 +233,14 @@ fn ew_fusion_edge(graph: &KernelGraph, sched: &Schedule) -> Option<(usize, usize
 
 /// Find a reduction/norm consumer split from its producer group.
 fn reduction_fusion_edge(graph: &KernelGraph, sched: &Schedule) -> Option<(usize, usize)> {
+    let groups = op_group_map(graph, sched);
+    let lookup = |id: usize| groups.get(id).copied().filter(|&g| g != usize::MAX);
     for op in &graph.ops {
         if !matches!(op.kind, OpKind::Reduction(_) | OpKind::Norm(_)) {
             continue;
         }
         for &inp in &op.inputs {
-            let (gp, gc) = (sched.group_of(inp)?, sched.group_of(op.id)?);
+            let (gp, gc) = (lookup(inp)?, lookup(op.id)?);
             if gp != gc {
                 return Some((gp, gc));
             }

@@ -43,6 +43,14 @@ const SHARDABLE: [&str; 5] = ["suite", "table1", "table2", "table3", "per-round"
 const PASSTHROUGH_FLAGS: [&str; 7] =
     ["strategy", "level", "take", "seeds", "suite-seed", "workers", "device"];
 
+/// `--no-retrieval-cache` given in either spelling the hand-rolled parser
+/// produces (bare switch, or `--no-retrieval-cache=1` as forwarded to
+/// shard children, where a bare switch could swallow a following
+/// positional).
+fn no_retrieval_cache(args: &Args) -> bool {
+    args.has("no-retrieval-cache") || args.get("no-retrieval-cache").is_some()
+}
+
 /// The flags `launch` and `worker` share when fanning a matrix out to
 /// shard children: the verbatim passthrough list, the exchange epoch, and
 /// the per-shard crash budget. One parser for both, so the two fan-out
@@ -54,6 +62,11 @@ fn fanout_flags(args: &Args) -> Result<(Vec<String>, Option<usize>, usize), Stri
             passthrough.push(format!("--{flag}"));
             passthrough.push(v.to_string());
         }
+    }
+    if no_retrieval_cache(args) {
+        // `=`-form: position-robust no matter what the child parser sees
+        // after it.
+        passthrough.push("--no-retrieval-cache=1".to_string());
     }
     let mut exchange_epoch = None;
     if args.has("exchange") {
@@ -107,6 +120,7 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
         exchange_dir,
         exchange_epoch,
         device: parse_device(args)?,
+        retrieval_cache: !no_retrieval_cache(args),
     })
 }
 
@@ -208,6 +222,7 @@ fn run() -> Result<(), String> {
             let mut cfg = LoopConfig {
                 run_seed: args.get_u64("seed", 0)?,
                 memory_dir: args.get("memory-dir").map(std::path::PathBuf::from),
+                retrieval_cache: !no_retrieval_cache(&args),
                 ..LoopConfig::default()
             };
             // The device preset keys the skill partition the observations
@@ -442,6 +457,7 @@ fn run() -> Result<(), String> {
                  \x20 suite --strategy <name> [--level 1|2|3] [--take N]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M] [--smoke]\n\
                  \x20     [--shards N --shard-index I] [--device a100-like|tpu-like]\n\
+                 \x20     [--no-retrieval-cache]   A/B: per-task-run retrieval memo off\n\
                  orchestration:\n\
                  \x20 report --run-dir D     render tables from streamed results.jsonl\n\
                  \x20 merge --out D S0 S1..  union per-shard run dirs (checkpoints + skill stores)\n\
@@ -485,7 +501,7 @@ fn run_fleet(args: &Args, manifest_path: &str, run_dir: &str) -> Result<(), Stri
     // Matrix and supervision flags must live on the (uniform) `worker`
     // invocations; a flag here would silently apply to nothing.
     let matrix_flags = ["cmd", "exchange", "exchange-epoch", "strategy", "level", "take",
-        "seeds", "suite-seed", "device", "max-restarts"];
+        "seeds", "suite-seed", "device", "max-restarts", "no-retrieval-cache"];
     for flag in matrix_flags {
         if args.get(flag).is_some() || args.has(flag) {
             return Err(format!(

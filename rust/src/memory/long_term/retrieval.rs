@@ -22,6 +22,88 @@ use crate::bench_suite::Task;
 use crate::device::metrics::RawProfile;
 use crate::kir::features::CodeFeatures;
 use crate::kir::transforms::MethodId;
+use std::collections::BTreeMap;
+
+/// Memoized skill-layer lookups for step 8' of the decision workflow.
+///
+/// Within one task run the skill store is an immutable snapshot (the
+/// scheduler only swaps snapshots between cells, at fold-epoch boundaries),
+/// so every per-(case, method) rank score, formatted skill note, and
+/// per-case learned-case rendering is a pure function of
+/// `(case, device, generation)`. The cache keys on exactly that: entries
+/// are reused while `(device, generation)` match the token they were
+/// computed under and flushed the moment either changes — `generation`
+/// advances precisely when the store folds, making it the natural
+/// invalidation token.
+///
+/// Byte-determinism is preserved by construction: cached values are the
+/// same f64s/Strings the uncached path computes (the rerank comparator is
+/// replicated verbatim over the memoized scores), so cache-on and
+/// cache-off runs produce identical reports and stores. The cache must not
+/// outlive the store snapshot it was filled from; `loop_runner::run_task`
+/// creates one per task run.
+#[derive(Debug, Default)]
+pub struct RetrievalCache {
+    /// `(device, store generation)` the entries below were computed under.
+    token: Option<(String, u64)>,
+    /// Memoized `SkillStore::rank_score` per (case id, method).
+    scores: BTreeMap<(&'static str, MethodId), f64>,
+    /// Memoized formatted skill note per (case id, method); `None` caches
+    /// the "no recorded evidence" outcome.
+    notes: BTreeMap<(&'static str, MethodId), Option<String>>,
+    /// Memoized rendered learned cases per case id.
+    learned: BTreeMap<&'static str, Vec<String>>,
+}
+
+impl RetrievalCache {
+    /// Fresh, empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Flush every entry if `(device, generation)` no longer match the
+    /// token the entries were computed under.
+    fn validate(&mut self, store: &SkillStore, device: &str) {
+        match &self.token {
+            Some((d, g)) if d == device && *g == store.generation => {}
+            _ => {
+                self.scores.clear();
+                self.notes.clear();
+                self.learned.clear();
+                self.token = Some((device.to_string(), store.generation));
+            }
+        }
+    }
+}
+
+/// One formatted skill-evidence audit line for (device, case, method), or
+/// `None` when the store holds no attempts for the pair. Shared by the
+/// cached and uncached step-8' paths so their bytes cannot drift.
+fn skill_note(
+    store: &SkillStore,
+    device: &str,
+    case_id: &str,
+    m: MethodId,
+) -> Option<String> {
+    let (stat, src) = match store.stat_in(device, case_id, m) {
+        Some(s) => (Some(s.clone()), device),
+        None => (store.pooled_stat(case_id, m), "pooled"),
+    };
+    let stat = stat?;
+    if stat.attempts == 0 {
+        return None;
+    }
+    Some(format!(
+        "{}: {} attempts, {} wins, mean gain {:+.3}, conf {:.2}, staleness x{:.2} [{}]",
+        m.name(),
+        stat.attempts,
+        stat.wins,
+        stat.mean_gain(),
+        stat.wilson_lower_bound(),
+        stat.staleness_weight(store.generation),
+        src
+    ))
+}
 
 /// Full audit trail of one retrieval (steps 4-9 outputs).
 #[derive(Debug, Clone)]
@@ -125,6 +207,20 @@ pub fn retrieve(ev: &Evidence) -> RetrievalResult {
 /// pooled cross-device view at a discount. An empty `device` ranks on the
 /// pooled view at full weight.
 pub fn retrieve_with(ev: &Evidence, skills: Option<&SkillStore>, device: &str) -> RetrievalResult {
+    retrieve_with_cache(ev, skills, device, None)
+}
+
+/// [`retrieve_with`] with an optional [`RetrievalCache`] memoizing the
+/// skill-layer lookups of step 8'. With `None` the behavior is exactly
+/// `retrieve_with`; with a cache the result is byte-identical but repeat
+/// retrievals against the same store snapshot skip the store walks and
+/// note formatting.
+pub fn retrieve_with_cache(
+    ev: &Evidence,
+    skills: Option<&SkillStore>,
+    device: &str,
+    cache: Option<&mut RetrievalCache>,
+) -> RetrievalResult {
     // Audit: which named predicates hold.
     let satisfied: Vec<&'static str> = super::kb_content::PREDICATES
         .iter()
@@ -173,29 +269,57 @@ pub fn retrieve_with(ev: &Evidence, skills: Option<&SkillStore>, device: &str) -
     let mut skill_notes = Vec::new();
     let mut learned_notes = Vec::new();
     if let (Some(store), Some(case)) = (skills, matched) {
-        store.rerank(device, case.id, &mut allowed);
-        for &m in &allowed {
-            let (stat, src) = match store.stat_in(device, case.id, m) {
-                Some(s) => (Some(s.clone()), device),
-                None => (store.pooled_stat(case.id, m), "pooled"),
-            };
-            if let Some(stat) = stat {
-                if stat.attempts > 0 {
-                    skill_notes.push(format!(
-                        "{}: {} attempts, {} wins, mean gain {:+.3}, conf {:.2}, staleness x{:.2} [{}]",
-                        m.name(),
-                        stat.attempts,
-                        stat.wins,
-                        stat.mean_gain(),
-                        stat.wilson_lower_bound(),
-                        stat.staleness_weight(store.generation),
-                        src
-                    ));
+        match cache {
+            Some(cache) => {
+                cache.validate(store, device);
+                // Rerank replicated over memoized scores: same values, same
+                // comparator, same stable sort as `SkillStore::rerank`.
+                let scores: Vec<f64> = allowed
+                    .iter()
+                    .map(|&m| {
+                        *cache
+                            .scores
+                            .entry((case.id, m))
+                            .or_insert_with(|| store.rank_score(device, case.id, m))
+                    })
+                    .collect();
+                let mut order: Vec<usize> = (0..allowed.len()).collect();
+                order.sort_by(|&a, &b| {
+                    scores[b]
+                        .partial_cmp(&scores[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                let reordered: Vec<MethodId> = order.iter().map(|&i| allowed[i]).collect();
+                allowed.copy_from_slice(&reordered);
+                for &m in &allowed {
+                    let note = cache
+                        .notes
+                        .entry((case.id, m))
+                        .or_insert_with(|| skill_note(store, device, case.id, m));
+                    if let Some(n) = note {
+                        skill_notes.push(n.clone());
+                    }
+                }
+                let learned = cache.learned.entry(case.id).or_insert_with(|| {
+                    store
+                        .learned_for(device, case.id)
+                        .iter()
+                        .map(|lc| lc.render())
+                        .collect()
+                });
+                learned_notes.extend(learned.iter().cloned());
+            }
+            None => {
+                store.rerank(device, case.id, &mut allowed);
+                for &m in &allowed {
+                    if let Some(n) = skill_note(store, device, case.id, m) {
+                        skill_notes.push(n);
+                    }
+                }
+                for lc in store.learned_for(device, case.id) {
+                    learned_notes.push(lc.render());
                 }
             }
-        }
-        for lc in store.learned_for(device, case.id) {
-            learned_notes.push(lc.render());
         }
     }
 
@@ -232,6 +356,20 @@ pub fn retrieve_for_with(
     device: &str,
 ) -> RetrievalResult {
     retrieve_with(&aggregate(task, features, raw), skills, device)
+}
+
+/// [`retrieve_for_with`] with an optional [`RetrievalCache`] (see
+/// [`retrieve_with_cache`]). The loop runner threads one cache through all
+/// rounds of a task run.
+pub fn retrieve_for_with_cache(
+    task: &Task,
+    features: &CodeFeatures,
+    raw: &RawProfile,
+    skills: Option<&SkillStore>,
+    device: &str,
+    cache: Option<&mut RetrievalCache>,
+) -> RetrievalResult {
+    retrieve_with_cache(&aggregate(task, features, raw), skills, device, cache)
 }
 
 #[cfg(test)]
@@ -424,6 +562,97 @@ mod tests {
         let audit = r.audit();
         assert!(audit.contains("learned decision cases:"), "{audit}");
         assert!(audit.contains("[demotion]"), "{audit}");
+    }
+
+    #[test]
+    fn cached_retrieval_matches_uncached() {
+        use super::super::skill_store::{SkillObs, SkillStore};
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let dev = DeviceSpec::a100_like();
+        let cost = price(&task.graph, &sched, &dev);
+        let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+        let feats = ground_truth(&task.graph, &sched);
+        let mut store = SkillStore::new();
+        store.observe(&SkillObs {
+            case_id: "gemm.naive_loop".to_string(),
+            method: MethodId::TileSmem,
+            gain: Some(2.5),
+            device: dev.name.to_string(),
+        });
+        for _ in 0..8 {
+            store.observe(&SkillObs {
+                case_id: "gemm.naive_loop".to_string(),
+                method: MethodId::UnrollInner,
+                gain: None,
+                device: dev.name.to_string(),
+            });
+        }
+        let plain = retrieve_for_with(&task, &feats, &raw, Some(&store), dev.name);
+        let mut cache = RetrievalCache::new();
+        // First call fills the cache, second is served from it; both must
+        // match the uncached result field for field.
+        for _ in 0..2 {
+            let c = retrieve_for_with_cache(
+                &task,
+                &feats,
+                &raw,
+                Some(&store),
+                dev.name,
+                Some(&mut cache),
+            );
+            assert_eq!(c.allowed_methods, plain.allowed_methods);
+            assert_eq!(c.skill_notes, plain.skill_notes);
+            assert_eq!(c.learned_notes, plain.learned_notes);
+            assert_eq!(c.audit(), plain.audit());
+        }
+    }
+
+    #[test]
+    fn cache_invalidates_when_generation_advances() {
+        use super::super::skill_store::{SkillObs, SkillStore};
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let dev = DeviceSpec::a100_like();
+        let cost = price(&task.graph, &sched, &dev);
+        let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+        let feats = ground_truth(&task.graph, &sched);
+        let mut store = SkillStore::new();
+        store.observe(&SkillObs {
+            case_id: "gemm.naive_loop".to_string(),
+            method: MethodId::TileSmem,
+            gain: Some(2.5),
+            device: dev.name.to_string(),
+        });
+        let mut cache = RetrievalCache::new();
+        let _ = retrieve_for_with_cache(
+            &task,
+            &feats,
+            &raw,
+            Some(&store),
+            dev.name,
+            Some(&mut cache),
+        );
+        // New fold epoch + fresh evidence: the staleness-decayed notes
+        // change, and a stale cache would serve the old bytes.
+        store.advance_generation();
+        store.observe(&SkillObs {
+            case_id: "gemm.naive_loop".to_string(),
+            method: MethodId::TileSmem,
+            gain: Some(1.0),
+            device: dev.name.to_string(),
+        });
+        let plain = retrieve_for_with(&task, &feats, &raw, Some(&store), dev.name);
+        let cached = retrieve_for_with_cache(
+            &task,
+            &feats,
+            &raw,
+            Some(&store),
+            dev.name,
+            Some(&mut cache),
+        );
+        assert_eq!(cached.skill_notes, plain.skill_notes);
+        assert_eq!(cached.allowed_methods, plain.allowed_methods);
     }
 
     #[test]

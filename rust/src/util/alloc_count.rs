@@ -1,0 +1,91 @@
+//! Heap-allocation counting for the perf trajectory.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every allocation
+//! (plus allocated bytes) in process-wide relaxed atomics. It is *not*
+//! installed by default: registering it is the caller's job, and only the
+//! `perf_hotpath` bench does so, behind the `alloc-count` feature:
+//!
+//! ```ignore
+//! #[cfg(feature = "alloc-count")]
+//! #[global_allocator]
+//! static ALLOC: kernelskill::util::alloc_count::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! Global atomics rather than thread-locals on purpose: a `GlobalAlloc`
+//! must not allocate while recording (TLS initialization can), and the
+//! suite bench fans work across a thread pool, so the number we want —
+//! allocations per task run, aggregated over the whole suite — is the
+//! process-wide total anyway. Callers measure by snapshot difference:
+//! read [`allocations`] before and after the region of interest.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// A [`GlobalAlloc`] that delegates to [`System`] and counts calls.
+///
+/// `alloc`, `alloc_zeroed`, and `realloc` each count as one allocation
+/// event; `dealloc` is free. Counting uses `Ordering::Relaxed` — the
+/// counters are a measurement, not a synchronization point, and the bench
+/// reads them from a single thread after the pool has joined.
+pub struct CountingAlloc;
+
+// SAFETY: pure delegation to `System`; the atomics never allocate, so the
+// allocator cannot re-enter itself.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Total allocation events since process start (0 forever if
+/// [`CountingAlloc`] was never registered as the global allocator).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested since process start (same caveat as
+/// [`allocations`]).
+pub fn bytes_allocated() -> u64 {
+    BYTES.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The test binary does not register CountingAlloc, so exercise the
+    // GlobalAlloc impl directly and check the counters move.
+    #[test]
+    fn counts_direct_alloc_calls() {
+        let before = (allocations(), bytes_allocated());
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        unsafe {
+            let p = CountingAlloc.alloc(layout);
+            assert!(!p.is_null());
+            CountingAlloc.dealloc(p, layout);
+        }
+        assert_eq!(allocations(), before.0 + 1);
+        assert_eq!(bytes_allocated(), before.1 + 64);
+    }
+}

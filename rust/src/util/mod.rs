@@ -3,6 +3,7 @@
 //! for rand/serde/clap/tokio/once_cell/anyhow, which are unavailable in the
 //! offline build environment (DESIGN.md §Infrastructure).
 
+pub mod alloc_count;
 pub mod cli;
 pub mod error;
 pub mod fsum;

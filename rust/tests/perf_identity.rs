@@ -1,0 +1,176 @@
+//! Byte-identity battery for the retrieval cache (the PR-6 hot-path work).
+//!
+//! The contract under test: the per-task-run `RetrievalCache` is a pure
+//! memoization — turning it on or off (`--no-retrieval-cache`) may not
+//! change a single byte of any output. Each test runs the same matrix with
+//! the cache enabled and disabled and compares the `report` rendering and
+//! the `skills.json` store byte-for-byte, across the same topologies the
+//! CI determinism gates cover: plain suite, 3-shard + merge, and
+//! exchange-enabled shards (the launch-with-exchange shape, where epoch
+//! folds advance the store generation and exercise cache invalidation).
+//! The last test interrupts an exchange epoch mid-run and resumes it.
+
+use std::path::{Path, PathBuf};
+
+use kernelskill::baselines;
+use kernelskill::bench_suite::{self, Task};
+use kernelskill::coordinator::{self, merge_run_dirs, LoopConfig, SuiteOptions};
+use kernelskill::harness::experiments;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ks-perfid-{tag}-{}", std::process::id()))
+}
+
+fn small_tasks() -> Vec<Task> {
+    bench_suite::level_suite(42, 1).into_iter().take(3).collect()
+}
+
+const SEEDS: [u64; 2] = [0, 1];
+
+fn loop_cfg(cache: bool) -> LoopConfig {
+    LoopConfig {
+        retrieval_cache: cache,
+        ..LoopConfig::default()
+    }
+}
+
+/// Run the small matrix into `dir` with the given cache setting.
+fn run_into(dir: &Path, cache: bool, opts: &SuiteOptions) {
+    let tasks = small_tasks();
+    let strategies = vec![baselines::kernelskill(), baselines::wo_memory()];
+    coordinator::run_matrix_with(&tasks, &strategies, &loop_cfg(cache), &SEEDS, 4, opts)
+        .unwrap();
+}
+
+fn read_bytes(path: &Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// report + skills.json of two finished run dirs must match byte-for-byte.
+fn assert_dirs_identical(a: &Path, b: &Path) {
+    assert_eq!(
+        experiments::report_run_dir(a).unwrap(),
+        experiments::report_run_dir(b).unwrap(),
+        "report rendering diverged between {} and {}",
+        a.display(),
+        b.display()
+    );
+    assert_eq!(
+        read_bytes(&a.join("skills.json")),
+        read_bytes(&b.join("skills.json")),
+        "skill store bytes diverged between {} and {}",
+        a.display(),
+        b.display()
+    );
+}
+
+#[test]
+fn suite_is_byte_identical_with_and_without_retrieval_cache() {
+    let root = tmp_root("suite");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let cached = root.join("cached");
+    let plain = root.join("plain");
+    run_into(&cached, true, &SuiteOptions::in_dir(&cached));
+    run_into(&plain, false, &SuiteOptions::in_dir(&plain));
+    assert_dirs_identical(&cached, &plain);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn sharded_merge_is_byte_identical_across_cache_settings() {
+    let root = tmp_root("shard");
+    let _ = std::fs::remove_dir_all(&root);
+
+    // Cache OFF, single process: the reference.
+    let single = root.join("single");
+    run_into(&single, false, &SuiteOptions::in_dir(&single));
+
+    // Cache ON, 3 shards + merge.
+    let shard_dirs: Vec<PathBuf> = (0..3)
+        .map(|i| {
+            let d = root.join(format!("shard{i}"));
+            run_into(&d, true, &SuiteOptions::in_dir(&d).with_shard(i, 3));
+            d
+        })
+        .collect();
+    let merged = root.join("merged");
+    let report = merge_run_dirs(&merged, &shard_dirs).unwrap();
+    assert_eq!(report.merged_cells, 12);
+    assert_dirs_identical(&merged, &single);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn exchange_shards_are_byte_identical_across_cache_settings() {
+    // The launch-with-exchange shape at the library level: 2 shards trade
+    // learned skills through a shared exchange dir at a fixed epoch
+    // length. Epoch folds bump the store generation mid-run, so this is
+    // the topology that exercises the cache's invalidation token.
+    let root = tmp_root("exchange");
+    let _ = std::fs::remove_dir_all(&root);
+    const EPOCH: usize = 3;
+
+    // The shards must run concurrently: each one blocks at its epoch
+    // boundaries waiting for the peer's published delta.
+    let run_pair = |tag: &str, cache: bool| -> PathBuf {
+        let xdir = root.join(format!("x-{tag}"));
+        let handles: Vec<_> = (0..2usize)
+            .map(|i| {
+                let d = root.join(format!("{tag}{i}"));
+                let xdir = xdir.clone();
+                std::thread::spawn(move || {
+                    let opts =
+                        SuiteOptions::in_dir(&d).with_shard(i, 2).with_exchange(&xdir, EPOCH);
+                    run_into(&d, cache, &opts);
+                    d
+                })
+            })
+            .collect();
+        let dirs: Vec<PathBuf> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let merged = root.join(format!("{tag}-merged"));
+        merge_run_dirs(&merged, &dirs).unwrap();
+        merged
+    };
+
+    let cached = run_pair("cached", true);
+    let plain = run_pair("plain", false);
+    assert_dirs_identical(&cached, &plain);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn resumed_interrupted_exchange_epoch_is_byte_identical() {
+    // Kill an exchange-enabled run one cell into an epoch, resume it with
+    // the cache on, and require the finished dir to match an uninterrupted
+    // cache-off run byte-for-byte: the resumed scheduler re-folds the
+    // partially-published epoch state, and the cache must key off the
+    // folded store's generation, not off how many times the process
+    // started.
+    let root = tmp_root("resume");
+    let _ = std::fs::remove_dir_all(&root);
+    const EPOCH: usize = 3;
+
+    let plain = root.join("plain");
+    let x_plain = root.join("x-plain");
+    run_into(
+        &plain,
+        false,
+        &SuiteOptions::in_dir(&plain).with_exchange(&x_plain, EPOCH),
+    );
+
+    let resumed = root.join("resumed");
+    let x_res = root.join("x-res");
+    let mut opts = SuiteOptions::in_dir(&resumed).with_exchange(&x_res, EPOCH);
+    opts.stop_after = Some(1);
+    run_into(&resumed, true, &opts);
+    let opts = SuiteOptions::resumed(&resumed).with_exchange(&x_res, EPOCH);
+    run_into(&resumed, true, &opts);
+
+    assert_dirs_identical(&resumed, &plain);
+
+    let _ = std::fs::remove_dir_all(&root);
+}

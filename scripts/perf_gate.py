@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Self-calibrating perf gate for the CI `perf` job (stdlib only).
+
+Works against the trajectory file `BENCH_perf_hotpath.json` at the repo
+root and the single-entry JSON the bench writes via `--json-out`.
+
+Subcommands
+-----------
+floor
+    Print (stdout, one number) the blocking suite-throughput floor:
+    0.5 x the median `suite_throughput_task_runs_per_s` of the last N
+    trajectory entries from the same runner. With fewer than MIN_ENTRIES
+    same-runner entries the conservative bootstrap fallback is used.
+    The basis for the chosen floor is printed to stderr so the CI job
+    log always shows where the number came from.
+
+check-allocs
+    Compare the new entry's `allocs_per_task_run` against the most
+    recent trajectory entry that carries one (trajectory entries are
+    only appended on main-branch pushes, so that is "last main"). Fails
+    (exit 1) on a regression of more than REGRESS_FRAC; prints a skip
+    notice and exits 0 when either side has no allocation count yet.
+
+append
+    Stamp `date` and `runner` onto the new entry and append it to the
+    trajectory file (newest last), preserving the file's 2-space-indent
+    formatting. The CI job commits the result on main pushes.
+"""
+
+import argparse
+import datetime
+import json
+import statistics
+import sys
+
+# Bootstrap floor (task-runs/s) until the trajectory has enough entries
+# to calibrate from — the pre-calibration hard-coded CI value.
+FALLBACK_FLOOR = 10.0
+# Same-runner entries needed before the calibrated floor takes over.
+MIN_ENTRIES = 3
+# The floor is this fraction of the median recent throughput: low enough
+# that runner noise does not trip it, high enough that a real hot-path
+# regression (2x+) does.
+FLOOR_FRAC = 0.5
+# Window of most-recent same-runner entries the median is taken over.
+WINDOW = 10
+# Allowed allocs_per_task_run growth vs the last main entry.
+REGRESS_FRAC = 0.25
+
+
+def load_json(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def runner_entries(trajectory, runner):
+    """Trajectory entries from `runner`, oldest first (file order)."""
+    return [e for e in trajectory.get("entries", []) if e.get("runner") == runner]
+
+
+def cmd_floor(args):
+    trajectory = load_json(args.trajectory)
+    entries = runner_entries(trajectory, args.runner)
+    samples = [
+        e["suite_throughput_task_runs_per_s"]
+        for e in entries
+        if isinstance(e.get("suite_throughput_task_runs_per_s"), (int, float))
+    ][-WINDOW:]
+    if len(samples) < MIN_ENTRIES:
+        print(
+            f"floor basis: {len(samples)} same-runner entries for "
+            f"{args.runner!r} (< {MIN_ENTRIES}); using bootstrap fallback "
+            f"{FALLBACK_FLOOR}",
+            file=sys.stderr,
+        )
+        print(FALLBACK_FLOOR)
+        return 0
+    med = statistics.median(samples)
+    floor = FLOOR_FRAC * med
+    print(
+        f"floor basis: median of last {len(samples)} {args.runner!r} "
+        f"entries = {med:.1f} task-runs/s; floor = {FLOOR_FRAC} x median "
+        f"= {floor:.1f}",
+        file=sys.stderr,
+    )
+    print(f"{floor:.1f}")
+    return 0
+
+
+def cmd_check_allocs(args):
+    entry = load_json(args.entry)
+    new = entry.get("allocs_per_task_run")
+    if not isinstance(new, (int, float)):
+        print(
+            "alloc gate: SKIPPED — new entry has no allocs_per_task_run "
+            "(bench not built with --features alloc-count)"
+        )
+        return 0
+    trajectory = load_json(args.trajectory)
+    baselines = [
+        e["allocs_per_task_run"]
+        for e in trajectory.get("entries", [])
+        if isinstance(e.get("allocs_per_task_run"), (int, float))
+    ]
+    if not baselines:
+        print(
+            "alloc gate: SKIPPED — trajectory has no entry with an "
+            "allocation count yet (empty trajectory bootstrap)"
+        )
+        return 0
+    base = baselines[-1]
+    limit = base * (1.0 + REGRESS_FRAC)
+    if new > limit:
+        print(
+            f"alloc gate: FAIL — {new:.0f} allocs/task-run vs last main "
+            f"entry {base:.0f} (> +{REGRESS_FRAC:.0%} limit {limit:.0f})"
+        )
+        return 1
+    print(
+        f"alloc gate: ok — {new:.0f} allocs/task-run vs last main entry "
+        f"{base:.0f} (limit {limit:.0f})"
+    )
+    return 0
+
+
+def cmd_append(args):
+    entry = load_json(args.entry)
+    stamped = {"date": args.date, "runner": args.runner}
+    if args.floor_basis:
+        stamped["floor_basis"] = args.floor_basis
+    stamped.update(entry)
+    trajectory = load_json(args.trajectory)
+    trajectory.setdefault("entries", []).append(stamped)
+    with open(args.trajectory, "w", encoding="utf-8") as f:
+        json.dump(trajectory, f, indent=2)
+        f.write("\n")
+    print(f"appended entry dated {args.date} ({args.runner}) to {args.trajectory}")
+    return 0
+
+
+def main(argv):
+    parser = argparse.ArgumentParser(description=__doc__)
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p_floor = sub.add_parser("floor", help="print the calibrated throughput floor")
+    p_floor.add_argument("--trajectory", required=True)
+    p_floor.add_argument("--runner", required=True)
+    p_floor.set_defaults(run=cmd_floor)
+
+    p_check = sub.add_parser("check-allocs", help="gate allocs_per_task_run")
+    p_check.add_argument("--entry", required=True)
+    p_check.add_argument("--trajectory", required=True)
+    p_check.set_defaults(run=cmd_check_allocs)
+
+    p_append = sub.add_parser("append", help="stamp + append an entry")
+    p_append.add_argument("--entry", required=True)
+    p_append.add_argument("--trajectory", required=True)
+    p_append.add_argument("--runner", required=True)
+    p_append.add_argument(
+        "--date",
+        default=datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d"),
+    )
+    p_append.add_argument(
+        "--floor-basis",
+        default="",
+        help="how this run's throughput floor was derived (from `floor` stderr)",
+    )
+    p_append.set_defaults(run=cmd_append)
+
+    args = parser.parse_args(argv)
+    return args.run(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
