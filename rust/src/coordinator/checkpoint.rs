@@ -71,6 +71,20 @@ pub struct RunManifest {
     /// different devices may not be mixed by resume or merge. Pre-device
     /// manifests read as the legacy (A100-like) preset.
     pub device: String,
+    /// Whether the exchange window schedule is the deterministic doubling
+    /// one (see `scheduler::exchange_windows`). Part of the experiment
+    /// identity like `exchange_epoch`: cells of an adaptive run retrieved
+    /// against differently-cut epoch folds. Pre-elastic manifests read as
+    /// fixed-length windows.
+    pub exchange_adaptive: bool,
+    /// Total lease-batch count this directory was written under (0 = the
+    /// directory was not produced by elastic batch slicing). Placement,
+    /// not identity — excluded from [`RunManifest::same_matrix`] exactly
+    /// like the shard fields.
+    pub lease_batches: usize,
+    /// This directory's lease-batch index (meaningful only when
+    /// `lease_batches > 0`).
+    pub lease_batch: usize,
 }
 
 impl RunManifest {
@@ -85,12 +99,14 @@ impl RunManifest {
     }
 
     /// True when `other` describes the same (strategy-independent) cell
-    /// matrix — shard fields excluded, since different shards of one run
-    /// legitimately differ there. The exchange epoch and the device preset
-    /// *are* included: an exchange run's cells saw epoch-folded memory, and
-    /// a run's cells were priced against (and recorded skills for) one
-    /// device — neither is a slice of a differently-configured experiment.
-    /// This is `merge`'s compatibility check.
+    /// matrix — shard *and* lease-batch fields excluded, since different
+    /// slices of one run legitimately differ there (placement, not
+    /// identity). The exchange epoch, the adaptive-window flag, and the
+    /// device preset *are* included: an exchange run's cells saw
+    /// epoch-folded memory cut on that exact schedule, and a run's cells
+    /// were priced against (and recorded skills for) one device — neither
+    /// is a slice of a differently-configured experiment. This is
+    /// `merge`'s compatibility check.
     pub fn same_matrix(&self, other: &RunManifest) -> bool {
         self.n_tasks == other.n_tasks
             && self.seeds == other.seeds
@@ -98,6 +114,7 @@ impl RunManifest {
             && self.at == other.at
             && self.fingerprint == other.fingerprint
             && self.exchange_epoch == other.exchange_epoch
+            && self.exchange_adaptive == other.exchange_adaptive
             && self.device == other.device
     }
 
@@ -115,7 +132,10 @@ impl RunManifest {
             ("shards", json::num(self.shards as f64)),
             ("shard_index", json::num(self.shard_index as f64)),
             ("exchange_epoch", json::num(self.exchange_epoch as f64)),
+            ("exchange_adaptive", Json::Bool(self.exchange_adaptive)),
             ("device", json::s(&self.device)),
+            ("lease_batches", json::num(self.lease_batches as f64)),
+            ("lease_batch", json::num(self.lease_batch as f64)),
         ])
     }
 
@@ -144,6 +164,11 @@ impl RunManifest {
         let shard_index = j.get("shard_index").and_then(|v| v.as_usize()).unwrap_or(0);
         // Pre-exchange manifests never ran with live memory exchange.
         let exchange_epoch = j.get("exchange_epoch").and_then(|v| v.as_usize()).unwrap_or(0);
+        // Pre-elastic manifests used fixed-length exchange windows and were
+        // never written by batch slicing.
+        let exchange_adaptive = matches!(j.get("exchange_adaptive"), Some(Json::Bool(true)));
+        let lease_batches = j.get("lease_batches").and_then(|v| v.as_usize()).unwrap_or(0);
+        let lease_batch = j.get("lease_batch").and_then(|v| v.as_usize()).unwrap_or(0);
         // Pre-device manifests were all priced against the default preset.
         let device = j
             .get("device")
@@ -160,6 +185,9 @@ impl RunManifest {
             shard_index,
             exchange_epoch,
             device,
+            exchange_adaptive,
+            lease_batches,
+            lease_batch,
         })
     }
 }
@@ -611,7 +639,13 @@ pub fn intern_strategy_name(name: &str) -> &'static str {
     if let Some(&n) = roster.iter().find(|&&n| n == name) {
         return n;
     }
-    let mut extra = EXTRA.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap();
+    // A poisoned lock only means another thread panicked mid-push; the
+    // Vec is append-only and stays valid, so recover the guard instead of
+    // propagating the panic into every checkpoint loader on the process.
+    let mut extra = EXTRA
+        .get_or_init(|| Mutex::new(Vec::new()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
     if let Some(&n) = extra.iter().find(|&&n| n == name) {
         return n;
     }
@@ -781,6 +815,9 @@ mod tests {
             shard_index: 2,
             exchange_epoch: 4,
             device: "tpu-like".to_string(),
+            exchange_adaptive: true,
+            lease_batches: 6,
+            lease_batch: 5,
         };
         rd.write_manifest(&m).unwrap();
         assert_eq!(rd.read_manifest().unwrap(), Some(m));
@@ -802,6 +839,8 @@ mod tests {
         assert_eq!(m.shard_index, 0);
         assert_eq!(m.exchange_epoch, 0, "pre-exchange manifests read as exchange-off");
         assert_eq!(m.device, "a100-like", "pre-device manifests read as the legacy preset");
+        assert!(!m.exchange_adaptive, "pre-elastic manifests read as fixed windows");
+        assert_eq!((m.lease_batches, m.lease_batch), (0, 0), "and as non-batch-sliced");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -817,11 +856,20 @@ mod tests {
             shard_index: 0,
             exchange_epoch: 0,
             device: "a100-like".to_string(),
+            exchange_adaptive: false,
+            lease_batches: 0,
+            lease_batch: 0,
         };
         let mut other_shard = base.clone();
         other_shard.shards = 4;
         other_shard.shard_index = 3;
         assert!(base.same_matrix(&other_shard));
+        // Lease-batch fields are placement too: a batch-sliced dir and a
+        // round-robin shard of the same matrix merge together.
+        let mut other_batch = base.clone();
+        other_batch.lease_batches = 5;
+        other_batch.lease_batch = 4;
+        assert!(base.same_matrix(&other_batch));
         let mut other_matrix = base.clone();
         other_matrix.seeds = vec![0];
         assert!(!base.same_matrix(&other_matrix));
@@ -830,6 +878,11 @@ mod tests {
         let mut other_epoch = base.clone();
         other_epoch.exchange_epoch = 8;
         assert!(!base.same_matrix(&other_epoch));
+        // A different window *schedule* at the same epoch length is too.
+        let mut other_schedule = base.clone();
+        other_schedule.exchange_epoch = 8;
+        other_schedule.exchange_adaptive = true;
+        assert!(!other_epoch.same_matrix(&other_schedule));
         // So is a different device preset: its cells were priced against
         // different hardware and recorded skills in a different partition.
         let mut other_device = base.clone();

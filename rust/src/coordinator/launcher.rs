@@ -34,15 +34,34 @@
 //! anywhere in the fleet, and the result is still a pure function of
 //! (matrix, base memory, epoch length) — byte-identical to a `--shards 1`
 //! launch with the same epoch length.
+//!
+//! **Elastic fleets** (a manifest with `total_batches` + a shared `lease`
+//! transport instead of shard ranges) replace static placement with lease
+//! claiming: the matrix is cut into contiguous cell batches, each worker's
+//! [`run_worker`] loop claims the next unleased batch by atomically
+//! publishing a lease file (first publish wins), runs it as a child with
+//! `--batch-index`, and heartbeats the lease with its *progress counter*
+//! (published checkpoint bytes — deliberately not a wall-clock mtime,
+//! which a slow filesystem or a paused straggler defeats). The
+//! [`launch_workers`] coordinator watches the lease board and re-dispatches
+//! any batch whose counter stops advancing by publishing an `.expired`
+//! marker; a re-claimed batch recomputes the same deterministic bytes, so
+//! duplicated attempts collapse in the bit-identical merge path and the
+//! final output stays byte-identical to a single-process run regardless of
+//! placement, kills, and re-dispatch (`tests/distributed.rs`, CI
+//! `elastic-smoke`).
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use super::checkpoint::RunDir;
 use super::merge::{MergeReport, MergeWatcher};
+use super::scheduler::EXCHANGE_TIMEOUT_EXIT;
 use super::transport::{
-    up_shard_rel, ExchangeHub, ExchangePull, ExchangePush, RunDirTransport, ShardPull, ShardPush,
+    claim_next_batch, expire_lease, parse_up_batch_name, read_lease_board, up_shard_rel,
+    ExchangeHub, ExchangePull, ExchangePush, RunDirTransport, ShardPull, ShardPush,
     WorkerManifest, WorkerSpec, UP_EXCHANGE,
 };
 
@@ -153,8 +172,18 @@ struct ShardProc {
     index: usize,
     child: Option<Child>,
     restarts: usize,
+    /// Restarts after a *restartable* exit ([`EXCHANGE_TIMEOUT_EXIT`] — an
+    /// exchange wait that timed out because a peer died and was
+    /// re-dispatched). Tracked separately so waiting out a slow fleet does
+    /// not burn the crash budget.
+    tempfail_restarts: usize,
     done: bool,
 }
+
+/// Restartable (`EX_TEMPFAIL`) exits are capped separately from the crash
+/// budget — generously, but not unboundedly, so a fleet whose peer truly
+/// never comes back still fails loudly instead of spinning forever.
+const TEMPFAIL_RESTART_CAP: usize = 50;
 
 /// Kills every still-running child on scope exit, so an error return (or a
 /// panic) never leaks orphan shard processes.
@@ -184,13 +213,27 @@ struct ChildParams {
     dir: PathBuf,
     /// Captured stdout/stderr log.
     log_path: PathBuf,
-    /// Fleet-wide shard count.
+    /// Fleet-wide slice count (shards, or lease batches in batch mode).
     total_shards: usize,
-    /// This child's global shard index.
+    /// This child's global slice index.
     index: usize,
+    /// Spawn with `--batch-index/--batch-count` (elastic lease batch)
+    /// instead of `--shards/--shard-index`.
+    batch_mode: bool,
     /// Live memory exchange: (shared exchange dir, epoch length).
     exchange: Option<(PathBuf, usize)>,
     env: Vec<(String, String)>,
+}
+
+impl ChildParams {
+    /// "shard 3" / "batch 3" — for logs and error messages.
+    fn label(&self) -> String {
+        if self.batch_mode {
+            format!("batch {}", self.index)
+        } else {
+            format!("shard {}", self.index)
+        }
+    }
 }
 
 fn spawn_child(p: &ChildParams, resume_note: bool) -> Result<Child, String> {
@@ -203,17 +246,21 @@ fn spawn_child(p: &ChildParams, resume_note: bool) -> Result<Child, String> {
         .try_clone()
         .map_err(|e| format!("opening {}: {e}", p.log_path.display()))?;
     let mut cmd = Command::new(&p.program);
-    cmd.arg(&p.subcommand)
-        .args(&p.passthrough)
-        .arg("--run-dir")
-        .arg(&p.dir)
-        .arg("--shards")
-        .arg(p.total_shards.to_string())
-        .arg("--shard-index")
-        .arg(p.index.to_string())
-        // Children are always resumable: the first run of a fresh dir is a
-        // no-op resume, and a crash-restart picks up at the checkpoint.
-        .arg("--resume");
+    cmd.arg(&p.subcommand).args(&p.passthrough).arg("--run-dir").arg(&p.dir);
+    if p.batch_mode {
+        cmd.arg("--batch-count")
+            .arg(p.total_shards.to_string())
+            .arg("--batch-index")
+            .arg(p.index.to_string());
+    } else {
+        cmd.arg("--shards")
+            .arg(p.total_shards.to_string())
+            .arg("--shard-index")
+            .arg(p.index.to_string());
+    }
+    // Children are always resumable: the first run of a fresh dir is a
+    // no-op resume, and a crash-restart picks up at the checkpoint.
+    cmd.arg("--resume");
     if let Some((dir, epoch)) = &p.exchange {
         cmd.arg("--exchange-dir")
             .arg(dir)
@@ -226,11 +273,11 @@ fn spawn_child(p: &ChildParams, resume_note: bool) -> Result<Child, String> {
     cmd.stdin(Stdio::null()).stdout(log).stderr(log_err);
     let child = cmd
         .spawn()
-        .map_err(|e| format!("spawning shard {} ({}): {e}", p.index, p.program.display()))?;
+        .map_err(|e| format!("spawning {} ({}): {e}", p.label(), p.program.display()))?;
     if resume_note {
-        crate::log_warn!("shard {}: relaunched with --resume (pid {})", p.index, child.id());
+        crate::log_warn!("{}: relaunched with --resume (pid {})", p.label(), child.id());
     } else {
-        crate::log_info!("shard {}: spawned (pid {})", p.index, child.id());
+        crate::log_info!("{}: spawned (pid {})", p.label(), child.id());
     }
     Ok(child)
 }
@@ -244,6 +291,7 @@ fn shard_params(cfg: &LaunchConfig, index: usize) -> ChildParams {
         log_path: cfg.run_dir.join(format!("shard-{index}.log")),
         total_shards: cfg.shards,
         index,
+        batch_mode: false,
         exchange: cfg
             .exchange_epoch
             .map(|epoch| (cfg.run_dir.join("exchange"), epoch)),
@@ -275,6 +323,32 @@ fn poll_procs(
             Ok(Some(status)) if status.success() => {
                 s.child = None;
                 s.done = true;
+            }
+            Ok(Some(status)) if status.code() == Some(EXCHANGE_TIMEOUT_EXIT) => {
+                // Restartable: the child gave up waiting for a peer's
+                // exchange delta (the peer died, or stalled and was
+                // re-dispatched). Not the child's fault — relaunch with
+                // `--resume` without burning its crash budget, under a
+                // separate generous cap.
+                s.child = None;
+                if s.tempfail_restarts >= TEMPFAIL_RESTART_CAP {
+                    return Err(format!(
+                        "shard {} is starved of exchange deltas: {} restartable \
+                         timeout exit(s) without the peer delta appearing; see {}",
+                        s.index,
+                        s.tempfail_restarts,
+                        log_dir.join(format!("shard-{}.log", s.index)).display()
+                    ));
+                }
+                s.tempfail_restarts += 1;
+                crate::log_warn!(
+                    "shard {} hit a restartable exchange-wait timeout; relaunching \
+                     ({}/{} restartable exits)",
+                    s.index,
+                    s.tempfail_restarts,
+                    TEMPFAIL_RESTART_CAP
+                );
+                s.child = Some(respawn(s.index)?);
             }
             Ok(Some(status)) => {
                 s.child = None;
@@ -338,6 +412,7 @@ pub fn launch(cfg: &LaunchConfig) -> Result<LaunchReport, String> {
             index,
             child: Some(spawn_child(&shard_params(cfg, index), false)?),
             restarts: 0,
+            tempfail_restarts: 0,
             done: false,
         });
     }
@@ -483,6 +558,16 @@ impl WorkerReport {
     }
 }
 
+/// Test hook: `KS_TEST_WORKER_SYNC_DELAY_MS=<n>` stretches every worker
+/// sync cycle by `n` milliseconds — how the CI `elastic-smoke` job
+/// manufactures a heterogeneous fleet with one deliberately slow worker.
+fn sync_delay_from_env() -> Duration {
+    std::env::var("KS_TEST_WORKER_SYNC_DELAY_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .map_or(Duration::ZERO, Duration::from_millis)
+}
+
 /// Test hook for the distributed batteries and the CI `multi-node-smoke`
 /// job: with `KS_TEST_WORKER_CRASH_AFTER_SYNCS=<n>` and
 /// `KS_TEST_WORKER_CRASH_MARKER=<path>` both set, the worker simulates its
@@ -568,6 +653,10 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
     }
     std::fs::create_dir_all(&cfg.run_dir)
         .map_err(|e| format!("creating {}: {e}", cfg.run_dir.display()))?;
+    if cfg.manifest.is_elastic() {
+        let spec = spec.clone();
+        return run_worker_elastic(cfg, &spec);
+    }
     let transport = spec.transport.build()?;
     // Zero-copy transports (a shared filesystem) let the children stream
     // straight into the transport root; otherwise they run in local dirs
@@ -623,6 +712,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
         log_path: cfg.run_dir.join(format!("shard-{i}.log")),
         total_shards: cfg.manifest.total_shards,
         index: i,
+        batch_mode: false,
         exchange: exchange_dir
             .as_ref()
             .and_then(|d| cfg.exchange_epoch.map(|e| (d.clone(), e))),
@@ -635,11 +725,13 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
             index: i,
             child: Some(spawn_child(&child_params(i, dir), false)?),
             restarts: 0,
+            tempfail_restarts: 0,
             done: false,
         });
     }
 
     let mut crash_hook = WorkerCrashHook::from_env(&cfg.worker_id);
+    let sync_delay = sync_delay_from_env();
     let mut sync_cycles = 0usize;
     let mut consecutive_sync_errors = 0usize;
     let mut post_exit_cycles = 0usize;
@@ -704,7 +796,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
                     ));
                 }
             }
-            std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)));
+            std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)) + sync_delay);
         }
     }
 
@@ -720,6 +812,257 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
                 restarts: s.restarts,
             })
             .collect(),
+        sync_cycles,
+    })
+}
+
+/// The elastic counterpart of [`run_worker`]: instead of a fixed shard
+/// range, claim the lowest claimable lease batch, run it as one child, and
+/// repeat until the whole lease board is done. One batch runs at a time —
+/// intra-machine parallelism belongs to the batch child's own `--workers`,
+/// not to racing lease claims against yourself.
+///
+/// Liveness is the *progress counter*: every sync cycle that advanced the
+/// published checkpoint re-publishes the held lease with the new counter.
+/// A worker that dies mid-batch simply stops advancing it; the coordinator
+/// notices, publishes the `.expired` re-dispatch marker, and a surviving
+/// worker re-claims the batch. The re-claimer recomputes the batch's
+/// deterministic bytes from scratch and its push waits below the cover a
+/// dead attempt already published, so every published byte stays
+/// bit-identical no matter how many attempts a batch took.
+fn run_worker_elastic(cfg: &WorkerConfig, spec: &WorkerSpec) -> Result<WorkerReport, String> {
+    let total_batches = cfg.manifest.total_batches;
+    let lease_spec = cfg.manifest.lease.as_ref().ok_or_else(|| {
+        "internal: elastic worker started from a manifest with no lease transport".to_string()
+    })?;
+    let leases = lease_spec.build().map_err(|e| format!("lease transport: {e}"))?;
+    let transport = spec.transport.build()?;
+    // Elastic children always run in local dirs mirrored outward by a push
+    // engine — never zero-copy — so a re-dispatched batch's recompute
+    // happens privately and only newline-complete deterministic bytes ever
+    // reach the transport.
+    crate::log_info!(
+        "worker {}: elastic, {} batch(es) on lease board {} via {}",
+        spec.id,
+        total_batches,
+        leases.describe(),
+        transport.describe()
+    );
+
+    let exchange_dir = match cfg.exchange_epoch {
+        Some(_) => {
+            let dir = cfg.run_dir.join("exchange");
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+            Some(dir)
+        }
+        None => None,
+    };
+    let mut exchange_pull = exchange_dir.as_ref().map(|dir| ExchangePull::new(dir));
+
+    let mut crash_hook = WorkerCrashHook::from_env(&cfg.worker_id);
+    let sync_delay = sync_delay_from_env();
+    let mut sync_cycles = 0usize;
+    let mut outcomes: Vec<ShardOutcome> = Vec::new();
+
+    'claims: loop {
+        leases.check()?;
+        let board = read_lease_board(leases.as_ref(), total_batches)?;
+        if board.iter().all(|b| b.done) {
+            break 'claims;
+        }
+        let Some(mut lease) = claim_next_batch(leases.as_ref(), &board, &cfg.worker_id)? else {
+            // Everything is held or done; poll — a straggler's lease may
+            // yet expire and come back claimable.
+            std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)) + sync_delay);
+            continue 'claims;
+        };
+        crate::log_info!(
+            "worker {}: claimed batch {} (attempt {})",
+            spec.id,
+            lease.batch,
+            lease.attempt
+        );
+
+        let dir = cfg.run_dir.join(format!("batch-{}", lease.batch));
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        transport.check()?;
+        let mut push = ShardPush::new_batch(&dir, lease.batch, transport.as_ref())?;
+        let mut exchange_push = exchange_dir
+            .as_ref()
+            .map(|d| ExchangePush::new(d, vec![lease.batch]));
+
+        let params = ChildParams {
+            program: cfg.program.clone(),
+            subcommand: cfg.subcommand.clone(),
+            passthrough: cfg.passthrough.clone(),
+            dir: dir.clone(),
+            log_path: cfg.run_dir.join(format!("batch-{}.log", lease.batch)),
+            total_shards: total_batches,
+            index: lease.batch,
+            batch_mode: true,
+            exchange: exchange_dir
+                .as_ref()
+                .and_then(|d| cfg.exchange_epoch.map(|e| (d.clone(), e))),
+            env: cfg.child_env.clone(),
+        };
+        let mut procs = vec![ShardProc {
+            index: lease.batch,
+            child: Some(spawn_child(&params, lease.attempt > 0)?),
+            restarts: 0,
+            tempfail_restarts: 0,
+            done: false,
+        }];
+        let mut consecutive_sync_errors = 0usize;
+        let mut post_exit_cycles = 0usize;
+        let mut last_sync_ok = false;
+        {
+            let guard = ReapOnDrop(&mut procs);
+            loop {
+                let s = &mut guard.0[0];
+                if !s.done {
+                    let child = s.child.as_mut().ok_or_else(|| {
+                        format!("internal: batch {} has no child to wait on", s.index)
+                    })?;
+                    match child.try_wait() {
+                        Ok(None) => {}
+                        Ok(Some(status)) if status.success() => {
+                            s.child = None;
+                            s.done = true;
+                        }
+                        Ok(Some(status)) if status.code() == Some(EXCHANGE_TIMEOUT_EXIT) => {
+                            s.child = None;
+                            if s.tempfail_restarts >= TEMPFAIL_RESTART_CAP {
+                                return Err(format!(
+                                    "batch {} is starved of exchange deltas: {} restartable \
+                                     timeout exit(s) without the peer delta appearing; see {}",
+                                    s.index,
+                                    s.tempfail_restarts,
+                                    params.log_path.display()
+                                ));
+                            }
+                            s.tempfail_restarts += 1;
+                            crate::log_warn!(
+                                "batch {} hit a restartable exchange-wait timeout; \
+                                 relaunching ({}/{} restartable exits)",
+                                s.index,
+                                s.tempfail_restarts,
+                                TEMPFAIL_RESTART_CAP
+                            );
+                            s.child = Some(spawn_child(&params, true)?);
+                        }
+                        Ok(Some(status)) => {
+                            s.child = None;
+                            if s.restarts >= cfg.max_restarts {
+                                return Err(format!(
+                                    "batch {} failed with {status} after {} restart(s); see {}",
+                                    s.index,
+                                    s.restarts,
+                                    params.log_path.display()
+                                ));
+                            }
+                            s.restarts += 1;
+                            crate::log_warn!(
+                                "batch {} exited with {status}; restarting ({}/{})",
+                                s.index,
+                                s.restarts,
+                                cfg.max_restarts
+                            );
+                            s.child = Some(spawn_child(&params, true)?);
+                        }
+                        Err(e) => return Err(format!("waiting on batch {}: {e}", s.index)),
+                    }
+                }
+                let child_done = guard.0[0].done;
+
+                // A vanished root (transport or lease board) is immediately
+                // fatal; transient sync failures retry within the budget.
+                transport.check()?;
+                leases.check()?;
+                let sync = (|| -> Result<(), String> {
+                    push.cycle(transport.as_ref())?;
+                    if let Some(xp) = exchange_push.as_mut() {
+                        xp.cycle(transport.as_ref())?;
+                    }
+                    if let Some(xl) = exchange_pull.as_mut() {
+                        xl.cycle(transport.as_ref())?;
+                    }
+                    // Heartbeat: the lease carries the monotone published
+                    // counter, never a timestamp — a worker only looks
+                    // alive while its checkpoint actually grows.
+                    if push.results_pushed() != lease.progress {
+                        lease.progress = push.results_pushed();
+                        leases.publish(&lease.rel(), &lease.to_bytes())?;
+                    }
+                    Ok(())
+                })();
+                sync_cycles += 1;
+                match sync {
+                    Ok(()) => {
+                        consecutive_sync_errors = 0;
+                        last_sync_ok = true;
+                    }
+                    Err(e) => {
+                        consecutive_sync_errors += 1;
+                        last_sync_ok = false;
+                        if consecutive_sync_errors > cfg.sync_error_budget {
+                            return Err(format!(
+                                "sync with {} failed {consecutive_sync_errors} cycle(s) in \
+                                 a row; giving up ({e})",
+                                transport.describe()
+                            ));
+                        }
+                        crate::log_warn!(
+                            "worker {}: sync cycle failed (will retry): {e}",
+                            spec.id
+                        );
+                    }
+                }
+                if let Some(hook) = crash_hook.as_mut() {
+                    hook.tick(&mut *guard.0);
+                }
+                if child_done {
+                    if last_sync_ok && push.is_complete() {
+                        break;
+                    }
+                    post_exit_cycles += 1;
+                    if post_exit_cycles > cfg.sync_error_budget {
+                        return Err(format!(
+                            "batch {} finished but never finished publishing through {} — \
+                             is the child missing its `complete` marker?",
+                            lease.batch,
+                            transport.describe()
+                        ));
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)) + sync_delay);
+            }
+        }
+        // Every byte (including `complete`) is published; mark the lease
+        // done. A batch finished late — after being expired and re-claimed
+        // elsewhere — marks done too: the bytes are identical, the merge
+        // deduplicates, and the board converges either way.
+        lease.progress = push.results_pushed();
+        lease.done = true;
+        leases.publish(&lease.rel(), &lease.to_bytes())?;
+        crate::log_info!(
+            "worker {}: batch {} complete ({} byte(s) published)",
+            spec.id,
+            lease.batch,
+            lease.progress
+        );
+        outcomes.push(ShardOutcome {
+            index: lease.batch,
+            dir,
+            log: params.log_path.clone(),
+            restarts: procs[0].restarts,
+        });
+    }
+
+    Ok(WorkerReport {
+        worker_id: spec.id.clone(),
+        shards: outcomes,
         sync_cycles,
     })
 }
@@ -743,6 +1086,12 @@ pub struct FleetConfig {
     /// with a per-worker status instead of hanging forever (workers that
     /// die stay down until their machine restarts them).
     pub stall_timeout_ms: u64,
+    /// Elastic fleets: a held lease whose progress counter has not
+    /// advanced for this long is expired (re-dispatch marker published) so
+    /// a surviving worker can re-claim the batch. Compared against the
+    /// counter in the heartbeat body — never a file mtime, which clock
+    /// skew and coarse filesystem timestamps defeat.
+    pub lease_timeout_ms: u64,
     /// Consecutive failed sync cycles tolerated before giving up.
     pub sync_error_budget: usize,
 }
@@ -756,6 +1105,7 @@ impl FleetConfig {
             run_dir: run_dir.into(),
             poll_ms: 200,
             stall_timeout_ms: 600_000,
+            lease_timeout_ms: 60_000,
             sync_error_budget: 100,
         }
     }
@@ -841,6 +1191,9 @@ pub fn launch_workers(cfg: &FleetConfig) -> Result<FleetReport, String> {
             "{} already holds merged results; pick a fresh --run-dir",
             cfg.run_dir.display()
         ));
+    }
+    if cfg.manifest.is_elastic() {
+        return launch_workers_elastic(cfg, out_rd);
     }
 
     let total = cfg.manifest.total_shards;
@@ -953,6 +1306,229 @@ pub fn launch_workers(cfg: &FleetConfig) -> Result<FleetReport, String> {
                 shards: w.shard_indices().collect(),
                 transport: transports[wi].describe(),
                 zero_copy: transports[wi].local_dir("up").is_some(),
+            })
+            .collect(),
+        merge,
+    })
+}
+
+/// The elastic counterpart of [`launch_workers`]: supervise a lease-based
+/// fleet. The coordinator spawns nothing and assigns nothing — workers
+/// claim batches off the shared lease board themselves. Its jobs are:
+///
+/// 1. **Re-dispatch stragglers.** A held lease whose progress counter
+///    stops advancing for [`FleetConfig::lease_timeout_ms`] gets its
+///    `.expired` marker published, making the batch claimable again.
+///    Liveness is judged purely on the counter in the heartbeat body —
+///    mtimes are never consulted.
+/// 2. **Mirror every attempt.** Each `up/batch-<k>` that appears on any
+///    worker's transport is tail-pulled into its own local mirror and fed
+///    to the streaming merge as it materializes. A batch re-dispatched
+///    across workers yields two mirrors with bit-identical (one possibly
+///    truncated) content; the merge deduplicates them.
+/// 3. **Relay exchange deltas** between all workers (route-all: ownership
+///    lives in leases, not manifest ranges).
+///
+/// Finalizes once every batch is done on the board and fully mirrored from
+/// at least one attempt — byte-identical to a single-process run.
+fn launch_workers_elastic(cfg: &FleetConfig, out_rd: RunDir) -> Result<FleetReport, String> {
+    let total = cfg.manifest.total_batches;
+    let lease_spec = cfg.manifest.lease.as_ref().ok_or_else(|| {
+        "internal: elastic coordinator started from a manifest with no lease transport"
+            .to_string()
+    })?;
+    let leases = lease_spec.build().map_err(|e| format!("lease transport: {e}"))?;
+    let mut transports: Vec<Box<dyn RunDirTransport>> = Vec::new();
+    for w in &cfg.manifest.workers {
+        transports.push(w.transport.build().map_err(|e| format!("worker {:?}: {e}", w.id))?);
+    }
+    crate::log_info!(
+        "launch: elastic, {} batch(es), {} worker(s), lease board {}",
+        total,
+        transports.len(),
+        leases.describe()
+    );
+
+    let mut watcher = MergeWatcher::new_dynamic(&cfg.run_dir)?;
+    let mut hub = ExchangeHub::new_route_all();
+    // One mirror per (worker, batch) attempt stream seen on a transport.
+    let mut pulls: BTreeMap<(usize, usize), ShardPull> = BTreeMap::new();
+    let mut mirror_dirs: BTreeMap<(usize, usize), PathBuf> = BTreeMap::new();
+    let mut watched: BTreeMap<(usize, usize), bool> = BTreeMap::new();
+    // Liveness per (batch, attempt): last counter value and when it last
+    // advanced (by our clock — the counter itself carries no time).
+    let mut counters: BTreeMap<(usize, usize), (u64, Instant)> = BTreeMap::new();
+    let mut board_fingerprint: Vec<(usize, bool, bool, u64)> = Vec::new();
+    let mut last_cells = usize::MAX;
+    let mut last_progress = Instant::now();
+    let mut consecutive_sync_errors = 0usize;
+    loop {
+        leases.check()?;
+        for (wi, t) in transports.iter().enumerate() {
+            t.check()
+                .map_err(|e| format!("worker {:?}: {e}", cfg.manifest.workers[wi].id))?;
+        }
+        let mut progress = false;
+
+        let sync = (|| -> Result<bool, String> {
+            let mut moved = false;
+            let board = read_lease_board(leases.as_ref(), total)?;
+            let fingerprint: Vec<(usize, bool, bool, u64)> = board
+                .iter()
+                .map(|s| {
+                    (
+                        s.attempts,
+                        s.done,
+                        s.latest_expired,
+                        s.latest.as_ref().map_or(0, |l| l.progress),
+                    )
+                })
+                .collect();
+            if fingerprint != board_fingerprint {
+                board_fingerprint = fingerprint;
+                moved = true;
+            }
+
+            // Straggler re-dispatch: expire held leases whose counter
+            // stalled for lease_timeout_ms.
+            for st in &board {
+                if st.done || st.attempts == 0 || st.latest_expired {
+                    continue;
+                }
+                let Some(l) = &st.latest else { continue };
+                let attempt = st.attempts - 1;
+                let entry = counters
+                    .entry((st.batch, attempt))
+                    .or_insert((l.progress, Instant::now()));
+                if l.progress > entry.0 {
+                    *entry = (l.progress, Instant::now());
+                } else if entry.1.elapsed() >= Duration::from_millis(cfg.lease_timeout_ms) {
+                    if expire_lease(leases.as_ref(), st.batch, attempt)? {
+                        crate::log_warn!(
+                            "launch: batch {} attempt {} (worker {:?}) stalled at {} \
+                             byte(s) for {}ms; expired for re-dispatch",
+                            st.batch,
+                            attempt,
+                            l.worker,
+                            l.progress,
+                            cfg.lease_timeout_ms
+                        );
+                        moved = true;
+                    }
+                }
+            }
+
+            // Discover new attempt streams and tail-pull every known one.
+            for (wi, t) in transports.iter().enumerate() {
+                for name in t.list_dirs("up")? {
+                    let Some(batch) = parse_up_batch_name(&name) else { continue };
+                    if batch >= total {
+                        return Err(format!(
+                            "worker {:?} publishes {name} but the manifest declares only \
+                             {total} batch(es) — its transport root belongs to a \
+                             different run",
+                            cfg.manifest.workers[wi].id
+                        ));
+                    }
+                    if !mirror_dirs.contains_key(&(wi, batch)) {
+                        let dir = cfg
+                            .run_dir
+                            .join("mirror")
+                            .join(format!("{}-batch-{batch}", cfg.manifest.workers[wi].id));
+                        pulls.insert((wi, batch), ShardPull::new_batch(&dir, batch)?);
+                        mirror_dirs.insert((wi, batch), dir);
+                        watched.insert((wi, batch), false);
+                    }
+                }
+            }
+            for (&(wi, _), pull) in pulls.iter_mut() {
+                moved |= pull.cycle(transports[wi].as_ref())?;
+            }
+            // A mirror joins the merge once it *is* a run dir (its
+            // manifest landed); a stream that died before pushing one
+            // never becomes an input.
+            for (key, seen) in watched.iter_mut() {
+                if !*seen && mirror_dirs[key].join("manifest.json").exists() {
+                    watcher.add_input(&mirror_dirs[key]);
+                    *seen = true;
+                }
+            }
+            moved |= hub.cycle(&cfg.manifest.workers, &transports)?;
+            Ok(moved)
+        })();
+        match sync {
+            Ok(p) => {
+                progress |= p;
+                consecutive_sync_errors = 0;
+            }
+            Err(e) => {
+                consecutive_sync_errors += 1;
+                if consecutive_sync_errors > cfg.sync_error_budget {
+                    return Err(format!(
+                        "worker sync failed {consecutive_sync_errors} cycle(s) in a row; \
+                         giving up ({e})"
+                    ));
+                }
+                crate::log_warn!("launch: sync cycle failed (will retry): {e}");
+            }
+        }
+
+        let status = watcher.poll()?;
+        if status.cells != last_cells {
+            last_cells = status.cells;
+            progress = true;
+            crate::log_info!("launch: {}", status.render());
+        }
+        // Done when the board says every batch finished somewhere AND at
+        // least one attempt stream of each batch is fully mirrored.
+        let board_done = !board_fingerprint.is_empty()
+            && board_fingerprint.iter().all(|&(_, done, _, _)| done);
+        if board_done
+            && (0..total).all(|batch| {
+                pulls
+                    .iter()
+                    .any(|(&(_, b), pull)| b == batch && pull.is_complete())
+            })
+        {
+            break;
+        }
+        if progress {
+            last_progress = Instant::now();
+        } else if last_progress.elapsed() >= Duration::from_millis(cfg.stall_timeout_ms) {
+            return Err(format!(
+                "no progress for {}ms waiting on the elastic fleet — are the `worker` \
+                 processes running? ({})",
+                cfg.stall_timeout_ms,
+                status.render()
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)));
+    }
+
+    let merge = watcher.finalize()?;
+    out_rd
+        .mark_complete()
+        .map_err(|e| format!("writing completion marker: {e}"))?;
+    // Attribute each batch to the worker whose (latest) attempt completed
+    // it, for the human-readable report.
+    let final_board = read_lease_board(leases.as_ref(), total)?;
+    Ok(FleetReport {
+        workers: cfg
+            .manifest
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(wi, w)| FleetWorkerSummary {
+                id: w.id.clone(),
+                shards: final_board
+                    .iter()
+                    .filter(|s| {
+                        s.done && s.latest.as_ref().is_some_and(|l| l.worker == w.id)
+                    })
+                    .map(|s| s.batch)
+                    .collect(),
+                transport: transports[wi].describe(),
+                zero_copy: false,
             })
             .collect(),
         merge,

@@ -71,6 +71,12 @@ pub struct ShardSummary {
     pub shard_index: usize,
     /// Total shard count its manifest declared.
     pub shards: usize,
+    /// Elastic lease batch index its manifest declared (0 when the input
+    /// was not batch-sliced; check `lease_batches` to distinguish batch 0).
+    pub lease_batch: usize,
+    /// Elastic lease batch count its manifest declared (0 = not
+    /// batch-sliced).
+    pub lease_batches: usize,
     /// Parseable cells it contributed.
     pub cells: usize,
 }
@@ -86,9 +92,11 @@ pub struct MergeReport {
     pub deduplicated: usize,
     /// Observations in the merged (cell-derived) skill store.
     pub skill_observations: u64,
-    /// Shard indices the inputs' manifests declare but no input covered.
-    /// Non-empty means the output holds a partial matrix (merge-then-resume
-    /// is supported, but the gap should never be silent).
+    /// Slice indices the inputs' manifests declare but no input covered:
+    /// shard indices for range-sharded inputs, lease batch indices for
+    /// elastic (batch-sliced) inputs. Non-empty means the output holds a
+    /// partial matrix (merge-then-resume is supported, but the gap should
+    /// never be silent).
     pub missing_shards: Vec<usize>,
 }
 
@@ -103,17 +111,27 @@ impl MergeReport {
             self.deduplicated
         ));
         for s in &self.inputs {
-            out.push_str(&format!(
-                "  shard {}/{}  {:<40} {} cell(s)\n",
-                s.shard_index,
-                s.shards,
-                s.dir.display(),
-                s.cells
-            ));
+            if s.lease_batches > 0 {
+                out.push_str(&format!(
+                    "  batch {}/{}  {:<40} {} cell(s)\n",
+                    s.lease_batch,
+                    s.lease_batches,
+                    s.dir.display(),
+                    s.cells
+                ));
+            } else {
+                out.push_str(&format!(
+                    "  shard {}/{}  {:<40} {} cell(s)\n",
+                    s.shard_index,
+                    s.shards,
+                    s.dir.display(),
+                    s.cells
+                ));
+            }
         }
         if !self.missing_shards.is_empty() {
             out.push_str(&format!(
-                "WARNING: shard index(es) {:?} missing — the output covers a partial \
+                "WARNING: slice index(es) {:?} missing — the output covers a partial \
                  matrix; merge the missing dirs or --resume the output to finish it\n",
                 self.missing_shards
             ));
@@ -228,6 +246,51 @@ impl MergeWatcher {
             merged: BTreeMap::new(),
             deduplicated: 0,
         })
+    }
+
+    /// Start a watcher whose inputs are discovered *while it runs* — the
+    /// elastic-fleet shape, where batch mirrors appear as leases are
+    /// claimed. Finalizing with zero inputs is an error, matching
+    /// [`MergeWatcher::new`]'s non-empty requirement.
+    pub fn new_dynamic(out: &Path) -> Result<MergeWatcher, String> {
+        let out_rd =
+            RunDir::open(out).map_err(|e| format!("opening output dir {}: {e}", out.display()))?;
+        if out_rd.has_results() {
+            return Err(format!(
+                "output dir {} already holds results; merge refuses to overwrite",
+                out.display()
+            ));
+        }
+        let out_canon = std::fs::canonicalize(out)
+            .map_err(|e| format!("resolving {}: {e}", out.display()))?;
+        Ok(MergeWatcher {
+            out: out.to_path_buf(),
+            out_canon,
+            inputs: Vec::new(),
+            base: None,
+            first_dir: out.to_path_buf(),
+            merged: BTreeMap::new(),
+            deduplicated: 0,
+        })
+    }
+
+    /// Add one more input directory to a running watcher (no-op if the
+    /// path is already an input). The next [`MergeWatcher::poll`] starts
+    /// consuming it from byte zero.
+    pub fn add_input(&mut self, dir: &Path) {
+        if self.inputs.iter().any(|i| i.dir == dir) {
+            return;
+        }
+        if self.inputs.is_empty() {
+            self.first_dir = dir.to_path_buf();
+        }
+        self.inputs.push(WatchInput {
+            dir: dir.to_path_buf(),
+            offset: 0,
+            cells: 0,
+            manifest: None,
+            checked_distinct: false,
+        });
     }
 
     /// Fold one parsed cell in, enforcing the dedup/conflict rules.
@@ -429,6 +492,8 @@ impl MergeWatcher {
                 dir: input.dir.clone(),
                 shard_index: manifest.shard_index,
                 shards: manifest.shards,
+                lease_batch: manifest.lease_batch,
+                lease_batches: manifest.lease_batches,
                 cells: input.cells,
             });
         }
@@ -540,8 +605,13 @@ impl MergeWatcher {
         let out_rd = RunDir::open(&self.out)
             .map_err(|e| format!("opening output dir {}: {e}", self.out.display()))?;
         let mut manifest = base;
+        // Placement is erased from the output: it is a whole (or partial)
+        // matrix now, not a shard or a lease batch of one. Experiment
+        // identity (exchange_epoch, exchange_adaptive, …) is kept.
         manifest.shards = 1;
         manifest.shard_index = 0;
+        manifest.lease_batches = 0;
+        manifest.lease_batch = 0;
         out_rd
             .write_manifest(&manifest)
             .map_err(|e| format!("writing merged manifest: {e}"))?;
@@ -566,14 +636,28 @@ impl MergeWatcher {
         // Coverage check: the manifests declare how many shards the matrix
         // was split into; missing indices mean a partial merge. Supported
         // (the output can be --resume'd to completion), but never silent.
-        let declared = summaries.iter().map(|s| s.shards).max().unwrap_or(1);
-        let missing_shards: Vec<usize> = (0..declared)
-            .filter(|i| !summaries.iter().any(|s| s.shard_index == *i))
-            .collect();
+        let batch_mode = summaries.iter().any(|s| s.lease_batches > 0);
+        let (declared, missing_shards) = if batch_mode {
+            // Elastic inputs: coverage is counted in lease batches, not
+            // shard ranges (elastic manifests carry placeholder ranges).
+            let declared = summaries.iter().map(|s| s.lease_batches).max().unwrap_or(1);
+            let missing: Vec<usize> = (0..declared)
+                .filter(|k| {
+                    !summaries.iter().any(|s| s.lease_batches > 0 && s.lease_batch == *k)
+                })
+                .collect();
+            (declared, missing)
+        } else {
+            let declared = summaries.iter().map(|s| s.shards).max().unwrap_or(1);
+            let missing: Vec<usize> = (0..declared)
+                .filter(|i| !summaries.iter().any(|s| s.shard_index == *i))
+                .collect();
+            (declared, missing)
+        };
         if !missing_shards.is_empty() {
             crate::log_warn!(
-                "merged {} input(s) but the manifests declare {declared} shard(s); \
-                 missing shard index(es) {missing_shards:?} — the output covers a \
+                "merged {} input(s) but the manifests declare {declared} slice(s); \
+                 missing slice index(es) {missing_shards:?} — the output covers a \
                  partial matrix",
                 summaries.len()
             );

@@ -28,8 +28,13 @@ pub use launcher::{
 };
 pub use loop_runner::{run_task, Branch, LoopConfig, RoundRecord, TaskResult};
 pub use merge::{merge_run_dirs, MergeReport, MergeWatcher, WatchStatus};
-pub use scheduler::{ExchangeOptions, Shard, SuiteOptions, DEFAULT_EXCHANGE_EPOCH};
+pub use scheduler::{
+    batch_bounds, exchange_windows, Batch, ExchangeOptions, ExchangeWaitTimeout, Shard,
+    SuiteOptions, DEFAULT_EXCHANGE_EPOCH, EXCHANGE_TIMEOUT_EXIT, EXCHANGE_TIMEOUT_PREFIX,
+};
 pub use suite_runner::{run_matrix, run_matrix_with, run_suite, run_suite_with, SuiteResult};
 pub use transport::{
-    LocalFs, MirrorDir, RunDirTransport, TransportKind, TransportSpec, WorkerManifest, WorkerSpec,
+    claim_next_batch, expire_lease, lease_expired_name, lease_name, parse_lease_name,
+    read_lease_board, BatchLeaseState, Lease, LocalFs, MirrorDir, RunDirTransport, TransportKind,
+    TransportSpec, WorkerManifest, WorkerSpec, LEASES,
 };

@@ -95,6 +95,60 @@ impl Shard {
     }
 }
 
+/// One process's contiguous batch of the cell matrix under elastic
+/// lease scheduling.
+///
+/// Batch `k` of `B` over an `n`-cell matrix owns exactly the flat
+/// (task-major) cell indices in `[k*n/B, (k+1)*n/B)` — a balanced exact
+/// disjoint cover (batch sizes differ by at most one cell), computed
+/// purely from `(k, B, n)` so placement needs no coordination. Batches
+/// are contiguous rather than round-robin like [`Shard`] so each one
+/// spans the fewest exchange windows possible: the peer-wait set at an
+/// epoch boundary is only the batches *overlapping* that window, and a
+/// batch nobody has claimed yet can never deadlock a window it owns no
+/// cells in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Batch {
+    /// This process's batch index, in `0..count`.
+    pub index: usize,
+    /// Total number of batches the matrix is cut into.
+    pub count: usize,
+}
+
+impl Batch {
+    /// Reject impossible assignments (zero batches, index out of range).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.count == 0 {
+            return Err("--batch-count must be >= 1".to_string());
+        }
+        if self.index >= self.count {
+            return Err(format!(
+                "--batch-index {} out of range for --batch-count {}",
+                self.index, self.count
+            ));
+        }
+        Ok(())
+    }
+
+    /// Half-open bounds `[lo, hi)` of this batch over an `n_cells` matrix.
+    pub fn bounds(&self, n_cells: usize) -> (usize, usize) {
+        batch_bounds(self.index, self.count, n_cells)
+    }
+
+    /// Does this batch own the cell at flat (task-major) index
+    /// `cell_index` of an `n_cells` matrix?
+    pub fn owns(&self, cell_index: usize, n_cells: usize) -> bool {
+        let (lo, hi) = self.bounds(n_cells);
+        (lo..hi).contains(&cell_index)
+    }
+}
+
+/// Half-open bounds `[lo, hi)` of batch `index` of `count` over an
+/// `n_cells` matrix: `[index*n/count, (index+1)*n/count)`.
+pub fn batch_bounds(index: usize, count: usize, n_cells: usize) -> (usize, usize) {
+    (index * n_cells / count, (index + 1) * n_cells / count)
+}
+
 /// Default epoch length (cells) when live memory exchange is enabled
 /// without an explicit `--exchange-epoch`.
 pub const DEFAULT_EXCHANGE_EPOCH: usize = 8;
@@ -118,19 +172,49 @@ pub struct ExchangeOptions {
     pub wait_timeout_ms: u64,
     /// Poll interval while waiting for peer deltas (milliseconds).
     pub poll_ms: u64,
+    /// Adaptive epoch schedule: window lengths double each epoch
+    /// (`epoch_cells`, `2*epoch_cells`, `4*epoch_cells`, …) instead of
+    /// staying fixed — eager exchange while the store is cold, amortized
+    /// barriers once it is warm. Part of the experiment identity (recorded
+    /// in the run manifest); see [`exchange_windows`].
+    pub adaptive: bool,
 }
 
 impl ExchangeOptions {
-    /// Exchange through `dir` with `epoch_cells`-cell epochs and default
-    /// wait/poll timings.
+    /// Exchange through `dir` with fixed `epoch_cells`-cell epochs and
+    /// default wait/poll timings.
     pub fn new<P: Into<PathBuf>>(dir: P, epoch_cells: usize) -> ExchangeOptions {
         ExchangeOptions {
             dir: dir.into(),
             epoch_cells,
             wait_timeout_ms: 600_000,
             poll_ms: 20,
+            adaptive: false,
         }
     }
+}
+
+/// The exchange-window cut of an `n_cells` matrix: half-open `[lo, hi)`
+/// windows over the flat task-major cell index, in epoch order. Fixed mode
+/// cuts equal `epoch_cells`-cell windows (the last may be short); adaptive
+/// mode doubles the window length each epoch. Both cuts are pure functions
+/// of `(n_cells, epoch_cells, adaptive)` — exactly the knobs the run
+/// manifest records — so every slice of a fleet derives the same schedule
+/// with no coordination, and the snapshot any cell retrieves against stays
+/// a pure function of the matrix.
+pub fn exchange_windows(n_cells: usize, epoch_cells: usize, adaptive: bool) -> Vec<(usize, usize)> {
+    let mut windows = Vec::new();
+    let mut lo = 0usize;
+    let mut len = epoch_cells.max(1);
+    while lo < n_cells {
+        let hi = lo.saturating_add(len).min(n_cells);
+        windows.push((lo, hi));
+        lo = hi;
+        if adaptive {
+            len = len.saturating_mul(2);
+        }
+    }
+    windows
 }
 
 /// Orchestration options for one suite run.
@@ -148,7 +232,11 @@ pub struct SuiteOptions {
     /// Run only this shard's slice of the cell matrix (None = all cells).
     /// Each shard must stream to its own run dir; `merge` unions them.
     pub shard: Option<Shard>,
-    /// Epoch-based live memory exchange between shards (None = off, the
+    /// Run only this contiguous batch of the cell matrix (elastic lease
+    /// scheduling; None = all cells). Mutually exclusive with `shard`.
+    /// Each batch must stream to its own run dir; `merge` unions them.
+    pub batch: Option<Batch>,
+    /// Epoch-based live memory exchange between slices (None = off, the
     /// pre-exchange behavior).
     pub exchange: Option<ExchangeOptions>,
 }
@@ -174,6 +262,13 @@ impl SuiteOptions {
     /// Restrict the run to shard `index` of `count`.
     pub fn with_shard(mut self, index: usize, count: usize) -> SuiteOptions {
         self.shard = Some(Shard { index, count });
+        self
+    }
+
+    /// Restrict the run to contiguous batch `index` of `count` (elastic
+    /// lease scheduling).
+    pub fn with_batch(mut self, index: usize, count: usize) -> SuiteOptions {
+        self.batch = Some(Batch { index, count });
         self
     }
 
@@ -206,19 +301,87 @@ fn exchange_delta_path(dir: &Path, epoch: usize, shard_index: usize) -> PathBuf 
     dir.join(exchange_delta_name(epoch, shard_index))
 }
 
+/// Stable machine-recognizable prefix of every exchange peer-wait timeout
+/// error. The launcher keys on it (via [`ExchangeWaitTimeout::matches`])
+/// to classify a failed shard as *restartable-with-cause* — the peer it
+/// waited on died, not the shard itself — instead of burning the ordinary
+/// restart budget blind.
+pub const EXCHANGE_TIMEOUT_PREFIX: &str = "exchange wait timed out";
+
+/// Process exit code a child exits with when a run fails on an exchange
+/// peer-wait timeout (BSD `EX_TEMPFAIL`): the condition is transient — the
+/// missing peer can still be restarted or its batch re-dispatched — so the
+/// supervisor treats it separately from a real failure.
+pub const EXCHANGE_TIMEOUT_EXIT: i32 = 75;
+
+/// Typed description of an exchange peer-wait timeout: exactly which peer
+/// slice's delta, for which epoch of which strategy, never appeared.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExchangeWaitTimeout {
+    /// Strategy whose exchange directory was being waited on.
+    pub strategy: String,
+    /// Epoch index of the missing delta.
+    pub epoch: usize,
+    /// Peer slice index (shard index, or batch index under elastic
+    /// scheduling) that never published.
+    pub shard: usize,
+    /// How long this slice waited, in milliseconds.
+    pub waited_ms: u64,
+    /// Path the delta was expected to appear at.
+    pub path: PathBuf,
+}
+
+impl ExchangeWaitTimeout {
+    /// Does an error string describe an exchange peer-wait timeout?
+    /// (Stable across releases: tested against [`EXCHANGE_TIMEOUT_PREFIX`].)
+    pub fn matches(msg: &str) -> bool {
+        msg.starts_with(EXCHANGE_TIMEOUT_PREFIX)
+    }
+}
+
+impl std::fmt::Display for ExchangeWaitTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{EXCHANGE_TIMEOUT_PREFIX}: no delta from peer slice {} for epoch {} of \
+             strategy {:?} after {}ms (expected at {}) — the peer died without being \
+             restarted, or the slices disagree about --shards / --batch-count / \
+             --exchange-epoch / --exchange-dir",
+            self.shard,
+            self.epoch,
+            self.strategy,
+            self.waited_ms,
+            self.path.display()
+        )
+    }
+}
+
 /// Block until a peer's exchange delta appears (writes are atomic renames,
-/// so existence implies a complete file).
-fn wait_for_exchange_file(path: &Path, ex: &ExchangeOptions) -> Result<(), String> {
-    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(ex.wait_timeout_ms);
+/// so existence implies a complete file). On timeout the error names the
+/// exact missing delta — strategy, epoch, peer slice — behind the stable
+/// [`EXCHANGE_TIMEOUT_PREFIX`].
+fn wait_for_exchange_file(
+    path: &Path,
+    ex: &ExchangeOptions,
+    strategy: &str,
+    epoch: usize,
+    peer: usize,
+) -> Result<(), String> {
+    // Measured with `elapsed() >= timeout`, not a precomputed
+    // `Instant + Duration` deadline: the addition panics on overflow for
+    // very large `wait_timeout_ms` values.
+    let start = std::time::Instant::now();
+    let timeout = std::time::Duration::from_millis(ex.wait_timeout_ms);
     while !path.exists() {
-        if std::time::Instant::now() >= deadline {
-            return Err(format!(
-                "timed out after {}ms waiting for exchange delta {} — a peer shard died \
-                 without being restarted, or the shards disagree about --shards / \
-                 --exchange-epoch / --exchange-dir",
-                ex.wait_timeout_ms,
-                path.display()
-            ));
+        if start.elapsed() >= timeout {
+            return Err(ExchangeWaitTimeout {
+                strategy: strategy.to_string(),
+                epoch,
+                shard: peer,
+                waited_ms: ex.wait_timeout_ms,
+                path: path.to_path_buf(),
+            }
+            .to_string());
         }
         std::thread::sleep(std::time::Duration::from_millis(ex.poll_ms.max(1)));
     }
@@ -302,12 +465,26 @@ pub fn run_strategy(
     if let Some(s) = &opts.shard {
         s.validate()?;
     }
+    if let Some(b) = &opts.batch {
+        b.validate()?;
+    }
+    if opts.shard.is_some() && opts.batch.is_some() {
+        return Err(
+            "--shards/--shard-index and --batch-index/--batch-count are mutually \
+             exclusive slicing modes"
+                .to_string(),
+        );
+    }
     if let Some(ex) = &opts.exchange {
         if ex.epoch_cells == 0 {
             return Err("--exchange-epoch must be >= 1".to_string());
         }
     }
-    let owns = |ci: usize| opts.shard.map_or(true, |s| s.owns(ci));
+    let n_cells = cells.len();
+    let owns = |ci: usize| match opts.batch {
+        Some(b) => b.owns(ci, n_cells),
+        None => opts.shard.map_or(true, |s| s.owns(ci)),
+    };
 
     // ---- checkpoint directory ------------------------------------------
     let run_dir = match &opts.run_dir {
@@ -340,6 +517,9 @@ pub fn run_strategy(
         shards: opts.shard.map_or(1, |s| s.count),
         shard_index: opts.shard.map_or(0, |s| s.index),
         exchange_epoch: opts.exchange.as_ref().map_or(0, |ex| ex.epoch_cells),
+        exchange_adaptive: opts.exchange.as_ref().is_some_and(|ex| ex.adaptive),
+        lease_batches: opts.batch.map_or(0, |b| b.count),
+        lease_batch: opts.batch.map_or(0, |b| b.index),
         device: cfg.dev.name.to_string(),
     };
     let mut restored: std::collections::BTreeMap<usize, TaskResult> = Default::default();
@@ -478,12 +658,32 @@ pub fn run_strategy(
     // index; without exchange the whole matrix is a single window, which
     // preserves the pre-exchange scheduler's behavior (and bytes) exactly.
     let shard = opts.shard.unwrap_or(Shard { index: 0, count: 1 });
-    let epoch_len = opts
+    // The slice index deltas are published under (and crash markers named
+    // by): the shard index, or the batch index under elastic scheduling.
+    let slice_index = opts.batch.map_or(shard.index, |b| b.index);
+    let (epoch_len, adaptive) = opts
         .exchange
         .as_ref()
-        .map_or(cells.len().max(1), |ex| ex.epoch_cells);
-    // (Not `div_ceil`: the crate's MSRV predates its stabilization.)
-    let n_windows = (cells.len() + epoch_len - 1) / epoch_len;
+        .map_or((cells.len().max(1), false), |ex| {
+            (ex.epoch_cells, ex.adaptive)
+        });
+    let windows = exchange_windows(cells.len(), epoch_len, adaptive);
+    // The peer slices whose deltas gate a window: every slice owning cells
+    // in it. Round-robin shards overlap every window (all peers — the
+    // pre-elastic behavior, bit for bit); contiguous batches overlap few,
+    // so a batch nobody claimed yet can never deadlock a window it has no
+    // cells in.
+    let window_peers = |lo: usize, hi: usize| -> Vec<usize> {
+        match opts.batch {
+            None => (0..shard.count).collect(),
+            Some(b) => (0..b.count)
+                .filter(|&k| {
+                    let (blo, bhi) = batch_bounds(k, b.count, n_cells);
+                    blo < hi && bhi > lo
+                })
+                .collect(),
+        }
+    };
     let exchange_dir = match &opts.exchange {
         Some(ex) => {
             let dir = ex.dir.join(strategy_slug(strategy.name));
@@ -507,14 +707,12 @@ pub fn run_strategy(
     // never block on peers they no longer need.
     let mut folded_through = 0usize;
 
-    let mut crash_hook = CrashHook::from_env(shard.index);
+    let mut crash_hook = CrashHook::from_env(slice_index);
     let mut budget = opts.stop_after.map(|s| s.saturating_sub(restored.len()));
     let mut all_fresh: std::collections::BTreeMap<usize, TaskResult> = Default::default();
     let mut sink_err: Option<String> = None;
 
-    for w in 0..n_windows {
-        let lo = w * epoch_len;
-        let hi = ((w + 1) * epoch_len).min(cells.len());
+    for (w, &(lo, hi)) in windows.iter().enumerate() {
 
         // This shard's unfinished cells in the window, budget-capped.
         let mut pending: Vec<usize> = (lo..hi)
@@ -539,9 +737,10 @@ pub fn run_strategy(
                 // rather than of timing.
                 while folded_through < w {
                     let mut folded = (*working).clone();
-                    for peer in 0..shard.count {
+                    let (flo, fhi) = windows[folded_through];
+                    for peer in window_peers(flo, fhi) {
                         let path = exchange_delta_path(dir, folded_through, peer);
-                        wait_for_exchange_file(&path, ex)?;
+                        wait_for_exchange_file(&path, ex, strategy.name, folded_through, peer)?;
                         folded.merge_store(&SkillStore::load(&path)?);
                     }
                     working = Arc::new(folded);
@@ -620,7 +819,10 @@ pub fn run_strategy(
             let complete = own
                 .iter()
                 .all(|ci| restored.contains_key(ci) || all_fresh.contains_key(ci));
-            if complete {
+            // Batches skip windows they own no cells in — no peer waits on
+            // them there (see `window_peers`). Shards publish even empty
+            // windows: every shard gates every window in round-robin mode.
+            if complete && (opts.batch.is_none() || !own.is_empty()) {
                 let delta = SkillStore::from_observations(own.iter().flat_map(|ci| {
                     restored
                         .get(ci)
@@ -629,7 +831,7 @@ pub fn run_strategy(
                         .unwrap_or(&[])
                         .iter()
                 }));
-                write_exchange_delta(&exchange_delta_path(dir, w, shard.index), &delta)?;
+                write_exchange_delta(&exchange_delta_path(dir, w, slice_index), &delta)?;
             }
         }
         if truncated {
@@ -739,6 +941,134 @@ mod tests {
             }
             assert_eq!(seen, 6, "{count} shards must exactly cover the matrix");
         }
+    }
+
+    #[test]
+    fn exchange_windows_fixed_and_adaptive_schedules() {
+        assert_eq!(exchange_windows(5, 2, false), vec![(0, 2), (2, 4), (4, 5)]);
+        assert_eq!(exchange_windows(0, 2, false), Vec::<(usize, usize)>::new());
+        assert_eq!(
+            exchange_windows(20, 2, true),
+            vec![(0, 2), (2, 6), (6, 14), (14, 20)],
+            "adaptive windows double: 2, 4, 8, then clipped"
+        );
+        // Degenerate epoch length is clamped rather than looping forever.
+        assert_eq!(exchange_windows(3, 0, false), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn batch_bounds_are_a_balanced_exact_cover() {
+        for n in [0usize, 1, 5, 17] {
+            for count in [1usize, 2, 3, 7] {
+                let mut seen = 0usize;
+                let mut prev_hi = 0usize;
+                for k in 0..count {
+                    let (lo, hi) = batch_bounds(k, count, n);
+                    assert_eq!(lo, prev_hi, "batches must tile contiguously");
+                    assert!(hi >= lo);
+                    assert!(hi - lo <= n / count + 1, "balanced to within one cell");
+                    seen += hi - lo;
+                    prev_hi = hi;
+                }
+                assert_eq!(seen, n, "{count} batches must exactly cover {n} cells");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_runs_only_its_slice_and_batches_union_to_the_full_run() {
+        let tasks = slice(3);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        let seeds = [0u64, 1];
+        let full = run_strategy(&tasks, &strat, &cfg, &seeds, 4, &SuiteOptions::default()).unwrap();
+        assert_eq!(full.len(), 6);
+
+        for count in [2usize, 4] {
+            let mut seen = 0usize;
+            for index in 0..count {
+                let opts = SuiteOptions::default().with_batch(index, count);
+                let part = run_strategy(&tasks, &strat, &cfg, &seeds, 4, &opts).unwrap();
+                let (lo, hi) = batch_bounds(index, count, 6);
+                assert_eq!(part.len(), hi - lo, "batch {index}/{count}");
+                for (r, ci) in part.iter().zip(lo..hi) {
+                    assert_eq!(r.task_id, full[ci].task_id, "batch {index}/{count}");
+                    assert_eq!(r.best_speedup, full[ci].best_speedup, "batch {index}/{count}");
+                    assert_eq!(r.rounds, full[ci].rounds, "batch {index}/{count}");
+                }
+                seen += part.len();
+            }
+            assert_eq!(seen, 6, "{count} batches must exactly cover the matrix");
+        }
+    }
+
+    #[test]
+    fn batch_and_shard_slicing_are_mutually_exclusive() {
+        let tasks = slice(1);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        let opts = SuiteOptions::default().with_shard(0, 2).with_batch(0, 2);
+        let err = run_strategy(&tasks, &strat, &cfg, &[0], 1, &opts).unwrap_err();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        let bad = SuiteOptions::default().with_batch(3, 2);
+        assert!(run_strategy(&tasks, &strat, &cfg, &[0], 1, &bad).is_err());
+    }
+
+    #[test]
+    fn exchange_timeout_error_names_the_missing_peer_delta() {
+        // Batch 1 of 2 needs batch 0's window-0 delta before its own cells;
+        // nobody ever publishes it, so the wait must fail with the typed,
+        // prefix-stable error naming (strategy, epoch, slice).
+        let dir = tmp_dir("ex-timeout");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = slice(2);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        let mut opts = SuiteOptions::default().with_batch(1, 2);
+        opts.exchange = Some(ExchangeOptions {
+            dir: dir.clone(),
+            epoch_cells: 1,
+            wait_timeout_ms: 60,
+            poll_ms: 5,
+            adaptive: false,
+        });
+        let err = run_strategy(&tasks, &strat, &cfg, &[0, 1], 2, &opts).unwrap_err();
+        assert!(ExchangeWaitTimeout::matches(&err), "{err}");
+        assert!(err.contains("epoch 0") && err.contains("peer slice 0"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn batches_with_exchange_match_the_single_process_bytes() {
+        // Two batches exchanging through a shared dir, run to completion in
+        // dependency order (batch 0 first publishes the windows batch 1
+        // waits on): the union must match the unsliced run exactly.
+        let dir = tmp_dir("batch-ex");
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = slice(2);
+        let strat = baselines::kernelskill();
+        let cfg = LoopConfig::default();
+        let seeds = [0u64, 1];
+        // The reference uses the same exchange schedule (the snapshot a
+        // cell sees is a function of the matrix AND the epoch cut).
+        let mut full_opts = SuiteOptions::default();
+        full_opts.exchange = Some(ExchangeOptions::new(dir.join("ex-ref"), 2));
+        let full = run_strategy(&tasks, &strat, &cfg, &seeds, 4, &full_opts).unwrap();
+
+        let mut parts = Vec::new();
+        for index in 0..2 {
+            let mut opts = SuiteOptions::default().with_batch(index, 2);
+            opts.exchange = Some(ExchangeOptions::new(dir.join("ex"), 2));
+            parts.push(run_strategy(&tasks, &strat, &cfg, &seeds, 4, &opts).unwrap());
+        }
+        let merged: Vec<_> = parts.into_iter().flatten().collect();
+        assert_eq!(merged.len(), full.len());
+        for (a, b) in full.iter().zip(&merged) {
+            assert_eq!(a.task_id, b.task_id);
+            assert_eq!(a.best_speedup, b.best_speedup, "{}", a.task_id);
+            assert_eq!(a.rounds, b.rounds, "{}", a.task_id);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

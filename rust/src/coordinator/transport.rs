@@ -15,10 +15,18 @@
 //!     observe a partially transferred file. An interrupted transfer leaves
 //!     only staging debris that `list`/`fetch` ignore.
 //!   * **Checkpoints are published at newline boundaries only.** The push
-//!     engine ([`ShardPush`]) publishes `results.jsonl` up to its last
-//!     newline, so the pulled mirror can only ever end at a complete line —
-//!     exactly the torn-tail contract `MergeWatcher` already enforces for
-//!     local concurrent appends.
+//!     engine ([`ShardPush`]) publishes `results.jsonl` growth as
+//!     append-only *segment files* cut at its last newline
+//!     (`results.seg-<offset>.jsonl`, each an immutable slice starting at
+//!     the byte offset its name encodes), so the pulled mirror can only
+//!     ever end at a complete line — exactly the torn-tail contract
+//!     `MergeWatcher` already enforces for local concurrent appends — and
+//!     each growth step moves only the new bytes (whole-file republish per
+//!     step was O(n²) traffic at object-store scale).
+//!   * **First publish wins.** [`RunDirTransport::publish_excl`] is the
+//!     claim primitive under elastic lease scheduling: of any number of
+//!     racing publishers of one path, exactly one succeeds and the rest
+//!     observe the loss — never a torn or last-writer-wins file.
 //!   * **`complete` is published last**, after every byte it vouches for,
 //!     and the pull engine ([`ShardPull`]) re-reads the checkpoint *after*
 //!     observing the marker — so a mirror carrying `complete` is guaranteed
@@ -31,20 +39,33 @@
 //! with staged atomic writes — the stand-in for S3/GCS/rsync, fully
 //! testable in CI without a network).
 //!
-//! The worker fleet is described by a [`WorkerManifest`] (`--manifest`):
-//! worker ids, the contiguous shard range each runs, and each worker's
-//! transport. Validation is strict — duplicate ids, overlapping or gapped
-//! shard ranges, and unknown transport kinds are refused before anything
-//! spawns.
+//! The worker fleet is described by a [`WorkerManifest`] (`--manifest`),
+//! in one of two shapes. **Static**: worker ids, the contiguous shard
+//! range each runs, and each worker's transport; validation is strict —
+//! duplicate ids, overlapping or gapped shard ranges, and unknown
+//! transport kinds are refused before anything spawns. **Elastic**
+//! (`"lease"` + `"total_batches"` instead of ranges): nobody is assigned
+//! anything up front — the matrix is cut into contiguous cell batches and
+//! workers *claim* them at run time by atomically publishing lease files
+//! on a lease transport every machine shares (see [`Lease`]), so a
+//! heterogeneous fleet finishes together instead of waiting on its
+//! slowest member.
 //!
-//! On-transport layout under each worker's root:
+//! On-transport layout under each worker's root (elastic runs use
+//! `up/batch-<k>/` run-dir mirrors instead of `up/shard-<i>/`, and the
+//! shared lease root additionally holds `leases/`):
 //!
 //! ```text
 //! <root>/
 //!   up/shard-<i>/...              worker -> coordinator: mirror of shard i's run dir
-//!   up/exchange/<slug>/<delta>    worker -> coordinator: its own shards' epoch deltas
+//!   up/batch-<k>/...              (elastic) mirror of claimed batch k's run dir
+//!   up/<dir>/results.seg-<o>.jsonl  immutable checkpoint segment starting at byte <o>
+//!   up/exchange/<slug>/<delta>    worker -> coordinator: its own slices' epoch deltas
 //!   down/exchange/<slug>/<delta>  coordinator -> worker: every peer's epoch deltas
 //!   .staging/                     atomic-publish scratch (never read)
+//! <lease root>/                   (elastic; shared by the whole fleet)
+//!   leases/batch-<k>.attempt-<a>.json     claim + progress heartbeat for one attempt
+//!   leases/batch-<k>.attempt-<a>.expired  coordinator re-dispatch marker
 //! ```
 //!
 //! The byte-determinism consequence — worker placement and sync timing
@@ -74,6 +95,34 @@ const SKILLS: &str = "skills.json";
 /// Relative transport directory a worker publishes shard `i`'s run dir to.
 pub fn up_shard_rel(shard_index: usize) -> String {
     format!("up/shard-{shard_index}")
+}
+
+/// Relative transport directory an elastic worker publishes claimed batch
+/// `k`'s run dir to.
+pub fn up_batch_rel(batch: usize) -> String {
+    format!("up/batch-{batch}")
+}
+
+/// Batch index encoded in an elastic `up/` mirror directory name
+/// (`batch-<k>`), if it is one.
+pub fn parse_up_batch_name(name: &str) -> Option<usize> {
+    name.strip_prefix("batch-")?.parse().ok()
+}
+
+/// Name of the immutable checkpoint segment starting at byte `start` of
+/// `results.jsonl`. Zero-padded so lexicographic listing order is offset
+/// order.
+pub fn segment_name(start: u64) -> String {
+    format!("results.seg-{start:020}.jsonl")
+}
+
+/// Start offset encoded in a checkpoint segment file name, if it is one.
+pub fn parse_segment_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("results.seg-")?.strip_suffix(".jsonl")?;
+    if digits.len() != 20 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
 }
 
 /// Relative transport directory a worker publishes its own exchange deltas
@@ -168,6 +217,13 @@ pub trait RunDirTransport {
     /// reader observes either the previous contents or all of `bytes` —
     /// never a partial transfer.
     fn publish(&self, rel: &str, bytes: &[u8]) -> Result<(), String>;
+
+    /// Atomically publish `bytes` at `rel` **only if nothing is published
+    /// there yet**: of any number of racing callers (across processes and
+    /// machines sharing the root), exactly one returns `Ok(true)` and the
+    /// rest `Ok(false)` with the winner's bytes untouched. This is the
+    /// claim primitive elastic lease scheduling is built on.
+    fn publish_excl(&self, rel: &str, bytes: &[u8]) -> Result<bool, String>;
 
     /// Sorted names of the files directly under `rel` (staging and other
     /// dot-entries excluded); empty when the directory is absent.
@@ -270,6 +326,34 @@ impl FsCore {
         std::fs::write(&tmp, bytes).map_err(|e| format!("staging {}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, &target)
             .map_err(|e| format!("publishing {}: {e}", target.display()))
+    }
+
+    /// First-publish-wins. `rename` would silently replace an existing
+    /// file, so the staged bytes are `hard_link`ed into place instead —
+    /// link creation fails with `AlreadyExists` when the target is taken,
+    /// which is exactly the atomic lose-the-race signal a claim needs.
+    fn publish_excl(&self, rel: &str, bytes: &[u8]) -> Result<bool, String> {
+        let target = rel_path(&self.root, rel)?;
+        if let Some(parent) = target.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+        }
+        let staging_dir = self.root.join(".staging");
+        std::fs::create_dir_all(&staging_dir)
+            .map_err(|e| format!("creating {}: {e}", staging_dir.display()))?;
+        let seq = PUBLISH_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = staging_dir.join(format!("excl-{}-{seq}", std::process::id()));
+        std::fs::write(&tmp, bytes).map_err(|e| format!("staging {}: {e}", tmp.display()))?;
+        let won = match std::fs::hard_link(&tmp, &target) {
+            Ok(()) => true,
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => false,
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(format!("claiming {}: {e}", target.display()));
+            }
+        };
+        let _ = std::fs::remove_file(&tmp);
+        Ok(won)
     }
 
     fn list_entries(&self, rel: &str, dirs: bool) -> Result<Vec<String>, String> {
@@ -377,6 +461,9 @@ impl RunDirTransport for LocalFs {
     fn publish(&self, rel: &str, bytes: &[u8]) -> Result<(), String> {
         self.core.publish(rel, bytes, None)
     }
+    fn publish_excl(&self, rel: &str, bytes: &[u8]) -> Result<bool, String> {
+        self.core.publish_excl(rel, bytes)
+    }
     fn list(&self, rel: &str) -> Result<Vec<String>, String> {
         self.core.list_entries(rel, false)
     }
@@ -445,6 +532,9 @@ impl RunDirTransport for MirrorDir {
     }
     fn publish(&self, rel: &str, bytes: &[u8]) -> Result<(), String> {
         self.core.publish(rel, bytes, self.fault.as_ref())
+    }
+    fn publish_excl(&self, rel: &str, bytes: &[u8]) -> Result<bool, String> {
+        self.core.publish_excl(rel, bytes)
     }
     fn list(&self, rel: &str) -> Result<Vec<String>, String> {
         self.core.list_entries(rel, false)
@@ -525,21 +615,32 @@ impl WorkerSpec {
     }
 }
 
-/// The fleet description `launch --manifest <file>` and `worker` read: the
-/// total shard count plus one [`WorkerSpec`] per machine. Parsing
+/// The fleet description `launch --manifest <file>` and `worker` read, in
+/// one of two shapes. **Static**: a total shard count plus one
+/// [`WorkerSpec`] per machine with a contiguous shard range; parsing
 /// validates the whole document — the ranges must be an exact, disjoint
 /// cover of `0..total_shards` and the ids unique — so a bad manifest is a
-/// clean error before any process spawns.
+/// clean error before any process spawns. **Elastic**: a total *batch*
+/// count plus a fleet-shared lease transport; workers carry no ranges and
+/// claim batches dynamically through [`Lease`] files.
 #[derive(Debug, Clone)]
 pub struct WorkerManifest {
-    /// Total number of shards the matrix is split into, fleet-wide.
+    /// Static mode: total number of shards the matrix is split into,
+    /// fleet-wide. Zero in elastic mode.
     pub total_shards: usize,
+    /// Elastic mode: number of contiguous cell batches the matrix is cut
+    /// into for lease claiming. Zero in static mode.
+    pub total_batches: usize,
+    /// Elastic mode: the lease transport every machine (workers and the
+    /// coordinator) shares — where claims, heartbeats, and re-dispatch
+    /// markers live. `None` in static mode.
+    pub lease: Option<TransportSpec>,
     /// The workers, in file order.
     pub workers: Vec<WorkerSpec>,
 }
 
 impl WorkerManifest {
-    /// Parse and validate a manifest document. The format:
+    /// Parse and validate a manifest document. The static format:
     ///
     /// ```json
     /// {"version": 1, "total_shards": 2, "workers": [
@@ -549,6 +650,18 @@ impl WorkerManifest {
     ///    "transport": {"kind": "local-fs", "root": "/mnt/shared/w1"}}
     /// ]}
     /// ```
+    ///
+    /// and the elastic format (no ranges anywhere; `lease` is the shared
+    /// claim root):
+    ///
+    /// ```json
+    /// {"version": 1, "total_batches": 6,
+    ///  "lease": {"kind": "mirror-dir", "root": "/srv/ks/leases"},
+    ///  "workers": [
+    ///   {"id": "w0", "transport": {"kind": "mirror-dir", "root": "/srv/ks/w0"}},
+    ///   {"id": "w1", "transport": {"kind": "mirror-dir", "root": "/srv/ks/w1"}}
+    /// ]}
+    /// ```
     pub fn parse(text: &str) -> Result<WorkerManifest, String> {
         let j = Json::parse(text).map_err(|e| format!("worker manifest: {e}"))?;
         if let Some(v) = j.get("version").and_then(|v| v.as_f64()) {
@@ -556,10 +669,45 @@ impl WorkerManifest {
                 return Err(format!("worker manifest: unsupported version {v}"));
             }
         }
-        let total_shards = j
-            .get("total_shards")
-            .and_then(|v| v.as_usize())
-            .ok_or("worker manifest: missing total_shards")?;
+        let parse_transport = |t: &Json, what: &str| -> Result<TransportSpec, String> {
+            let kind = TransportKind::parse(
+                t.get("kind")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("worker manifest: {what}: missing kind"))?,
+            )
+            .map_err(|e| format!("worker manifest: {what}: {e}"))?;
+            let root = t
+                .get("root")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("worker manifest: {what}: missing root"))?;
+            if root.is_empty() {
+                return Err(format!("worker manifest: {what}: empty root"));
+            }
+            Ok(TransportSpec {
+                kind,
+                root: PathBuf::from(root),
+            })
+        };
+        let lease = j
+            .get("lease")
+            .map(|t| parse_transport(t, "lease transport"))
+            .transpose()?;
+        let elastic = lease.is_some();
+        let total_batches = j.get("total_batches").and_then(|v| v.as_usize());
+        let total_shards = j.get("total_shards").and_then(|v| v.as_usize());
+        if elastic && total_shards.is_some() {
+            return Err(
+                "worker manifest: an elastic manifest (with a lease transport) takes \
+                 total_batches, not total_shards"
+                    .to_string(),
+            );
+        }
+        if !elastic && total_batches.is_some() {
+            return Err(
+                "worker manifest: total_batches requires a lease transport (elastic mode)"
+                    .to_string(),
+            );
+        }
         let workers_json = j
             .get("workers")
             .and_then(|v| v.as_arr())
@@ -572,43 +720,40 @@ impl WorkerManifest {
                 .and_then(|v| v.as_str())
                 .ok_or_else(|| at("id"))?
                 .to_string();
-            let shard_lo = w
-                .get("shard_lo")
-                .and_then(|v| v.as_usize())
-                .ok_or_else(|| at("shard_lo"))?;
-            let shard_hi = w
-                .get("shard_hi")
-                .and_then(|v| v.as_usize())
-                .ok_or_else(|| at("shard_hi"))?;
+            let (shard_lo, shard_hi) = if elastic {
+                if w.get("shard_lo").is_some() || w.get("shard_hi").is_some() {
+                    return Err(format!(
+                        "worker manifest entry {i} ({id}): elastic workers claim batches \
+                         through leases and must not declare shard ranges"
+                    ));
+                }
+                (0, 0)
+            } else {
+                (
+                    w.get("shard_lo")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| at("shard_lo"))?,
+                    w.get("shard_hi")
+                        .and_then(|v| v.as_usize())
+                        .ok_or_else(|| at("shard_hi"))?,
+                )
+            };
             let t = w.get("transport").ok_or_else(|| at("transport"))?;
-            let kind = TransportKind::parse(
-                t.get("kind")
-                    .and_then(|v| v.as_str())
-                    .ok_or_else(|| at("transport.kind"))?,
-            )
-            .map_err(|e| format!("worker manifest entry {i}: {e}"))?;
-            let root = t
-                .get("root")
-                .and_then(|v| v.as_str())
-                .ok_or_else(|| at("transport.root"))?;
+            let transport = parse_transport(t, &format!("entry {i} transport"))?;
             if id.is_empty() {
                 return Err(format!("worker manifest entry {i}: empty id"));
-            }
-            if root.is_empty() {
-                return Err(format!("worker manifest entry {i} ({id}): empty transport root"));
             }
             workers.push(WorkerSpec {
                 id,
                 shard_lo,
                 shard_hi,
-                transport: TransportSpec {
-                    kind,
-                    root: PathBuf::from(root),
-                },
+                transport,
             });
         }
         let m = WorkerManifest {
-            total_shards,
+            total_shards: total_shards.unwrap_or(0),
+            total_batches: total_batches.unwrap_or(0),
+            lease,
             workers,
         };
         m.validate()?;
@@ -622,22 +767,38 @@ impl WorkerManifest {
         WorkerManifest::parse(&text)
     }
 
+    /// Elastic manifests carry a shared lease transport and a batch count
+    /// instead of per-worker shard ranges.
+    pub fn is_elastic(&self) -> bool {
+        self.lease.is_some()
+    }
+
     /// The structural rules: at least one worker, unique non-empty ids,
-    /// well-formed ranges, and shard coverage that is exact (no gaps) and
-    /// disjoint (no overlaps).
+    /// and — in static mode — well-formed ranges with shard coverage that
+    /// is exact (no gaps) and disjoint (no overlaps); in elastic mode a
+    /// batch count of at least one (coverage is dynamic by construction).
     pub fn validate(&self) -> Result<(), String> {
-        if self.total_shards == 0 {
+        if self.is_elastic() {
+            if self.total_batches == 0 {
+                return Err("worker manifest: total_batches must be >= 1".to_string());
+            }
+        } else if self.total_shards == 0 {
             return Err("worker manifest: total_shards must be >= 1".to_string());
         }
         if self.workers.is_empty() {
             return Err("worker manifest: needs at least one worker".to_string());
         }
-        let mut owners: Vec<Vec<&str>> = vec![Vec::new(); self.total_shards];
         let mut seen_ids: BTreeSet<&str> = BTreeSet::new();
         for w in &self.workers {
             if !seen_ids.insert(&w.id) {
                 return Err(format!("worker manifest: duplicate worker id {:?}", w.id));
             }
+        }
+        if self.is_elastic() {
+            return Ok(());
+        }
+        let mut owners: Vec<Vec<&str>> = vec![Vec::new(); self.total_shards];
+        for w in &self.workers {
             if w.shard_lo > w.shard_hi {
                 return Err(format!(
                     "worker manifest: worker {:?} has shard_lo {} > shard_hi {}",
@@ -694,13 +855,285 @@ impl WorkerManifest {
 }
 
 // ------------------------------------------------------------------------
+// Elastic lease scheduling: claims, heartbeats, expiry, re-dispatch
+// ------------------------------------------------------------------------
+
+/// Relative directory on the lease transport holding claims, heartbeats,
+/// and re-dispatch markers.
+pub const LEASES: &str = "leases";
+
+/// Name of the lease file for attempt `attempt` at batch `batch`
+/// (`batch-<k>.attempt-<a>.json`). One file per *attempt*, not per worker:
+/// claim exclusivity is the file system's first-link-wins on this exact
+/// name, and the attempt history doubles as the re-dispatch audit trail
+/// (the holder's id lives in the lease body).
+pub fn lease_name(batch: usize, attempt: usize) -> String {
+    format!("batch-{batch}.attempt-{attempt}.json")
+}
+
+/// Name of the coordinator's re-dispatch marker for one attempt: once
+/// published, the attempt is dead to the fleet and the batch is claimable
+/// at the next attempt number.
+pub fn lease_expired_name(batch: usize, attempt: usize) -> String {
+    format!("batch-{batch}.attempt-{attempt}.expired")
+}
+
+/// `(batch, attempt, is_expired_marker)` encoded in a lease-directory file
+/// name, if it is one.
+pub fn parse_lease_name(name: &str) -> Option<(usize, usize, bool)> {
+    let rest = name.strip_prefix("batch-")?;
+    let (batch, rest) = rest.split_once(".attempt-")?;
+    let (attempt, expired) = match rest.strip_suffix(".json") {
+        Some(a) => (a, false),
+        None => (rest.strip_suffix(".expired")?, true),
+    };
+    Some((batch.parse().ok()?, attempt.parse().ok()?, expired))
+}
+
+/// One attempt's claim-plus-heartbeat record, stored as the lease file's
+/// body. The holder republishes it (plain overwrite — it owns the claim)
+/// whenever `progress` advances, and once more with `done` after its whole
+/// batch (including the `complete` marker) is pushed.
+///
+/// `progress` is a *counter* — the newline-terminated byte length of the
+/// holder's local checkpoint — never a wall-clock timestamp: the
+/// coordinator declares an attempt dead when the counter stops advancing
+/// across its own expiry budget, so clock skew between machines (which
+/// made mtime-based liveness judgments wrong by construction) cannot
+/// expire a healthy straggler or keep a dead one alive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lease {
+    /// The claimed batch index.
+    pub batch: usize,
+    /// Attempt number at this batch (0 = first claim, +1 per re-dispatch).
+    pub attempt: usize,
+    /// Id of the worker holding the attempt.
+    pub worker: String,
+    /// Newline-terminated byte length of the holder's local checkpoint for
+    /// this batch — the liveness counter.
+    pub progress: u64,
+    /// The holder finished the batch and published its `complete` marker.
+    pub done: bool,
+}
+
+impl Lease {
+    /// Transport-relative path of this attempt's lease file.
+    pub fn rel(&self) -> String {
+        format!("{LEASES}/{}", lease_name(self.batch, self.attempt))
+    }
+
+    /// Serialize to the lease file body.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        use crate::util::json as uj;
+        format!(
+            "{}\n",
+            uj::obj(vec![
+                ("version", uj::num(1.0)),
+                ("batch", uj::num(self.batch as f64)),
+                ("attempt", uj::num(self.attempt as f64)),
+                ("worker", uj::s(&self.worker)),
+                ("progress", uj::s(&self.progress.to_string())),
+                ("done", Json::Bool(self.done)),
+            ])
+        )
+        .into_bytes()
+    }
+
+    /// Parse a lease file body. Publishes are atomic, so a body that does
+    /// not parse is foreign junk in the lease root — a loud error, never
+    /// a silently ignored claim.
+    pub fn parse(bytes: &[u8]) -> Result<Lease, String> {
+        let text = std::str::from_utf8(bytes).map_err(|e| format!("lease not utf-8: {e}"))?;
+        let j = Json::parse(text).map_err(|e| format!("lease does not parse: {e}"))?;
+        let get_n = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("lease missing {k}"))
+        };
+        let progress = match j.get("progress") {
+            Some(Json::Str(s)) => s
+                .parse::<u64>()
+                .map_err(|e| format!("lease bad progress: {e}"))?,
+            Some(Json::Num(n)) => *n as u64,
+            _ => return Err("lease missing progress".to_string()),
+        };
+        Ok(Lease {
+            batch: get_n("batch")?,
+            attempt: get_n("attempt")?,
+            worker: j
+                .get("worker")
+                .and_then(|v| v.as_str())
+                .ok_or("lease missing worker")?
+                .to_string(),
+            progress,
+            done: matches!(j.get("done"), Some(Json::Bool(true))),
+        })
+    }
+}
+
+/// One batch's aggregated lease state, as read off the lease transport.
+#[derive(Debug, Clone)]
+pub struct BatchLeaseState {
+    /// The batch index.
+    pub batch: usize,
+    /// Number of attempt files observed (attempt numbers are contiguous
+    /// from 0, so this is also the next attempt number).
+    pub attempts: usize,
+    /// Parsed body of the latest attempt's lease, when one exists.
+    pub latest: Option<Lease>,
+    /// The latest attempt carries the coordinator's re-dispatch marker.
+    pub latest_expired: bool,
+    /// Some attempt (not necessarily the latest — a straggler may finish
+    /// *after* being expired and re-dispatched) reported `done`.
+    pub done: bool,
+}
+
+impl BatchLeaseState {
+    /// A worker may claim this batch now: never claimed, or the latest
+    /// attempt was expired by the coordinator — and nobody finished it yet.
+    pub fn claimable(&self) -> bool {
+        !self.done && (self.attempts == 0 || self.latest_expired)
+    }
+}
+
+/// Read the whole lease board for `total_batches` batches off the lease
+/// transport. Every attempt's body is fetched and parsed, so `done` is
+/// exact even when a re-dispatched straggler finished late.
+pub fn read_lease_board(
+    transport: &dyn RunDirTransport,
+    total_batches: usize,
+) -> Result<Vec<BatchLeaseState>, String> {
+    let mut attempts: BTreeMap<usize, usize> = BTreeMap::new(); // batch -> max attempt
+    let mut expired: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut names: Vec<(usize, usize)> = Vec::new();
+    for name in transport.list(LEASES)? {
+        let Some((batch, attempt, is_expired)) = parse_lease_name(&name) else {
+            continue;
+        };
+        if batch >= total_batches {
+            return Err(format!(
+                "lease root {} holds a lease for batch {batch} but the manifest declares \
+                 only {total_batches} batch(es) — it belongs to a different run; refusing \
+                 to schedule over it",
+                transport.describe()
+            ));
+        }
+        if is_expired {
+            expired.insert((batch, attempt));
+        } else {
+            let slot = attempts.entry(batch).or_insert(0);
+            *slot = (*slot).max(attempt + 1);
+            names.push((batch, attempt));
+        }
+    }
+    let mut done: BTreeSet<usize> = BTreeSet::new();
+    let mut latest: BTreeMap<usize, Lease> = BTreeMap::new();
+    for (batch, attempt) in names {
+        let rel = format!("{LEASES}/{}", lease_name(batch, attempt));
+        let Some(bytes) = transport.fetch(&rel)? else {
+            // Listed a moment ago; a lease file is never deleted, so this
+            // is a vanished-root class failure surfaced by check() soon.
+            continue;
+        };
+        let lease = Lease::parse(&bytes).map_err(|e| format!("lease {rel}: {e}"))?;
+        if lease.done {
+            done.insert(batch);
+        }
+        if attempt + 1 == attempts.get(&batch).copied().unwrap_or(0) {
+            latest.insert(batch, lease);
+        }
+    }
+    Ok((0..total_batches)
+        .map(|batch| {
+            let n = attempts.get(&batch).copied().unwrap_or(0);
+            BatchLeaseState {
+                batch,
+                attempts: n,
+                latest: latest.get(&batch).cloned(),
+                latest_expired: n > 0 && expired.contains(&(batch, n - 1)),
+                done: done.contains(&batch),
+            }
+        })
+        .collect())
+}
+
+/// Try to claim the lowest claimable batch on the board for `worker`.
+/// Returns the won lease, or `None` when nothing is claimable right now
+/// (all batches held or done) or every race was lost this round (the
+/// caller re-reads the board and tries again).
+pub fn claim_next_batch(
+    transport: &dyn RunDirTransport,
+    board: &[BatchLeaseState],
+    worker: &str,
+) -> Result<Option<Lease>, String> {
+    for state in board.iter().filter(|s| s.claimable()) {
+        let lease = Lease {
+            batch: state.batch,
+            attempt: state.attempts,
+            worker: worker.to_string(),
+            progress: 0,
+            done: false,
+        };
+        if transport.publish_excl(&lease.rel(), &lease.to_bytes())? {
+            return Ok(Some(lease));
+        }
+    }
+    Ok(None)
+}
+
+/// Publish the coordinator's re-dispatch marker for one attempt
+/// (idempotent — first publish wins and the marker body is constant).
+pub fn expire_lease(
+    transport: &dyn RunDirTransport,
+    batch: usize,
+    attempt: usize,
+) -> Result<bool, String> {
+    transport.publish_excl(
+        &format!("{LEASES}/{}", lease_expired_name(batch, attempt)),
+        b"expired\n",
+    )
+}
+
+// ------------------------------------------------------------------------
 // Worker-side sync engines (push own artifacts up, pull peers' deltas down)
 // ------------------------------------------------------------------------
 
-/// Publishes one local shard run dir through a transport, incrementally:
-/// the manifest once it exists, `results.jsonl` at newline boundaries as
-/// it grows, `skills.json` and warm-start snapshots whenever their bytes
-/// change, and the `complete` marker strictly last.
+/// Contiguous covered length of the checkpoint segment tiling under `rel`
+/// on a transport. Segments must tile from byte 0 with no gap or overlap;
+/// anything else means the root was written by a different run (or a
+/// transfer protocol this version does not speak) and is a loud error,
+/// never a silent overwrite.
+fn segment_cover(transport: &dyn RunDirTransport, rel: &str) -> Result<u64, String> {
+    let mut segs: Vec<(u64, u64)> = Vec::new();
+    for name in transport.list(rel)? {
+        if let Some(start) = parse_segment_name(&name) {
+            let len = transport
+                .len(&format!("{rel}/{name}"))?
+                .ok_or_else(|| format!("segment {rel}/{name} vanished while being listed"))?;
+            segs.push((start, len));
+        }
+    }
+    segs.sort_unstable();
+    let mut covered = 0u64;
+    for (start, len) in segs {
+        if start != covered {
+            return Err(format!(
+                "checkpoint segments under {rel} on {} do not tile contiguously (next \
+                 segment starts at byte {start}, covered so far {covered}) — the \
+                 transport root belongs to a different run; refusing to publish over it",
+                transport.describe()
+            ));
+        }
+        covered += len;
+    }
+    Ok(covered)
+}
+
+/// Publishes one local shard (or elastic batch) run dir through a
+/// transport, incrementally: the manifest once it exists, `results.jsonl`
+/// growth as immutable newline-boundary segment files, `skills.json` and
+/// warm-start snapshots whenever their bytes change, and the `complete`
+/// marker strictly last.
 #[derive(Debug)]
 pub struct ShardPush {
     dir: PathBuf,
@@ -714,44 +1147,72 @@ pub struct ShardPush {
     manifest_pushed: bool,
     complete_pushed: bool,
     skills_last: Option<Vec<u8>>,
-    skills_stat: Option<(u64, std::time::SystemTime)>,
     snapshots_last: BTreeMap<String, Vec<u8>>,
-    snapshots_stat: BTreeMap<String, (u64, std::time::SystemTime)>,
-}
-
-/// (len, mtime) of a file, when both are available — the cheap
-/// has-it-changed probe the push engine uses to skip re-reading unchanged
-/// stores and snapshots. `None` (no mtime support) degrades to re-reading.
-fn file_stat(path: &Path) -> Option<(u64, std::time::SystemTime)> {
-    let meta = std::fs::metadata(path).ok()?;
-    Some((meta.len(), meta.modified().ok()?))
+    /// Elastic batches only: tolerate a published cover ahead of the local
+    /// checkpoint (a re-dispatched attempt recomputing identical bytes)
+    /// instead of treating it as a stale root.
+    catch_up: bool,
 }
 
 impl ShardPush {
     /// Start pushing local run dir `dir` as global shard `shard_index`.
     /// Picks up where a previous (crashed) worker process left off: the
-    /// already-published checkpoint prefix is read back from the transport,
-    /// and a transport that holds *more* than the local checkpoint is a
-    /// clean error (a stale or foreign root, never silently overwritten).
+    /// already-published checkpoint cover is read back off the transport's
+    /// segment tiling, and a transport that holds *more* than the local
+    /// checkpoint is a clean error (a stale or foreign root, never
+    /// silently overwritten).
     pub fn new(
         dir: &Path,
         shard_index: usize,
         transport: &dyn RunDirTransport,
     ) -> Result<ShardPush, String> {
-        let rel = up_shard_rel(shard_index);
-        let remote = transport.len(&format!("{rel}/{RESULTS}"))?.unwrap_or(0);
+        ShardPush::with_rel(dir, up_shard_rel(shard_index), transport)
+    }
+
+    /// Start pushing local run dir `dir` as elastic batch `batch`. Unlike
+    /// the static constructor, a transport that holds *more* checkpoint
+    /// bytes than the local dir is not an error: a re-dispatched batch
+    /// recomputes the same (deterministic) bytes from scratch, and the
+    /// push simply waits for the local checkpoint to catch up to the cover
+    /// a previous attempt already published.
+    pub fn new_batch(
+        dir: &Path,
+        batch: usize,
+        transport: &dyn RunDirTransport,
+    ) -> Result<ShardPush, String> {
+        let mut push = ShardPush::with_rel(dir, up_batch_rel(batch), transport)?;
+        push.catch_up = true;
+        Ok(push)
+    }
+
+    fn with_rel(dir: &Path, rel: String, transport: &dyn RunDirTransport) -> Result<ShardPush, String> {
+        // A whole-file checkpoint on the transport was published by the
+        // pre-segment protocol; mixing layouts would double-count bytes.
+        if transport.len(&format!("{rel}/{RESULTS}"))?.is_some() {
+            return Err(format!(
+                "{} holds a whole-file {RESULTS} under {rel}, published by an older \
+                 (pre-segment) version of this tool; refusing to mix checkpoint layouts",
+                transport.describe()
+            ));
+        }
+        let covered = segment_cover(transport, &rel)?;
         Ok(ShardPush {
             dir: dir.to_path_buf(),
             rel,
-            results_pushed: remote,
+            results_pushed: covered,
             results_seen_len: None,
             manifest_pushed: false,
             complete_pushed: false,
             skills_last: None,
-            skills_stat: None,
             snapshots_last: BTreeMap::new(),
-            snapshots_stat: BTreeMap::new(),
+            catch_up: false,
         })
+    }
+
+    /// Newline-terminated bytes of the local checkpoint published so far —
+    /// the monotone progress counter elastic lease heartbeats carry.
+    pub fn results_pushed(&self) -> u64 {
+        self.results_pushed
     }
 
     /// Every artifact (including `complete`) has been published.
@@ -797,7 +1258,13 @@ impl ShardPush {
                 let bytes = std::fs::read(&results)
                     .map_err(|e| format!("reading {}: {e}", results.display()))?;
                 let prefix = newline_prefix(&bytes);
-                if (prefix as u64) < self.results_pushed {
+                if (prefix as u64) < self.results_pushed && (!self.catch_up || local_complete) {
+                    // For a static shard this is a stale/foreign root. For
+                    // an elastic batch mid-recompute it is the expected
+                    // catch-up state — unless the batch claims to be
+                    // *finished* while still short of the published cover,
+                    // which can only mean the root holds someone else's
+                    // bytes.
                     return Err(format!(
                         "{} already holds {} byte(s) but the local checkpoint has only {} \
                          newline-terminated byte(s) — the transport root belongs to a \
@@ -808,7 +1275,13 @@ impl ShardPush {
                     ));
                 }
                 if (prefix as u64) > self.results_pushed {
-                    transport.publish(&format!("{}/{RESULTS}", self.rel), &bytes[..prefix])?;
+                    // Only the new bytes travel: an immutable segment named
+                    // by its start offset, so each growth step is O(delta)
+                    // and the whole file is never re-pushed.
+                    transport.publish(
+                        &format!("{}/{}", self.rel, segment_name(self.results_pushed)),
+                        &bytes[self.results_pushed as usize..prefix],
+                    )?;
                     self.results_pushed = prefix as u64;
                     progress = true;
                 }
@@ -824,22 +1297,20 @@ impl ShardPush {
             ));
         }
 
-        // Stores and snapshots are small but rewritten rarely: skip the
-        // read while (len, mtime) is unchanged. A positive completion probe
-        // forces one final read, so the published bytes always end at the
-        // files' final state even on filesystems with coarse timestamps.
+        // Stores and snapshots are small but rewritten rarely: read every
+        // cycle and byte-compare against the last published content. No
+        // (len, mtime) shortcut — two same-length writes landing within
+        // the filesystem's timestamp granularity are indistinguishable to
+        // an mtime probe, and a delta silently skipped mid-run corrupts
+        // every peer folding it. The files are a few KB; correctness wins.
         let skills = self.dir.join(SKILLS);
         if skills.exists() {
-            let stat = file_stat(&skills);
-            if local_complete || stat.is_none() || stat != self.skills_stat {
-                let bytes = std::fs::read(&skills)
-                    .map_err(|e| format!("reading {}: {e}", skills.display()))?;
-                if self.skills_last.as_deref() != Some(bytes.as_slice()) {
-                    transport.publish(&format!("{}/{SKILLS}", self.rel), &bytes)?;
-                    self.skills_last = Some(bytes);
-                    progress = true;
-                }
-                self.skills_stat = stat;
+            let bytes =
+                std::fs::read(&skills).map_err(|e| format!("reading {}: {e}", skills.display()))?;
+            if self.skills_last.as_deref() != Some(bytes.as_slice()) {
+                transport.publish(&format!("{}/{SKILLS}", self.rel), &bytes)?;
+                self.skills_last = Some(bytes);
+                progress = true;
             }
         }
 
@@ -851,20 +1322,12 @@ impl ShardPush {
             if !(name.starts_with("memory_snapshot.") && name.ends_with(".json")) {
                 continue;
             }
-            let stat = file_stat(&entry.path());
-            if !local_complete && stat.is_some() && stat == self.snapshots_stat.get(&name).copied()
-            {
-                continue;
-            }
             let bytes = std::fs::read(entry.path())
                 .map_err(|e| format!("reading {}: {e}", entry.path().display()))?;
             if self.snapshots_last.get(&name).map(|b| b.as_slice()) != Some(bytes.as_slice()) {
                 transport.publish(&format!("{}/{name}", self.rel), &bytes)?;
-                self.snapshots_last.insert(name.clone(), bytes);
+                self.snapshots_last.insert(name, bytes);
                 progress = true;
-            }
-            if let Some(st) = stat {
-                self.snapshots_stat.insert(name, st);
             }
         }
 
@@ -1030,13 +1493,22 @@ impl ShardPull {
     /// (created; resuming a coordinator restarts the tail at the mirror's
     /// current length).
     pub fn new(mirror: &Path, shard_index: usize) -> Result<ShardPull, String> {
+        ShardPull::with_rel(mirror, up_shard_rel(shard_index))
+    }
+
+    /// Mirror elastic batch `batch` into local directory `mirror`.
+    pub fn new_batch(mirror: &Path, batch: usize) -> Result<ShardPull, String> {
+        ShardPull::with_rel(mirror, up_batch_rel(batch))
+    }
+
+    fn with_rel(mirror: &Path, rel: String) -> Result<ShardPull, String> {
         std::fs::create_dir_all(mirror)
             .map_err(|e| format!("creating mirror {}: {e}", mirror.display()))?;
         let results_offset = std::fs::metadata(mirror.join(RESULTS))
             .map(|m| m.len())
             .unwrap_or(0);
         Ok(ShardPull {
-            rel: up_shard_rel(shard_index),
+            rel,
             mirror: mirror.to_path_buf(),
             results_offset,
             manifest_done: mirror.join(MANIFEST).exists(),
@@ -1048,6 +1520,34 @@ impl ShardPull {
     /// is installed).
     pub fn is_complete(&self) -> bool {
         self.complete_done
+    }
+
+    /// Bytes beyond `results_offset` of the published segment covering it,
+    /// for an offset that is not at a tile boundary (an earlier append was
+    /// interrupted). `None` when the offset sits at a boundary — the
+    /// exact-name fetch already covers that case.
+    fn resume_mid_segment(
+        &self,
+        transport: &dyn RunDirTransport,
+    ) -> Result<Option<Vec<u8>>, String> {
+        let mut best: Option<u64> = None;
+        for name in transport.list(&self.rel)? {
+            if let Some(start) = parse_segment_name(&name) {
+                if start < self.results_offset && best.map_or(true, |b| start > b) {
+                    best = Some(start);
+                }
+            }
+        }
+        let Some(start) = best else { return Ok(None) };
+        let Some(bytes) = transport.fetch(&format!("{}/{}", self.rel, segment_name(start)))?
+        else {
+            return Ok(None);
+        };
+        let skip = (self.results_offset - start) as usize;
+        if skip >= bytes.len() {
+            return Ok(None);
+        }
+        Ok(Some(bytes[skip..].to_vec()))
     }
 
     /// One pull cycle; returns whether anything new landed in the mirror.
@@ -1070,22 +1570,42 @@ impl ShardPull {
         let remote_complete = transport
             .len(&format!("{}/{}", self.rel, RunDir::COMPLETE_MARKER))?
             .is_some();
-        if let Some(bytes) =
-            transport.fetch_from(&format!("{}/{RESULTS}", self.rel), self.results_offset)?
-        {
-            if !bytes.is_empty() {
-                use std::io::Write;
-                let path = self.mirror.join(RESULTS);
-                let mut f = std::fs::OpenOptions::new()
-                    .create(true)
-                    .append(true)
-                    .open(&path)
-                    .map_err(|e| format!("appending {}: {e}", path.display()))?;
-                f.write_all(&bytes)
-                    .map_err(|e| format!("appending {}: {e}", path.display()))?;
-                self.results_offset += bytes.len() as u64;
-                progress = true;
+        // Consume checkpoint segments in tiling order: because segments
+        // tile contiguously from byte 0 and are named by their start
+        // offset, the mirror's current length *is* the name of the next
+        // consumable segment — drain until it is absent. (After a positive
+        // completion probe above, every segment is already published, so
+        // this same cycle drains the mirror to the final byte.)
+        loop {
+            let seg = format!("{}/{}", self.rel, segment_name(self.results_offset));
+            let bytes = match transport.fetch(&seg)? {
+                Some(b) => b,
+                // A pull interrupted mid-append leaves the mirror *inside*
+                // a tile rather than at a boundary, where the exact-name
+                // fetch would miss forever; resume from the covering
+                // segment's suffix instead.
+                None => match self.resume_mid_segment(transport)? {
+                    Some(b) => b,
+                    None => break,
+                },
+            };
+            if bytes.is_empty() {
+                return Err(format!(
+                    "checkpoint segment {seg} is empty — a zero-length tile can never \
+                     advance the mirror; the transport root is corrupt"
+                ));
             }
+            use std::io::Write;
+            let path = self.mirror.join(RESULTS);
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .map_err(|e| format!("appending {}: {e}", path.display()))?;
+            f.write_all(&bytes)
+                .map_err(|e| format!("appending {}: {e}", path.display()))?;
+            self.results_offset += bytes.len() as u64;
+            progress = true;
         }
         if remote_complete && self.manifest_done {
             if let Some(bytes) = transport.fetch(&format!("{}/{SKILLS}", self.rel))? {
@@ -1115,6 +1635,7 @@ impl ShardPull {
 #[derive(Debug, Default)]
 pub struct ExchangeHub {
     forwarded: BTreeSet<(usize, String, String)>,
+    route_all: bool,
 }
 
 impl ExchangeHub {
@@ -1122,6 +1643,19 @@ impl ExchangeHub {
     /// identical bytes, which is harmless).
     pub fn new() -> ExchangeHub {
         ExchangeHub::default()
+    }
+
+    /// A hub for elastic fleets: slice ownership is dynamic (leases, not
+    /// manifest ranges), so every delta under a worker's `up/exchange` is
+    /// relayed to every other worker regardless of the manifest's
+    /// placeholder ranges. A batch re-dispatched across workers can
+    /// surface its delta from two sources; deltas are deterministic, so
+    /// the duplicate relay publishes byte-identical content.
+    pub fn new_route_all() -> ExchangeHub {
+        ExchangeHub {
+            forwarded: BTreeSet::new(),
+            route_all: true,
+        }
     }
 
     /// One relay cycle over the whole fleet; returns whether anything was
@@ -1140,10 +1674,11 @@ impl ExchangeHub {
                     let Some((_, shard)) = parse_exchange_delta_name(&name) else {
                         continue;
                     };
-                    if !spec.owns(shard) {
+                    if !self.route_all && !spec.owns(shard) {
                         // Shared-root fleets see peers' deltas in each
                         // other's listings; each delta is relayed once, by
-                        // its owner's row.
+                        // its owner's row. (Elastic hubs route everything —
+                        // ownership lives in leases, not the manifest.)
                         continue;
                     }
                     let key = (src, slug.clone(), name.clone());
@@ -1340,32 +1875,120 @@ mod tests {
         assert!(push.cycle(&t).unwrap());
         assert_eq!(t.fetch("up/shard-0/manifest.json").unwrap().unwrap(), b"{\"m\":1}\n");
         assert_eq!(
-            t.fetch("up/shard-0/results.jsonl").unwrap().unwrap(),
+            t.fetch(&format!("up/shard-0/{}", segment_name(0))).unwrap().unwrap(),
             b"line-one\nline-two\n",
             "only the newline-terminated prefix may be published"
+        );
+        assert!(
+            t.fetch("up/shard-0/results.jsonl").unwrap().is_none(),
+            "the checkpoint is never published whole-file"
         );
         assert!(!push.is_complete());
         assert!(!push.cycle(&t).unwrap(), "no growth, nothing to publish");
 
-        // Completing the torn line and marking complete publishes the rest,
-        // with the marker observable only after the data.
+        // Completing the torn line and marking complete publishes the rest
+        // as a *second* immutable segment (only the new bytes travel), with
+        // the marker observable only after the data.
         std::fs::write(local.join(RESULTS), b"line-one\nline-two\ntorn-tail-done\n").unwrap();
         std::fs::write(local.join(SKILLS), b"{\"s\":1}\n").unwrap();
         std::fs::write(local.join(RunDir::COMPLETE_MARKER), b"complete\n").unwrap();
         assert!(push.cycle(&t).unwrap());
         assert!(push.is_complete());
         assert_eq!(
-            t.fetch("up/shard-0/results.jsonl").unwrap().unwrap(),
-            b"line-one\nline-two\ntorn-tail-done\n"
+            t.fetch(&format!("up/shard-0/{}", segment_name(18))).unwrap().unwrap(),
+            b"torn-tail-done\n"
         );
+        assert_eq!(push.results_pushed(), 33);
         assert!(t.len("up/shard-0/complete").unwrap().is_some());
+        assert!(
+            t.fetch("up/shard-0/results.jsonl").unwrap().is_none(),
+            "still no whole-file checkpoint after completion"
+        );
 
         // A fresh push over a transport that is *ahead* of the local
         // checkpoint refuses to publish (stale/foreign root).
         std::fs::write(local.join(RESULTS), b"line-one\n").unwrap();
         let mut stale = ShardPush::new(&local, 0, &t).unwrap();
+        assert_eq!(stale.results_pushed(), 33, "resumes from the segment cover");
         let err = stale.cycle(&t).unwrap_err();
         assert!(err.contains("different"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn push_refuses_pre_segment_whole_file_roots_and_gapped_tilings() {
+        let root = tmp_dir("push-layout");
+        let _ = std::fs::remove_dir_all(&root);
+        let local = root.join("local");
+        std::fs::create_dir_all(&local).unwrap();
+        let t = MirrorDir::new(&root.join("remote")).unwrap();
+        t.publish("up/shard-0/results.jsonl", b"old\n").unwrap();
+        let err = ShardPush::new(&local, 0, &t).unwrap_err();
+        assert!(err.contains("pre-segment"), "{err}");
+
+        let t2 = MirrorDir::new(&root.join("remote2")).unwrap();
+        t2.publish(&format!("up/shard-0/{}", segment_name(7)), b"gapped\n").unwrap();
+        let err = ShardPush::new(&local, 0, &t2).unwrap_err();
+        assert!(err.contains("tile contiguously"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn push_detects_same_length_rewrite_without_mtime() {
+        // Two same-length skills.json writes inside the filesystem's mtime
+        // granularity: the old (len, mtime) probe skipped the second one —
+        // byte comparison must publish it.
+        let root = tmp_dir("push-rewrite");
+        let _ = std::fs::remove_dir_all(&root);
+        let local = root.join("local");
+        std::fs::create_dir_all(&local).unwrap();
+        let t = MirrorDir::new(&root.join("remote")).unwrap();
+        let mut push = ShardPush::new(&local, 0, &t).unwrap();
+        std::fs::write(local.join(SKILLS), b"{\"v\":1}\n").unwrap();
+        assert!(push.cycle(&t).unwrap());
+        std::fs::write(local.join(SKILLS), b"{\"v\":2}\n").unwrap();
+        assert!(push.cycle(&t).unwrap(), "same-length rewrite must be detected");
+        assert_eq!(t.fetch("up/shard-0/skills.json").unwrap().unwrap(), b"{\"v\":2}\n");
+        assert!(!push.cycle(&t).unwrap(), "unchanged bytes are not re-published");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn batch_push_waits_for_local_catch_up_after_redispatch() {
+        // A re-dispatched batch recomputes deterministic bytes from scratch:
+        // until the local checkpoint reaches the cover a dead attempt
+        // already published, the push must idle (no error, no publish) —
+        // then resume publishing exactly past the cover. A *static* shard
+        // in the same state stays a loud stale-root error.
+        let root = tmp_dir("push-catchup");
+        let _ = std::fs::remove_dir_all(&root);
+        let local = root.join("local");
+        std::fs::create_dir_all(&local).unwrap();
+        let t = MirrorDir::new(&root.join("remote")).unwrap();
+        t.publish(&format!("up/batch-3/{}", segment_name(0)), b"a 1\nbb 2\n").unwrap();
+
+        let mut push = ShardPush::new_batch(&local, 3, &t).unwrap();
+        assert_eq!(push.results_pushed(), 9);
+        std::fs::write(local.join(RESULTS), b"a 1\n").unwrap();
+        assert!(!push.cycle(&t).unwrap(), "behind the cover: nothing to publish yet");
+        assert_eq!(push.results_pushed(), 9);
+        std::fs::write(local.join(RESULTS), b"a 1\nbb 2\nccc 3\n").unwrap();
+        assert!(push.cycle(&t).unwrap());
+        assert_eq!(push.results_pushed(), 15);
+        assert_eq!(
+            t.fetch(&format!("up/batch-3/{}", segment_name(9))).unwrap().unwrap(),
+            b"ccc 3\n"
+        );
+
+        // Claiming to be complete while still short of the cover is a
+        // foreign-root error even for a batch.
+        let local2 = root.join("local2");
+        std::fs::create_dir_all(&local2).unwrap();
+        std::fs::write(local2.join(RESULTS), b"a 1\n").unwrap();
+        std::fs::write(local2.join(RunDir::COMPLETE_MARKER), b"complete\n").unwrap();
+        let mut short = ShardPush::new_batch(&local2, 3, &t).unwrap();
+        let err = short.cycle(&t).unwrap_err();
+        assert!(err.contains("refusing to publish over it"), "{err}");
         let _ = std::fs::remove_dir_all(&root);
     }
 
@@ -1379,12 +2002,12 @@ mod tests {
 
         assert!(!pull.cycle(&t).unwrap(), "nothing remote yet");
         t.publish("up/shard-3/manifest.json", b"{\"m\":1}\n").unwrap();
-        t.publish("up/shard-3/results.jsonl", b"one\n").unwrap();
+        t.publish(&format!("up/shard-3/{}", segment_name(0)), b"one\n").unwrap();
         assert!(pull.cycle(&t).unwrap());
         assert_eq!(std::fs::read(mirror.join(RESULTS)).unwrap(), b"one\n");
         assert!(!pull.is_complete());
 
-        t.publish("up/shard-3/results.jsonl", b"one\ntwo\n").unwrap();
+        t.publish(&format!("up/shard-3/{}", segment_name(4)), b"two\n").unwrap();
         t.publish("up/shard-3/skills.json", b"{\"s\":1}\n").unwrap();
         t.publish("up/shard-3/complete", b"complete\n").unwrap();
         assert!(pull.cycle(&t).unwrap());
@@ -1396,6 +2019,25 @@ mod tests {
         // A restarted coordinator resumes the tail where the mirror ends.
         let resumed = ShardPull::new(&mirror, 3).unwrap();
         assert!(resumed.is_complete());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn pull_resumes_mid_segment_after_interrupted_append() {
+        // A coordinator killed halfway through appending a segment leaves
+        // the mirror inside a tile; the next cycle must append only the
+        // covering segment's suffix, not stall or duplicate bytes.
+        let root = tmp_dir("pull-mid");
+        let _ = std::fs::remove_dir_all(&root);
+        let t = MirrorDir::new(&root.join("remote")).unwrap();
+        t.publish(&format!("up/shard-0/{}", segment_name(0)), b"alpha\nbeta\n").unwrap();
+        let mirror = root.join("mirror");
+        std::fs::create_dir_all(&mirror).unwrap();
+        std::fs::write(mirror.join(RESULTS), b"alph").unwrap();
+        let mut pull = ShardPull::new(&mirror, 0).unwrap();
+        assert!(pull.cycle(&t).unwrap());
+        assert_eq!(std::fs::read(mirror.join(RESULTS)).unwrap(), b"alpha\nbeta\n");
+        assert!(!pull.cycle(&t).unwrap(), "caught up");
         let _ = std::fs::remove_dir_all(&root);
     }
 
@@ -1463,6 +2105,220 @@ mod tests {
             delta
         );
         assert!(!pull.cycle(transports[1].as_ref()).unwrap(), "installed once");
+
+        // A route-all hub (elastic mode) ignores the manifest ranges: b's
+        // installed copy of a's delta is relayed from b's row too — the
+        // bytes are identical, so the duplicate is invisible.
+        let mut hub_all = ExchangeHub::new_route_all();
+        assert!(hub_all.cycle(&specs, &transports).unwrap());
+        assert_eq!(
+            transports[0].list("down/exchange/kernelskill").unwrap(),
+            vec!["epoch-0.shard-0.json".to_string()],
+            "route-all relays regardless of manifest ownership"
+        );
         let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn segment_batch_and_lease_names_roundtrip() {
+        assert_eq!(parse_segment_name(&segment_name(0)), Some(0));
+        assert_eq!(parse_segment_name(&segment_name(123456)), Some(123456));
+        assert_eq!(parse_segment_name("results.jsonl"), None);
+        assert_eq!(parse_segment_name("results.seg-12.jsonl"), None, "unpadded");
+        assert_eq!(parse_up_batch_name("batch-7"), Some(7));
+        assert_eq!(parse_up_batch_name("shard-7"), None);
+        assert_eq!(parse_lease_name(&lease_name(3, 1)), Some((3, 1, false)));
+        assert_eq!(parse_lease_name(&lease_expired_name(3, 1)), Some((3, 1, true)));
+        assert_eq!(parse_lease_name("batch-3.json"), None);
+        assert_eq!(parse_lease_name("junk"), None);
+    }
+
+    #[test]
+    fn publish_excl_first_wins_under_race() {
+        let root = tmp_dir("excl");
+        let _ = std::fs::remove_dir_all(&root);
+        let t = MirrorDir::new(&root).unwrap();
+        assert!(t.publish_excl("leases/x.json", b"first\n").unwrap());
+        assert!(!t.publish_excl("leases/x.json", b"second\n").unwrap());
+        assert_eq!(t.fetch("leases/x.json").unwrap().unwrap(), b"first\n");
+
+        // Many threads race one path: exactly one wins.
+        let wins = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let t = MirrorDir::new(&root).unwrap();
+                    if t.publish_excl("leases/raced.json", b"claim\n").unwrap() {
+                        wins.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(wins.load(Ordering::SeqCst), 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn lease_roundtrip_and_parse_errors() {
+        let lease = Lease {
+            batch: 4,
+            attempt: 2,
+            worker: "w1".to_string(),
+            progress: 9876543210,
+            done: false,
+        };
+        let parsed = Lease::parse(&lease.to_bytes()).unwrap();
+        assert_eq!(parsed, lease);
+        assert_eq!(lease.rel(), "leases/batch-4.attempt-2.json");
+        assert!(Lease::parse(b"not json").is_err());
+        assert!(Lease::parse(b"{\"batch\":1}").is_err());
+    }
+
+    #[test]
+    fn lease_board_claim_expire_redispatch_lifecycle() {
+        let root = tmp_dir("lease-life");
+        let _ = std::fs::remove_dir_all(&root);
+        let t = MirrorDir::new(&root).unwrap();
+
+        // Fresh board: everything claimable, lowest batch claimed first.
+        let board = read_lease_board(&t, 3).unwrap();
+        assert!(board.iter().all(|b| b.claimable()));
+        let lease = claim_next_batch(&t, &board, "w0").unwrap().unwrap();
+        assert_eq!((lease.batch, lease.attempt), (0, 0));
+
+        // Re-read: batch 0 held (not claimable), 1 and 2 still open.
+        let board = read_lease_board(&t, 3).unwrap();
+        assert!(!board[0].claimable());
+        assert_eq!(board[0].latest.as_ref().unwrap().worker, "w0");
+        let lease1 = claim_next_batch(&t, &board, "w1").unwrap().unwrap();
+        assert_eq!((lease1.batch, lease1.attempt), (1, 0));
+
+        // Heartbeat: the holder overwrites its own lease with progress.
+        let mut hb = lease.clone();
+        hb.progress = 42;
+        t.publish(&hb.rel(), &hb.to_bytes()).unwrap();
+        let board = read_lease_board(&t, 3).unwrap();
+        assert_eq!(board[0].latest.as_ref().unwrap().progress, 42);
+
+        // Coordinator expires attempt 0 of batch 0: claimable again, and
+        // the re-claim gets attempt 1 — the audit trail of the re-dispatch.
+        assert!(expire_lease(&t, 0, 0).unwrap());
+        assert!(!expire_lease(&t, 0, 0).unwrap(), "expiry marker is idempotent");
+        let board = read_lease_board(&t, 3).unwrap();
+        assert!(board[0].claimable());
+        let re = claim_next_batch(&t, &board, "w1").unwrap().unwrap();
+        assert_eq!((re.batch, re.attempt), (0, 1));
+
+        // The expired-then-recovered straggler finishes late: its done on
+        // attempt 0 still marks the batch done (duplicate execution merges
+        // bit-identically downstream).
+        let mut done0 = hb.clone();
+        done0.done = true;
+        t.publish(&done0.rel(), &done0.to_bytes()).unwrap();
+        let board = read_lease_board(&t, 3).unwrap();
+        assert!(board[0].done);
+        assert!(!board[0].claimable(), "done batches are never re-claimed");
+
+        // A lease for a batch beyond the declared count is a foreign root.
+        let stray = Lease {
+            batch: 9,
+            attempt: 0,
+            worker: "w9".to_string(),
+            progress: 0,
+            done: false,
+        };
+        t.publish(&stray.rel(), &stray.to_bytes()).unwrap();
+        let err = read_lease_board(&t, 3).unwrap_err();
+        assert!(err.contains("different run"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn racing_claimants_partition_the_board_exactly() {
+        // N workers hammer claim_next_batch over one shared lease root:
+        // every batch ends up claimed by exactly one attempt-0 lease.
+        let root = tmp_dir("lease-race");
+        let _ = std::fs::remove_dir_all(&root);
+        let total = 12usize;
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let root = &root;
+                s.spawn(move || {
+                    let t = MirrorDir::new(root).unwrap();
+                    let me = format!("w{w}");
+                    loop {
+                        let board = read_lease_board(&t, total).unwrap();
+                        if board.iter().all(|b| !b.claimable()) {
+                            break;
+                        }
+                        let _ = claim_next_batch(&t, &board, &me).unwrap();
+                    }
+                });
+            }
+        });
+        let t = MirrorDir::new(&root).unwrap();
+        let board = read_lease_board(&t, total).unwrap();
+        for state in &board {
+            assert_eq!(
+                state.attempts, 1,
+                "batch {} must be claimed by exactly one attempt",
+                state.batch
+            );
+            assert!(state.latest.is_some());
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    fn elastic_manifest_text() -> String {
+        r#"{"version":1,"total_batches":6,
+            "lease":{"kind":"mirror-dir","root":"/tmp/ks-el-lease"},
+            "workers":[
+              {"id":"w0","transport":{"kind":"mirror-dir","root":"/tmp/ks-el-w0"}},
+              {"id":"w1","transport":{"kind":"mirror-dir","root":"/tmp/ks-el-w1"}}
+        ]}"#
+            .to_string()
+    }
+
+    #[test]
+    fn elastic_manifest_parses_and_guards_mode_mixing() {
+        let m = WorkerManifest::parse(&elastic_manifest_text()).unwrap();
+        assert!(m.is_elastic());
+        assert_eq!(m.total_batches, 6);
+        assert_eq!(m.total_shards, 0);
+        assert_eq!(m.worker_ids(), vec!["w0", "w1"]);
+
+        // total_shards in an elastic manifest is a mode mix-up.
+        let err = WorkerManifest::parse(
+            r#"{"total_shards":2,"total_batches":2,
+                "lease":{"kind":"mirror-dir","root":"/tmp/l"},
+                "workers":[{"id":"a","transport":{"kind":"mirror-dir","root":"/tmp/a"}}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("total_batches, not total_shards"), "{err}");
+
+        // total_batches without a lease transport is too.
+        let err = WorkerManifest::parse(
+            r#"{"total_batches":2,
+                "workers":[{"id":"a","transport":{"kind":"mirror-dir","root":"/tmp/a"}}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("requires a lease transport"), "{err}");
+
+        // Shard ranges on elastic workers are refused.
+        let err = WorkerManifest::parse(
+            r#"{"total_batches":2,"lease":{"kind":"mirror-dir","root":"/tmp/l"},
+                "workers":[{"id":"a","shard_lo":0,"shard_hi":1,
+                  "transport":{"kind":"mirror-dir","root":"/tmp/a"}}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("must not declare shard ranges"), "{err}");
+
+        // And a batch count of zero is refused.
+        let err = WorkerManifest::parse(
+            r#"{"total_batches":0,"lease":{"kind":"mirror-dir","root":"/tmp/l"},
+                "workers":[{"id":"a","transport":{"kind":"mirror-dir","root":"/tmp/a"}}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("total_batches must be >= 1"), "{err}");
     }
 }

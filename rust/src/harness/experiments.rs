@@ -31,12 +31,21 @@ pub struct ExpConfig {
     pub shards: usize,
     /// This process's slice, in `0..shards` (`--shard-index`).
     pub shard_index: usize,
+    /// Elastic lease batch count (`--batch-count`); 0 = not batch-sliced.
+    /// Mutually exclusive with sharding (the scheduler validates).
+    pub batch_count: usize,
+    /// This process's batch, in `0..batch_count` (`--batch-index`).
+    pub batch_index: usize,
     /// Shared live memory-exchange directory (`--exchange-dir`); None =
     /// exchange off.
     pub exchange_dir: Option<PathBuf>,
     /// Cells per exchange epoch (`--exchange-epoch`); 0 picks the default
     /// when `exchange_dir` is set.
     pub exchange_epoch: usize,
+    /// Adaptive (doubling) exchange-epoch schedule (`--exchange-adaptive`).
+    /// Part of the experiment identity — recorded in the manifest and
+    /// checked at merge time.
+    pub exchange_adaptive: bool,
     /// Device preset to price against (`--device`); None = the default
     /// (A100-like). Part of the experiment identity: it is recorded in the
     /// run manifest and keys the skill-store partition observations land
@@ -60,8 +69,11 @@ impl Default for ExpConfig {
             memory_dir: None,
             shards: 1,
             shard_index: 0,
+            batch_count: 0,
+            batch_index: 0,
             exchange_dir: None,
             exchange_epoch: 0,
+            exchange_adaptive: false,
             device: None,
             retrieval_cache: true,
         }
@@ -96,15 +108,25 @@ impl ExpConfig {
             } else {
                 None
             },
+            batch: if self.batch_count != 0 {
+                Some(coordinator::Batch {
+                    index: self.batch_index,
+                    count: self.batch_count,
+                })
+            } else {
+                None
+            },
             exchange: self.exchange_dir.as_ref().map(|dir| {
-                coordinator::ExchangeOptions::new(
+                let mut ex = coordinator::ExchangeOptions::new(
                     dir.clone(),
                     if self.exchange_epoch == 0 {
                         coordinator::DEFAULT_EXCHANGE_EPOCH
                     } else {
                         self.exchange_epoch
                     },
-                )
+                );
+                ex.adaptive = self.exchange_adaptive;
+                ex
             }),
         }
     }

@@ -35,7 +35,8 @@ use kernelskill::util::cli::Args;
 use kernelskill::util::logging::{self, Level};
 
 /// Subcommands a `launch` / `worker` fleet may fan out (they must accept
-/// `--run-dir/--shards/--shard-index/--resume`).
+/// `--run-dir/--shards/--shard-index/--resume`, and in elastic fleets
+/// `--batch-index/--batch-count`).
 const SHARDABLE: [&str; 5] = ["suite", "table1", "table2", "table3", "per-round"];
 
 /// Matrix-defining flags forwarded verbatim to shard children by `launch`
@@ -49,6 +50,12 @@ const PASSTHROUGH_FLAGS: [&str; 7] =
 /// positional).
 fn no_retrieval_cache(args: &Args) -> bool {
     args.has("no-retrieval-cache") || args.get("no-retrieval-cache").is_some()
+}
+
+/// `--exchange-adaptive` in either spelling (bare switch, or the
+/// `--exchange-adaptive=1` form forwarded to shard children).
+fn exchange_adaptive(args: &Args) -> bool {
+    args.has("exchange-adaptive") || args.get("exchange-adaptive").is_some()
 }
 
 /// The flags `launch` and `worker` share when fanning a matrix out to
@@ -67,6 +74,9 @@ fn fanout_flags(args: &Args) -> Result<(Vec<String>, Option<usize>, usize), Stri
         // `=`-form: position-robust no matter what the child parser sees
         // after it.
         passthrough.push("--no-retrieval-cache=1".to_string());
+    }
+    if exchange_adaptive(args) {
+        passthrough.push("--exchange-adaptive=1".to_string());
     }
     let mut exchange_epoch = None;
     if args.has("exchange") {
@@ -95,11 +105,20 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
     let defaults = experiments::ExpConfig::default();
     let n_seeds = args.get_usize("seeds", 1)?;
     let shards = args.get_usize("shards", 1)?;
+    let batch_count = args.get_usize("batch-count", 0)?;
     let run_dir = args.get("run-dir").map(std::path::PathBuf::from);
     if shards != 1 && run_dir.is_none() {
         return Err("--shards requires --run-dir (each shard streams its slice to its own \
                     run dir, then `merge` unions them)"
             .to_string());
+    }
+    if batch_count != 0 && run_dir.is_none() {
+        return Err("--batch-count requires --run-dir (each batch streams its slice to its \
+                    own run dir; a `worker` loop normally supplies it)"
+            .to_string());
+    }
+    if args.get("batch-index").is_some() && batch_count == 0 {
+        return Err("--batch-index requires --batch-count".to_string());
     }
     let exchange_dir = args.get("exchange-dir").map(std::path::PathBuf::from);
     let exchange_epoch = args.get_usize("exchange-epoch", 0)?;
@@ -117,8 +136,11 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
         memory_dir: args.get("memory-dir").map(std::path::PathBuf::from),
         shards,
         shard_index: args.get_usize("shard-index", 0)?,
+        batch_count,
+        batch_index: args.get_usize("batch-index", 0)?,
         exchange_dir,
         exchange_epoch,
+        exchange_adaptive: exchange_adaptive(args),
         device: parse_device(args)?,
         retrieval_cache: !no_retrieval_cache(args),
     })
@@ -139,6 +161,13 @@ fn finish_run_dir(cfg: &experiments::ExpConfig) -> Result<(), String> {
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e}");
+        if coordinator::ExchangeWaitTimeout::matches(&e) {
+            // EX_TEMPFAIL: a supervising launcher relaunches us with
+            // `--resume` without burning the crash budget — the missing
+            // peer delta is the *peer's* problem (it died or was
+            // re-dispatched), not ours.
+            std::process::exit(coordinator::EXCHANGE_TIMEOUT_EXIT);
+        }
         std::process::exit(1);
     }
 }
@@ -394,6 +423,12 @@ fn run() -> Result<(), String> {
             if args.get("shard-index").is_some() {
                 return Err("launch owns the shard assignment; drop --shard-index".to_string());
             }
+            if args.get("batch-index").is_some() || args.get("batch-count").is_some() {
+                return Err("batch slicing is elastic-fleet machinery: describe the fleet in \
+                            an elastic manifest (total_batches + lease transport) and use \
+                            launch --manifest / worker instead"
+                    .to_string());
+            }
             // Fleet mode: a worker manifest turns `launch` into the
             // pull-based cross-machine coordinator. `--manifest <file>` is
             // canonical; a non-numeric `--workers <file>` is accepted too
@@ -447,8 +482,8 @@ fn run() -> Result<(), String> {
                  \x20 table1 | table2 | table3 | per-round | trajectory\n\
                  \x20     [--seeds N] [--suite-seed S] [--workers W] [--device D]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M]\n\
-                 \x20     [--shards N --shard-index I]\n\
-                 \x20     [--exchange-dir X --exchange-epoch E]\n\
+                 \x20     [--shards N --shard-index I | --batch-count B --batch-index K]\n\
+                 \x20     [--exchange-dir X --exchange-epoch E [--exchange-adaptive]]\n\
                  real PJRT path:\n\
                  \x20 verify-artifacts [--seed S] [--tolerance T]\n\
                  \x20 calibrate [--seed S]\n\
@@ -467,12 +502,15 @@ fn run() -> Result<(), String> {
                  \x20     [--device D] [--exchange-epoch E] [--max-restarts R]\n\
                  \x20     spawn N shard processes, restart crashes into --resume, merge into D\n\
                  \x20 launch --manifest workers.json --run-dir D\n\
-                 \x20     [--stall-timeout-ms T] [--poll-ms P]\n\
+                 \x20     [--stall-timeout-ms T] [--poll-ms P] [--lease-timeout-ms L]\n\
                  \x20     cross-machine coordinator: pull every worker's run dirs through\n\
-                 \x20     their transports, relay exchange deltas, merge byte-identically\n\
+                 \x20     their transports, relay exchange deltas, merge byte-identically;\n\
+                 \x20     an *elastic* manifest (total_batches + lease transport) re-dispatches\n\
+                 \x20     batches whose lease progress counter stalls for L ms\n\
                  \x20 worker --manifest workers.json --worker-id ID --run-dir D\n\
                  \x20     [--cmd suite|table1|..] [matrix flags as in launch]\n\
                  \x20     run this machine's manifest shard range and publish it\n\
+                 \x20     (elastic manifest: claim lease batches until the board is done)\n\
                  \x20 smoke                  tiny checkpoint/resume/memory end-to-end (CI gate)\n\
                  learned memory (skills.json, see docs/memory-formats.md):\n\
                  \x20 skills inspect --memory-dir M [--device D] [--case SUBSTR]\n\
@@ -527,6 +565,7 @@ fn run_fleet(args: &Args, manifest_path: &str, run_dir: &str) -> Result<(), Stri
     let mut fc = coordinator::FleetConfig::new(manifest, run_dir);
     fc.poll_ms = args.get_u64("poll-ms", fc.poll_ms)?;
     fc.stall_timeout_ms = args.get_u64("stall-timeout-ms", fc.stall_timeout_ms)?;
+    fc.lease_timeout_ms = args.get_u64("lease-timeout-ms", fc.lease_timeout_ms)?;
     let report = coordinator::launch_workers(&fc)?;
     print!("{}", report.render());
     println!("merged run dir: {run_dir} (report it with: report --run-dir {run_dir})");
@@ -552,6 +591,13 @@ fn run_worker_cmd(args: &Args) -> Result<(), String> {
     if args.get("shards").is_some() || args.get("shard-index").is_some() {
         return Err(
             "the worker manifest owns the shard assignment; drop --shards/--shard-index"
+                .to_string(),
+        );
+    }
+    if args.get("batch-index").is_some() || args.get("batch-count").is_some() {
+        return Err(
+            "the elastic worker claims batches off the lease board itself; drop \
+             --batch-index/--batch-count"
                 .to_string(),
         );
     }

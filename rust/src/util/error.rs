@@ -39,6 +39,28 @@ impl<E: std::error::Error> From<E> for Error {
     }
 }
 
+// Bridges between the typed [`Error`] and the `Result<_, String>` plumbing
+// the coordinator layer grew up with: typed helpers can be called with `?`
+// from string-error functions and vice versa, so the panic-path audit can
+// convert call sites incrementally instead of all at once.
+impl From<Error> for String {
+    fn from(e: Error) -> String {
+        e.msg
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// `.context(...)` / `.with_context(...)` on `Result` and `Option`.

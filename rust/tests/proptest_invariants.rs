@@ -3,7 +3,9 @@
 //! offline, so each property sweeps a few hundred random cases).
 
 use kernelskill::bench_suite::eager;
-use kernelskill::coordinator::Shard;
+use kernelskill::coordinator::{
+    batch_bounds, claim_next_batch, expire_lease, read_lease_board, Batch, LocalFs, Shard,
+};
 use kernelskill::device::costmodel;
 use kernelskill::device::machine::DeviceSpec;
 use kernelskill::kir::graph::KernelGraph;
@@ -206,6 +208,132 @@ fn prop_shard_slices_are_a_disjoint_exact_cover() {
             owners.iter().all(|&c| c == 1),
             "{n_tasks}x{n_seeds} matrix, {count} shards: not a disjoint exact cover"
         );
+    }
+}
+
+#[test]
+fn prop_batch_slices_are_a_contiguous_exact_cover() {
+    // Elastic lease scheduling cuts the matrix into contiguous batches:
+    // for arbitrary matrix sizes and batch counts 1..=8, the batches must
+    // tile the cell range exactly (no gap, no overlap, ending at the
+    // matrix), be balanced to within one cell, and agree with owns().
+    let mut rng = Rng::new(110);
+    for _ in 0..300 {
+        let n_cells = rng.range_usize(1, 121);
+        let count = rng.range_usize(1, 9);
+        let mut prev_hi = 0usize;
+        for index in 0..count {
+            let batch = Batch { index, count };
+            assert!(batch.validate().is_ok());
+            let (lo, hi) = batch_bounds(index, count, n_cells);
+            assert_eq!((lo, hi), batch.bounds(n_cells));
+            assert_eq!(lo, prev_hi, "batch {index}/{count} must start where its predecessor ended");
+            let fair = n_cells / count;
+            assert!(
+                hi - lo == fair || hi - lo == fair + 1,
+                "batch {index}/{count} owns {} of {n_cells} cells — unbalanced",
+                hi - lo
+            );
+            for ci in lo..hi {
+                assert!(batch.owns(ci, n_cells));
+            }
+            if lo > 0 {
+                assert!(!batch.owns(lo - 1, n_cells));
+            }
+            assert!(!batch.owns(hi, n_cells));
+            prev_hi = hi;
+        }
+        assert_eq!(prev_hi, n_cells, "{count} batches must end at the {n_cells}-cell matrix");
+    }
+}
+
+#[test]
+fn prop_lease_claims_are_exclusive_under_worker_races() {
+    // The elastic scheduling safety property: however many workers race
+    // the lease board, every batch is claimed by exactly one of them
+    // (first-publish-wins on the attempt file), and after the coordinator
+    // expires an attempt the batch is re-claimed at exactly the next
+    // attempt number — never in parallel with a live claim.
+    let mut rng = Rng::new(111);
+    for case in 0..12 {
+        let total = rng.range_usize(1, 9);
+        let n_workers = rng.range_usize(2, 7);
+        let root = std::env::temp_dir().join(format!(
+            "ks-prop-lease-{case}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+
+        let claims: Vec<Vec<usize>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_workers)
+                .map(|w| {
+                    let root = &root;
+                    scope.spawn(move || {
+                        let t = LocalFs::new(root).unwrap();
+                        let mut mine = Vec::new();
+                        loop {
+                            let board = read_lease_board(&t, total).unwrap();
+                            if board.iter().all(|b| b.attempts > 0) {
+                                break;
+                            }
+                            if let Some(lease) =
+                                claim_next_batch(&t, &board, &format!("w{w}")).unwrap()
+                            {
+                                assert_eq!(lease.attempt, 0);
+                                mine.push(lease.batch);
+                            }
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        let mut owners = vec![0usize; total];
+        for mine in &claims {
+            for &b in mine {
+                owners[b] += 1;
+            }
+        }
+        assert!(
+            owners.iter().all(|&c| c == 1),
+            "{total} batches, {n_workers} racing workers: claims {owners:?} not exclusive"
+        );
+
+        // The board read back agrees with the winners' own records.
+        let t = LocalFs::new(&root).unwrap();
+        let board = read_lease_board(&t, total).unwrap();
+        for st in &board {
+            assert_eq!(st.attempts, 1, "batch {} must hold exactly one attempt", st.batch);
+            assert!(!st.claimable(), "a held batch must not be claimable");
+            let l = st.latest.as_ref().unwrap();
+            let w: usize = l.worker.strip_prefix('w').unwrap().parse().unwrap();
+            assert!(claims[w].contains(&st.batch), "board holder {} never claimed {}", l.worker, st.batch);
+        }
+
+        // Coordinator-side re-dispatch: expire a random subset of the
+        // attempts; exactly those batches become claimable again, and a
+        // fresh claim round takes them at attempt 1.
+        let expired: Vec<usize> = (0..total).filter(|_| rng.chance(0.5)).collect();
+        for &b in &expired {
+            assert!(expire_lease(&t, b, 0).unwrap());
+            // Expiry is idempotent: the second publish loses the race.
+            assert!(!expire_lease(&t, b, 0).unwrap());
+        }
+        let board = read_lease_board(&t, total).unwrap();
+        for st in &board {
+            assert_eq!(st.claimable(), expired.contains(&st.batch));
+        }
+        let mut reclaimed = Vec::new();
+        while let Some(lease) = claim_next_batch(&t, &read_lease_board(&t, total).unwrap(), "wr").unwrap() {
+            assert_eq!(lease.attempt, 1, "a re-dispatched batch must be claimed at attempt 1");
+            reclaimed.push(lease.batch);
+        }
+        reclaimed.sort_unstable();
+        assert_eq!(reclaimed, expired, "exactly the expired batches must be re-claimable");
+
+        let _ = std::fs::remove_dir_all(&root);
     }
 }
 
