@@ -11,6 +11,7 @@
 use super::KernelState;
 use crate::bench_suite::{eager, Task};
 use crate::device::costmodel;
+use crate::device::faults::ChaosConfig;
 use crate::device::machine::DeviceSpec;
 use crate::device::metrics::{self, RawProfile, ToolVersion};
 use crate::kir::legality::{self, CompileError};
@@ -37,8 +38,12 @@ pub struct Review {
 }
 
 impl Review {
+    /// A usable kernel: builds, verifies, and was actually measured. The
+    /// speedup check is redundant on a healthy harness (correct implies
+    /// measured) but keeps every consumer panic-free when the chaos layer
+    /// tampers with measurements.
     pub fn ok(&self) -> bool {
-        self.compiles && self.correct
+        self.compiles && self.correct && self.speedup.is_some()
     }
 }
 
@@ -131,6 +136,68 @@ pub fn review_with_eager(
     }
 }
 
+/// Reviewer under environment chaos: the flaky profiler widens (or drops)
+/// the measurement and the lying cost model skews the planner-visible
+/// counters. Kernel semantics — compile/verify verdicts, the repair branch's
+/// fault signatures — are untouched: chaos corrupts what the harness
+/// *measures*, never what the kernel *is*. All chaos randomness comes from
+/// `chaos_rng`, a stream separate from the cell's own `rng`, so a chaos
+/// config with every knob at 0 reviews byte-identically to no chaos.
+#[allow(clippy::too_many_arguments)]
+pub fn review_chaotic(
+    task: &Task,
+    state: &KernelState,
+    dev: &DeviceSpec,
+    tool: ToolVersion,
+    rng: &mut Rng,
+    consts: Option<(f64, f64)>,
+    chaos: Option<(&ChaosConfig, &mut Rng)>,
+) -> Review {
+    let mut r = review_with_eager(task, state, dev, tool, rng, consts);
+    let Some((cfg, chaos_rng)) = chaos else {
+        return r;
+    };
+    if !r.ok() {
+        return r;
+    }
+    // Flaky profiler, noise half: the "measurement" picks up chaos-scale
+    // variance on top of the intrinsic +/-1.5%.
+    if cfg.profile_sigma > 0.0 {
+        let n = (1.0 + cfg.profile_sigma * (chaos_rng.f64() * 2.0 - 1.0)).max(0.05);
+        if let Some(l) = r.latency_s.as_mut() {
+            *l *= n;
+        }
+        if let Some(s) = r.speedup.as_mut() {
+            *s /= n;
+        }
+        if let Some(p) = r.profile.as_mut() {
+            p.latency_s *= n;
+        }
+    }
+    // Lying cost model: every NCU counter the Planner normalizes is skewed
+    // by one shared relative bias (percent keys stay bounded).
+    if cfg.cost_bias > 0.0 {
+        if let Some(p) = r.profile.as_mut() {
+            let skew = 1.0 + cfg.cost_bias * (chaos_rng.f64() * 2.0 - 1.0);
+            for (k, v) in p.ncu.iter_mut() {
+                *v *= skew;
+                if k.contains("pct") {
+                    *v = v.min(100.0);
+                }
+            }
+        }
+    }
+    // Flaky profiler, drop half: the snapshot vanishes entirely; timing
+    // survives (the CUDA-event latency comes from a different path than the
+    // NCU replay), so the kernel is still usable — degraded, not dead. This
+    // is exactly the state the loop's missing-profile warn+converge path
+    // was built for.
+    if cfg.profile_drop_p > 0.0 && chaos_rng.chance(cfg.profile_drop_p) {
+        r.profile = None;
+    }
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +275,82 @@ mod tests {
         let r = review(&t, &s, &DeviceSpec::a100_like(), ToolVersion::Ncu2023, &mut rng);
         assert!(!r.compiles);
         assert!(!r.compile_errors.is_empty());
+    }
+
+    #[test]
+    fn chaos_with_zero_knobs_is_byte_identical() {
+        let t = task();
+        let s = clean_state(&t);
+        let dev = DeviceSpec::a100_like();
+        let cfg = ChaosConfig::parse("seed=7").unwrap();
+        let a = review(&t, &s, &dev, ToolVersion::Ncu2023, &mut Rng::new(7));
+        let b = review_chaotic(
+            &t,
+            &s,
+            &dev,
+            ToolVersion::Ncu2023,
+            &mut Rng::new(7),
+            None,
+            Some((&cfg, &mut Rng::new(99))),
+        );
+        assert_eq!(a.speedup, b.speedup);
+        assert_eq!(a.latency_s, b.latency_s);
+        assert_eq!(
+            a.profile.as_ref().map(|p| p.ncu.clone()),
+            b.profile.as_ref().map(|p| p.ncu.clone())
+        );
+    }
+
+    #[test]
+    fn chaos_drop_removes_profile_but_keeps_speedup() {
+        let t = task();
+        let s = clean_state(&t);
+        let dev = DeviceSpec::a100_like();
+        let cfg = ChaosConfig::parse("drop=1,seed=7").unwrap();
+        let r = review_chaotic(
+            &t,
+            &s,
+            &dev,
+            ToolVersion::Ncu2023,
+            &mut Rng::new(7),
+            None,
+            Some((&cfg, &mut Rng::new(99))),
+        );
+        assert!(r.ok(), "a dropped profile still leaves a usable kernel");
+        assert!(r.profile.is_none());
+        assert!(r.speedup.is_some() && r.latency_s.is_some());
+    }
+
+    #[test]
+    fn chaos_bias_keeps_percent_counters_bounded_and_is_seeded() {
+        let t = task();
+        let s = clean_state(&t);
+        let dev = DeviceSpec::a100_like();
+        let cfg = ChaosConfig::parse("sigma=0.5,bias=1,seed=3").unwrap();
+        let run = |crng_seed: u64| {
+            review_chaotic(
+                &t,
+                &s,
+                &dev,
+                ToolVersion::Ncu2023,
+                &mut Rng::new(7),
+                None,
+                Some((&cfg, &mut Rng::new(crng_seed))),
+            )
+        };
+        let a = run(5);
+        let b = run(5);
+        assert_eq!(a.speedup, b.speedup, "chaos is a deterministic stream");
+        let p = a.profile.expect("bias does not drop the profile");
+        for (k, v) in &p.ncu {
+            assert!(*v >= 0.0, "{k} went negative: {v}");
+            if k.contains("pct") {
+                assert!(*v <= 100.0, "{k} escaped bounds: {v}");
+            }
+        }
+        // Semantics untouched: only measurements move.
+        assert!(a.compiles && a.correct);
+        assert!(b.speedup.unwrap() > 0.0);
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Level 4: 40 generated fused multi-kernel pipelines — a stress workload
+//! whose graphs are deliberately shaped so that the *tempting* schedule
+//! transform on each is structurally illegal.
+//!
+//! Level 1-3 graphs mostly punish bad schedules through the cost model;
+//! Level 4 punishes them through `kir::legality`. Each family is built
+//! around one fusion/tiling trap:
+//!
+//! * `gemm_chain`      — back-to-back GEMM+epilogue stages; fusing two
+//!   adjacent GEMMs trips `multi_gemm_fusion`.
+//! * `scan_pipeline`   — elementwise → scan → elementwise stages; any
+//!   fusion across the scan trips `scan_fusion`.
+//! * `splitk_tail`     — a deep-K GEMM feeding a reduction/softmax tail;
+//!   split-K on the fused tail trips `splitk_fused_reduction`.
+//! * `scatter_gather`  — GEMM feeding column-reduction and scatter
+//!   consumers; fusing them trips `cross_block_fusion`.
+//! * `ragged_attention`— attention with dims nudged off 8-alignment (the
+//!   MXU trap, `mxu_alignment`) plus an independent side stream big
+//!   enough that horizontal batching trips `disconnected_fusion`.
+//!
+//! Not part of `full_suite` (the 250-task paper population); reachable as
+//! `level_suite(seed, 4)` and via `--level 4`.
+
+use super::task::Task;
+use crate::kir::graph::KernelGraph;
+use crate::kir::op::{EwKind, NormKind, OpKind, RedKind};
+use crate::util::rng::Rng;
+
+/// 8-aligned log-uniform dim (the MXU-friendly default, as in Level 3).
+fn dim(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+    (((rng.log_uniform(lo as f64, hi as f64) as u64) + 7) / 8 * 8).max(8)
+}
+
+/// Deliberately misaligned: an aligned dim nudged off by 1-7, so the MXU
+/// path's 8-alignment requirement can never be satisfied on it.
+fn ragged(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+    dim(rng, lo, hi) + rng.range(1, 8)
+}
+
+pub fn generate(rng: &mut Rng) -> Vec<Task> {
+    let mut tasks = Vec::with_capacity(40);
+    for i in 0..40 {
+        let mut g = KernelGraph::new();
+        let family = i % 5;
+        let name = match family {
+            0 => {
+                // 3-5 GEMM+epilogue stages chained end to end.
+                let b = dim(rng, 64, 512);
+                let mut w = dim(rng, 256, 1024);
+                let stages = rng.range(3, 6);
+                let mut prev: Option<usize> = None;
+                for _ in 0..stages {
+                    let next = dim(rng, 256, 1024);
+                    let mm = g.push(
+                        OpKind::MatMul,
+                        b,
+                        next,
+                        w,
+                        prev.map(|p| vec![p]).unwrap_or_default(),
+                    );
+                    prev = Some(g.push(OpKind::Elementwise(EwKind::Relu), b, next, 1, vec![mm]));
+                    w = next;
+                }
+                "gemm_chain"
+            }
+            1 => {
+                // 2-4 elementwise → scan → elementwise stages.
+                let m = dim(rng, 512, 4096);
+                let n = dim(rng, 64, 512);
+                let stages = rng.range(2, 5);
+                let mut prev: Option<usize> = None;
+                for _ in 0..stages {
+                    let ew = g.push(
+                        OpKind::Elementwise(EwKind::Gelu),
+                        m,
+                        n,
+                        1,
+                        prev.map(|p| vec![p]).unwrap_or_default(),
+                    );
+                    let sc = g.push(OpKind::Scan, m, n, 1, vec![ew]);
+                    prev = Some(g.push(OpKind::Elementwise(EwKind::Relu), m, n, 1, vec![sc]));
+                }
+                "scan_pipeline"
+            }
+            2 => {
+                // Deep-K GEMM whose natural split-K collides with the
+                // fused reduction/softmax tail.
+                let m = dim(rng, 64, 256);
+                let n = dim(rng, 64, 256);
+                let k = dim(rng, 4096, 16384);
+                let mm = g.push(OpKind::MatMul, m, n, k, vec![]);
+                let bias = g.push(OpKind::Elementwise(EwKind::Residual), m, n, 1, vec![mm]);
+                let red = g.push(OpKind::Reduction(RedKind::Row), m, n, 1, vec![bias]);
+                let _ = g.push(OpKind::Norm(NormKind::Softmax), m, n, 1, vec![red]);
+                "splitk_tail"
+            }
+            3 => {
+                // GEMM feeding cross-block consumers (col-reduction,
+                // scatter) that must stay in their own kernels.
+                let m = dim(rng, 128, 512);
+                let n = dim(rng, 128, 512);
+                let k = dim(rng, 256, 2048);
+                let mm = g.push(OpKind::MatMul, m, n, k, vec![]);
+                let col = g.push(OpKind::Reduction(RedKind::Col), m, n, 1, vec![mm]);
+                let sc = g.push(OpKind::Scatter, m, n, 1, vec![col]);
+                let _ = g.push(OpKind::Elementwise(EwKind::Relu), m, n, 1, vec![sc]);
+                "scatter_gather"
+            }
+            _ => {
+                // Attention block on ragged (non-8-aligned) dims, plus an
+                // independent large side stream with no dataflow into it.
+                let seq = ragged(rng, 128, 512);
+                let d = ragged(rng, 128, 512);
+                let q = g.push(OpKind::MatMul, seq, d, d, vec![]);
+                let kk = g.push(OpKind::MatMul, seq, d, d, vec![]);
+                let scores = g.push(OpKind::MatMul, seq, seq, d, vec![q, kk]);
+                let sm = g.push(OpKind::Norm(NormKind::Softmax), seq, seq, 1, vec![scores]);
+                let _ = g.push(OpKind::MatMul, seq, d, seq, vec![sm]);
+                let side = dim(rng, 1024, 4096);
+                let e = g.push(OpKind::Elementwise(EwKind::Gelu), side, side, 1, vec![]);
+                let _ = g.push(OpKind::Reduction(RedKind::Row), side, side, 1, vec![e]);
+                "ragged_attention"
+            }
+        };
+
+        let g_len = g.len();
+        tasks.push(Task {
+            id: format!("l4_{i:03}_{name}"),
+            level: 4,
+            name: name.to_string(),
+            graph: g,
+            eager_waste: if rng.chance(0.3) {
+                rng.lognormal(1.4f64.ln(), 0.25).clamp(1.0, 3.0)
+            } else {
+                1.0
+            },
+            // Fused pipelines carry real fusion headroom — when the legal
+            // schedule is found.
+            sched_ceiling: rng.lognormal(2.4f64.ln(), 0.30).clamp(1.2, 6.0),
+            strict_tolerance: rng.chance(0.2),
+            // Multi-kernel pipelines are moderately hard translations;
+            // risk grows with graph size like Level 3's.
+            translation_risk: (0.2 + 0.015 * g_len as f64).min(0.7),
+            artifact: None,
+        });
+    }
+    assert_eq!(tasks.len(), 40);
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::machine::DeviceSpec;
+    use crate::kir::legality;
+    use crate::kir::schedule::Schedule;
+
+    #[test]
+    fn generates_40_valid_pipelines() {
+        let tasks = generate(&mut Rng::new(42));
+        assert_eq!(tasks.len(), 40);
+        let dev = DeviceSpec::a100_like();
+        for t in &tasks {
+            assert_eq!(t.level, 4, "{}", t.id);
+            assert!(t.graph.validate().is_ok(), "{}", t.id);
+            assert!(t.graph.len() >= 4, "{} has {} ops", t.id, t.graph.len());
+            // The per-op naive schedule must always compile: the traps are
+            // in the transforms, not the starting point.
+            let s = Schedule::per_op_naive(&t.graph);
+            assert!(legality::check(&t.graph, &s, &dev).is_empty(), "{}", t.id);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(&mut Rng::new(7));
+        let b = generate(&mut Rng::new(7));
+        let ids_a: Vec<&str> = a.iter().map(|t| t.id.as_str()).collect();
+        let ids_b: Vec<&str> = b.iter().map(|t| t.id.as_str()).collect();
+        assert_eq!(ids_a, ids_b);
+    }
+
+    #[test]
+    fn gemm_chain_refuses_adjacent_gemm_fusion() {
+        let tasks = generate(&mut Rng::new(42));
+        let t = tasks.iter().find(|t| t.name == "gemm_chain").unwrap();
+        let dev = DeviceSpec::a100_like();
+        // Fuse the first three per-op groups: GEMM + epilogue + next GEMM.
+        let mut s = Schedule::per_op_naive(&t.graph);
+        s.merge_groups(0, 1);
+        s.merge_groups(0, 1);
+        let errs = legality::check(&t.graph, &s, &dev);
+        assert!(errs.iter().any(|e| e.rule == "multi_gemm_fusion"), "{errs:?}");
+    }
+
+    #[test]
+    fn scan_pipeline_refuses_fusion_across_the_scan() {
+        let tasks = generate(&mut Rng::new(42));
+        let t = tasks.iter().find(|t| t.name == "scan_pipeline").unwrap();
+        let dev = DeviceSpec::a100_like();
+        // Group 0 is the leading elementwise, group 1 the scan.
+        let mut s = Schedule::per_op_naive(&t.graph);
+        s.merge_groups(0, 1);
+        let errs = legality::check(&t.graph, &s, &dev);
+        assert!(errs.iter().any(|e| e.rule == "scan_fusion"), "{errs:?}");
+    }
+
+    #[test]
+    fn ragged_attention_dims_defeat_the_mxu_path() {
+        let tasks = generate(&mut Rng::new(42));
+        let t = tasks.iter().find(|t| t.name == "ragged_attention").unwrap();
+        let dev = DeviceSpec::a100_like();
+        let mut s = Schedule::per_op_naive(&t.graph);
+        s.cfg[0].mxu = true;
+        s.cfg[0].staging = true;
+        let errs = legality::check(&t.graph, &s, &dev);
+        assert!(errs.iter().any(|e| e.rule == "mxu_alignment"), "{errs:?}");
+    }
+}

@@ -1,11 +1,15 @@
 //! KernelBenchSim: the 250-task benchmark suite (100 + 100 + 50) standing in
 //! for KernelBench Levels 1-3 (DESIGN.md §Substitutions), plus the
-//! Torch-Eager baseline cost model.
+//! Torch-Eager baseline cost model. A generated Level-4 fused-pipeline
+//! stress workload (`level4`, 40 tasks) rides alongside — reachable via
+//! `level_suite(seed, 4)` but deliberately outside the 250-task paper
+//! population.
 
 pub mod eager;
 pub mod level1;
 pub mod level2;
 pub mod level3;
+pub mod level4;
 pub mod task;
 
 use crate::util::rng::Rng;
@@ -20,8 +24,14 @@ pub fn full_suite(seed: u64) -> Vec<Task> {
     tasks
 }
 
-/// Tasks of one level only.
+/// Tasks of one level only. Levels 1-3 slice the 250-task paper suite;
+/// Level 4 is the generated fused-pipeline stress workload
+/// (`bench_suite::level4`), which is *not* part of `full_suite`.
 pub fn level_suite(seed: u64, level: u8) -> Vec<Task> {
+    if level == 4 {
+        let mut rng = Rng::new(seed);
+        return level4::generate(&mut rng.child("l4"));
+    }
     full_suite(seed).into_iter().filter(|t| t.level == level).collect()
 }
 
@@ -36,6 +46,19 @@ mod tests {
         assert_eq!(tasks.iter().filter(|t| t.level == 1).count(), 100);
         assert_eq!(tasks.iter().filter(|t| t.level == 2).count(), 100);
         assert_eq!(tasks.iter().filter(|t| t.level == 3).count(), 50);
+    }
+
+    #[test]
+    fn level4_is_reachable_but_not_in_full_suite() {
+        let l4 = level_suite(42, 4);
+        assert_eq!(l4.len(), 40);
+        assert!(l4.iter().all(|t| t.level == 4));
+        assert!(full_suite(42).iter().all(|t| t.level != 4));
+        // Same seed, same workload — and a stable slice of nothing else.
+        let again = level_suite(42, 4);
+        let ids: Vec<&str> = l4.iter().map(|t| t.id.as_str()).collect();
+        let ids2: Vec<&str> = again.iter().map(|t| t.id.as_str()).collect();
+        assert_eq!(ids, ids2);
     }
 
     #[test]

@@ -85,6 +85,13 @@ pub struct RunManifest {
     /// This directory's lease-batch index (meaningful only when
     /// `lease_batches > 0`).
     pub lease_batch: usize,
+    /// Canonical render of the chaos config the run injected faults under
+    /// (empty = no chaos). Part of the experiment identity: chaotic cells
+    /// saw corrupted measurements and extra transient faults, so their
+    /// results may not be mixed with a clean run's (or a differently-seeded
+    /// chaotic run's) by resume or merge. Pre-chaos manifests read as
+    /// chaos-free.
+    pub chaos: String,
 }
 
 impl RunManifest {
@@ -108,6 +115,17 @@ impl RunManifest {
     /// is a slice of a differently-configured experiment. This is
     /// `merge`'s compatibility check.
     pub fn same_matrix(&self, other: &RunManifest) -> bool {
+        self.same_matrix_modulo_device(other) && self.device == other.device
+    }
+
+    /// [`RunManifest::same_matrix`] minus the device check. This is the
+    /// compatibility predicate for *heterogeneous-fleet* merges: shards of
+    /// one experiment run on different presets share every identity field
+    /// except the device, and their evidence stays separated by the skill
+    /// store's per-device partitions rather than by a merge refusal. Resume
+    /// does NOT use this — reopening a directory under a different preset
+    /// is still a hard error (full manifest equality).
+    pub fn same_matrix_modulo_device(&self, other: &RunManifest) -> bool {
         self.n_tasks == other.n_tasks
             && self.seeds == other.seeds
             && self.rt == other.rt
@@ -115,7 +133,7 @@ impl RunManifest {
             && self.fingerprint == other.fingerprint
             && self.exchange_epoch == other.exchange_epoch
             && self.exchange_adaptive == other.exchange_adaptive
-            && self.device == other.device
+            && self.chaos == other.chaos
     }
 
     fn to_json(&self) -> Json {
@@ -136,6 +154,7 @@ impl RunManifest {
             ("device", json::s(&self.device)),
             ("lease_batches", json::num(self.lease_batches as f64)),
             ("lease_batch", json::num(self.lease_batch as f64)),
+            ("chaos", json::s(&self.chaos)),
         ])
     }
 
@@ -175,6 +194,12 @@ impl RunManifest {
             .and_then(|v| v.as_str())
             .unwrap_or(crate::memory::long_term::skill_store::LEGACY_DEVICE)
             .to_string();
+        // Pre-chaos manifests never injected environment faults.
+        let chaos = j
+            .get("chaos")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
         Ok(RunManifest {
             n_tasks,
             seeds,
@@ -188,6 +213,7 @@ impl RunManifest {
             exchange_adaptive,
             lease_batches,
             lease_batch,
+            chaos,
         })
     }
 }
@@ -818,6 +844,7 @@ mod tests {
             exchange_adaptive: true,
             lease_batches: 6,
             lease_batch: 5,
+            chaos: "tc=0.3,drop=0,sigma=0.2,bias=0,seed=7".to_string(),
         };
         rd.write_manifest(&m).unwrap();
         assert_eq!(rd.read_manifest().unwrap(), Some(m));
@@ -841,6 +868,7 @@ mod tests {
         assert_eq!(m.device, "a100-like", "pre-device manifests read as the legacy preset");
         assert!(!m.exchange_adaptive, "pre-elastic manifests read as fixed windows");
         assert_eq!((m.lease_batches, m.lease_batch), (0, 0), "and as non-batch-sliced");
+        assert_eq!(m.chaos, "", "pre-chaos manifests read as chaos-free");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -859,6 +887,7 @@ mod tests {
             exchange_adaptive: false,
             lease_batches: 0,
             lease_batch: 0,
+            chaos: String::new(),
         };
         let mut other_shard = base.clone();
         other_shard.shards = 4;
@@ -888,6 +917,15 @@ mod tests {
         let mut other_device = base.clone();
         other_device.device = "tpu-like".to_string();
         assert!(!base.same_matrix(&other_device));
+        // ...but modulo-device (the heterogeneous-fleet merge predicate) a
+        // device difference is the ONE permitted identity delta.
+        assert!(base.same_matrix_modulo_device(&other_device));
+        // A chaos config is identity under both predicates: chaotic cells
+        // saw corrupted measurements no clean run produced.
+        let mut other_chaos = base.clone();
+        other_chaos.chaos = "tc=0.3,drop=0,sigma=0,bias=0,seed=1".to_string();
+        assert!(!base.same_matrix(&other_chaos));
+        assert!(!base.same_matrix_modulo_device(&other_chaos));
     }
 
     #[test]

@@ -225,6 +225,28 @@ struct ChildParams {
     env: Vec<(String, String)>,
 }
 
+/// The passthrough flags for one worker's shard children: the launch-wide
+/// flags plus the worker's manifest `device` preset (forwarded as
+/// `--device <name>`), if any — how a heterogeneous fleet pins each
+/// machine to its own hardware model. A manifest device that collides
+/// with a launch-wide `--device` flag is refused up front: the two would
+/// silently disagree about which one wins.
+fn worker_passthrough(base: &[String], spec: &WorkerSpec) -> Result<Vec<String>, String> {
+    let mut out = base.to_vec();
+    if let Some(device) = &spec.device {
+        if base.iter().any(|a| a == "--device") {
+            return Err(format!(
+                "worker {:?}: the manifest assigns device {:?} but the launch \
+                 passthrough already carries --device; drop one of them",
+                spec.id, device
+            ));
+        }
+        out.push("--device".to_string());
+        out.push(device.clone());
+    }
+    Ok(out)
+}
+
 impl ChildParams {
     /// "shard 3" / "batch 3" — for logs and error messages.
     fn label(&self) -> String {
@@ -658,6 +680,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
         return run_worker_elastic(cfg, &spec);
     }
     let transport = spec.transport.build()?;
+    let passthrough = worker_passthrough(&cfg.passthrough, spec)?;
     // Zero-copy transports (a shared filesystem) let the children stream
     // straight into the transport root; otherwise they run in local dirs
     // the push engines mirror outward.
@@ -707,7 +730,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
     let child_params = |i: usize, dir: &Path| ChildParams {
         program: cfg.program.clone(),
         subcommand: cfg.subcommand.clone(),
-        passthrough: cfg.passthrough.clone(),
+        passthrough: passthrough.clone(),
         dir: dir.to_path_buf(),
         log_path: cfg.run_dir.join(format!("shard-{i}.log")),
         total_shards: cfg.manifest.total_shards,
@@ -837,6 +860,7 @@ fn run_worker_elastic(cfg: &WorkerConfig, spec: &WorkerSpec) -> Result<WorkerRep
     })?;
     let leases = lease_spec.build().map_err(|e| format!("lease transport: {e}"))?;
     let transport = spec.transport.build()?;
+    let passthrough = worker_passthrough(&cfg.passthrough, spec)?;
     // Elastic children always run in local dirs mirrored outward by a push
     // engine — never zero-copy — so a re-dispatched batch's recompute
     // happens privately and only newline-complete deterministic bytes ever
@@ -896,7 +920,7 @@ fn run_worker_elastic(cfg: &WorkerConfig, spec: &WorkerSpec) -> Result<WorkerRep
         let params = ChildParams {
             program: cfg.program.clone(),
             subcommand: cfg.subcommand.clone(),
-            passthrough: cfg.passthrough.clone(),
+            passthrough: passthrough.clone(),
             dir: dir.clone(),
             log_path: cfg.run_dir.join(format!("batch-{}.log", lease.batch)),
             total_shards: total_batches,
@@ -1533,4 +1557,42 @@ fn launch_workers_elastic(cfg: &FleetConfig, out_rd: RunDir) -> Result<FleetRepo
             .collect(),
         merge,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::transport::{TransportKind, TransportSpec};
+
+    fn spec(device: Option<&str>) -> WorkerSpec {
+        WorkerSpec {
+            id: "w0".to_string(),
+            shard_lo: 0,
+            shard_hi: 0,
+            transport: TransportSpec {
+                kind: TransportKind::MirrorDir,
+                root: PathBuf::from("/tmp/unused"),
+            },
+            device: device.map(str::to_string),
+        }
+    }
+
+    #[test]
+    fn worker_passthrough_forwards_the_manifest_device() {
+        let base = vec!["--level".to_string(), "1".to_string()];
+        let out = worker_passthrough(&base, &spec(None)).unwrap();
+        assert_eq!(out, base);
+        let out = worker_passthrough(&base, &spec(Some("tpu-like"))).unwrap();
+        assert_eq!(out, vec!["--level", "1", "--device", "tpu-like"]);
+    }
+
+    #[test]
+    fn worker_passthrough_refuses_a_conflicting_launch_wide_device() {
+        let base = vec!["--device".to_string(), "a100-like".to_string()];
+        let err = worker_passthrough(&base, &spec(Some("tpu-like"))).unwrap_err();
+        assert!(err.contains("--device"), "{err}");
+        assert!(err.contains("tpu-like"), "{err}");
+        // No manifest device: the launch-wide flag alone is fine.
+        assert_eq!(worker_passthrough(&base, &spec(None)).unwrap(), base);
+    }
 }

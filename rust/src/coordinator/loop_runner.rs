@@ -11,6 +11,7 @@ use crate::agents::{
 };
 use crate::baselines::Strategy;
 use crate::bench_suite::Task;
+use crate::device::faults::{ChaosConfig, Fault};
 use crate::device::machine::DeviceSpec;
 use crate::device::metrics::ToolVersion;
 use crate::kir::schedule::Schedule;
@@ -115,6 +116,14 @@ pub struct LoopConfig {
     /// of the per-round hot path; `--no-retrieval-cache` turns it off for
     /// A/B runs.
     pub retrieval_cache: bool,
+    /// Environment-fault chaos layer (`--chaos`). When set, a *separate*
+    /// deterministic RNG stream — derived per (chaos seed, run seed,
+    /// strategy, task) — injects transient compile failures into fresh
+    /// candidates and corrupts what the Reviewer measures (see
+    /// [`reviewer::review_chaotic`]). The cell's own stream is untouched,
+    /// so a chaos config with every knob at zero is byte-identical to no
+    /// chaos, and chaotic runs shard/merge/resume exactly like clean ones.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Default for LoopConfig {
@@ -128,6 +137,7 @@ impl Default for LoopConfig {
             skills: None,
             memory_dir: None,
             retrieval_cache: true,
+            chaos: None,
         }
     }
 }
@@ -138,6 +148,15 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
         cfg.run_seed,
         &[label(strategy.name), label(&task.id)],
     ));
+    // Chaos stream: derived per (chaos seed, run seed, strategy, task) and
+    // kept entirely separate from the cell stream above. Per-cell derivation
+    // means sharding and resume never change which chaos draws a cell sees.
+    let mut chaos_rng = cfg.chaos.as_ref().map(|c| {
+        Rng::new(derive_seed(
+            c.seed,
+            &[label("chaos"), cfg.run_seed, label(strategy.name), label(&task.id)],
+        ))
+    });
 
     // Whether this run's agent stack *notices* exploitable operand
     // structure at all. Noticing is a property of the whole run (a blind
@@ -188,7 +207,19 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
     let mut skill_obs: Vec<SkillObs> = Vec::new();
 
     // ---- Seed generation + selection (Generator + Reviewer) ----
-    let seeds = generator::generate_seeds(task, strategy.n_seeds, &strategy.policy, &mut rng);
+    let mut seeds = generator::generate_seeds(task, strategy.n_seeds, &strategy.policy, &mut rng);
+    // Chaos: a transient toolchain failure can hit any fresh candidate —
+    // same injection idiom as the Generator's own seed faults, but
+    // single-fix and retry-clearable, so the repair branch shrugs it off.
+    if let (Some(c), Some(crng)) = (cfg.chaos.as_ref(), chaos_rng.as_mut()) {
+        if c.transient_compile_p > 0.0 {
+            for seed in seeds.iter_mut() {
+                if crng.chance(c.transient_compile_p) {
+                    seed.faults.push(Fault::transient(MethodId::LaunchTune));
+                }
+            }
+        }
+    }
     let mut version_counter = seeds.len() as u32;
     let mut best: Option<(f64, Schedule)> = None;
     let mut base: Option<(KernelState, reviewer::Review)> = None;
@@ -196,7 +227,15 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
     let mut seed_speedup = None;
 
     for seed in &seeds {
-        let review = reviewer::review_with_eager(task, seed, &cfg.dev, cfg.tool, &mut rng, consts);
+        let review = reviewer::review_chaotic(
+            task,
+            seed,
+            &cfg.dev,
+            cfg.tool,
+            &mut rng,
+            consts,
+            cfg.chaos.as_ref().zip(chaos_rng.as_mut()),
+        );
         if review.ok() {
             let sp = review.speedup.unwrap();
             if seed_speedup.map(|s| sp > s).unwrap_or(true) {
@@ -297,13 +336,14 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
                 }
             };
 
-            let review = reviewer::review_with_eager(
+            let review = reviewer::review_chaotic(
                 task,
                 &state,
                 &cfg.dev,
                 cfg.tool,
                 &mut round_rng,
                 consts,
+                cfg.chaos.as_ref().zip(chaos_rng.as_mut()),
             );
             rounds.push(RoundRecord {
                 round,
@@ -448,7 +488,7 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
         last_method = Some(plan.method);
 
         version_counter += 1;
-        let candidate = optimizer::execute(
+        let mut candidate = optimizer::execute(
             task,
             base_state,
             &plan,
@@ -457,13 +497,20 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
             version_counter,
             &mut round_rng,
         );
-        let review = reviewer::review_with_eager(
+        if let (Some(c), Some(crng)) = (cfg.chaos.as_ref(), chaos_rng.as_mut()) {
+            if c.transient_compile_p > 0.0 && crng.chance(c.transient_compile_p) {
+                candidate.faults.push(Fault::transient(plan.method));
+            }
+        }
+        let transient_hit = candidate.faults.iter().any(|f| f.kind.is_transient());
+        let review = reviewer::review_chaotic(
             task,
             &candidate,
             &cfg.dev,
             cfg.tool,
             &mut round_rng,
             consts,
+            cfg.chaos.as_ref().zip(chaos_rng.as_mut()),
         );
         rounds.push(RoundRecord {
             round,
@@ -477,8 +524,12 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
         // Harvest the (case, method, outcome) observation for the
         // persistent skill store; gain is measured against the base kernel
         // the method was applied to, and the device preset keys the store
-        // partition the stat lands in.
-        if let Some(case) = retrieval_result.as_ref().and_then(|r| r.matched_case) {
+        // partition the stat lands in. A transient toolchain failure says
+        // nothing about the method — recording it as a failed try would let
+        // chaos silently corrupt the learned stats, so it is skipped.
+        if transient_hit {
+            // skip harvest
+        } else if let Some(case) = retrieval_result.as_ref().and_then(|r| r.matched_case) {
             skill_obs.push(SkillObs {
                 case_id: case.to_string(),
                 method: plan.method,
@@ -510,7 +561,11 @@ pub fn run_task(task: &Task, strategy: &Strategy, cfg: &LoopConfig) -> TaskResul
                 base = Some((candidate, review));
             }
         } else {
-            if strategy.use_short_term_opt {
+            // Same protection for the short-term trajectory memory: a
+            // transient toolchain failure is not evidence against the
+            // method, so the failed-try record is withheld; the retry's
+            // outcome lands through the post-repair bookkeeping instead.
+            if strategy.use_short_term_opt && !transient_hit {
                 opt_mem.record(plan.method, None, round, candidate.version);
             }
             pending_method = Some(plan.method);
@@ -621,6 +676,52 @@ mod tests {
             assert!(r.rounds.len() <= 30);
             let r2 = run_task(t, &baselines::kernelskill(), &cfg());
             assert!(r2.rounds.len() <= 15);
+        }
+    }
+
+    #[test]
+    fn chaos_with_zero_knobs_matches_a_clean_run() {
+        let tasks = bench_suite::level_suite(42, 1);
+        let mut c = cfg();
+        c.chaos = Some(ChaosConfig::parse("seed=7").unwrap());
+        let a = run_task(&tasks[5], &baselines::kernelskill(), &cfg());
+        let b = run_task(&tasks[5], &baselines::kernelskill(), &c);
+        assert_eq!(a.best_speedup, b.best_speedup);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        assert_eq!(a.rounds, b.rounds);
+    }
+
+    #[test]
+    fn transient_compile_chaos_repairs_and_still_converges() {
+        let tasks = bench_suite::level_suite(42, 1);
+        let mut c = cfg();
+        c.chaos = Some(ChaosConfig::parse("tc=0.5,seed=11").unwrap());
+        let mut chaotic_repairs = 0usize;
+        let mut clean_repairs = 0usize;
+        for t in tasks.iter().take(10) {
+            let chaotic = run_task(t, &baselines::kernelskill(), &c);
+            assert!(chaotic.success, "{}: transient chaos must not kill the cell", t.id);
+            assert!(chaotic.best_speedup > 0.0, "{}", t.id);
+            chaotic_repairs += chaotic.repair_attempts;
+            clean_repairs += run_task(t, &baselines::kernelskill(), &cfg()).repair_attempts;
+        }
+        assert!(
+            chaotic_repairs > clean_repairs,
+            "transient faults must route through the repair branch ({chaotic_repairs} vs {clean_repairs})"
+        );
+    }
+
+    #[test]
+    fn transient_chaos_never_pollutes_skill_observations() {
+        // At p=1 every fresh candidate hits a transient toolchain failure,
+        // so every optimize round is a transient round: the harvest must
+        // withhold all of them rather than record bogus failed tries.
+        let tasks = bench_suite::level_suite(42, 1);
+        let mut c = cfg();
+        c.chaos = Some(ChaosConfig::parse("tc=1,seed=5").unwrap());
+        for t in tasks.iter().take(5) {
+            let r = run_task(t, &baselines::kernelskill(), &c);
+            assert!(r.skill_obs.is_empty(), "{}: {:?}", t.id, r.skill_obs);
         }
     }
 

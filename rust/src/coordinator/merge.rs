@@ -7,9 +7,12 @@
 //! dir that is indistinguishable from a single-process run:
 //!
 //!   * manifests are validated — every input must describe the same cell
-//!     matrix (shard fields aside); the output manifest is unsharded, so
-//!     the merged dir can itself be `report`ed, `--resume`d, or merged
-//!     again.
+//!     matrix (shard fields aside; the device preset may differ, which is
+//!     how heterogeneous fleets merge — per-device evidence stays apart in
+//!     the skill store's partitions and the output manifest records the
+//!     sorted `+`-joined preset set); the output manifest is unsharded, so
+//!     the merged dir can itself be `report`ed, `--resume`d (homogeneous
+//!     inputs only), or merged again.
 //!   * `results.jsonl` lines are unioned with torn tails tolerated and
 //!     written in canonical key order, so merge output is
 //!     byte-deterministic whatever order shards are given in.
@@ -324,10 +327,17 @@ impl MergeWatcher {
     }
 
     /// Validate a newly appeared manifest against the first one seen.
+    /// Compatibility is [`RunManifest::same_matrix_modulo_device`]: slices
+    /// of one experiment may legitimately differ in device preset (a
+    /// heterogeneous fleet), because their evidence stays separated by the
+    /// skill store's per-device partitions and their cells are disjoint —
+    /// any *overlapping* cells from different devices still collide in
+    /// `fold_cell`'s payload-conflict check and fail loudly. Every other
+    /// identity field must match exactly.
     fn fold_manifest(&mut self, i: usize, manifest: RunManifest) -> Result<(), String> {
         match &self.base {
             None => self.base = Some(manifest.clone()),
-            Some(b) if !b.same_matrix(&manifest) => {
+            Some(b) if !b.same_matrix_modulo_device(&manifest) => {
                 return Err(format!(
                     "{} was written for a different cell matrix than {} \
                      ({manifest:?} vs {b:?}); refusing to mix results",
@@ -607,11 +617,25 @@ impl MergeWatcher {
         let mut manifest = base;
         // Placement is erased from the output: it is a whole (or partial)
         // matrix now, not a shard or a lease batch of one. Experiment
-        // identity (exchange_epoch, exchange_adaptive, …) is kept.
+        // identity (exchange_epoch, exchange_adaptive, chaos, …) is kept.
         manifest.shards = 1;
         manifest.shard_index = 0;
         manifest.lease_batches = 0;
         manifest.lease_batch = 0;
+        // Device: the sorted join of every input's preset. Homogeneous
+        // merges keep the single name (byte-identical to the pre-relaxation
+        // output); a heterogeneous fleet records e.g. "a100-like+tpu-like",
+        // which deliberately matches no single preset — the merged dir can
+        // be reported and re-merged, but not resumed under one device.
+        let mut devices: Vec<&str> = self
+            .inputs
+            .iter()
+            .filter_map(|inp| inp.manifest.as_ref())
+            .flat_map(|m| m.device.split('+'))
+            .collect();
+        devices.sort_unstable();
+        devices.dedup();
+        manifest.device = devices.join("+");
         out_rd
             .write_manifest(&manifest)
             .map_err(|e| format!("writing merged manifest: {e}"))?;

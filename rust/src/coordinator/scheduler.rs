@@ -521,6 +521,7 @@ pub fn run_strategy(
         lease_batches: opts.batch.map_or(0, |b| b.count),
         lease_batch: opts.batch.map_or(0, |b| b.index),
         device: cfg.dev.name.to_string(),
+        chaos: cfg.chaos.as_ref().map(|c| c.render()).unwrap_or_default(),
     };
     let mut restored: std::collections::BTreeMap<usize, TaskResult> = Default::default();
     // Fold of every checkpointed cell's observations (all strategies), so

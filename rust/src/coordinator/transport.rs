@@ -601,6 +601,13 @@ pub struct WorkerSpec {
     pub shard_hi: usize,
     /// The worker's transport endpoint.
     pub transport: TransportSpec,
+    /// Device preset this worker's shards run against (heterogeneous
+    /// fleet). `None` = whatever the launch-wide passthrough (or the
+    /// default) says. When set, the launcher appends `--device <name>` to
+    /// this worker's child invocations; its evidence lands in that preset's
+    /// skill-store partition and the final merge records the joined preset
+    /// set. Validated against the built-in presets at parse time.
+    pub device: Option<String>,
 }
 
 impl WorkerSpec {
@@ -646,10 +653,14 @@ impl WorkerManifest {
     /// {"version": 1, "total_shards": 2, "workers": [
     ///   {"id": "w0", "shard_lo": 0, "shard_hi": 0,
     ///    "transport": {"kind": "mirror-dir", "root": "/srv/ks/w0"}},
-    ///   {"id": "w1", "shard_lo": 1, "shard_hi": 1,
+    ///   {"id": "w1", "shard_lo": 1, "shard_hi": 1, "device": "tpu-like",
     ///    "transport": {"kind": "local-fs", "root": "/mnt/shared/w1"}}
     /// ]}
     /// ```
+    ///
+    /// Any row (static or elastic) may carry an optional `"device"` preset
+    /// name — a heterogeneous fleet; the launcher forwards it to that
+    /// worker's children as `--device`.
     ///
     /// and the elastic format (no ranges anywhere; `lease` is the shared
     /// claim root):
@@ -743,11 +754,32 @@ impl WorkerManifest {
             if id.is_empty() {
                 return Err(format!("worker manifest entry {i}: empty id"));
             }
+            let device = match w.get("device") {
+                None => None,
+                Some(v) => {
+                    let name = v.as_str().ok_or_else(|| {
+                        format!("worker manifest entry {i} ({id}): device must be a string")
+                    })?;
+                    if crate::device::machine::DeviceSpec::by_name(name).is_none() {
+                        let known: Vec<&str> = crate::device::machine::DeviceSpec::presets()
+                            .iter()
+                            .map(|d| d.name)
+                            .collect();
+                        return Err(format!(
+                            "worker manifest entry {i} ({id}): unknown device preset \
+                             {name:?} (known presets: {})",
+                            known.join(", ")
+                        ));
+                    }
+                    Some(name.to_string())
+                }
+            };
             workers.push(WorkerSpec {
                 id,
                 shard_lo,
                 shard_hi,
                 transport,
+                device,
             });
         }
         let m = WorkerManifest {
@@ -1752,6 +1784,29 @@ mod tests {
     }
 
     #[test]
+    fn manifest_parses_and_validates_per_worker_devices() {
+        let m = WorkerManifest::parse(
+            r#"{"version":1,"total_shards":2,"workers":[
+              {"id":"a","shard_lo":0,"shard_hi":0,"device":"tpu-like",
+               "transport":{"kind":"mirror-dir","root":"/tmp/ks-md-a"}},
+              {"id":"b","shard_lo":1,"shard_hi":1,
+               "transport":{"kind":"mirror-dir","root":"/tmp/ks-md-b"}}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.worker("a").unwrap().device.as_deref(), Some("tpu-like"));
+        assert_eq!(m.worker("b").unwrap().device, None, "device is optional per row");
+
+        let err = WorkerManifest::parse(
+            r#"{"total_shards":1,"workers":[{"id":"a","shard_lo":0,"shard_hi":0,
+                "device":"voodoo2-like",
+                "transport":{"kind":"mirror-dir","root":"/tmp/ks-md-a"}}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown device preset") && err.contains("cpu-like"), "{err}");
+    }
+
+    #[test]
     fn manifest_refuses_duplicate_ids() {
         let err =
             WorkerManifest::parse(&manifest_text(4, &[("a", 0, 1), ("a", 2, 3)])).unwrap_err();
@@ -2054,6 +2109,7 @@ mod tests {
                     kind: TransportKind::MirrorDir,
                     root: root.join("ta"),
                 },
+                device: None,
             },
             WorkerSpec {
                 id: "b".to_string(),
@@ -2063,6 +2119,7 @@ mod tests {
                     kind: TransportKind::MirrorDir,
                     root: root.join("tb"),
                 },
+                device: None,
             },
         ];
         let transports: Vec<Box<dyn RunDirTransport>> =

@@ -9,6 +9,14 @@
 //! candidates (expected ~F/2 rounds); one **without** samples with
 //! replacement and can cycle through known-failing edits — exactly the
 //! oscillation failure mode of §4.1.5.
+//!
+//! On top of the *kernel* faults sits the **environment chaos layer**
+//! ([`ChaosConfig`]): harness faults the paper's single healthy testbed
+//! never produced — transient compile failures (succeed-on-retry), a flaky
+//! profiler (noisy or dropped measurements), and a lying cost model (biased
+//! planner-visible counters). Chaos is seeded and derived per cell, so a
+//! chaotic run is exactly as deterministic (shardable, mergeable,
+//! resumable) as a clean one.
 
 use crate::kir::transforms::{Complexity, MethodId};
 use crate::util::rng::Rng;
@@ -25,13 +33,28 @@ pub enum FaultKind {
     Nan,
     /// Builds, intermittently wrong (missing sync after staging edit).
     Race,
+    /// *Environment* fault, not an edit bug: the build box flaked (driver
+    /// hiccup, OOM-killed nvcc). Injected only by the chaos layer; exactly
+    /// one candidate fix ("retry the build") which is always the true fix,
+    /// so the repair branch clears it in a single diagnose→repair round.
+    TransientCompile,
 }
 
 impl FaultKind {
     /// Compile-stage faults are reported by the Compiler; the rest by the
     /// Verifier.
     pub fn is_compile(&self) -> bool {
-        matches!(self, FaultKind::CompileSyntax | FaultKind::CompileResource)
+        matches!(
+            self,
+            FaultKind::CompileSyntax | FaultKind::CompileResource | FaultKind::TransientCompile
+        )
+    }
+
+    /// Environment faults come from the chaos layer, not the edit: their
+    /// repair is deterministic (retry) and they must never count against a
+    /// method's skill statistics.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, FaultKind::TransientCompile)
     }
 
     pub fn signature(&self, method: MethodId) -> String {
@@ -41,6 +64,7 @@ impl FaultKind {
             FaultKind::WrongNumerics => "verification failed: max abs err 3.2e+01",
             FaultKind::Nan => "verification failed: output contains NaN",
             FaultKind::Race => "verification failed intermittently (run-to-run variance)",
+            FaultKind::TransientCompile => "nvcc fatal: transient driver failure (retry)",
         };
         format!("{what} [after {}]", method.name())
     }
@@ -59,6 +83,113 @@ pub struct Fault {
     /// Translation-stage defect in unfamiliar generated code: diagnosis is
     /// materially harder and botched fixes regress more.
     pub hard: bool,
+}
+
+impl Fault {
+    /// A chaos-injected transient compile failure: one candidate fix
+    /// ("retry"), always correct, never hard. Succeed-on-retry by
+    /// construction.
+    pub fn transient(method: MethodId) -> Fault {
+        Fault {
+            kind: FaultKind::TransientCompile,
+            injected_by: method,
+            signature: FaultKind::TransientCompile.signature(method),
+            true_fix: 0,
+            n_candidate_fixes: 1,
+            hard: false,
+        }
+    }
+}
+
+/// Deterministic environment-chaos configuration, parsed from the CLI
+/// `--chaos` spec string (e.g. `"tc=0.3,drop=0.05,sigma=0.2,bias=0.1,seed=7"`).
+///
+/// Every knob defaults to 0 (off); `seed` decorrelates the chaos stream
+/// from the run seed. The canonical [`ChaosConfig::render`] form is what
+/// the run manifest records — chaos is experiment identity, so resume and
+/// merge refuse to mix differing chaos configs. All chaos randomness is
+/// drawn from a dedicated RNG derived per (run seed, chaos seed, strategy,
+/// task), never from the cell's own stream, so `--chaos` with all knobs at
+/// 0 is byte-identical to no `--chaos` at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Probability a fresh candidate's build transiently fails
+    /// (succeed-on-retry via the repair branch).
+    pub transient_compile_p: f64,
+    /// Probability the profiler drops the measurement for a healthy kernel
+    /// (the `RawProfile` goes missing; timing survives).
+    pub profile_drop_p: f64,
+    /// Flaky-profiler noise amplitude: measured latency is scaled by
+    /// `1 ± sigma` (uniform), on top of the intrinsic measurement noise.
+    pub profile_sigma: f64,
+    /// Lying cost model: planner-visible profile counters are biased by up
+    /// to this relative fraction (uniform per counter draw).
+    pub cost_bias: f64,
+    /// Chaos stream seed, mixed into the per-cell derivation.
+    pub seed: u64,
+}
+
+impl ChaosConfig {
+    /// Parse a `k=v,k=v` spec. Keys: `tc`, `drop`, `sigma`, `bias`, `seed`.
+    /// Unknown keys, malformed numbers, and out-of-range probabilities are
+    /// errors; an empty spec is an error (omit `--chaos` for no chaos).
+    pub fn parse(spec: &str) -> Result<ChaosConfig, String> {
+        if spec.trim().is_empty() {
+            return Err("--chaos spec is empty (omit the flag for no chaos)".to_string());
+        }
+        let mut cfg = ChaosConfig {
+            transient_compile_p: 0.0,
+            profile_drop_p: 0.0,
+            profile_sigma: 0.0,
+            cost_bias: 0.0,
+            seed: 0,
+        };
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--chaos entry '{part}' is not k=v"))?;
+            let fval = || -> Result<f64, String> {
+                let v: f64 = val
+                    .parse()
+                    .map_err(|_| format!("--chaos {key}: '{val}' is not a number"))?;
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(format!("--chaos {key}: {val} outside [0, 1]"));
+                }
+                Ok(v)
+            };
+            match key {
+                "tc" => cfg.transient_compile_p = fval()?,
+                "drop" => cfg.profile_drop_p = fval()?,
+                "sigma" => cfg.profile_sigma = fval()?,
+                "bias" => cfg.cost_bias = fval()?,
+                "seed" => {
+                    cfg.seed = val
+                        .parse()
+                        .map_err(|_| format!("--chaos seed: '{val}' is not a u64"))?
+                }
+                other => {
+                    return Err(format!(
+                        "--chaos key '{other}' unknown (expected tc, drop, sigma, bias, seed)"
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Canonical spec string: all five knobs in fixed order. This is what
+    /// the manifest records; `parse(render())` round-trips exactly.
+    pub fn render(&self) -> String {
+        format!(
+            "tc={},drop={},sigma={},bias={},seed={}",
+            self.transient_compile_p,
+            self.profile_drop_p,
+            self.profile_sigma,
+            self.cost_bias,
+            self.seed
+        )
+    }
 }
 
 /// Base bug probability per edit-complexity class. These rates are the main
@@ -228,5 +359,51 @@ mod tests {
     fn signatures_name_the_method() {
         let sig = FaultKind::Nan.signature(MethodId::PrecisionDowncast);
         assert!(sig.contains("precision_downcast"));
+    }
+
+    #[test]
+    fn transient_faults_are_compile_stage_and_fix_on_first_retry() {
+        let f = Fault::transient(MethodId::TileSmem);
+        assert!(f.kind.is_compile(), "transient failures surface at build time");
+        assert!(f.kind.is_transient());
+        assert_eq!(f.n_candidate_fixes, 1);
+        let mut rng = Rng::new(9);
+        assert_eq!(attempt_fix(&mut rng, &f, 0, 0.0), RepairOutcome::Fixed);
+        // No injected fault kind is transient: the chaos layer is the only
+        // producer.
+        let mut r = Rng::new(4);
+        for _ in 0..500 {
+            if let Some(f) = sample_fault(&mut r, MethodId::TileSmem, 0.0, 2.0) {
+                assert!(!f.kind.is_transient());
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_spec_round_trips_canonically() {
+        let cfg = ChaosConfig::parse("tc=0.3,drop=0.05,sigma=0.2,bias=0.1,seed=7").unwrap();
+        assert_eq!(cfg.transient_compile_p, 0.3);
+        assert_eq!(cfg.profile_drop_p, 0.05);
+        assert_eq!(cfg.profile_sigma, 0.2);
+        assert_eq!(cfg.cost_bias, 0.1);
+        assert_eq!(cfg.seed, 7);
+        let rendered = cfg.render();
+        assert_eq!(rendered, "tc=0.3,drop=0.05,sigma=0.2,bias=0.1,seed=7");
+        assert_eq!(ChaosConfig::parse(&rendered).unwrap(), cfg);
+        // Partial specs default the missing knobs to 0.
+        let partial = ChaosConfig::parse("tc=0.5").unwrap();
+        assert_eq!(partial.profile_drop_p, 0.0);
+        assert_eq!(partial.seed, 0);
+        assert_eq!(ChaosConfig::parse(&partial.render()).unwrap(), partial);
+    }
+
+    #[test]
+    fn chaos_spec_rejects_garbage() {
+        assert!(ChaosConfig::parse("").is_err());
+        assert!(ChaosConfig::parse("tc").is_err());
+        assert!(ChaosConfig::parse("tc=abc").is_err());
+        assert!(ChaosConfig::parse("tc=1.5").is_err());
+        assert!(ChaosConfig::parse("flub=0.1").is_err());
+        assert!(ChaosConfig::parse("seed=-1").is_err());
     }
 }

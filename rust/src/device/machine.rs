@@ -1,9 +1,14 @@
 //! Device specifications for the analytical performance model.
 //!
-//! Two presets: an A100-like card (the paper's testbed) and a TPU-like core
-//! (the hardware-adaptation target). Only *ratios* matter downstream — the
-//! decision workflow normalizes everything to pct-of-peak, and reproduction
-//! targets the tables' shape, not absolute microseconds.
+//! Five presets: an A100-like card (the paper's testbed), a TPU-like core
+//! (the hardware-adaptation target), an H100-like card (TMA-era async-copy
+//! costs), a consumer-GPU-like card (small SRAM, occupancy pressure), and a
+//! CPU-like socket (no shared memory, wide vector units). Only *ratios*
+//! matter downstream — the decision workflow normalizes everything to
+//! pct-of-peak, and reproduction targets the tables' shape, not absolute
+//! microseconds. Preset names double as skill-store partition keys, so each
+//! preset is also a cross-device transfer-learning experiment via the
+//! pooled `CROSS_DEVICE_DISCOUNT` fallback.
 
 /// Hardware model parameters. Units: bytes, FLOP/s, seconds.
 #[derive(Debug, Clone, PartialEq)]
@@ -59,11 +64,74 @@ impl DeviceSpec {
         }
     }
 
+    /// NVIDIA H100-SXM-like numbers. The interesting delta vs A100 is the
+    /// TMA-style async-copy machinery: staging traffic is effectively free
+    /// to issue, modeled here as a much cheaper launch/setup cost plus a
+    /// bigger per-block scratchpad (228 KiB smem/SM era) and fatter HBM3.
+    pub fn h100_like() -> DeviceSpec {
+        DeviceSpec {
+            name: "h100-like",
+            hbm_bytes_per_s: 3.35e12,
+            fp32_flops: 67.0e12,
+            mxu_flops: 495.0e12, // TF32 tensor core (wgmma path)
+            scratch_bytes: 224 * 1024,
+            sm_count: 132,
+            launch_overhead_s: 2.0e-6, // TMA descriptors amortize setup
+            max_block_threads: 1024,
+            l2_bytes: 50 * 1024 * 1024,
+        }
+    }
+
+    /// Consumer-GPU-like numbers (a 4090-class card): strong ALUs behind a
+    /// narrow GDDR bus, and a *small* per-block SRAM budget (48 KiB default
+    /// smem window) that puts staging schedules under occupancy pressure —
+    /// `scratch_overflow` trips far earlier than on the datacenter parts.
+    pub fn consumer_gpu_like() -> DeviceSpec {
+        DeviceSpec {
+            name: "consumer-gpu-like",
+            hbm_bytes_per_s: 1.008e12,
+            fp32_flops: 82.6e12,
+            mxu_flops: 165.2e12, // TF32 tensor core
+            scratch_bytes: 48 * 1024,
+            sm_count: 128,
+            launch_overhead_s: 6.0e-6,
+            max_block_threads: 1024,
+            l2_bytes: 72 * 1024 * 1024,
+        }
+    }
+
+    /// CPU-socket-like numbers: wide vector units (AVX-512-class) and an
+    /// AMX-style matrix path, but **no shared-memory scratchpad at all** —
+    /// `scratch_bytes = 0` makes every staging schedule illegal
+    /// (`scratch_overflow`), which in turn makes the MXU path unreachable
+    /// (`mxu_unstaged` requires staging). Naive per-op schedules stay legal
+    /// because an unstaged group's scratch footprint is zero.
+    pub fn cpu_like() -> DeviceSpec {
+        DeviceSpec {
+            name: "cpu-like",
+            hbm_bytes_per_s: 0.3e12, // DDR5 dual-socket class
+            fp32_flops: 2.0e12,
+            mxu_flops: 8.0e12, // AMX tiles — structurally unreachable here
+            scratch_bytes: 0,
+            sm_count: 64, // cores
+            launch_overhead_s: 5.0e-7, // a function call, not a grid launch
+            max_block_threads: 256,
+            l2_bytes: 96 * 1024 * 1024,
+        }
+    }
+
     /// All built-in presets. Preset `name`s double as skill-store partition
-    /// keys: learned stats are recorded per device so A100-like and
-    /// TPU-like evidence never pollute each other.
+    /// keys: learned stats are recorded per device so evidence from
+    /// different presets never pollutes each other (retrieval falls back to
+    /// the pooled cross-device view at a discount).
     pub fn presets() -> Vec<DeviceSpec> {
-        vec![DeviceSpec::a100_like(), DeviceSpec::tpu_like()]
+        vec![
+            DeviceSpec::a100_like(),
+            DeviceSpec::tpu_like(),
+            DeviceSpec::h100_like(),
+            DeviceSpec::consumer_gpu_like(),
+            DeviceSpec::cpu_like(),
+        ]
     }
 
     /// Look up a preset by its `name` (e.g. a skill-store partition key).
@@ -89,11 +157,12 @@ mod tests {
 
     #[test]
     fn presets_are_sane() {
-        for dev in [DeviceSpec::a100_like(), DeviceSpec::tpu_like()] {
-            assert!(dev.hbm_bytes_per_s > 1e11);
-            assert!(dev.mxu_flops > dev.fp32_flops);
-            assert!(dev.ridge_mxu() > dev.ridge_fp32());
-            assert!(dev.launch_overhead_s > 0.0);
+        for dev in DeviceSpec::presets() {
+            assert!(dev.hbm_bytes_per_s > 1e11, "{}", dev.name);
+            assert!(dev.mxu_flops > dev.fp32_flops, "{}", dev.name);
+            assert!(dev.ridge_mxu() > dev.ridge_fp32(), "{}", dev.name);
+            assert!(dev.launch_overhead_s > 0.0, "{}", dev.name);
+            assert!(dev.sm_count > 0 && dev.max_block_threads > 0, "{}", dev.name);
         }
     }
 
@@ -104,9 +173,40 @@ mod tests {
 
     #[test]
     fn presets_resolve_by_name() {
-        for dev in DeviceSpec::presets() {
+        let presets = DeviceSpec::presets();
+        assert_eq!(presets.len(), 5);
+        for dev in &presets {
             assert_eq!(DeviceSpec::by_name(dev.name).map(|d| d.name), Some(dev.name));
         }
-        assert!(DeviceSpec::by_name("h100-like").is_none());
+        assert!(DeviceSpec::by_name("unknown-gpu").is_none());
+    }
+
+    #[test]
+    fn preset_names_are_unique() {
+        let mut names: Vec<&str> = DeviceSpec::presets().iter().map(|d| d.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 5);
+    }
+
+    #[test]
+    fn cpu_like_has_no_scratchpad_and_cheap_launches() {
+        let cpu = DeviceSpec::cpu_like();
+        assert_eq!(cpu.scratch_bytes, 0, "cpu-like models no shared memory");
+        assert!(cpu.launch_overhead_s < DeviceSpec::a100_like().launch_overhead_s);
+        // The small-SRAM consumer preset sits strictly between cpu (none)
+        // and the datacenter parts.
+        let consumer = DeviceSpec::consumer_gpu_like();
+        assert!(consumer.scratch_bytes > 0);
+        assert!(consumer.scratch_bytes < DeviceSpec::a100_like().scratch_bytes);
+    }
+
+    #[test]
+    fn h100_outclasses_a100_on_every_axis() {
+        let (h, a) = (DeviceSpec::h100_like(), DeviceSpec::a100_like());
+        assert!(h.hbm_bytes_per_s > a.hbm_bytes_per_s);
+        assert!(h.mxu_flops > a.mxu_flops);
+        assert!(h.scratch_bytes > a.scratch_bytes);
+        assert!(h.launch_overhead_s < a.launch_overhead_s, "TMA-style async copy");
     }
 }

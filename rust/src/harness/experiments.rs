@@ -56,6 +56,11 @@ pub struct ExpConfig {
     /// timing and for bisecting a suspected cache bug, not for changing
     /// results.
     pub retrieval_cache: bool,
+    /// Environment-fault injection (`--chaos`); None = clean environment.
+    /// Part of the experiment identity: the canonical spec is recorded in
+    /// the run manifest, so resume refuses a different chaos and merge
+    /// refuses to mix chaotic and clean shards.
+    pub chaos: Option<crate::device::faults::ChaosConfig>,
 }
 
 impl Default for ExpConfig {
@@ -76,6 +81,7 @@ impl Default for ExpConfig {
             exchange_adaptive: false,
             device: None,
             retrieval_cache: true,
+            chaos: None,
         }
     }
 }
@@ -85,6 +91,7 @@ impl ExpConfig {
         let mut cfg = LoopConfig {
             memory_dir: self.memory_dir.clone(),
             retrieval_cache: self.retrieval_cache,
+            chaos: self.chaos.clone(),
             ..LoopConfig::default()
         };
         if let Some(dev) = &self.device {

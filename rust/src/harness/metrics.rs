@@ -46,11 +46,13 @@ pub fn fast_p(results: &[&TaskResult], p: f64) -> f64 {
     results.iter().filter(|r| r.best_speedup >= p).count() as f64 / results.len() as f64
 }
 
-/// Split suite results by level.
-pub fn by_level(results: &[TaskResult]) -> [Vec<&TaskResult>; 3] {
-    let mut out: [Vec<&TaskResult>; 3] = [vec![], vec![], vec![]];
+/// Split suite results by level. Four buckets: L1-L3 (the paper tables)
+/// plus the generated Level-4 fused-pipeline workload; out-of-range levels
+/// clamp into the last bucket.
+pub fn by_level(results: &[TaskResult]) -> [Vec<&TaskResult>; 4] {
+    let mut out: [Vec<&TaskResult>; 4] = [vec![], vec![], vec![], vec![]];
     for r in results {
-        let idx = (r.level as usize).saturating_sub(1).min(2);
+        let idx = (r.level as usize).saturating_sub(1).min(3);
         out[idx].push(r);
     }
     out
@@ -108,10 +110,13 @@ mod tests {
             result(2, true, 1.0),
             result(3, true, 1.0),
             result(2, true, 1.0),
+            result(4, true, 1.0),
+            result(9, true, 1.0), // out of range clamps into the L4 bucket
         ];
         let split = by_level(&rs);
         assert_eq!(split[0].len(), 1);
         assert_eq!(split[1].len(), 2);
         assert_eq!(split[2].len(), 1);
+        assert_eq!(split[3].len(), 2);
     }
 }

@@ -28,6 +28,7 @@
 use kernelskill::baselines;
 use kernelskill::bench_suite;
 use kernelskill::coordinator::{self, Branch, LoopConfig};
+use kernelskill::device::faults::ChaosConfig;
 use kernelskill::device::machine::DeviceSpec;
 use kernelskill::harness::{calibrate, experiments, metrics};
 use kernelskill::runtime::{self, Registry, Runtime};
@@ -41,8 +42,8 @@ const SHARDABLE: [&str; 5] = ["suite", "table1", "table2", "table3", "per-round"
 
 /// Matrix-defining flags forwarded verbatim to shard children by `launch`
 /// and `worker`.
-const PASSTHROUGH_FLAGS: [&str; 7] =
-    ["strategy", "level", "take", "seeds", "suite-seed", "workers", "device"];
+const PASSTHROUGH_FLAGS: [&str; 8] =
+    ["strategy", "level", "take", "seeds", "suite-seed", "workers", "device", "chaos"];
 
 /// `--no-retrieval-cache` given in either spelling the hand-rolled parser
 /// produces (bare switch, or `--no-retrieval-cache=1` as forwarded to
@@ -87,6 +88,16 @@ fn fanout_flags(args: &Args) -> Result<(Vec<String>, Option<usize>, usize), Stri
     }
     let max_restarts = args.get_usize("max-restarts", 2)?;
     Ok((passthrough, exchange_epoch, max_restarts))
+}
+
+/// `--chaos tc=..,drop=..,sigma=..,bias=..,seed=..` — environment-fault
+/// injection (see `device::faults::ChaosConfig`). Validated here so a
+/// typo'd spec fails before any work is scheduled.
+fn parse_chaos(args: &Args) -> Result<Option<ChaosConfig>, String> {
+    match args.get("chaos") {
+        None => Ok(None),
+        Some(spec) => ChaosConfig::parse(spec).map(Some),
+    }
 }
 
 fn parse_device(args: &Args) -> Result<Option<DeviceSpec>, String> {
@@ -143,6 +154,7 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
         exchange_adaptive: exchange_adaptive(args),
         device: parse_device(args)?,
         retrieval_cache: !no_retrieval_cache(args),
+        chaos: parse_chaos(args)?,
     })
 }
 
@@ -455,6 +467,7 @@ fn run() -> Result<(), String> {
                 ));
             }
             parse_device(&args)?; // refuse an unknown preset before spawning
+            parse_chaos(&args)?; // refuse a malformed chaos spec likewise
             let program = std::env::current_exe()
                 .map_err(|e| format!("resolving the current executable: {e}"))?;
             let shards = args.get_usize("shards", 2)?;
@@ -480,7 +493,7 @@ fn run() -> Result<(), String> {
                  \n\
                  experiments:\n\
                  \x20 table1 | table2 | table3 | per-round | trajectory\n\
-                 \x20     [--seeds N] [--suite-seed S] [--workers W] [--device D]\n\
+                 \x20     [--seeds N] [--suite-seed S] [--workers W] [--device D] [--chaos C]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M]\n\
                  \x20     [--shards N --shard-index I | --batch-count B --batch-index K]\n\
                  \x20     [--exchange-dir X --exchange-epoch E [--exchange-adaptive]]\n\
@@ -489,9 +502,11 @@ fn run() -> Result<(), String> {
                  \x20 calibrate [--seed S]\n\
                  single runs:\n\
                  \x20 run-task --task <substr> [--strategy <name>] [--seed S] [--memory-dir M] [--device D]\n\
-                 \x20 suite --strategy <name> [--level 1|2|3] [--take N]\n\
+                 \x20 suite --strategy <name> [--level 1|2|3|4] [--take N]\n\
                  \x20     [--run-dir D] [--resume] [--memory-dir M] [--smoke]\n\
-                 \x20     [--shards N --shard-index I] [--device a100-like|tpu-like]\n\
+                 \x20     [--shards N --shard-index I]\n\
+                 \x20     [--device a100-like|tpu-like|h100-like|consumer-gpu-like|cpu-like]\n\
+                 \x20     [--chaos tc=P,drop=P,sigma=S,bias=B,seed=N]   fault injection\n\
                  \x20     [--no-retrieval-cache]   A/B: per-task-run retrieval memo off\n\
                  orchestration:\n\
                  \x20 report --run-dir D     render tables from streamed results.jsonl\n\
@@ -499,7 +514,7 @@ fn run() -> Result<(), String> {
                  \x20     [--watch [--interval-ms N]]   follow still-running shards, then finalize\n\
                  \x20 launch --shards N --run-dir D [--cmd suite|table1|..]\n\
                  \x20     [--strategy S] [--level L] [--take K] [--seeds M] [--workers W]\n\
-                 \x20     [--device D] [--exchange-epoch E] [--max-restarts R]\n\
+                 \x20     [--device D] [--chaos C] [--exchange-epoch E] [--max-restarts R]\n\
                  \x20     spawn N shard processes, restart crashes into --resume, merge into D\n\
                  \x20 launch --manifest workers.json --run-dir D\n\
                  \x20     [--stall-timeout-ms T] [--poll-ms P] [--lease-timeout-ms L]\n\
@@ -539,7 +554,7 @@ fn run_fleet(args: &Args, manifest_path: &str, run_dir: &str) -> Result<(), Stri
     // Matrix and supervision flags must live on the (uniform) `worker`
     // invocations; a flag here would silently apply to nothing.
     let matrix_flags = ["cmd", "exchange", "exchange-epoch", "strategy", "level", "take",
-        "seeds", "suite-seed", "device", "max-restarts", "no-retrieval-cache"];
+        "seeds", "suite-seed", "device", "chaos", "max-restarts", "no-retrieval-cache"];
     for flag in matrix_flags {
         if args.get(flag).is_some() || args.has(flag) {
             return Err(format!(
@@ -608,6 +623,7 @@ fn run_worker_cmd(args: &Args) -> Result<(), String> {
         ));
     }
     parse_device(args)?; // refuse an unknown preset before spawning
+    parse_chaos(args)?; // refuse a malformed chaos spec likewise
     let manifest = coordinator::WorkerManifest::load(std::path::Path::new(manifest_path))?;
     let program = std::env::current_exe()
         .map_err(|e| format!("resolving the current executable: {e}"))?;

@@ -1,0 +1,256 @@
+//! Adversarial environment-fault battery (ISSUE-8): the chaos layer under
+//! hostile knob settings. The contract: chaos *degrades gracefully* —
+//! every cell still converges to a delivered kernel, nothing panics,
+//! nothing is dropped — and chaos *preserves the determinism contract* —
+//! a chaotic 2-shard run merges byte-identical to a chaotic single
+//! process, zero-knob chaos is byte-identical to no chaos, and resume and
+//! merge refuse to mix differing chaos configs (chaos is experiment
+//! identity, recorded in the run manifest).
+
+use std::path::{Path, PathBuf};
+
+use kernelskill::baselines;
+use kernelskill::bench_suite::{self, Task};
+use kernelskill::coordinator::{
+    self, merge_run_dirs, Branch, LoopConfig, SuiteOptions,
+};
+use kernelskill::device::faults::ChaosConfig;
+use kernelskill::harness::experiments;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ks-chaos-{tag}-{}", std::process::id()))
+}
+
+fn small_tasks() -> Vec<Task> {
+    bench_suite::level_suite(42, 1).into_iter().take(3).collect()
+}
+
+const SEEDS: [u64; 2] = [0, 1];
+
+fn chaos_cfg(spec: &str) -> LoopConfig {
+    LoopConfig {
+        chaos: Some(ChaosConfig::parse(spec).unwrap()),
+        ..LoopConfig::default()
+    }
+}
+
+fn read_bytes(path: &Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+#[test]
+fn adversarial_fault_rates_still_converge_every_cell() {
+    // 30% transient compile failures, a profiler that drops every tenth
+    // measurement and jitters the rest by ±50%, and a cost model lying by
+    // up to 30% per counter. Every cell — both memory tiers, Level 1 and
+    // the Level-4 fused pipelines — must still end in success with a
+    // positive delivered speedup. No panic, no dropped cell.
+    let base = chaos_cfg("tc=0.3,drop=0.1,sigma=0.5,bias=0.3,seed=13");
+    let mut tasks = small_tasks();
+    tasks.extend(bench_suite::level_suite(42, 4).into_iter().take(3));
+    for strategy in [baselines::kernelskill(), baselines::wo_memory()] {
+        for task in &tasks {
+            for run_seed in 0..2u64 {
+                let cfg = LoopConfig { run_seed, ..base.clone() };
+                let r = coordinator::run_task(task, &strategy, &cfg);
+                assert!(
+                    r.success,
+                    "{}/{}/seed{run_seed} did not converge under adversarial chaos",
+                    strategy.name, task.id
+                );
+                assert!(
+                    r.best_speedup > 0.0,
+                    "{}/{}/seed{run_seed} delivered no kernel",
+                    strategy.name, task.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chaotic_two_shard_run_merges_byte_identical_to_single_process() {
+    // The determinism contract survives chaos: the chaos stream is derived
+    // per (chaos seed, run seed, strategy, task), never positionally, so
+    // sharding a chaotic run cannot change which faults a cell sees.
+    let root = tmp_root("shard");
+    let _ = std::fs::remove_dir_all(&root);
+    let tasks = small_tasks();
+    let strat = baselines::kernelskill();
+    let cfg = chaos_cfg("tc=0.3,drop=0.05,sigma=0.2,bias=0.1,seed=7");
+
+    let single = root.join("single");
+    coordinator::run_suite_with(&tasks, &strat, &cfg, &SEEDS, 4, &SuiteOptions::in_dir(&single))
+        .unwrap();
+
+    let shard_dirs: Vec<PathBuf> = (0..2)
+        .map(|i| {
+            let d = root.join(format!("shard{i}"));
+            coordinator::run_suite_with(
+                &tasks,
+                &strat,
+                &cfg,
+                &SEEDS,
+                4,
+                &SuiteOptions::in_dir(&d).with_shard(i, 2),
+            )
+            .unwrap();
+            d
+        })
+        .collect();
+    let merged = root.join("merged");
+    let report = merge_run_dirs(&merged, &shard_dirs).unwrap();
+    assert_eq!(report.merged_cells, 6);
+
+    assert_eq!(
+        experiments::report_run_dir(&merged).unwrap(),
+        experiments::report_run_dir(&single).unwrap(),
+        "chaotic shard placement must never change a byte of the report"
+    );
+    assert_eq!(
+        read_bytes(&merged.join("skills.json")),
+        read_bytes(&single.join("skills.json")),
+        "chaotic shard placement must never change a byte of the skill store"
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn zero_knob_chaos_is_byte_identical_to_no_chaos() {
+    // `--chaos seed=9` arms the machinery but fires nothing: every effect
+    // is gated on its knob being > 0, and chaos draws come from a separate
+    // stream — so the cells' own RNG consumption is untouched.
+    let root = tmp_root("zero");
+    let _ = std::fs::remove_dir_all(&root);
+    let tasks = small_tasks();
+    let strat = baselines::kernelskill();
+
+    let clean = root.join("clean");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &LoopConfig::default(),
+        &SEEDS,
+        4,
+        &SuiteOptions::in_dir(&clean),
+    )
+    .unwrap();
+    let armed = root.join("armed");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &chaos_cfg("seed=9"),
+        &SEEDS,
+        4,
+        &SuiteOptions::in_dir(&armed),
+    )
+    .unwrap();
+
+    assert_eq!(
+        experiments::report_run_dir(&armed).unwrap(),
+        experiments::report_run_dir(&clean).unwrap()
+    );
+    assert_eq!(
+        read_bytes(&armed.join("skills.json")),
+        read_bytes(&clean.join("skills.json"))
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn total_profile_drop_degrades_to_convergence_not_failure() {
+    // drop=1: the profiler never returns a profile for any healthy kernel.
+    // This is the poisoned-cell regression for the missing-profile guard —
+    // refinement needs the profile, so each cell must stop with a
+    // converged-degraded round (compiled, correct, speedup kept) rather
+    // than dropping the cell, failing it, or panicking a whole shard.
+    let cfg = chaos_cfg("drop=1,seed=3");
+    let strat = baselines::kernelskill();
+    for task in &small_tasks() {
+        let r = coordinator::run_task(task, &strat, &cfg);
+        assert!(r.success, "{}: a dropped profile must not fail the cell", task.id);
+        let last = r.rounds.last().unwrap_or_else(|| panic!("{}: no rounds", task.id));
+        assert!(
+            matches!(last.branch, Branch::Converged),
+            "{}: expected converged-degraded, got {:?}",
+            task.id, last.branch
+        );
+        assert!(last.compiled && last.correct, "{}", task.id);
+        assert!(
+            last.speedup.is_some(),
+            "{}: timing survives a dropped profile; only the counters go missing",
+            task.id
+        );
+        assert!(
+            r.rounds_used < strat.rounds,
+            "{}: refinement must stop at the missing profile, not spin the budget",
+            task.id
+        );
+    }
+}
+
+#[test]
+fn resume_and_merge_refuse_mismatched_chaos() {
+    // Chaos is experiment identity: chaotic cells measured a different
+    // environment, so they may not silently mix with clean cells (or with
+    // a differently-chaotic run's).
+    let root = tmp_root("identity");
+    let _ = std::fs::remove_dir_all(&root);
+    let tasks = small_tasks();
+    let strat = baselines::kernelskill();
+    let chaotic = chaos_cfg("tc=0.3,seed=7");
+
+    // Shard 0 clean, shard 1 chaotic: the merge must refuse.
+    let s0 = root.join("shard0");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &LoopConfig::default(),
+        &SEEDS,
+        4,
+        &SuiteOptions::in_dir(&s0).with_shard(0, 2),
+    )
+    .unwrap();
+    let s1 = root.join("shard1");
+    coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &chaotic,
+        &SEEDS,
+        4,
+        &SuiteOptions::in_dir(&s1).with_shard(1, 2),
+    )
+    .unwrap();
+    let err = merge_run_dirs(&root.join("merged"), &[s0, s1.clone()]).unwrap_err();
+    assert!(err.contains("different cell matrix"), "{err}");
+
+    // Resuming a chaotic dir without its chaos config must refuse too —
+    // and so must resuming under a *different* chaos config.
+    let err = coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &LoopConfig::default(),
+        &SEEDS,
+        4,
+        &SuiteOptions::resumed(&s1),
+    )
+    .unwrap_err();
+    assert!(err.contains("different matrix"), "{err}");
+    let err = coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &chaos_cfg("tc=0.3,seed=8"),
+        &SEEDS,
+        4,
+        &SuiteOptions::resumed(&s1),
+    )
+    .unwrap_err();
+    assert!(err.contains("different matrix"), "{err}");
+    // The matching config, by contrast, resumes cleanly (no-op: complete).
+    coordinator::run_suite_with(&tasks, &strat, &chaotic, &SEEDS, 4, &SuiteOptions::resumed(&s1))
+        .unwrap();
+
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -18,6 +18,7 @@ use kernelskill::bench_suite;
 use kernelskill::coordinator::{
     self, FleetConfig, LaunchConfig, LoopConfig, SuiteOptions, WorkerConfig, WorkerManifest,
 };
+use kernelskill::device::machine::DeviceSpec;
 use kernelskill::harness::experiments;
 
 fn tmp_root(tag: &str) -> PathBuf {
@@ -54,11 +55,24 @@ fn reference_run(dir: &Path) {
 /// Write a 2-worker mirror-dir manifest splitting `total` shards as
 /// `(lo, hi)` ranges.
 fn write_manifest(path: &Path, total: usize, rows: &[(&str, usize, usize, &Path)]) {
+    let with_dev: Vec<(&str, usize, usize, &Path, Option<&str>)> =
+        rows.iter().map(|&(id, lo, hi, root)| (id, lo, hi, root, None)).collect();
+    write_device_manifest(path, total, &with_dev);
+}
+
+/// Like [`write_manifest`], but rows may pin a per-worker device preset
+/// (the heterogeneous-fleet manifest shape).
+fn write_device_manifest(
+    path: &Path,
+    total: usize,
+    rows: &[(&str, usize, usize, &Path, Option<&str>)],
+) {
     let workers: Vec<String> = rows
         .iter()
-        .map(|(id, lo, hi, root)| {
+        .map(|(id, lo, hi, root, device)| {
+            let dev = device.map(|d| format!(r#","device":"{d}""#)).unwrap_or_default();
             format!(
-                r#"{{"id":"{id}","shard_lo":{lo},"shard_hi":{hi},"transport":{{"kind":"mirror-dir","root":"{}"}}}}"#,
+                r#"{{"id":"{id}","shard_lo":{lo},"shard_hi":{hi},"transport":{{"kind":"mirror-dir","root":"{}"}}{dev}}}"#,
                 root.to_string_lossy()
             )
         })
@@ -145,6 +159,88 @@ fn two_workers_over_mirror_dir_match_single_process() {
     assert!(!report.workers[0].zero_copy, "mirror-dir must not use the zero-copy path");
     assert!(report.render().contains("coordinated 2 worker(s)"));
     assert_identical_to_single(&merged, &single);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn mixed_device_fleet_matches_sequential_per_device_runs() {
+    // The ISSUE-8 heterogeneous-fleet contract: a manifest row may pin a
+    // worker to a device preset; the launcher forwards it to that worker's
+    // children as `--device`, the merge accepts the preset mix (cells are
+    // disjoint, evidence is partitioned per device), and the merged output
+    // is byte-identical to running the two per-device shards sequentially
+    // in one process each and merging locally. Placement — fleet vs
+    // sequential — never changes a byte.
+    let root = tmp_root("mixed-device");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+
+    // Sequential per-device reference pair: shard 0 on the default preset,
+    // shard 1 on tpu-like, merged locally.
+    let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(TAKE).collect();
+    let seeds: Vec<u64> = (0..SEEDS as u64).collect();
+    let (r0, r1) = (root.join("ref0"), root.join("ref1"));
+    coordinator::run_suite_with(
+        &tasks,
+        &baselines::kernelskill(),
+        &LoopConfig::default(),
+        &seeds,
+        4,
+        &SuiteOptions::in_dir(&r0).with_shard(0, 2),
+    )
+    .unwrap();
+    let tpu_cfg = LoopConfig {
+        dev: DeviceSpec::tpu_like(),
+        ..LoopConfig::default()
+    };
+    coordinator::run_suite_with(
+        &tasks,
+        &baselines::kernelskill(),
+        &tpu_cfg,
+        &seeds,
+        4,
+        &SuiteOptions::in_dir(&r1).with_shard(1, 2),
+    )
+    .unwrap();
+    let reference = root.join("reference");
+    coordinator::merge_run_dirs(&reference, &[r0, r1]).unwrap();
+
+    let mpath = root.join("workers.json");
+    let (t0, t1) = (root.join("t0"), root.join("t1"));
+    write_device_manifest(
+        &mpath,
+        2,
+        &[("w0", 0, 0, &t0, None), ("w1", 1, 1, &t1, Some("tpu-like"))],
+    );
+    let manifest = WorkerManifest::load(&mpath).unwrap();
+    assert_eq!(manifest.workers[0].device, None);
+    assert_eq!(manifest.workers[1].device.as_deref(), Some("tpu-like"));
+
+    let merged = root.join("merged");
+    let w0 = worker_cfg(&manifest, "w0", &root.join("w0"));
+    let w1 = worker_cfg(&manifest, "w1", &root.join("w1"));
+    let report = std::thread::scope(|scope| {
+        let h0 = scope.spawn(|| coordinator::run_worker(&w0).unwrap());
+        let h1 = scope.spawn(|| coordinator::run_worker(&w1).unwrap());
+        let fleet = coordinator::launch_workers(&fleet_cfg(manifest.clone(), &merged)).unwrap();
+        h0.join().unwrap();
+        h1.join().unwrap();
+        fleet
+    });
+    assert_eq!(report.merge.merged_cells, TAKE * SEEDS);
+    assert!(report.merge.missing_shards.is_empty());
+
+    assert_identical_to_single(&merged, &reference);
+    // The evidence really is partitioned: both presets appear in the
+    // merged store, and the merged manifest records the joined device set.
+    let store = std::fs::read_to_string(merged.join("skills.json")).unwrap();
+    assert!(
+        store.contains("\"a100-like\"") && store.contains("\"tpu-like\""),
+        "merged skills.json must hold both per-device partitions"
+    );
+    let m = coordinator::RunDir::open(&merged).unwrap().read_manifest().unwrap().unwrap();
+    assert_eq!(m.device, "a100-like+tpu-like");
 
     let _ = std::fs::remove_dir_all(&root);
 }

@@ -402,6 +402,74 @@ fn prop_confidence_rerank_is_invariant_under_shard_merge_order() {
 }
 
 #[test]
+fn prop_level4_legality_is_total_deterministic_and_trap_free() {
+    // The Level-4 fused-pipeline workload is built to stress kir::legality:
+    // (a) its per-op naive starting point compiles clean on every device
+    // preset (including cpu-like, which has no scratchpad at all); (b) any
+    // sequence of *applicable* transforms keeps the partition valid and
+    // never panics the checker; (c) the checker is deterministic; and
+    // (d) a schedule the checker passes never hides a structural trap
+    // (multi-GEMM or non-standalone-scan group) and always prices to a
+    // finite positive cost.
+    use kernelskill::kir::legality;
+
+    let tasks = kernelskill::bench_suite::level_suite(42, 4);
+    let devs = DeviceSpec::presets();
+    assert_eq!(devs.len(), 5);
+    for t in &tasks {
+        let s = Schedule::per_op_naive(&t.graph);
+        for d in &devs {
+            assert!(
+                legality::check(&t.graph, &s, d).is_empty(),
+                "{} naive schedule illegal on {}",
+                t.id,
+                d.name
+            );
+        }
+    }
+
+    let mut rng = Rng::new(112);
+    for _ in 0..150 {
+        let task = &tasks[rng.range_usize(0, tasks.len())];
+        let g = &task.graph;
+        let mut s = Schedule::per_op_naive(g);
+        for _ in 0..rng.range_usize(0, 12) {
+            let m = *rng.choose(&ALL_METHODS);
+            let tg = rng.range_usize(0, s.num_kernels());
+            if transforms::applicable_at(m, g, &s, tg).is_ok() {
+                transforms::apply_at(m, g, &mut s, tg);
+            }
+            assert!(s.validate(g).is_ok(), "{}: partition broken", task.id);
+        }
+        for d in &devs {
+            let errs = legality::check(g, &s, d);
+            assert_eq!(errs, legality::check(g, &s, d), "checker not deterministic");
+            if errs.is_empty() {
+                let c = costmodel::price(g, &s, d);
+                assert!(
+                    c.total_s.is_finite() && c.total_s > 0.0,
+                    "{} on {}: legal schedule priced {}",
+                    task.id,
+                    d.name,
+                    c.total_s
+                );
+                for group in &s.groups {
+                    let gemms = group.iter().filter(|&&o| g.op(o).is_gemm_like()).count();
+                    assert!(gemms <= 1, "{}: legal schedule fused {gemms} GEMMs", task.id);
+                    if group.len() > 1 {
+                        assert!(
+                            !group.iter().any(|&o| matches!(g.op(o).kind, OpKind::Scan)),
+                            "{}: legal schedule fused a scan",
+                            task.id
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_feature_extraction_total_and_bounded() {
     let mut rng = Rng::new(107);
     for _ in 0..200 {

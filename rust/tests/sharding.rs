@@ -677,7 +677,10 @@ fn device_preset_is_part_of_the_experiment_identity() {
     .unwrap_err();
     assert!(err.contains("different matrix"), "{err}");
 
-    // ... and so is merging an a100-like shard with a tpu-like shard.
+    // Merging an a100-like shard with a tpu-like shard, by contrast, is the
+    // heterogeneous-fleet contract: their cells are disjoint and their skill
+    // evidence lives in separate per-device partitions, so the merge goes
+    // through and records the joined device set.
     let a100_shard = root.join("a100-shard");
     coordinator::run_suite_with(
         &tasks,
@@ -698,8 +701,31 @@ fn device_preset_is_part_of_the_experiment_identity() {
         &SuiteOptions::in_dir(&tpu_shard).with_shard(1, 2),
     )
     .unwrap();
-    let err = merge_run_dirs(&root.join("merged"), &[a100_shard, tpu_shard]).unwrap_err();
-    assert!(err.contains("different cell matrix"), "{err}");
+    let merged = root.join("merged");
+    let report = merge_run_dirs(&merged, &[a100_shard, tpu_shard]).unwrap();
+    assert_eq!(report.merged_cells, 6);
+    let merged_store = std::fs::read_to_string(merged.join("skills.json")).unwrap();
+    assert!(
+        merged_store.contains("\"a100-like\"") && merged_store.contains("\"tpu-like\""),
+        "the merged store must carry both per-device partitions"
+    );
+    let manifest = RunDir::open(&merged).unwrap().read_manifest().unwrap().unwrap();
+    assert_eq!(
+        manifest.device, "a100-like+tpu-like",
+        "the merged manifest records the sorted joined device set"
+    );
+    // A mixed-device dir can be reported and re-merged, but no single
+    // process prices against two presets at once — resume is refused.
+    let err = coordinator::run_suite_with(
+        &tasks,
+        &strat,
+        &tpu_cfg,
+        &SEEDS,
+        4,
+        &SuiteOptions::resumed(&merged),
+    )
+    .unwrap_err();
+    assert!(err.contains("different matrix"), "{err}");
 
     let _ = std::fs::remove_dir_all(&root);
 }

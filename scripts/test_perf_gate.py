@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Unit tests for perf_gate.py (stdlib unittest; run by the CI python job).
+
+The focus is the bootstrap behavior a brand-new (or wiped) trajectory
+file must get right: `floor` falls back to the conservative hard-coded
+floor and says so, and `check-allocs` skips — never fails — while either
+side of the comparison has no allocation count yet.
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import perf_gate  # noqa: E402
+
+
+class PerfGateCase(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def write(self, name, obj):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(obj, f)
+        return path
+
+    def run_main(self, argv):
+        """Run perf_gate.main capturing (exit code, stdout, stderr)."""
+        out, err = io.StringIO(), io.StringIO()
+        with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+            code = perf_gate.main(argv)
+        return code, out.getvalue(), err.getvalue()
+
+    def test_floor_empty_trajectory_bootstraps_to_fallback(self):
+        traj = self.write("traj.json", {"entries": []})
+        code, out, err = self.run_main(
+            ["floor", "--trajectory", traj, "--runner", "ci-x64"]
+        )
+        self.assertEqual(code, 0)
+        self.assertEqual(float(out.strip()), perf_gate.FALLBACK_FLOOR)
+        self.assertIn("bootstrap fallback", err)
+
+    def test_floor_ignores_other_runners_below_min_entries(self):
+        # 5 entries from a different runner must not calibrate this one.
+        traj = self.write(
+            "traj.json",
+            {
+                "entries": [
+                    {"runner": "other", "suite_throughput_task_runs_per_s": 500.0}
+                    for _ in range(5)
+                ]
+            },
+        )
+        code, out, _ = self.run_main(
+            ["floor", "--trajectory", traj, "--runner", "ci-x64"]
+        )
+        self.assertEqual(code, 0)
+        self.assertEqual(float(out.strip()), perf_gate.FALLBACK_FLOOR)
+
+    def test_floor_calibrates_from_same_runner_median(self):
+        traj = self.write(
+            "traj.json",
+            {
+                "entries": [
+                    {"runner": "ci-x64", "suite_throughput_task_runs_per_s": v}
+                    for v in (80.0, 100.0, 120.0)
+                ]
+            },
+        )
+        code, out, err = self.run_main(
+            ["floor", "--trajectory", traj, "--runner", "ci-x64"]
+        )
+        self.assertEqual(code, 0)
+        self.assertAlmostEqual(
+            float(out.strip()), perf_gate.FLOOR_FRAC * 100.0, places=1
+        )
+        self.assertIn("median", err)
+
+    def test_check_allocs_skips_on_empty_trajectory(self):
+        # The empty-trajectory bootstrap: a fresh entry WITH a count, a
+        # trajectory with none — must skip with the bootstrap notice, not
+        # fail or crash.
+        entry = self.write("entry.json", {"allocs_per_task_run": 1234.0})
+        traj = self.write("traj.json", {"entries": []})
+        code, out, _ = self.run_main(
+            ["check-allocs", "--entry", entry, "--trajectory", traj]
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("SKIPPED", out)
+        self.assertIn("empty trajectory bootstrap", out)
+
+    def test_check_allocs_skips_when_entry_has_no_count(self):
+        entry = self.write("entry.json", {"suite_throughput_task_runs_per_s": 50.0})
+        traj = self.write(
+            "traj.json",
+            {"entries": [{"runner": "ci-x64", "allocs_per_task_run": 1000.0}]},
+        )
+        code, out, _ = self.run_main(
+            ["check-allocs", "--entry", entry, "--trajectory", traj]
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("SKIPPED", out)
+
+    def test_check_allocs_gates_a_real_regression(self):
+        traj = self.write(
+            "traj.json",
+            {"entries": [{"runner": "ci-x64", "allocs_per_task_run": 1000.0}]},
+        )
+        ok = self.write("ok.json", {"allocs_per_task_run": 1100.0})
+        code, out, _ = self.run_main(
+            ["check-allocs", "--entry", ok, "--trajectory", traj]
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("ok", out)
+        bad = self.write("bad.json", {"allocs_per_task_run": 1500.0})
+        code, out, _ = self.run_main(
+            ["check-allocs", "--entry", bad, "--trajectory", traj]
+        )
+        self.assertEqual(code, 1)
+        self.assertIn("FAIL", out)
+
+    def test_append_stamps_and_preserves_entries(self):
+        entry = self.write("entry.json", {"suite_throughput_task_runs_per_s": 42.0})
+        traj = self.write("traj.json", {"entries": []})
+        code, out, _ = self.run_main(
+            [
+                "append",
+                "--entry", entry,
+                "--trajectory", traj,
+                "--runner", "ci-x64",
+                "--date", "2026-08-08",
+            ]
+        )
+        self.assertEqual(code, 0)
+        self.assertIn("appended", out)
+        with open(traj, encoding="utf-8") as f:
+            data = json.load(f)
+        self.assertEqual(len(data["entries"]), 1)
+        e = data["entries"][0]
+        self.assertEqual(e["runner"], "ci-x64")
+        self.assertEqual(e["date"], "2026-08-08")
+        self.assertEqual(e["suite_throughput_task_runs_per_s"], 42.0)
+
+
+if __name__ == "__main__":
+    unittest.main()
