@@ -9,10 +9,14 @@
 //!   3. streams every finished cell to `results.jsonl` the moment it
 //!     completes, and
 //!   4. folds each finished cell's skill observations into the persistent
-//!     long-term store in memory, rewriting `skills.json` atomically at
+//!     long-term store in memory, rewriting the store atomically at
 //!     window (fold-epoch) boundaries — serde stays out of the per-cell
 //!     path, and because store merges are additive and exact the final
-//!     bytes match per-cell saving.
+//!     bytes match per-cell saving. The live store uses the v4 segmented
+//!     layout ([`SegmentedSkillStore`]): advancing the fold epoch rotates
+//!     the previous head into an immutable segment file, so the
+//!     boundary rewrite touches only the small manifest + head, never the
+//!     accumulated history.
 //!
 //! Determinism contract: every cell runs against an immutable skill-store
 //! *snapshot* — the run-start snapshot (persisted into the run directory),
@@ -25,7 +29,7 @@
 //! observations are stamped with a fold epoch fixed at run start (the
 //! warm-start snapshot's generation + 1; run-dir stores always fold at
 //! epoch 1 over a cold base), never with completion order or wall clock —
-//! the v3 aging clock that keeps resume and merge byte-deterministic.
+//! the v4 aging clock that keeps resume and merge byte-deterministic.
 //!
 //! Sharding: with [`SuiteOptions::shard`] set, the scheduler claims only a
 //! deterministic round-robin slice of the cell matrix ([`Shard::owns`]) and
@@ -55,7 +59,7 @@ use super::loop_runner::{run_task, LoopConfig, TaskResult};
 use crate::baselines::Strategy;
 use crate::bench_suite::Task;
 use crate::memory::long_term::kb_content;
-use crate::memory::long_term::SkillStore;
+use crate::memory::long_term::{SegmentedSkillStore, SkillStore};
 use crate::util::pool;
 
 /// One process's deterministic slice of the cell matrix.
@@ -619,26 +623,39 @@ pub fn run_strategy(
                 .map_err(|e| format!("writing memory snapshot: {e}"))?;
         }
     }
-    // The live store absorbs observations as cells finish. It starts from
-    // the current on-disk state (on resume that already includes the
-    // interrupted run's merges; restored cells are NOT re-merged).
+    // The live store absorbs observations as cells finish. It opens in the
+    // v4 segmented layout from the current on-disk state (on resume that
+    // already includes the interrupted run's merges; restored cells are
+    // NOT re-merged).
     //
     // Fold epoch: this run's observations are stamped with generation
     // snapshot+1, derived from the warm-start snapshot rather than the
     // live store itself so a resumed run reuses the interrupted run's
-    // epoch (the on-disk store already carries the bump) — fold order and
-    // kill points can never change a stamp. Advancing the clock per
-    // strategy-suite run is what ages stats that stop being re-observed.
-    let mut live_store: Option<SkillStore> = match &live_path {
-        Some(path) => Some(SkillStore::load(path)?),
+    // epoch (the on-disk store already carries the bump — `advance_to` is
+    // then a no-op, so no segment rotates) — fold order and kill points
+    // can never change a stamp. Advancing the clock per strategy-suite run
+    // is what ages stats that stop being re-observed; under the segmented
+    // layout it also rotates the previous epochs' head into an immutable
+    // segment instead of rewriting accumulated history at every save.
+    let mut live_store: Option<SegmentedSkillStore> = match &cfg.memory_dir {
+        Some(dir) => Some(SegmentedSkillStore::open(dir)?),
         None => None,
     };
     if let Some(store) = live_store.as_mut() {
         let base_gen = snapshot
             .as_deref()
             .map(|s| s.generation)
-            .unwrap_or(store.generation);
-        store.generation = store.generation.max(base_gen + 1);
+            .unwrap_or_else(|| store.generation());
+        let rotated = store
+            .advance_to(store.generation().max(base_gen + 1))
+            .map_err(|e| format!("rotating skill store head: {e}"))?;
+        if rotated {
+            // Persist immediately so the manifest references the fresh
+            // segment even if this run dies before its first fold.
+            store
+                .save()
+                .map_err(|e| format!("saving skill store manifest: {e}"))?;
+        }
     }
     if let Some(dir) = &cfg.memory_dir {
         // Make the memory directory self-describing: curated KB next to the
@@ -801,9 +818,9 @@ pub fn run_strategy(
         // since the crash hook fires before the live merge); the byte gates
         // never compare live stores — launch/worker refuse `--memory-dir`.
         if !pending.is_empty() {
-            if let (Some(store), Some(path)) = (live_store.as_ref(), live_path.as_ref()) {
+            if let Some(store) = live_store.as_mut() {
                 store
-                    .save(path)
+                    .save()
                     .map_err(|e| format!("saving skill store: {e}"))?;
             }
         }

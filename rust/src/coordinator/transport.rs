@@ -183,6 +183,26 @@ fn install_atomic(dest: &Path, bytes: &[u8]) -> Result<(), String> {
     std::fs::rename(&tmp, dest).map_err(|e| format!("installing {}: {e}", dest.display()))
 }
 
+/// Relative segment files referenced by a segmented (v4) skill-store
+/// manifest, in manifest order. Flat stores — and bytes that are not a
+/// manifest at all — reference no segments, so v3-era roots and plain
+/// run-dir folds keep moving as exactly one file.
+fn segment_files(bytes: &[u8]) -> Vec<String> {
+    std::str::from_utf8(bytes)
+        .ok()
+        .and_then(|text| Json::parse(text).ok())
+        .and_then(|j| {
+            j.get("segments").and_then(|s| s.as_arr()).map(|segs| {
+                segs.iter()
+                    .filter_map(|seg| {
+                        seg.get("file").and_then(|f| f.as_str()).map(str::to_string)
+                    })
+                    .collect()
+            })
+        })
+        .unwrap_or_default()
+}
+
 // ------------------------------------------------------------------------
 // The transport abstraction
 // ------------------------------------------------------------------------
@@ -1179,6 +1199,10 @@ pub struct ShardPush {
     manifest_pushed: bool,
     complete_pushed: bool,
     skills_last: Option<Vec<u8>>,
+    /// Segment files already published. Segments are immutable and their
+    /// names are never reused (the store's rotation counter only grows),
+    /// so once published a segment never needs another byte-compare.
+    segments_pushed: BTreeSet<String>,
     snapshots_last: BTreeMap<String, Vec<u8>>,
     /// Elastic batches only: tolerate a published cover ahead of the local
     /// checkpoint (a re-dispatched attempt recomputing identical bytes)
@@ -1236,6 +1260,7 @@ impl ShardPush {
             manifest_pushed: false,
             complete_pushed: false,
             skills_last: None,
+            segments_pushed: BTreeSet::new(),
             snapshots_last: BTreeMap::new(),
             catch_up: false,
         })
@@ -1340,6 +1365,20 @@ impl ShardPush {
             let bytes =
                 std::fs::read(&skills).map_err(|e| format!("reading {}: {e}", skills.display()))?;
             if self.skills_last.as_deref() != Some(bytes.as_slice()) {
+                // A segmented (v4) store is a directory: immutable segment
+                // files plus the manifest that lists them. Segments travel
+                // *before* the manifest so a puller that can read the
+                // manifest can always resolve every file it references.
+                for file in segment_files(&bytes) {
+                    if self.segments_pushed.contains(&file) {
+                        continue;
+                    }
+                    let path = rel_path(&self.dir, &file)?;
+                    let seg = std::fs::read(&path)
+                        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+                    transport.publish(&format!("{}/{file}", self.rel), &seg)?;
+                    self.segments_pushed.insert(file);
+                }
                 transport.publish(&format!("{}/{SKILLS}", self.rel), &bytes)?;
                 self.skills_last = Some(bytes);
                 progress = true;
@@ -1641,6 +1680,14 @@ impl ShardPull {
         }
         if remote_complete && self.manifest_done {
             if let Some(bytes) = transport.fetch(&format!("{}/{SKILLS}", self.rel))? {
+                // Segment files land before the manifest that references
+                // them, so a reader folding the mirror never observes a
+                // dangling segment ref.
+                for file in segment_files(&bytes) {
+                    if let Some(seg) = transport.fetch(&format!("{}/{file}", self.rel))? {
+                        install_atomic(&rel_path(&self.mirror, &file)?, &seg)?;
+                    }
+                }
                 install_atomic(&self.mirror.join(SKILLS), &bytes)?;
             }
             for name in transport.list(&self.rel)? {
@@ -2005,6 +2052,82 @@ mod tests {
         assert!(push.cycle(&t).unwrap(), "same-length rewrite must be detected");
         assert_eq!(t.fetch("up/shard-0/skills.json").unwrap().unwrap(), b"{\"v\":2}\n");
         assert!(!push.cycle(&t).unwrap(), "unchanged bytes are not re-published");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn segment_files_reads_manifest_refs_and_tolerates_flat_or_garbage() {
+        let manifest = b"{\"segments\":[{\"cases\":1,\"file\":\"skills.segments/seg-000001.json\",\
+            \"generation\":1,\"observations\":2},{\"cases\":2,\
+            \"file\":\"skills.segments/seg-000002.json\",\"generation\":2,\"observations\":3}],\
+            \"version\":4}\n";
+        assert_eq!(
+            segment_files(manifest),
+            vec![
+                "skills.segments/seg-000001.json".to_string(),
+                "skills.segments/seg-000002.json".to_string(),
+            ]
+        );
+        assert!(segment_files(b"{\"version\":4,\"segments\":[]}\n").is_empty());
+        assert!(segment_files(b"{\"s\":1}\n").is_empty(), "flat v3-era store");
+        assert!(segment_files(b"not json at all").is_empty());
+    }
+
+    #[test]
+    fn segmented_skill_store_travels_as_a_directory() {
+        // A v4 manifest references immutable segment files; push publishes
+        // each referenced file (once) alongside the manifest, and pull
+        // installs the segments before the manifest so the mirrored store
+        // never has a dangling ref.
+        let root = tmp_dir("seg-sync");
+        let _ = std::fs::remove_dir_all(&root);
+        let local = root.join("local");
+        std::fs::create_dir_all(local.join("skills.segments")).unwrap();
+        let t = MirrorDir::new(&root.join("remote")).unwrap();
+
+        let seg = b"{\"seg\":1}\n";
+        let manifest =
+            b"{\"segments\":[{\"file\":\"skills.segments/seg-000001.json\"}],\"version\":4}\n";
+        std::fs::write(local.join("skills.segments/seg-000001.json"), seg).unwrap();
+        std::fs::write(local.join(SKILLS), manifest).unwrap();
+        let mut push = ShardPush::new(&local, 0, &t).unwrap();
+        assert!(push.cycle(&t).unwrap());
+        assert_eq!(
+            t.fetch("up/shard-0/skills.segments/seg-000001.json").unwrap().unwrap(),
+            seg
+        );
+        assert_eq!(t.fetch("up/shard-0/skills.json").unwrap().unwrap(), manifest);
+        assert!(!push.cycle(&t).unwrap(), "segments and manifest are pushed once");
+
+        t.publish("up/shard-0/manifest.json", b"{\"m\":1}\n").unwrap();
+        t.publish("up/shard-0/complete", b"complete\n").unwrap();
+        let mirror = root.join("mirror");
+        let mut pull = ShardPull::new(&mirror, 0).unwrap();
+        assert!(pull.cycle(&t).unwrap());
+        assert!(pull.is_complete());
+        assert_eq!(
+            std::fs::read(mirror.join("skills.segments/seg-000001.json")).unwrap(),
+            seg
+        );
+        assert_eq!(std::fs::read(mirror.join(SKILLS)).unwrap(), manifest);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn push_rejects_traversal_segment_refs() {
+        let root = tmp_dir("seg-traversal");
+        let _ = std::fs::remove_dir_all(&root);
+        let local = root.join("local");
+        std::fs::create_dir_all(&local).unwrap();
+        let t = MirrorDir::new(&root.join("remote")).unwrap();
+        std::fs::write(
+            local.join(SKILLS),
+            b"{\"segments\":[{\"file\":\"../escape.json\"}],\"version\":4}\n",
+        )
+        .unwrap();
+        let mut push = ShardPush::new(&local, 0, &t).unwrap();
+        let err = push.cycle(&t).unwrap_err();
+        assert!(err.contains("invalid transport path"), "{err}");
         let _ = std::fs::remove_dir_all(&root);
     }
 

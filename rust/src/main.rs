@@ -278,15 +278,20 @@ fn run() -> Result<(), String> {
             if let Some(dir) = &cfg.memory_dir {
                 let path = dir.join("skills.json");
                 let mut store =
-                    kernelskill::memory::long_term::SkillStore::load(&path)?;
+                    kernelskill::memory::long_term::SegmentedSkillStore::open(dir)?;
                 // One completed task = one fold epoch: the generation
                 // clock advances even when the run produced no
                 // observations, which is what ages stats that stop being
-                // re-observed.
-                let generation = store.advance_generation();
+                // re-observed. Under the v4 layout advancing rotates the
+                // previous epochs' head into an immutable segment instead
+                // of rewriting accumulated history.
+                let generation = store.generation() + 1;
+                store
+                    .advance_to(generation)
+                    .map_err(|e| format!("rotating skill store head: {e}"))?;
                 store.merge(&r.skill_obs);
                 store
-                    .save(&path)
+                    .save()
                     .map_err(|e| format!("saving skill store: {e}"))?;
                 println!(
                     "memory: {} observation(s) merged into {} (generation {})",
@@ -527,11 +532,18 @@ fn run() -> Result<(), String> {
                  \x20     run this machine's manifest shard range and publish it\n\
                  \x20     (elastic manifest: claim lease batches until the board is done)\n\
                  \x20 smoke                  tiny checkpoint/resume/memory end-to-end (CI gate)\n\
-                 learned memory (skills.json, see docs/memory-formats.md):\n\
-                 \x20 skills inspect --memory-dir M [--device D] [--case SUBSTR]\n\
-                 \x20     per-partition stats, confidence, staleness, learned cases\n\
-                 \x20 skills gc --memory-dir M [--max-age N] [--dry-run]\n\
-                 \x20     drop stats older than N generations (default 8)\n\
+                 learned memory (skills.json v4, see docs/memory-formats.md):\n\
+                 \x20 skills inspect --memory-dir M [--device D] [--case SUBSTR] [--segments]\n\
+                 \x20     per-partition stats, confidence, staleness, learned cases;\n\
+                 \x20     --segments also prints the on-disk segment/head layout\n\
+                 \x20 skills gc --memory-dir M [--max-age N] [--device D] [--dry-run]\n\
+                 \x20     drop stats older than N generations (default 8); --device\n\
+                 \x20     scopes the sweep to one partition\n\
+                 \x20 skills compact --memory-dir M\n\
+                 \x20     fold all on-disk segments into one (offline, atomic swap)\n\
+                 \x20 skills diff A B\n\
+                 \x20     per-stat divergence report between two stores (paths to\n\
+                 \x20     skills.json or their directories), deterministic ordering\n\
                  \n\
                  strategies: KernelSkill, STARK, CudaForge, Astra, PRAGMA, QiMeng,\n\
                  \x20          Kevin-32B, 'w/o memory', 'w/o Short_term memory', 'w/o Long_term memory'"
@@ -639,20 +651,69 @@ fn run_worker_cmd(args: &Args) -> Result<(), String> {
 }
 
 /// The `skills` subcommand family: introspect and maintain a persistent
-/// learned store (`skills.json`) without running anything.
+/// learned store (`skills.json`, v4 segmented layout) without running
+/// anything.
 fn run_skills(args: &Args) -> Result<(), String> {
-    use kernelskill::memory::long_term::SkillStore;
+    use kernelskill::memory::long_term::diff::StoreDiff;
+    use kernelskill::memory::long_term::{SegmentedSkillStore, SkillStore};
 
     let action = args.positional.first().map(|s| s.as_str()).unwrap_or("inspect");
+
+    // `skills diff A B` addresses two stores positionally and never needs
+    // --memory-dir, so it resolves before the directory requirement.
+    if action == "diff" {
+        let (a, b) = match &args.positional[..] {
+            [_, a, b] => (a.as_str(), b.as_str()),
+            _ => return Err("skills diff <a> <b>: two store paths required \
+                             (skills.json files or their directories)"
+                .to_string()),
+        };
+        // Accept a directory (memory dir or run dir) or the file itself.
+        let resolve = |p: &str| {
+            let path = std::path::PathBuf::from(p);
+            if path.is_dir() {
+                path.join("skills.json")
+            } else {
+                path
+            }
+        };
+        let (path_a, path_b) = (resolve(a), resolve(b));
+        for p in [&path_a, &path_b] {
+            if !p.exists() {
+                return Err(format!("no skill store at {}", p.display()));
+            }
+        }
+        // `load` folds segmented manifests transparently, so the diff is
+        // always over logical content.
+        let store_a = SkillStore::load(&path_a)?;
+        let store_b = SkillStore::load(&path_b)?;
+        let d = StoreDiff::compute(&store_a, &store_b);
+        print!("{}", d.render(&path_a.display().to_string(), &path_b.display().to_string()));
+        return Ok(());
+    }
+
     let dir = args
         .get("memory-dir")
         .or_else(|| args.get("run-dir"))
         .ok_or("skills: --memory-dir <dir> (or --run-dir <dir>) required")?;
-    let path = std::path::Path::new(dir).join("skills.json");
+    let dir = std::path::Path::new(dir);
+    let path = dir.join("skills.json");
     if !path.exists() {
         return Err(format!("no skill store at {}", path.display()));
     }
-    let mut store = SkillStore::load(&path)?;
+    // A run-dir skills.json is *derived* — rebuilt from the checkpointed
+    // cells on every open — so mutating it would be silently undone by the
+    // next resume/merge. Only the live memory-dir store may be rewritten.
+    let needs_memory_dir = |what: &str| {
+        if args.get("memory-dir").is_none() {
+            Err(format!(
+                "skills {what} needs --memory-dir: a run dir's skills.json is rebuilt \
+                 from results.jsonl on every open, so {what} there would not stick"
+            ))
+        } else {
+            Ok(())
+        }
+    };
     match action {
         "inspect" => {
             if let Some(d) = args.get("device") {
@@ -664,35 +725,53 @@ fn run_skills(args: &Args) -> Result<(), String> {
                     );
                 }
             }
-            print!("{}", store.render_inspect(args.get("device"), args.get("case")));
+            let store = SegmentedSkillStore::open(dir)?;
+            print!(
+                "{}",
+                store.logical().render_inspect(args.get("device"), args.get("case"))
+            );
+            // The physical layout is opt-in: the default output is a pure
+            // function of logical content, so two stores that fold equal
+            // (e.g. compacted vs uncompacted) inspect byte-identically.
+            if args.has("segments") {
+                print!("{}", store.render_layout());
+            }
         }
         "gc" => {
-            // A run-dir skills.json is *derived* — rebuilt from the
-            // checkpointed cells on every open — so gc'ing it would be
-            // silently undone by the next resume/merge. Only the live
-            // memory-dir store is gc-able.
-            if args.get("memory-dir").is_none() {
-                return Err(
-                    "skills gc needs --memory-dir: a run dir's skills.json is rebuilt \
-                     from results.jsonl on every open, so gc there would not stick"
-                        .to_string(),
-                );
-            }
+            needs_memory_dir("gc")?;
             let max_age = args.get_u64("max-age", 8)?;
-            let report = store.gc(max_age);
+            let device = args.get("device");
+            if let Some(d) = device {
+                if DeviceSpec::by_name(d).is_none() {
+                    return Err(format!(
+                        "skills gc --device {d:?}: not a built-in device preset \
+                         (known: {:?})",
+                        DeviceSpec::presets().iter().map(|p| p.name).collect::<Vec<_>>()
+                    ));
+                }
+            }
+            let mut store = SegmentedSkillStore::open(dir)?;
+            let report = store.gc_device(max_age, device);
             println!("{}", report.render());
             if args.has("dry-run") {
                 println!("dry run: {} left untouched", path.display());
             } else {
                 store
-                    .save(&path)
+                    .save()
                     .map_err(|e| format!("rewriting {}: {e}", path.display()))?;
                 println!("rewrote {}", path.display());
             }
         }
+        "compact" => {
+            needs_memory_dir("compact")?;
+            let mut store = SegmentedSkillStore::open(dir)?;
+            let report = store.compact()?;
+            println!("{}", report.render());
+        }
         other => {
             return Err(format!(
-                "unknown skills action {other:?}; expected `inspect` or `gc`"
+                "unknown skills action {other:?}; expected `inspect`, `gc`, `compact`, \
+                 or `diff`"
             ));
         }
     }

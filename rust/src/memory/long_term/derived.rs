@@ -80,6 +80,14 @@ pub fn headroom_tier(ev: &Evidence) -> Tier {
     }
 }
 
+/// Whether the headroom tier leaves room for a learned *extension* to add
+/// a method the curated case never listed. `Low` tier means the kernel is
+/// near its roofline — only polish remains, so structural additions from
+/// learned evidence are not allowed to widen the method set there.
+pub fn tier_allows_extension(tier: Tier) -> bool {
+    !matches!(tier, Tier::Low)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +112,13 @@ mod tests {
             compute_derived(&mut e);
             assert_eq!(headroom_tier(&e), tier, "peak={peak}");
         }
+    }
+
+    #[test]
+    fn extensions_gated_out_of_low_tier() {
+        assert!(tier_allows_extension(Tier::High));
+        assert!(tier_allows_extension(Tier::Medium));
+        assert!(!tier_allows_extension(Tier::Low));
     }
 
     #[test]

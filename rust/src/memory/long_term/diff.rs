@@ -1,0 +1,225 @@
+//! Store-to-store divergence reports for the `skills diff` CLI.
+//!
+//! Two long-term stores that should agree (a fleet mirror vs its origin, a
+//! compacted store vs the uncompacted twin, two tenants seeded from the
+//! same base) are compared stat-by-stat over the deterministic union of
+//! their (device partition, case, method) triples. Scores are evaluated
+//! against each store's *own* generation clock — the number retrieval
+//! would actually use on that side. Ordering is the BTreeMap canonical
+//! order everywhere, so equal inputs render equal reports byte-for-byte.
+
+use std::collections::BTreeSet;
+
+use super::skill_store::{MethodStat, SkillStore};
+use crate::kir::transforms::MethodId;
+
+/// One side's view of a stat, snapshotted for rendering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatLine {
+    pub attempts: u64,
+    pub wins: u64,
+    /// Wilson lower bound on the win rate.
+    pub confidence: f64,
+    pub mean_gain: f64,
+    /// Confidence-weighted rerank score at the owning store's generation.
+    pub score: f64,
+}
+
+impl StatLine {
+    fn of(s: &MethodStat, generation: u64) -> StatLine {
+        StatLine {
+            attempts: s.attempts,
+            wins: s.wins,
+            confidence: s.wilson_lower_bound(),
+            mean_gain: s.mean_gain(),
+            score: s.score(generation),
+        }
+    }
+
+    fn render(&self) -> String {
+        format!(
+            "attempts {:>4}  wins {:>4}  conf {:.2}  mean gain {:+.3}  score {:+.4}",
+            self.attempts, self.wins, self.confidence, self.mean_gain, self.score
+        )
+    }
+}
+
+/// A (device, case, method) triple where the two stores disagree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffEntry {
+    /// `device/case/method` key.
+    pub key: String,
+    pub a: StatLine,
+    pub b: StatLine,
+}
+
+/// The computed divergence between two stores.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreDiff {
+    /// Triples present in both stores with different stats.
+    pub diverging: Vec<DiffEntry>,
+    /// Triples only store A carries (key + its stat line).
+    pub only_a: Vec<(String, StatLine)>,
+    /// Triples only store B carries.
+    pub only_b: Vec<(String, StatLine)>,
+    /// Triples carried identically by both.
+    pub identical: usize,
+    gen_a: u64,
+    obs_a: u64,
+    gen_b: u64,
+    obs_b: u64,
+}
+
+impl StoreDiff {
+    /// Walk the union of both stores' (device, case, method) triples in
+    /// canonical order and classify each one.
+    pub fn compute(a: &SkillStore, b: &SkillStore) -> StoreDiff {
+        let mut out = StoreDiff {
+            gen_a: a.generation,
+            obs_a: a.observations,
+            gen_b: b.generation,
+            obs_b: b.observations,
+            ..StoreDiff::default()
+        };
+        let mut keys: BTreeSet<(String, String, MethodId)> = BTreeSet::new();
+        for store in [a, b] {
+            for (dev, cases) in &store.partitions {
+                for (case, methods) in cases {
+                    for method in methods.keys() {
+                        keys.insert((dev.clone(), case.clone(), *method));
+                    }
+                }
+            }
+        }
+        for (dev, case, method) in keys {
+            let key = format!("{dev}/{case}/{}", method.name());
+            let stat = |s: &SkillStore| s.stat_in(&dev, &case, method).cloned();
+            match (stat(a), stat(b)) {
+                (Some(sa), Some(sb)) => {
+                    if sa == sb && a.generation == b.generation {
+                        out.identical += 1;
+                    } else if sa == sb
+                        && StatLine::of(&sa, a.generation) == StatLine::of(&sb, b.generation)
+                    {
+                        // Same stat, clocks differ but staleness decay
+                        // happens to agree — still identical in effect.
+                        out.identical += 1;
+                    } else {
+                        out.diverging.push(DiffEntry {
+                            key,
+                            a: StatLine::of(&sa, a.generation),
+                            b: StatLine::of(&sb, b.generation),
+                        });
+                    }
+                }
+                (Some(sa), None) => out.only_a.push((key, StatLine::of(&sa, a.generation))),
+                (None, Some(sb)) => out.only_b.push((key, StatLine::of(&sb, b.generation))),
+                (None, None) => unreachable!("key came from one of the stores"),
+            }
+        }
+        out
+    }
+
+    /// True when the stores carry identical stats (header counters may
+    /// still differ — the render says so).
+    pub fn stats_agree(&self) -> bool {
+        self.diverging.is_empty() && self.only_a.is_empty() && self.only_b.is_empty()
+    }
+
+    /// Render the report. Deterministic: equal diffs render equal bytes.
+    pub fn render(&self, label_a: &str, label_b: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "skills diff:\n  A: {label_a} (generation {}, {} observation(s))\n  B: {label_b} (generation {}, {} observation(s))\n",
+            self.gen_a, self.obs_a, self.gen_b, self.obs_b
+        ));
+        if !self.diverging.is_empty() {
+            out.push_str("diverging stats:\n");
+            for e in &self.diverging {
+                out.push_str(&format!("  {}:\n", e.key));
+                out.push_str(&format!("    A: {}\n", e.a.render()));
+                out.push_str(&format!("    B: {}\n", e.b.render()));
+            }
+        }
+        for (title, list) in [("only in A:", &self.only_a), ("only in B:", &self.only_b)] {
+            if !list.is_empty() {
+                out.push_str(title);
+                out.push('\n');
+                for (key, line) in list {
+                    out.push_str(&format!("  {key}: {}\n", line.render()));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "summary: {} diverging, {} only in A, {} only in B, {} identical\n",
+            self.diverging.len(),
+            self.only_a.len(),
+            self.only_b.len(),
+            self.identical
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::long_term::skill_store::SkillObs;
+
+    fn obs_on(device: &str, case: &str, m: MethodId, gain: Option<f64>) -> SkillObs {
+        SkillObs {
+            case_id: case.to_string(),
+            method: m,
+            gain,
+            device: device.to_string(),
+        }
+    }
+
+    #[test]
+    fn identical_stores_diff_clean() {
+        let mut a = SkillStore::new();
+        a.merge(&[obs_on("a100-like", "c", MethodId::TileSmem, Some(1.0))]);
+        let b = a.clone();
+        let d = StoreDiff::compute(&a, &b);
+        assert!(d.stats_agree());
+        assert_eq!(d.identical, 1);
+        assert!(d.render("a", "b").contains("summary: 0 diverging, 0 only in A, 0 only in B, 1 identical"));
+    }
+
+    #[test]
+    fn divergence_and_one_sided_entries_classify_deterministically() {
+        let mut a = SkillStore::new();
+        a.merge(&[
+            obs_on("a100-like", "c", MethodId::TileSmem, Some(1.0)),
+            obs_on("a100-like", "c", MethodId::SplitK, Some(0.5)),
+        ]);
+        let mut b = SkillStore::new();
+        b.merge(&[
+            obs_on("a100-like", "c", MethodId::TileSmem, Some(1.0)),
+            obs_on("a100-like", "c", MethodId::TileSmem, None),
+            obs_on("tpu-like", "c", MethodId::UnrollInner, Some(2.0)),
+        ]);
+        let d = StoreDiff::compute(&a, &b);
+        assert_eq!(d.diverging.len(), 1, "tile_smem stats differ");
+        assert_eq!(d.diverging[0].key, "a100-like/c/tile_smem");
+        assert_eq!((d.diverging[0].a.attempts, d.diverging[0].b.attempts), (1, 2));
+        assert_eq!(d.only_a.len(), 1);
+        assert_eq!(d.only_a[0].0, "a100-like/c/split_k");
+        assert_eq!(d.only_b.len(), 1);
+        assert_eq!(d.only_b[0].0, "tpu-like/c/unroll_inner");
+        // Deterministic render: computing twice gives identical bytes.
+        let d2 = StoreDiff::compute(&a, &b);
+        assert_eq!(d.render("a", "b"), d2.render("a", "b"));
+    }
+
+    #[test]
+    fn generation_skew_surfaces_as_score_divergence() {
+        let mut a = SkillStore::new();
+        a.merge(&[obs_on("a100-like", "c", MethodId::TileSmem, Some(1.0))]);
+        let mut b = a.clone();
+        b.generation = 10; // same stat, much staler clock -> decayed score
+        let d = StoreDiff::compute(&a, &b);
+        assert_eq!(d.diverging.len(), 1);
+        assert!(d.diverging[0].a.score > d.diverging[0].b.score);
+    }
+}

@@ -1,15 +1,20 @@
 //! Long-term memory: the externalized expert-knowledge store (§4.2.1) —
 //! a Deterministic Decision Policy (normalize -> derive -> tier -> match ->
 //! veto) plus the Method Knowledge (`llm_assist`) store, and the persistent
-//! learned layer (`skill_store`, v3: device-partitioned,
-//! confidence-weighted, generation-aged) that survives across tasks,
-//! seeds, strategies, and processes.
+//! learned layer (`skill_store`, v4: device-partitioned,
+//! confidence-weighted, generation-aged, with a segmented on-disk layout
+//! (`segmented`) and matchable learned cases) that survives across tasks,
+//! seeds, strategies, and processes. `diff` compares two stores for the
+//! `skills diff` CLI.
 
 pub mod derived;
+pub mod diff;
 pub mod kb_content;
 pub mod normalize;
 pub mod retrieval;
 pub mod schema;
+pub mod segmented;
 pub mod skill_store;
 
+pub use segmented::SegmentedSkillStore;
 pub use skill_store::{SkillObs, SkillStore};

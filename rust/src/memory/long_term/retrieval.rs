@@ -8,15 +8,20 @@
 //!   6. case matching              -> tier + gate_when over the decision table
 //!   7. global rule enforcement    -> `FORBIDDEN_RULES` vetoes
 //!   8. method set retrieval       -> surviving `allowed_methods`
+//!      8'.  learned rerank        -> confidence-weighted skill scores
+//!      8''. matchable learned     -> [`apply_learned`]: cases past the
+//!           Wilson matchability bars extend/demote the method set
 //!   9. LLM-assisted planning      -> `knowledge` attached for the Planner
 //!
 //! Every step leaves a printable trace in [`RetrievalResult`] — the paper's
 //! auditability claim, mechanically enforced.
 
-use super::derived::{compute_derived, headroom_tier};
+use super::derived::{compute_derived, headroom_tier, tier_allows_extension};
 use super::kb_content::{knowledge_for, predicate, DECISION_TABLE, FORBIDDEN_RULES};
 use super::normalize::{fold_features, fold_task_facts, normalize_profile};
-use super::schema::{Bottleneck, Evidence, MethodKnowledge, Tier, BOTTLENECK_PRIORITY};
+use super::schema::{
+    Bottleneck, Evidence, LearnedCase, LearnedOrigin, MethodKnowledge, Tier, BOTTLENECK_PRIORITY,
+};
 use super::skill_store::SkillStore;
 use crate::bench_suite::Task;
 use crate::device::metrics::RawProfile;
@@ -51,8 +56,10 @@ pub struct RetrievalCache {
     /// Memoized formatted skill note per (case id, method); `None` caches
     /// the "no recorded evidence" outcome.
     notes: BTreeMap<(&'static str, MethodId), Option<String>>,
-    /// Memoized rendered learned cases per case id.
-    learned: BTreeMap<&'static str, Vec<String>>,
+    /// Memoized synthesized learned cases per case id (structs, not
+    /// renderings: step 8'' both renders them *and* applies the matchable
+    /// ones to the method set).
+    learned: BTreeMap<&'static str, Vec<LearnedCase>>,
 }
 
 impl RetrievalCache {
@@ -105,6 +112,78 @@ fn skill_note(
     ))
 }
 
+/// Step 8'': apply *matchable* learned cases to the retrieved method set.
+///
+/// Learned cases below the matchability bars ([`LearnedCase::matchable`]:
+/// `MIN_MATCH_EVIDENCE` attempts and `MIN_MATCH_CONFIDENCE` Wilson lower
+/// bound) only annotate the audit — a noisy shard's flukes cannot perturb
+/// the curated table. Matchable ones act by origin:
+///
+/// * **Extension** — append the method to the allowed set, *unless* the
+///   headroom tier forbids structural additions
+///   ([`tier_allows_extension`]) or a global veto rule fires on this
+///   evidence (the step-7 veto pass never saw the method, so it is
+///   re-checked here and recorded in `vetoed` if it trips).
+/// * **Demotion** — move the method to the end of the allowed set (the
+///   confidence-weighted rerank usually sank it already; the move is
+///   recorded only when it actually changes the order).
+/// * **Promotion** — structurally a no-op: the step-8' rerank scores
+///   already express any promotion that clears the evidence bars.
+///
+/// Returns the audit lines for the applications that actually happened.
+/// Shared by the cached and uncached step-8' paths so their bytes cannot
+/// drift.
+fn apply_learned(
+    ev: &Evidence,
+    tier: Tier,
+    learned: &[LearnedCase],
+    allowed: &mut Vec<MethodId>,
+    vetoed: &mut Vec<(MethodId, &'static str)>,
+) -> Vec<String> {
+    let mut applied = Vec::new();
+    for lc in learned {
+        if !lc.matchable() {
+            continue;
+        }
+        match lc.origin {
+            LearnedOrigin::Extension => {
+                if !tier_allows_extension(tier) || allowed.contains(&lc.method) {
+                    continue;
+                }
+                let veto = FORBIDDEN_RULES
+                    .iter()
+                    .find(|rule| rule.veto.contains(&lc.method) && rule.when.eval(ev));
+                match veto {
+                    Some(rule) => vetoed.push((lc.method, rule.id)),
+                    None => {
+                        allowed.push(lc.method);
+                        applied.push(format!(
+                            "{}: extended the method set with {}",
+                            lc.id(),
+                            lc.method.name()
+                        ));
+                    }
+                }
+            }
+            LearnedOrigin::Demotion => {
+                if let Some(pos) = allowed.iter().position(|&m| m == lc.method) {
+                    if pos + 1 != allowed.len() {
+                        let m = allowed.remove(pos);
+                        allowed.push(m);
+                        applied.push(format!(
+                            "{}: demoted {} below every alternative",
+                            lc.id(),
+                            lc.method.name()
+                        ));
+                    }
+                }
+            }
+            LearnedOrigin::Promotion => {}
+        }
+    }
+    applied
+}
+
 /// Full audit trail of one retrieval (steps 4-9 outputs).
 #[derive(Debug, Clone)]
 pub struct RetrievalResult {
@@ -133,6 +212,10 @@ pub struct RetrievalResult {
     /// on this device (promotions/demotions/extensions of the curated KB);
     /// empty when retrieval ran cold or nothing was learned.
     pub learned_notes: Vec<String>,
+    /// Matchable learned cases that actually modified the method set in
+    /// step 8'' (one audit line per application; empty when none cleared
+    /// the matchability bars or every application was a no-op).
+    pub applied_learned: Vec<String>,
 }
 
 impl RetrievalResult {
@@ -169,6 +252,12 @@ impl RetrievalResult {
         if !self.learned_notes.is_empty() {
             s.push_str("learned decision cases:\n");
             for note in &self.learned_notes {
+                s.push_str(&format!("  {note}\n"));
+            }
+        }
+        if !self.applied_learned.is_empty() {
+            s.push_str("learned cases applied to the method set:\n");
+            for note in &self.applied_learned {
                 s.push_str(&format!("  {note}\n"));
             }
         }
@@ -268,6 +357,7 @@ pub fn retrieve_with_cache(
     // their curated order.
     let mut skill_notes = Vec::new();
     let mut learned_notes = Vec::new();
+    let mut applied_learned = Vec::new();
     if let (Some(store), Some(case)) = (skills, matched) {
         match cache {
             Some(cache) => {
@@ -291,6 +381,14 @@ pub fn retrieve_with_cache(
                 });
                 let reordered: Vec<MethodId> = order.iter().map(|&i| allowed[i]).collect();
                 allowed.copy_from_slice(&reordered);
+                let learned = cache
+                    .learned
+                    .entry(case.id)
+                    .or_insert_with(|| store.learned_for(device, case.id))
+                    .clone();
+                // Step 8'' before note formatting, so an extended method
+                // gets its skill note like any curated one.
+                applied_learned = apply_learned(ev, tier, &learned, &mut allowed, &mut vetoed);
                 for &m in &allowed {
                     let note = cache
                         .notes
@@ -300,25 +398,18 @@ pub fn retrieve_with_cache(
                         skill_notes.push(n.clone());
                     }
                 }
-                let learned = cache.learned.entry(case.id).or_insert_with(|| {
-                    store
-                        .learned_for(device, case.id)
-                        .iter()
-                        .map(|lc| lc.render())
-                        .collect()
-                });
-                learned_notes.extend(learned.iter().cloned());
+                learned_notes = learned.iter().map(|lc| lc.render()).collect();
             }
             None => {
                 store.rerank(device, case.id, &mut allowed);
+                let learned = store.learned_for(device, case.id);
+                applied_learned = apply_learned(ev, tier, &learned, &mut allowed, &mut vetoed);
                 for &m in &allowed {
                     if let Some(n) = skill_note(store, device, case.id, m) {
                         skill_notes.push(n);
                     }
                 }
-                for lc in store.learned_for(device, case.id) {
-                    learned_notes.push(lc.render());
-                }
+                learned_notes = learned.iter().map(|lc| lc.render()).collect();
             }
         }
     }
@@ -337,6 +428,7 @@ pub fn retrieve_with_cache(
         case_why: matched.map(|c| c.why),
         skill_notes,
         learned_notes,
+        applied_learned,
     }
 }
 
@@ -562,6 +654,97 @@ mod tests {
         let audit = r.audit();
         assert!(audit.contains("learned decision cases:"), "{audit}");
         assert!(audit.contains("[demotion]"), "{audit}");
+    }
+
+    #[test]
+    fn matchable_extension_widens_the_method_set() {
+        use super::super::skill_store::{SkillObs, SkillStore};
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let dev = DeviceSpec::a100_like();
+        let cost = price(&task.graph, &sched, &dev);
+        let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+        let feats = ground_truth(&task.graph, &sched);
+        // gemm.naive_loop's curated set is [TileSmem] only. Eight clean
+        // wins of VectorizeLoads clear both matchability bars
+        // (wilson(8,8) ~ 0.89 >= 0.7), so the extension must act.
+        let mut store = SkillStore::new();
+        for _ in 0..8 {
+            store.observe(&SkillObs {
+                case_id: "gemm.naive_loop".to_string(),
+                method: MethodId::VectorizeLoads,
+                gain: Some(1.5),
+                device: dev.name.to_string(),
+            });
+        }
+        let cold = retrieve_for(&task, &feats, &raw);
+        assert_eq!(cold.matched_case, Some("gemm.naive_loop"));
+        assert!(!cold.allowed_methods.contains(&MethodId::VectorizeLoads));
+        let r = retrieve_for_with(&task, &feats, &raw, Some(&store), dev.name);
+        assert!(
+            r.allowed_methods.contains(&MethodId::VectorizeLoads),
+            "{}",
+            r.audit()
+        );
+        assert_eq!(
+            r.allowed_methods.last(),
+            Some(&MethodId::VectorizeLoads),
+            "extensions append after the curated (reranked) set"
+        );
+        assert!(!r.applied_learned.is_empty());
+        let audit = r.audit();
+        assert!(audit.contains("learned cases applied to the method set:"), "{audit}");
+        assert!(audit.contains("extended the method set with vectorize_loads"), "{audit}");
+        assert!(
+            r.skill_notes.iter().any(|n| n.starts_with("vectorize_loads:")),
+            "the extended method gets a skill note too:\n{audit}"
+        );
+        // Cached path produces the same bytes.
+        let mut cache = RetrievalCache::new();
+        for _ in 0..2 {
+            let c = retrieve_for_with_cache(
+                &task,
+                &feats,
+                &raw,
+                Some(&store),
+                dev.name,
+                Some(&mut cache),
+            );
+            assert_eq!(c.allowed_methods, r.allowed_methods);
+            assert_eq!(c.audit(), r.audit());
+        }
+    }
+
+    #[test]
+    fn sub_threshold_learned_cases_cannot_modify_the_method_set() {
+        use super::super::skill_store::{SkillObs, SkillStore};
+        let task = appendix_d_task();
+        let sched = Schedule::per_op_naive(&task.graph);
+        let dev = DeviceSpec::a100_like();
+        let cost = price(&task.graph, &sched, &dev);
+        let raw = synthesize(&task.graph, &sched, &cost, ToolVersion::Ncu2023);
+        let feats = ground_truth(&task.graph, &sched);
+        // Five wins is enough to *synthesize* an extension (it shows in the
+        // audit) but below MIN_MATCH_EVIDENCE — a noisy shard's early
+        // streak must not widen the curated set.
+        let mut store = SkillStore::new();
+        for _ in 0..5 {
+            store.observe(&SkillObs {
+                case_id: "gemm.naive_loop".to_string(),
+                method: MethodId::VectorizeLoads,
+                gain: Some(1.5),
+                device: dev.name.to_string(),
+            });
+        }
+        let cold = retrieve_for(&task, &feats, &raw);
+        let r = retrieve_for_with(&task, &feats, &raw, Some(&store), dev.name);
+        assert!(!r.learned_notes.is_empty(), "the case exists:\n{}", r.audit());
+        assert_eq!(
+            r.allowed_methods, cold.allowed_methods,
+            "but it may not act:\n{}",
+            r.audit()
+        );
+        assert!(r.applied_learned.is_empty());
     }
 
     #[test]

@@ -178,8 +178,20 @@ impl LearnedOrigin {
     }
 }
 
+/// Minimum attempts before a learned case may *change the method set*
+/// during retrieval (as opposed to merely reranking and annotating
+/// audits). Stricter than the synthesis floor (`MIN_LEARN_EVIDENCE`): a
+/// case can exist — and be inspected — long before it is allowed to act.
+pub const MIN_MATCH_EVIDENCE: u64 = 8;
+
+/// Minimum Wilson-lower-bound confidence for a learned case to act during
+/// retrieval. Together with [`MIN_MATCH_EVIDENCE`] this is the poison
+/// gate: a noisy shard's flukes never clear both bars, so they cannot
+/// perturb the curated table's method sets.
+pub const MIN_MATCH_CONFIDENCE: f64 = 0.7;
+
 /// A decision case synthesized from the learned skill store (skill-store
-/// v3) when observed outcomes consistently contradict or extend the
+/// v4) when observed outcomes consistently contradict or extend the
 /// curated decision table. Unlike [`DecisionCase`], a learned case is
 /// *derived* — recomputed deterministically from the recorded stats, never
 /// hand-authored — and is scoped to one device partition.
@@ -221,6 +233,13 @@ impl LearnedCase {
             self.confidence,
             self.attempts
         )
+    }
+
+    /// True when the case has cleared the matchability bars
+    /// ([`MIN_MATCH_EVIDENCE`], [`MIN_MATCH_CONFIDENCE`]) and may modify
+    /// the retrieved method set, not just rerank it.
+    pub fn matchable(&self) -> bool {
+        self.attempts >= MIN_MATCH_EVIDENCE && self.confidence >= MIN_MATCH_CONFIDENCE
     }
 }
 
@@ -291,6 +310,27 @@ mod tests {
     fn render_is_readable() {
         let p = Pred::All(vec![Pred::Gt("a", 1.0), Pred::Not("b")]);
         assert_eq!(p.render(), "(a > 1 & !b)");
+    }
+
+    #[test]
+    fn matchable_requires_both_bars() {
+        let mut lc = LearnedCase {
+            device: "a100-like".into(),
+            base_case: "c".into(),
+            method: MethodId::TileSmem,
+            origin: LearnedOrigin::Promotion,
+            attempts: MIN_MATCH_EVIDENCE,
+            wins: MIN_MATCH_EVIDENCE,
+            mean_gain: 1.0,
+            confidence: 0.88,
+            why: "w".into(),
+        };
+        assert!(lc.matchable());
+        lc.attempts = MIN_MATCH_EVIDENCE - 1;
+        assert!(!lc.matchable(), "evidence bar");
+        lc.attempts = MIN_MATCH_EVIDENCE;
+        lc.confidence = MIN_MATCH_CONFIDENCE - 0.01;
+        assert!(!lc.matchable(), "confidence bar");
     }
 
     #[test]

@@ -1,0 +1,645 @@
+//! Segmented on-disk layout for the long-term skill store (v4).
+//!
+//! A live memory-dir store at millions-of-runs scale cannot afford to
+//! rewrite the whole world at every fold epoch. The segmented layout keeps
+//! history in **immutable folded segments** — plain flat v4 stores under
+//! `skills.segments/` — plus a small **active head** that absorbs the
+//! current epoch's observations. The manifest (`skills.json`) is the head's
+//! flat serialization with two twists:
+//!
+//! - its `segments` list names every segment file in canonical (oldest
+//!   first) order, each with the `generation`/`observations`/`cases` the
+//!   segment carries, and
+//! - its `learned` section is derived from the **logical** store (head +
+//!   every segment folded), so readers that only look at the manifest still
+//!   see the synthesized decision cases for the whole history.
+//!
+//! The logical content of a segmented store is the [`SkillStore::merge_store`]
+//! fold of head and segments — the same commutative/associative ExactSum
+//! algebra the sharded suite's `merge` uses — so a segmented store folds to
+//! **byte-identical** `canonical_bytes` as the equivalent one-blob store
+//! (`docs/memory-formats.md`, invariant 17). [`SkillStore::load`] performs
+//! that fold transparently; only *writers* (the suite scheduler, `run-task`,
+//! the `skills` CLI) open the [`SegmentedSkillStore`] form.
+//!
+//! Epoch rotation ([`SegmentedSkillStore::advance_to`]) freezes the head
+//! into a fresh segment file instead of rewriting accumulated history;
+//! compaction ([`SegmentedSkillStore::compact`]) is an offline merge-shaped
+//! job that folds N segments into one and swaps the manifest atomically —
+//! segment files are immutable and names are never reused, so a reader
+//! holding an older manifest keeps resolving every file it references.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+use super::skill_store::{GcReport, SkillObs, SkillStore};
+
+/// Directory (relative to the manifest) holding immutable segment files.
+pub const SEGMENT_DIR: &str = "skills.segments";
+
+/// How many times `open` re-reads the manifest when a referenced segment
+/// file vanishes mid-open (a concurrent compaction swapped the manifest
+/// and deleted its inputs between our manifest read and segment read).
+const OPEN_RETRIES: usize = 5;
+
+/// One manifest entry: an immutable folded segment on disk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentRef {
+    /// Path relative to the manifest's directory, forward slashes
+    /// (`skills.segments/seg-000001.json`).
+    pub file: String,
+    /// The segment's fold-epoch clock (max epoch stamped inside).
+    pub generation: u64,
+    /// Observations folded into the segment.
+    pub observations: u64,
+    /// Distinct case ids the segment carries (layout display only).
+    pub cases: u64,
+}
+
+/// Report returned by [`SegmentedSkillStore::compact`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Segments folded away (0 = nothing to do).
+    pub folded_segments: usize,
+    /// The fresh segment file the fold landed in.
+    pub into: Option<String>,
+    /// Observations the folded segment carries.
+    pub observations: u64,
+}
+
+impl CompactReport {
+    /// Human-readable one-line summary.
+    pub fn render(&self) -> String {
+        match &self.into {
+            Some(f) => format!(
+                "compacted {} segment(s) into {f} ({} observation(s))",
+                self.folded_segments, self.observations
+            ),
+            None => "compact: nothing to do (fewer than 2 segments)".to_string(),
+        }
+    }
+}
+
+/// A live memory-dir store in the segmented v4 layout: immutable folded
+/// segments + active head on disk, with the full logical fold kept warm in
+/// memory for retrieval and learned-case synthesis.
+///
+/// Writer invariant: `head.generation == logical.generation` (the head's
+/// clock is maxed over every segment at open and both advance together),
+/// so observations folded through [`SegmentedSkillStore::merge`] land with
+/// identical epoch stamps in both views.
+#[derive(Debug, Clone)]
+pub struct SegmentedSkillStore {
+    /// Directory the manifest lives in (segment paths resolve against it).
+    dir: PathBuf,
+    /// Manifest path (`<dir>/skills.json`).
+    path: PathBuf,
+    /// Manifest segment list, canonical (oldest-first) order.
+    segments: Vec<SegmentRef>,
+    /// Active head: the current epoch's (and any un-rotated history's)
+    /// stats. What the manifest's `partitions` serialize.
+    head: SkillStore,
+    /// The logical store: head + every segment folded. Pure function of
+    /// the on-disk state; retrieval and `learned` derivation read this.
+    logical: SkillStore,
+    /// Files superseded by gc/compaction, deleted (best-effort) only
+    /// *after* the next manifest lands so older manifests stay readable.
+    pending_delete: Vec<PathBuf>,
+}
+
+impl SegmentedSkillStore {
+    /// Open the store rooted at `dir` (`<dir>/skills.json`). A missing
+    /// manifest is a cold store; flat v1–v4 blobs load with the whole store
+    /// as head and no segments (and re-save as the v4 fixed point).
+    pub fn open(dir: &Path) -> Result<SegmentedSkillStore, String> {
+        SegmentedSkillStore::open_path(&dir.join("skills.json"))
+    }
+
+    /// [`SegmentedSkillStore::open`] addressed by manifest path. Retries
+    /// the manifest read when a referenced segment file disappears
+    /// mid-open: segments are immutable and names are never reused, so a
+    /// vanished file means a concurrent compaction swapped the manifest —
+    /// re-reading converges.
+    pub fn open_path(path: &Path) -> Result<SegmentedSkillStore, String> {
+        let dir = path
+            .parent()
+            .map(Path::to_path_buf)
+            .filter(|p| !p.as_os_str().is_empty())
+            .unwrap_or_else(|| PathBuf::from("."));
+        let mut last_race = String::new();
+        for _ in 0..OPEN_RETRIES {
+            match SegmentedSkillStore::open_once(&dir, path) {
+                Ok(store) => return Ok(store),
+                Err(OpenError::SegmentVanished(why)) => last_race = why,
+                Err(OpenError::Fatal(e)) => return Err(e),
+            }
+        }
+        Err(format!(
+            "{}: segment files kept vanishing across {OPEN_RETRIES} manifest reads \
+             (last: {last_race})",
+            path.display()
+        ))
+    }
+
+    fn open_once(dir: &Path, path: &Path) -> Result<SegmentedSkillStore, OpenError> {
+        if !path.exists() {
+            return Ok(SegmentedSkillStore {
+                dir: dir.to_path_buf(),
+                path: path.to_path_buf(),
+                segments: Vec::new(),
+                head: SkillStore::new(),
+                logical: SkillStore::new(),
+                pending_delete: Vec::new(),
+            });
+        }
+        let bytes = std::fs::read(path)
+            .map_err(|e| OpenError::Fatal(format!("reading {}: {e}", path.display())))?;
+        let text = std::str::from_utf8(&bytes).map_err(|e| {
+            OpenError::Fatal(format!("{}: skill store is not UTF-8: {e}", path.display()))
+        })?;
+        let j = Json::parse(text)
+            .map_err(|e| OpenError::Fatal(format!("{}: parsing skill store: {e}", path.display())))?;
+        let segments = parse_segment_refs(&j)
+            .map_err(|e| OpenError::Fatal(format!("{}: {e}", path.display())))?;
+        // The head is the manifest body with the segment list blanked —
+        // flat v1–v3 blobs (no `segments` key) take this path unchanged.
+        let head_json = match &j {
+            Json::Obj(map) => {
+                let mut m = map.clone();
+                m.insert("segments".to_string(), json::arr(vec![]));
+                Json::Obj(m)
+            }
+            other => other.clone(),
+        };
+        let mut head = SkillStore::from_json(&head_json)
+            .map_err(|e| OpenError::Fatal(format!("{}: {e}", path.display())))?;
+        let mut logical = head.clone();
+        for r in &segments {
+            let seg_path = dir.join(&r.file);
+            let seg_bytes = match std::fs::read(&seg_path) {
+                Ok(b) => b,
+                Err(e) if e.kind() == io::ErrorKind::NotFound => {
+                    return Err(OpenError::SegmentVanished(format!(
+                        "{} referenced by the manifest is gone",
+                        seg_path.display()
+                    )));
+                }
+                Err(e) => {
+                    return Err(OpenError::Fatal(format!(
+                        "reading segment {}: {e}",
+                        seg_path.display()
+                    )));
+                }
+            };
+            let seg = SkillStore::from_bytes(&seg_bytes)
+                .map_err(|e| OpenError::Fatal(format!("segment {}: {e}", seg_path.display())))?;
+            logical.merge_store(&seg);
+        }
+        // Writer invariant: the head clock rides at the logical clock so
+        // new observations stamp consistently in both views (also repairs
+        // manifests written by a foreign/older writer).
+        head.generation = logical.generation;
+        Ok(SegmentedSkillStore {
+            dir: dir.to_path_buf(),
+            path: path.to_path_buf(),
+            segments,
+            head,
+            logical,
+            pending_delete: Vec::new(),
+        })
+    }
+
+    /// The logical fold-epoch clock.
+    pub fn generation(&self) -> u64 {
+        self.logical.generation
+    }
+
+    /// The full logical store (head + segments folded).
+    pub fn logical(&self) -> &SkillStore {
+        &self.logical
+    }
+
+    /// The active head (what the next rotation would freeze).
+    pub fn head(&self) -> &SkillStore {
+        &self.head
+    }
+
+    /// Manifest segment list, canonical order.
+    pub fn segments(&self) -> &[SegmentRef] {
+        &self.segments
+    }
+
+    /// Consume into the logical [`SkillStore`] — what read-only callers
+    /// ([`SkillStore::load`]) hand back.
+    pub fn into_logical(self) -> SkillStore {
+        self.logical
+    }
+
+    /// Fold a task's worth of observations into head and logical alike
+    /// (identical epoch stamps — the clocks are kept equal).
+    pub fn merge(&mut self, obs: &[SkillObs]) {
+        self.head.merge(obs);
+        self.logical.merge(obs);
+    }
+
+    /// Advance the fold-epoch clock to `gen`, rotating the head into a
+    /// fresh immutable segment first when it carries anything. Returns
+    /// `Ok(true)` when a rotation happened — callers should
+    /// [`SegmentedSkillStore::save`] promptly so the manifest references
+    /// the new segment. `gen` at or below the current clock is a no-op
+    /// (the resume path: the on-disk store already carries the bump).
+    pub fn advance_to(&mut self, gen: u64) -> io::Result<bool> {
+        if gen <= self.logical.generation {
+            return Ok(false);
+        }
+        let mut rotated = false;
+        if !self.head.is_empty() || self.head.observations > 0 {
+            let file = self.next_segment_file()?;
+            std::fs::create_dir_all(self.dir.join(SEGMENT_DIR))?;
+            self.head.save(&self.dir.join(&file))?;
+            self.segments.push(SegmentRef {
+                file,
+                generation: self.head.generation,
+                observations: self.head.observations,
+                cases: self.head.case_count() as u64,
+            });
+            let frozen_gen = self.head.generation;
+            self.head = SkillStore::new();
+            self.head.generation = frozen_gen;
+            rotated = true;
+        }
+        self.head.generation = gen;
+        self.logical.generation = gen;
+        Ok(rotated)
+    }
+
+    /// Write the manifest atomically (staging file + rename), then drop any
+    /// files superseded by gc/compaction — deletion strictly *after* the
+    /// new manifest lands, so a reader holding the old manifest either
+    /// resolves the old files or retries into the new manifest.
+    pub fn save(&mut self) -> io::Result<()> {
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let bytes = format!("{}\n", self.manifest_json());
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, &self.path)?;
+        for stale in self.pending_delete.drain(..) {
+            let _ = std::fs::remove_file(stale);
+        }
+        Ok(())
+    }
+
+    /// The manifest form: the head's flat serialization, with `learned`
+    /// re-derived from the logical fold and the segment list spliced in.
+    /// With no segments this is exactly the logical store's
+    /// [`SkillStore::canonical_bytes`] — the v4 fixed point flat and
+    /// migrated v1–v3 stores re-save as.
+    fn manifest_json(&self) -> Json {
+        let mut j = self.head.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("learned".to_string(), Json::Arr(self.logical.learned_json()));
+            map.insert(
+                "segments".to_string(),
+                Json::Arr(
+                    self.segments
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("cases", json::num(r.cases as f64)),
+                                ("file", json::s(&r.file)),
+                                ("generation", json::num(r.generation as f64)),
+                                ("observations", json::num(r.observations as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        j
+    }
+
+    /// Offline compaction: fold every segment into one fresh immutable
+    /// file and atomically swap the manifest to reference it. A no-op
+    /// below 2 segments. Safe while readers hold older manifests: inputs
+    /// are deleted only after the new manifest lands, and segment names
+    /// are never reused.
+    pub fn compact(&mut self) -> Result<CompactReport, String> {
+        if self.segments.len() < 2 {
+            return Ok(CompactReport::default());
+        }
+        let mut folded = SkillStore::new();
+        for r in &self.segments {
+            let seg_path = self.dir.join(&r.file);
+            let bytes = std::fs::read(&seg_path)
+                .map_err(|e| format!("reading segment {}: {e}", seg_path.display()))?;
+            let seg = SkillStore::from_bytes(&bytes)
+                .map_err(|e| format!("segment {}: {e}", seg_path.display()))?;
+            folded.merge_store(&seg);
+        }
+        let file = self
+            .next_segment_file()
+            .map_err(|e| format!("scanning {SEGMENT_DIR}: {e}"))?;
+        std::fs::create_dir_all(self.dir.join(SEGMENT_DIR))
+            .map_err(|e| format!("creating {SEGMENT_DIR}: {e}"))?;
+        folded
+            .save(&self.dir.join(&file))
+            .map_err(|e| format!("writing folded segment {file}: {e}"))?;
+        let report = CompactReport {
+            folded_segments: self.segments.len(),
+            into: Some(file.clone()),
+            observations: folded.observations,
+        };
+        for old in std::mem::take(&mut self.segments) {
+            self.pending_delete.push(self.dir.join(&old.file));
+        }
+        self.segments.push(SegmentRef {
+            file,
+            generation: folded.generation,
+            observations: folded.observations,
+            cases: folded.case_count() as u64,
+        });
+        self.save()
+            .map_err(|e| format!("writing manifest {}: {e}", self.path.display()))?;
+        Ok(report)
+    }
+
+    /// Age stats out of the *logical* store (optionally scoped to one
+    /// device partition), then collapse the layout: the surviving logical
+    /// store becomes the new head and every segment is queued for deletion
+    /// at the next [`SegmentedSkillStore::save`]. Historical
+    /// `observations`/`generation` counters are untouched, exactly like
+    /// [`SkillStore::gc`]. In-memory only — skipping `save` is a dry run.
+    pub fn gc_device(&mut self, max_age: u64, device: Option<&str>) -> GcReport {
+        let report = self.logical.gc_device(max_age, device);
+        self.head = self.logical.clone();
+        for r in std::mem::take(&mut self.segments) {
+            self.pending_delete.push(self.dir.join(&r.file));
+        }
+        report
+    }
+
+    /// Render the physical layout (the `skills inspect --segments` view):
+    /// one line per segment plus the head summary. The logical content is
+    /// rendered separately via [`SkillStore::render_inspect`] on
+    /// [`SegmentedSkillStore::logical`].
+    pub fn render_layout(&self) -> String {
+        let mut out = format!(
+            "segment layout: {} segment(s) + head\n",
+            self.segments.len()
+        );
+        for r in &self.segments {
+            out.push_str(&format!(
+                "  segment {:<40} generation {:>3}  observations {:>6}  cases {:>4}\n",
+                r.file, r.generation, r.observations, r.cases
+            ));
+        }
+        out.push_str(&format!(
+            "  head    {:<40} generation {:>3}  observations {:>6}  cases {:>4}\n",
+            "(manifest partitions)",
+            self.head.generation,
+            self.head.observations,
+            self.head.case_count()
+        ));
+        out
+    }
+
+    /// First unused segment file name: one past the max counter seen in
+    /// the manifest *and* on disk, zero-padded. Names are never reused, so
+    /// files orphaned by a crash between rotation and manifest save can
+    /// never be silently adopted by a later writer.
+    fn next_segment_file(&self) -> io::Result<String> {
+        let mut max = 0u64;
+        for r in &self.segments {
+            if let Some(n) = segment_counter(&r.file) {
+                max = max.max(n);
+            }
+        }
+        let seg_dir = self.dir.join(SEGMENT_DIR);
+        if seg_dir.is_dir() {
+            for entry in std::fs::read_dir(&seg_dir)? {
+                let name = entry?.file_name();
+                if let Some(n) = segment_counter(&name.to_string_lossy()) {
+                    max = max.max(n);
+                }
+            }
+        }
+        Ok(format!("{SEGMENT_DIR}/seg-{:06}.json", max + 1))
+    }
+}
+
+enum OpenError {
+    /// A referenced segment file vanished mid-open (compaction race) —
+    /// re-read the manifest.
+    SegmentVanished(String),
+    Fatal(String),
+}
+
+/// Counter embedded in a segment file name (`…seg-000042.json` -> 42).
+fn segment_counter(file: &str) -> Option<u64> {
+    let name = file.rsplit('/').next()?;
+    name.strip_prefix("seg-")?.strip_suffix(".json")?.parse().ok()
+}
+
+/// Parse the manifest's `segments` list (absent or empty = flat store).
+/// Relative traversal-free paths only: the manifest must not be able to
+/// point readers outside its own directory.
+fn parse_segment_refs(j: &Json) -> Result<Vec<SegmentRef>, String> {
+    let Some(segs) = j.get("segments").and_then(|s| s.as_arr()) else {
+        return Ok(Vec::new());
+    };
+    let mut out = Vec::with_capacity(segs.len());
+    for s in segs {
+        let file = s
+            .get("file")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| "segment entry missing `file`".to_string())?
+            .to_string();
+        if file.starts_with('/') || file.split('/').any(|c| c == ".." || c.is_empty()) {
+            return Err(format!("segment file {file:?}: not a clean relative path"));
+        }
+        let num = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        out.push(SegmentRef {
+            file,
+            generation: num("generation"),
+            observations: num("observations"),
+            cases: num("cases"),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::transforms::MethodId;
+
+    fn obs_on(device: &str, case: &str, m: MethodId, gain: Option<f64>) -> SkillObs {
+        SkillObs {
+            case_id: case.to_string(),
+            method: m,
+            gain,
+            device: device.to_string(),
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ks-seg-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Three epochs of observations through the segmented writer must fold
+    /// to byte-identical canonical bytes as one flat store fed the same
+    /// multiset — the segment-fold-equivalence invariant.
+    #[test]
+    fn segmented_folds_byte_identical_to_flat() {
+        let dir = tmp_dir("fold-eq");
+        let mut flat = SkillStore::new();
+        let epochs: Vec<Vec<SkillObs>> = (1..=3)
+            .map(|e| {
+                vec![
+                    obs_on("a100-like", "gemm.naive_loop", MethodId::TileSmem, Some(e as f64)),
+                    obs_on("tpu-like", "gemm.naive_loop", MethodId::SplitK, None),
+                ]
+            })
+            .collect();
+        for (i, batch) in epochs.iter().enumerate() {
+            let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+            let rotated = seg.advance_to(seg.generation() + 1).unwrap();
+            assert_eq!(rotated, i > 0, "every epoch after the first rotates");
+            seg.merge(batch);
+            seg.save().unwrap();
+
+            flat.generation += 1;
+            flat.merge(batch);
+        }
+        let reopened = SegmentedSkillStore::open(&dir).unwrap();
+        assert_eq!(reopened.segments().len(), 2);
+        assert_eq!(
+            reopened.logical().canonical_bytes(),
+            flat.canonical_bytes(),
+            "segmented store folds to the flat store's bytes"
+        );
+        // The transparent reader path agrees.
+        let loaded = SkillStore::load(&dir.join("skills.json")).unwrap();
+        assert_eq!(loaded.canonical_bytes(), flat.canonical_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Compaction folds N segments into one and preserves the logical
+    /// bytes; old files are gone, the new manifest references one segment.
+    #[test]
+    fn compaction_preserves_logical_bytes_and_swaps_atomically() {
+        let dir = tmp_dir("compact");
+        for e in 1..=3u64 {
+            let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+            seg.advance_to(seg.generation() + 1).unwrap();
+            seg.merge(&[obs_on("a100-like", "c", MethodId::TileSmem, Some(e as f64))]);
+            seg.save().unwrap();
+        }
+        let before = SkillStore::load(&dir.join("skills.json")).unwrap();
+        let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+        let old_files: Vec<PathBuf> =
+            seg.segments().iter().map(|r| dir.join(&r.file)).collect();
+        let report = seg.compact().unwrap();
+        assert_eq!(report.folded_segments, 2);
+        assert!(report.render().starts_with("compacted 2 segment(s)"));
+        for f in old_files {
+            assert!(!f.exists(), "compaction input {f:?} deleted after swap");
+        }
+        let reopened = SegmentedSkillStore::open(&dir).unwrap();
+        assert_eq!(reopened.segments().len(), 1);
+        let after = SkillStore::load(&dir.join("skills.json")).unwrap();
+        assert_eq!(after.canonical_bytes(), before.canonical_bytes());
+        // Compacting again is a no-op.
+        let mut again = SegmentedSkillStore::open(&dir).unwrap();
+        assert_eq!(again.compact().unwrap(), CompactReport::default());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A flat v4 (or migrated v1–v3) blob opens with no segments and
+    /// re-saves byte-stable — the flat fixed point.
+    #[test]
+    fn flat_store_is_a_fixed_point() {
+        let dir = tmp_dir("fixed-point");
+        let mut flat = SkillStore::new();
+        flat.advance_generation();
+        flat.merge(&[obs_on("a100-like", "c", MethodId::TileSmem, Some(1.5))]);
+        let path = dir.join("skills.json");
+        flat.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+        assert!(seg.segments().is_empty());
+        seg.save().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), bytes, "re-save is byte-stable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// gc collapses the layout: segments queued for deletion, survivors in
+    /// the head, historical counters intact, manifest back to flat form.
+    #[test]
+    fn gc_collapses_segments_and_keeps_counters() {
+        let dir = tmp_dir("gc");
+        for e in 1..=3u64 {
+            let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+            seg.advance_to(seg.generation() + 1).unwrap();
+            let m = if e == 1 { MethodId::TileSmem } else { MethodId::SplitK };
+            seg.merge(&[obs_on("a100-like", "c", m, Some(1.0))]);
+            seg.save().unwrap();
+        }
+        let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+        let total_obs = seg.logical().observations;
+        seg.advance_to(20).unwrap();
+        let report = seg.gc_device(8, None);
+        assert_eq!(report.dropped_stats, 2, "epoch-1/2 stats age out at gen 20");
+        seg.save().unwrap();
+        let reopened = SegmentedSkillStore::open(&dir).unwrap();
+        assert!(reopened.segments().is_empty(), "gc collapsed the layout");
+        assert_eq!(reopened.logical().observations, total_obs, "historical counter kept");
+        let leftover = std::fs::read_dir(dir.join(SEGMENT_DIR))
+            .map(|d| d.filter_map(|e| e.ok()).count())
+            .unwrap_or(0);
+        assert_eq!(leftover, 0, "collapsed segment files deleted after save");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Segment names are never reused: a crash-orphaned file on disk bumps
+    /// the counter past it.
+    #[test]
+    fn segment_names_skip_orphans() {
+        let dir = tmp_dir("orphans");
+        std::fs::create_dir_all(dir.join(SEGMENT_DIR)).unwrap();
+        let orphan = dir.join(SEGMENT_DIR).join("seg-000007.json");
+        SkillStore::new().save(&orphan).unwrap();
+        let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+        seg.merge(&[obs_on("a100-like", "c", MethodId::TileSmem, Some(1.0))]);
+        seg.save().unwrap();
+        let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+        seg.advance_to(seg.generation() + 1).unwrap();
+        assert_eq!(
+            seg.segments().last().unwrap().file,
+            format!("{SEGMENT_DIR}/seg-000008.json"),
+            "counter scans past the orphan"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Manifests must not reference files outside their directory.
+    #[test]
+    fn traversal_paths_are_rejected() {
+        for bad in ["/etc/passwd", "../x.json", "a//b.json"] {
+            let text = format!(
+                r#"{{"generation":1,"learned":[],"observations":0,"partitions":{{}},"segments":[{{"cases":0,"file":"{bad}","generation":1,"observations":0}}],"version":4}}"#
+            );
+            let j = Json::parse(&text).unwrap();
+            assert!(parse_segment_refs(&j).is_err(), "{bad} must be rejected");
+        }
+    }
+}

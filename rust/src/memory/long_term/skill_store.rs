@@ -1,4 +1,4 @@
-//! Persistent long-term skill memory v3: the *learned* layer on top of the
+//! Persistent long-term skill memory v4: the *learned* layer on top of the
 //! curated knowledge base.
 //!
 //! The curated store (`kb_content`) is static expert knowledge; what the
@@ -37,6 +37,15 @@
 //! Persistence uses the repo's own JSON layer (serde is not vendored
 //! offline) and writes are atomic (tmp + rename) so a killed run never
 //! leaves a torn store behind.
+//!
+//! v4 adds the **segmented on-disk layout** (see `segmented`): a live
+//! memory-dir store may be persisted as a manifest whose `partitions` hold
+//! only the active head, with the rest of the history in immutable folded
+//! segment files under `skills.segments/`. [`SkillStore::load`] folds a
+//! segmented manifest back into one logical store transparently, so every
+//! reader sees the same bytes a monolithic store would have produced; the
+//! flat serialization ([`SkillStore::to_json`]) carries an empty
+//! `segments` list and stays the canonical one-blob form.
 //!
 //! Merging is exact: per-(partition, case, method) gain totals accumulate
 //! through [`ExactSum`], counts add, and generation stamps combine through
@@ -215,6 +224,8 @@ pub type Partition = BTreeMap<String, CaseStats>;
 pub struct GcReport {
     /// Age threshold the sweep ran with (generations since last observed).
     pub max_age: u64,
+    /// Partition the sweep was scoped to (`None` = every partition).
+    pub device: Option<String>,
     /// Individual (partition, case, method) stats dropped.
     pub dropped_stats: usize,
     /// Case entries left empty by the sweep and removed.
@@ -226,8 +237,12 @@ pub struct GcReport {
 impl GcReport {
     /// Human-readable one-line summary.
     pub fn render(&self) -> String {
+        let scope = match &self.device {
+            Some(d) => format!("partition {d}, "),
+            None => String::new(),
+        };
         format!(
-            "gc (max age {} generation(s)): dropped {} stat(s), {} emptied case(s), {} emptied partition(s)",
+            "gc ({scope}max age {} generation(s)): dropped {} stat(s), {} emptied case(s), {} emptied partition(s)",
             self.max_age, self.dropped_stats, self.dropped_cases, self.dropped_partitions
         )
     }
@@ -593,12 +608,24 @@ impl SkillStore {
     /// untouched. This is the `skills gc` CLI surface; run-dir stores are
     /// derived from checkpoints and never need it.
     pub fn gc(&mut self, max_age: u64) -> GcReport {
+        self.gc_device(max_age, None)
+    }
+
+    /// [`SkillStore::gc`] scoped to one device partition: only stats under
+    /// `device` are aged, every other partition is left byte-untouched —
+    /// the `skills gc --device` per-partition retention policy. `None`
+    /// sweeps everything.
+    pub fn gc_device(&mut self, max_age: u64, device: Option<&str>) -> GcReport {
         let mut report = GcReport {
             max_age,
+            device: device.map(|d| d.to_string()),
             ..GcReport::default()
         };
         let gen = self.generation;
-        self.partitions.retain(|_, cases| {
+        self.partitions.retain(|dev, cases| {
+            if device.is_some_and(|d| d != dev.as_str()) {
+                return true;
+            }
             cases.retain(|_, methods| {
                 let before = methods.len();
                 methods.retain(|_, stat| gen.saturating_sub(stat.last_gen) <= max_age);
@@ -625,7 +652,7 @@ impl SkillStore {
     /// substring), and the synthesized learned cases.
     pub fn render_inspect(&self, device: Option<&str>, case: Option<&str>) -> String {
         let mut out = format!(
-            "skill store v3: generation {}, {} observation(s), {} partition(s), {} case(s)\n",
+            "skill store v4: generation {}, {} observation(s), {} partition(s), {} case(s)\n",
             self.generation,
             self.observations,
             self.partitions.len(),
@@ -693,11 +720,13 @@ impl SkillStore {
 
     // ---- persistence ----------------------------------------------------
 
-    /// Serialize to the canonical v3 JSON form (see
+    /// Serialize to the canonical v4 one-blob JSON form (see
     /// `docs/memory-formats.md`). Equal stores serialize to equal bytes:
     /// maps are sorted, gain totals use the canonical exact decomposition,
-    /// and the `learned` section is derived deterministically from the
-    /// stats.
+    /// the `learned` section is derived deterministically from the stats,
+    /// and the `segments` list is always empty — a flat store *is* its own
+    /// head. Segmented manifests are written only by
+    /// [`segmented::SegmentedSkillStore`](super::segmented::SegmentedSkillStore).
     pub fn to_json(&self) -> Json {
         let partitions = self
             .partitions
@@ -741,8 +770,22 @@ impl SkillStore {
                 (device.clone(), Json::Obj(cs))
             })
             .collect();
-        let learned = self
-            .learned_cases()
+        json::obj(vec![
+            ("version", json::num(4.0)),
+            ("generation", json::num(self.generation as f64)),
+            ("observations", json::num(self.observations as f64)),
+            ("partitions", Json::Obj(partitions)),
+            ("learned", Json::Arr(self.learned_json())),
+            ("segments", json::arr(vec![])),
+        ])
+    }
+
+    /// The serialized `learned` section: derived learned cases in canonical
+    /// order. Factored out so the segmented manifest writer can derive the
+    /// section from the *logical* fold while its `partitions` hold only the
+    /// active head.
+    pub(crate) fn learned_json(&self) -> Vec<Json> {
+        self.learned_cases()
             .iter()
             .map(|lc| {
                 json::obj(vec![
@@ -758,22 +801,28 @@ impl SkillStore {
                     ("why", json::s(&lc.why)),
                 ])
             })
-            .collect();
-        json::obj(vec![
-            ("version", json::num(3.0)),
-            ("generation", json::num(self.generation as f64)),
-            ("observations", json::num(self.observations as f64)),
-            ("partitions", Json::Obj(partitions)),
-            ("learned", Json::Arr(learned)),
-        ])
+            .collect()
     }
 
-    /// Parse any store version. v3 reads the partitioned form (the
-    /// `learned` section is derived data and ignored); v1/v2 stores — a
-    /// flat top-level `cases` map, with (`v2`) or without (`v1`) exact
+    /// Parse any *flat* store version. v3/v4 read the partitioned form
+    /// (the `learned` section is derived data and ignored); v1/v2 stores —
+    /// a flat top-level `cases` map, with (`v2`) or without (`v1`) exact
     /// `gain_parts` — load into the [`LEGACY_DEVICE`] partition at
-    /// generation 1 and re-save canonically as v3.
+    /// generation 1 and re-save canonically as v4. A v4 manifest with a
+    /// non-empty `segments` list is rejected here: its partitions are only
+    /// the active head, so parsing it flat would silently drop history —
+    /// go through [`SkillStore::load`], which folds the segments back in.
     pub fn from_json(j: &Json) -> Result<SkillStore, String> {
+        if j.get("segments")
+            .and_then(|s| s.as_arr())
+            .is_some_and(|segs| !segs.is_empty())
+        {
+            return Err(
+                "segmented v4 manifest (non-empty `segments`); load via SkillStore::load so \
+                 segment files fold back into the logical store"
+                    .to_string(),
+            );
+        }
         let mut store = SkillStore::new();
         store.observations = j
             .get("observations")
@@ -820,7 +869,7 @@ impl SkillStore {
         Ok(store)
     }
 
-    /// The exact bytes [`SkillStore::save`] writes: the canonical v3 JSON
+    /// The exact bytes [`SkillStore::save`] writes: the canonical v4 JSON
     /// form plus a trailing newline. Equal stores produce equal bytes, which
     /// is what lets transports and tests compare stores without touching
     /// disk.
@@ -852,13 +901,26 @@ impl SkillStore {
     }
 
     /// Load a store; a missing file is an empty (cold) store, a corrupt
-    /// file is an error.
+    /// file is an error. A segmented v4 manifest is folded back into one
+    /// logical store transparently (head + every segment, via the same
+    /// commutative [`SkillStore::merge_store`] algebra), so callers that
+    /// only *read* memory never need to know about segments.
     pub fn load(path: &Path) -> Result<SkillStore, String> {
         if !path.exists() {
             return Ok(SkillStore::new());
         }
         let bytes = std::fs::read(path).map_err(|e| format!("reading {path:?}: {e}"))?;
-        SkillStore::from_bytes(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| format!("{}: skill store is not UTF-8: {e}", path.display()))?;
+        let j = Json::parse(text).map_err(|e| format!("{}: parsing skill store: {e}", path.display()))?;
+        if j.get("segments")
+            .and_then(|s| s.as_arr())
+            .is_some_and(|segs| !segs.is_empty())
+        {
+            return super::segmented::SegmentedSkillStore::open_path(path)
+                .map(|seg| seg.into_logical());
+        }
+        SkillStore::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
     }
 }
 
@@ -1229,8 +1291,33 @@ mod tests {
         let st = s.stat_in(LEGACY_DEVICE, "c", MethodId::TileSmem).unwrap();
         assert_eq!((st.attempts, st.wins), (3, 2));
         assert_eq!(st.total_gain(), 1.75);
-        let v3 = s.to_json().to_string();
-        assert!(v3.contains("\"version\":3") && v3.contains("\"partitions\""));
+        let v4 = s.to_json().to_string();
+        assert!(v4.contains("\"version\":4") && v4.contains("\"partitions\""));
+        assert!(v4.contains("\"segments\":[]"), "flat form carries an empty segment list");
+    }
+
+    #[test]
+    fn nonempty_segment_manifest_is_rejected_by_from_json() {
+        let text = r#"{"generation":2,"learned":[],"observations":1,"partitions":{},"segments":[{"cases":1,"file":"skills.segments/seg-000001.json","generation":1,"observations":1}],"version":4}"#;
+        let err = SkillStore::from_json(&Json::parse(text).unwrap()).unwrap_err();
+        assert!(err.contains("SkillStore::load"), "points at the folding loader: {err}");
+    }
+
+    #[test]
+    fn gc_device_scopes_the_sweep_to_one_partition() {
+        let mut s = SkillStore::new();
+        s.observe(&obs_on("a100-like", "c", MethodId::TileSmem, Some(1.0)));
+        s.observe(&obs_on("tpu-like", "c", MethodId::SplitK, Some(1.0)));
+        s.generation = 50;
+        let report = s.gc_device(8, Some("tpu-like"));
+        assert_eq!(report.dropped_stats, 1);
+        assert_eq!(report.dropped_partitions, 1);
+        assert!(report.render().contains("partition tpu-like"));
+        assert!(
+            s.stat_in("a100-like", "c", MethodId::TileSmem).is_some(),
+            "other partitions stay byte-untouched"
+        );
+        assert!(s.stat_in("tpu-like", "c", MethodId::SplitK).is_none());
     }
 
     // ---- learned decision cases ----------------------------------------

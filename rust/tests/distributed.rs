@@ -431,6 +431,120 @@ fn exchange_across_workers_matches_single_process_launch() {
     let _ = std::fs::remove_dir_all(&root);
 }
 
+#[test]
+fn mixed_device_exchange_relay_matches_sequential_threads() {
+    // Heterogeneous fleet composed with live memory exchange: per-row
+    // device presets AND --exchange-epoch on the same 2-worker mirror
+    // fleet. The relay crosses device partitions — each worker folds peer
+    // deltas carrying the *other* preset's evidence — and the merged
+    // output must be byte-identical to two in-process per-device shard
+    // threads trading deltas through one shared exchange dir.
+    let root = tmp_root("mixed-exchange");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+
+    let tasks: Vec<_> = bench_suite::level_suite(42, 1).into_iter().take(TAKE).collect();
+    let seeds: Vec<u64> = (0..SEEDS as u64).collect();
+    let tpu_cfg = LoopConfig {
+        dev: DeviceSpec::tpu_like(),
+        ..LoopConfig::default()
+    };
+    let ref_opts = |run_dir: &Path, ex: &Path, index: usize| {
+        let mut opts = SuiteOptions::in_dir(run_dir).with_shard(index, 2).with_exchange(ex, 2);
+        if let Some(e) = opts.exchange.as_mut() {
+            e.wait_timeout_ms = 60_000;
+        }
+        opts
+    };
+    let ex = root.join("ex-ref");
+    let (r0, r1) = (root.join("ref0"), root.join("ref1"));
+    std::thread::scope(|scope| {
+        let a = scope.spawn(|| {
+            coordinator::run_suite_with(
+                &tasks,
+                &baselines::kernelskill(),
+                &LoopConfig::default(),
+                &seeds,
+                4,
+                &ref_opts(&r0, &ex, 0),
+            )
+            .unwrap();
+        });
+        let b = scope.spawn(|| {
+            coordinator::run_suite_with(
+                &tasks,
+                &baselines::kernelskill(),
+                &tpu_cfg,
+                &seeds,
+                4,
+                &ref_opts(&r1, &ex, 1),
+            )
+            .unwrap();
+        });
+        a.join().unwrap();
+        b.join().unwrap();
+    });
+    let reference = root.join("reference");
+    coordinator::merge_run_dirs(&reference, &[r0, r1]).unwrap();
+
+    let mpath = root.join("workers.json");
+    let (t0, t1) = (root.join("t0"), root.join("t1"));
+    write_device_manifest(
+        &mpath,
+        2,
+        &[("w0", 0, 0, &t0, None), ("w1", 1, 1, &t1, Some("tpu-like"))],
+    );
+    let manifest = WorkerManifest::load(&mpath).unwrap();
+
+    let merged = root.join("merged");
+    let mut w0 = worker_cfg(&manifest, "w0", &root.join("w0"));
+    let mut w1 = worker_cfg(&manifest, "w1", &root.join("w1"));
+    w0.exchange_epoch = Some(2);
+    w1.exchange_epoch = Some(2);
+    let report = std::thread::scope(|scope| {
+        let h0 = scope.spawn(|| coordinator::run_worker(&w0).unwrap());
+        let h1 = scope.spawn(|| coordinator::run_worker(&w1).unwrap());
+        let fleet = coordinator::launch_workers(&fleet_cfg(manifest.clone(), &merged)).unwrap();
+        h0.join().unwrap();
+        h1.join().unwrap();
+        fleet
+    });
+    assert_eq!(report.merge.merged_cells, TAKE * SEEDS);
+    assert!(report.merge.missing_shards.is_empty());
+
+    assert_identical_to_single(&merged, &reference);
+    let store = std::fs::read_to_string(merged.join("skills.json")).unwrap();
+    assert!(
+        store.contains("\"a100-like\"") && store.contains("\"tpu-like\""),
+        "merged skills.json must hold both per-device partitions"
+    );
+    let m = coordinator::RunDir::open(&merged).unwrap().read_manifest().unwrap().unwrap();
+    assert_eq!(m.device, "a100-like+tpu-like");
+
+    // The relayed peer deltas each worker folded really carry the *other*
+    // preset's partition: the exchange crossed the device boundary.
+    for (dir, peer, peer_dev) in
+        [(root.join("w0"), 1, "tpu-like"), (root.join("w1"), 0, "a100-like")]
+    {
+        let mut saw_peer_partition = false;
+        for epoch in 0..2 {
+            let delta = dir
+                .join("exchange")
+                .join("kernelskill")
+                .join(format!("epoch-{epoch}.shard-{peer}.json"));
+            assert!(delta.exists(), "missing relayed peer delta {}", delta.display());
+            let text = std::fs::read_to_string(&delta).unwrap();
+            saw_peer_partition |= text.contains(&format!("\"{peer_dev}\""));
+        }
+        assert!(
+            saw_peer_partition,
+            "no relayed delta under {} carried the peer's {peer_dev} partition",
+            dir.display()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 /// Write an elastic 2-worker mirror-dir manifest: `total` lease batches,
 /// a shared lease root, no shard ranges anywhere.
 fn write_elastic_manifest(

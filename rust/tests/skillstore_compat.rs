@@ -1,13 +1,16 @@
 //! Golden-file compatibility battery for the skill-store on-disk contract
-//! (`docs/memory-formats.md`): v1 and v2 `skills.json` fixtures must keep
-//! loading forever, and re-saving them must produce the canonical v3 form
-//! — idempotently, so one byte representation exists per store state.
+//! (`docs/memory-formats.md`): v1, v2, and v3 `skills.json` fixtures must
+//! keep loading forever, and re-saving them must produce the canonical v4
+//! flat form — idempotently, so one byte representation exists per store
+//! state — while a segmented v4 store must fold to the byte-identical
+//! canonical form its one-blob equivalent serializes to.
 
 use std::path::{Path, PathBuf};
 
 use kernelskill::kir::transforms::MethodId;
+use kernelskill::memory::long_term::segmented::SEGMENT_DIR;
 use kernelskill::memory::long_term::skill_store::LEGACY_DEVICE;
-use kernelskill::memory::long_term::{SkillObs, SkillStore};
+use kernelskill::memory::long_term::{SegmentedSkillStore, SkillObs, SkillStore};
 use kernelskill::util::json::Json;
 
 fn fixture(name: &str) -> PathBuf {
@@ -18,23 +21,33 @@ fn tmp_dir(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("ks-compat-{tag}-{}", std::process::id()))
 }
 
+fn obs(case: &str, method: MethodId, gain: Option<f64>, device: &str) -> SkillObs {
+    SkillObs {
+        case_id: case.to_string(),
+        method,
+        gain,
+        device: device.to_string(),
+    }
+}
+
 /// Load a store, then assert that serialization is a fixed point: the
-/// first re-save is canonical v3 and further load/save cycles reproduce it
-/// byte for byte.
-fn assert_canonical_v3_resave(store: &SkillStore) -> String {
-    let v3 = store.to_json().to_string();
-    assert!(v3.contains("\"version\":3"), "{v3}");
-    assert!(v3.contains("\"partitions\""), "{v3}");
-    assert!(v3.contains("\"generation\""), "{v3}");
-    assert!(v3.contains("\"last_gen\""), "{v3}");
-    let back = SkillStore::from_json(&Json::parse(&v3).unwrap()).unwrap();
+/// first re-save is canonical v4 (flat form: `"segments":[]`) and further
+/// load/save cycles reproduce it byte for byte.
+fn assert_canonical_v4_resave(store: &SkillStore) -> String {
+    let v4 = store.to_json().to_string();
+    assert!(v4.contains("\"version\":4"), "{v4}");
+    assert!(v4.contains("\"segments\":[]"), "{v4}");
+    assert!(v4.contains("\"partitions\""), "{v4}");
+    assert!(v4.contains("\"generation\""), "{v4}");
+    assert!(v4.contains("\"last_gen\""), "{v4}");
+    let back = SkillStore::from_json(&Json::parse(&v4).unwrap()).unwrap();
     assert_eq!(&back, store, "reload must reproduce the store exactly");
-    assert_eq!(back.to_json().to_string(), v3, "serialization must be idempotent");
-    v3
+    assert_eq!(back.to_json().to_string(), v4, "serialization must be idempotent");
+    v4
 }
 
 #[test]
-fn v1_golden_file_loads_and_resaves_as_v3() {
+fn v1_golden_file_loads_and_resaves_as_v4() {
     let store = SkillStore::load(&fixture("skills_v1.json")).unwrap();
     assert_eq!(store.observations, 4);
     assert_eq!(store.generation, 1, "legacy stores load at generation 1");
@@ -46,11 +59,11 @@ fn v1_golden_file_loads_and_resaves_as_v3() {
     assert_eq!(ts.last_gen, 1);
     let db = store.stat_in(LEGACY_DEVICE, "gemm.naive_loop", MethodId::DoubleBuffer).unwrap();
     assert_eq!((db.attempts, db.wins), (1, 0));
-    assert_canonical_v3_resave(&store);
+    assert_canonical_v4_resave(&store);
 }
 
 #[test]
-fn v2_golden_file_loads_and_resaves_as_v3() {
+fn v2_golden_file_loads_and_resaves_as_v4() {
     let store = SkillStore::load(&fixture("skills_v2.json")).unwrap();
     assert_eq!(store.observations, 6);
     assert_eq!(store.generation, 1);
@@ -62,19 +75,37 @@ fn v2_golden_file_loads_and_resaves_as_v3() {
         .stat_in(LEGACY_DEVICE, "fusion.elementwise_chain", MethodId::FuseElementwise)
         .unwrap();
     assert_eq!((fe.attempts, fe.wins), (1, 1));
-    assert_canonical_v3_resave(&store);
+    assert_canonical_v4_resave(&store);
+}
+
+#[test]
+fn v3_golden_file_loads_and_resaves_as_v4() {
+    let store = SkillStore::load(&fixture("skills_v3.json")).unwrap();
+    assert_eq!(store.observations, 9);
+    assert_eq!(store.generation, 3, "v3 stores keep their generation clock");
+    assert_eq!(store.partitions.len(), 2, "device partitions load as-is");
+    let ts = store.stat_in("a100-like", "gemm.naive_loop", MethodId::TileSmem).unwrap();
+    assert_eq!((ts.attempts, ts.wins, ts.last_gen), (3, 2, 2));
+    let tpu = store.stat_in("tpu-like", "gemm.naive_loop", MethodId::TileSmem).unwrap();
+    assert_eq!(tpu.total_gain(), 9.25, "multi-part exact gain decomposition must load");
+    assert_eq!((tpu.attempts, tpu.wins), (4, 3));
+    // The fixture's stale `learned` section is derived data: ignored on
+    // load, recomputed from the stats on save.
+    let v4 = assert_canonical_v4_resave(&store);
+    assert!(!v4.contains("\"version\":3"), "{v4}");
 }
 
 #[test]
 fn golden_files_resave_through_disk_round_trip() {
     let dir = tmp_dir("resave");
     let _ = std::fs::remove_dir_all(&dir);
-    for name in ["skills_v1.json", "skills_v2.json"] {
+    for name in ["skills_v1.json", "skills_v2.json", "skills_v3.json"] {
         let store = SkillStore::load(&fixture(name)).unwrap();
         let path = dir.join(name);
         store.save(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.contains("\"version\":3"), "{name} must re-save as v3");
+        assert!(text.contains("\"version\":4"), "{name} must re-save as v4");
+        assert!(text.contains("\"segments\":[]"), "{name}: flat form has no segments");
         let back = SkillStore::load(&path).unwrap();
         assert_eq!(back, store, "{name}");
         back.save(&path).unwrap();
@@ -88,18 +119,13 @@ fn golden_files_resave_through_disk_round_trip() {
 }
 
 #[test]
-fn legacy_store_merges_cleanly_with_v3_partitions() {
-    // A migrated v2 store and a fresh v3 store with TPU-partition evidence
+fn legacy_store_merges_cleanly_with_partitioned_stores() {
+    // A migrated v2 store and a fresh store with TPU-partition evidence
     // must merge commutatively at the byte level.
     let legacy = SkillStore::load(&fixture("skills_v2.json")).unwrap();
     let mut fresh = SkillStore::new();
     fresh.generation = 3;
-    fresh.observe(&SkillObs {
-        case_id: "gemm.naive_loop".to_string(),
-        method: MethodId::TileSmem,
-        gain: Some(0.5),
-        device: "tpu-like".to_string(),
-    });
+    fresh.observe(&obs("gemm.naive_loop", MethodId::TileSmem, Some(0.5), "tpu-like"));
     let mut ab = legacy.clone();
     ab.merge_store(&fresh);
     let mut ba = fresh.clone();
@@ -133,4 +159,91 @@ fn unknown_partition_and_method_entries_are_tolerated() {
     // The unknown method was skipped, the known one kept.
     let pooled = store.pooled_stat("gemm.naive_loop", MethodId::TileSmem).unwrap();
     assert_eq!(pooled.attempts, 2);
+}
+
+/// Drive one epoch of observations into both a segmented store and its
+/// flat one-blob twin, keeping their generation clocks in lockstep.
+fn epoch(seg: &mut SegmentedSkillStore, flat: &mut SkillStore, gen: u64, batch: &[SkillObs]) {
+    seg.advance_to(gen).unwrap();
+    seg.merge(batch);
+    seg.save().unwrap();
+    flat.generation = flat.generation.max(gen);
+    for o in batch {
+        flat.observe(o);
+    }
+}
+
+fn three_epoch_stores(dir: &Path) -> (SegmentedSkillStore, SkillStore) {
+    let mut seg = SegmentedSkillStore::open(dir).unwrap();
+    let mut flat = SkillStore::new();
+    epoch(
+        &mut seg,
+        &mut flat,
+        1,
+        &[
+            obs("gemm.naive_loop", MethodId::TileSmem, Some(0.8), "a100-like"),
+            obs("gemm.naive_loop", MethodId::TileSmem, None, "a100-like"),
+        ],
+    );
+    epoch(
+        &mut seg,
+        &mut flat,
+        2,
+        &[
+            obs("gemm.naive_loop", MethodId::UseTensorCore, Some(1.5), "a100-like"),
+            obs("fusion.elementwise_chain", MethodId::FuseElementwise, Some(0.25), "tpu-like"),
+        ],
+    );
+    epoch(
+        &mut seg,
+        &mut flat,
+        3,
+        &[obs("gemm.naive_loop", MethodId::TileSmem, Some(0.1), "tpu-like")],
+    );
+    (seg, flat)
+}
+
+#[test]
+fn segmented_store_folds_byte_identical_to_one_blob() {
+    let dir = tmp_dir("seg-fold");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (seg, flat) = three_epoch_stores(&dir);
+    assert_eq!(seg.segments().len(), 2, "epochs 2 and 3 each rotated a segment");
+
+    // Invariant 17 (segment-fold equivalence): the fold of the manifest's
+    // segments plus its head serializes to exactly the bytes the
+    // equivalent one-blob store would have written.
+    assert_eq!(seg.logical(), &flat);
+    assert_eq!(seg.logical().to_json().to_string(), flat.to_json().to_string());
+
+    // `SkillStore::load` on the manifest path performs the same fold
+    // transparently, so every flat-store reader sees the one-blob view.
+    let loaded = SkillStore::load(&dir.join("skills.json")).unwrap();
+    assert_eq!(loaded, flat);
+    assert_eq!(loaded.to_json().to_string(), flat.to_json().to_string());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compaction_preserves_the_one_blob_bytes() {
+    let dir = tmp_dir("seg-compact");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (mut seg, flat) = three_epoch_stores(&dir);
+    let before = SkillStore::load(&dir.join("skills.json")).unwrap().to_json().to_string();
+
+    let report = seg.compact().unwrap();
+    assert_eq!(report.folded_segments, 2);
+    assert_eq!(seg.segments().len(), 1, "compaction folds N segments into one");
+
+    let after = SkillStore::load(&dir.join("skills.json")).unwrap();
+    assert_eq!(after, flat, "compaction must not change the logical store");
+    assert_eq!(after.to_json().to_string(), before, "…nor its canonical bytes");
+    let names: Vec<String> = std::fs::read_dir(dir.join(SEGMENT_DIR))
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.file_name().to_string_lossy().into_owned()))
+        .collect();
+    assert_eq!(names.len(), 1, "old segment files are deleted after the swap: {names:?}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
