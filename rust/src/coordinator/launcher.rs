@@ -228,12 +228,18 @@ struct ChildParams {
 /// The passthrough flags for one worker's shard children: the launch-wide
 /// flags plus the worker's manifest `device` preset (forwarded as
 /// `--device <name>`), if any — how a heterogeneous fleet pins each
-/// machine to its own hardware model. A manifest device that collides
+/// machine to its own hardware model. A passthrough that carries
+/// `--job-spec` is left alone: the `worker` CLI folds the manifest device
+/// into the spec itself before fanning it out, so the children already
+/// receive exactly one identity artifact. A manifest device that collides
 /// with a launch-wide `--device` flag is refused up front: the two would
 /// silently disagree about which one wins.
 fn worker_passthrough(base: &[String], spec: &WorkerSpec) -> Result<Vec<String>, String> {
     let mut out = base.to_vec();
     if let Some(device) = &spec.device {
+        if base.iter().any(|a| a == "--job-spec") {
+            return Ok(out);
+        }
         if base.iter().any(|a| a == "--device") {
             return Err(format!(
                 "worker {:?}: the manifest assigns device {:?} but the launch \
@@ -1584,6 +1590,12 @@ mod tests {
         assert_eq!(out, base);
         let out = worker_passthrough(&base, &spec(Some("tpu-like"))).unwrap();
         assert_eq!(out, vec!["--level", "1", "--device", "tpu-like"]);
+        // A job-spec passthrough is one sealed identity artifact: the
+        // `worker` CLI already folded the manifest device into the spec,
+        // so nothing may be appended next to it.
+        let sealed = vec!["--job-spec".to_string(), "/tmp/spec.json".to_string()];
+        let out = worker_passthrough(&sealed, &spec(Some("tpu-like"))).unwrap();
+        assert_eq!(out, sealed);
     }
 
     #[test]

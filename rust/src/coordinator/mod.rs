@@ -5,11 +5,13 @@
 //! one-shot *and* streaming run-dir merging (`merge`), the shard process
 //! launcher and cross-machine worker/fleet runtimes (`launcher`), and the
 //! pluggable run-dir transports that move artifacts between machines
-//! (`transport`), plus the suite/matrix entry points (`suite_runner`).
+//! (`transport`), plus the suite/matrix entry points (`suite_runner`),
+//! the typed job-identity protocol (`protocol`), and the long-lived
+//! kernel-optimization-as-a-service daemon + client (`service`).
 //!
 //! The run-directory layout, the exchange protocol, the worker-manifest
-//! format, and the byte-level merge determinism contract are specified
-//! normatively in `docs/memory-formats.md`.
+//! format, the job-manifest format, and the byte-level merge determinism
+//! contract are specified normatively in `docs/memory-formats.md`.
 
 #![warn(missing_docs)]
 
@@ -17,7 +19,9 @@ pub mod checkpoint;
 pub mod launcher;
 pub mod loop_runner;
 pub mod merge;
+pub mod protocol;
 pub mod scheduler;
+pub mod service;
 pub mod suite_runner;
 pub mod transport;
 
@@ -28,10 +32,12 @@ pub use launcher::{
 };
 pub use loop_runner::{run_task, Branch, LoopConfig, RoundRecord, TaskResult};
 pub use merge::{merge_run_dirs, MergeReport, MergeWatcher, WatchStatus};
+pub use protocol::{JobSpec, JobState, Request, JOBSPEC_VERSION, MATRIX_COMMANDS, SHARDABLE};
 pub use scheduler::{
     batch_bounds, exchange_windows, Batch, ExchangeOptions, ExchangeWaitTimeout, Shard,
     SuiteOptions, DEFAULT_EXCHANGE_EPOCH, EXCHANGE_TIMEOUT_EXIT, EXCHANGE_TIMEOUT_PREFIX,
 };
+pub use service::{serve, validate_service_dir, Client, ServiceConfig, JOB_MANIFEST_VERSION};
 pub use suite_runner::{run_matrix, run_matrix_with, run_suite, run_suite_with, SuiteResult};
 pub use transport::{
     claim_next_batch, expire_lease, lease_expired_name, lease_name, parse_lease_name,

@@ -1,0 +1,621 @@
+//! The typed job protocol: [`JobSpec`] — the *single* definition of a
+//! run's matrix identity — plus the newline-framed JSON messages the
+//! `serve` daemon and the `jobs` CLI exchange over localhost TCP.
+//!
+//! Before this layer, run identity lived in a hand-maintained passthrough
+//! string array in `main.rs`: `launch`/`worker` replayed individual CLI
+//! flags to shard children (with `--flag=1` spellings to dodge the
+//! parser's positional-swallow ambiguity), and the daemon path would have
+//! had to replay them a third time. A `JobSpec` is parsed *once* — from
+//! human CLI flags or from a canonical `--job-spec <file|json>` argument —
+//! validated up front, and executed through one shared entry point, so the
+//! batch path, the fan-out path, and the service path cannot drift.
+//!
+//! Serialization is canonical: objects serialize with sorted keys
+//! (`util::json` is `BTreeMap`-backed), `u64` seeds ride as strings (the
+//! run-manifest idiom — exact at any magnitude), optional fields are
+//! omitted when absent, and the chaos spec is stored in its canonical
+//! [`ChaosConfig::render`] form. Equal specs serialize to equal bytes.
+//! Parsing is strict: an unknown field or a foreign `version` is refused
+//! loudly (version skew must never silently drop part of a job's
+//! identity), as is any value that fails the same validation the CLI
+//! performs (unknown strategy/device/command, malformed chaos, zero
+//! seeds).
+
+use std::path::Path;
+
+use crate::device::faults::ChaosConfig;
+use crate::device::machine::DeviceSpec;
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// The job-spec wire/file format version this binary speaks.
+pub const JOBSPEC_VERSION: u64 = 1;
+
+/// Subcommands a `launch` / `worker` fleet may fan out (they must accept
+/// `--run-dir/--shards/--shard-index/--resume`, and in elastic fleets
+/// `--batch-index/--batch-count`).
+pub const SHARDABLE: [&str; 5] = ["suite", "table1", "table2", "table3", "per-round"];
+
+/// Every matrix-running subcommand a [`JobSpec`] may name: the shardable
+/// set plus `trajectory` (which renders figures from the same matrix
+/// machinery but is never fanned out).
+pub const MATRIX_COMMANDS: [&str; 6] =
+    ["suite", "table1", "table2", "table3", "per-round", "trajectory"];
+
+/// The matrix-identity flags [`JobSpec::from_args`] reads — and therefore
+/// refuses next to an explicit `--job-spec` (the spec *is* the identity;
+/// a flag alongside it would silently lose).
+const IDENTITY_FLAGS: [&str; 8] =
+    ["strategy", "level", "take", "seeds", "suite-seed", "workers", "device", "chaos"];
+
+/// A run's complete matrix identity: which command over which (strategy,
+/// task, seed) matrix, priced on which device, under which faults.
+/// Placement (`--run-dir`, `--shards/--shard-index`, `--batch-*`,
+/// `--exchange-dir/--exchange-epoch`, `--resume`, `--memory-dir`) is
+/// deliberately *not* here — invariant 12 makes output independent of
+/// placement, so placement stays a per-process CLI concern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// The matrix command (one of [`MATRIX_COMMANDS`]).
+    pub cmd: String,
+    /// Strategy name (`suite` only; table commands run their roster).
+    pub strategy: String,
+    /// Task level filter (`suite` only); 0 = the full suite.
+    pub level: usize,
+    /// Deterministic prefix slice of the task list; 0 = all tasks.
+    pub take: usize,
+    /// Number of run seeds (the matrix runs seeds `0..seeds`).
+    pub seeds: usize,
+    /// Suite-generation seed (task population).
+    pub suite_seed: u64,
+    /// Worker-pool size; 0 = this machine's default.
+    pub workers: usize,
+    /// Device preset name; `None` = the default (A100-like).
+    pub device: Option<String>,
+    /// Canonical chaos spec ([`ChaosConfig::render`] form); `None` = clean.
+    pub chaos: Option<String>,
+    /// Per-task-run retrieval memoization (off only for A/B timing).
+    pub retrieval_cache: bool,
+    /// Adaptive (doubling) exchange-epoch schedule.
+    pub exchange_adaptive: bool,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            cmd: "suite".to_string(),
+            strategy: "KernelSkill".to_string(),
+            level: 0,
+            take: 0,
+            seeds: 1,
+            suite_seed: 42,
+            workers: 0,
+            device: None,
+            chaos: None,
+            retrieval_cache: true,
+            exchange_adaptive: false,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Build the spec for one invocation of `cmd`: from `--job-spec
+    /// <file|json>` when given (refusing any identity flag alongside it),
+    /// from the legacy human flags otherwise. Either way the result is
+    /// validated and canonicalized — this is the one place run identity
+    /// enters the system.
+    pub fn from_args(cmd: &str, args: &Args) -> Result<JobSpec, String> {
+        if let Some(v) = args.get("job-spec") {
+            for flag in IDENTITY_FLAGS {
+                if args.get(flag).is_some() {
+                    return Err(format!(
+                        "--{flag} conflicts with --job-spec: the spec is the whole matrix \
+                         identity; edit the spec instead"
+                    ));
+                }
+            }
+            for switch in ["no-retrieval-cache", "exchange-adaptive"] {
+                if args.has(switch) {
+                    return Err(format!(
+                        "--{switch} conflicts with --job-spec: the spec is the whole matrix \
+                         identity; edit the spec instead"
+                    ));
+                }
+            }
+            let spec = if v.trim_start().starts_with('{') {
+                JobSpec::parse(v)?
+            } else {
+                JobSpec::load(Path::new(v))?
+            };
+            if spec.cmd != cmd {
+                return Err(format!(
+                    "job spec names cmd {:?} but this invocation runs {cmd:?}; \
+                     pass the spec to its own subcommand",
+                    spec.cmd
+                ));
+            }
+            return Ok(spec);
+        }
+        let defaults = JobSpec::default();
+        let spec = JobSpec {
+            cmd: cmd.to_string(),
+            strategy: args.get_or("strategy", &defaults.strategy).to_string(),
+            level: args.get_usize("level", defaults.level)?,
+            take: args.get_usize("take", defaults.take)?,
+            seeds: args.get_usize("seeds", defaults.seeds)?,
+            suite_seed: args.get_u64("suite-seed", defaults.suite_seed)?,
+            workers: args.get_usize("workers", defaults.workers)?,
+            device: args.get("device").map(str::to_string),
+            chaos: args.get("chaos").map(str::to_string),
+            retrieval_cache: !args.has("no-retrieval-cache"),
+            exchange_adaptive: args.has("exchange-adaptive"),
+        };
+        spec.normalized()
+    }
+
+    /// Validate every field against the same checks the CLI performs and
+    /// canonicalize the chaos spec. Errors name the offending field.
+    pub fn normalized(mut self) -> Result<JobSpec, String> {
+        if !MATRIX_COMMANDS.contains(&self.cmd.as_str()) {
+            return Err(format!(
+                "job spec cmd {:?} is not a matrix command; expected one of {MATRIX_COMMANDS:?}",
+                self.cmd
+            ));
+        }
+        if crate::baselines::by_name(&self.strategy).is_none() {
+            return Err(format!("job spec names unknown strategy {:?}", self.strategy));
+        }
+        if self.seeds == 0 {
+            return Err("job spec seeds must be >= 1".to_string());
+        }
+        if let Some(name) = &self.device {
+            if DeviceSpec::by_name(name).is_none() {
+                return Err(format!(
+                    "job spec names unknown device preset {name:?} (known: {:?})",
+                    DeviceSpec::presets().iter().map(|p| p.name).collect::<Vec<_>>()
+                ));
+            }
+        }
+        if let Some(spec) = &self.chaos {
+            self.chaos = Some(ChaosConfig::parse(spec)?.render());
+        }
+        Ok(self)
+    }
+
+    /// The validated device preset, when one is named.
+    pub fn device_spec(&self) -> Option<DeviceSpec> {
+        self.device.as_deref().and_then(DeviceSpec::by_name)
+    }
+
+    /// The validated chaos config, when one is set.
+    pub fn chaos_config(&self) -> Result<Option<ChaosConfig>, String> {
+        self.chaos.as_deref().map(ChaosConfig::parse).transpose()
+    }
+
+    /// Serialize to the canonical JSON form (sorted keys; `suite_seed` as
+    /// a string for `u64` exactness; optional fields omitted when absent).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("cmd", json::s(&self.cmd)),
+            ("exchange_adaptive", Json::Bool(self.exchange_adaptive)),
+            ("level", json::num(self.level as f64)),
+            ("retrieval_cache", Json::Bool(self.retrieval_cache)),
+            ("seeds", json::num(self.seeds as f64)),
+            ("strategy", json::s(&self.strategy)),
+            ("suite_seed", json::s(&self.suite_seed.to_string())),
+            ("take", json::num(self.take as f64)),
+            ("version", json::num(JOBSPEC_VERSION as f64)),
+            ("workers", json::num(self.workers as f64)),
+        ];
+        if let Some(d) = &self.device {
+            pairs.push(("device", json::s(d)));
+        }
+        if let Some(c) = &self.chaos {
+            pairs.push(("chaos", json::s(c)));
+        }
+        json::obj(pairs)
+    }
+
+    /// The exact bytes [`JobSpec::save`] writes: canonical JSON plus a
+    /// trailing newline. Equal specs produce equal bytes.
+    pub fn canonical_bytes(&self) -> Vec<u8> {
+        format!("{}\n", self.to_json()).into_bytes()
+    }
+
+    /// Strict parse: a missing or foreign `version`, an unknown field, a
+    /// wrong type, or a value the CLI would refuse is a loud error —
+    /// version skew must never silently drop part of a job's identity.
+    pub fn from_json(j: &Json) -> Result<JobSpec, String> {
+        let obj = j.as_obj().ok_or("job spec is not a JSON object")?;
+        const KNOWN: [&str; 12] = [
+            "chaos", "cmd", "device", "exchange_adaptive", "level", "retrieval_cache",
+            "seeds", "strategy", "suite_seed", "take", "version", "workers",
+        ];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!(
+                    "job spec field {key:?} is not part of job-spec version \
+                     {JOBSPEC_VERSION} (version skew? this binary refuses rather than \
+                     silently dropping it)"
+                ));
+            }
+        }
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .ok_or("job spec missing version")? as u64;
+        if version != JOBSPEC_VERSION {
+            return Err(format!(
+                "job spec version {version} but this binary speaks version {JOBSPEC_VERSION}"
+            ));
+        }
+        let str_field = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("job spec missing {k}"))
+        };
+        let num_field = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("job spec missing {k}"))
+        };
+        let bool_field = |k: &str| match j.get(k) {
+            Some(Json::Bool(b)) => Ok(*b),
+            _ => Err(format!("job spec missing {k}")),
+        };
+        let suite_seed = match j.get("suite_seed") {
+            Some(Json::Str(s)) => s
+                .parse::<u64>()
+                .map_err(|e| format!("job spec suite_seed: {e}"))?,
+            Some(Json::Num(n)) => *n as u64,
+            _ => return Err("job spec missing suite_seed".to_string()),
+        };
+        let opt_str = |k: &str| -> Result<Option<String>, String> {
+            match j.get(k) {
+                None | Some(Json::Null) => Ok(None),
+                Some(Json::Str(s)) => Ok(Some(s.clone())),
+                Some(_) => Err(format!("job spec {k} must be a string")),
+            }
+        };
+        let spec = JobSpec {
+            cmd: str_field("cmd")?,
+            strategy: str_field("strategy")?,
+            level: num_field("level")?,
+            take: num_field("take")?,
+            seeds: num_field("seeds")?,
+            suite_seed,
+            workers: num_field("workers")?,
+            device: opt_str("device")?,
+            chaos: opt_str("chaos")?,
+            retrieval_cache: bool_field("retrieval_cache")?,
+            exchange_adaptive: bool_field("exchange_adaptive")?,
+        };
+        spec.normalized()
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn parse(text: &str) -> Result<JobSpec, String> {
+        let j = Json::parse(text).map_err(|e| format!("parsing job spec: {e}"))?;
+        JobSpec::from_json(&j)
+    }
+
+    /// Load a spec file.
+    pub fn load(path: &Path) -> Result<JobSpec, String> {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| format!("{}: job spec is not UTF-8: {e}", path.display()))?;
+        JobSpec::parse(text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Atomic save (staging file + rename), the run-dir idiom.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.canonical_bytes())
+            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("publishing {}: {e}", path.display()))
+    }
+}
+
+// ------------------------------------------------------------------------
+// Job lifecycle states
+// ------------------------------------------------------------------------
+
+/// Where a submitted job is in its lifecycle. `Done`, `Failed`, and
+/// `Cancelled` are terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted and durably queued, not yet claimed.
+    Queued,
+    /// Claimed by a scheduler; its child process is (or is being) run.
+    Running,
+    /// Finished successfully; its run dir carries the `complete` marker.
+    Done,
+    /// Crashed past its restart budget, or exceeded its deadline.
+    Failed,
+    /// Cancelled by a client before completion.
+    Cancelled,
+}
+
+impl JobState {
+    /// Canonical lowercase name (the wire and manifest spelling).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Parse the canonical spelling; anything else is refused loudly.
+    pub fn parse(s: &str) -> Result<JobState, String> {
+        match s {
+            "queued" => Ok(JobState::Queued),
+            "running" => Ok(JobState::Running),
+            "done" => Ok(JobState::Done),
+            "failed" => Ok(JobState::Failed),
+            "cancelled" => Ok(JobState::Cancelled),
+            other => Err(format!("unknown job state {other:?}")),
+        }
+    }
+
+    /// No further transitions happen from this state.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+// ------------------------------------------------------------------------
+// Wire messages (one JSON object per line, newline-framed, over localhost)
+// ------------------------------------------------------------------------
+
+/// A client request to the `serve` daemon.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Liveness probe (also how `jobs` waits for a daemon to come up).
+    Ping,
+    /// Submit a job; replies accepted (with the job id) or rejected with
+    /// an explicit backpressure flag when the bounded queue is full.
+    Submit {
+        /// The job's matrix identity.
+        spec: JobSpec,
+        /// Optional wall-clock budget (milliseconds from job start); a
+        /// running job past its deadline is killed and marked failed.
+        deadline_ms: Option<u64>,
+    },
+    /// One job's current state.
+    Status {
+        /// Job id (`job-000001`).
+        job: String,
+    },
+    /// Every job the service knows, in id order.
+    List,
+    /// Cancel a queued or running job.
+    Cancel {
+        /// Job id.
+        job: String,
+    },
+    /// Stream progress events for one job until it reaches a terminal
+    /// state (the connection stays open; one JSON event per line).
+    Watch {
+        /// Job id.
+        job: String,
+    },
+    /// Stop accepting work and exit once the running job (if any)
+    /// finishes. Queued jobs stay durably queued for the next daemon.
+    Shutdown,
+}
+
+impl Request {
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => json::obj(vec![("op", json::s("ping"))]),
+            Request::Submit { spec, deadline_ms } => {
+                let mut pairs =
+                    vec![("op", json::s("submit")), ("spec", spec.to_json())];
+                if let Some(d) = deadline_ms {
+                    pairs.push(("deadline_ms", json::s(&d.to_string())));
+                }
+                json::obj(pairs)
+            }
+            Request::Status { job } => {
+                json::obj(vec![("job", json::s(job)), ("op", json::s("status"))])
+            }
+            Request::List => json::obj(vec![("op", json::s("list"))]),
+            Request::Cancel { job } => {
+                json::obj(vec![("job", json::s(job)), ("op", json::s("cancel"))])
+            }
+            Request::Watch { job } => {
+                json::obj(vec![("job", json::s(job)), ("op", json::s("watch"))])
+            }
+            Request::Shutdown => json::obj(vec![("op", json::s("shutdown"))]),
+        }
+    }
+
+    /// Parse one wire line. Unknown ops and malformed payloads are loud
+    /// errors the daemon reports back to the client.
+    pub fn parse(text: &str) -> Result<Request, String> {
+        let j = Json::parse(text).map_err(|e| format!("request does not parse: {e}"))?;
+        let op = j
+            .get("op")
+            .and_then(|v| v.as_str())
+            .ok_or("request missing op")?;
+        let job = |j: &Json| {
+            j.get("job")
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("{op} request missing job"))
+        };
+        match op {
+            "ping" => Ok(Request::Ping),
+            "submit" => {
+                let spec = j.get("spec").ok_or("submit request missing spec")?;
+                let deadline_ms = match j.get("deadline_ms") {
+                    None | Some(Json::Null) => None,
+                    Some(Json::Str(s)) => {
+                        Some(s.parse::<u64>().map_err(|e| format!("deadline_ms: {e}"))?)
+                    }
+                    Some(Json::Num(n)) => Some(*n as u64),
+                    Some(_) => return Err("deadline_ms must be a number".to_string()),
+                };
+                Ok(Request::Submit {
+                    spec: JobSpec::from_json(spec)?,
+                    deadline_ms,
+                })
+            }
+            "status" => Ok(Request::Status { job: job(&j)? }),
+            "list" => Ok(Request::List),
+            "cancel" => Ok(Request::Cancel { job: job(&j)? }),
+            "watch" => Ok(Request::Watch { job: job(&j)? }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!(
+                "unknown op {other:?} (this daemon speaks ping/submit/status/list/\
+                 cancel/watch/shutdown)"
+            )),
+        }
+    }
+}
+
+/// Build a success response line with extra fields.
+pub fn response_ok(fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.extend(fields);
+    json::obj(pairs)
+}
+
+/// Build an error response line. `backpressure` marks a bounded-queue
+/// rejection — the one error a client is expected to retry later.
+pub fn response_err(error: &str, backpressure: bool) -> Json {
+    let mut pairs = vec![("error", json::s(error)), ("ok", Json::Bool(false))];
+    if backpressure {
+        pairs.push(("backpressure", Json::Bool(true)));
+    }
+    json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_roundtrips_byte_stable() {
+        let spec = JobSpec::default();
+        let bytes = spec.canonical_bytes();
+        let back = JobSpec::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.canonical_bytes(), bytes);
+    }
+
+    #[test]
+    fn optional_fields_roundtrip() {
+        let spec = JobSpec {
+            device: Some("tpu-like".to_string()),
+            chaos: Some("tc=0.3,drop=0.05,sigma=0.2,bias=0.1,seed=7".to_string()),
+            ..JobSpec::default()
+        }
+        .normalized()
+        .unwrap();
+        let back = JobSpec::parse(std::str::from_utf8(&spec.canonical_bytes()).unwrap()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn version_skew_and_unknown_fields_are_refused() {
+        let mut j = JobSpec::default().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("version".to_string(), json::num(2.0));
+        }
+        let err = JobSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("version 2"), "{err}");
+
+        let mut j = JobSpec::default().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("frobnicate".to_string(), json::num(1.0));
+        }
+        let err = JobSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("frobnicate"), "{err}");
+    }
+
+    #[test]
+    fn invalid_values_are_refused() {
+        for (mutate, needle) in [
+            (("cmd", json::s("dance")), "matrix command"),
+            (("strategy", json::s("Nope")), "unknown strategy"),
+            (("seeds", json::num(0.0)), ">= 1"),
+            (("device", json::s("abacus")), "device preset"),
+            (("chaos", json::s("tc=zz")), "tc"),
+        ] {
+            let mut j = JobSpec::default().to_json();
+            if let Json::Obj(map) = &mut j {
+                map.insert(mutate.0.to_string(), mutate.1.clone());
+            }
+            let err = JobSpec::from_json(&j).unwrap_err();
+            assert!(err.contains(needle), "{}: {err}", mutate.0);
+        }
+    }
+
+    #[test]
+    fn chaos_spec_is_canonicalized() {
+        let spec = JobSpec {
+            chaos: Some("seed=7,tc=0.30".to_string()),
+            ..JobSpec::default()
+        }
+        .normalized()
+        .unwrap();
+        let canonical = ChaosConfig::parse("seed=7,tc=0.30").unwrap().render();
+        assert_eq!(spec.chaos.as_deref(), Some(canonical.as_str()));
+    }
+
+    #[test]
+    fn from_args_refuses_identity_flags_next_to_job_spec() {
+        let args = Args::parse(
+            ["suite", "--job-spec", "{}", "--seeds", "3"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let err = JobSpec::from_args("suite", &args).unwrap_err();
+        assert!(err.contains("--seeds") && err.contains("--job-spec"), "{err}");
+    }
+
+    #[test]
+    fn from_args_inline_spec_must_match_the_invoked_cmd() {
+        let inline = String::from_utf8(
+            JobSpec { cmd: "table1".into(), ..JobSpec::default() }.canonical_bytes(),
+        )
+        .unwrap();
+        let args = Args::parse(
+            ["suite", "--job-spec", inline.trim()].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let err = JobSpec::from_args("suite", &args).unwrap_err();
+        assert!(err.contains("table1"), "{err}");
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Submit { spec: JobSpec::default(), deadline_ms: Some(5000) },
+            Request::Status { job: "job-000001".into() },
+            Request::List,
+            Request::Cancel { job: "job-000002".into() },
+            Request::Watch { job: "job-000003".into() },
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.to_json().to_string();
+            assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
+        }
+        assert!(Request::parse(r#"{"op":"explode"}"#).is_err());
+    }
+}

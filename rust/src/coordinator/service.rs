@@ -1,0 +1,1004 @@
+//! Kernel-optimization-as-a-service: the `serve` daemon and its client.
+//!
+//! `serve` turns the one-matrix-per-invocation batch pipeline into a
+//! long-lived service: clients submit typed [`JobSpec`]s over a
+//! newline-framed JSON protocol on localhost TCP (hand-rolled, zero
+//! deps), the daemon queues them **durably** as per-job manifests under a
+//! `--service-dir`, runs them one at a time as supervised child
+//! processes, and streams progress events to watchers.
+//!
+//! Durability reuses the two substrates the repo already trusts:
+//!
+//! - every job is a directory `jobs/job-NNNNNN/` holding an atomically
+//!   published manifest (`job.json`), the canonical spec
+//!   (`job-spec.json`), and the job's own run dir — so crash recovery is
+//!   re-scan + `--resume`, exactly like a shard child;
+//! - scheduling goes through the PR-7 lease board
+//!   ([`read_lease_board`]/[`claim_next_batch`]/[`expire_lease`]) over a
+//!   [`LocalFs`] transport rooted at the service dir, with job *N* as
+//!   batch *N−1* — claims are first-publish-wins, heartbeats are
+//!   progress counters, and a daemon SIGKILL leaves an `.expired`
+//!   audit marker when the restarted daemon re-dispatches the job.
+//!
+//! Multi-tenancy: when `serve` is given a base `--memory-dir`, each job
+//! folds into a private copy-on-write overlay
+//! ([`crate::memory::long_term::create_overlay`]) over the shared
+//! segmented base — never into the base itself. Admission control is a
+//! bounded queue: a submit over capacity is rejected with an explicit
+//! `backpressure` reply, never silently dropped.
+//!
+//! Determinism contract (invariants 18–19, `docs/memory-formats.md`): a
+//! job run through the service produces a report and folded skill store
+//! byte-identical to the equivalent direct invocation, including after
+//! the daemon is killed and restarted mid-job.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+
+use super::protocol::{response_err, response_ok, JobSpec, JobState, Request};
+use super::transport::{
+    claim_next_batch, expire_lease, read_lease_board, Lease, LocalFs, RunDirTransport,
+};
+
+/// Version of the per-job `job.json` manifest this daemon writes and the
+/// only version it accepts (skewed manifests are refused loudly at scan).
+pub const JOB_MANIFEST_VERSION: u64 = 1;
+
+/// File under the service dir advertising the daemon's TCP address
+/// (`127.0.0.1:<port>\n`), rewritten atomically at every startup.
+pub const ENDPOINT_FILE: &str = "endpoint";
+
+/// Directory under the service dir holding one subdirectory per job.
+pub const JOBS_DIR: &str = "jobs";
+
+/// Worker id the daemon claims leases under.
+const SCHEDULER_ID: &str = "serve";
+
+/// How long a client keeps retrying to reach a daemon that is still
+/// coming up (endpoint file absent or connection refused).
+const CONNECT_ATTEMPTS: usize = 50;
+const CONNECT_RETRY_MS: u64 = 100;
+
+/// Configuration for one `serve` daemon.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// The durable service directory (queue state, job dirs, lease board).
+    pub service_dir: PathBuf,
+    /// Binary to spawn for each job (normally `current_exe`).
+    pub program: PathBuf,
+    /// Shared segmented skill-store base; each job gets a copy-on-write
+    /// overlay over it. `None` = jobs run memoryless, exactly like a
+    /// direct invocation without `--memory-dir`.
+    pub base_memory: Option<PathBuf>,
+    /// Bounded-queue admission limit: max jobs queued + running before
+    /// submits are rejected with backpressure.
+    pub queue_capacity: usize,
+    /// Scheduler/watcher poll cadence.
+    pub poll_ms: u64,
+    /// Crash-restart budget per job (the launcher's default).
+    pub max_restarts: usize,
+    /// TCP port to bind on 127.0.0.1; 0 = ephemeral (the address is
+    /// advertised via the endpoint file either way).
+    pub port: u16,
+}
+
+impl ServiceConfig {
+    /// A config with the launcher-matching defaults.
+    pub fn new(service_dir: PathBuf, program: PathBuf) -> ServiceConfig {
+        ServiceConfig {
+            service_dir,
+            program,
+            base_memory: None,
+            queue_capacity: 16,
+            poll_ms: 50,
+            max_restarts: 2,
+            port: 0,
+        }
+    }
+}
+
+/// One job's durable record: the `job.json` manifest plus its spec.
+#[derive(Debug, Clone)]
+struct JobEntry {
+    /// `job-NNNNNN`; job number N is lease-board batch N−1.
+    id: String,
+    /// `<service-dir>/jobs/<id>`.
+    dir: PathBuf,
+    spec: JobSpec,
+    state: JobState,
+    /// Wall-clock budget in ms from job start; past it the job is killed
+    /// and marked failed.
+    deadline_ms: Option<u64>,
+    error: Option<String>,
+    restarts: usize,
+    /// Pid of the job's child while running — the restarted daemon uses
+    /// it to put down an orphan left by a SIGKILLed predecessor before
+    /// re-dispatching (two writers on one run dir would race).
+    pid: Option<u32>,
+    /// In-memory only: a client asked to cancel the running job.
+    cancel_requested: bool,
+}
+
+impl JobEntry {
+    fn manifest_path(&self) -> PathBuf {
+        self.dir.join("job.json")
+    }
+
+    fn spec_path(&self) -> PathBuf {
+        self.dir.join("job-spec.json")
+    }
+
+    fn run_dir(&self) -> PathBuf {
+        self.dir.join("run")
+    }
+
+    fn overlay_dir(&self) -> PathBuf {
+        self.dir.join("memory")
+    }
+
+    /// Newline count of the job's checkpoint — the watcher's progress
+    /// metric.
+    fn cells(&self) -> u64 {
+        match std::fs::read(self.run_dir().join("results.jsonl")) {
+            Ok(bytes) => bytes.iter().filter(|b| **b == b'\n').count() as u64,
+            Err(_) => 0,
+        }
+    }
+
+    /// Byte length of the checkpoint — the lease heartbeat counter (the
+    /// same progress-not-wall-clock liveness contract elastic fleets use).
+    fn progress(&self) -> u64 {
+        std::fs::metadata(self.run_dir().join("results.jsonl"))
+            .map(|m| m.len())
+            .unwrap_or(0)
+    }
+
+    fn to_manifest_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", json::s(&self.id)),
+            ("restarts", json::num(self.restarts as f64)),
+            ("state", json::s(self.state.as_str())),
+            ("version", json::num(JOB_MANIFEST_VERSION as f64)),
+        ];
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", json::s(&d.to_string())));
+        }
+        if let Some(e) = &self.error {
+            pairs.push(("error", json::s(e)));
+        }
+        if let Some(p) = self.pid {
+            pairs.push(("pid", json::num(p as f64)));
+        }
+        json::obj(pairs)
+    }
+
+    /// Atomically publish `job.json` (staging file + rename).
+    fn save_manifest(&self) -> Result<(), String> {
+        let path = self.manifest_path();
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, format!("{}\n", self.to_manifest_json()))
+            .map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).map_err(|e| format!("publishing {}: {e}", path.display()))
+    }
+
+    /// Strict manifest + spec load. Unknown fields, a skewed version, or
+    /// an id that disagrees with the directory name are loud errors: a
+    /// daemon must never half-understand a job it is about to re-run.
+    fn load(dir: &Path) -> Result<JobEntry, String> {
+        let path = dir.join("job.json");
+        let bytes =
+            std::fs::read(&path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| format!("{}: not UTF-8: {e}", path.display()))?;
+        let j = Json::parse(text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| format!("{}: not a JSON object", path.display()))?;
+        const KNOWN: [&str; 7] =
+            ["deadline_ms", "error", "id", "pid", "restarts", "state", "version"];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!(
+                    "{}: job manifest field {key:?} is not part of version \
+                     {JOB_MANIFEST_VERSION} (version skew? refusing to run a job this \
+                     daemon only half-understands)",
+                    path.display()
+                ));
+            }
+        }
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("{}: missing version", path.display()))?
+            as u64;
+        if version != JOB_MANIFEST_VERSION {
+            return Err(format!(
+                "{}: job manifest version {version} but this daemon speaks version \
+                 {JOB_MANIFEST_VERSION}",
+                path.display()
+            ));
+        }
+        let id = j
+            .get("id")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("{}: missing id", path.display()))?
+            .to_string();
+        let dir_name = dir.file_name().map(|n| n.to_string_lossy().to_string());
+        if dir_name.as_deref() != Some(id.as_str()) {
+            return Err(format!(
+                "{}: manifest names job {id:?} but lives in {dir_name:?}",
+                path.display()
+            ));
+        }
+        let state = JobState::parse(
+            j.get("state")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("{}: missing state", path.display()))?,
+        )
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+        let deadline_ms = match j.get("deadline_ms") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(s)) => Some(
+                s.parse::<u64>()
+                    .map_err(|e| format!("{}: deadline_ms: {e}", path.display()))?,
+            ),
+            Some(Json::Num(n)) => Some(*n as u64),
+            Some(_) => return Err(format!("{}: deadline_ms must be a number", path.display())),
+        };
+        let spec = JobSpec::load(&dir.join("job-spec.json"))?;
+        Ok(JobEntry {
+            id,
+            dir: dir.to_path_buf(),
+            spec,
+            state,
+            deadline_ms,
+            error: j.get("error").and_then(|v| v.as_str()).map(str::to_string),
+            restarts: j.get("restarts").and_then(|v| v.as_usize()).unwrap_or(0),
+            pid: j.get("pid").and_then(|v| v.as_usize()).map(|p| p as u32),
+            cancel_requested: false,
+        })
+    }
+
+    /// The snapshot object `status`/`list`/`watch` replies carry.
+    fn snapshot_json(&self) -> Json {
+        let mut pairs = vec![
+            ("cells", json::num(self.cells() as f64)),
+            ("cmd", json::s(&self.spec.cmd)),
+            ("job", json::s(&self.id)),
+            ("restarts", json::num(self.restarts as f64)),
+            ("state", json::s(self.state.as_str())),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", json::s(e)));
+        }
+        json::obj(pairs)
+    }
+}
+
+/// Shared daemon state behind the connection threads' mutex.
+struct Daemon {
+    cfg: ServiceConfig,
+    jobs: Vec<JobEntry>,
+    /// Set by a shutdown request: stop claiming, finish the running job,
+    /// exit. Queued jobs stay durably queued for the next daemon.
+    draining: bool,
+}
+
+impl Daemon {
+    fn find(&self, id: &str) -> Option<usize> {
+        self.jobs.iter().position(|e| e.id == id)
+    }
+
+    fn active_count(&self) -> usize {
+        self.jobs.iter().filter(|e| !e.state.is_terminal()).count()
+    }
+}
+
+/// Scan and strictly validate every job under a service dir (daemon
+/// startup, and the manifest-skew refusal test). Job numbers must be
+/// contiguous from 1 — job N is lease batch N−1, so a gap would silently
+/// shift every later job's lease identity. Returns the number of jobs.
+pub fn validate_service_dir(service_dir: &Path) -> Result<usize, String> {
+    Ok(scan_jobs(service_dir)?.len())
+}
+
+fn scan_jobs(service_dir: &Path) -> Result<Vec<JobEntry>, String> {
+    let jobs_dir = service_dir.join(JOBS_DIR);
+    if !jobs_dir.is_dir() {
+        return Ok(Vec::new());
+    }
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(&jobs_dir)
+        .map_err(|e| format!("reading {}: {e}", jobs_dir.display()))?
+    {
+        let name = entry
+            .map_err(|e| format!("reading {}: {e}", jobs_dir.display()))?
+            .file_name()
+            .to_string_lossy()
+            .to_string();
+        if name.starts_with("job-") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    for (i, name) in names.iter().enumerate() {
+        let expect = job_id(i);
+        if *name != expect {
+            return Err(format!(
+                "{}: expected job dir {expect:?} at position {i} but found {name:?} — job \
+                 numbers map to lease batches and must be contiguous from 1",
+                jobs_dir.display()
+            ));
+        }
+    }
+    names
+        .iter()
+        .map(|name| JobEntry::load(&jobs_dir.join(name)))
+        .collect()
+}
+
+/// `job-NNNNNN` for lease-board batch index `idx`.
+fn job_id(idx: usize) -> String {
+    format!("job-{:06}", idx + 1)
+}
+
+/// Run the daemon until a shutdown request (or a fatal service-dir
+/// error). Blocks; the address is advertised in `<service-dir>/endpoint`.
+pub fn serve(cfg: &ServiceConfig) -> Result<(), String> {
+    std::fs::create_dir_all(cfg.service_dir.join(JOBS_DIR))
+        .map_err(|e| format!("creating {}: {e}", cfg.service_dir.display()))?;
+    let transport = LocalFs::new(&cfg.service_dir)?;
+    let mut jobs = scan_jobs(&cfg.service_dir)?;
+    recover(&transport, &mut jobs, &cfg.program)?;
+
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+        .map_err(|e| format!("binding 127.0.0.1:{}: {e}", cfg.port))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("reading bound address: {e}"))?;
+    publish_endpoint(&cfg.service_dir, &addr.to_string())?;
+    eprintln!(
+        "serve: listening on {addr} ({} job(s) recovered, queue capacity {})",
+        jobs.len(),
+        cfg.queue_capacity
+    );
+
+    let daemon = Arc::new(Mutex::new(Daemon { cfg: cfg.clone(), jobs, draining: false }));
+    let stop = Arc::new(AtomicBool::new(false));
+    {
+        let daemon = Arc::clone(&daemon);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || accept_loop(listener, daemon, stop));
+    }
+    let result = schedule_loop(cfg, &transport, &daemon, &stop);
+    // Nudge the accept loop off its blocking accept so it observes `stop`.
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    result
+}
+
+/// Daemon-restart recovery: any job the dead daemon left `running` gets
+/// its orphan child put down (at most one exists — jobs run one at a
+/// time), its stale lease attempt expired (the re-dispatch audit marker),
+/// and its state reverted to `queued` — unless its run dir already
+/// carries the `complete` marker, in which case the work finished and
+/// only the bookkeeping was lost.
+fn recover(
+    transport: &dyn RunDirTransport,
+    jobs: &mut [JobEntry],
+    program: &Path,
+) -> Result<(), String> {
+    let board = read_lease_board(transport, jobs.len())?;
+    for (idx, entry) in jobs.iter_mut().enumerate() {
+        if entry.state != JobState::Running {
+            continue;
+        }
+        if let Some(pid) = entry.pid.take() {
+            kill_orphan(pid, program, &entry.spec_path());
+        }
+        if entry.run_dir().join("complete").exists() {
+            entry.state = JobState::Done;
+            eprintln!("serve: recovered {} as done (complete marker present)", entry.id);
+        } else {
+            let state = &board[idx];
+            if state.attempts > 0 && !state.done && !state.latest_expired {
+                expire_lease(transport, idx, state.attempts - 1)?;
+            }
+            entry.state = JobState::Queued;
+            eprintln!("serve: re-queued {} (daemon died mid-job; child will --resume)", entry.id);
+        }
+        entry.save_manifest()?;
+    }
+    Ok(())
+}
+
+/// Put down a child orphaned by a SIGKILLed daemon, but only after
+/// proving `pid` still runs *our* job (its `/proc` cmdline names this
+/// job's spec file) — a recycled pid must never be shot.
+fn kill_orphan(pid: u32, program: &Path, spec_path: &Path) {
+    let cmdline = match std::fs::read(format!("/proc/{pid}/cmdline")) {
+        Ok(bytes) => bytes,
+        Err(_) => return, // no such process: nothing to do
+    };
+    let args: Vec<String> = cmdline
+        .split(|b| *b == 0)
+        .map(|a| String::from_utf8_lossy(a).to_string())
+        .collect();
+    let ours = args.iter().any(|a| a == &spec_path.display().to_string())
+        && args
+            .first()
+            .is_some_and(|a| a.contains(&program.file_name().unwrap_or_default().to_string_lossy().to_string()));
+    if !ours {
+        return;
+    }
+    eprintln!("serve: stopping orphaned job child pid {pid}");
+    let _ = Command::new("kill").args(["-9", &pid.to_string()]).status();
+    for _ in 0..100 {
+        if !Path::new(&format!("/proc/{pid}")).exists() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// One running job's supervision state (scheduler-local).
+struct RunningJob {
+    idx: usize,
+    child: Child,
+    lease: Lease,
+    started: Instant,
+}
+
+/// The sequential scheduler: claim the lowest queued job through the
+/// lease board, supervise its child (crash-restart budget, deadline,
+/// cancel), heartbeat its lease, publish `done`. One job at a time —
+/// concurrency inside a job belongs to its own worker pool, and
+/// sequential execution keeps per-job determinism trivially intact.
+fn schedule_loop(
+    cfg: &ServiceConfig,
+    transport: &dyn RunDirTransport,
+    daemon: &Arc<Mutex<Daemon>>,
+    stop: &Arc<AtomicBool>,
+) -> Result<(), String> {
+    let mut current: Option<RunningJob> = None;
+    loop {
+        std::thread::sleep(Duration::from_millis(cfg.poll_ms.max(1)));
+        if let Some(run) = current.as_mut() {
+            let (cancel, deadline_ms) = {
+                let d = daemon.lock().unwrap();
+                (d.jobs[run.idx].cancel_requested, d.jobs[run.idx].deadline_ms)
+            };
+            let deadline_hit = deadline_ms
+                .is_some_and(|d| run.started.elapsed() >= Duration::from_millis(d));
+            if cancel || deadline_hit {
+                let _ = run.child.kill();
+                let _ = run.child.wait();
+                let mut d = daemon.lock().unwrap();
+                let entry = &mut d.jobs[run.idx];
+                entry.pid = None;
+                if cancel {
+                    entry.state = JobState::Cancelled;
+                } else {
+                    entry.state = JobState::Failed;
+                    entry.error =
+                        Some(format!("deadline of {}ms exceeded", deadline_ms.unwrap_or(0)));
+                }
+                entry.save_manifest()?;
+                // Audit marker: the attempt ended without `done`.
+                expire_lease(transport, run.idx, run.lease.attempt)?;
+                current = None;
+                continue;
+            }
+            match run.child.try_wait() {
+                Ok(Some(status)) if status.success() => {
+                    run.lease.done = true;
+                    transport.publish(&run.lease.rel(), &run.lease.to_bytes())?;
+                    let mut d = daemon.lock().unwrap();
+                    let entry = &mut d.jobs[run.idx];
+                    entry.pid = None;
+                    entry.state = JobState::Done;
+                    entry.save_manifest()?;
+                    eprintln!("serve: {} done ({} cell(s))", entry.id, entry.cells());
+                    current = None;
+                }
+                Ok(Some(status)) => {
+                    let mut d = daemon.lock().unwrap();
+                    let entry = &mut d.jobs[run.idx];
+                    if entry.restarts < cfg.max_restarts {
+                        entry.restarts += 1;
+                        entry.save_manifest()?;
+                        eprintln!(
+                            "serve: {} child exited with {status}; restart {}/{} (--resume)",
+                            entry.id, entry.restarts, cfg.max_restarts
+                        );
+                        let child = spawn_job_child(cfg, entry)?;
+                        entry.pid = Some(child.id());
+                        entry.save_manifest()?;
+                        run.child = child;
+                    } else {
+                        entry.pid = None;
+                        entry.state = JobState::Failed;
+                        entry.error = Some(format!(
+                            "child exited with {status} after {} restart(s)",
+                            entry.restarts
+                        ));
+                        entry.save_manifest()?;
+                        eprintln!("serve: {} failed: {}", entry.id, status);
+                        expire_lease(transport, run.idx, run.lease.attempt)?;
+                        current = None;
+                    }
+                }
+                Ok(None) => {
+                    let progress = daemon.lock().unwrap().jobs[run.idx].progress();
+                    if progress != run.lease.progress {
+                        run.lease.progress = progress;
+                        transport.publish(&run.lease.rel(), &run.lease.to_bytes())?;
+                    }
+                }
+                Err(e) => return Err(format!("waiting on job child: {e}")),
+            }
+            continue;
+        }
+        // Idle: claim the next queued job (unless draining).
+        let (total, queued, draining) = {
+            let d = daemon.lock().unwrap();
+            let queued: Vec<usize> = d
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.state == JobState::Queued && !e.cancel_requested)
+                .map(|(i, _)| i)
+                .collect();
+            (d.jobs.len(), queued, d.draining)
+        };
+        if draining {
+            return Ok(());
+        }
+        if queued.is_empty() {
+            continue;
+        }
+        let board = read_lease_board(transport, total)?;
+        let claimable: Vec<_> = queued
+            .iter()
+            .map(|i| board[*i].clone())
+            .filter(|s| s.claimable())
+            .collect();
+        let Some(lease) = claim_next_batch(transport, &claimable, SCHEDULER_ID)? else {
+            continue;
+        };
+        let idx = lease.batch;
+        let mut d = daemon.lock().unwrap();
+        let entry = &mut d.jobs[idx];
+        match spawn_job_child(cfg, entry) {
+            Ok(child) => {
+                entry.pid = Some(child.id());
+                entry.state = JobState::Running;
+                entry.save_manifest()?;
+                eprintln!("serve: {} running ({})", entry.id, entry.spec.cmd);
+                current =
+                    Some(RunningJob { idx, child, lease, started: Instant::now() });
+            }
+            Err(e) => {
+                entry.state = JobState::Failed;
+                entry.error = Some(e);
+                entry.save_manifest()?;
+                expire_lease(transport, idx, lease.attempt)?;
+            }
+        }
+    }
+}
+
+/// Spawn one job's child: `<program> <cmd> --job-spec … --run-dir …
+/// --resume [--memory-dir <overlay>]`, stdout/stderr appended to the
+/// job's log. The identity travels *only* through the spec file — the
+/// same entry point a human invocation takes — so the service path
+/// cannot drift from the direct path.
+fn spawn_job_child(cfg: &ServiceConfig, entry: &JobEntry) -> Result<Child, String> {
+    let log = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(entry.dir.join("job.log"))
+        .map_err(|e| format!("opening job log: {e}"))?;
+    let log_err = log.try_clone().map_err(|e| format!("cloning job log: {e}"))?;
+    let mut cmd = Command::new(&cfg.program);
+    cmd.arg(&entry.spec.cmd)
+        .arg("--job-spec")
+        .arg(entry.spec_path())
+        .arg("--run-dir")
+        .arg(entry.run_dir())
+        .arg("--resume")
+        .stdin(Stdio::null())
+        .stdout(log)
+        .stderr(log_err);
+    if let Some(base) = &cfg.base_memory {
+        let overlay = entry.overlay_dir();
+        crate::memory::long_term::create_overlay(base, &overlay)?;
+        cmd.arg("--memory-dir").arg(&overlay);
+    }
+    cmd.spawn()
+        .map_err(|e| format!("spawning {} for {}: {e}", cfg.program.display(), entry.id))
+}
+
+/// Atomically publish the endpoint file.
+fn publish_endpoint(service_dir: &Path, addr: &str) -> Result<(), String> {
+    let path = service_dir.join(ENDPOINT_FILE);
+    let tmp = service_dir.join("endpoint.tmp");
+    std::fs::write(&tmp, format!("{addr}\n")).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &path).map_err(|e| format!("publishing {}: {e}", path.display()))
+}
+
+// ------------------------------------------------------------------------
+// Connection handling
+// ------------------------------------------------------------------------
+
+fn accept_loop(listener: TcpListener, daemon: Arc<Mutex<Daemon>>, stop: Arc<AtomicBool>) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let daemon = Arc::clone(&daemon);
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, &daemon);
+        });
+    }
+}
+
+fn handle_conn(stream: TcpStream, daemon: &Arc<Mutex<Daemon>>) -> Result<(), String> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let mut writer = stream;
+    let mut line = String::new();
+    if reader.read_line(&mut line).map_err(|e| e.to_string())? == 0 {
+        return Ok(()); // client connected and left (the shutdown nudge)
+    }
+    let req = match Request::parse(line.trim()) {
+        Ok(r) => r,
+        Err(e) => return send(&mut writer, &response_err(&e, false)),
+    };
+    match req {
+        Request::Ping => send(&mut writer, &response_ok(vec![("service", json::s("kernelskill-serve"))])),
+        Request::Submit { spec, deadline_ms } => {
+            let resp = submit(daemon, spec, deadline_ms);
+            send(&mut writer, &resp)
+        }
+        Request::Status { job } => {
+            let d = daemon.lock().unwrap();
+            let resp = match d.find(&job) {
+                Some(i) => response_ok(vec![("status", d.jobs[i].snapshot_json())]),
+                None => response_err(&format!("no such job {job:?}"), false),
+            };
+            drop(d);
+            send(&mut writer, &resp)
+        }
+        Request::List => {
+            let d = daemon.lock().unwrap();
+            let snaps: Vec<Json> = d.jobs.iter().map(|e| e.snapshot_json()).collect();
+            drop(d);
+            send(&mut writer, &response_ok(vec![("jobs", Json::Arr(snaps))]))
+        }
+        Request::Cancel { job } => {
+            let resp = cancel(daemon, &job);
+            send(&mut writer, &resp)
+        }
+        Request::Watch { job } => watch(&mut writer, daemon, &job),
+        Request::Shutdown => {
+            daemon.lock().unwrap().draining = true;
+            send(&mut writer, &response_ok(vec![("draining", Json::Bool(true))]))
+        }
+    }
+}
+
+fn send(writer: &mut TcpStream, j: &Json) -> Result<(), String> {
+    writeln!(writer, "{j}").map_err(|e| format!("writing response: {e}"))?;
+    writer.flush().map_err(|e| format!("flushing response: {e}"))
+}
+
+fn submit(daemon: &Arc<Mutex<Daemon>>, spec: JobSpec, deadline_ms: Option<u64>) -> Json {
+    let mut d = daemon.lock().unwrap();
+    if d.draining {
+        return response_err("daemon is draining (shutdown requested)", false);
+    }
+    if d.active_count() >= d.cfg.queue_capacity {
+        return response_err(
+            &format!(
+                "queue full ({} active job(s), capacity {}): backpressure — retry after a \
+                 job finishes",
+                d.active_count(),
+                d.cfg.queue_capacity
+            ),
+            true,
+        );
+    }
+    let idx = d.jobs.len();
+    let id = job_id(idx);
+    let dir = d.cfg.service_dir.join(JOBS_DIR).join(&id);
+    let entry = JobEntry {
+        id: id.clone(),
+        dir: dir.clone(),
+        spec,
+        state: JobState::Queued,
+        deadline_ms,
+        error: None,
+        restarts: 0,
+        pid: None,
+        cancel_requested: false,
+    };
+    let published = std::fs::create_dir_all(&dir)
+        .map_err(|e| format!("creating {}: {e}", dir.display()))
+        .and_then(|()| entry.spec.save(&entry.spec_path()))
+        .and_then(|()| entry.save_manifest());
+    match published {
+        Ok(()) => {
+            d.jobs.push(entry);
+            response_ok(vec![("job", json::s(&id)), ("state", json::s("queued"))])
+        }
+        Err(e) => response_err(&e, false),
+    }
+}
+
+fn cancel(daemon: &Arc<Mutex<Daemon>>, job: &str) -> Json {
+    let mut d = daemon.lock().unwrap();
+    let Some(i) = d.find(job) else {
+        return response_err(&format!("no such job {job:?}"), false);
+    };
+    let entry = &mut d.jobs[i];
+    match entry.state {
+        JobState::Queued => {
+            entry.state = JobState::Cancelled;
+            match entry.save_manifest() {
+                Ok(()) => response_ok(vec![
+                    ("job", json::s(job)),
+                    ("state", json::s(entry.state.as_str())),
+                ]),
+                Err(e) => response_err(&e, false),
+            }
+        }
+        JobState::Running => {
+            entry.cancel_requested = true;
+            response_ok(vec![
+                ("cancelling", Json::Bool(true)),
+                ("job", json::s(job)),
+                ("state", json::s("running")),
+            ])
+        }
+        state => response_ok(vec![
+            ("job", json::s(job)),
+            ("note", json::s("already terminal")),
+            ("state", json::s(state.as_str())),
+        ]),
+    }
+}
+
+/// Stream snapshots to the watcher whenever (state, cells) changes, then
+/// a final `{"event":"end",…}` line once the job is terminal.
+fn watch(writer: &mut TcpStream, daemon: &Arc<Mutex<Daemon>>, job: &str) -> Result<(), String> {
+    let (found, poll_ms) = {
+        let d = daemon.lock().unwrap();
+        (d.find(job).is_some(), d.cfg.poll_ms)
+    };
+    if !found {
+        return send(writer, &response_err(&format!("no such job {job:?}"), false));
+    }
+    let mut last: Option<(JobState, u64)> = None;
+    loop {
+        let (snapshot, state) = {
+            let d = daemon.lock().unwrap();
+            let i = d.find(job).expect("jobs are never removed");
+            (d.jobs[i].snapshot_json(), d.jobs[i].state)
+        };
+        let cells = snapshot.get("cells").and_then(|c| c.as_f64()).unwrap_or(0.0) as u64;
+        if last != Some((state, cells)) {
+            last = Some((state, cells));
+            let mut event = vec![("event", json::s("state"))];
+            if let Json::Obj(map) = &snapshot {
+                for (k, v) in map {
+                    event.push((k.as_str(), v.clone()));
+                }
+            }
+            send(writer, &json::obj(event))?;
+        }
+        if state.is_terminal() {
+            let mut end = vec![("event", json::s("end")), ("job", json::s(job)),
+                ("state", json::s(state.as_str()))];
+            if let Some(e) = snapshot.get("error").and_then(|e| e.as_str()) {
+                end.push(("error", json::s(e)));
+            }
+            return send(writer, &json::obj(end));
+        }
+        std::thread::sleep(Duration::from_millis(poll_ms.max(1)));
+    }
+}
+
+// ------------------------------------------------------------------------
+// Client (the `jobs` CLI and tests)
+// ------------------------------------------------------------------------
+
+/// A client handle on one daemon, resolved through its service dir's
+/// endpoint file.
+#[derive(Debug, Clone)]
+pub struct Client {
+    addr: String,
+}
+
+impl Client {
+    /// Resolve and probe the daemon behind `service_dir`, retrying for a
+    /// few seconds while it comes up (endpoint file missing or connection
+    /// refused — e.g. right after `serve` was launched).
+    pub fn connect(service_dir: &Path) -> Result<Client, String> {
+        let endpoint = service_dir.join(ENDPOINT_FILE);
+        let mut last = String::new();
+        for _ in 0..CONNECT_ATTEMPTS {
+            match std::fs::read_to_string(&endpoint) {
+                Ok(text) => {
+                    let addr = text.trim().to_string();
+                    match TcpStream::connect(&addr) {
+                        Ok(_) => return Ok(Client { addr }),
+                        Err(e) => last = format!("connecting {addr}: {e}"),
+                    }
+                }
+                Err(e) => last = format!("reading {}: {e}", endpoint.display()),
+            }
+            std::thread::sleep(Duration::from_millis(CONNECT_RETRY_MS));
+        }
+        Err(format!(
+            "no daemon reachable via {} after {:.1}s ({last}) — is `serve` running?",
+            endpoint.display(),
+            (CONNECT_ATTEMPTS as u64 * CONNECT_RETRY_MS) as f64 / 1000.0
+        ))
+    }
+
+    /// One-shot request: send a line, read the single response line. An
+    /// `ok:false` reply becomes an `Err` (with a `[backpressure]` prefix
+    /// when the daemon flagged it).
+    pub fn request(&self, req: &Request) -> Result<Json, String> {
+        let mut lines = self.open(req)?;
+        let line = lines
+            .pop_front()
+            .ok_or("daemon closed the connection without replying")?;
+        parse_reply(&line)
+    }
+
+    /// Watch a job to its terminal state, invoking `on_event` per
+    /// streamed event line. Returns the final (`event:"end"`) object.
+    pub fn watch(
+        &self,
+        job: &str,
+        mut on_event: impl FnMut(&Json),
+    ) -> Result<Json, String> {
+        let stream = TcpStream::connect(&self.addr).map_err(|e| format!("connecting {}: {e}", self.addr))?;
+        let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+        writeln!(writer, "{}", Request::Watch { job: job.to_string() }.to_json())
+            .map_err(|e| format!("sending watch: {e}"))?;
+        let reader = BufReader::new(stream);
+        let mut last = None;
+        for line in reader.lines() {
+            let line = line.map_err(|e| format!("reading watch stream: {e}"))?;
+            let j = parse_reply(&line)?;
+            on_event(&j);
+            let is_end = j.get("event").and_then(|e| e.as_str()) == Some("end");
+            last = Some(j);
+            if is_end {
+                break;
+            }
+        }
+        last.ok_or_else(|| "watch stream ended without events".to_string())
+    }
+
+    fn open(&self, req: &Request) -> Result<VecDeque<String>, String> {
+        let stream = TcpStream::connect(&self.addr)
+            .map_err(|e| format!("connecting {}: {e}", self.addr))?;
+        let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+        writeln!(writer, "{}", req.to_json()).map_err(|e| format!("sending request: {e}"))?;
+        let reader = BufReader::new(stream);
+        let mut lines = VecDeque::new();
+        for line in reader.lines() {
+            lines.push_back(line.map_err(|e| format!("reading response: {e}"))?);
+            break; // unary ops: one line
+        }
+        Ok(lines)
+    }
+}
+
+/// Parse one response line; `ok:false` replies become errors.
+fn parse_reply(line: &str) -> Result<Json, String> {
+    let j = Json::parse(line).map_err(|e| format!("daemon reply does not parse: {e}"))?;
+    if matches!(j.get("ok"), Some(Json::Bool(false))) {
+        let msg = j.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error");
+        let bp = matches!(j.get("backpressure"), Some(Json::Bool(true)));
+        return Err(if bp { format!("[backpressure] {msg}") } else { msg.to_string() });
+    }
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ks-service-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn job_manifest_roundtrips_and_refuses_skew() {
+        let dir = tmp_dir("manifest");
+        let job_dir = dir.join(JOBS_DIR).join("job-000001");
+        std::fs::create_dir_all(&job_dir).unwrap();
+        let entry = JobEntry {
+            id: "job-000001".to_string(),
+            dir: job_dir.clone(),
+            spec: JobSpec::default(),
+            state: JobState::Queued,
+            deadline_ms: Some(30_000),
+            error: None,
+            restarts: 1,
+            pid: Some(4242),
+            cancel_requested: false,
+        };
+        entry.spec.save(&entry.spec_path()).unwrap();
+        entry.save_manifest().unwrap();
+        let back = JobEntry::load(&job_dir).unwrap();
+        assert_eq!(back.state, JobState::Queued);
+        assert_eq!(back.deadline_ms, Some(30_000));
+        assert_eq!(back.restarts, 1);
+        assert_eq!(back.pid, Some(4242));
+        assert_eq!(back.spec, entry.spec);
+        assert_eq!(validate_service_dir(&dir).unwrap(), 1);
+
+        // Version skew and unknown fields are refused loudly.
+        let manifest = job_dir.join("job.json");
+        let text = std::fs::read_to_string(&manifest).unwrap();
+        std::fs::write(&manifest, text.replace("\"version\":1", "\"version\":9")).unwrap();
+        let err = validate_service_dir(&dir).unwrap_err();
+        assert!(err.contains("version 9"), "{err}");
+        std::fs::write(&manifest, text.replace("\"restarts\"", "\"restartz\"")).unwrap();
+        let err = validate_service_dir(&dir).unwrap_err();
+        assert!(err.contains("restartz"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn job_dirs_must_be_contiguous() {
+        let dir = tmp_dir("gap");
+        let job_dir = dir.join(JOBS_DIR).join("job-000002");
+        std::fs::create_dir_all(&job_dir).unwrap();
+        let entry = JobEntry {
+            id: "job-000002".to_string(),
+            dir: job_dir.clone(),
+            spec: JobSpec::default(),
+            state: JobState::Queued,
+            deadline_ms: None,
+            error: None,
+            restarts: 0,
+            pid: None,
+            cancel_requested: false,
+        };
+        entry.spec.save(&entry.spec_path()).unwrap();
+        entry.save_manifest().unwrap();
+        let err = validate_service_dir(&dir).unwrap_err();
+        assert!(err.contains("contiguous"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn endpoint_file_roundtrips() {
+        let dir = tmp_dir("endpoint");
+        publish_endpoint(&dir, "127.0.0.1:45678").unwrap();
+        let text = std::fs::read_to_string(dir.join(ENDPOINT_FILE)).unwrap();
+        assert_eq!(text, "127.0.0.1:45678\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

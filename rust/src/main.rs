@@ -8,8 +8,24 @@
 //!   report --run-dir <dir>                              (streamed results)
 //!   merge [--watch] --out <dir> <shard-dir>...          (union shard run dirs)
 //!   launch --shards N --run-dir <dir> [flags]           (spawn+supervise+merge)
-//!   skills inspect|gc --memory-dir <dir>                (learned-store tooling)
+//!   serve --service-dir <dir>                           (job daemon)
+//!   jobs <action> [--service-dir <dir>]                 (talk to the daemon)
+//!   skills inspect|gc|compact|diff                      (learned-store tooling)
 //!   smoke                                               (CI orchestration proof)
+//!
+//! Every subcommand declares its flags in the [`commands`] registry, so
+//! parsing is strict (`util::cli::parse_checked`): a typo'd flag or
+//! subcommand is a hard error with a did-you-mean suggestion, and
+//! `--help` text is generated from the same declarations.
+//!
+//! Run identity (which matrix, which strategy, which device, which
+//! faults) lives in a typed [`JobSpec`] — parsed once from human flags or
+//! from a canonical `--job-spec <file|json>`, validated up front, and
+//! executed through one shared entry point. `launch`/`worker` fan the
+//! spec out to shard children as a single `--job-spec` artifact instead
+//! of replaying individual flags, and the `serve` daemon runs submitted
+//! specs the same way, so the batch path, the fan-out path, and the
+//! service path cannot drift.
 //!
 //! Orchestration v2 flags (table*/suite): `--run-dir <dir>` streams every
 //! finished cell to `<dir>/results.jsonl`, `--resume` skips cells already
@@ -27,58 +43,246 @@
 
 use kernelskill::baselines;
 use kernelskill::bench_suite;
-use kernelskill::coordinator::{self, Branch, LoopConfig};
-use kernelskill::device::faults::ChaosConfig;
+use kernelskill::coordinator::{self, Branch, JobSpec, LoopConfig, Request};
 use kernelskill::device::machine::DeviceSpec;
 use kernelskill::harness::{calibrate, experiments, metrics};
 use kernelskill::runtime::{self, Registry, Runtime};
-use kernelskill::util::cli::Args;
+use kernelskill::util::cli::{self, Args, CommandDef, FlagDef};
+use kernelskill::util::json::Json;
 use kernelskill::util::logging::{self, Level};
 
-/// Subcommands a `launch` / `worker` fleet may fan out (they must accept
-/// `--run-dir/--shards/--shard-index/--resume`, and in elastic fleets
-/// `--batch-index/--batch-count`).
-const SHARDABLE: [&str; 5] = ["suite", "table1", "table2", "table3", "per-round"];
-
-/// Matrix-defining flags forwarded verbatim to shard children by `launch`
-/// and `worker`.
-const PASSTHROUGH_FLAGS: [&str; 8] =
-    ["strategy", "level", "take", "seeds", "suite-seed", "workers", "device", "chaos"];
-
-/// `--no-retrieval-cache` given in either spelling the hand-rolled parser
-/// produces (bare switch, or `--no-retrieval-cache=1` as forwarded to
-/// shard children, where a bare switch could swallow a following
-/// positional).
-fn no_retrieval_cache(args: &Args) -> bool {
-    args.has("no-retrieval-cache") || args.get("no-retrieval-cache").is_some()
+fn val(name: &'static str, metavar: &'static str, help: &'static str) -> FlagDef {
+    FlagDef { name, value: Some(metavar), help }
 }
 
-/// `--exchange-adaptive` in either spelling (bare switch, or the
-/// `--exchange-adaptive=1` form forwarded to shard children).
-fn exchange_adaptive(args: &Args) -> bool {
-    args.has("exchange-adaptive") || args.get("exchange-adaptive").is_some()
+fn sw(name: &'static str, help: &'static str) -> FlagDef {
+    FlagDef { name, value: None, help }
 }
 
-/// The flags `launch` and `worker` share when fanning a matrix out to
-/// shard children: the verbatim passthrough list, the exchange epoch, and
-/// the per-shard crash budget. One parser for both, so the two fan-out
-/// surfaces can never drift apart.
-fn fanout_flags(args: &Args) -> Result<(Vec<String>, Option<usize>, usize), String> {
-    let mut passthrough = Vec::new();
-    for flag in PASSTHROUGH_FLAGS {
-        if let Some(v) = args.get(flag) {
-            passthrough.push(format!("--{flag}"));
-            passthrough.push(v.to_string());
+/// The matrix-identity flags every [`JobSpec`]-running subcommand shares
+/// (they are exactly what `JobSpec::from_args` reads).
+fn identity_flags() -> Vec<FlagDef> {
+    vec![
+        val("job-spec", "FILE|JSON", "typed job spec (the whole identity; conflicts with the matrix flags)"),
+        val("strategy", "NAME", "strategy to run (default KernelSkill; suite only)"),
+        val("level", "N", "task level filter 1-4; 0 = full suite (suite only)"),
+        val("take", "N", "deterministic prefix slice of the task list; 0 = all"),
+        val("seeds", "N", "number of run seeds (the matrix runs seeds 0..N)"),
+        val("suite-seed", "S", "suite-generation seed (task population)"),
+        val("workers", "W", "worker-pool size; 0 = this machine's default"),
+        val("device", "NAME", "device preset: a100-like|tpu-like|h100-like|consumer-gpu-like|cpu-like"),
+        val("chaos", "SPEC", "fault injection: tc=P,drop=P,sigma=S,bias=B,seed=N"),
+        sw("no-retrieval-cache", "A/B: per-task-run retrieval memo off"),
+        sw("exchange-adaptive", "adaptive (doubling) exchange-epoch schedule"),
+    ]
+}
+
+/// Placement flags: where a matrix run streams, shards, and exchanges.
+/// Deliberately *not* part of the job spec — invariant 12 makes output
+/// independent of placement.
+fn placement_flags() -> Vec<FlagDef> {
+    vec![
+        val("run-dir", "DIR", "stream every finished cell to DIR/results.jsonl"),
+        sw("resume", "skip cells already checkpointed in --run-dir"),
+        val("memory-dir", "DIR", "warm-start + persist the long-term skill store"),
+        val("shards", "N", "static sharding: total shard count (requires --run-dir)"),
+        val("shard-index", "I", "static sharding: this process's shard"),
+        val("batch-count", "B", "elastic fleet: total lease batches"),
+        val("batch-index", "K", "elastic fleet: this process's batch"),
+        val("exchange-dir", "DIR", "shared dir for live cross-shard skill exchange"),
+        val("exchange-epoch", "E", "exchange learned skills every E tasks"),
+    ]
+}
+
+fn matrix_command(name: &'static str, summary: &'static str) -> CommandDef {
+    let mut flags = identity_flags();
+    flags.extend(placement_flags());
+    CommandDef { name, summary, usage: "[flags]", flags, positional: false }
+}
+
+/// The full subcommand registry: one source of truth for strict parsing
+/// and for the generated `--help` text.
+fn commands() -> Vec<CommandDef> {
+    let mut suite = matrix_command("suite", "run one strategy over the task suite");
+    suite.flags.push(sw("smoke", "run the tiny end-to-end smoke instead (alias of `smoke`)"));
+    let fanout_refused = [
+        val("memory-dir", "DIR", "refused here (shards would fight over one live store)"),
+        val("shard-index", "I", "refused here (the launcher owns the shard assignment)"),
+        val("batch-count", "B", "refused here (elastic workers claim leases themselves)"),
+        val("batch-index", "K", "refused here (elastic workers claim leases themselves)"),
+    ];
+    let mut launch_flags = identity_flags();
+    launch_flags.extend([
+        val("run-dir", "DIR", "merged output dir (per-shard dirs live under it)"),
+        val("cmd", "CMD", "subcommand to fan out (suite|table1|table2|table3|per-round)"),
+        val("shards", "N", "number of shard processes to spawn (default 2)"),
+        val("manifest", "FILE", "fleet mode: pull workers described in this manifest"),
+        sw("exchange", "exchange learned skills at the default epoch"),
+        val("exchange-epoch", "E", "exchange learned skills every E tasks"),
+        val("max-restarts", "R", "per-shard crash budget (default 2)"),
+        val("poll-ms", "MS", "fleet mode: transport poll interval"),
+        val("stall-timeout-ms", "MS", "fleet mode: per-worker stall alarm"),
+        val("lease-timeout-ms", "MS", "fleet mode: elastic lease re-dispatch timeout"),
+    ]);
+    launch_flags.extend(fanout_refused);
+    let mut worker_flags = identity_flags();
+    worker_flags.extend([
+        val("manifest", "FILE", "the fleet's worker manifest"),
+        val("worker-id", "ID", "this machine's manifest row"),
+        val("run-dir", "DIR", "local scratch for checkpoints and logs"),
+        val("cmd", "CMD", "subcommand to fan out (must match the fleet's)"),
+        sw("exchange", "exchange learned skills at the default epoch"),
+        val("exchange-epoch", "E", "exchange learned skills every E tasks"),
+        val("max-restarts", "R", "per-shard crash budget (default 2)"),
+        val("poll-ms", "MS", "transport poll interval"),
+        val("shards", "N", "refused here (the manifest owns the shard assignment)"),
+    ]);
+    worker_flags.extend(fanout_refused);
+    let mut jobs_flags = identity_flags();
+    jobs_flags.extend([
+        val("service-dir", "DIR", "the daemon's durable service directory"),
+        val("cmd", "CMD", "submit: which matrix command the job runs (default suite)"),
+        val("deadline-ms", "MS", "submit: wall-clock budget; past it the job is killed"),
+    ]);
+    vec![
+        matrix_command("table1", "Table 1 — success and speedup vs Torch Eager"),
+        matrix_command("table2", "Table 2 — memory ablations"),
+        matrix_command("table3", "Table 3 — Fast_1"),
+        matrix_command("per-round", "per-round refinement efficiency (§5.4)"),
+        matrix_command("trajectory", "optimization-trajectory figures"),
+        suite,
+        CommandDef {
+            name: "verify-artifacts",
+            summary: "verify every artifact kernel against its reference (real PJRT path)",
+            usage: "[flags]",
+            flags: vec![
+                val("seed", "S", "input-generation seed (default 7)"),
+                val("tolerance", "T", "max abs error accepted (default 1e-3)"),
+            ],
+            positional: false,
+        },
+        CommandDef {
+            name: "calibrate",
+            summary: "measure this machine's cost-model calibration table",
+            usage: "[flags]",
+            flags: vec![val("seed", "S", "input-generation seed (default 7)")],
+            positional: false,
+        },
+        CommandDef {
+            name: "run-task",
+            summary: "run one task through the closed loop and print its trace",
+            usage: "--task <substr> [flags]",
+            flags: vec![
+                val("task", "SUBSTR", "task id substring to run"),
+                val("strategy", "NAME", "strategy to run (default KernelSkill)"),
+                val("seed", "S", "run seed (default 0)"),
+                val("suite-seed", "S", "suite-generation seed (task population)"),
+                val("memory-dir", "DIR", "warm-start + persist the long-term skill store"),
+                val("device", "NAME", "device preset the run is priced on"),
+                sw("no-retrieval-cache", "A/B: per-task-run retrieval memo off"),
+            ],
+            positional: false,
+        },
+        CommandDef {
+            name: "report",
+            summary: "render tables from a run dir's streamed results.jsonl",
+            usage: "--run-dir <dir>",
+            flags: vec![val("run-dir", "DIR", "the checkpointed run dir")],
+            positional: false,
+        },
+        CommandDef {
+            name: "merge",
+            summary: "union per-shard run dirs (checkpoints + skill stores)",
+            usage: "--out <dir> <shard-run-dir>... [flags]",
+            flags: vec![
+                val("out", "DIR", "merged output dir"),
+                sw("watch", "follow still-running shards, then finalize"),
+                val("interval-ms", "N", "watch poll interval (default 500)"),
+            ],
+            positional: true,
+        },
+        CommandDef {
+            name: "launch",
+            summary: "spawn shard processes, restart crashes, merge byte-identically",
+            usage: "--run-dir <dir> [flags]",
+            flags: launch_flags,
+            positional: false,
+        },
+        CommandDef {
+            name: "worker",
+            summary: "run this machine's manifest shard range and publish it",
+            usage: "--manifest <file> --worker-id <id> --run-dir <dir> [flags]",
+            flags: worker_flags,
+            positional: false,
+        },
+        CommandDef {
+            name: "serve",
+            summary: "long-lived daemon: accept, queue, and run optimization jobs",
+            usage: "--service-dir <dir> [flags]",
+            flags: vec![
+                val("service-dir", "DIR", "durable queue root (job manifests + endpoint file)"),
+                val("memory-dir", "DIR", "shared base skill store (jobs get copy-on-write overlays)"),
+                val("queue-capacity", "N", "max queued+running jobs before backpressure (default 16)"),
+                val("poll-ms", "MS", "scheduler poll interval (default 50)"),
+                val("max-restarts", "R", "per-job crash budget (default 2)"),
+                val("port", "P", "localhost TCP port (default 0 = ephemeral)"),
+            ],
+            positional: false,
+        },
+        CommandDef {
+            name: "jobs",
+            summary: "client for a serve daemon: submit/status/watch/cancel/list",
+            usage: "<ping|submit|status|watch|cancel|list|shutdown> [job-id] [flags]",
+            flags: jobs_flags,
+            positional: true,
+        },
+        CommandDef {
+            name: "skills",
+            summary: "introspect and maintain a learned store (skills.json v4)",
+            usage: "<inspect|gc|compact|diff> [paths] [flags]",
+            flags: vec![
+                val("memory-dir", "DIR", "the live store directory"),
+                val("run-dir", "DIR", "inspect a run dir's derived store instead"),
+                val("device", "NAME", "scope to one device partition"),
+                val("case", "SUBSTR", "inspect: filter learned cases"),
+                sw("segments", "inspect: also print the on-disk segment/head layout"),
+                val("max-age", "N", "gc: drop stats older than N generations (default 8)"),
+                sw("dry-run", "gc: report without rewriting"),
+                val("auto", "N", "compact: fold automatically at N on-disk segments (0 = off)"),
+            ],
+            positional: true,
+        },
+        CommandDef {
+            name: "smoke",
+            summary: "tiny checkpoint/resume/memory end-to-end (CI gate)",
+            usage: "",
+            flags: vec![],
+            positional: false,
+        },
+    ]
+}
+
+/// Resolve the matrix subcommand a fan-out or submission runs: `--cmd`
+/// wins, else an explicit `--job-spec` names its own command (don't make
+/// the user repeat it), else `suite`.
+fn fanout_cmd(args: &Args) -> Result<String, String> {
+    match (args.get("cmd"), args.get("job-spec")) {
+        (Some(c), _) => Ok(c.to_string()),
+        (None, Some(v)) => {
+            let spec = if v.trim_start().starts_with('{') {
+                JobSpec::parse(v)?
+            } else {
+                JobSpec::load(std::path::Path::new(v))?
+            };
+            Ok(spec.cmd)
         }
+        (None, None) => Ok("suite".to_string()),
     }
-    if no_retrieval_cache(args) {
-        // `=`-form: position-robust no matter what the child parser sees
-        // after it.
-        passthrough.push("--no-retrieval-cache=1".to_string());
-    }
-    if exchange_adaptive(args) {
-        passthrough.push("--exchange-adaptive=1".to_string());
-    }
+}
+
+/// The supervision flags `launch` and `worker` share: the exchange epoch
+/// and the per-shard crash budget.
+fn supervision_flags(args: &Args) -> Result<(Option<usize>, usize), String> {
     let mut exchange_epoch = None;
     if args.has("exchange") {
         exchange_epoch = Some(coordinator::DEFAULT_EXCHANGE_EPOCH);
@@ -87,17 +291,7 @@ fn fanout_flags(args: &Args) -> Result<(Vec<String>, Option<usize>, usize), Stri
         exchange_epoch = Some(args.get_usize("exchange-epoch", 0)?);
     }
     let max_restarts = args.get_usize("max-restarts", 2)?;
-    Ok((passthrough, exchange_epoch, max_restarts))
-}
-
-/// `--chaos tc=..,drop=..,sigma=..,bias=..,seed=..` — environment-fault
-/// injection (see `device::faults::ChaosConfig`). Validated here so a
-/// typo'd spec fails before any work is scheduled.
-fn parse_chaos(args: &Args) -> Result<Option<ChaosConfig>, String> {
-    match args.get("chaos") {
-        None => Ok(None),
-        Some(spec) => ChaosConfig::parse(spec).map(Some),
-    }
+    Ok((exchange_epoch, max_restarts))
 }
 
 fn parse_device(args: &Args) -> Result<Option<DeviceSpec>, String> {
@@ -112,9 +306,11 @@ fn parse_device(args: &Args) -> Result<Option<DeviceSpec>, String> {
     }
 }
 
-fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
+/// Join a validated [`JobSpec`] (the run's identity) with this process's
+/// placement flags into the experiment config. Identity comes only from
+/// the spec; placement only from the CLI.
+fn exp_config(spec: &JobSpec, args: &Args) -> Result<experiments::ExpConfig, String> {
     let defaults = experiments::ExpConfig::default();
-    let n_seeds = args.get_usize("seeds", 1)?;
     let shards = args.get_usize("shards", 1)?;
     let batch_count = args.get_usize("batch-count", 0)?;
     let run_dir = args.get("run-dir").map(std::path::PathBuf::from);
@@ -139,9 +335,9 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
             .to_string());
     }
     Ok(experiments::ExpConfig {
-        suite_seed: args.get_u64("suite-seed", defaults.suite_seed)?,
-        run_seeds: (0..n_seeds as u64).collect(),
-        workers: args.get_usize("workers", defaults.workers)?,
+        suite_seed: spec.suite_seed,
+        run_seeds: (0..spec.seeds as u64).collect(),
+        workers: if spec.workers == 0 { defaults.workers } else { spec.workers },
         run_dir,
         resume: args.has("resume"),
         memory_dir: args.get("memory-dir").map(std::path::PathBuf::from),
@@ -151,10 +347,10 @@ fn exp_config(args: &Args) -> Result<experiments::ExpConfig, String> {
         batch_index: args.get_usize("batch-index", 0)?,
         exchange_dir,
         exchange_epoch,
-        exchange_adaptive: exchange_adaptive(args),
-        device: parse_device(args)?,
-        retrieval_cache: !no_retrieval_cache(args),
-        chaos: parse_chaos(args)?,
+        exchange_adaptive: spec.exchange_adaptive,
+        device: spec.device_spec(),
+        retrieval_cache: spec.retrieval_cache,
+        chaos: spec.chaos_config()?,
     })
 }
 
@@ -185,40 +381,31 @@ fn main() {
 }
 
 fn run() -> Result<(), String> {
-    let args = Args::from_env()?;
+    let registry = commands();
+    let args = cli::parse_checked(std::env::args().skip(1), &registry)?;
     if args.has("verbose") {
         logging::set_level(Level::Debug);
     }
-    match args.subcommand.as_deref() {
-        Some("table1") => {
-            let cfg = exp_config(&args)?;
-            let (rendered, _) = experiments::table1(&cfg)?;
-            finish_run_dir(&cfg)?;
-            println!("Table 1 — Success and Speedup vs Torch Eager\n{rendered}");
+    let sub = args.subcommand.as_deref();
+    if args.has("help") || sub.is_none() {
+        match sub.and_then(|n| registry.iter().find(|c| c.name == n)) {
+            Some(c) => print!("{}", cli::render_command_help(c)),
+            None => {
+                print!("{}", cli::render_global_help(&registry));
+                println!(
+                    "\nStrategies: KernelSkill, STARK, CudaForge, Astra, PRAGMA, QiMeng,\n\
+                     \x20           Kevin-32B, 'w/o memory', 'w/o Short_term memory', \
+                     'w/o Long_term memory'"
+                );
+            }
         }
-        Some("table2") => {
-            let cfg = exp_config(&args)?;
-            let (rendered, _) = experiments::table2(&cfg)?;
-            finish_run_dir(&cfg)?;
-            println!("Table 2 — Memory ablations\n{rendered}");
+        return Ok(());
+    }
+    match sub.unwrap() {
+        cmd @ ("table1" | "table2" | "table3" | "per-round" | "trajectory" | "suite") => {
+            run_matrix_cmd(cmd, &args)
         }
-        Some("table3") => {
-            let cfg = exp_config(&args)?;
-            let (rendered, _) = experiments::table3(&cfg)?;
-            finish_run_dir(&cfg)?;
-            println!("Table 3 — Fast_1\n{rendered}");
-        }
-        Some("per-round") => {
-            let cfg = exp_config(&args)?;
-            let (rendered, _) = experiments::per_round_efficiency(&cfg)?;
-            finish_run_dir(&cfg)?;
-            println!("Per-round refinement efficiency (§5.4)\n{rendered}");
-        }
-        Some("trajectory") => {
-            let cfg = exp_config(&args)?;
-            println!("{}", experiments::trajectory_figures(&cfg));
-        }
-        Some("verify-artifacts") => {
+        "verify-artifacts" => {
             let seed = args.get_u64("seed", 7)?;
             let tol = args.get_f64("tolerance", 1e-3)?;
             let reg = Registry::load("artifacts").map_err(|e| e.to_string())?;
@@ -243,313 +430,292 @@ fn run() -> Result<(), String> {
                 return Err(format!("{failed} variants failed verification"));
             }
             println!("all {} variants verified", reports.len());
+            Ok(())
         }
-        Some("calibrate") => {
+        "calibrate" => {
             let seed = args.get_u64("seed", 7)?;
             let rows = calibrate::calibrate(seed).map_err(|e| e.to_string())?;
             println!("{}", calibrate::render(&rows));
+            Ok(())
         }
-        Some("run-task") => {
-            let task_id = args.get("task").ok_or("--task <id> required")?;
-            let strat_name = args.get_or("strategy", "KernelSkill");
-            let strategy = baselines::by_name(strat_name)
-                .ok_or_else(|| format!("unknown strategy {strat_name}"))?;
-            let suite_seed = args.get_u64("suite-seed", 42)?;
-            let tasks = bench_suite::full_suite(suite_seed);
-            let task = tasks
-                .iter()
-                .find(|t| t.id.contains(task_id))
-                .ok_or_else(|| format!("no task matching {task_id}"))?;
-            let mut cfg = LoopConfig {
-                run_seed: args.get_u64("seed", 0)?,
-                memory_dir: args.get("memory-dir").map(std::path::PathBuf::from),
-                retrieval_cache: !no_retrieval_cache(&args),
-                ..LoopConfig::default()
-            };
-            // The device preset keys the skill partition the observations
-            // land in, so run-task must honor it like every suite command.
-            if let Some(dev) = parse_device(&args)? {
-                cfg.dev = dev;
-            }
-            let r = coordinator::run_task(task, &strategy, &cfg);
-            // Standalone runs persist their own observations (in a suite the
-            // scheduler owns the write cycle), so learning accumulates
-            // across repeated run-task invocations too.
-            if let Some(dir) = &cfg.memory_dir {
-                let path = dir.join("skills.json");
-                let mut store =
-                    kernelskill::memory::long_term::SegmentedSkillStore::open(dir)?;
-                // One completed task = one fold epoch: the generation
-                // clock advances even when the run produced no
-                // observations, which is what ages stats that stop being
-                // re-observed. Under the v4 layout advancing rotates the
-                // previous epochs' head into an immutable segment instead
-                // of rewriting accumulated history.
-                let generation = store.generation() + 1;
-                store
-                    .advance_to(generation)
-                    .map_err(|e| format!("rotating skill store head: {e}"))?;
-                store.merge(&r.skill_obs);
-                store
-                    .save()
-                    .map_err(|e| format!("saving skill store: {e}"))?;
-                println!(
-                    "memory: {} observation(s) merged into {} (generation {})",
-                    r.skill_obs.len(),
-                    path.display(),
-                    generation
-                );
-            }
-            println!(
-                "{} [{}]: success={} best={:.3}x seed={:?} promotions={} repairs={}",
-                r.task_id,
-                r.strategy,
-                r.success,
-                r.best_speedup,
-                r.seed_speedup,
-                r.promotions,
-                r.repair_attempts
-            );
-            for rec in &r.rounds {
-                let what = match &rec.branch {
-                    Branch::Optimize(m) => format!("optimize[{}]", m.name()),
-                    Branch::Repair(f) => format!("repair[{f}]"),
-                    Branch::Revert => "revert".into(),
-                    Branch::Converged => "converged".into(),
-                };
-                println!(
-                    "  round {:>2}: {:<30} ok={} speedup={:?}",
-                    rec.round,
-                    what,
-                    rec.compiled && rec.correct,
-                    rec.speedup
-                );
-            }
-        }
-        Some("suite") => {
-            if args.has("smoke") {
-                return run_smoke();
-            }
-            let strat_name = args.get_or("strategy", "KernelSkill");
-            let strategy = baselines::by_name(strat_name)
-                .ok_or_else(|| format!("unknown strategy {strat_name}"))?;
-            let cfg = exp_config(&args)?;
-            let level = args.get_usize("level", 0)?;
-            let mut tasks = if level == 0 {
-                bench_suite::full_suite(cfg.suite_seed)
-            } else {
-                bench_suite::level_suite(cfg.suite_seed, level as u8)
-            };
-            // Deterministic prefix slice: small fixed matrices for smokes
-            // and the sharding CI job.
-            let take = args.get_usize("take", 0)?;
-            if take > 0 {
-                tasks.truncate(take);
-            }
-            let suite = coordinator::run_suite_with(
-                &tasks,
-                &strategy,
-                &cfg.loop_cfg(),
-                &cfg.run_seeds,
-                cfg.workers,
-                &cfg.suite_opts(),
-            )?;
-            let split = metrics::by_level(&suite.results);
-            for (i, lv) in split.iter().enumerate() {
-                if lv.is_empty() {
-                    continue;
-                }
-                let c = metrics::cell(lv, strategy.rounds);
-                println!(
-                    "L{}: n={} success={:.2} speedup={:.2} fast1={:.2} rounds={:.1}",
-                    i + 1,
-                    c.n,
-                    c.success,
-                    c.speedup,
-                    c.fast1,
-                    c.mean_rounds
-                );
-            }
-            finish_run_dir(&cfg)?;
-            if let Some(dir) = &cfg.run_dir {
-                println!("checkpoint streamed to {}", dir.display());
-            }
-        }
-        Some("report") => {
+        "run-task" => run_task_cmd(&args),
+        "report" => {
             let dir = args.get("run-dir").ok_or("--run-dir <dir> required")?;
             let rendered = experiments::report_run_dir(std::path::Path::new(dir))?;
             println!("{rendered}");
+            Ok(())
         }
-        Some("merge") => {
-            let out = args.get("out").ok_or("--out <dir> required")?;
-            // The hand-rolled parser reads `--watch <path>` as a flag+value
-            // pair, which would silently swallow the first shard dir (and
-            // drop watch mode) when `--watch` directly precedes a
-            // positional. Reclaim the swallowed path instead: merge output
-            // is input-order-independent, so recovered-first is safe.
-            let watch = args.has("watch") || args.get("watch").is_some();
-            let mut inputs: Vec<std::path::PathBuf> = Vec::new();
-            if let Some(v) = args.get("watch") {
-                inputs.push(std::path::PathBuf::from(v));
-            }
-            inputs.extend(args.positional.iter().map(std::path::PathBuf::from));
-            if inputs.is_empty() {
-                return Err(
-                    "usage: merge [--watch [--interval-ms N]] --out <dir> <shard-run-dir> \
-                     [<shard-run-dir>...]"
-                        .to_string(),
-                );
-            }
-            let report = if watch {
-                // Streaming merge: follow the shard checkpoints while their
-                // processes are still running, then finalize once every
-                // input carries the `complete` marker. The result is
-                // byte-identical to a one-shot merge of the finished dirs.
-                let interval = args.get_u64("interval-ms", 500)?.max(1);
-                let mut watcher =
-                    coordinator::MergeWatcher::new(std::path::Path::new(out), &inputs)?;
-                let mut last = String::new();
-                loop {
-                    let status = watcher.poll()?;
-                    let line = status.render();
-                    if line != last {
-                        println!("watch: {line}");
-                        last = line;
-                    }
-                    if status.all_complete() {
-                        break;
-                    }
-                    std::thread::sleep(std::time::Duration::from_millis(interval));
-                }
-                watcher.finalize()?
-            } else {
-                coordinator::merge_run_dirs(std::path::Path::new(out), &inputs)?
-            };
-            print!("{}", report.render());
-            println!("merged run dir: {out} (report it with: report --run-dir {out})");
-        }
-        Some("launch") => {
-            let run_dir = args.get("run-dir").ok_or("--run-dir <dir> required")?;
-            if args.get("memory-dir").is_some() {
-                return Err("launch does not take --memory-dir: every shard would fight over \
-                            one live store. Use --exchange-epoch for live cross-shard \
-                            learning, or run the shards by hand with per-shard copies of the \
-                            same skills.json"
-                    .to_string());
-            }
-            if args.get("shard-index").is_some() {
-                return Err("launch owns the shard assignment; drop --shard-index".to_string());
-            }
-            if args.get("batch-index").is_some() || args.get("batch-count").is_some() {
-                return Err("batch slicing is elastic-fleet machinery: describe the fleet in \
-                            an elastic manifest (total_batches + lease transport) and use \
-                            launch --manifest / worker instead"
-                    .to_string());
-            }
-            // Fleet mode: a worker manifest turns `launch` into the
-            // pull-based cross-machine coordinator. `--manifest <file>` is
-            // canonical; a non-numeric `--workers <file>` is accepted too
-            // (a numeric value keeps its meaning: the children's
-            // worker-pool size) — but only when it names a real file, so a
-            // typo'd pool size gets a pointed error instead of a silent
-            // mode switch.
-            if let Some(path) = args.get("manifest") {
-                return run_fleet(&args, path, run_dir);
-            }
-            if let Some(v) = args.get("workers").filter(|v| v.parse::<usize>().is_err()) {
-                if std::path::Path::new(v).is_file() {
-                    return run_fleet(&args, v, run_dir);
-                }
-                return Err(format!(
-                    "--workers {v:?} is neither a worker-pool size nor an existing worker \
-                     manifest file (fleet mode prefers --manifest <file>)"
-                ));
-            }
-            let sub = args.get_or("cmd", "suite").to_string();
-            if !SHARDABLE.contains(&sub.as_str()) {
-                return Err(format!(
-                    "launch --cmd {sub:?} is not shardable; expected one of {SHARDABLE:?}"
-                ));
-            }
-            parse_device(&args)?; // refuse an unknown preset before spawning
-            parse_chaos(&args)?; // refuse a malformed chaos spec likewise
-            let program = std::env::current_exe()
-                .map_err(|e| format!("resolving the current executable: {e}"))?;
-            let shards = args.get_usize("shards", 2)?;
-            let mut lc = coordinator::LaunchConfig::new(program, &sub, run_dir, shards);
-            let (passthrough, exchange_epoch, max_restarts) = fanout_flags(&args)?;
-            lc.passthrough = passthrough;
-            lc.exchange_epoch = exchange_epoch;
-            lc.max_restarts = max_restarts;
-            let report = coordinator::launch(&lc)?;
-            print!("{}", report.render());
-            println!(
-                "merged run dir: {run_dir} (report it with: report --run-dir {run_dir})"
-            );
-        }
-        Some("worker") => return run_worker_cmd(&args),
-        Some("skills") => return run_skills(&args),
-        Some("smoke") => return run_smoke(),
-        _ => {
-            println!(
-                "kernelskill — memory-augmented multi-agent kernel optimization (paper reproduction)\n\
-                 \n\
-                 usage: kernelskill <cmd> [flags]\n\
-                 \n\
-                 experiments:\n\
-                 \x20 table1 | table2 | table3 | per-round | trajectory\n\
-                 \x20     [--seeds N] [--suite-seed S] [--workers W] [--device D] [--chaos C]\n\
-                 \x20     [--run-dir D] [--resume] [--memory-dir M]\n\
-                 \x20     [--shards N --shard-index I | --batch-count B --batch-index K]\n\
-                 \x20     [--exchange-dir X --exchange-epoch E [--exchange-adaptive]]\n\
-                 real PJRT path:\n\
-                 \x20 verify-artifacts [--seed S] [--tolerance T]\n\
-                 \x20 calibrate [--seed S]\n\
-                 single runs:\n\
-                 \x20 run-task --task <substr> [--strategy <name>] [--seed S] [--memory-dir M] [--device D]\n\
-                 \x20 suite --strategy <name> [--level 1|2|3|4] [--take N]\n\
-                 \x20     [--run-dir D] [--resume] [--memory-dir M] [--smoke]\n\
-                 \x20     [--shards N --shard-index I]\n\
-                 \x20     [--device a100-like|tpu-like|h100-like|consumer-gpu-like|cpu-like]\n\
-                 \x20     [--chaos tc=P,drop=P,sigma=S,bias=B,seed=N]   fault injection\n\
-                 \x20     [--no-retrieval-cache]   A/B: per-task-run retrieval memo off\n\
-                 orchestration:\n\
-                 \x20 report --run-dir D     render tables from streamed results.jsonl\n\
-                 \x20 merge --out D S0 S1..  union per-shard run dirs (checkpoints + skill stores)\n\
-                 \x20     [--watch [--interval-ms N]]   follow still-running shards, then finalize\n\
-                 \x20 launch --shards N --run-dir D [--cmd suite|table1|..]\n\
-                 \x20     [--strategy S] [--level L] [--take K] [--seeds M] [--workers W]\n\
-                 \x20     [--device D] [--chaos C] [--exchange-epoch E] [--max-restarts R]\n\
-                 \x20     spawn N shard processes, restart crashes into --resume, merge into D\n\
-                 \x20 launch --manifest workers.json --run-dir D\n\
-                 \x20     [--stall-timeout-ms T] [--poll-ms P] [--lease-timeout-ms L]\n\
-                 \x20     cross-machine coordinator: pull every worker's run dirs through\n\
-                 \x20     their transports, relay exchange deltas, merge byte-identically;\n\
-                 \x20     an *elastic* manifest (total_batches + lease transport) re-dispatches\n\
-                 \x20     batches whose lease progress counter stalls for L ms\n\
-                 \x20 worker --manifest workers.json --worker-id ID --run-dir D\n\
-                 \x20     [--cmd suite|table1|..] [matrix flags as in launch]\n\
-                 \x20     run this machine's manifest shard range and publish it\n\
-                 \x20     (elastic manifest: claim lease batches until the board is done)\n\
-                 \x20 smoke                  tiny checkpoint/resume/memory end-to-end (CI gate)\n\
-                 learned memory (skills.json v4, see docs/memory-formats.md):\n\
-                 \x20 skills inspect --memory-dir M [--device D] [--case SUBSTR] [--segments]\n\
-                 \x20     per-partition stats, confidence, staleness, learned cases;\n\
-                 \x20     --segments also prints the on-disk segment/head layout\n\
-                 \x20 skills gc --memory-dir M [--max-age N] [--device D] [--dry-run]\n\
-                 \x20     drop stats older than N generations (default 8); --device\n\
-                 \x20     scopes the sweep to one partition\n\
-                 \x20 skills compact --memory-dir M\n\
-                 \x20     fold all on-disk segments into one (offline, atomic swap)\n\
-                 \x20 skills diff A B\n\
-                 \x20     per-stat divergence report between two stores (paths to\n\
-                 \x20     skills.json or their directories), deterministic ordering\n\
-                 \n\
-                 strategies: KernelSkill, STARK, CudaForge, Astra, PRAGMA, QiMeng,\n\
-                 \x20          Kevin-32B, 'w/o memory', 'w/o Short_term memory', 'w/o Long_term memory'"
-            );
-        }
+        "merge" => run_merge(&args),
+        "launch" => run_launch(&args),
+        "worker" => run_worker_cmd(&args),
+        "serve" => run_serve(&args),
+        "jobs" => run_jobs(&args),
+        "skills" => run_skills(&args),
+        "smoke" => run_smoke(),
+        other => Err(format!("unknown subcommand {other:?}")), // parse_checked refused it already
     }
+}
+
+/// The shared matrix entry point: every way a matrix run starts — human
+/// flags, a fanned-out `--job-spec`, or a daemon job — lands here with
+/// the same validated [`JobSpec`].
+fn run_matrix_cmd(cmd: &str, args: &Args) -> Result<(), String> {
+    if cmd == "suite" && args.has("smoke") {
+        return run_smoke();
+    }
+    let spec = JobSpec::from_args(cmd, args)?;
+    let cfg = exp_config(&spec, args)?;
+    match cmd {
+        "table1" => {
+            let (rendered, _) = experiments::table1(&cfg)?;
+            finish_run_dir(&cfg)?;
+            println!("Table 1 — Success and Speedup vs Torch Eager\n{rendered}");
+        }
+        "table2" => {
+            let (rendered, _) = experiments::table2(&cfg)?;
+            finish_run_dir(&cfg)?;
+            println!("Table 2 — Memory ablations\n{rendered}");
+        }
+        "table3" => {
+            let (rendered, _) = experiments::table3(&cfg)?;
+            finish_run_dir(&cfg)?;
+            println!("Table 3 — Fast_1\n{rendered}");
+        }
+        "per-round" => {
+            let (rendered, _) = experiments::per_round_efficiency(&cfg)?;
+            finish_run_dir(&cfg)?;
+            println!("Per-round refinement efficiency (§5.4)\n{rendered}");
+        }
+        "trajectory" => println!("{}", experiments::trajectory_figures(&cfg)),
+        "suite" => return run_suite_job(&spec, &cfg),
+        other => return Err(format!("{other:?} is not a matrix command")),
+    }
+    Ok(())
+}
+
+fn run_suite_job(spec: &JobSpec, cfg: &experiments::ExpConfig) -> Result<(), String> {
+    let strategy = baselines::by_name(&spec.strategy)
+        .ok_or_else(|| format!("unknown strategy {}", spec.strategy))?;
+    let mut tasks = if spec.level == 0 {
+        bench_suite::full_suite(cfg.suite_seed)
+    } else {
+        bench_suite::level_suite(cfg.suite_seed, spec.level as u8)
+    };
+    // Deterministic prefix slice: small fixed matrices for smokes and the
+    // sharding CI job.
+    if spec.take > 0 {
+        tasks.truncate(spec.take);
+    }
+    let suite = coordinator::run_suite_with(
+        &tasks,
+        &strategy,
+        &cfg.loop_cfg(),
+        &cfg.run_seeds,
+        cfg.workers,
+        &cfg.suite_opts(),
+    )?;
+    let split = metrics::by_level(&suite.results);
+    for (i, lv) in split.iter().enumerate() {
+        if lv.is_empty() {
+            continue;
+        }
+        let c = metrics::cell(lv, strategy.rounds);
+        println!(
+            "L{}: n={} success={:.2} speedup={:.2} fast1={:.2} rounds={:.1}",
+            i + 1,
+            c.n,
+            c.success,
+            c.speedup,
+            c.fast1,
+            c.mean_rounds
+        );
+    }
+    finish_run_dir(cfg)?;
+    if let Some(dir) = &cfg.run_dir {
+        println!("checkpoint streamed to {}", dir.display());
+    }
+    Ok(())
+}
+
+fn run_task_cmd(args: &Args) -> Result<(), String> {
+    let task_id = args.get("task").ok_or("--task <id> required")?;
+    let strat_name = args.get_or("strategy", "KernelSkill");
+    let strategy = baselines::by_name(strat_name)
+        .ok_or_else(|| format!("unknown strategy {strat_name}"))?;
+    let suite_seed = args.get_u64("suite-seed", 42)?;
+    let tasks = bench_suite::full_suite(suite_seed);
+    let task = tasks
+        .iter()
+        .find(|t| t.id.contains(task_id))
+        .ok_or_else(|| format!("no task matching {task_id}"))?;
+    let mut cfg = LoopConfig {
+        run_seed: args.get_u64("seed", 0)?,
+        memory_dir: args.get("memory-dir").map(std::path::PathBuf::from),
+        retrieval_cache: !args.has("no-retrieval-cache"),
+        ..LoopConfig::default()
+    };
+    // The device preset keys the skill partition the observations land in,
+    // so run-task must honor it like every suite command.
+    if let Some(dev) = parse_device(args)? {
+        cfg.dev = dev;
+    }
+    let r = coordinator::run_task(task, &strategy, &cfg);
+    // Standalone runs persist their own observations (in a suite the
+    // scheduler owns the write cycle), so learning accumulates across
+    // repeated run-task invocations too.
+    if let Some(dir) = &cfg.memory_dir {
+        let path = dir.join("skills.json");
+        let mut store = kernelskill::memory::long_term::SegmentedSkillStore::open(dir)?;
+        // One completed task = one fold epoch: the generation clock
+        // advances even when the run produced no observations, which is
+        // what ages stats that stop being re-observed. Under the v4
+        // layout advancing rotates the previous epochs' head into an
+        // immutable segment instead of rewriting accumulated history.
+        let generation = store.generation() + 1;
+        store
+            .advance_to(generation)
+            .map_err(|e| format!("rotating skill store head: {e}"))?;
+        store.merge(&r.skill_obs);
+        store
+            .save()
+            .map_err(|e| format!("saving skill store: {e}"))?;
+        println!(
+            "memory: {} observation(s) merged into {} (generation {})",
+            r.skill_obs.len(),
+            path.display(),
+            generation
+        );
+    }
+    println!(
+        "{} [{}]: success={} best={:.3}x seed={:?} promotions={} repairs={}",
+        r.task_id,
+        r.strategy,
+        r.success,
+        r.best_speedup,
+        r.seed_speedup,
+        r.promotions,
+        r.repair_attempts
+    );
+    for rec in &r.rounds {
+        let what = match &rec.branch {
+            Branch::Optimize(m) => format!("optimize[{}]", m.name()),
+            Branch::Repair(f) => format!("repair[{f}]"),
+            Branch::Revert => "revert".into(),
+            Branch::Converged => "converged".into(),
+        };
+        println!(
+            "  round {:>2}: {:<30} ok={} speedup={:?}",
+            rec.round,
+            what,
+            rec.compiled && rec.correct,
+            rec.speedup
+        );
+    }
+    Ok(())
+}
+
+fn run_merge(args: &Args) -> Result<(), String> {
+    let out = args.get("out").ok_or("--out <dir> required")?;
+    let watch = args.has("watch");
+    let inputs: Vec<std::path::PathBuf> =
+        args.positional.iter().map(std::path::PathBuf::from).collect();
+    if inputs.is_empty() {
+        return Err(
+            "usage: merge [--watch [--interval-ms N]] --out <dir> <shard-run-dir> \
+             [<shard-run-dir>...]"
+                .to_string(),
+        );
+    }
+    let report = if watch {
+        // Streaming merge: follow the shard checkpoints while their
+        // processes are still running, then finalize once every input
+        // carries the `complete` marker. The result is byte-identical to
+        // a one-shot merge of the finished dirs.
+        let interval = args.get_u64("interval-ms", 500)?.max(1);
+        let mut watcher = coordinator::MergeWatcher::new(std::path::Path::new(out), &inputs)?;
+        let mut last = String::new();
+        loop {
+            let status = watcher.poll()?;
+            let line = status.render();
+            if line != last {
+                println!("watch: {line}");
+                last = line;
+            }
+            if status.all_complete() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(interval));
+        }
+        watcher.finalize()?
+    } else {
+        coordinator::merge_run_dirs(std::path::Path::new(out), &inputs)?
+    };
+    print!("{}", report.render());
+    println!("merged run dir: {out} (report it with: report --run-dir {out})");
+    Ok(())
+}
+
+fn run_launch(args: &Args) -> Result<(), String> {
+    let run_dir = args.get("run-dir").ok_or("--run-dir <dir> required")?;
+    if args.get("memory-dir").is_some() {
+        return Err("launch does not take --memory-dir: every shard would fight over \
+                    one live store. Use --exchange-epoch for live cross-shard \
+                    learning, or run the shards by hand with per-shard copies of the \
+                    same skills.json"
+            .to_string());
+    }
+    if args.get("shard-index").is_some() {
+        return Err("launch owns the shard assignment; drop --shard-index".to_string());
+    }
+    if args.get("batch-index").is_some() || args.get("batch-count").is_some() {
+        return Err("batch slicing is elastic-fleet machinery: describe the fleet in \
+                    an elastic manifest (total_batches + lease transport) and use \
+                    launch --manifest / worker instead"
+            .to_string());
+    }
+    // Fleet mode: a worker manifest turns `launch` into the pull-based
+    // cross-machine coordinator. `--manifest <file>` is canonical; a
+    // non-numeric `--workers <file>` is accepted too (a numeric value
+    // keeps its meaning: the children's worker-pool size) — but only when
+    // it names a real file, so a typo'd pool size gets a pointed error
+    // instead of a silent mode switch.
+    if let Some(path) = args.get("manifest") {
+        return run_fleet(args, path, run_dir);
+    }
+    if let Some(v) = args.get("workers").filter(|v| v.parse::<usize>().is_err()) {
+        if std::path::Path::new(v).is_file() {
+            return run_fleet(args, v, run_dir);
+        }
+        return Err(format!(
+            "--workers {v:?} is neither a worker-pool size nor an existing worker \
+             manifest file (fleet mode prefers --manifest <file>)"
+        ));
+    }
+    let sub = fanout_cmd(args)?;
+    if !coordinator::SHARDABLE.contains(&sub.as_str()) {
+        return Err(format!(
+            "launch --cmd {sub:?} is not shardable; expected one of {:?}",
+            coordinator::SHARDABLE
+        ));
+    }
+    let spec = JobSpec::from_args(&sub, args)?;
+    let program = std::env::current_exe()
+        .map_err(|e| format!("resolving the current executable: {e}"))?;
+    let shards = args.get_usize("shards", 2)?;
+    let mut lc = coordinator::LaunchConfig::new(program, &sub, run_dir, shards);
+    // The children inherit the whole matrix identity as one canonical
+    // artifact instead of a replayed flag list; the spec file doubles as
+    // the merged run's identity record.
+    std::fs::create_dir_all(run_dir).map_err(|e| format!("creating {run_dir}: {e}"))?;
+    let spec_path = std::path::Path::new(run_dir).join("job-spec.json");
+    spec.save(&spec_path)?;
+    lc.passthrough = vec!["--job-spec".to_string(), spec_path.display().to_string()];
+    let (exchange_epoch, max_restarts) = supervision_flags(args)?;
+    lc.exchange_epoch = exchange_epoch;
+    lc.max_restarts = max_restarts;
+    let report = coordinator::launch(&lc)?;
+    print!("{}", report.render());
+    println!("merged run dir: {run_dir} (report it with: report --run-dir {run_dir})");
     Ok(())
 }
 
@@ -566,7 +732,8 @@ fn run_fleet(args: &Args, manifest_path: &str, run_dir: &str) -> Result<(), Stri
     // Matrix and supervision flags must live on the (uniform) `worker`
     // invocations; a flag here would silently apply to nothing.
     let matrix_flags = ["cmd", "exchange", "exchange-epoch", "strategy", "level", "take",
-        "seeds", "suite-seed", "device", "chaos", "max-restarts", "no-retrieval-cache"];
+        "seeds", "suite-seed", "device", "chaos", "max-restarts", "no-retrieval-cache",
+        "job-spec"];
     for flag in matrix_flags {
         if args.get(flag).is_some() || args.has(flag) {
             return Err(format!(
@@ -628,25 +795,190 @@ fn run_worker_cmd(args: &Args) -> Result<(), String> {
                 .to_string(),
         );
     }
-    let sub = args.get_or("cmd", "suite").to_string();
-    if !SHARDABLE.contains(&sub.as_str()) {
+    let sub = fanout_cmd(args)?;
+    if !coordinator::SHARDABLE.contains(&sub.as_str()) {
         return Err(format!(
-            "worker --cmd {sub:?} is not shardable; expected one of {SHARDABLE:?}"
+            "worker --cmd {sub:?} is not shardable; expected one of {:?}",
+            coordinator::SHARDABLE
         ));
     }
-    parse_device(args)?; // refuse an unknown preset before spawning
-    parse_chaos(args)?; // refuse a malformed chaos spec likewise
+    let mut spec = JobSpec::from_args(&sub, args)?;
     let manifest = coordinator::WorkerManifest::load(std::path::Path::new(manifest_path))?;
+    // Heterogeneous fleets: the manifest row's device pins this machine.
+    // It merges into the job spec — not an extra child flag — so shard
+    // children still receive exactly one identity artifact. A device that
+    // collides with one already in the spec is refused up front: the two
+    // would silently disagree about which wins.
+    if let Some(dev) = manifest.worker(id).and_then(|w| w.device.clone()) {
+        if spec.device.is_some() {
+            return Err(format!(
+                "worker {id:?}: the manifest assigns device {dev:?} but this invocation \
+                 already carries a device; drop one of them"
+            ));
+        }
+        spec.device = Some(dev);
+        spec = spec.normalized()?;
+    }
     let program = std::env::current_exe()
         .map_err(|e| format!("resolving the current executable: {e}"))?;
     let mut wc = coordinator::WorkerConfig::new(program, &sub, run_dir, manifest, id);
-    let (passthrough, exchange_epoch, max_restarts) = fanout_flags(args)?;
-    wc.passthrough = passthrough;
+    std::fs::create_dir_all(run_dir).map_err(|e| format!("creating {run_dir}: {e}"))?;
+    let spec_path = std::path::Path::new(run_dir).join("job-spec.json");
+    spec.save(&spec_path)?;
+    wc.passthrough = vec!["--job-spec".to_string(), spec_path.display().to_string()];
+    let (exchange_epoch, max_restarts) = supervision_flags(args)?;
     wc.exchange_epoch = exchange_epoch;
     wc.max_restarts = max_restarts;
     wc.poll_ms = args.get_u64("poll-ms", wc.poll_ms)?;
     let report = coordinator::run_worker(&wc)?;
     print!("{}", report.render());
+    Ok(())
+}
+
+/// The `serve` subcommand: the long-lived kernel-optimization-as-a-service
+/// daemon. Jobs arrive over localhost TCP, queue durably as per-job
+/// manifests under the service dir, and run one at a time through the
+/// same matrix entry point every other path uses.
+fn run_serve(args: &Args) -> Result<(), String> {
+    let service_dir = args
+        .get("service-dir")
+        .ok_or("serve: --service-dir <dir> required (the durable queue + endpoint file)")?;
+    let program = std::env::current_exe()
+        .map_err(|e| format!("resolving the current executable: {e}"))?;
+    let mut cfg =
+        coordinator::ServiceConfig::new(std::path::PathBuf::from(service_dir), program);
+    cfg.base_memory = args.get("memory-dir").map(std::path::PathBuf::from);
+    cfg.queue_capacity = args.get_usize("queue-capacity", cfg.queue_capacity)?;
+    cfg.poll_ms = args.get_u64("poll-ms", cfg.poll_ms)?;
+    cfg.max_restarts = args.get_usize("max-restarts", cfg.max_restarts)?;
+    let port = args.get_u64("port", cfg.port as u64)?;
+    if port > u16::MAX as u64 {
+        return Err(format!("--port {port} is out of range (max 65535)"));
+    }
+    cfg.port = port as u16;
+    coordinator::serve(&cfg)
+}
+
+/// One line of `jobs status/list/watch` output.
+fn render_snapshot(snap: &Json) -> String {
+    let s = |k: &str| snap.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
+    let n = |k: &str| snap.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let mut line = format!(
+        "{:<12} {:<9} cmd={} cells={} restarts={}",
+        s("job"),
+        s("state"),
+        s("cmd"),
+        n("cells"),
+        n("restarts")
+    );
+    if let Some(e) = snap.get("error").and_then(|v| v.as_str()) {
+        line.push_str(&format!("  error: {e}"));
+    }
+    line
+}
+
+/// The `jobs` subcommand family: the client side of the service protocol.
+fn run_jobs(args: &Args) -> Result<(), String> {
+    let action = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or("jobs <ping|submit|status|watch|cancel|list|shutdown> — run `jobs --help`")?;
+    let service_dir = args
+        .get("service-dir")
+        .ok_or("jobs: --service-dir <dir> required (the daemon's durable service directory)")?;
+    let client = coordinator::Client::connect(std::path::Path::new(service_dir))?;
+    let job_arg = || {
+        args.positional
+            .get(1)
+            .cloned()
+            .ok_or_else(|| format!("jobs {action}: <job-id> required (e.g. job-000001)"))
+    };
+    match action {
+        "ping" => {
+            client.request(&Request::Ping)?;
+            println!("daemon behind {service_dir} is up");
+        }
+        "submit" => {
+            let sub = fanout_cmd(args)?;
+            let spec = JobSpec::from_args(&sub, args)?;
+            let deadline_ms = match args.get("deadline-ms") {
+                None => None,
+                Some(v) => {
+                    Some(v.parse::<u64>().map_err(|e| format!("--deadline-ms: {e}"))?)
+                }
+            };
+            let reply = client.request(&Request::Submit { spec, deadline_ms })?;
+            let job = reply
+                .get("job")
+                .and_then(|j| j.as_str())
+                .ok_or("daemon accepted the job but returned no id")?
+                .to_string();
+            println!(
+                "submitted {job} (follow it with: jobs watch {job} --service-dir {service_dir})"
+            );
+        }
+        "status" => {
+            let reply = client.request(&Request::Status { job: job_arg()? })?;
+            let snap = reply.get("status").ok_or("daemon reply carried no status")?;
+            println!("{}", render_snapshot(snap));
+        }
+        "list" => {
+            let reply = client.request(&Request::List)?;
+            let jobs = reply
+                .get("jobs")
+                .and_then(|j| j.as_arr())
+                .ok_or("daemon reply carried no job list")?;
+            if jobs.is_empty() {
+                println!("no jobs");
+            }
+            for snap in jobs {
+                println!("{}", render_snapshot(snap));
+            }
+        }
+        "cancel" => {
+            let job = job_arg()?;
+            let reply = client.request(&Request::Cancel { job: job.clone() })?;
+            let state = reply.get("state").and_then(|s| s.as_str()).unwrap_or("?");
+            if matches!(reply.get("cancelling"), Some(Json::Bool(true))) {
+                println!("{job}: cancelling (currently {state})");
+            } else if let Some(note) = reply.get("note").and_then(|n| n.as_str()) {
+                println!("{job}: {state} ({note})");
+            } else {
+                println!("{job}: {state}");
+            }
+        }
+        "watch" => {
+            let job = job_arg()?;
+            let end = client.watch(&job, |event| {
+                if event.get("event").and_then(|e| e.as_str()) == Some("state") {
+                    println!("{}", render_snapshot(event));
+                }
+            })?;
+            let state = end.get("state").and_then(|s| s.as_str()).unwrap_or("?");
+            if state != "done" {
+                let detail = end
+                    .get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap_or("no error detail");
+                return Err(format!("{job} finished {state}: {detail}"));
+            }
+            println!("{job} done");
+        }
+        "shutdown" => {
+            client.request(&Request::Shutdown)?;
+            println!(
+                "daemon draining: it exits once the running job (if any) finishes; \
+                 queued jobs stay durably queued for the next daemon"
+            );
+        }
+        other => {
+            return Err(format!(
+                "unknown jobs action {other:?}; expected ping, submit, status, watch, \
+                 cancel, list, or shutdown"
+            ));
+        }
+    }
     Ok(())
 }
 
@@ -765,8 +1097,26 @@ fn run_skills(args: &Args) -> Result<(), String> {
         "compact" => {
             needs_memory_dir("compact")?;
             let mut store = SegmentedSkillStore::open(dir)?;
-            let report = store.compact()?;
-            println!("{}", report.render());
+            // `--auto N` records a compaction policy in the manifest (the
+            // daemon and long-lived writers apply it at fold boundaries)
+            // instead of folding right now.
+            if let Some(v) = args.get("auto") {
+                let n: u64 = v.parse().map_err(|e| format!("--auto: {e}"))?;
+                store.set_auto_compact_segments(n)?;
+                store
+                    .save()
+                    .map_err(|e| format!("rewriting {}: {e}", path.display()))?;
+                if n == 0 {
+                    println!("auto-compaction off");
+                } else {
+                    println!(
+                        "auto-compaction at {n} segment(s) (applies at fold boundaries)"
+                    );
+                }
+            } else {
+                let report = store.compact()?;
+                println!("{}", report.render());
+            }
         }
         other => {
             return Err(format!(

@@ -5,16 +5,19 @@
 //! confidence-weighted, generation-aged, with a segmented on-disk layout
 //! (`segmented`) and matchable learned cases) that survives across tasks,
 //! seeds, strategies, and processes. `diff` compares two stores for the
-//! `skills diff` CLI.
+//! `skills diff` CLI; `overlay` builds per-job copy-on-write heads over a
+//! shared segmented base for the multi-tenant service.
 
 pub mod derived;
 pub mod diff;
 pub mod kb_content;
 pub mod normalize;
+pub mod overlay;
 pub mod retrieval;
 pub mod schema;
 pub mod segmented;
 pub mod skill_store;
 
+pub use overlay::create_overlay;
 pub use segmented::SegmentedSkillStore;
 pub use skill_store::{SkillObs, SkillStore};

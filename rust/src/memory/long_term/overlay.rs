@@ -1,0 +1,148 @@
+//! Copy-on-write overlays over a shared segmented v4 base store.
+//!
+//! The `serve` daemon is multi-tenant: every job folds observations into
+//! long-term memory, but jobs must not contend on (or corrupt) one
+//! shared manifest, and a job's fold must stay byte-equivalent to the
+//! same run made solo (invariant 18). The v4 layout makes this nearly
+//! free: segments are **immutable and never renamed**, so an overlay is
+//! just a fresh directory holding
+//!
+//! - a hard link (copy when linking fails, e.g. across filesystems) to
+//!   every segment file the base manifest references, under the same
+//!   relative `skills.segments/` names, and
+//! - a verbatim byte copy of the base manifest.
+//!
+//! The overlay then *is* a segmented store whose logical fold equals the
+//! base's byte-for-byte; the job's writer opens it like any memory dir
+//! and rotates/compacts new segments privately. The base directory is
+//! never written through an overlay — compaction inside the overlay
+//! deletes only the overlay's links (the base's own directory entries
+//! keep the inodes alive), which is exactly the reader-safety contract
+//! segment immutability was designed for.
+
+use std::path::Path;
+
+use super::segmented::SegmentedSkillStore;
+
+/// Materialize a copy-on-write overlay of the segmented store at `base`
+/// into `overlay`. Idempotent: an overlay that already carries a
+/// manifest is left untouched (the daemon-restart path — the overlay may
+/// already hold the job's partial fold). A cold base (no manifest)
+/// yields a cold overlay. Returns whether the overlay inherited a base
+/// manifest.
+pub fn create_overlay(base: &Path, overlay: &Path) -> Result<bool, String> {
+    std::fs::create_dir_all(overlay)
+        .map_err(|e| format!("creating overlay dir {}: {e}", overlay.display()))?;
+    let overlay_manifest = overlay.join("skills.json");
+    if overlay_manifest.exists() {
+        return Ok(true);
+    }
+    let base_manifest = base.join("skills.json");
+    if !base_manifest.exists() {
+        return Ok(false);
+    }
+    // Open validates the manifest and pins the segment list we link; the
+    // manifest bytes themselves are copied verbatim afterwards so the
+    // overlay's logical content is the base's, byte-for-byte.
+    let store = SegmentedSkillStore::open(base)
+        .map_err(|e| format!("opening overlay base {}: {e}", base.display()))?;
+    for r in store.segments() {
+        let src = base.join(&r.file);
+        let dst = overlay.join(&r.file);
+        if let Some(parent) = dst.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+        }
+        if std::fs::hard_link(&src, &dst).is_err() {
+            std::fs::copy(&src, &dst).map_err(|e| {
+                format!("copying segment {} into overlay: {e}", src.display())
+            })?;
+        }
+    }
+    let bytes = std::fs::read(&base_manifest)
+        .map_err(|e| format!("reading {}: {e}", base_manifest.display()))?;
+    let tmp = overlay.join("skills.json.tmp");
+    std::fs::write(&tmp, &bytes).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &overlay_manifest)
+        .map_err(|e| format!("publishing {}: {e}", overlay_manifest.display()))?;
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::transforms::MethodId;
+    use crate::memory::long_term::{SkillObs, SkillStore};
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ks-overlay-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn obs(case: &str, gain: f64) -> SkillObs {
+        SkillObs {
+            case_id: case.to_string(),
+            method: MethodId::TileSmem,
+            gain: Some(gain),
+            device: "a100-like".to_string(),
+        }
+    }
+
+    /// An overlay's logical fold equals the base's byte-for-byte, and
+    /// writing through the overlay leaves every base byte untouched.
+    #[test]
+    fn overlay_matches_base_and_never_writes_it() {
+        let base = tmp_dir("base");
+        let over = tmp_dir("head");
+        for e in 1..=2u64 {
+            let mut seg = SegmentedSkillStore::open(&base).unwrap();
+            seg.advance_to(seg.generation() + 1).unwrap();
+            seg.merge(&[obs("gemm.naive_loop", e as f64)]);
+            seg.save().unwrap();
+        }
+        let base_manifest_bytes = std::fs::read(base.join("skills.json")).unwrap();
+        assert!(create_overlay(&base, &over).unwrap());
+        assert_eq!(std::fs::read(over.join("skills.json")).unwrap(), base_manifest_bytes);
+        assert_eq!(
+            SkillStore::load(&over.join("skills.json")).unwrap().canonical_bytes(),
+            SkillStore::load(&base.join("skills.json")).unwrap().canonical_bytes(),
+        );
+        // A second call is an idempotent no-op (daemon restart path).
+        assert!(create_overlay(&base, &over).unwrap());
+
+        // Write (and compact) through the overlay; the base stays intact.
+        let mut job = SegmentedSkillStore::open(&over).unwrap();
+        job.advance_to(job.generation() + 1).unwrap();
+        job.merge(&[obs("gemm.naive_loop", 9.0)]);
+        job.save().unwrap();
+        let mut job = SegmentedSkillStore::open(&over).unwrap();
+        job.advance_to(job.generation() + 1).unwrap();
+        job.compact().unwrap();
+        job.save().unwrap();
+        assert_eq!(
+            std::fs::read(base.join("skills.json")).unwrap(),
+            base_manifest_bytes,
+            "base manifest untouched by overlay writes"
+        );
+        let base_store = SegmentedSkillStore::open(&base).unwrap();
+        for r in base_store.segments() {
+            assert!(base.join(&r.file).exists(), "base segment {} survives", r.file);
+        }
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&over);
+    }
+
+    /// A cold base yields a cold overlay that a writer can grow.
+    #[test]
+    fn cold_base_yields_cold_overlay() {
+        let base = tmp_dir("cold-base");
+        let over = tmp_dir("cold-head");
+        assert!(!create_overlay(&base, &over).unwrap());
+        assert!(!over.join("skills.json").exists());
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&over);
+    }
+}

@@ -107,6 +107,15 @@ pub struct SegmentedSkillStore {
     /// Files superseded by gc/compaction, deleted (best-effort) only
     /// *after* the next manifest lands so older manifests stay readable.
     pending_delete: Vec<PathBuf>,
+    /// Automatic-compaction policy, recorded in the manifest
+    /// (`auto_compact_segments`): when non-zero, a rotation in
+    /// [`SegmentedSkillStore::advance_to`] that leaves at least this many
+    /// segments triggers [`SegmentedSkillStore::compact`] inline — the
+    /// *same* code path as the offline `skills compact` CLI, so a
+    /// long-lived daemon's store stays bounded without a second fold
+    /// implementation. 0 = off (the default, and the flat fixed point:
+    /// the key is omitted from the manifest when 0).
+    auto_compact_segments: u64,
 }
 
 impl SegmentedSkillStore {
@@ -152,6 +161,7 @@ impl SegmentedSkillStore {
                 head: SkillStore::new(),
                 logical: SkillStore::new(),
                 pending_delete: Vec::new(),
+                auto_compact_segments: 0,
             });
         }
         let bytes = std::fs::read(path)
@@ -163,6 +173,10 @@ impl SegmentedSkillStore {
             .map_err(|e| OpenError::Fatal(format!("{}: parsing skill store: {e}", path.display())))?;
         let segments = parse_segment_refs(&j)
             .map_err(|e| OpenError::Fatal(format!("{}: {e}", path.display())))?;
+        let auto_compact_segments = j
+            .get("auto_compact_segments")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
         // The head is the manifest body with the segment list blanked —
         // flat v1–v3 blobs (no `segments` key) take this path unchanged.
         let head_json = match &j {
@@ -208,6 +222,7 @@ impl SegmentedSkillStore {
             head,
             logical,
             pending_delete: Vec::new(),
+            auto_compact_segments,
         })
     }
 
@@ -272,7 +287,33 @@ impl SegmentedSkillStore {
         }
         self.head.generation = gen;
         self.logical.generation = gen;
+        if rotated
+            && self.auto_compact_segments != 0
+            && self.segments.len() >= self.auto_compact_segments as usize
+        {
+            // The policy trigger rides the exact offline `skills compact`
+            // code path (invariant 17 pins its fold), so a daemon's store
+            // and an operator's cron job produce byte-identical layouts.
+            self.compact().map_err(io::Error::other)?;
+        }
         Ok(rotated)
+    }
+
+    /// The automatic-compaction threshold (0 = off).
+    pub fn auto_compact_segments(&self) -> u64 {
+        self.auto_compact_segments
+    }
+
+    /// Set the automatic-compaction policy (persisted by the next
+    /// [`SegmentedSkillStore::save`]). `n` must be 0 (off) or >= 2 — a
+    /// threshold of 1 would trigger folds that [`SegmentedSkillStore::compact`]
+    /// no-ops on every epoch.
+    pub fn set_auto_compact_segments(&mut self, n: u64) -> Result<(), String> {
+        if n == 1 {
+            return Err("--auto must be 0 (off) or >= 2 segments".to_string());
+        }
+        self.auto_compact_segments = n;
+        Ok(())
     }
 
     /// Write the manifest atomically (staging file + rename), then drop any
@@ -303,6 +344,12 @@ impl SegmentedSkillStore {
     fn manifest_json(&self) -> Json {
         let mut j = self.head.to_json();
         if let Json::Obj(map) = &mut j {
+            if self.auto_compact_segments != 0 {
+                map.insert(
+                    "auto_compact_segments".to_string(),
+                    json::num(self.auto_compact_segments as f64),
+                );
+            }
             map.insert("learned".to_string(), Json::Arr(self.logical.learned_json()));
             map.insert(
                 "segments".to_string(),
@@ -406,6 +453,12 @@ impl SegmentedSkillStore {
             self.head.observations,
             self.head.case_count()
         ));
+        if self.auto_compact_segments != 0 {
+            out.push_str(&format!(
+                "  policy  auto-compact at {} segment(s)\n",
+                self.auto_compact_segments
+            ));
+        }
         out
     }
 
@@ -628,6 +681,79 @@ mod tests {
             format!("{SEGMENT_DIR}/seg-000008.json"),
             "counter scans past the orphan"
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The auto-compaction policy persists in the manifest, triggers at
+    /// the fold boundary, and lands byte-identical to running the offline
+    /// `compact()` path at the same boundary — then clearing the policy
+    /// yields a manifest byte-identical to the offline store's.
+    #[test]
+    fn auto_compaction_matches_the_offline_path() {
+        let auto_dir = tmp_dir("auto-compact");
+        let offline_dir = tmp_dir("offline-compact");
+        {
+            let mut seg = SegmentedSkillStore::open(&auto_dir).unwrap();
+            seg.set_auto_compact_segments(2).unwrap();
+            seg.save().unwrap();
+        }
+        assert!(SegmentedSkillStore::open(&auto_dir)
+            .unwrap()
+            .render_layout()
+            .contains("auto-compact at 2 segment(s)"));
+        for e in 1..=4u64 {
+            for dir in [&auto_dir, &offline_dir] {
+                let mut seg = SegmentedSkillStore::open(dir).unwrap();
+                let next = seg.generation() + 1;
+                let rotated = seg.advance_to(next).unwrap();
+                // Mirror the trigger by hand on the offline store: compact
+                // whenever a rotation leaves >= 2 segments.
+                if *dir == offline_dir && rotated && seg.segments().len() >= 2 {
+                    seg.compact().unwrap();
+                }
+                seg.merge(&[obs_on("a100-like", "c", MethodId::TileSmem, Some(e as f64))]);
+                seg.save().unwrap();
+            }
+        }
+        let auto = SegmentedSkillStore::open(&auto_dir).unwrap();
+        let offline = SegmentedSkillStore::open(&offline_dir).unwrap();
+        assert_eq!(auto.auto_compact_segments(), 2, "policy survives reopen");
+        assert_eq!(
+            auto.segments().len(),
+            offline.segments().len(),
+            "auto and offline compaction leave the same layout"
+        );
+        assert_eq!(auto.logical().canonical_bytes(), offline.logical().canonical_bytes());
+        for (a, b) in auto.segments().iter().zip(offline.segments()) {
+            assert_eq!(a.file, b.file, "same segment names");
+            assert_eq!(
+                std::fs::read(auto_dir.join(&a.file)).unwrap(),
+                std::fs::read(offline_dir.join(&b.file)).unwrap(),
+                "segment {} byte-identical across paths",
+                a.file
+            );
+        }
+        // Clearing the policy removes the manifest key entirely: the two
+        // manifests become byte-identical.
+        let mut auto = auto;
+        auto.set_auto_compact_segments(0).unwrap();
+        auto.save().unwrap();
+        assert_eq!(
+            std::fs::read(auto_dir.join("skills.json")).unwrap(),
+            std::fs::read(offline_dir.join("skills.json")).unwrap(),
+        );
+        let _ = std::fs::remove_dir_all(&auto_dir);
+        let _ = std::fs::remove_dir_all(&offline_dir);
+    }
+
+    /// A threshold of 1 is refused (compact() no-ops below 2 segments, so
+    /// it would be a busy-loop policy).
+    #[test]
+    fn auto_compact_threshold_of_one_is_refused() {
+        let dir = tmp_dir("auto-one");
+        let mut seg = SegmentedSkillStore::open(&dir).unwrap();
+        assert!(seg.set_auto_compact_segments(1).is_err());
+        assert!(seg.set_auto_compact_segments(0).is_ok());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,8 +1,54 @@
 //! Hand-rolled CLI argument parsing (clap is not vendored offline).
 //!
 //! Grammar: `kernelskill <subcommand> [--flag value]... [--switch]...`
+//!
+//! Two parsers live here. [`Args::parse`] is the original lenient pass:
+//! it guesses whether `--name` takes a value by peeking at the next
+//! token, and it accepts any flag name — a typo like `--sees 3` used to
+//! silently run with the default seed count. [`parse_checked`] is the
+//! strict pass `main` uses: every subcommand declares its flags as
+//! [`FlagDef`]s in a [`CommandDef`] registry, so value flags always
+//! consume exactly one value, switches never swallow a following
+//! positional, unknown flags and subcommands are hard errors with a
+//! did-you-mean suggestion, and per-subcommand `--help` text is
+//! generated from the same declarations (one source of truth).
 
 use std::collections::BTreeMap;
+
+/// One declared flag of a subcommand.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagDef {
+    /// Flag name without the leading `--`.
+    pub name: &'static str,
+    /// `Some(metavar)` for a value flag (`--seeds N`), `None` for a
+    /// switch (`--resume`).
+    pub value: Option<&'static str>,
+    /// One-line help text.
+    pub help: &'static str,
+}
+
+/// One declared subcommand: its flags, and whether it takes positional
+/// arguments (e.g. `merge <shard-dirs>...`, `skills <action>`).
+#[derive(Debug, Clone)]
+pub struct CommandDef {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// One-line summary for the global usage listing.
+    pub summary: &'static str,
+    /// Usage tail after the subcommand name, e.g. `"[flags]"` or
+    /// `"<action> [flags]"`.
+    pub usage: &'static str,
+    /// Declared flags (value flags and switches).
+    pub flags: Vec<FlagDef>,
+    /// Whether bare positional arguments are accepted.
+    pub positional: bool,
+}
+
+/// Switches accepted by every subcommand.
+const GLOBAL_SWITCHES: [FlagDef; 2] = [
+    FlagDef { name: "help", value: None, help: "print this subcommand's usage and exit" },
+    FlagDef { name: "verbose", value: None, help: "per-cell progress on stderr" },
+];
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -80,6 +126,181 @@ impl Args {
     }
 }
 
+/// Strict parse against a command registry. Returns the same [`Args`]
+/// shape the lenient parser produces, but:
+///
+/// - an unknown subcommand or flag is a hard error (with a
+///   did-you-mean suggestion when a declared name is within edit
+///   distance 2);
+/// - a declared value flag always consumes exactly one value, and
+///   `--flag` at end-of-line or followed by another `--flag` is an
+///   error instead of a silent switch;
+/// - a declared switch never consumes the next token (so
+///   `merge --watch <dir>` keeps `<dir>` positional without hacks);
+/// - `--switch=value` is an error;
+/// - positional arguments are only accepted where the command declares
+///   them.
+///
+/// `--help`/`--verbose` are accepted everywhere. A bare `--help` (or no
+/// arguments at all) parses to `subcommand: None` so `main` can print
+/// the global usage.
+pub fn parse_checked<I: IntoIterator<Item = String>>(
+    argv: I,
+    commands: &[CommandDef],
+) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut it = argv.into_iter().peekable();
+    if let Some(first) = it.peek() {
+        if !first.starts_with('-') {
+            args.subcommand = it.next();
+        }
+    }
+    let cmd = match &args.subcommand {
+        None => {
+            // No subcommand: accept only global switches (`--help`).
+            for a in it {
+                match a.strip_prefix("--") {
+                    Some(name) if GLOBAL_SWITCHES.iter().any(|f| f.name == name) => {
+                        args.switches.push(name.to_string());
+                    }
+                    _ => return Err(format!("unexpected argument {a:?} before a subcommand")),
+                }
+            }
+            return Ok(args);
+        }
+        Some(name) => commands.iter().find(|c| c.name == *name).ok_or_else(|| {
+            let mut msg = format!("unknown subcommand {name:?}");
+            if let Some(s) = suggest(name, commands.iter().map(|c| c.name)) {
+                msg.push_str(&format!(" (did you mean {s:?}?)"));
+            }
+            msg.push_str("; run with no arguments for usage");
+            msg
+        })?,
+    };
+    let lookup = |name: &str| {
+        cmd.flags
+            .iter()
+            .chain(GLOBAL_SWITCHES.iter())
+            .find(|f| f.name == name)
+            .copied()
+    };
+    while let Some(a) = it.next() {
+        let Some(name) = a.strip_prefix("--") else {
+            if !cmd.positional {
+                return Err(format!(
+                    "{}: unexpected argument {a:?}; run `{} --help` for usage",
+                    cmd.name, cmd.name
+                ));
+            }
+            args.positional.push(a);
+            continue;
+        };
+        if name.is_empty() {
+            return Err("bare `--` not supported".into());
+        }
+        let (bare, inline) = match name.split_once('=') {
+            Some((k, v)) => (k, Some(v)),
+            None => (name, None),
+        };
+        let def = lookup(bare).ok_or_else(|| {
+            let mut msg = format!("{}: unknown flag --{bare}", cmd.name);
+            if let Some(s) =
+                suggest(bare, cmd.flags.iter().chain(GLOBAL_SWITCHES.iter()).map(|f| f.name))
+            {
+                msg.push_str(&format!(" (did you mean --{s}?)"));
+            }
+            msg.push_str(&format!("; run `{} --help` for usage", cmd.name));
+            msg
+        })?;
+        match (def.value, inline) {
+            (Some(_), Some(v)) => {
+                args.flags.insert(bare.to_string(), v.to_string());
+            }
+            (Some(metavar), None) => {
+                let next_is_value = it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                if !next_is_value {
+                    return Err(format!(
+                        "{}: --{bare} requires a value <{metavar}>",
+                        cmd.name
+                    ));
+                }
+                args.flags.insert(bare.to_string(), it.next().unwrap());
+            }
+            (None, Some(_)) => {
+                return Err(format!(
+                    "{}: --{bare} is a switch and takes no value",
+                    cmd.name
+                ));
+            }
+            (None, None) => args.switches.push(bare.to_string()),
+        }
+    }
+    Ok(args)
+}
+
+/// The closest declared name within edit distance 2, for did-you-mean.
+fn suggest<'a>(typo: &str, names: impl Iterator<Item = &'a str>) -> Option<&'a str> {
+    names
+        .map(|n| (edit_distance(typo, n), n))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, n)| n)
+}
+
+/// Classic Levenshtein distance, O(|a|·|b|) with a rolling row.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
+}
+
+/// Render one subcommand's `--help` text from its declarations.
+pub fn render_command_help(cmd: &CommandDef) -> String {
+    let mut out = format!("kernelskill {} {}\n  {}\n", cmd.name, cmd.usage, cmd.summary);
+    if !cmd.flags.is_empty() {
+        out.push_str("\nFlags:\n");
+        let spelled: Vec<(String, &str)> = cmd
+            .flags
+            .iter()
+            .map(|f| {
+                let left = match f.value {
+                    Some(metavar) => format!("--{} <{}>", f.name, metavar),
+                    None => format!("--{}", f.name),
+                };
+                (left, f.help)
+            })
+            .collect();
+        let width = spelled.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+        for (left, help) in spelled {
+            out.push_str(&format!("  {left:width$}  {help}\n"));
+        }
+    }
+    out
+}
+
+/// Render the global usage listing from the registry.
+pub fn render_global_help(commands: &[CommandDef]) -> String {
+    let mut out = String::from(
+        "kernelskill — KernelSkill: multi-agent GPU kernel optimization\n\nUsage: \
+         kernelskill <subcommand> [flags]  (run `kernelskill <subcommand> --help` for \
+         per-command flags)\n\nSubcommands:\n",
+    );
+    let width = commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in commands {
+        out.push_str(&format!("  {:width$}  {}\n", c.name, c.summary));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +339,87 @@ mod tests {
         let a = parse(&["--help"]);
         assert_eq!(a.subcommand, None);
         assert!(a.has("help"));
+    }
+
+    fn registry() -> Vec<CommandDef> {
+        vec![
+            CommandDef {
+                name: "suite",
+                summary: "run the suite",
+                usage: "[flags]",
+                flags: vec![
+                    FlagDef { name: "seeds", value: Some("N"), help: "seed count" },
+                    FlagDef { name: "run-dir", value: Some("DIR"), help: "checkpoint dir" },
+                    FlagDef { name: "resume", value: None, help: "resume" },
+                ],
+                positional: false,
+            },
+            CommandDef {
+                name: "merge",
+                summary: "merge shards",
+                usage: "<shard-dirs>... [flags]",
+                flags: vec![FlagDef { name: "watch", value: None, help: "follow" }],
+                positional: true,
+            },
+        ]
+    }
+
+    fn checked(v: &[&str]) -> Result<Args, String> {
+        parse_checked(v.iter().map(|s| s.to_string()), &registry())
+    }
+
+    #[test]
+    fn checked_accepts_declared_flags_and_switches() {
+        let a = checked(&["suite", "--seeds", "3", "--resume", "--run-dir=/tmp/x"]).unwrap();
+        assert_eq!(a.get("seeds"), Some("3"));
+        assert_eq!(a.get("run-dir"), Some("/tmp/x"));
+        assert!(a.has("resume"));
+    }
+
+    #[test]
+    fn checked_rejects_typos_with_a_suggestion() {
+        let err = checked(&["suite", "--sees", "3"]).unwrap_err();
+        assert!(err.contains("--sees") && err.contains("--seeds"), "{err}");
+        let err = checked(&["suiet"]).unwrap_err();
+        assert!(err.contains("suiet") && err.contains("suite"), "{err}");
+    }
+
+    #[test]
+    fn checked_switch_never_swallows_a_positional() {
+        let a = checked(&["merge", "--watch", "/tmp/run", "--watch=1"]);
+        // `--watch=1` is a switch with a value: refused.
+        assert!(a.unwrap_err().contains("takes no value"));
+        let a = checked(&["merge", "--watch", "/tmp/run"]).unwrap();
+        assert!(a.has("watch"));
+        assert_eq!(a.positional, vec!["/tmp/run".to_string()]);
+    }
+
+    #[test]
+    fn checked_value_flag_requires_a_value() {
+        let err = checked(&["suite", "--seeds"]).unwrap_err();
+        assert!(err.contains("requires a value"), "{err}");
+        let err = checked(&["suite", "--seeds", "--resume"]).unwrap_err();
+        assert!(err.contains("requires a value"), "{err}");
+    }
+
+    #[test]
+    fn checked_rejects_undeclared_positionals_and_allows_declared() {
+        let err = checked(&["suite", "stray"]).unwrap_err();
+        assert!(err.contains("stray"), "{err}");
+        let a = checked(&["merge", "a", "b", "--watch"]).unwrap();
+        assert_eq!(a.positional, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn checked_help_everywhere_and_rendering() {
+        let a = checked(&["suite", "--help"]).unwrap();
+        assert!(a.has("help"));
+        let a = checked(&["--help"]).unwrap();
+        assert_eq!(a.subcommand, None);
+        let reg = registry();
+        let help = render_command_help(&reg[0]);
+        assert!(help.contains("--seeds <N>") && help.contains("seed count"), "{help}");
+        let global = render_global_help(&reg);
+        assert!(global.contains("suite") && global.contains("merge shards"), "{global}");
     }
 }

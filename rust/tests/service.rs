@@ -1,0 +1,502 @@
+//! End-to-end battery for kernel-optimization-as-a-service: the typed
+//! [`JobSpec`] protocol, the strict CLI registry, and the `serve` daemon +
+//! `jobs` client driven as real processes (CARGO_BIN_EXE).
+//!
+//! The contracts under test:
+//!
+//! - invariant 18 (overlay-fold equivalence): a job run through the
+//!   service — including one whose long-term memory is a copy-on-write
+//!   overlay over a shared base — produces `report` output and
+//!   `skills.json` byte-identical to the same matrix run directly, and
+//!   never writes a byte into the base store;
+//! - invariant 19 (job replay determinism): SIGKILLing the daemon mid-job
+//!   and restarting it re-queues the job, `--resume`s its child, leaves
+//!   the re-dispatch audit marker (`.expired` lease), and still converges
+//!   to the byte-identical result;
+//! - a `JobSpec` round-trips byte-stably through its canonical form, and
+//!   malformed or version-skewed job manifests are refused loudly;
+//! - the strict flag registry turns typos into hard errors instead of
+//!   silently running with defaults.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use kernelskill::coordinator::{validate_service_dir, JobSpec, MATRIX_COMMANDS};
+
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ks-svc-e2e-{tag}-{}", std::process::id()))
+}
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_kernelskill"))
+}
+
+fn read_bytes(path: &Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Run the binary to success; panics with both streams on failure.
+fn run_ok(args: &[&str]) -> String {
+    let out = Command::new(bin())
+        .args(args)
+        // Quarantine from an outer test-runner environment: the crash
+        // hook only arms when both variables are non-empty.
+        .env("KS_TEST_CRASH_AFTER", "")
+        .env("KS_TEST_CRASH_MARKER", "")
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "kernelskill {args:?} failed\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+/// Run the binary expecting failure; returns stderr.
+fn run_err(args: &[&str]) -> String {
+    let out = Command::new(bin())
+        .args(args)
+        .env("KS_TEST_CRASH_AFTER", "")
+        .env("KS_TEST_CRASH_MARKER", "")
+        .output()
+        .unwrap();
+    assert!(
+        !out.status.success(),
+        "kernelskill {args:?} unexpectedly succeeded\nstdout: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    String::from_utf8_lossy(&out.stderr).to_string()
+}
+
+/// Spawn a daemon over `service_dir`, stderr appended to `log`.
+fn spawn_serve(service_dir: &Path, log: &Path, extra: &[&str]) -> Child {
+    let logf = std::fs::OpenOptions::new().create(true).append(true).open(log).unwrap();
+    Command::new(bin())
+        .arg("serve")
+        .arg("--service-dir")
+        .arg(service_dir)
+        .args(["--poll-ms", "20"])
+        .args(extra)
+        .env("KS_TEST_CRASH_AFTER", "")
+        .env("KS_TEST_CRASH_MARKER", "")
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::from(logf))
+        .spawn()
+        .unwrap()
+}
+
+/// `jobs submit` and return the new job id.
+fn submit(service_dir: &Path, matrix: &[&str]) -> String {
+    let svc = service_dir.to_str().unwrap();
+    let mut args = vec!["jobs", "submit", "--service-dir", svc];
+    args.extend_from_slice(matrix);
+    let out = run_ok(&args);
+    out.split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no job id in submit output: {out}"))
+        .to_string()
+}
+
+/// Poll `jobs status` until the job reports `state`, with a generous
+/// deadline (suite cells take real wall-clock).
+fn await_state(service_dir: &Path, job: &str, state: &str) -> String {
+    let svc = service_dir.to_str().unwrap();
+    for _ in 0..1200 {
+        let out = run_ok(&["jobs", "status", job, "--service-dir", svc]);
+        if out.contains(state) {
+            return out;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    panic!("{job} never reached state {state:?}");
+}
+
+/// A tiny deterministic xorshift for the property test (tests must not
+/// depend on ambient entropy).
+struct Rng(u64);
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// Property: every valid spec serializes canonically, re-parses to an
+/// equal spec, and re-serializes to the same bytes — including `u64`
+/// suite seeds beyond f64's integer range (they ride as strings).
+#[test]
+fn jobspec_roundtrips_byte_stable_over_random_valid_specs() {
+    let strategies = [
+        "KernelSkill", "STARK", "CudaForge", "Astra", "PRAGMA", "QiMeng",
+        "Kevin-32B", "w/o memory", "w/o Short_term memory", "w/o Long_term memory",
+    ];
+    let devices = ["a100-like", "tpu-like", "h100-like", "consumer-gpu-like", "cpu-like"];
+    let mut rng = Rng(0x9e3779b97f4a7c15);
+    for i in 0..200 {
+        let spec = JobSpec {
+            cmd: MATRIX_COMMANDS[rng.below(MATRIX_COMMANDS.len() as u64) as usize].to_string(),
+            strategy: strategies[rng.below(strategies.len() as u64) as usize].to_string(),
+            level: rng.below(5) as usize,
+            take: rng.below(10) as usize,
+            seeds: 1 + rng.below(8) as usize,
+            suite_seed: rng.next(), // full u64 range: exactness is the point
+            workers: rng.below(9) as usize,
+            device: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(devices[rng.below(devices.len() as u64) as usize].to_string())
+            },
+            chaos: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(format!(
+                    "tc=0.{},drop=0.0{},sigma=0.{},bias=0.0{},seed={}",
+                    rng.below(9),
+                    rng.below(9),
+                    rng.below(9),
+                    rng.below(9),
+                    rng.below(1000)
+                ))
+            },
+            retrieval_cache: rng.below(2) == 0,
+            exchange_adaptive: rng.below(2) == 0,
+        }
+        .normalized()
+        .unwrap_or_else(|e| panic!("iter {i}: spec failed validation: {e}"));
+        let bytes = spec.canonical_bytes();
+        let back = JobSpec::parse(std::str::from_utf8(&bytes).unwrap())
+            .unwrap_or_else(|e| panic!("iter {i}: canonical bytes failed to parse: {e}"));
+        assert_eq!(back, spec, "iter {i}: round-trip changed the spec");
+        assert_eq!(back.canonical_bytes(), bytes, "iter {i}: bytes not stable");
+    }
+}
+
+/// Malformed and version-skewed job manifests must be refused loudly at
+/// daemon startup — never silently skipped or partially loaded.
+#[test]
+fn malformed_and_skewed_job_manifests_are_refused() {
+    let root = tmp_root("manifests");
+    let _ = std::fs::remove_dir_all(&root);
+    let job = root.join("jobs").join("job-000001");
+    std::fs::create_dir_all(&job).unwrap();
+    JobSpec::default().save(&job.join("job-spec.json")).unwrap();
+
+    // Version skew.
+    std::fs::write(
+        job.join("job.json"),
+        b"{\"id\":\"job-000001\",\"restarts\":0,\"state\":\"queued\",\"version\":99}\n",
+    )
+    .unwrap();
+    let err = validate_service_dir(&root).unwrap_err();
+    assert!(err.contains("version"), "{err}");
+
+    // Unknown manifest field.
+    std::fs::write(
+        job.join("job.json"),
+        b"{\"frobnicate\":1,\"id\":\"job-000001\",\"restarts\":0,\"state\":\"queued\",\"version\":1}\n",
+    )
+    .unwrap();
+    let err = validate_service_dir(&root).unwrap_err();
+    assert!(err.contains("frobnicate"), "{err}");
+
+    // Unknown state.
+    std::fs::write(
+        job.join("job.json"),
+        b"{\"id\":\"job-000001\",\"restarts\":0,\"state\":\"dancing\",\"version\":1}\n",
+    )
+    .unwrap();
+    let err = validate_service_dir(&root).unwrap_err();
+    assert!(err.contains("dancing"), "{err}");
+
+    // A gap in the job numbering shifts every later job's lease identity.
+    std::fs::write(
+        job.join("job.json"),
+        b"{\"id\":\"job-000001\",\"restarts\":0,\"state\":\"queued\",\"version\":1}\n",
+    )
+    .unwrap();
+    let gap = root.join("jobs").join("job-000003");
+    std::fs::create_dir_all(&gap).unwrap();
+    JobSpec::default().save(&gap.join("job-spec.json")).unwrap();
+    std::fs::write(
+        gap.join("job.json"),
+        b"{\"id\":\"job-000003\",\"restarts\":0,\"state\":\"queued\",\"version\":1}\n",
+    )
+    .unwrap();
+    let err = validate_service_dir(&root).unwrap_err();
+    assert!(err.contains("contiguous"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The strict registry: typos are hard errors with a suggestion, value
+/// flags must get values, and identity flags conflict with `--job-spec`.
+#[test]
+fn typos_and_spec_conflicts_are_hard_errors() {
+    let err = run_err(&["suite", "--sees", "3"]);
+    assert!(err.contains("--sees") && err.contains("--seeds"), "{err}");
+
+    let err = run_err(&["suiet"]);
+    assert!(err.contains("suite"), "{err}");
+
+    let err = run_err(&["suite", "--seeds"]);
+    assert!(err.contains("requires a value"), "{err}");
+
+    let root = tmp_root("specfile");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let spec_path = root.join("spec.json");
+    JobSpec::default().save(&spec_path).unwrap();
+    let err = run_err(&["suite", "--job-spec", spec_path.to_str().unwrap(), "--seeds", "3"]);
+    assert!(err.contains("--seeds") && err.contains("--job-spec"), "{err}");
+
+    let table = JobSpec { cmd: "table1".into(), ..JobSpec::default() };
+    table.save(&spec_path).unwrap();
+    let err = run_err(&["suite", "--job-spec", spec_path.to_str().unwrap()]);
+    assert!(err.contains("table1"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The flagship end-to-end: a plain job and a chaotic job submitted to
+/// the daemon, the daemon SIGKILLed mid-chaotic-job and restarted, both
+/// jobs watched to completion — and both byte-identical to direct
+/// single-process runs of the same specs.
+#[test]
+fn service_runs_match_direct_runs_including_after_daemon_kill() {
+    let root = tmp_root("e2e");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let svc = root.join("svc");
+    let svc_s = svc.to_str().unwrap().to_string();
+    let log = root.join("serve.log");
+    let plain: [&str; 8] = ["--level", "1", "--take", "2", "--seeds", "1", "--workers", "2"];
+    const CHAOS: &str = "tc=0.3,drop=0.05,sigma=0.2,bias=0.1,seed=7";
+    let chaotic: [&str; 10] =
+        ["--level", "1", "--take", "4", "--seeds", "2", "--workers", "2", "--chaos", CHAOS];
+
+    // Direct references.
+    let direct1 = root.join("direct1");
+    let mut args = vec!["suite"];
+    args.extend_from_slice(&plain);
+    args.extend_from_slice(&["--run-dir", direct1.to_str().unwrap()]);
+    run_ok(&args);
+    let direct2 = root.join("direct2");
+    let mut args = vec!["suite"];
+    args.extend_from_slice(&chaotic);
+    args.extend_from_slice(&["--run-dir", direct2.to_str().unwrap()]);
+    run_ok(&args);
+
+    // Daemon up; plain job through to completion.
+    let mut daemon = spawn_serve(&svc, &log, &[]);
+    let job1 = submit(&svc, &plain);
+    assert_eq!(job1, "job-000001");
+    let out = run_ok(&["jobs", "watch", &job1, "--service-dir", &svc_s]);
+    assert!(out.contains("done"), "{out}");
+
+    // Chaotic job; SIGKILL the daemon as soon as it is running.
+    let job2 = submit(&svc, &chaotic);
+    assert_eq!(job2, "job-000002");
+    await_state(&svc, &job2, "running");
+    daemon.kill().unwrap();
+    daemon.wait().unwrap();
+    let completed_before_restart = svc.join("jobs/job-000002/run/complete").exists();
+
+    // Restart: recovery re-queues the job, its child resumes, and the
+    // stale lease attempt gets the re-dispatch audit marker.
+    let mut daemon = spawn_serve(&svc, &log, &[]);
+    let out = run_ok(&["jobs", "watch", &job2, "--service-dir", &svc_s]);
+    assert!(out.contains("done"), "{out}");
+    if !completed_before_restart {
+        let expired = std::fs::read_dir(svc.join("leases"))
+            .unwrap()
+            .any(|e| e.unwrap().file_name().to_string_lossy().ends_with(".expired"));
+        assert!(expired, "recovery must leave the .expired lease audit marker");
+    }
+
+    // Byte-identity: report and derived skill store, both jobs.
+    for (job, direct) in [(&job1, &direct1), (&job2, &direct2)] {
+        let run = svc.join("jobs").join(job).join("run");
+        assert_eq!(
+            run_ok(&["report", "--run-dir", run.to_str().unwrap()]),
+            run_ok(&["report", "--run-dir", direct.to_str().unwrap()]),
+            "{job}: report over the service run dir must be byte-identical"
+        );
+        assert_eq!(
+            read_bytes(&run.join("skills.json")),
+            read_bytes(&direct.join("skills.json")),
+            "{job}: derived skills.json must be byte-identical"
+        );
+    }
+
+    let list = run_ok(&["jobs", "list", "--service-dir", &svc_s]);
+    assert!(list.contains("job-000001") && list.contains("job-000002"), "{list}");
+
+    run_ok(&["jobs", "shutdown", "--service-dir", &svc_s]);
+    daemon.wait().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Invariant 18 end-to-end: a service job folding into a copy-on-write
+/// overlay over a shared base store produces a store byte-identical to
+/// the same run made directly against a private copy of the base — and
+/// the base itself is never written.
+#[test]
+fn overlay_service_job_folds_like_a_direct_run_and_never_writes_the_base() {
+    let root = tmp_root("overlay");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let base = root.join("base");
+    let matrix: [&str; 8] = ["--level", "1", "--take", "2", "--seeds", "1", "--workers", "2"];
+
+    // Seed the shared base with one prior run.
+    run_ok(&[
+        "suite", "--level", "1", "--take", "1", "--seeds", "1", "--workers", "2",
+        "--memory-dir", base.to_str().unwrap(),
+    ]);
+    let base_manifest = read_bytes(&base.join("skills.json"));
+    let base_segments: Vec<(std::ffi::OsString, Vec<u8>)> = {
+        let mut v: Vec<_> = std::fs::read_dir(base.join("skills.segments"))
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (e.file_name(), read_bytes(&e.path()))
+            })
+            .collect();
+        v.sort();
+        v
+    };
+
+    // A private byte-copy of the base is the direct-run reference start.
+    let base2 = root.join("base2");
+    std::fs::create_dir_all(base2.join("skills.segments")).unwrap();
+    std::fs::write(base2.join("skills.json"), &base_manifest).unwrap();
+    for (name, bytes) in &base_segments {
+        std::fs::write(base2.join("skills.segments").join(name), bytes).unwrap();
+    }
+    let direct = root.join("direct");
+    let mut args = vec!["suite"];
+    args.extend_from_slice(&matrix);
+    args.extend_from_slice(&["--memory-dir", base2.to_str().unwrap()]);
+    args.extend_from_slice(&["--run-dir", direct.to_str().unwrap()]);
+    run_ok(&args);
+
+    // Same matrix through the daemon, folding into a per-job overlay.
+    let svc = root.join("svc");
+    let svc_s = svc.to_str().unwrap().to_string();
+    let log = root.join("serve.log");
+    let mut daemon = spawn_serve(&svc, &log, &["--memory-dir", base.to_str().unwrap()]);
+    let job = submit(&svc, &matrix);
+    run_ok(&["jobs", "watch", &job, "--service-dir", &svc_s]);
+    run_ok(&["jobs", "shutdown", "--service-dir", &svc_s]);
+    daemon.wait().unwrap();
+
+    let overlay = svc.join("jobs").join(&job).join("memory");
+    assert_eq!(
+        read_bytes(&overlay.join("skills.json")),
+        read_bytes(&base2.join("skills.json")),
+        "overlay fold must be byte-identical to the direct fold (invariant 18)"
+    );
+    assert_eq!(
+        read_bytes(&base.join("skills.json")),
+        base_manifest,
+        "the shared base store must never be written through the service"
+    );
+    let after: Vec<(std::ffi::OsString, Vec<u8>)> = {
+        let mut v: Vec<_> = std::fs::read_dir(base.join("skills.segments"))
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (e.file_name(), read_bytes(&e.path()))
+            })
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(
+        after, base_segments,
+        "overlay segments are hard links: a job must never mutate a base segment in place"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Bounded-queue admission control: a full queue rejects with an explicit
+/// backpressure marker, and a running job can be cancelled.
+#[test]
+fn backpressure_is_explicit_and_running_jobs_cancel() {
+    let root = tmp_root("backpressure");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let svc = root.join("svc");
+    let svc_s = svc.to_str().unwrap().to_string();
+    let log = root.join("serve.log");
+    let matrix: [&str; 8] = ["--level", "1", "--take", "4", "--seeds", "2", "--workers", "2"];
+
+    let mut daemon = spawn_serve(&svc, &log, &["--queue-capacity", "1"]);
+    let job1 = submit(&svc, &matrix);
+
+    // The queue holds one active job: the second submit must bounce with
+    // the explicit retry marker, not hang and not corrupt the queue.
+    let mut args = vec!["jobs", "submit", "--service-dir", &svc_s];
+    args.extend_from_slice(&matrix);
+    let err = run_err(&args);
+    assert!(err.contains("backpressure"), "{err}");
+
+    run_ok(&["jobs", "watch", &job1, "--service-dir", &svc_s]);
+
+    // Capacity freed: the next submit is accepted — then cancelled.
+    let job2 = submit(&svc, &matrix);
+    assert_eq!(job2, "job-000002");
+    run_ok(&["jobs", "cancel", &job2, "--service-dir", &svc_s]);
+    let status = await_state(&svc, &job2, "cancelled");
+    assert!(status.contains("cancelled"), "{status}");
+    // Watching a cancelled job exits non-zero: scripts must not mistake
+    // a cancelled run for a finished one.
+    let err = run_err(&["jobs", "watch", &job2, "--service-dir", &svc_s]);
+    assert!(err.contains("cancelled"), "{err}");
+
+    run_ok(&["jobs", "shutdown", "--service-dir", &svc_s]);
+    daemon.wait().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The `skills compact --auto N` policy surface: recorded in the
+/// manifest, cleared by `--auto 0`, and a threshold of 1 (which would
+/// fold on every rotation and thrash) is refused.
+#[test]
+fn compaction_policy_cli_round_trips() {
+    let root = tmp_root("autocompact");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let mem = root.join("mem");
+    let mem_s = mem.to_str().unwrap().to_string();
+    run_ok(&[
+        "suite", "--level", "1", "--take", "1", "--seeds", "1", "--workers", "2",
+        "--memory-dir", &mem_s,
+    ]);
+
+    let out = run_ok(&["skills", "compact", "--auto", "2", "--memory-dir", &mem_s]);
+    assert!(out.contains("auto-compaction at 2"), "{out}");
+    let manifest = String::from_utf8(read_bytes(&mem.join("skills.json"))).unwrap();
+    assert!(manifest.contains("auto_compact_segments"), "{manifest}");
+
+    let err = run_err(&["skills", "compact", "--auto", "1", "--memory-dir", &mem_s]);
+    assert!(err.contains("1"), "{err}");
+
+    let out = run_ok(&["skills", "compact", "--auto", "0", "--memory-dir", &mem_s]);
+    assert!(out.contains("auto-compaction off"), "{out}");
+    let manifest = String::from_utf8(read_bytes(&mem.join("skills.json"))).unwrap();
+    assert!(
+        !manifest.contains("auto_compact_segments"),
+        "a cleared policy must leave the manifest byte-identical to one that never had it"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
